@@ -1,0 +1,125 @@
+//! End-to-end driver (EXPERIMENTS.md "End-to-end validation"): the full
+//! three-layer stack on a real workload.
+//!
+//! Trains the 22x22 letter dataset (484 fully connected oscillators —
+//! the paper's headline scale), loads the AOT-compiled JAX/Pallas chunk
+//! artifact through PJRT, and pushes hundreds of corrupted patterns
+//! through the coordinator (router -> dynamic batcher -> engine worker),
+//! reporting retrieval accuracy, settle times, service latency and
+//! throughput, plus a Figure-8-style ASCII rendering.
+//!
+//! Run: `make artifacts && cargo run --release --example pattern_retrieval`
+//! (falls back to the bit-exact native engine if artifacts are absent).
+
+use std::time::{Duration, Instant};
+
+use onn_scale::coordinator::batcher::BatchPolicy;
+use onn_scale::coordinator::job::RetrievalRequest;
+use onn_scale::coordinator::server::{Coordinator, EngineKind, PoolSpec};
+use onn_scale::harness::datasets::benchmark_by_name;
+use onn_scale::onn::patterns::Pattern;
+use onn_scale::onn::phase::state_to_spins;
+use onn_scale::runtime::artifact::{default_dir, Manifest};
+use onn_scale::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let trials_per_pattern = 40;
+    let corruption_levels = [10.0, 25.0, 50.0];
+
+    println!("== onn-scale end-to-end: 22x22 pattern retrieval ==\n");
+    let t0 = Instant::now();
+    let set = benchmark_by_name("22x22").expect("dataset");
+    println!(
+        "trained DO-I weights for {} patterns on n={} in {:.2} s ({} epochs)",
+        set.dataset.patterns.len(),
+        set.cfg.n,
+        t0.elapsed().as_secs_f64(),
+        set.doi_epochs
+    );
+
+    let kind = match Manifest::load(&default_dir()) {
+        Ok(m) if m.chunk_for(set.cfg.n).is_some() => EngineKind::Pjrt,
+        _ => {
+            println!("(no AOT artifact found for n={}; using native engine)", set.cfg.n);
+            EngineKind::Native
+        }
+    };
+    println!("engine: {kind:?}\n");
+
+    let coord = Coordinator::start(
+        vec![PoolSpec::new(set.cfg, set.weights.clone(), kind)],
+        BatchPolicy {
+            max_wait: Duration::from_millis(3),
+            max_periods_cap: 256,
+        },
+    )?;
+
+    let p = set.cfg.period() as i32;
+    let mut example_render: Option<(Pattern, Pattern, Pattern)> = None;
+
+    for pct in corruption_levels {
+        let mut rng = Rng::new(2025 + pct as u64);
+        let start = Instant::now();
+        let mut pending = Vec::new();
+        for target in &set.dataset.patterns {
+            let flips = target.corruption_count(pct);
+            for _ in 0..trials_per_pattern {
+                let corrupted = target.corrupt(flips, &mut rng);
+                let req =
+                    RetrievalRequest::from_pattern(coord.next_id(), &corrupted, p, 256);
+                pending.push((target.clone(), corrupted, coord.router.submit(req)?));
+            }
+        }
+        let total = pending.len();
+        let mut correct = 0usize;
+        let mut settles = Vec::new();
+        for (target, corrupted, rx) in pending {
+            let res = rx.recv()?;
+            let spins = state_to_spins(&res.phases, p);
+            let ok = res.settled.is_some() && target.matches_up_to_inversion(&spins);
+            if ok {
+                correct += 1;
+                if let Some(s) = res.settled {
+                    settles.push(s as f64);
+                }
+                if example_render.is_none() && pct == 25.0 {
+                    let flip = if target.overlap(&spins) < 0.0 { -1 } else { 1 };
+                    let retrieved = Pattern {
+                        name: "retrieved".into(),
+                        rows: target.rows,
+                        cols: target.cols,
+                        spins: spins.iter().map(|&s| s * flip).collect(),
+                    };
+                    example_render = Some((target.clone(), corrupted, retrieved));
+                }
+            }
+        }
+        let dt = start.elapsed().as_secs_f64();
+        println!(
+            "corruption {pct:>4.0}%: accuracy {:>5.1}%  mean settle {:>5.1} periods  \
+             {:>6.1} retrievals/s  ({total} trials in {dt:.2} s)",
+            100.0 * correct as f64 / total as f64,
+            onn_scale::util::stats::mean(&settles),
+            total as f64 / dt,
+        );
+    }
+
+    let snap = coord.snapshot();
+    println!(
+        "\nservice metrics: {} jobs, {} batches, mean occupancy {:.1}, \
+         mean queue {:.2} ms, mean latency {:.2} ms",
+        snap.completed, snap.batches, snap.mean_occupancy, snap.mean_queue_ms, snap.mean_total_ms
+    );
+
+    if let Some((target, corrupted, retrieved)) = example_render {
+        println!("\nFigure-8-style example (target | corrupted 25% | retrieved):\n");
+        let (t, c, r) = (target.render(), corrupted.render(), retrieved.render());
+        for ((a, b), c) in t.lines().zip(c.lines()).zip(r.lines()) {
+            println!("  {a}   {b}   {c}");
+        }
+    }
+
+    coord.shutdown()?;
+    println!("\ndone.");
+    Ok(())
+}

@@ -1,0 +1,42 @@
+//! Hardware-scaling walkthrough: regenerates the paper's entire scaling
+//! story (Tables 1/2/4/5, Figures 9-12) from the structural FPGA model,
+//! and adds a what-if sweep over other devices and precisions that the
+//! paper's Discussion motivates.
+//!
+//! Run: `cargo run --release --example scaling_analysis`
+
+use onn_scale::fpga::device::{kintex7_325t, zynq7010, zynq7020};
+use onn_scale::fpga::resources::max_oscillators;
+use onn_scale::harness::report;
+
+fn main() {
+    println!("{}", report::table1());
+    println!("{}", report::table2());
+    println!("{}", report::table4());
+    println!("{}", report::table5());
+    println!("{}", report::fig9());
+    println!("{}", report::fig10());
+    println!("{}", report::fig11());
+    println!("{}", report::fig12());
+
+    // --- extension: capacity on other devices / precisions ---
+    println!("What-if: max fully connected oscillators by device and precision");
+    println!("(hybrid architecture; paper precision is 5 weight bits / 4 phase bits)\n");
+    println!(
+        "  {:<16} {:>10} {:>10} {:>10}",
+        "device", "5wb/4pb", "4wb/4pb", "6wb/5pb"
+    );
+    for dev in [zynq7010(), zynq7020(), kintex7_325t()] {
+        let a = max_oscillators("hybrid", &dev, 4, 5);
+        let b = max_oscillators("hybrid", &dev, 4, 4);
+        let c = max_oscillators("hybrid", &dev, 5, 6);
+        println!("  {:<16} {:>10} {:>10} {:>10}", dev.name, a, b, c);
+    }
+    println!();
+    println!(
+        "  recurrent on {}: {} oscillators (the paper's 10.5x headline is\n  \
+         the ratio of the first column to this number)",
+        zynq7020().name,
+        max_oscillators("recurrent", &zynq7020(), 4, 5)
+    );
+}

@@ -1,0 +1,77 @@
+//! Service demo: starts the coordinator with a TCP JSON-lines front-end
+//! (the stand-in for the paper's laptop-UI -> PYNQ link), connects as a
+//! client, and round-trips corrupted-pattern retrievals over the socket.
+//!
+//! Run: `cargo run --release --example serve_client`
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use onn_scale::coordinator::batcher::BatchPolicy;
+use onn_scale::coordinator::server::{serve_tcp, Coordinator, EngineKind, PoolSpec};
+use onn_scale::harness::datasets::benchmark_by_name;
+use onn_scale::onn::phase::spin_to_phase;
+use onn_scale::util::json::Json;
+use onn_scale::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let set = benchmark_by_name("7x6").expect("dataset");
+    let coord = Coordinator::start(
+        vec![PoolSpec::new(set.cfg, set.weights.clone(), EngineKind::Native)],
+        BatchPolicy {
+            max_wait: Duration::from_millis(2),
+            max_periods_cap: 256,
+        },
+    )?;
+
+    // Bind on an ephemeral port and serve in the background.
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let router = Arc::clone(&coord.router);
+    std::thread::spawn(move || {
+        let _ = serve_tcp(router, listener);
+    });
+    println!("coordinator serving 7x6 dataset on {addr}\n");
+
+    // --- client side: JSON lines over the socket ---
+    let stream = TcpStream::connect(addr)?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut rng = Rng::new(11);
+    let p = set.cfg.period() as i32;
+
+    for (id, target) in set.dataset.patterns.iter().enumerate() {
+        let corrupted = target.corrupt(target.corruption_count(25.0), &mut rng);
+        let phases: Vec<i32> = corrupted
+            .spins
+            .iter()
+            .map(|&s| spin_to_phase(s, p))
+            .collect();
+        let req = Json::obj(vec![
+            ("id", Json::num(id as f64)),
+            ("n", Json::num(set.cfg.n as f64)),
+            ("phases", Json::arr_i32(&phases)),
+            ("max_periods", Json::num(256.0)),
+        ]);
+        writer.write_all(req.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        let resp = Json::parse(line.trim()).expect("valid response json");
+        let settled = resp.get("settled").cloned().unwrap_or(Json::Null);
+        println!(
+            "pattern '{}': request {} -> settled = {}",
+            target.name,
+            id,
+            settled
+        );
+    }
+
+    println!("\nservice snapshot: {:?}", coord.snapshot());
+    drop(reader);
+    drop(writer);
+    coord.shutdown()?;
+    Ok(())
+}

@@ -1,0 +1,102 @@
+"""AOT compile path: lower the L2 model to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run as `python -m compile.aot --out-dir ../artifacts` (the Makefile does).
+Python runs ONCE here; the Rust binary is self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile.model import OnnConfig, chunk_fn, example_args, step_fn
+
+# One artifact per benchmark network size (DESIGN.md section 6):
+#   9 = 3x3, 20 = 5x4, 42 = 7x6, 100 = 10x10, 484 = 22x22 pattern datasets,
+#   506 = the paper's headline maximum network, 48 = RA maximum,
+#   8/B4 = tiny config exercised by Rust unit tests.
+CONFIGS = [
+    OnnConfig(n=8, batch=4),
+    OnnConfig(n=9, batch=64),
+    OnnConfig(n=20, batch=64),
+    OnnConfig(n=42, batch=64),
+    OnnConfig(n=48, batch=64),
+    OnnConfig(n=100, batch=64),
+    OnnConfig(n=484, batch=32),
+    OnnConfig(n=506, batch=32),
+]
+
+# Single-period step artifacts (quickstart + cross-validation tests).
+STEP_CONFIGS = [OnnConfig(n=8, batch=4), OnnConfig(n=42, batch=64)]
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (0.5.1-compatible path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_config(cfg: OnnConfig, out_dir: pathlib.Path) -> list[dict]:
+    """Lower chunk (and optionally step) artifacts for one config."""
+    entries = []
+    jobs = [("chunk", chunk_fn(cfg), example_args(cfg))]
+    if cfg in STEP_CONFIGS:
+        jobs.append(("step", step_fn(cfg), example_args(cfg, for_step=True)))
+    for kind, fn, args in jobs:
+        hlo = to_hlo_text(fn.lower(*args))
+        name = f"{cfg.name}_{kind}.hlo.txt"
+        path = out_dir / name
+        path.write_text(hlo)
+        entries.append(
+            {
+                "kind": kind,
+                "file": name,
+                "n": cfg.n,
+                "batch": cfg.batch,
+                "phase_bits": cfg.phase_bits,
+                "weight_bits": cfg.weight_bits,
+                "p": cfg.p,
+                "chunk": cfg.chunk if kind == "chunk" else 1,
+                "sha256": hashlib.sha256(hlo.encode()).hexdigest(),
+            }
+        )
+        print(f"  {name}: {len(hlo)} chars")
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only-n", type=int, default=None, help="lower a single network size"
+    )
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "version": 1, "artifacts": []}
+    for cfg in CONFIGS:
+        if args.only_n is not None and cfg.n != args.only_n:
+            continue
+        print(f"lowering {cfg.name} ...")
+        manifest["artifacts"].extend(lower_config(cfg, out_dir))
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote {out_dir / 'manifest.json'}")
+
+
+if __name__ == "__main__":
+    main()

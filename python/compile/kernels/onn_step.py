@@ -1,0 +1,149 @@
+"""L1 — Pallas kernel for the ONN coupling hot-spot.
+
+The compute hot-spot of the digital ONN step is the weighted-sum
+
+    S[b, i, t] = sum_j W[i, j] * s[b, j, t]
+
+where ``s`` are the +-1 square-wave amplitudes of every oscillator at every
+sub-step ``t`` of one oscillation period.  Flattened over the (batch, time)
+axes this is a plain (N, N) x (N, B*P) matmul with sign inputs.
+
+Hardware adaptation (paper FPGA -> TPU), per DESIGN.md section 10: the
+paper's hybrid architecture shares ONE multiply-accumulate per oscillator
+and streams weights out of BRAM; on TPU the shared MAC is the MXU systolic
+array and BRAM becomes VMEM.  The BlockSpec index maps below express the
+HBM->VMEM weight-tile schedule that the FPGA design expressed with BRAM
+addressing, and the f32 scratch accumulator carried across the K grid axis
+plays the role of the DSP accumulate register.
+
+``interpret=True`` is mandatory in this image: real TPU lowering emits a
+Mosaic custom-call that the CPU PJRT plugin cannot execute.  The kernel is
+still written with production tiling so the VMEM/MXU analysis in DESIGN.md
+applies unchanged on real hardware.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, k_tiles: int):
+    """One (TM, TN) output tile; grid axis 2 walks the K dimension.
+
+    acc_ref is VMEM scratch that persists across the K axis of the grid
+    (sequential on TPU), mirroring the DSP48 accumulate register of the
+    paper's serial MAC.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == k_tiles - 1)
+    def _store():
+        o_ref[...] = acc_ref[...]
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+# Production (real-TPU) tile: 128x128x128 feeds the MXU at full rate
+# and keeps ~1.3 MiB of VMEM live per grid step.
+TPU_TILE = 128
+# Interpret-mode (CPU PJRT) tile cap: each grid step of the interpret
+# lowering becomes an XLA while-loop iteration with dynamic slices, so
+# the grid itself is the bottleneck — one big tile per call is ~9x
+# faster at N=484 and bit-identical (integer values).  See
+# EXPERIMENTS.md section Perf (L1).
+INTERPRET_TILE_CAP = 1024
+
+
+def coupling_matmul(
+    w: jax.Array,
+    s: jax.Array,
+    *,
+    tile_m: int | None = None,
+    tile_n: int | None = None,
+    tile_k: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """S2 = W @ s2 with Pallas tiling.
+
+    Args:
+      w:  f32[N, N] quantized coupling weights (integer-valued).
+      s:  f32[N, M] +-1 amplitude matrix, M = B * P after flattening.
+      tile_*: explicit tile sizes; default picks the interpret-mode
+        single-tile policy on CPU and TPU_TILE for compile targets.
+
+    Returns:
+      f32[N, M] weighted sums.  All values are exact integers (|S| <=
+      N * 2^(wb-1) << 2^24) so f32 accumulation order cannot change the
+      result — this is what makes the Rust mirror bit-exact.
+    """
+    n, k = w.shape
+    k2, m = s.shape
+    assert k == k2, (w.shape, s.shape)
+
+    if tile_m is None:
+        tile_m = min(_ceil_to(n, 8), INTERPRET_TILE_CAP) if interpret else TPU_TILE
+    if tile_n is None:
+        tile_n = min(_ceil_to(m, 8), INTERPRET_TILE_CAP) if interpret else TPU_TILE
+    if tile_k is None:
+        tile_k = min(_ceil_to(k, 8), INTERPRET_TILE_CAP) if interpret else TPU_TILE
+
+    # Pad every axis up to the tile grid; zero-padding K contributes zero
+    # to the accumulator, padded M/N rows are sliced off below.
+    tm = min(tile_m, _ceil_to(n, 8))
+    tn = min(tile_n, _ceil_to(m, 8))
+    tk = min(tile_k, _ceil_to(k, 8))
+    np_, kp, mp = _ceil_to(n, tm), _ceil_to(k, tk), _ceil_to(m, tn)
+    wp = jnp.pad(w, ((0, np_ - n), (0, kp - k)))
+    sp = jnp.pad(s, ((0, kp - k), (0, mp - m)))
+    k_tiles = kp // tk
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, k_tiles=k_tiles),
+        grid=(np_ // tm, mp // tn, k_tiles),
+        in_specs=[
+            # Weight tiles stream through VMEM row-block by K-block —
+            # the BRAM-addressing schedule of the hybrid architecture.
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        # The f32 accumulator tile in VMEM — the DSP accumulate register
+        # of the paper's serial MAC, persisted across the K grid axis.
+        scratch_shapes=[pltpu.VMEM((tm, tn), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((np_, mp), jnp.float32),
+        interpret=interpret,
+    )(wp, sp)
+    return out[:n, :m]
+
+
+def vmem_footprint_bytes(tile_m: int, tile_n: int, tile_k: int) -> int:
+    """VMEM bytes live per grid step (w tile + s tile + acc + out tile).
+
+    Used by DESIGN.md section Perf to check the production tiling fits the
+    ~16 MiB/core VMEM budget at N=506.
+    """
+    f32 = 4
+    return f32 * (tile_m * tile_k + tile_k * tile_n + 2 * tile_m * tile_n)
+
+
+def mxu_utilization_estimate(n: int, tile_m: int, tile_n: int, tile_k: int) -> float:
+    """Fraction of MXU work that is useful (non-padding) for an N-osc net."""
+    np_, kp = _ceil_to(n, tile_m), _ceil_to(n, tile_k)
+    useful = n * n
+    issued = np_ * kp
+    return useful / issued

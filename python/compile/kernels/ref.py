@@ -1,0 +1,112 @@
+"""Pure-jnp correctness oracle for the ONN step (no Pallas).
+
+This file is the single source of truth for the functional (period-level)
+ONN dynamics — the hybrid-architecture semantics of DESIGN.md section 3:
+
+  1. sample every oscillator phase at the period boundary;
+  2. synthesize the +-1 square waveforms over one period (P sub-steps);
+  3. weighted sums  S[b,i,t] = sum_j W[i,j] * s[b,j,t];
+  4. reference signal R = sign(S), ties keep the oscillator's own amplitude;
+  5. snap each phase to the square-wave template that best correlates
+     with its reference waveform.  Score ties are broken toward the
+     candidate with the smallest forward rotation from the current phase
+     (i.e. "move least, and stay put when ambiguous"), which keeps the
+     update equivariant under a global phase rotation — the digital
+     analogue of the physical system's rotational symmetry.
+
+The Rust mirror (`rust/src/onn/dynamics.rs`) implements the identical
+integer algorithm; all f32 intermediates here are exact integers, so the
+two are bit-exact regardless of reduction order.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def square_wave(phase: jax.Array, p: int) -> jax.Array:
+    """+-1 amplitudes over one period.
+
+    Args:
+      phase: int32[...] phases in [0, P).
+      p: period length (= 2^phase_bits registers).
+
+    Returns:
+      f32[..., P] with s[..., t] = +1 if (phase+t) mod P < P/2 else -1.
+    """
+    t = jnp.arange(p, dtype=jnp.int32)
+    pos = jnp.mod(phase[..., None] + t, p) < (p // 2)
+    return jnp.where(pos, 1.0, -1.0).astype(jnp.float32)
+
+
+def templates(p: int) -> jax.Array:
+    """f32[P, P] matrix of all P phase-shifted square-wave templates."""
+    return square_wave(jnp.arange(p, dtype=jnp.int32), p)
+
+
+def coupling_matmul_ref(w: jax.Array, s: jax.Array) -> jax.Array:
+    """Oracle for kernels.onn_step.coupling_matmul: plain W @ s."""
+    return jnp.dot(w, s, preferred_element_type=jnp.float32)
+
+
+def onn_period_step_ref(w: jax.Array, phases: jax.Array, p: int) -> jax.Array:
+    """One oscillation-period phase update (batched), pure jnp.
+
+    Args:
+      w: f32[N, N] integer-valued quantized weights (W[i,j]: j -> i).
+      phases: int32[B, N] phases in [0, P).
+      p: period length.
+
+    Returns:
+      int32[B, N] updated phases.
+    """
+    s = square_wave(phases, p)  # [B, N, P]
+    # S[b,i,t] = sum_j W[i,j] s[b,j,t]
+    su = jnp.einsum("ij,bjt->bit", w, s)
+    ref = jnp.where(su > 0, 1.0, jnp.where(su < 0, -1.0, s))  # [B, N, P]
+    # score[b,i,k] = sum_t ref[b,i,t] * template_k[t]
+    score = jnp.einsum("bit,kt->bik", ref, templates(p))
+    return snap_phase(score, phases, p)
+
+
+def snap_phase(score: jax.Array, phases: jax.Array, p: int) -> jax.Array:
+    """argmax_k score with rotation-equivariant tie-break (see module doc).
+
+    Lexicographic key: maximize integer score, then minimize the forward
+    rotation (k - phase) mod P.  Scores are integer-valued f32 in [-P, P],
+    so `score * 2P + (P - rel)` is an exact collision-free int32 key.
+    """
+    k = jnp.arange(p, dtype=jnp.int32)
+    rel = jnp.mod(k - phases[..., None], p)  # [B, N, P]
+    key = score.astype(jnp.int32) * (2 * p) + (p - rel)
+    return jnp.argmax(key, axis=-1).astype(jnp.int32)
+
+
+def onn_chunk_ref(
+    w: jax.Array,
+    phases: jax.Array,
+    settled: jax.Array,
+    period0: jax.Array,
+    *,
+    p: int,
+    chunk: int,
+):
+    """Scan `chunk` period steps, tracking the first fixed-point period.
+
+    settled[b] is the absolute period index at which trial b first reached
+    a fixed point, or -1.  Once a synchronous update reaches a fixed point
+    it stays there, so later steps are no-ops for that trial.
+    """
+
+    def body(carry, k):
+        ph, st = carry
+        nph = onn_period_step_ref(w, ph, p)
+        fixed = jnp.all(nph == ph, axis=-1)
+        st = jnp.where((st < 0) & fixed, period0 + k, st)
+        return (nph, st), None
+
+    (phases, settled), _ = jax.lax.scan(
+        body, (phases, settled), jnp.arange(chunk, dtype=jnp.int32)
+    )
+    return phases, settled

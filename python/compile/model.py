@@ -1,0 +1,119 @@
+"""L2 — the JAX ONN model (build-time only; never on the request path).
+
+Composes the L1 Pallas coupling kernel into the full period step and the
+CHUNK-period scan that gets AOT-lowered to HLO text by aot.py.  The Rust
+coordinator executes the lowered artifact through PJRT.
+
+Semantics are defined by kernels/ref.py (the oracle); this module must
+agree with it bit-exactly — pytest enforces that.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import onn_step, ref
+
+
+@dataclasses.dataclass(frozen=True)
+class OnnConfig:
+    """Static shape/precision configuration of one AOT artifact."""
+
+    n: int  # number of oscillators
+    batch: int  # trials per call
+    phase_bits: int = 4  # P = 2^phase_bits sub-steps per period
+    weight_bits: int = 5  # informational: weights are integers in [-16, 15]
+    chunk: int = 16  # periods per artifact call
+
+    @property
+    def p(self) -> int:
+        return 1 << self.phase_bits
+
+    @property
+    def name(self) -> str:
+        return f"onn_n{self.n}_b{self.batch}_p{self.p}_c{self.chunk}"
+
+
+def onn_period_step(w: jax.Array, phases: jax.Array, cfg: OnnConfig) -> jax.Array:
+    """One period update using the Pallas coupling kernel.
+
+    Identical math to ref.onn_period_step_ref but with the weighted sum
+    routed through the tiled Pallas matmul: s is flattened (B,N,P)->(N,B*P)
+    so the kernel sees one big (N,N)x(N,B*P) contraction.
+    """
+    b, n = phases.shape
+    p = cfg.p
+    s = ref.square_wave(phases, p)  # [B, N, P]
+    s2 = jnp.transpose(s, (1, 0, 2)).reshape(n, b * p)
+    su2 = onn_step.coupling_matmul(w, s2)  # [N, B*P]
+    su = jnp.transpose(su2.reshape(n, b, p), (1, 0, 2))  # [B, N, P]
+    refsig = jnp.where(su > 0, 1.0, jnp.where(su < 0, -1.0, s))
+    score = jnp.einsum("bit,kt->bik", refsig, ref.templates(p))
+    return ref.snap_phase(score, phases, p)
+
+
+def onn_chunk(
+    w: jax.Array,
+    phases: jax.Array,
+    settled: jax.Array,
+    period0: jax.Array,
+    cfg: OnnConfig,
+):
+    """CHUNK-period scan — the unit of work one PJRT call performs.
+
+    Args:
+      w: f32[N, N] quantized weights.
+      phases: int32[B, N].
+      settled: int32[B], absolute period of first fixed point or -1.
+      period0: int32 scalar, absolute period index of this chunk's start.
+
+    Returns:
+      (phases', settled') — same shapes/dtypes.
+    """
+
+    def body(carry, k):
+        ph, st = carry
+        nph = onn_period_step(w, ph, cfg)
+        fixed = jnp.all(nph == ph, axis=-1)
+        st = jnp.where((st < 0) & fixed, period0 + k, st)
+        return (nph, st), None
+
+    (phases, settled), _ = jax.lax.scan(
+        body, (phases, settled), jnp.arange(cfg.chunk, dtype=jnp.int32)
+    )
+    return phases, settled
+
+
+def chunk_fn(cfg: OnnConfig):
+    """The callable that aot.py lowers (donation-friendly positional args)."""
+
+    @functools.partial(jax.jit, donate_argnums=(1, 2))
+    def fn(w, phases, settled, period0):
+        return onn_chunk(w, phases, settled, period0, cfg)
+
+    return fn
+
+
+def step_fn(cfg: OnnConfig):
+    """Single-period artifact used by quickstart/tests."""
+
+    @jax.jit
+    def fn(w, phases):
+        return (onn_period_step(w, phases, cfg),)
+
+    return fn
+
+
+def example_args(cfg: OnnConfig, *, for_step: bool = False):
+    """ShapeDtypeStructs matching chunk_fn/step_fn signatures."""
+    w = jax.ShapeDtypeStruct((cfg.n, cfg.n), jnp.float32)
+    phases = jax.ShapeDtypeStruct((cfg.batch, cfg.n), jnp.int32)
+    if for_step:
+        return (w, phases)
+    settled = jax.ShapeDtypeStruct((cfg.batch,), jnp.int32)
+    period0 = jax.ShapeDtypeStruct((), jnp.int32)
+    return (w, phases, settled, period0)

@@ -1,0 +1,107 @@
+"""Kernel-vs-oracle tests — the CORE correctness signal for L1.
+
+hypothesis sweeps shapes and value ranges of the Pallas coupling matmul
+against the pure-jnp oracle; everything must match exactly (integer-valued
+f32, see ref.py docstring).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import onn_step, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _int_weights(rng, n, k, lo=-16, hi=15):
+    return rng.integers(lo, hi + 1, size=(n, k)).astype(np.float32)
+
+
+def _signs(rng, k, m):
+    return rng.choice([-1.0, 1.0], size=(k, m)).astype(np.float32)
+
+
+class TestCouplingMatmul:
+    def test_identity(self):
+        w = np.eye(8, dtype=np.float32)
+        s = np.arange(8 * 8, dtype=np.float32).reshape(8, 8)
+        out = onn_step.coupling_matmul(jnp.array(w), jnp.array(s))
+        np.testing.assert_array_equal(np.asarray(out), s)
+
+    def test_matches_ref_square(self):
+        rng = np.random.default_rng(0)
+        w, s = _int_weights(rng, 16, 16), _signs(rng, 16, 32)
+        got = onn_step.coupling_matmul(jnp.array(w), jnp.array(s))
+        want = ref.coupling_matmul_ref(jnp.array(w), jnp.array(s))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("n", [1, 3, 8, 9, 20, 42, 100, 130])
+    def test_matches_ref_ragged_n(self, n):
+        """Sizes that do NOT divide the tile exercise the padding path."""
+        rng = np.random.default_rng(n)
+        m = 48
+        w, s = _int_weights(rng, n, n), _signs(rng, n, m)
+        got = onn_step.coupling_matmul(jnp.array(w), jnp.array(s))
+        want = ref.coupling_matmul_ref(jnp.array(w), jnp.array(s))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(1, 64),
+        m=st.integers(1, 96),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, n, m, seed):
+        rng = np.random.default_rng(seed)
+        w, s = _int_weights(rng, n, n), _signs(rng, n, m)
+        got = onn_step.coupling_matmul(jnp.array(w), jnp.array(s))
+        want = ref.coupling_matmul_ref(jnp.array(w), jnp.array(s))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        tm=st.sampled_from([8, 16, 32, 128]),
+        tk=st.sampled_from([8, 16, 128]),
+        seed=st.integers(0, 999),
+    )
+    def test_hypothesis_tilings(self, tm, tk, seed):
+        """All tile choices compute the same integers."""
+        rng = np.random.default_rng(seed)
+        n, m = 24, 40
+        w, s = _int_weights(rng, n, n), _signs(rng, n, m)
+        got = onn_step.coupling_matmul(
+            jnp.array(w), jnp.array(s), tile_m=tm, tile_n=tm, tile_k=tk
+        )
+        want = ref.coupling_matmul_ref(jnp.array(w), jnp.array(s))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_values_are_exact_integers(self):
+        rng = np.random.default_rng(7)
+        w, s = _int_weights(rng, 50, 50), _signs(rng, 50, 64)
+        out = np.asarray(onn_step.coupling_matmul(jnp.array(w), jnp.array(s)))
+        np.testing.assert_array_equal(out, np.round(out))
+        assert np.abs(out).max() <= 50 * 16
+
+    def test_dtype_f32(self):
+        rng = np.random.default_rng(1)
+        w, s = _int_weights(rng, 8, 8), _signs(rng, 8, 8)
+        out = onn_step.coupling_matmul(jnp.array(w), jnp.array(s))
+        assert out.dtype == jnp.float32
+
+
+class TestPerfModelHelpers:
+    def test_vmem_footprint_production_tile_fits(self):
+        # 128x128x128 f32 tiles must sit far under the ~16 MiB VMEM budget.
+        assert onn_step.vmem_footprint_bytes(128, 128, 128) < 2 * 2**20
+
+    def test_mxu_utilization_bounds(self):
+        u = onn_step.mxu_utilization_estimate(506, 128, 128, 128)
+        assert 0.0 < u <= 1.0
+        # 506 pads to 512: utilization should be high.
+        assert u > 0.9
+
+    def test_mxu_utilization_tiny_net_is_low(self):
+        assert onn_step.mxu_utilization_estimate(9, 128, 128, 128) < 0.02

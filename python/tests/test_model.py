@@ -1,0 +1,174 @@
+"""L2 model tests: Pallas-backed step vs pure-jnp oracle, dynamics laws."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.model import OnnConfig, onn_chunk, onn_period_step
+
+jax.config.update("jax_platform_name", "cpu")
+
+P = 16
+
+
+def _rand_net(rng, n, b):
+    w = rng.integers(-16, 16, size=(n, n)).astype(np.float32)
+    ph = rng.integers(0, P, size=(b, n)).astype(np.int32)
+    return jnp.array(w), jnp.array(ph)
+
+
+class TestStepVsOracle:
+    @pytest.mark.parametrize("n,b", [(4, 2), (9, 8), (20, 4), (42, 3)])
+    def test_step_bit_exact(self, n, b):
+        rng = np.random.default_rng(n * 100 + b)
+        w, ph = _rand_net(rng, n, b)
+        cfg = OnnConfig(n=n, batch=b)
+        got = onn_period_step(w, ph, cfg)
+        want = ref.onn_period_step_ref(w, ph, P)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @settings(max_examples=15, deadline=None)
+    @given(n=st.integers(2, 24), b=st.integers(1, 6), seed=st.integers(0, 999))
+    def test_step_bit_exact_hypothesis(self, n, b, seed):
+        rng = np.random.default_rng(seed)
+        w, ph = _rand_net(rng, n, b)
+        cfg = OnnConfig(n=n, batch=b)
+        got = onn_period_step(w, ph, cfg)
+        want = ref.onn_period_step_ref(w, ph, P)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_chunk_matches_ref_scan(self):
+        rng = np.random.default_rng(3)
+        w, ph = _rand_net(rng, 12, 5)
+        cfg = OnnConfig(n=12, batch=5, chunk=8)
+        st0 = jnp.full((5,), -1, jnp.int32)
+        p0 = jnp.int32(0)
+        got_ph, got_st = onn_chunk(w, ph, st0, p0, cfg)
+        want_ph, want_st = ref.onn_chunk_ref(w, ph, st0, p0, p=P, chunk=8)
+        np.testing.assert_array_equal(np.asarray(got_ph), np.asarray(want_ph))
+        np.testing.assert_array_equal(np.asarray(got_st), np.asarray(want_st))
+
+
+class TestDynamicsLaws:
+    """Physics/algorithm invariants of the functional model."""
+
+    def test_hopfield_equivalence_binary_phases(self):
+        """At phases {0, P/2} the step IS a synchronous Hopfield update."""
+        rng = np.random.default_rng(11)
+        n, b = 15, 16
+        w = rng.integers(-16, 16, size=(n, n)).astype(np.float32)
+        sigma = rng.choice([1, -1], size=(b, n))
+        ph = jnp.array(np.where(sigma == 1, 0, P // 2).astype(np.int32))
+        nph = np.asarray(ref.onn_period_step_ref(jnp.array(w), ph, P))
+        h = sigma @ w.T  # h[b,i] = sum_j W[i,j] sigma[b,j]
+        want_sigma = np.where(h > 0, 1, np.where(h < 0, -1, sigma))
+        want = np.where(want_sigma == 1, 0, P // 2)
+        np.testing.assert_array_equal(nph, want)
+
+    def test_binary_phases_stay_binary(self):
+        rng = np.random.default_rng(12)
+        n, b = 10, 8
+        w = rng.integers(-16, 16, size=(n, n)).astype(np.float32)
+        sigma = rng.choice([1, -1], size=(b, n))
+        ph = jnp.array(np.where(sigma == 1, 0, P // 2).astype(np.int32))
+        for _ in range(4):
+            ph = ref.onn_period_step_ref(jnp.array(w), ph, P)
+        vals = np.unique(np.asarray(ph))
+        assert set(vals.tolist()) <= {0, P // 2}
+
+    def test_global_phase_equivariance(self):
+        """Rotating every phase by d rotates the update by d."""
+        rng = np.random.default_rng(13)
+        w, ph = _rand_net(rng, 12, 4)
+        base = np.asarray(ref.onn_period_step_ref(w, ph, P))
+        for d in [1, 5, 9]:
+            rot = jnp.mod(ph + d, P)
+            got = np.asarray(ref.onn_period_step_ref(w, rot, P))
+            np.testing.assert_array_equal(got, (base + d) % P)
+
+    def test_zero_weights_keep_phase(self):
+        """With W=0 every sum ties, the reference equals the oscillator's
+        own waveform, and the phase must not move."""
+        rng = np.random.default_rng(14)
+        n, b = 9, 6
+        w = jnp.zeros((n, n), jnp.float32)
+        ph = jnp.array(rng.integers(0, P, size=(b, n)).astype(np.int32))
+        nph = ref.onn_period_step_ref(w, ph, P)
+        np.testing.assert_array_equal(np.asarray(nph), np.asarray(ph))
+
+    def test_ferromagnetic_consensus(self):
+        """All-to-all positive coupling snaps scattered phases to the
+        weighted-majority phase.  (A 2-oscillator pure-cross pair is the
+        degenerate synchronous exchange map and 2-cycles — that behaviour
+        is pinned by test_pure_cross_pair_is_exchange_map below.)"""
+        n = 3
+        w = jnp.array(8.0 * (np.ones((n, n)) - np.eye(n)), jnp.float32)
+        ph = jnp.array([[0, 1, 2]], jnp.int32)
+        for _ in range(4):
+            ph = ref.onn_period_step_ref(w, ph, P)
+        vals = np.unique(np.asarray(ph))
+        assert len(vals) == 1, f"no consensus: {np.asarray(ph)}"
+
+    def test_antiferromagnetic_follower_locks_out_of_phase(self):
+        """Asymmetric coupling: osc0 pinned by self-coupling, osc1 follows
+        a negative weight -> locks exactly P/2 away."""
+        w = jnp.array([[15.0, 0.0], [-8.0, 0.0]], jnp.float32)
+        ph = jnp.array([[3, 7]], jnp.int32)
+        for _ in range(3):
+            ph = ref.onn_period_step_ref(w, ph, P)
+        a, b = int(ph[0, 0]), int(ph[0, 1])
+        assert a == 3  # pinned
+        assert (b - a) % P == P // 2
+
+    def test_pure_cross_pair_is_exchange_map(self):
+        """Documents the known degenerate case: a 2-oscillator network with
+        pure cross coupling swaps phases each synchronous period."""
+        w = jnp.array([[0.0, 8.0], [8.0, 0.0]], jnp.float32)
+        ph0 = jnp.array([[0, 5]], jnp.int32)
+        ph1 = ref.onn_period_step_ref(w, ph0, P)
+        ph2 = ref.onn_period_step_ref(w, ph1, P)
+        np.testing.assert_array_equal(np.asarray(ph1), [[5, 0]])
+        np.testing.assert_array_equal(np.asarray(ph2), np.asarray(ph0))
+
+    def test_settled_monotone_and_sticky(self):
+        """Fixed points persist: settled is set once and phases freeze."""
+        rng = np.random.default_rng(15)
+        n, b = 8, 10
+        # symmetric ferromagnetic-ish weights converge fast
+        a = rng.integers(0, 8, size=(n, n))
+        w = jnp.array(((a + a.T) // 2).astype(np.float32))
+        sigma = rng.choice([1, -1], size=(b, n))
+        ph = jnp.array(np.where(sigma == 1, 0, P // 2).astype(np.int32))
+        st0 = jnp.full((b,), -1, jnp.int32)
+        ph1, st1 = ref.onn_chunk_ref(w, ph, st0, jnp.int32(0), p=P, chunk=32)
+        ph2, st2 = ref.onn_chunk_ref(w, ph1, st1, jnp.int32(32), p=P, chunk=32)
+        st1n, st2n = np.asarray(st1), np.asarray(st2)
+        # settles found in chunk 1 are unchanged by chunk 2
+        mask = st1n >= 0
+        np.testing.assert_array_equal(st2n[mask], st1n[mask])
+        # settled trials have frozen phases
+        np.testing.assert_array_equal(
+            np.asarray(ph2)[mask], np.asarray(ph1)[mask]
+        )
+
+
+class TestTemplates:
+    def test_templates_shape_and_values(self):
+        t = np.asarray(ref.templates(P))
+        assert t.shape == (P, P)
+        assert set(np.unique(t).tolist()) == {-1.0, 1.0}
+
+    def test_template_autocorrelation_peak(self):
+        """Each template correlates maximally (=P) only with itself."""
+        t = np.asarray(ref.templates(P))
+        g = t @ t.T
+        assert np.all(np.diag(g) == P)
+        off = g[~np.eye(P, dtype=bool)]
+        assert off.max() < P
+
+    def test_square_wave_half_duty(self):
+        s = np.asarray(ref.square_wave(jnp.arange(P, dtype=jnp.int32), P))
+        np.testing.assert_array_equal(s.sum(axis=-1), np.zeros(P))

@@ -1,0 +1,14 @@
+//! Bench: paper Figure 10 (flip-flop scaling, log-log slopes).
+
+use onn_scale::harness::bench::run;
+use onn_scale::harness::report;
+use onn_scale::harness::scaling::{hybrid_sweep, recurrent_sweep};
+
+fn main() {
+    println!("{}", report::fig10());
+    run("fig10/sweep_and_fit_both_architectures", 3, 50, || {
+        let ra = recurrent_sweep().ff_fit();
+        let ha = hybrid_sweep().ff_fit();
+        assert!(ra.slope > ha.slope);
+    });
+}

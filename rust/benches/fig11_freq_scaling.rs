@@ -1,0 +1,14 @@
+//! Bench: paper Figure 11 (oscillation frequency vs N, log-log slopes).
+
+use onn_scale::harness::bench::run;
+use onn_scale::harness::report;
+use onn_scale::harness::scaling::{hybrid_sweep, recurrent_sweep};
+
+fn main() {
+    println!("{}", report::fig11());
+    run("fig11/sweep_and_fit_both_architectures", 3, 50, || {
+        let ra = recurrent_sweep().freq_fit();
+        let ha = hybrid_sweep().freq_fit();
+        assert!(ra.slope < 0.0 && ha.slope < ra.slope);
+    });
+}

@@ -1,0 +1,14 @@
+//! Bench: paper Figure 12 (hybrid area vs frequency balance point).
+
+use onn_scale::harness::bench::run;
+use onn_scale::harness::report;
+use onn_scale::harness::scaling::{fig12_balance, fig12_crossover, hybrid_sweep};
+
+fn main() {
+    println!("{}", report::fig12());
+    run("fig12/balance_sweep_and_crossover", 3, 50, || {
+        let sweep = hybrid_sweep();
+        let bal = fig12_balance(&sweep);
+        assert!(fig12_crossover(&bal).is_some());
+    });
+}

@@ -1,0 +1,14 @@
+//! Bench: paper Figure 9 (LUT scaling, log-log slopes) + sweep timing.
+
+use onn_scale::harness::bench::run;
+use onn_scale::harness::report;
+use onn_scale::harness::scaling::{hybrid_sweep, recurrent_sweep};
+
+fn main() {
+    println!("{}", report::fig9());
+    run("fig9/sweep_and_fit_both_architectures", 3, 50, || {
+        let ra = recurrent_sweep().lut_fit();
+        let ha = hybrid_sweep().lut_fit();
+        assert!(ra.slope > ha.slope);
+    });
+}

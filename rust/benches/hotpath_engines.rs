@@ -1,0 +1,114 @@
+//! Hot-path benchmark: the engines that execute retrieval trials —
+//! native incremental vs naive oracle vs PJRT artifact vs RTL sims —
+//! plus coordinator throughput.  This is the §Perf workhorse
+//! (EXPERIMENTS.md records before/after from here).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use onn_scale::coordinator::batcher::BatchPolicy;
+use onn_scale::coordinator::job::RetrievalRequest;
+use onn_scale::coordinator::server::{Coordinator, EngineKind, PoolSpec};
+use onn_scale::harness::bench::run;
+use onn_scale::harness::datasets::benchmark_by_name;
+use onn_scale::onn::dynamics::{period_step_naive, FunctionalEngine};
+use onn_scale::rtl::recurrent::RecurrentOnn;
+use onn_scale::rtl::RtlSim;
+use onn_scale::runtime::artifact::{default_dir, Manifest};
+use onn_scale::runtime::engine::{PjrtContext, PjrtEngine};
+use onn_scale::runtime::ChunkEngine;
+use onn_scale::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(1);
+
+    // --- L3-native period step: naive vs incremental, 22x22 scale ---
+    let set = benchmark_by_name("22x22").unwrap();
+    let n = set.cfg.n;
+    let ph0: Vec<i32> = (0..n).map(|_| rng.range_i64(0, 16) as i32).collect();
+    run("native/period_step_naive_n484", 1, 5, || {
+        let out = period_step_naive(&set.cfg, &set.weights, &ph0);
+        assert_eq!(out.len(), n);
+    });
+    let mut eng = FunctionalEngine::new(set.cfg, set.weights.clone());
+    run("native/period_step_incremental_n484", 2, 20, || {
+        let mut ph = ph0.clone();
+        eng.period_step(&mut ph);
+    });
+
+    // --- RTL tick cost (the cycle-accurate fidelity price) ---
+    let set76 = benchmark_by_name("7x6").unwrap();
+    let mut ra = RecurrentOnn::new(set76.cfg, set76.weights.clone());
+    ra.set_phases(&vec![0; set76.cfg.n]);
+    run("rtl/recurrent_period_n42", 2, 50, || {
+        for _ in 0..16 {
+            ra.tick();
+        }
+    });
+
+    // --- PJRT chunk execution (needs artifacts) ---
+    if let Ok(manifest) = Manifest::load(&default_dir()) {
+        let ctx = PjrtContext::cpu().expect("pjrt");
+        for nn in [42usize, 484] {
+            if let Some(info) = manifest.chunk_for(nn) {
+                let setn = if nn == 42 {
+                    benchmark_by_name("7x6").unwrap()
+                } else {
+                    benchmark_by_name("22x22").unwrap()
+                };
+                let mut pe = PjrtEngine::load(ctx.clone(), info).expect("load");
+                pe.set_weights(&setn.weights.to_f32()).unwrap();
+                let b = info.batch;
+                let mut phases: Vec<i32> =
+                    (0..b * nn).map(|_| rng.range_i64(0, 16) as i32).collect();
+                let mut settled = vec![-1i32; b];
+                let name = format!(
+                    "pjrt/chunk16_n{nn}_b{b} ({} trials-periods/call)",
+                    b * info.chunk
+                );
+                run(&name, 2, 10, || {
+                    pe.run_chunk(&mut phases, &mut settled, 0).unwrap();
+                });
+            }
+        }
+    } else {
+        println!("(artifacts missing; skipping pjrt benches — run `make artifacts`)");
+    }
+
+    // --- coordinator end-to-end throughput, native pool, 1 vs N workers ---
+    let set = benchmark_by_name("7x6").unwrap();
+    let p = set.cfg.period() as i32;
+    for workers in [1usize, 4] {
+        let coord = Arc::new(
+            Coordinator::start(
+                vec![PoolSpec::new(set.cfg, set.weights.clone(), EngineKind::Native)
+                    .with_workers(workers)],
+                BatchPolicy {
+                    max_wait: Duration::from_millis(1),
+                    max_periods_cap: 256,
+                },
+            )
+            .unwrap(),
+        );
+        let name = format!("coordinator/100_retrievals_7x6_native_w{workers}");
+        run(&name, 1, 5, || {
+            let mut pending = Vec::new();
+            let mut rng = Rng::new(9);
+            for i in 0..100 {
+                let target = &set.dataset.patterns[i % 5];
+                let corrupted = target.corrupt(10, &mut rng);
+                let req =
+                    RetrievalRequest::from_pattern(coord.next_id(), &corrupted, p, 256);
+                pending.push(coord.router.submit(req).unwrap());
+            }
+            for rx in pending {
+                let _ = rx.recv().unwrap();
+            }
+        });
+        let snap = coord.snapshot();
+        println!(
+            "  workers={workers}: {} jobs, {} batches, mean occupancy {:.1}",
+            snap.completed, snap.batches, snap.mean_occupancy
+        );
+    }
+}

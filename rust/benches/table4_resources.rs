@@ -1,0 +1,26 @@
+//! Bench: regenerate paper Table 4 (resource usage at max N per design)
+//! and time the resource-model evaluation + capacity search.
+
+use onn_scale::fpga::device::zynq7020;
+use onn_scale::fpga::resources::{estimate, max_oscillators};
+use onn_scale::harness::bench::run;
+use onn_scale::harness::report;
+use onn_scale::onn::config::NetworkConfig;
+
+fn main() {
+    println!("{}", report::table4());
+    let d = zynq7020();
+    run("table4/estimate_hybrid_506", 3, 50, || {
+        let r = estimate("hybrid", &NetworkConfig::paper(506), &d);
+        assert!(r.dsps > 0);
+    });
+    run("table4/estimate_recurrent_48", 3, 50, || {
+        let r = estimate("recurrent", &NetworkConfig::paper(48), &d);
+        assert!(r.luts > 0);
+    });
+    run("table4/max_oscillators_search_both", 1, 10, || {
+        let ra = max_oscillators("recurrent", &d, 4, 5);
+        let ha = max_oscillators("hybrid", &d, 4, 5);
+        assert!(ha > ra);
+    });
+}

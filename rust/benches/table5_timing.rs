@@ -1,0 +1,21 @@
+//! Bench: regenerate paper Table 5 (max frequencies / max oscillators)
+//! and time the timing-model sweep.
+
+use onn_scale::fpga::device::zynq7020;
+use onn_scale::fpga::timing::frequencies;
+use onn_scale::harness::bench::run;
+use onn_scale::harness::report;
+use onn_scale::onn::config::NetworkConfig;
+
+fn main() {
+    println!("{}", report::table5());
+    let d = zynq7020();
+    run("table5/frequency_model_full_sweep", 3, 100, || {
+        let mut acc = 0.0;
+        for n in (4..=506).step_by(2) {
+            let (fl, fo) = frequencies("hybrid", &NetworkConfig::paper(n), &d);
+            acc += fl + fo;
+        }
+        assert!(acc > 0.0);
+    });
+}

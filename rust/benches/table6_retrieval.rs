@@ -1,0 +1,35 @@
+//! Bench: paper Table 6 (retrieval accuracy) at bench scale — RA on the
+//! cycle-accurate recurrent simulator for feasible sizes, HA on the
+//! functional engine — printing the table and timing each cell kind.
+//!
+//! Full-scale regeneration (1000 trials, PJRT): `onn-scale table6 --trials 1000`.
+
+use onn_scale::harness::bench::run;
+use onn_scale::harness::datasets::benchmark_by_name;
+use onn_scale::harness::report::RetrievalReport;
+use onn_scale::harness::retrieval::{run_cell, Engine, CORRUPTION_LEVELS};
+
+fn main() {
+    let trials = 60;
+    let mut cells = Vec::new();
+    for name in ["3x3", "5x4", "7x6", "10x10", "22x22"] {
+        let set = benchmark_by_name(name).unwrap();
+        let ra_ok = set.cfg.n <= 48;
+        for pct in CORRUPTION_LEVELS {
+            let ha = run_cell(&set, pct, trials, 2025, Engine::Native).unwrap();
+            let ra = ra_ok.then(|| run_cell(&set, pct, trials, 2025, Engine::RtlRecurrent).unwrap());
+            cells.push((set.dataset.name.clone(), pct, ra, ha));
+        }
+    }
+    println!("{}", RetrievalReport { cells }.table6());
+
+    let set = benchmark_by_name("7x6").unwrap();
+    run("table6/cell_native_7x6_25pct_20trials", 1, 5, || {
+        let c = run_cell(&set, 25.0, 20, 1, Engine::Native).unwrap();
+        assert_eq!(c.trials, 100);
+    });
+    run("table6/cell_rtl_recurrent_7x6_25pct_20trials", 1, 3, || {
+        let c = run_cell(&set, 25.0, 20, 1, Engine::RtlRecurrent).unwrap();
+        assert_eq!(c.trials, 100);
+    });
+}

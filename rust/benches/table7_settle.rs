@@ -1,0 +1,41 @@
+//! Bench: paper Table 7 (mean time to settle) at bench scale, plus
+//! settle-loop timing on the functional engine.
+
+use onn_scale::harness::bench::run;
+use onn_scale::harness::datasets::benchmark_by_name;
+use onn_scale::harness::report::RetrievalReport;
+use onn_scale::harness::retrieval::{run_cell, Engine, CORRUPTION_LEVELS};
+use onn_scale::onn::dynamics::FunctionalEngine;
+use onn_scale::onn::phase::spin_to_phase;
+use onn_scale::util::rng::Rng;
+
+fn main() {
+    let trials = 60;
+    let mut cells = Vec::new();
+    for name in ["3x3", "5x4", "7x6", "10x10", "22x22"] {
+        let set = benchmark_by_name(name).unwrap();
+        let ra_ok = set.cfg.n <= 48;
+        for pct in CORRUPTION_LEVELS {
+            let ha = run_cell(&set, pct, trials, 2025, Engine::Native).unwrap();
+            let ra = ra_ok.then(|| run_cell(&set, pct, trials, 2025, Engine::RtlRecurrent).unwrap());
+            cells.push((set.dataset.name.clone(), pct, ra, ha));
+        }
+    }
+    println!("{}", RetrievalReport { cells }.table7());
+
+    // settle-loop micro-bench at the paper's headline scale
+    let set = benchmark_by_name("22x22").unwrap();
+    let mut eng = FunctionalEngine::new(set.cfg, set.weights.clone());
+    let mut rng = Rng::new(3);
+    let target = &set.dataset.patterns[0];
+    run("table7/settle_22x22_single_trial_25pct", 1, 10, || {
+        let corrupted = target.corrupt(121, &mut rng);
+        let init: Vec<i32> = corrupted
+            .spins
+            .iter()
+            .map(|&s| spin_to_phase(s, 16))
+            .collect();
+        let out = eng.run_to_settle(&init, 256);
+        assert!(out.settled.is_some());
+    });
+}

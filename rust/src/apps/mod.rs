@@ -1,0 +1,6 @@
+//! The paper's future-work applications ("larger network sizes can be
+//! benchmarked using ... especially combinatorial optimization
+//! problems"): the ONN as an oscillatory Ising machine.
+
+pub mod coloring;
+pub mod maxcut;

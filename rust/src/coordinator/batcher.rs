@@ -1,0 +1,217 @@
+//! Dynamic batcher + worker: packs retrieval jobs into the fixed batch
+//! dimension of a chunk engine using a size-or-deadline policy, drives
+//! the engine to a fixed point, and replies per job.
+//!
+//! Policy: the first job opens a batch window; the window closes when
+//! either the batch is full or `max_wait` elapses — the same policy a
+//! serving router uses to trade latency for occupancy.  Unused batch
+//! slots are padded with a copy of the first job's phases (the engine's
+//! batch shape is baked into the AOT artifact).
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::job::{Job, RetrievalResult};
+use crate::coordinator::metrics::Metrics;
+use crate::runtime::EngineFactory;
+
+/// Batch-window policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Maximum time the first job in a window waits for company.
+    pub max_wait: Duration,
+    /// Hard cap on periods driven per batch (safety).
+    pub max_periods_cap: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self {
+            max_wait: Duration::from_millis(2),
+            max_periods_cap: 1024,
+        }
+    }
+}
+
+/// Collect one batch according to the policy. Exposed for testing.
+pub fn collect_batch(
+    rx: &Receiver<Job>,
+    capacity: usize,
+    policy: &BatchPolicy,
+) -> Option<Vec<Job>> {
+    let first = rx.recv().ok()?;
+    let deadline = Instant::now() + policy.max_wait;
+    let mut jobs = vec![first];
+    while jobs.len() < capacity {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(j) => jobs.push(j),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(jobs)
+}
+
+/// The worker loop: owns the engine (constructed in-thread; PJRT handles
+/// are thread-affine), pulls batches, runs them, replies.
+///
+/// Several workers may share one queue (`Arc<Mutex<Receiver>>`): batch
+/// *collection* is serialized by the lock, batch *execution* runs in
+/// parallel across workers — the occupancy/throughput trade a serving
+/// pool makes.
+pub fn worker_loop(
+    factory: EngineFactory,
+    weights_f32: Vec<f32>,
+    rx: Arc<Mutex<Receiver<Job>>>,
+    metrics: Arc<Metrics>,
+    policy: BatchPolicy,
+) -> Result<()> {
+    let mut engine = factory()?;
+    engine.set_weights(&weights_f32)?;
+    let n = engine.n();
+    let capacity = engine.batch();
+    let chunk = engine.chunk_len();
+
+    let mut phases = vec![0i32; capacity * n];
+    let mut settled = vec![-1i32; capacity];
+
+    loop {
+        let jobs = {
+            let guard = rx.lock().expect("queue lock poisoned");
+            collect_batch(&guard, capacity, &policy)
+        };
+        let Some(jobs) = jobs else { break };
+        let batch_start = Instant::now();
+        metrics.record_batch(jobs.len());
+        let max_periods = jobs
+            .iter()
+            .map(|j| j.req.max_periods)
+            .max()
+            .unwrap_or(chunk)
+            .min(policy.max_periods_cap);
+
+        // Pack: real jobs then padding (repeat job 0 so the padded work
+        // is well-formed; its results are discarded).
+        for (slot, job) in jobs.iter().enumerate() {
+            debug_assert_eq!(job.req.phases.len(), n, "router sent wrong-size job");
+            phases[slot * n..(slot + 1) * n].copy_from_slice(&job.req.phases);
+        }
+        for slot in jobs.len()..capacity {
+            let src = jobs[0].req.phases.clone();
+            phases[slot * n..(slot + 1) * n].copy_from_slice(&src);
+        }
+        settled.iter_mut().for_each(|s| *s = -1);
+
+        // Drive chunks until every *real* slot either settles or is
+        // provably hopeless.  A trial whose phases are unchanged across
+        // a whole chunk without having settled is in a limit cycle
+        // whose length divides the chunk (e.g. the synchronous
+        // 2-cycle): it can never settle, so stop burning periods on it.
+        // This is the L3 early-exit of EXPERIMENTS.md section Perf.
+        let mut period = 0usize;
+        let mut hopeless = vec![false; jobs.len()];
+        let mut before = vec![0i32; n];
+        while period < max_periods {
+            let snapshot: Vec<i32> = phases[..jobs.len() * n].to_vec();
+            engine.run_chunk(&mut phases, &mut settled, period as i32)?;
+            period += chunk;
+            let mut active = false;
+            for (slot, h) in hopeless.iter_mut().enumerate() {
+                if settled[slot] >= 0 || *h {
+                    continue;
+                }
+                before.copy_from_slice(&snapshot[slot * n..(slot + 1) * n]);
+                if phases[slot * n..(slot + 1) * n] == before[..] {
+                    *h = true; // limit cycle: unchanged over a full chunk
+                } else {
+                    active = true;
+                }
+            }
+            if !active {
+                break;
+            }
+        }
+
+        let done = Instant::now();
+        let occupancy = jobs.len();
+        for (slot, job) in jobs.into_iter().enumerate() {
+            let s = settled[slot];
+            let result = RetrievalResult {
+                id: job.req.id,
+                phases: phases[slot * n..(slot + 1) * n].to_vec(),
+                settled: (s >= 0).then_some(s as usize),
+                queue_latency: batch_start.duration_since(job.submitted),
+                total_latency: done.duration_since(job.submitted),
+                batch_occupancy: occupancy,
+            };
+            let timed_out = result.settled.is_none();
+            metrics.record_completion(result.queue_latency, result.total_latency, timed_out);
+            // Receiver may have hung up (client gave up) — that's fine.
+            let _ = job.reply.send(result);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn dummy_job(id: u64, reply: std::sync::mpsc::Sender<RetrievalResult>) -> Job {
+        Job {
+            req: crate::coordinator::job::RetrievalRequest {
+                id,
+                n: 2,
+                phases: vec![0, 8],
+                max_periods: 16,
+            },
+            submitted: Instant::now(),
+            reply,
+        }
+    }
+
+    #[test]
+    fn collect_waits_until_full() {
+        let (tx, rx) = channel();
+        let (rtx, _rrx) = channel();
+        for i in 0..3 {
+            tx.send(dummy_job(i, rtx.clone())).unwrap();
+        }
+        let policy = BatchPolicy {
+            max_wait: Duration::from_millis(50),
+            ..Default::default()
+        };
+        let jobs = collect_batch(&rx, 3, &policy).unwrap();
+        assert_eq!(jobs.len(), 3);
+    }
+
+    #[test]
+    fn collect_respects_deadline() {
+        let (tx, rx) = channel();
+        let (rtx, _rrx) = channel();
+        tx.send(dummy_job(0, rtx)).unwrap();
+        let policy = BatchPolicy {
+            max_wait: Duration::from_millis(5),
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let jobs = collect_batch(&rx, 64, &policy).unwrap();
+        assert_eq!(jobs.len(), 1);
+        assert!(t0.elapsed() < Duration::from_millis(200));
+    }
+
+    #[test]
+    fn collect_none_after_disconnect() {
+        let (tx, rx) = channel::<Job>();
+        drop(tx);
+        assert!(collect_batch(&rx, 4, &BatchPolicy::default()).is_none());
+    }
+}

@@ -1,0 +1,73 @@
+//! Job/request/result types flowing through the coordinator.
+
+use std::time::{Duration, Instant};
+
+use crate::onn::patterns::Pattern;
+use crate::onn::phase::spin_to_phase;
+
+/// A retrieval request: initial oscillator phases for one trial.
+#[derive(Debug, Clone)]
+pub struct RetrievalRequest {
+    pub id: u64,
+    /// Network size this request targets (routing key).
+    pub n: usize,
+    /// Initial phases, length n, values in [0, P).
+    pub phases: Vec<i32>,
+    /// Give up after this many oscillation periods.
+    pub max_periods: usize,
+}
+
+impl RetrievalRequest {
+    /// Build a request from a (corrupted) binary pattern: +1 -> phase 0,
+    /// -1 -> phase P/2.
+    pub fn from_pattern(id: u64, pattern: &Pattern, p: i32, max_periods: usize) -> Self {
+        Self {
+            id,
+            n: pattern.len(),
+            phases: pattern
+                .spins
+                .iter()
+                .map(|&s| spin_to_phase(s, p))
+                .collect(),
+            max_periods,
+        }
+    }
+}
+
+/// The settled (or timed-out) outcome of one retrieval request.
+#[derive(Debug, Clone)]
+pub struct RetrievalResult {
+    pub id: u64,
+    pub phases: Vec<i32>,
+    /// Periods until the fixed point, or None on timeout.
+    pub settled: Option<usize>,
+    /// Time spent queued before entering a batch.
+    pub queue_latency: Duration,
+    /// Submission-to-completion wall time.
+    pub total_latency: Duration,
+    /// How many real jobs shared the batch (occupancy diagnostics).
+    pub batch_occupancy: usize,
+}
+
+/// Internal envelope: request + reply channel + timestamps.
+#[derive(Debug)]
+pub struct Job {
+    pub req: RetrievalRequest,
+    pub submitted: Instant,
+    pub reply: std::sync::mpsc::Sender<RetrievalResult>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_pattern_maps_spins() {
+        let pat = Pattern::from_art("t", &["#.", ".#"]);
+        let r = RetrievalRequest::from_pattern(7, &pat, 16, 100);
+        assert_eq!(r.id, 7);
+        assert_eq!(r.n, 4);
+        assert_eq!(r.phases, vec![0, 8, 8, 0]);
+        assert_eq!(r.max_periods, 100);
+    }
+}

@@ -1,0 +1,100 @@
+//! Service metrics: counters and latency aggregates, cheap enough for
+//! the hot path (atomics; latencies accumulate as running sums).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub timeouts: AtomicU64,
+    pub batches: AtomicU64,
+    /// Sum of real jobs over all batches (occupancy numerator).
+    pub batched_jobs: AtomicU64,
+    /// Total latency sums in microseconds.
+    queue_us: AtomicU64,
+    total_us: AtomicU64,
+}
+
+/// A point-in-time snapshot for reporting.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub timeouts: u64,
+    pub batches: u64,
+    pub mean_queue_ms: f64,
+    pub mean_total_ms: f64,
+    /// Mean real jobs per batch / batch capacity is the caller's to
+    /// compute; this is the mean real jobs per batch.
+    pub mean_occupancy: f64,
+}
+
+impl Metrics {
+    pub fn record_submit(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, real_jobs: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_jobs
+            .fetch_add(real_jobs as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_completion(&self, queue: Duration, total: Duration, timed_out: bool) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        if timed_out {
+            self.timeouts.fetch_add(1, Ordering::Relaxed);
+        }
+        self.queue_us
+            .fetch_add(queue.as_micros() as u64, Ordering::Relaxed);
+        self.total_us
+            .fetch_add(total.as_micros() as u64, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let completed = self.completed.load(Ordering::Relaxed);
+        let batches = self.batches.load(Ordering::Relaxed);
+        let div = |num: u64, den: u64| if den == 0 { 0.0 } else { num as f64 / den as f64 };
+        MetricsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed,
+            timeouts: self.timeouts.load(Ordering::Relaxed),
+            batches,
+            mean_queue_ms: div(self.queue_us.load(Ordering::Relaxed), completed) / 1000.0,
+            mean_total_ms: div(self.total_us.load(Ordering::Relaxed), completed) / 1000.0,
+            mean_occupancy: div(self.batched_jobs.load(Ordering::Relaxed), batches),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_aggregates() {
+        let m = Metrics::default();
+        m.record_submit();
+        m.record_submit();
+        m.record_batch(2);
+        m.record_completion(Duration::from_millis(2), Duration::from_millis(10), false);
+        m.record_completion(Duration::from_millis(4), Duration::from_millis(20), true);
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 2);
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.timeouts, 1);
+        assert_eq!(s.batches, 1);
+        assert!((s.mean_queue_ms - 3.0).abs() < 0.01);
+        assert!((s.mean_total_ms - 15.0).abs() < 0.01);
+        assert!((s.mean_occupancy - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_snapshot_no_nan() {
+        let s = Metrics::default().snapshot();
+        assert_eq!(s.mean_total_ms, 0.0);
+        assert_eq!(s.mean_occupancy, 0.0);
+    }
+}

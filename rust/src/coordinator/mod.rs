@@ -1,0 +1,18 @@
+//! The retrieval service — the L3 coordination layer.
+//!
+//! External clients (the benchmark harness, the examples, or TCP
+//! connections) submit corrupted patterns as retrieval jobs; a router
+//! dispatches each job to the engine pool for its network size, where a
+//! dynamic batcher packs jobs into the fixed batch dimension of the AOT
+//! artifact and a worker thread drives the PJRT executable to a fixed
+//! point.  Python is never on this path.
+//!
+//! std threads + channels stand in for tokio (unavailable offline); the
+//! batcher implements the same size-or-deadline policy a vLLM-style
+//! router uses.
+
+pub mod batcher;
+pub mod job;
+pub mod metrics;
+pub mod router;
+pub mod server;

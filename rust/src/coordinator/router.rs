@@ -1,0 +1,132 @@
+//! Request router: dispatches retrieval jobs to the worker pool serving
+//! the job's network size.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::job::{Job, RetrievalRequest, RetrievalResult};
+use crate::coordinator::metrics::Metrics;
+
+/// Routing table: one job queue per network size.
+pub struct Router {
+    queues: Mutex<BTreeMap<usize, Sender<Job>>>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Router {
+    pub fn new(metrics: Arc<Metrics>) -> Self {
+        Self {
+            queues: Mutex::new(BTreeMap::new()),
+            metrics,
+        }
+    }
+
+    /// Register a worker queue for network size `n`.  Replacing an
+    /// existing route is an error (shut down first).
+    pub fn register(&self, n: usize, tx: Sender<Job>) -> Result<()> {
+        let mut q = self.queues.lock().unwrap();
+        if q.contains_key(&n) {
+            return Err(anyhow!("route for n={n} already registered"));
+        }
+        q.insert(n, tx);
+        Ok(())
+    }
+
+    pub fn routes(&self) -> Vec<usize> {
+        self.queues.lock().unwrap().keys().copied().collect()
+    }
+
+    /// Submit a request; the returned channel yields the result.
+    pub fn submit(&self, req: RetrievalRequest) -> Result<Receiver<RetrievalResult>> {
+        if req.phases.len() != req.n {
+            return Err(anyhow!(
+                "request {}: phases len {} != n {}",
+                req.id,
+                req.phases.len(),
+                req.n
+            ));
+        }
+        let q = self.queues.lock().unwrap();
+        let tx = q
+            .get(&req.n)
+            .ok_or_else(|| anyhow!("no engine registered for n={} (have {:?})", req.n, q.keys()))?;
+        let (rtx, rrx) = channel();
+        self.metrics.record_submit();
+        tx.send(Job {
+            req,
+            submitted: Instant::now(),
+            reply: rtx,
+        })
+        .map_err(|_| anyhow!("worker queue closed"))?;
+        Ok(rrx)
+    }
+
+    /// Drop all routes (workers drain and exit).
+    pub fn shutdown(&self) {
+        self.queues.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(n: usize) -> RetrievalRequest {
+        RetrievalRequest {
+            id: 1,
+            n,
+            phases: vec![0; n],
+            max_periods: 8,
+        }
+    }
+
+    #[test]
+    fn routes_by_network_size() {
+        let r = Router::new(Arc::new(Metrics::default()));
+        let (tx9, rx9) = channel();
+        let (tx20, _rx20) = channel();
+        r.register(9, tx9).unwrap();
+        r.register(20, tx20).unwrap();
+        assert_eq!(r.routes(), vec![9, 20]);
+        let _pending = r.submit(req(9)).unwrap();
+        let job = rx9.try_recv().unwrap();
+        assert_eq!(job.req.n, 9);
+    }
+
+    #[test]
+    fn unknown_size_rejected() {
+        let r = Router::new(Arc::new(Metrics::default()));
+        assert!(r.submit(req(5)).is_err());
+    }
+
+    #[test]
+    fn duplicate_route_rejected() {
+        let r = Router::new(Arc::new(Metrics::default()));
+        let (tx, _rx) = channel();
+        r.register(9, tx.clone()).unwrap();
+        assert!(r.register(9, tx).is_err());
+    }
+
+    #[test]
+    fn malformed_request_rejected() {
+        let r = Router::new(Arc::new(Metrics::default()));
+        let (tx, _rx) = channel();
+        r.register(9, tx).unwrap();
+        let mut bad = req(9);
+        bad.phases.pop();
+        assert!(r.submit(bad).is_err());
+    }
+
+    #[test]
+    fn shutdown_clears_routes() {
+        let r = Router::new(Arc::new(Metrics::default()));
+        let (tx, _rx) = channel();
+        r.register(9, tx).unwrap();
+        r.shutdown();
+        assert!(r.submit(req(9)).is_err());
+    }
+}

@@ -1,0 +1,272 @@
+//! The coordinator service: wires router + batchers + engine workers,
+//! and optionally speaks a JSON-lines protocol over TCP (the stand-in
+//! for the paper's laptop-UI -> PYNQ network link).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::batcher::{worker_loop, BatchPolicy};
+use crate::coordinator::job::{RetrievalRequest, RetrievalResult};
+use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
+use crate::coordinator::router::Router;
+use crate::onn::config::NetworkConfig;
+use crate::onn::weights::WeightMatrix;
+use crate::runtime::artifact::Manifest;
+use crate::runtime::engine::{PjrtContext, PjrtEngine};
+use crate::runtime::native::NativeEngine;
+use crate::runtime::EngineFactory;
+use crate::util::json::Json;
+
+/// Which engine implementation a pool should run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// AOT artifact through PJRT (production path).
+    Pjrt,
+    /// In-process functional engine (fallback / oracle).
+    Native,
+}
+
+/// One engine pool specification: a trained network at one size.
+pub struct PoolSpec {
+    pub cfg: NetworkConfig,
+    pub weights: WeightMatrix,
+    pub kind: EngineKind,
+    /// Batch/chunk for native engines (PJRT takes them from the
+    /// artifact).
+    pub native_batch: usize,
+    pub native_chunk: usize,
+    /// Worker threads sharing this pool's queue.  Batch collection is
+    /// serialized; batch execution parallelizes across workers.
+    pub workers: usize,
+}
+
+impl PoolSpec {
+    pub fn new(cfg: NetworkConfig, weights: WeightMatrix, kind: EngineKind) -> Self {
+        Self {
+            cfg,
+            weights,
+            kind,
+            native_batch: 32,
+            native_chunk: 16,
+            workers: 1,
+        }
+    }
+
+    /// Builder: run `workers` parallel engine workers on this pool.
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers.max(1);
+        self
+    }
+}
+
+/// The running service.
+pub struct Coordinator {
+    pub router: Arc<Router>,
+    pub metrics: Arc<Metrics>,
+    workers: Vec<JoinHandle<Result<()>>>,
+    next_id: AtomicU64,
+}
+
+impl Coordinator {
+    /// Spin up one worker per pool spec.
+    pub fn start(specs: Vec<PoolSpec>, policy: BatchPolicy) -> Result<Coordinator> {
+        let metrics = Arc::new(Metrics::default());
+        let router = Arc::new(Router::new(metrics.clone()));
+        let mut workers = Vec::new();
+        // Manifest is loaded once here (cheap); each PJRT worker compiles
+        // its own executable in-thread.
+        let manifest = if specs.iter().any(|s| s.kind == EngineKind::Pjrt) {
+            Some(Manifest::load(&crate::runtime::artifact::default_dir())?)
+        } else {
+            None
+        };
+
+        for spec in specs {
+            let n = spec.cfg.n;
+            let (tx, rx) = channel();
+            router.register(n, tx)?;
+            let rx = std::sync::Arc::new(std::sync::Mutex::new(rx));
+            for _ in 0..spec.workers {
+                let factory: EngineFactory = match spec.kind {
+                    EngineKind::Native => {
+                        let cfg = spec.cfg;
+                        let (b, c) = (spec.native_batch, spec.native_chunk);
+                        Box::new(move || {
+                            Ok(Box::new(NativeEngine::new(cfg, b, c))
+                                as Box<dyn crate::runtime::ChunkEngine>)
+                        })
+                    }
+                    EngineKind::Pjrt => {
+                        let info = manifest
+                            .as_ref()
+                            .unwrap()
+                            .chunk_for(n)
+                            .ok_or_else(|| anyhow!("no chunk artifact for n={n}"))?
+                            .clone();
+                        Box::new(move || {
+                            let ctx = PjrtContext::cpu()?;
+                            Ok(Box::new(PjrtEngine::load(ctx, &info)?)
+                                as Box<dyn crate::runtime::ChunkEngine>)
+                        })
+                    }
+                };
+                let weights = spec.weights.to_f32();
+                let m = metrics.clone();
+                let rx = rx.clone();
+                workers.push(std::thread::spawn(move || {
+                    worker_loop(factory, weights, rx, m, policy)
+                }));
+            }
+        }
+        Ok(Coordinator {
+            router,
+            metrics,
+            workers,
+            next_id: AtomicU64::new(1),
+        })
+    }
+
+    pub fn next_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Submit and wait (convenience for examples/tests).
+    pub fn retrieve_sync(&self, req: RetrievalRequest) -> Result<RetrievalResult> {
+        let rx = self.router.submit(req)?;
+        rx.recv().map_err(|_| anyhow!("worker dropped reply"))
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Drain queues and join workers.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.router.shutdown();
+        for w in self.workers.drain(..) {
+            w.join().map_err(|_| anyhow!("worker panicked"))??;
+        }
+        Ok(())
+    }
+}
+
+// ---- TCP JSON-lines front-end ------------------------------------------------
+
+/// Request line: {"id": 1, "n": 9, "phases": [0,8,...], "max_periods": 256}
+/// Response line: {"id": 1, "phases": [...], "settled": 12} (settled
+/// null on timeout, "error" on failure).
+pub fn handle_line(router: &Router, line: &str) -> String {
+    match parse_request(line).and_then(|req| {
+        let id = req.id;
+        let rx = router.submit(req)?;
+        let res = rx.recv().map_err(|_| anyhow!("worker dropped reply"))?;
+        Ok((id, res))
+    }) {
+        Ok((id, res)) => Json::obj(vec![
+            ("id", Json::num(id as f64)),
+            ("phases", Json::arr_i32(&res.phases)),
+            (
+                "settled",
+                res.settled
+                    .map(|s| Json::num(s as f64))
+                    .unwrap_or(Json::Null),
+            ),
+        ])
+        .to_string(),
+        Err(e) => Json::obj(vec![("error", Json::str(e.to_string()))]).to_string(),
+    }
+}
+
+fn parse_request(line: &str) -> Result<RetrievalRequest> {
+    let v = Json::parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
+    let n = v
+        .get("n")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("missing 'n'"))?;
+    let phases: Vec<i32> = v
+        .get("phases")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing 'phases'"))?
+        .iter()
+        .map(|x| x.as_i64().map(|v| v as i32))
+        .collect::<Option<Vec<i32>>>()
+        .ok_or_else(|| anyhow!("non-numeric phase"))?;
+    Ok(RetrievalRequest {
+        id: v.get("id").and_then(Json::as_usize).unwrap_or(0) as u64,
+        n,
+        phases,
+        max_periods: v
+            .get("max_periods")
+            .and_then(Json::as_usize)
+            .unwrap_or(256),
+    })
+}
+
+/// Serve JSON-lines over TCP until the listener errors or the router is
+/// shut down.  One thread per connection (std-only substitute for the
+/// async accept loop).
+pub fn serve_tcp(router: Arc<Router>, listener: TcpListener) -> Result<()> {
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let conn_router = Arc::clone(&router);
+        std::thread::spawn(move || {
+            let _ = handle_conn(&conn_router, stream);
+        });
+        if router.routes().is_empty() {
+            break;
+        }
+    }
+    Ok(())
+}
+
+fn handle_conn(router: &Router, stream: TcpStream) -> Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = handle_line(router, &line);
+        writer.write_all(resp.as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_request_roundtrip() {
+        let r =
+            parse_request(r#"{"id": 3, "n": 2, "phases": [0, 8], "max_periods": 64}"#).unwrap();
+        assert_eq!(r.id, 3);
+        assert_eq!(r.n, 2);
+        assert_eq!(r.phases, vec![0, 8]);
+        assert_eq!(r.max_periods, 64);
+    }
+
+    #[test]
+    fn parse_request_defaults_and_errors() {
+        let r = parse_request(r#"{"n": 1, "phases": [0]}"#).unwrap();
+        assert_eq!(r.max_periods, 256);
+        assert!(parse_request("{}").is_err());
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request(r#"{"n": 1, "phases": ["x"]}"#).is_err());
+    }
+
+    #[test]
+    fn handle_line_reports_routing_errors() {
+        let router = Router::new(Arc::new(Metrics::default()));
+        let resp = handle_line(&router, r#"{"n": 5, "phases": [0,0,0,0,0]}"#);
+        assert!(resp.contains("error"), "{resp}");
+    }
+}

@@ -1,0 +1,140 @@
+//! Per-component LUT/FF cost primitives (Xilinx 7-series mapping rules).
+//!
+//! These follow standard synthesis results for the 7-series fabric:
+//! a W-bit ripple-carry adder maps to ~W LUTs (carry chains are free),
+//! a 2:1 mux of W bits to ~W LUTs, a 4:1 mux to one LUT6 per bit,
+//! distributed RAM packs 64 bits per LUT (RAM64X1S), an SRL packs a
+//! 16-deep shift register into one LUT.  The few *calibration constants*
+//! (routing-congestion factor, infrastructure overhead) are pinned to the
+//! paper's reported endpoints and documented at their definitions.
+
+/// LUTs for a signed W-bit adder/subtractor.
+pub fn adder_luts(width: usize) -> usize {
+    width
+}
+
+/// LUTs for a +-W sign-select (the "multiplication" of Fig. 4/5: negate
+/// the weight when the oscillator amplitude is low): XOR per bit plus
+/// carry-in, ~width + 1.
+pub fn negate_mux_luts(width: usize) -> usize {
+    width + 1
+}
+
+/// LUTs for an M:1 mux of `width` bits (LUT6 = 4:1 mux per bit, tree'd).
+pub fn mux_luts(inputs: usize, width: usize) -> usize {
+    if inputs <= 1 {
+        return 0;
+    }
+    // ceil(inputs/4) first level, then recurse; closed form ~ inputs/3.
+    let mut total = 0;
+    let mut m = inputs;
+    while m > 1 {
+        let level = m.div_ceil(4);
+        total += level;
+        m = level;
+    }
+    total * width
+}
+
+/// FFs for a register of `width` bits.
+pub fn register_ffs(width: usize) -> usize {
+    width
+}
+
+/// LUT+FF for a W-bit counter (increment logic + state).
+pub fn counter_cost(width: usize) -> (usize, usize) {
+    (width, width)
+}
+
+/// LUTs for a comparator against a constant (carry-chain assisted).
+pub fn comparator_luts(width: usize) -> usize {
+    width.div_ceil(2).max(1)
+}
+
+/// Distributed RAM (RAM64X1S): 64 bits per LUT, per bit-plane.
+pub fn distributed_ram_luts(depth: usize, width: usize) -> usize {
+    depth.div_ceil(64) * width
+}
+
+/// The parallel adder tree of the recurrent architecture (Fig. 4):
+/// N inputs of `w` bits each; adder widths grow one bit per level.
+/// Returns total LUTs for the N-1 adders.
+pub fn adder_tree_luts(n_inputs: usize, w: usize) -> usize {
+    if n_inputs <= 1 {
+        return 0;
+    }
+    let mut total = 0;
+    let mut m = n_inputs;
+    let mut width = w + 1;
+    while m > 1 {
+        let adders = m / 2;
+        total += adders * adder_luts(width);
+        m = m - adders; // odd input carried to next level
+        width += 1;
+    }
+    total
+}
+
+/// Depth (levels) of the adder tree — drives the critical path model.
+pub fn adder_tree_depth(n_inputs: usize) -> usize {
+    if n_inputs <= 1 {
+        0
+    } else {
+        (usize::BITS - (n_inputs - 1).leading_zeros()) as usize
+    }
+}
+
+/// Bit width of the weighted sum: w-bit weights accumulated N times.
+pub fn sum_width(n: usize, w: usize) -> usize {
+    w + (usize::BITS - n.max(1).leading_zeros()) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adder_tree_counts_all_adders() {
+        // 4 inputs -> 3 adders: widths 6, 6, 7 (w = 5).
+        assert_eq!(adder_tree_luts(4, 5), 6 + 6 + 7);
+        assert_eq!(adder_tree_luts(1, 5), 0);
+        assert_eq!(adder_tree_luts(2, 5), 6);
+    }
+
+    #[test]
+    fn adder_tree_handles_odd_inputs() {
+        // 3 inputs: level 1 has 1 adder (2 remain), level 2 has 1.
+        assert_eq!(adder_tree_luts(3, 5), 6 + 7);
+    }
+
+    #[test]
+    fn adder_tree_depth_log2() {
+        assert_eq!(adder_tree_depth(2), 1);
+        assert_eq!(adder_tree_depth(4), 2);
+        assert_eq!(adder_tree_depth(48), 6);
+        assert_eq!(adder_tree_depth(506), 9);
+        assert_eq!(adder_tree_depth(1), 0);
+    }
+
+    #[test]
+    fn mux_tree() {
+        assert_eq!(mux_luts(4, 1), 1);
+        assert_eq!(mux_luts(16, 1), 4 + 1);
+        assert_eq!(mux_luts(1, 8), 0);
+        assert_eq!(mux_luts(4, 8), 8);
+    }
+
+    #[test]
+    fn sum_width_grows_logarithmically() {
+        assert_eq!(sum_width(1, 5), 6);
+        assert_eq!(sum_width(48, 5), 11);
+        assert_eq!(sum_width(506, 5), 14);
+    }
+
+    #[test]
+    fn distributed_ram_packing() {
+        assert_eq!(distributed_ram_luts(64, 1), 1);
+        assert_eq!(distributed_ram_luts(65, 1), 2);
+        assert_eq!(distributed_ram_luts(506, 1), 8);
+    }
+}

@@ -1,0 +1,73 @@
+//! FPGA device capacity tables.
+
+/// Programmable-logic capacities of a target device.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Device {
+    pub name: &'static str,
+    pub luts: usize,
+    pub ffs: usize,
+    pub dsps: usize,
+    /// BRAM18 blocks (a BRAM36 is two of these).
+    pub bram18: usize,
+}
+
+impl Device {
+    pub fn bram36(&self) -> usize {
+        self.bram18 / 2
+    }
+}
+
+/// Zynq-7020 (PYNQ-Z2), the paper's test platform: 53 200 LUTs,
+/// 106 400 flip-flops, 220 DSP48E1 slices, 140 BRAM36 (280 BRAM18).
+pub fn zynq7020() -> Device {
+    Device {
+        name: "Zynq-7020",
+        luts: 53_200,
+        ffs: 106_400,
+        dsps: 220,
+        bram18: 280,
+    }
+}
+
+/// Zynq-7010 — a smaller sibling, used by the what-if sweeps.
+pub fn zynq7010() -> Device {
+    Device {
+        name: "Zynq-7010",
+        luts: 17_600,
+        ffs: 35_200,
+        dsps: 80,
+        bram18: 120,
+    }
+}
+
+/// Kintex-7 K325T — a larger part, for the paper's "future work: larger
+/// devices" extrapolation.
+pub fn kintex7_325t() -> Device {
+    Device {
+        name: "Kintex-7 325T",
+        luts: 203_800,
+        ffs: 407_600,
+        dsps: 840,
+        bram18: 890,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zynq7020_capacities() {
+        let d = zynq7020();
+        assert_eq!(d.luts, 53_200);
+        assert_eq!(d.ffs, 106_400);
+        assert_eq!(d.dsps, 220);
+        assert_eq!(d.bram36(), 140);
+    }
+
+    #[test]
+    fn device_ordering_sane() {
+        assert!(zynq7010().luts < zynq7020().luts);
+        assert!(zynq7020().luts < kintex7_325t().luts);
+    }
+}

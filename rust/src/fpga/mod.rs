@@ -1,0 +1,18 @@
+//! FPGA resource and timing models + the log-log regression used for the
+//! paper's scaling analysis (Figures 9-12, Tables 4-5).
+//!
+//! The paper measured Vivado synthesis results on a Zynq-7020; this
+//! module replaces the synthesizer with a *structural* cost model: each
+//! architecture is decomposed into the circuit components the paper
+//! describes (adder trees, +-W muxes, shift registers, serial MACs,
+//! BRAM-held weight memories, counters), and per-component LUT/FF costs
+//! follow standard Xilinx 7-series mapping rules.  Calibration anchors
+//! (documented in DESIGN.md section 8) pin the few free constants to the
+//! paper's reported endpoints; everything else — the scaling *slopes*,
+//! the crossover shapes, the resource walls — is emergent.
+
+pub mod components;
+pub mod device;
+pub mod regression;
+pub mod resources;
+pub mod timing;

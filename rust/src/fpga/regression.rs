@@ -1,0 +1,139 @@
+//! Log-log linear regression — the analysis of paper section 4.2: "a
+//! standard linear regression was fitted on the base-10 logarithm of the
+//! data points ... the slope in the logarithmic scale equals the order
+//! of scaling", with R^2 and 95% confidence intervals (Figs. 9-12).
+
+/// Ordinary least squares fit y = a + b x with diagnostics.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Fit {
+    pub slope: f64,
+    pub intercept: f64,
+    pub r2: f64,
+    /// Half-width of the 95% confidence interval on the slope.
+    pub slope_ci95: f64,
+    pub n: usize,
+}
+
+/// Two-sided 97.5% Student-t quantiles for small dof (dof = n-2), then
+/// the normal limit.
+fn t_975(dof: usize) -> f64 {
+    const TABLE: [f64; 30] = [
+        12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262, 2.228, 2.201, 2.179,
+        2.160, 2.145, 2.131, 2.120, 2.110, 2.101, 2.093, 2.086, 2.080, 2.074, 2.069, 2.064,
+        2.060, 2.056, 2.052, 2.048, 2.045, 2.042,
+    ];
+    if dof == 0 {
+        f64::INFINITY
+    } else if dof <= 30 {
+        TABLE[dof - 1]
+    } else {
+        1.96
+    }
+}
+
+/// OLS in linear space.
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> Fit {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len();
+    assert!(n >= 2, "need at least 2 points");
+    let nf = n as f64;
+    let mx = xs.iter().sum::<f64>() / nf;
+    let my = ys.iter().sum::<f64>() / nf;
+    let sxx: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let syy: f64 = ys.iter().map(|y| (y - my) * (y - my)).sum();
+    assert!(sxx > 0.0, "degenerate x values");
+    let slope = sxy / sxx;
+    let intercept = my - slope * mx;
+    let ss_res: f64 = xs
+        .iter()
+        .zip(ys)
+        .map(|(x, y)| {
+            let e = y - (intercept + slope * x);
+            e * e
+        })
+        .sum();
+    let r2 = if syy > 0.0 { 1.0 - ss_res / syy } else { 1.0 };
+    let slope_ci95 = if n > 2 {
+        let se = (ss_res / (nf - 2.0) / sxx).sqrt();
+        t_975(n - 2) * se
+    } else {
+        f64::INFINITY
+    };
+    Fit {
+        slope,
+        intercept,
+        r2,
+        slope_ci95,
+        n,
+    }
+}
+
+/// OLS on (log10 x, log10 y): `slope` is the scaling order.
+pub fn loglog_fit(xs: &[f64], ys: &[f64]) -> Fit {
+    let lx: Vec<f64> = xs.iter().map(|x| x.log10()).collect();
+    let ly: Vec<f64> = ys.iter().map(|y| y.log10()).collect();
+    linear_fit(&lx, &ly)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_line() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [3.0, 5.0, 7.0, 9.0];
+        let f = linear_fit(&xs, &ys);
+        assert!((f.slope - 2.0).abs() < 1e-12);
+        assert!((f.intercept - 1.0).abs() < 1e-12);
+        assert!((f.r2 - 1.0).abs() < 1e-12);
+        assert!(f.slope_ci95 < 1e-9);
+    }
+
+    #[test]
+    fn loglog_recovers_power_law() {
+        // y = 3 x^2.5
+        let xs: Vec<f64> = (1..=12).map(|i| i as f64 * 4.0).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 * x.powf(2.5)).collect();
+        let f = loglog_fit(&xs, &ys);
+        assert!((f.slope - 2.5).abs() < 1e-9, "{}", f.slope);
+        assert!((f.r2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn noisy_fit_reasonable() {
+        // y = x^2 with +-5% deterministic "noise".
+        let xs: Vec<f64> = (2..=20).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs
+            .iter()
+            .enumerate()
+            .map(|(i, x)| x * x * if i % 2 == 0 { 1.05 } else { 0.95 })
+            .collect();
+        let f = loglog_fit(&xs, &ys);
+        assert!((f.slope - 2.0).abs() < 0.1, "{}", f.slope);
+        assert!(f.r2 > 0.99);
+        assert!(f.slope_ci95 > 0.0 && f.slope_ci95 < 0.2);
+    }
+
+    #[test]
+    fn negative_slope() {
+        let xs = [1.0, 10.0, 100.0];
+        let ys = [1000.0, 100.0, 10.0];
+        let f = loglog_fit(&xs, &ys);
+        assert!((f.slope + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least 2")]
+    fn rejects_single_point() {
+        linear_fit(&[1.0], &[1.0]);
+    }
+
+    #[test]
+    fn t_table_monotone() {
+        assert!(t_975(1) > t_975(5));
+        assert!(t_975(5) > t_975(30));
+        assert_eq!(t_975(100), 1.96);
+    }
+}

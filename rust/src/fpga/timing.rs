@@ -1,0 +1,165 @@
+//! Critical-path timing model: logic frequency and the resulting
+//! oscillation frequency for both architectures (paper Table 5, Fig. 11).
+//!
+//! Model: t_crit in ns = constant + logic-depth term + routing term.
+//! The recurrent design's path crosses the N-input adder tree
+//! (depth ~ log2 N) and its routing spreads with the quadratic design
+//! area (~ sqrt(LUTs) ~ N); the hybrid design's path is the serial MAC
+//! plus BRAM access, growing only through routing spread (~ sqrt N) and
+//! the fabric-MAC spill penalty past the DSP capacity.  Constants are
+//! pinned to the paper's Table 5 endpoints (RA 40 MHz @ 48, HA 50 MHz @
+//! 506) and the fabric ceiling caps small designs.
+
+use crate::fpga::device::Device;
+use crate::fpga::resources::hybrid_mac_mapping;
+use crate::onn::config::NetworkConfig;
+use crate::rtl::hybrid::SYNC_OVERHEAD_CYCLES;
+
+/// 7-series fabric practical Fmax ceiling for these designs (MHz).
+pub const FABRIC_FMAX_MHZ: f64 = 110.0;
+
+/// Phase-update FSM cycles per phase step in the recurrent design: the
+/// measured oscillation frequency in the paper (625 kHz at 40 MHz logic,
+/// 4 phase bits) implies a division of 64 = 16 * 4, i.e. a 4-state
+/// update FSM per shift-register step.
+pub const RA_FSM_CYCLES: usize = 4;
+
+/// Recurrent-architecture logic frequency (MHz).
+pub fn logic_frequency_recurrent(n: usize) -> f64 {
+    // t = 1.0 + 0.8*log2(N) + 2.9*sqrt(N)   [ns]; anchor: 39 MHz @ 48.
+    let nf = n.max(2) as f64;
+    let t_ns = 1.0 + 0.8 * nf.log2() + 2.9 * nf.sqrt();
+    (1000.0 / t_ns).min(FABRIC_FMAX_MHZ)
+}
+
+/// Hybrid-architecture logic frequency (MHz).
+pub fn logic_frequency_hybrid(n: usize, d: &Device) -> f64 {
+    let nf = n.max(2) as f64;
+    let (_, fabric) = hybrid_mac_mapping(n, d);
+    // Serial MAC + BRAM path, routing spread ~ sqrt(N); spilling MACs to
+    // fabric adds a wide carry chain to the critical path.
+    let spill_penalty = if fabric > 0 {
+        2.0 + 0.01 * fabric as f64
+    } else {
+        0.0
+    };
+    let t_ns = 6.0 + 0.5 * nf.sqrt() + spill_penalty;
+    (1000.0 / t_ns).min(FABRIC_FMAX_MHZ)
+}
+
+/// Oscillation frequency (kHz) for the recurrent design: logic clock
+/// divided by the FSM cycles per phase step and the 2^pb steps/period.
+pub fn oscillation_frequency_recurrent(cfg: &NetworkConfig) -> f64 {
+    let f_logic_mhz = logic_frequency_recurrent(cfg.n);
+    f_logic_mhz * 1e3 / (cfg.period() as f64 * RA_FSM_CYCLES as f64)
+}
+
+/// Oscillation frequency (kHz) for the hybrid design: each phase step
+/// additionally waits for the serial sum (N + sync overhead fast
+/// cycles) — the serialization trade-off of section 5.1.
+pub fn oscillation_frequency_hybrid(cfg: &NetworkConfig, d: &Device) -> f64 {
+    let f_logic_mhz = logic_frequency_hybrid(cfg.n, d);
+    let fast_cycles = (cfg.n + SYNC_OVERHEAD_CYCLES) as f64;
+    f_logic_mhz * 1e3 / (cfg.period() as f64 * fast_cycles)
+}
+
+/// (f_logic MHz, f_osc kHz) for an architecture by name.
+pub fn frequencies(arch: &str, cfg: &NetworkConfig, d: &Device) -> (f64, f64) {
+    match arch {
+        "recurrent" => (
+            logic_frequency_recurrent(cfg.n),
+            oscillation_frequency_recurrent(cfg),
+        ),
+        "hybrid" => (
+            logic_frequency_hybrid(cfg.n, d),
+            oscillation_frequency_hybrid(cfg, d),
+        ),
+        other => panic!("unknown architecture '{other}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::device::zynq7020;
+
+    fn cfg(n: usize) -> NetworkConfig {
+        NetworkConfig::paper(n)
+    }
+
+    /// Paper Table 5 anchors.
+    #[test]
+    fn table5_recurrent_anchors() {
+        let f_logic = logic_frequency_recurrent(48);
+        assert!(
+            (36.0..=44.0).contains(&f_logic),
+            "RA f_logic @48 = {f_logic:.1} MHz (paper 40)"
+        );
+        let f_osc = oscillation_frequency_recurrent(&cfg(48));
+        assert!(
+            (560.0..=690.0).contains(&f_osc),
+            "RA f_osc @48 = {f_osc:.1} kHz (paper 625)"
+        );
+    }
+
+    #[test]
+    fn table5_hybrid_anchors() {
+        let d = zynq7020();
+        let f_logic = logic_frequency_hybrid(506, &d);
+        assert!(
+            (45.0..=55.0).contains(&f_logic),
+            "HA f_logic @506 = {f_logic:.1} MHz (paper 50)"
+        );
+        let f_osc = oscillation_frequency_hybrid(&cfg(506), &d);
+        assert!(
+            (5.5..=6.7).contains(&f_osc),
+            "HA f_osc @506 = {f_osc:.2} kHz (paper 6.1)"
+        );
+    }
+
+    #[test]
+    fn hybrid_trades_frequency_for_size() {
+        // Section 5.1: RA has lower f_logic but higher f_osc at its max.
+        let d = zynq7020();
+        let ra_osc = oscillation_frequency_recurrent(&cfg(48));
+        let ha_osc = oscillation_frequency_hybrid(&cfg(506), &d);
+        assert!(
+            ra_osc > 50.0 * ha_osc,
+            "RA {ra_osc:.1} kHz vs HA {ha_osc:.2} kHz"
+        );
+        assert!(logic_frequency_hybrid(506, &d) > logic_frequency_recurrent(48));
+    }
+
+    #[test]
+    fn frequencies_decrease_with_n() {
+        let d = zynq7020();
+        let mut prev_ra = f64::INFINITY;
+        let mut prev_ha = f64::INFINITY;
+        for n in [8, 16, 32, 64, 128, 256, 506] {
+            if n <= 48 {
+                let f = oscillation_frequency_recurrent(&cfg(n));
+                assert!(f < prev_ra);
+                prev_ra = f;
+            }
+            let f = oscillation_frequency_hybrid(&cfg(n), &d);
+            assert!(f < prev_ha);
+            prev_ha = f;
+        }
+    }
+
+    #[test]
+    fn fmax_ceiling_applies() {
+        let d = zynq7020();
+        assert!(logic_frequency_hybrid(2, &d) <= FABRIC_FMAX_MHZ);
+        assert!(logic_frequency_recurrent(2) <= FABRIC_FMAX_MHZ);
+    }
+
+    #[test]
+    fn spill_penalty_kinks_the_curve() {
+        let d = zynq7020();
+        // Crossing the packed-DSP capacity (440) must cost extra delay.
+        let before = logic_frequency_hybrid(440, &d);
+        let after = logic_frequency_hybrid(441, &d);
+        assert!(before - after > 3.0, "{before} -> {after}");
+    }
+}

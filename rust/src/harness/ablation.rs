@@ -1,0 +1,228 @@
+//! Ablation studies over the design choices DESIGN.md calls out:
+//!
+//! * **Precision** — the paper fixes 5 weight bits / 4 phase bits
+//!   ("determined to be sufficient" by prior work); this sweep measures
+//!   both sides of that choice: device capacity (max N) and retrieval
+//!   accuracy as precision varies.
+//! * **Storage capacity** — DO-I vs plain Hebbian learning: how many
+//!   patterns a fixed-size network can store before retrieval collapses
+//!   (the reason the paper trains with DO-I at all).
+
+use crate::fpga::device::zynq7020;
+use crate::fpga::resources::max_oscillators;
+use crate::onn::config::NetworkConfig;
+use crate::onn::dynamics::FunctionalEngine;
+use crate::onn::learning::{diederich_opper_i, hebbian};
+use crate::onn::patterns::dataset_by_name;
+use crate::onn::phase::{spin_to_phase, state_to_spins};
+use crate::onn::weights::WeightMatrix;
+use crate::util::rng::Rng;
+use crate::util::table::Table;
+
+/// One precision design point.
+#[derive(Debug, Clone, Copy)]
+pub struct PrecisionPoint {
+    pub weight_bits: u32,
+    pub phase_bits: u32,
+    /// Hybrid-architecture capacity on the Zynq-7020.
+    pub max_n_hybrid: usize,
+    /// Recurrent-architecture capacity.
+    pub max_n_recurrent: usize,
+    /// Retrieval accuracy (%) on the 7x6 dataset at 25% corruption.
+    pub accuracy_pct: f64,
+}
+
+/// Sweep precision: capacity from the resource model, accuracy from the
+/// functional engine on the 7x6 dataset (25% corruption).
+pub fn precision_sweep(trials: usize, seed: u64) -> Vec<PrecisionPoint> {
+    let d = zynq7020();
+    let mut out = Vec::new();
+    for (wb, pb) in [(3u32, 4u32), (4, 4), (5, 4), (6, 4), (5, 3), (5, 5), (8, 4)] {
+        let max_h = max_oscillators("hybrid", &d, pb, wb);
+        let max_r = max_oscillators("recurrent", &d, pb, wb);
+        let accuracy_pct = precision_accuracy(wb, pb, trials, seed);
+        out.push(PrecisionPoint {
+            weight_bits: wb,
+            phase_bits: pb,
+            max_n_hybrid: max_h,
+            max_n_recurrent: max_r,
+            accuracy_pct,
+        });
+    }
+    out
+}
+
+fn precision_accuracy(wb: u32, pb: u32, trials: usize, seed: u64) -> f64 {
+    let ds = dataset_by_name("7x6").expect("dataset");
+    let cfg = NetworkConfig {
+        n: ds.n(),
+        phase_bits: pb,
+        weight_bits: wb,
+    };
+    let pats: Vec<Vec<i8>> = ds.patterns.iter().map(|p| p.spins.clone()).collect();
+    let res = diederich_opper_i(&pats, 0.5, 1000);
+    let w = WeightMatrix::quantize(&res.weights, cfg.n, &cfg);
+    let mut eng = FunctionalEngine::new(cfg, w);
+    let p = cfg.period() as i32;
+    let mut rng = Rng::new(seed);
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for (pi, target) in ds.patterns.iter().enumerate() {
+        for t in 0..trials {
+            let mut trng = rng.fork((pi * 1000 + t) as u64);
+            let corrupted = target.corrupt(target.corruption_count(25.0), &mut trng);
+            let init: Vec<i32> = corrupted
+                .spins
+                .iter()
+                .map(|&s| spin_to_phase(s, p))
+                .collect();
+            let out = eng.run_to_settle(&init, 256);
+            if out.settled.is_some()
+                && target.matches_up_to_inversion(&state_to_spins(&out.phases, p))
+            {
+                correct += 1;
+            }
+            total += 1;
+        }
+    }
+    100.0 * correct as f64 / total as f64
+}
+
+pub fn precision_table(points: &[PrecisionPoint]) -> String {
+    let mut t = Table::new(
+        "Ablation: numerical precision vs capacity and accuracy (7x6 @ 25%)",
+        &["wb", "pb", "max N hybrid", "max N recurrent", "accuracy [%]"],
+    );
+    for p in points {
+        t.row(&[
+            p.weight_bits.to_string(),
+            p.phase_bits.to_string(),
+            p.max_n_hybrid.to_string(),
+            p.max_n_recurrent.to_string(),
+            format!("{:.1}", p.accuracy_pct),
+        ]);
+    }
+    t.render()
+}
+
+/// Storage-capacity curve: accuracy retrieving one stored pattern (10%
+/// corruption) as the number of stored random patterns grows.
+#[derive(Debug, Clone, Copy)]
+pub struct CapacityPoint {
+    pub patterns: usize,
+    pub accuracy_doi: f64,
+    pub accuracy_hebbian: f64,
+}
+
+pub fn capacity_sweep(n: usize, trials: usize, seed: u64) -> Vec<CapacityPoint> {
+    let cfg = NetworkConfig::paper(n);
+    let loads: Vec<usize> = [1, 2, 3, 5, 8, 12, 16]
+        .iter()
+        .copied()
+        .filter(|&m| m < n)
+        .collect();
+    let mut rng = Rng::new(seed);
+    loads
+        .into_iter()
+        .map(|m| {
+            let pats: Vec<Vec<i8>> = (0..m)
+                .map(|_| (0..n).map(|_| rng.spin()).collect())
+                .collect();
+            let doi = diederich_opper_i(&pats, 0.5, 500).weights;
+            let heb = hebbian(&pats);
+            let acc = |master: &[f32], rng: &mut Rng| {
+                let w = WeightMatrix::quantize(master, n, &cfg);
+                let mut eng = FunctionalEngine::new(cfg, w);
+                let mut ok = 0usize;
+                for t in 0..trials {
+                    let pat = &pats[t % m];
+                    let flips = (n as f64 * 0.10 + 0.5) as usize;
+                    let mut spins = pat.clone();
+                    for idx in rng.choose_distinct(n, flips) {
+                        spins[idx] = -spins[idx];
+                    }
+                    let init: Vec<i32> =
+                        spins.iter().map(|&s| spin_to_phase(s, 16)).collect();
+                    let out = eng.run_to_settle(&init, 128);
+                    if out.settled.is_some() {
+                        let got = state_to_spins(&out.phases, 16);
+                        let rel: Vec<i8> = pat.iter().map(|&s| s * pat[0]).collect();
+                        if got == rel {
+                            ok += 1;
+                        }
+                    }
+                }
+                100.0 * ok as f64 / trials as f64
+            };
+            CapacityPoint {
+                patterns: m,
+                accuracy_doi: acc(&doi, &mut rng),
+                accuracy_hebbian: acc(&heb, &mut rng),
+            }
+        })
+        .collect()
+}
+
+pub fn capacity_table(n: usize, points: &[CapacityPoint]) -> String {
+    let mut t = Table::new(
+        &format!("Ablation: storage capacity at N={n} (10% corruption)"),
+        &["stored patterns", "DO-I accuracy [%]", "Hebbian accuracy [%]"],
+    );
+    for p in points {
+        t.row(&[
+            p.patterns.to_string(),
+            format!("{:.1}", p.accuracy_doi),
+            format!("{:.1}", p.accuracy_hebbian),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_doi_beats_hebbian_at_high_load() {
+        let pts = capacity_sweep(20, 20, 3);
+        // At light load both work...
+        let light = &pts[0];
+        assert!(light.accuracy_doi >= 80.0);
+        // ...at heavy load DO-I must hold up markedly better (its whole
+        // reason for existing here).
+        let heavy = pts.iter().find(|p| p.patterns >= 8).unwrap();
+        assert!(
+            heavy.accuracy_doi >= heavy.accuracy_hebbian,
+            "DO-I {:.1} vs Hebbian {:.1} at {} patterns",
+            heavy.accuracy_doi,
+            heavy.accuracy_hebbian,
+            heavy.patterns
+        );
+    }
+
+    #[test]
+    fn precision_capacity_monotone_in_weight_bits() {
+        // More weight bits -> more memory/logic per connection -> fewer
+        // oscillators fit.
+        let d = zynq7020();
+        let n3 = max_oscillators("hybrid", &d, 4, 3);
+        let n5 = max_oscillators("hybrid", &d, 4, 5);
+        let n8 = max_oscillators("hybrid", &d, 4, 8);
+        assert!(n3 >= n5 && n5 >= n8, "{n3} {n5} {n8}");
+    }
+
+    #[test]
+    fn precision_tables_render() {
+        let pts = vec![PrecisionPoint {
+            weight_bits: 5,
+            phase_bits: 4,
+            max_n_hybrid: 506,
+            max_n_recurrent: 49,
+            accuracy_pct: 77.0,
+        }];
+        let s = precision_table(&pts);
+        assert!(s.contains("506"));
+        let c = capacity_table(20, &capacity_sweep(12, 5, 1));
+        assert!(c.contains("DO-I"));
+    }
+}

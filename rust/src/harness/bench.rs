@@ -1,0 +1,83 @@
+//! Minimal benchmark timer (criterion substitute): warmup, repeated
+//! timed runs, robust summary statistics, and a one-line report format
+//! shared by all `cargo bench` targets.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} median {:>10.3} ms   mean {:>10.3} ms   sd {:>8.3} ms   min {:>10.3} ms   ({} iters)",
+            self.name,
+            self.median.as_secs_f64() * 1e3,
+            self.mean.as_secs_f64() * 1e3,
+            self.stddev.as_secs_f64() * 1e3,
+            self.min.as_secs_f64() * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Time `f` with `warmup` throwaway runs and `iters` measured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    assert!(iters >= 1);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean: Duration::from_secs_f64(stats::mean(&samples)),
+        median: Duration::from_secs_f64(stats::median(&samples)),
+        stddev: Duration::from_secs_f64(stats::stddev(&samples)),
+        min: Duration::from_secs_f64(stats::min(&samples)),
+    }
+}
+
+/// Run-and-print convenience for bench mains.
+pub fn run<F: FnMut()>(name: &str, warmup: usize, iters: usize, f: F) -> BenchResult {
+    let r = bench(name, warmup, iters, f);
+    println!("{}", r.report());
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iterations() {
+        let mut count = 0;
+        let r = bench("t", 2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(r.iters, 5);
+        assert!(r.min <= r.median && r.median <= r.mean * 10);
+    }
+
+    #[test]
+    fn bench_measures_sleep() {
+        let r = bench("sleep", 0, 3, || {
+            std::thread::sleep(Duration::from_millis(2))
+        });
+        assert!(r.median >= Duration::from_millis(2));
+        assert!(r.median < Duration::from_millis(60));
+    }
+}

@@ -1,0 +1,83 @@
+//! Benchmark dataset construction: the paper's five pattern datasets,
+//! DO-I trained and quantized to the paper precision (section 4.3).
+
+use crate::onn::config::NetworkConfig;
+use crate::onn::learning::{diederich_opper_i, is_fixed_point};
+use crate::onn::patterns::{paper_datasets, Dataset};
+use crate::onn::weights::WeightMatrix;
+
+/// A ready-to-run benchmark network: dataset + trained quantized weights.
+#[derive(Debug, Clone)]
+pub struct BenchmarkSet {
+    pub dataset: Dataset,
+    pub cfg: NetworkConfig,
+    pub weights: WeightMatrix,
+    pub doi_epochs: usize,
+}
+
+/// Train one dataset with DO-I (margin 0.5) and quantize to 5wb.
+pub fn build(dataset: Dataset) -> BenchmarkSet {
+    let cfg = NetworkConfig::paper(dataset.n());
+    let pats: Vec<Vec<i8>> = dataset.patterns.iter().map(|p| p.spins.clone()).collect();
+    let res = diederich_opper_i(&pats, 0.5, 1000);
+    assert!(
+        res.converged,
+        "DO-I failed to converge on dataset {}",
+        dataset.name
+    );
+    let weights = WeightMatrix::quantize(&res.weights, cfg.n, &cfg);
+    BenchmarkSet {
+        dataset,
+        cfg,
+        weights,
+        doi_epochs: res.epochs,
+    }
+}
+
+/// All five paper datasets, trained.
+pub fn paper_benchmarks() -> Vec<BenchmarkSet> {
+    paper_datasets().into_iter().map(build).collect()
+}
+
+/// One dataset by name ("3x3", "5x4", "7x6", "10x10", "22x22").
+pub fn benchmark_by_name(name: &str) -> Option<BenchmarkSet> {
+    paper_datasets()
+        .into_iter()
+        .find(|d| d.name == name)
+        .map(build)
+}
+
+/// Diagnostic: how many stored patterns survive quantization as fixed
+/// points (should be all of them).
+pub fn stable_pattern_count(set: &BenchmarkSet) -> usize {
+    set.dataset
+        .patterns
+        .iter()
+        .filter(|p| is_fixed_point(&set.weights, &p.spins))
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_benchmarks_train_and_stabilize() {
+        for name in ["3x3", "5x4", "7x6"] {
+            let set = benchmark_by_name(name).unwrap();
+            assert_eq!(
+                stable_pattern_count(&set),
+                set.dataset.patterns.len(),
+                "dataset {name}: stored patterns unstable after quantization"
+            );
+            assert!(set.weights.max_abs() <= 15);
+        }
+    }
+
+    #[test]
+    fn large_benchmark_trains() {
+        let set = benchmark_by_name("22x22").unwrap();
+        assert_eq!(set.cfg.n, 484);
+        assert_eq!(stable_pattern_count(&set), 5);
+    }
+}

@@ -1,0 +1,10 @@
+//! Experiment harness: drivers that regenerate every table and figure of
+//! the paper's evaluation section, plus the micro-benchmark timer used by
+//! the `cargo bench` targets (criterion is unavailable offline).
+
+pub mod ablation;
+pub mod bench;
+pub mod datasets;
+pub mod report;
+pub mod retrieval;
+pub mod scaling;

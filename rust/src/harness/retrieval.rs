@@ -1,0 +1,279 @@
+//! Pattern-retrieval sweep driver: regenerates Tables 6 and 7.
+//!
+//! For each (dataset, corruption level): corrupt each stored pattern
+//! `trials` times with distinct seeds, run every trial to a fixed point
+//! on the selected engine, and score retrieval accuracy (exact match up
+//! to global inversion) plus mean time-to-settle excluding timeouts —
+//! exactly the paper's methodology (section 4.3).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::job::RetrievalRequest;
+use crate::coordinator::server::{Coordinator, EngineKind, PoolSpec};
+use crate::harness::datasets::BenchmarkSet;
+use crate::onn::phase::{spin_to_phase, state_to_spins};
+use crate::rtl::hybrid::HybridOnn;
+use crate::rtl::recurrent::RecurrentOnn;
+use crate::rtl::RtlSim;
+use crate::util::rng::Rng;
+
+/// Which implementation executes the trials.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Engine {
+    /// Functional engine through the coordinator (native worker).
+    Native,
+    /// AOT artifact through the coordinator (PJRT worker).
+    Pjrt,
+    /// Cycle-accurate recurrent-architecture simulator.
+    RtlRecurrent,
+    /// Cycle-accurate hybrid-architecture simulator.
+    RtlHybrid,
+}
+
+impl Engine {
+    pub fn parse(s: &str) -> Option<Engine> {
+        match s {
+            "native" => Some(Engine::Native),
+            "pjrt" => Some(Engine::Pjrt),
+            "rtl-recurrent" => Some(Engine::RtlRecurrent),
+            "rtl-hybrid" => Some(Engine::RtlHybrid),
+            _ => None,
+        }
+    }
+}
+
+/// Statistics of one (dataset, corruption) table cell.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CellStats {
+    pub trials: usize,
+    pub correct: usize,
+    pub timeouts: usize,
+    /// Mean periods to settle, timeouts excluded (paper Table 7).
+    pub mean_settle: f64,
+}
+
+impl CellStats {
+    pub fn accuracy_pct(&self) -> f64 {
+        100.0 * self.correct as f64 / self.trials as f64
+    }
+}
+
+pub const MAX_PERIODS: usize = 256;
+
+/// Run one table cell on an RTL simulator (parallel over trials).
+fn run_cell_rtl(
+    set: &BenchmarkSet,
+    corruption_pct: f64,
+    trials: usize,
+    seed: u64,
+    recurrent: bool,
+) -> CellStats {
+    let p = set.cfg.period() as i32;
+    let n_threads = std::thread::available_parallelism()
+        .map(|x| x.get())
+        .unwrap_or(4)
+        .min(trials.max(1));
+    let jobs: Vec<(usize, usize)> = {
+        // (pattern index, trial index) pairs, round-robin over patterns
+        let mut v = Vec::new();
+        for pi in 0..set.dataset.patterns.len() {
+            for t in 0..trials {
+                v.push((pi, t));
+            }
+        }
+        v
+    };
+    let chunk = jobs.len().div_ceil(n_threads);
+    let results: Vec<(bool, Option<usize>)> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for part in jobs.chunks(chunk) {
+            let set = &set;
+            handles.push(scope.spawn(move || {
+                let mut out = Vec::with_capacity(part.len());
+                let mut ra = recurrent
+                    .then(|| RecurrentOnn::new(set.cfg, set.weights.clone()));
+                let mut ha = (!recurrent)
+                    .then(|| HybridOnn::new(set.cfg, set.weights.clone()));
+                for &(pi, t) in part {
+                    let target = &set.dataset.patterns[pi];
+                    let mut rng =
+                        Rng::new(seed ^ (pi as u64) << 32 ^ t as u64);
+                    let flips = target.corruption_count(corruption_pct);
+                    let corrupted = target.corrupt(flips, &mut rng);
+                    let phases: Vec<i32> = corrupted
+                        .spins
+                        .iter()
+                        .map(|&s| spin_to_phase(s, p))
+                        .collect();
+                    let outcome = if let Some(sim) = ra.as_mut() {
+                        sim.set_phases(&phases);
+                        sim.run_to_settle(MAX_PERIODS)
+                    } else {
+                        let sim = ha.as_mut().unwrap();
+                        sim.set_phases(&phases);
+                        sim.run_to_settle(MAX_PERIODS)
+                    };
+                    let ok = outcome.settled.is_some()
+                        && target
+                            .matches_up_to_inversion(&state_to_spins(&outcome.phases, p));
+                    out.push((ok, outcome.settled));
+                }
+                out
+            }));
+        }
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("rtl worker panicked"))
+            .collect()
+    });
+    summarize(&results)
+}
+
+/// Run one table cell through the coordinator (native or PJRT workers).
+fn run_cell_service(
+    set: &BenchmarkSet,
+    corruption_pct: f64,
+    trials: usize,
+    seed: u64,
+    kind: EngineKind,
+) -> Result<CellStats> {
+    let p = set.cfg.period() as i32;
+    // Sweep cells are throughput-bound: run several engine workers per
+    // pool (native engines are cheap; PJRT workers each own a client).
+    let workers = std::thread::available_parallelism()
+        .map(|x| x.get())
+        .unwrap_or(4)
+        .clamp(1, 8);
+    let spec = PoolSpec::new(set.cfg, set.weights.clone(), kind).with_workers(workers);
+    let coord = Arc::new(Coordinator::start(
+        vec![spec],
+        BatchPolicy {
+            max_wait: Duration::from_millis(1),
+            max_periods_cap: MAX_PERIODS,
+        },
+    )?);
+
+    // Submit everything, then collect: keeps the batcher's windows full
+    // (this is what the dynamic batching is for).
+    let mut pending = Vec::new();
+    let mut targets = Vec::new();
+    for (pi, target) in set.dataset.patterns.iter().enumerate() {
+        for t in 0..trials {
+            let mut rng = Rng::new(seed ^ (pi as u64) << 32 ^ t as u64);
+            let flips = target.corruption_count(corruption_pct);
+            let corrupted = target.corrupt(flips, &mut rng);
+            let req = RetrievalRequest::from_pattern(
+                coord.next_id(),
+                &corrupted,
+                p,
+                MAX_PERIODS,
+            );
+            pending.push(coord.router.submit(req)?);
+            targets.push(pi);
+        }
+    }
+    let mut results = Vec::with_capacity(pending.len());
+    for (rx, pi) in pending.into_iter().zip(targets) {
+        let res = rx.recv()?;
+        let target = &set.dataset.patterns[pi];
+        let ok = res.settled.is_some()
+            && target.matches_up_to_inversion(&state_to_spins(&res.phases, p));
+        results.push((ok, res.settled));
+    }
+    Arc::try_unwrap(coord)
+        .map_err(|_| anyhow::anyhow!("coordinator still referenced"))?
+        .shutdown()?;
+    Ok(summarize(&results))
+}
+
+fn summarize(results: &[(bool, Option<usize>)]) -> CellStats {
+    let trials = results.len();
+    let correct = results.iter().filter(|(ok, _)| *ok).count();
+    let settles: Vec<f64> = results
+        .iter()
+        .filter_map(|(_, s)| s.map(|x| x as f64))
+        .collect();
+    CellStats {
+        trials,
+        correct,
+        timeouts: trials - settles.len(),
+        mean_settle: crate::util::stats::mean(&settles),
+    }
+}
+
+/// Run one (dataset, corruption) cell on the chosen engine.
+pub fn run_cell(
+    set: &BenchmarkSet,
+    corruption_pct: f64,
+    trials: usize,
+    seed: u64,
+    engine: Engine,
+) -> Result<CellStats> {
+    match engine {
+        Engine::RtlRecurrent => Ok(run_cell_rtl(set, corruption_pct, trials, seed, true)),
+        Engine::RtlHybrid => Ok(run_cell_rtl(set, corruption_pct, trials, seed, false)),
+        Engine::Native => run_cell_service(set, corruption_pct, trials, seed, EngineKind::Native),
+        Engine::Pjrt => run_cell_service(set, corruption_pct, trials, seed, EngineKind::Pjrt),
+    }
+}
+
+/// The paper's three corruption levels.
+pub const CORRUPTION_LEVELS: [f64; 3] = [10.0, 25.0, 50.0];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::datasets::benchmark_by_name;
+
+    #[test]
+    fn native_cell_retrieves_3x3() {
+        let set = benchmark_by_name("3x3").unwrap();
+        let stats = run_cell(&set, 10.0, 20, 42, Engine::Native).unwrap();
+        assert_eq!(stats.trials, 40); // 2 patterns x 20
+        assert!(
+            stats.accuracy_pct() >= 90.0,
+            "accuracy {:.1}",
+            stats.accuracy_pct()
+        );
+        assert!(stats.mean_settle < 64.0);
+    }
+
+    #[test]
+    fn rtl_cells_agree_with_native_on_easy_case() {
+        let set = benchmark_by_name("3x3").unwrap();
+        let a = run_cell(&set, 10.0, 15, 7, Engine::Native).unwrap();
+        let b = run_cell(&set, 10.0, 15, 7, Engine::RtlRecurrent).unwrap();
+        let c = run_cell(&set, 10.0, 15, 7, Engine::RtlHybrid).unwrap();
+        for (name, s) in [("native", &a), ("rtl-ra", &b), ("rtl-ha", &c)] {
+            assert!(
+                s.accuracy_pct() >= 85.0,
+                "{name} accuracy {:.1}",
+                s.accuracy_pct()
+            );
+        }
+    }
+
+    #[test]
+    fn accuracy_degrades_with_corruption() {
+        let set = benchmark_by_name("5x4").unwrap();
+        let lo = run_cell(&set, 10.0, 20, 3, Engine::Native).unwrap();
+        let hi = run_cell(&set, 50.0, 20, 3, Engine::Native).unwrap();
+        assert!(
+            lo.accuracy_pct() >= hi.accuracy_pct(),
+            "{} vs {}",
+            lo.accuracy_pct(),
+            hi.accuracy_pct()
+        );
+    }
+
+    #[test]
+    fn engine_parse() {
+        assert_eq!(Engine::parse("pjrt"), Some(Engine::Pjrt));
+        assert_eq!(Engine::parse("rtl-hybrid"), Some(Engine::RtlHybrid));
+        assert_eq!(Engine::parse("bogus"), None);
+    }
+}

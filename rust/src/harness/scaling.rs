@@ -1,0 +1,256 @@
+//! Hardware scaling sweep driver: regenerates Tables 4-5 and Figures
+//! 9-12 from the FPGA resource/timing models (paper section 4.2).
+
+use crate::fpga::device::{zynq7020, Device};
+use crate::fpga::regression::{loglog_fit, Fit};
+use crate::fpga::resources::{estimate, max_oscillators, ResourceEstimate};
+use crate::fpga::timing::frequencies;
+use crate::onn::config::NetworkConfig;
+
+/// One synthesized design point.
+#[derive(Debug, Clone, Copy)]
+pub struct DesignPoint {
+    pub n: usize,
+    pub res: ResourceEstimate,
+    pub f_logic_mhz: f64,
+    pub f_osc_khz: f64,
+}
+
+/// A full sweep over network sizes for one architecture.
+#[derive(Debug, Clone)]
+pub struct Sweep {
+    pub arch: &'static str,
+    pub device: Device,
+    pub points: Vec<DesignPoint>,
+}
+
+/// Sweep sizes used for the paper figures: the recurrent sweep stops at
+/// its resource wall (48), the hybrid sweep reaches its own (506).
+pub fn recurrent_sweep_sizes() -> Vec<usize> {
+    vec![4, 8, 12, 16, 20, 24, 32, 40, 48]
+}
+
+pub fn hybrid_sweep_sizes() -> Vec<usize> {
+    vec![16, 24, 32, 48, 64, 96, 128, 192, 256, 384, 506]
+}
+
+pub fn sweep(arch: &'static str, sizes: &[usize]) -> Sweep {
+    let device = zynq7020();
+    let points = sizes
+        .iter()
+        .map(|&n| {
+            let cfg = NetworkConfig::paper(n);
+            let res = estimate(arch, &cfg, &device);
+            let (f_logic, f_osc) = frequencies(arch, &cfg, &device);
+            DesignPoint {
+                n,
+                res,
+                f_logic_mhz: f_logic,
+                f_osc_khz: f_osc,
+            }
+        })
+        .collect();
+    Sweep {
+        arch,
+        device,
+        points,
+    }
+}
+
+pub fn recurrent_sweep() -> Sweep {
+    sweep("recurrent", &recurrent_sweep_sizes())
+}
+
+pub fn hybrid_sweep() -> Sweep {
+    sweep("hybrid", &hybrid_sweep_sizes())
+}
+
+impl Sweep {
+    fn xs(&self) -> Vec<f64> {
+        self.points.iter().map(|p| p.n as f64).collect()
+    }
+
+    /// Figure 9: log-log fit of LUT usage vs N.
+    pub fn lut_fit(&self) -> Fit {
+        let ys: Vec<f64> = self.points.iter().map(|p| p.res.luts as f64).collect();
+        loglog_fit(&self.xs(), &ys)
+    }
+
+    /// Figure 10: log-log fit of FF usage vs N.
+    pub fn ff_fit(&self) -> Fit {
+        let ys: Vec<f64> = self.points.iter().map(|p| p.res.ffs as f64).collect();
+        loglog_fit(&self.xs(), &ys)
+    }
+
+    /// Figure 11: log-log fit of oscillation frequency vs N.
+    pub fn freq_fit(&self) -> Fit {
+        let ys: Vec<f64> = self.points.iter().map(|p| p.f_osc_khz).collect();
+        loglog_fit(&self.xs(), &ys)
+    }
+}
+
+/// Figure 12 data: hybrid area%% and %% of max oscillation frequency.
+#[derive(Debug, Clone)]
+pub struct BalancePoint {
+    pub n: usize,
+    pub area_pct: f64,
+    pub freq_pct: f64,
+}
+
+pub fn fig12_balance(sweep: &Sweep) -> Vec<BalancePoint> {
+    let fmax = sweep
+        .points
+        .iter()
+        .map(|p| p.f_osc_khz)
+        .fold(f64::NEG_INFINITY, f64::max);
+    sweep
+        .points
+        .iter()
+        .map(|p| BalancePoint {
+            n: p.n,
+            area_pct: p.res.area_percent(&sweep.device),
+            freq_pct: 100.0 * p.f_osc_khz / fmax,
+        })
+        .collect()
+}
+
+/// The crossover of the two Fig.-12 curves (linear interpolation between
+/// sweep points): the paper finds N ~ 65 at ~15%.
+pub fn fig12_crossover(balance: &[BalancePoint]) -> Option<(f64, f64)> {
+    for w in balance.windows(2) {
+        let (a, b) = (&w[0], &w[1]);
+        let fa = a.freq_pct - a.area_pct;
+        let fb = b.freq_pct - b.area_pct;
+        if fa >= 0.0 && fb < 0.0 {
+            let t = fa / (fa - fb);
+            let n = a.n as f64 + t * (b.n - a.n) as f64;
+            let pct = a.area_pct + t * (b.area_pct - a.area_pct);
+            return Some((n, pct));
+        }
+    }
+    None
+}
+
+/// Table 5 summary for one architecture at its maximum size.
+#[derive(Debug, Clone, Copy)]
+pub struct Table5Row {
+    pub arch: &'static str,
+    pub max_n: usize,
+    pub f_logic_mhz: f64,
+    pub f_osc_khz: f64,
+}
+
+pub fn table5_rows() -> Vec<Table5Row> {
+    let d = zynq7020();
+    ["hybrid", "recurrent"]
+        .into_iter()
+        .map(|arch| {
+            let max_n = max_oscillators(arch, &d, 4, 5);
+            let cfg = NetworkConfig::paper(max_n);
+            let (f_logic, f_osc) = frequencies(arch, &cfg, &d);
+            Table5Row {
+                arch: if arch == "hybrid" { "Hybrid" } else { "Recurrent" },
+                max_n,
+                f_logic_mhz: f_logic,
+                f_osc_khz: f_osc,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Figure 9 shape: RA slightly above quadratic, HA slightly above
+    /// linear (paper: 2.08 and 1.22).
+    #[test]
+    fn fig9_lut_slopes() {
+        let ra = recurrent_sweep().lut_fit();
+        let ha = hybrid_sweep().lut_fit();
+        assert!(
+            (1.9..=2.3).contains(&ra.slope),
+            "RA LUT slope {:.3} (paper 2.08)",
+            ra.slope
+        );
+        assert!(
+            (1.05..=1.40).contains(&ha.slope),
+            "HA LUT slope {:.3} (paper 1.22)",
+            ha.slope
+        );
+        assert!(ra.r2 > 0.97, "RA r2 {:.4}", ra.r2);
+        assert!(ha.r2 > 0.97, "HA r2 {:.4}", ha.r2);
+    }
+
+    /// Figure 10 shape: RA well above linear approaching quadratic
+    /// (paper 2.39 with R2 0.906 and an admitted outlier), HA near
+    /// linear (paper 1.11).
+    #[test]
+    fn fig10_ff_slopes() {
+        let ra = recurrent_sweep().ff_fit();
+        let ha = hybrid_sweep().ff_fit();
+        assert!(
+            (1.45..=2.5).contains(&ra.slope),
+            "RA FF slope {:.3} (paper 2.39, noisy)",
+            ra.slope
+        );
+        assert!(
+            (1.0..=1.25).contains(&ha.slope),
+            "HA FF slope {:.3} (paper 1.11)",
+            ha.slope
+        );
+    }
+
+    /// Figure 11 shape: RA ~ -0.46, HA steeper than -1 (paper -1.35).
+    #[test]
+    fn fig11_freq_slopes() {
+        let ra = recurrent_sweep().freq_fit();
+        let ha = hybrid_sweep().freq_fit();
+        assert!(
+            (-0.65..=-0.30).contains(&ra.slope),
+            "RA f_osc slope {:.3} (paper -0.46)",
+            ra.slope
+        );
+        assert!(
+            (-1.5..=-0.95).contains(&ha.slope),
+            "HA f_osc slope {:.3} (paper -1.35)",
+            ha.slope
+        );
+    }
+
+    /// Figure 12 shape: crossover in the N ~ 50-120 band at 10-20% area.
+    #[test]
+    fn fig12_crossover_band() {
+        let sweep = hybrid_sweep();
+        let bal = fig12_balance(&sweep);
+        let (n, pct) = fig12_crossover(&bal).expect("no crossover found");
+        assert!(
+            (40.0..=130.0).contains(&n),
+            "crossover N = {n:.0} (paper ~65)"
+        );
+        assert!(
+            (8.0..=25.0).contains(&pct),
+            "crossover area = {pct:.1}% (paper ~15%)"
+        );
+    }
+
+    #[test]
+    fn table5_matches_paper_shape() {
+        let rows = table5_rows();
+        let hy = rows.iter().find(|r| r.arch == "Hybrid").unwrap();
+        let ra = rows.iter().find(|r| r.arch == "Recurrent").unwrap();
+        let ratio = hy.max_n as f64 / ra.max_n as f64;
+        assert!((9.0..=11.5).contains(&ratio), "ratio {ratio:.2} (paper 10.5)");
+        assert!(hy.f_logic_mhz > ra.f_logic_mhz, "paper: 50 vs 40 MHz");
+        assert!(ra.f_osc_khz > hy.f_osc_khz, "paper: 625 vs 6.1 kHz");
+    }
+
+    #[test]
+    fn balance_percentages_bounded() {
+        let bal = fig12_balance(&hybrid_sweep());
+        for b in &bal {
+            assert!((0.0..=100.0 + 1e-9).contains(&b.freq_pct));
+            assert!((0.0..=100.0).contains(&b.area_pct), "{b:?}");
+        }
+    }
+}

@@ -1,0 +1,48 @@
+//! # onn-scale
+//!
+//! Reproduction of *"Overcoming Quadratic Hardware Scaling for a Fully
+//! Connected Digital Oscillatory Neural Network"* (Haverkort &
+//! Todri-Sanial, CS.AR 2025) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate contains every substrate the paper depends on:
+//!
+//! * [`onn`] — the domain core: quantized phases/weights, the
+//!   Diederich-Opper-I learning rule, letter-pattern datasets, and the
+//!   functional (period-level) dynamics engine that bit-exactly mirrors
+//!   the AOT-compiled JAX model.
+//! * [`rtl`] — cycle-accurate simulators of the paper's two digital
+//!   architectures: the prior-art *recurrent* design (parallel adder
+//!   trees, quadratic hardware) and the proposed *hybrid* design (serial
+//!   MAC per oscillator, near-linear hardware).
+//! * [`fpga`] — the Zynq-7020 resource/timing model and the log-log
+//!   regression used for the paper's scaling figures.
+//! * [`runtime`] — the PJRT execution engine that loads the HLO-text
+//!   artifacts produced by `python/compile/aot.py` (plus a native
+//!   fallback implementing the same trait).
+//! * [`coordinator`] — the retrieval service: request router, dynamic
+//!   batcher and worker pool feeding the engines.
+//! * [`harness`] — drivers that regenerate every table and figure of the
+//!   paper's evaluation section, and the micro-benchmark timer used by
+//!   `cargo bench` (criterion is unavailable offline).
+//! * [`apps`] — the paper's future-work applications: max-cut and graph
+//!   coloring on the ONN-as-Ising-machine path.
+//! * [`util`] — in-tree infrastructure (deterministic RNG, minimal JSON,
+//!   stats, CLI parsing) standing in for crates that are not available
+//!   in this offline image.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment
+//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod apps;
+pub mod coordinator;
+pub mod fpga;
+pub mod harness;
+pub mod onn;
+pub mod rtl;
+pub mod runtime;
+pub mod util;
+
+pub use onn::config::NetworkConfig;
+pub use onn::dynamics::FunctionalEngine;
+pub use onn::patterns::{Dataset, Pattern};
+pub use onn::weights::WeightMatrix;

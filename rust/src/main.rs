@@ -1,0 +1,425 @@
+//! `onn-scale` — CLI entry point of the L3 coordinator.
+//!
+//! Subcommands regenerate every table/figure of the paper, run pattern
+//! retrieval end-to-end (through the router -> batcher -> PJRT engine),
+//! solve max-cut/coloring on the Ising-machine path, serve the TCP
+//! front-end, and cross-validate the PJRT artifacts against the native
+//! bit-exact engine.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use onn_scale::coordinator::batcher::BatchPolicy;
+use onn_scale::coordinator::server::{serve_tcp, Coordinator, EngineKind, PoolSpec};
+use onn_scale::harness::datasets::benchmark_by_name;
+use onn_scale::harness::report::{self, RetrievalReport};
+use onn_scale::harness::retrieval::{run_cell, CellStats, Engine, CORRUPTION_LEVELS};
+use onn_scale::util::cli::Args;
+
+const USAGE: &str = "\
+onn-scale — digital ONN architectures (recurrent vs hybrid), reproduced
+
+USAGE: onn-scale <command> [flags]
+
+Paper reproduction:
+  table1 | table2 | table4 | table5     print the corresponding table
+  table6 [--trials K] [--ra-engine E] [--ha-engine E] [--sizes a,b]
+                                        retrieval accuracy sweep (+table7)
+  fig9 | fig10 | fig11 | fig12          print the corresponding figure
+
+Applications:
+  retrieve --dataset 7x6 [--corrupt 25] [--engine native|pjrt] [--seed S]
+  maxcut [--nodes 32] [--prob 0.3] [--restarts 20] [--seed S]
+  coloring [--nodes 16] [--colors 2] [--restarts 20]
+
+Ablations (DESIGN.md design choices):
+  ablation [--trials 50]                precision vs capacity/accuracy
+  capacity [--n 20] [--trials 50]       DO-I vs Hebbian storage capacity
+  shard-demo [--n 42] [--shards 4]      multi-device sharding (future work)
+
+Service / validation:
+  serve [--addr 127.0.0.1:7020] --dataset 7x6 [--engine pjrt]
+  crosscheck [--dataset 3x3] [--trials 16]   pjrt vs native bit-exactness
+  info                                        artifact + platform info
+";
+
+fn main() {
+    let code = match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run() -> Result<()> {
+    let mut args = Args::from_env().map_err(|e| anyhow!(e))?;
+    let cmd = args.subcommand.clone().unwrap_or_else(|| "help".to_string());
+    match cmd.as_str() {
+        "help" | "--help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        "table1" => {
+            println!("{}", report::table1());
+            Ok(())
+        }
+        "table2" => {
+            println!("{}", report::table2());
+            Ok(())
+        }
+        "table4" => {
+            println!("{}", report::table4());
+            Ok(())
+        }
+        "table5" => {
+            println!("{}", report::table5());
+            Ok(())
+        }
+        "fig9" => {
+            println!("{}", report::fig9());
+            Ok(())
+        }
+        "fig10" => {
+            println!("{}", report::fig10());
+            Ok(())
+        }
+        "fig11" => {
+            println!("{}", report::fig11());
+            Ok(())
+        }
+        "fig12" => {
+            println!("{}", report::fig12());
+            Ok(())
+        }
+        "table6" | "table7" => cmd_table67(&mut args),
+        "retrieve" => cmd_retrieve(&mut args),
+        "maxcut" => cmd_maxcut(&mut args),
+        "coloring" => cmd_coloring(&mut args),
+        "serve" => cmd_serve(&mut args),
+        "crosscheck" => cmd_crosscheck(&mut args),
+        "ablation" => cmd_ablation(&mut args),
+        "capacity" => cmd_capacity(&mut args),
+        "shard-demo" => cmd_shard_demo(&mut args),
+        "info" => cmd_info(),
+        other => Err(anyhow!("unknown command '{other}'\n{USAGE}")),
+    }
+}
+
+/// Tables 6 + 7: the full retrieval sweep.  RA runs on the cycle-accurate
+/// recurrent simulator up to its implementable sizes (<= 48 oscillators,
+/// like the paper); HA runs on the selected engine for all sizes.
+fn cmd_table67(args: &mut Args) -> Result<()> {
+    let trials = args.get_usize("trials", 100)?;
+    let seed = args.get_u64("seed", 2025)?;
+    let ra_engine = Engine::parse(&args.get_str("ra-engine", "rtl-recurrent"))
+        .ok_or_else(|| anyhow!("bad --ra-engine"))?;
+    let ha_engine = Engine::parse(&args.get_str("ha-engine", "native"))
+        .ok_or_else(|| anyhow!("bad --ha-engine"))?;
+    let sizes = args.get_str("sizes", "3x3,5x4,7x6,10x10,22x22");
+    args.finish().map_err(|e| anyhow!(e))?;
+
+    let mut cells: Vec<(String, f64, Option<CellStats>, CellStats)> = Vec::new();
+    for name in sizes.split(',') {
+        let set = benchmark_by_name(name.trim())
+            .ok_or_else(|| anyhow!("unknown dataset '{name}'"))?;
+        let ra_feasible = set.cfg.n <= 48;
+        for pct in CORRUPTION_LEVELS {
+            eprintln!(
+                "running {name} @ {pct}% ({} trials x {} patterns)...",
+                trials,
+                set.dataset.patterns.len()
+            );
+            let ha = run_cell(&set, pct, trials, seed, ha_engine)?;
+            let ra = if ra_feasible {
+                Some(run_cell(&set, pct, trials, seed, ra_engine)?)
+            } else {
+                None
+            };
+            cells.push((set.dataset.name.clone(), pct, ra, ha));
+        }
+    }
+    let rep = RetrievalReport { cells };
+    println!("{}", rep.table6());
+    println!("{}", rep.table7());
+    Ok(())
+}
+
+fn cmd_retrieve(args: &mut Args) -> Result<()> {
+    use onn_scale::coordinator::job::RetrievalRequest;
+    use onn_scale::onn::phase::state_to_spins;
+    use onn_scale::util::rng::Rng;
+
+    let dataset = args.get_str("dataset", "7x6");
+    let corrupt = args.get_f64("corrupt", 25.0)?;
+    let engine = args.get_str("engine", "native");
+    let seed = args.get_u64("seed", 1)?;
+    args.finish().map_err(|e| anyhow!(e))?;
+
+    let set = benchmark_by_name(&dataset).ok_or_else(|| anyhow!("unknown dataset"))?;
+    let kind = match engine.as_str() {
+        "native" => EngineKind::Native,
+        "pjrt" => EngineKind::Pjrt,
+        _ => return Err(anyhow!("--engine must be native|pjrt")),
+    };
+    let p = set.cfg.period() as i32;
+    let coord = Coordinator::start(
+        vec![PoolSpec::new(set.cfg, set.weights.clone(), kind)],
+        BatchPolicy::default(),
+    )?;
+    let mut rng = Rng::new(seed);
+    for target in &set.dataset.patterns {
+        let flips = target.corruption_count(corrupt);
+        let corrupted = target.corrupt(flips, &mut rng);
+        let req = RetrievalRequest::from_pattern(coord.next_id(), &corrupted, p, 256);
+        let res = coord.retrieve_sync(req)?;
+        let spins = state_to_spins(&res.phases, p);
+        let ok = target.matches_up_to_inversion(&spins);
+        println!(
+            "pattern {:<8} corrupt {flips:>3}px  settled {:>4?}  retrieved {}  ({:.2} ms)",
+            target.name,
+            res.settled,
+            if ok { "OK " } else { "WRONG" },
+            res.total_latency.as_secs_f64() * 1e3
+        );
+    }
+    let snap = coord.snapshot();
+    println!(
+        "service: {} completed, mean latency {:.2} ms, occupancy {:.1}",
+        snap.completed, snap.mean_total_ms, snap.mean_occupancy
+    );
+    coord.shutdown()
+}
+
+fn cmd_maxcut(args: &mut Args) -> Result<()> {
+    use onn_scale::apps::maxcut::{solve_onn, solve_sa, Graph};
+    use onn_scale::util::rng::Rng;
+
+    let nodes = args.get_usize("nodes", 32)?;
+    let prob = args.get_f64("prob", 0.3)?;
+    let restarts = args.get_usize("restarts", 20)?;
+    let seed = args.get_u64("seed", 7)?;
+    args.finish().map_err(|e| anyhow!(e))?;
+
+    let mut rng = Rng::new(seed);
+    let g = Graph::random(nodes, prob, &mut rng);
+    println!("graph: {} nodes, {} edges", g.n, g.edges.len());
+    let onn = solve_onn(&g, restarts, 128, seed + 1);
+    let sa = solve_sa(&g, 200, seed + 2);
+    println!("ONN   cut = {:>6}   (restarts {restarts})", onn.cut);
+    println!("SA    cut = {:>6}   (200 sweeps baseline)", sa.cut);
+    println!("ratio ONN/SA = {:.3}", onn.cut as f64 / sa.cut.max(1) as f64);
+    Ok(())
+}
+
+fn cmd_coloring(args: &mut Args) -> Result<()> {
+    use onn_scale::apps::coloring::{solve_greedy, solve_onn};
+    use onn_scale::apps::maxcut::Graph;
+    use onn_scale::util::rng::Rng;
+
+    let nodes = args.get_usize("nodes", 16)?;
+    let colors = args.get_usize("colors", 2)?;
+    let restarts = args.get_usize("restarts", 20)?;
+    let seed = args.get_u64("seed", 3)?;
+    args.finish().map_err(|e| anyhow!(e))?;
+
+    let mut rng = Rng::new(seed);
+    let g = Graph::random(nodes, 0.2, &mut rng);
+    println!("graph: {} nodes, {} edges, k = {colors}", g.n, g.edges.len());
+    let onn = solve_onn(&g, colors, restarts, 128, seed + 1);
+    let greedy = solve_greedy(&g, colors);
+    println!("ONN    conflicts = {}", onn.conflicts);
+    println!("greedy conflicts = {}", greedy.conflicts);
+    Ok(())
+}
+
+fn cmd_serve(args: &mut Args) -> Result<()> {
+    let addr = args.get_str("addr", "127.0.0.1:7020");
+    let dataset = args.get_str("dataset", "7x6");
+    let engine = args.get_str("engine", "native");
+    args.finish().map_err(|e| anyhow!(e))?;
+
+    let set = benchmark_by_name(&dataset).ok_or_else(|| anyhow!("unknown dataset"))?;
+    let kind = match engine.as_str() {
+        "native" => EngineKind::Native,
+        "pjrt" => EngineKind::Pjrt,
+        _ => return Err(anyhow!("--engine must be native|pjrt")),
+    };
+    let coord = Coordinator::start(
+        vec![PoolSpec::new(set.cfg, set.weights.clone(), kind)],
+        BatchPolicy {
+            max_wait: Duration::from_millis(2),
+            max_periods_cap: 512,
+        },
+    )?;
+    let listener = std::net::TcpListener::bind(&addr)?;
+    println!(
+        "serving dataset {} (n={}) on {} via {} engine; JSON-lines: \
+         {{\"n\":{},\"phases\":[...]}}",
+        dataset, set.cfg.n, addr, engine, set.cfg.n
+    );
+    serve_tcp(Arc::clone(&coord.router), listener)
+}
+
+/// Cross-validate the PJRT artifact against the bit-exact native engine.
+fn cmd_crosscheck(args: &mut Args) -> Result<()> {
+    use onn_scale::runtime::artifact::{default_dir, Manifest};
+    use onn_scale::runtime::engine::{PjrtContext, PjrtEngine};
+    use onn_scale::runtime::native::NativeEngine;
+    use onn_scale::runtime::ChunkEngine;
+    use onn_scale::util::rng::Rng;
+
+    let dataset = args.get_str("dataset", "3x3");
+    let trials = args.get_usize("trials", 16)?;
+    let seed = args.get_u64("seed", 5)?;
+    args.finish().map_err(|e| anyhow!(e))?;
+
+    let set = benchmark_by_name(&dataset).ok_or_else(|| anyhow!("unknown dataset"))?;
+    let manifest = Manifest::load(&default_dir())?;
+    let info = manifest
+        .chunk_for(set.cfg.n)
+        .ok_or_else(|| anyhow!("no artifact for n={}", set.cfg.n))?;
+    let ctx = PjrtContext::cpu()?;
+    let mut pjrt = PjrtEngine::load(ctx, info)?;
+    let mut native = NativeEngine::new(set.cfg, info.batch, info.chunk);
+    let w = set.weights.to_f32();
+    pjrt.set_weights(&w)?;
+    native.set_weights(&w)?;
+
+    let mut rng = Rng::new(seed);
+    let b = info.batch;
+    let n = set.cfg.n;
+    let mut mismatches = 0usize;
+    for round in 0..trials.div_ceil(b) {
+        let init: Vec<i32> = (0..b * n).map(|_| rng.range_i64(0, 16) as i32).collect();
+        let (mut ph_a, mut ph_b) = (init.clone(), init);
+        let (mut st_a, mut st_b) = (vec![-1i32; b], vec![-1i32; b]);
+        for chunk_idx in 0..4 {
+            let p0 = (chunk_idx * info.chunk) as i32;
+            pjrt.run_chunk(&mut ph_a, &mut st_a, p0)?;
+            native.run_chunk(&mut ph_b, &mut st_b, p0)?;
+        }
+        if ph_a != ph_b || st_a != st_b {
+            mismatches += 1;
+            eprintln!("round {round}: MISMATCH");
+        }
+    }
+    if mismatches == 0 {
+        println!(
+            "crosscheck OK: pjrt == native bit-exact over {} rounds (n={}, batch={})",
+            trials.div_ceil(b),
+            n,
+            b
+        );
+        Ok(())
+    } else {
+        Err(anyhow!("{mismatches} mismatched rounds"))
+    }
+}
+
+fn cmd_ablation(args: &mut Args) -> Result<()> {
+    use onn_scale::harness::ablation::{precision_sweep, precision_table};
+    let trials = args.get_usize("trials", 50)?;
+    let seed = args.get_u64("seed", 1)?;
+    args.finish().map_err(|e| anyhow!(e))?;
+    println!("{}", precision_table(&precision_sweep(trials, seed)));
+    Ok(())
+}
+
+fn cmd_capacity(args: &mut Args) -> Result<()> {
+    use onn_scale::harness::ablation::{capacity_sweep, capacity_table};
+    let n = args.get_usize("n", 20)?;
+    let trials = args.get_usize("trials", 50)?;
+    let seed = args.get_u64("seed", 1)?;
+    args.finish().map_err(|e| anyhow!(e))?;
+    println!("{}", capacity_table(n, &capacity_sweep(n, trials, seed)));
+    Ok(())
+}
+
+/// Multi-device sharding demo: split one logical network across K shard
+/// workers and verify against the single-engine result (the paper's
+/// future-work multi-FPGA topology).
+fn cmd_shard_demo(args: &mut Args) -> Result<()> {
+    use onn_scale::onn::dynamics::FunctionalEngine;
+    use onn_scale::runtime::sharded::ShardedEngine;
+    use onn_scale::runtime::ChunkEngine;
+    use onn_scale::util::rng::Rng;
+
+    let n_flag = args.get_usize("n", 42)?;
+    let shards = args.get_usize("shards", 4)?;
+    let seed = args.get_u64("seed", 1)?;
+    args.finish().map_err(|e| anyhow!(e))?;
+
+    let set = match n_flag {
+        9 => benchmark_by_name("3x3"),
+        20 => benchmark_by_name("5x4"),
+        42 => benchmark_by_name("7x6"),
+        100 => benchmark_by_name("10x10"),
+        484 => benchmark_by_name("22x22"),
+        _ => return Err(anyhow!("--n must be one of 9, 20, 42, 100, 484")),
+    }
+    .unwrap();
+    let mut rng = Rng::new(seed);
+    let b = 4usize;
+    let n = set.cfg.n;
+    let init: Vec<i32> = (0..b * n).map(|_| rng.range_i64(0, 16) as i32).collect();
+
+    let mut single = FunctionalEngine::new(set.cfg, set.weights.clone());
+    let mut sh = ShardedEngine::new(set.cfg, &set.weights, shards, b, 16)?;
+    let (mut pa, mut pb) = (init.clone(), init);
+    let (mut sa, mut sb) = (vec![-1i32; b], vec![-1i32; b]);
+    let t0 = std::time::Instant::now();
+    single.run_chunk(&mut pa, &mut sa, 0, 16);
+    let t_single = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    sh.run_chunk(&mut pb, &mut sb, 0)?;
+    let t_shard = t1.elapsed();
+    println!(
+        "n={n}, {shards} shards, {b} trials x 16 periods: single {:.2} ms, sharded {:.2} ms",
+        t_single.as_secs_f64() * 1e3,
+        t_shard.as_secs_f64() * 1e3
+    );
+    println!(
+        "bit-exact: {}   all-gather sync rounds: {}",
+        pa == pb && sa == sb,
+        sh.sync_rounds
+    );
+    if pa != pb {
+        return Err(anyhow!("sharded result diverged"));
+    }
+    sh.shutdown();
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    use onn_scale::runtime::artifact::{default_dir, Manifest};
+    use onn_scale::runtime::engine::PjrtContext;
+
+    let dir = default_dir();
+    println!("artifact dir: {}", dir.display());
+    match Manifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts ({}):", m.artifacts.len());
+            for a in &m.artifacts {
+                println!(
+                    "  {:<40} n={:<4} batch={:<3} chunk={:<3} kind={}",
+                    a.file.file_name().unwrap_or_default().to_string_lossy(),
+                    a.n,
+                    a.batch,
+                    a.chunk,
+                    a.kind
+                );
+            }
+        }
+        Err(e) => println!("no manifest: {e:#}"),
+    }
+    match PjrtContext::cpu() {
+        Ok(ctx) => println!("pjrt platform: {}", ctx.platform()),
+        Err(e) => println!("pjrt unavailable: {e:#}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! Network configuration: size and numerical precision.
+
+/// Static configuration of one ONN instance.
+///
+/// The paper's headline precision is 5 weight bits (signed, so values in
+/// `[-16, 15]`) and 4 phase bits (16 phase steps per period) — the same
+/// precision [Abernot et al. 2023] found sufficient for pattern retrieval.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NetworkConfig {
+    /// Number of oscillators (= pixels for pattern tasks).
+    pub n: usize,
+    /// Bits representing the oscillator phase; period = 2^phase_bits.
+    pub phase_bits: u32,
+    /// Bits representing a signed coupling weight (including sign).
+    pub weight_bits: u32,
+}
+
+impl NetworkConfig {
+    /// Paper-standard precision (5 weight bits / 4 phase bits).
+    pub fn paper(n: usize) -> Self {
+        Self {
+            n,
+            phase_bits: 4,
+            weight_bits: 5,
+        }
+    }
+
+    /// Number of phase steps per oscillation period (shift-register taps).
+    pub fn period(&self) -> usize {
+        1usize << self.phase_bits
+    }
+
+    /// Phase value representing 180 degrees.
+    pub fn half_period(&self) -> i32 {
+        (self.period() / 2) as i32
+    }
+
+    /// Inclusive weight bounds for two's-complement `weight_bits`.
+    pub fn weight_range(&self) -> (i32, i32) {
+        let hi = (1i32 << (self.weight_bits - 1)) - 1;
+        (-hi - 1, hi)
+    }
+
+    /// Degrees per phase step — Eq. (5) of the paper.
+    pub fn phase_step_degrees(&self) -> f64 {
+        360.0 / self.period() as f64
+    }
+
+    /// Total coupling elements in a fully connected network (incl.
+    /// self-coupling) — Table 1 of the paper.
+    pub fn coupling_elements(&self) -> usize {
+        self.n * self.n
+    }
+
+    /// Total weight-memory bits — Table 1 of the paper.
+    pub fn weight_memory_bits(&self) -> usize {
+        self.n * self.n * self.weight_bits as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_precision() {
+        let c = NetworkConfig::paper(48);
+        assert_eq!(c.period(), 16);
+        assert_eq!(c.weight_range(), (-16, 15));
+        assert_eq!(c.half_period(), 8);
+        assert!((c.phase_step_degrees() - 22.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table1_scaling_orders() {
+        // Table 1: oscillators ~ N, coupling elements & memory cells ~ N^2.
+        let a = NetworkConfig::paper(10);
+        let b = NetworkConfig::paper(20);
+        assert_eq!(b.coupling_elements(), 4 * a.coupling_elements());
+        assert_eq!(b.weight_memory_bits(), 4 * a.weight_memory_bits());
+    }
+
+    #[test]
+    fn weight_range_other_widths() {
+        let mut c = NetworkConfig::paper(4);
+        c.weight_bits = 3;
+        assert_eq!(c.weight_range(), (-4, 3));
+        c.weight_bits = 8;
+        assert_eq!(c.weight_range(), (-128, 127));
+    }
+}

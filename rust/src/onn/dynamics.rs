@@ -1,0 +1,463 @@
+//! Functional (period-level) ONN dynamics — the bit-exact Rust mirror of
+//! the JAX model in `python/compile/kernels/ref.py`.
+//!
+//! Semantics (hybrid-architecture, synchronous — DESIGN.md section 3):
+//! per oscillation period, phases are sampled once; each oscillator
+//! derives its reference square wave from the sign of the weighted sum of
+//! everyone's waveforms over the period, then snaps its phase to the
+//! best-correlating template.  Ties break toward the smallest forward
+//! rotation from the current phase, which keeps the update equivariant
+//! under global phase rotation.
+//!
+//! All arithmetic is integer (weights i8, sums i32), matching the JAX
+//! artifact exactly: there the same values are integer-valued f32s, which
+//! are exact for |S| <= N * 16 << 2^24 regardless of reduction order.
+//!
+//! The weighted sums are computed *incrementally*: a square wave flips
+//! twice per period, so `S_i(t)` is updated from `S_i(t-1)` with only the
+//! flipping oscillators' columns — O(3 N^2) per period instead of the
+//! naive O(N^2 P).  (This is the §Perf L3-native optimization; see
+//! EXPERIMENTS.md.)
+
+use crate::onn::config::NetworkConfig;
+use crate::onn::phase::{amplitude, wrap};
+use crate::onn::weights::WeightMatrix;
+
+/// Outcome of running one trial to a fixed point.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SettleOutcome {
+    pub phases: Vec<i32>,
+    /// Period index at which the state first reproduced itself, or None
+    /// if `max_periods` elapsed first (e.g. a synchronous 2-cycle).
+    pub settled: Option<usize>,
+}
+
+/// Reusable engine for one (config, weights) pair.
+///
+/// Holds the transposed weight matrix so the incremental column updates
+/// are cache-friendly, plus scratch buffers so the hot loop is
+/// allocation-free.
+#[derive(Debug, Clone)]
+pub struct FunctionalEngine {
+    pub cfg: NetworkConfig,
+    w: WeightMatrix,
+    /// Column-major copy: wt[j * n + i] = W[i][j].
+    wt: Vec<i32>,
+    /// templates[k * P + t] = +-1 square wave of phase k at tick t —
+    /// precomputed so the snap loop avoids per-element rem_euclid.
+    templates: Vec<i8>,
+    // scratch
+    sums: Vec<i32>,     // S_i(t) for current t
+    refsig: Vec<i8>,    // ref_i(t) flattened [i * P + t]
+    flips: Vec<Vec<(usize, i32)>>, // per t: (oscillator, new sign)
+}
+
+impl FunctionalEngine {
+    pub fn new(cfg: NetworkConfig, w: WeightMatrix) -> Self {
+        assert_eq!(cfg.n, w.n, "config/weights size mismatch");
+        let n = cfg.n;
+        let p = cfg.period();
+        let mut wt = vec![0i32; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                wt[j * n + i] = w.get(i, j) as i32;
+            }
+        }
+        let mut templates = vec![0i8; p * p];
+        for k in 0..p {
+            for t in 0..p {
+                templates[k * p + t] = amplitude(k as i32, t as i64, p as i32) as i8;
+            }
+        }
+        Self {
+            cfg,
+            w,
+            wt,
+            templates,
+            sums: vec![0; n],
+            refsig: vec![0; n * p],
+            flips: vec![Vec::new(); p],
+        }
+    }
+
+    pub fn weights(&self) -> &WeightMatrix {
+        &self.w
+    }
+
+    /// One synchronous period update, in place.
+    pub fn period_step(&mut self, phases: &mut [i32]) {
+        let n = self.cfg.n;
+        let p = self.cfg.period() as i32;
+        assert_eq!(phases.len(), n);
+
+        // --- 1. initial sums S_i(0) = sum_j W[i][j] * s_j(0)
+        self.sums.iter_mut().for_each(|s| *s = 0);
+        for j in 0..n {
+            let sj = amplitude(phases[j], 0, p);
+            let col = &self.wt[j * n..(j + 1) * n];
+            if sj > 0 {
+                for i in 0..n {
+                    self.sums[i] += col[i];
+                }
+            } else {
+                for i in 0..n {
+                    self.sums[i] -= col[i];
+                }
+            }
+        }
+
+        // --- 2. flip schedule: oscillator j flips where (t + phi_j) mod P
+        // hits 0 (-> +1) and P/2 (-> -1).
+        for f in self.flips.iter_mut() {
+            f.clear();
+        }
+        for (j, &phi) in phases.iter().enumerate() {
+            let t_up = wrap(-phi, p) as usize; // becomes +1
+            let t_dn = wrap(p / 2 - phi, p) as usize; // becomes -1
+            if t_up != 0 {
+                self.flips[t_up].push((j, 1));
+            }
+            if t_dn != 0 {
+                self.flips[t_dn].push((j, -1));
+            }
+        }
+
+        // --- 3. walk the period, recording ref_i(t)
+        let pu = p as usize;
+        for t in 0..pu {
+            if t != 0 {
+                // apply flips scheduled at t: s_j jumps by 2*newsign
+                // Split borrows: flips is read, sums is written.
+                let (sums, flips) = (&mut self.sums, &self.flips[t]);
+                for &(j, news) in flips {
+                    let col = &self.wt[j * n..(j + 1) * n];
+                    if news > 0 {
+                        for i in 0..n {
+                            sums[i] += 2 * col[i];
+                        }
+                    } else {
+                        for i in 0..n {
+                            sums[i] -= 2 * col[i];
+                        }
+                    }
+                }
+            }
+            for i in 0..n {
+                let s = self.sums[i];
+                self.refsig[i * pu + t] = if s > 0 {
+                    1
+                } else if s < 0 {
+                    -1
+                } else {
+                    amplitude(phases[i], t as i64, p) as i8
+                };
+            }
+        }
+
+        // --- 4. snap each phase to the best template
+        for i in 0..n {
+            phases[i] = snap_phase_with_templates(
+                &self.refsig[i * pu..(i + 1) * pu],
+                phases[i],
+                p,
+                &self.templates,
+            );
+        }
+    }
+
+    /// Batched chunk with settle tracking — the same contract as the AOT
+    /// artifact (`onn_chunk`): `settled[b]` is the absolute period index
+    /// of the first fixed point or -1.
+    pub fn run_chunk(
+        &mut self,
+        phases: &mut [i32],
+        settled: &mut [i32],
+        period0: i32,
+        chunk: usize,
+    ) {
+        let n = self.cfg.n;
+        let b = phases.len() / n;
+        assert_eq!(phases.len(), b * n);
+        assert_eq!(settled.len(), b);
+        let mut prev = vec![0i32; n];
+        for bi in 0..b {
+            let ph = &mut phases[bi * n..(bi + 1) * n];
+            for k in 0..chunk {
+                prev.copy_from_slice(ph);
+                self.period_step(ph);
+                if settled[bi] < 0 && ph == &prev[..] {
+                    settled[bi] = period0 + k as i32;
+                }
+            }
+        }
+    }
+
+    /// Run a single trial until fixed point or `max_periods`.
+    pub fn run_to_settle(&mut self, init: &[i32], max_periods: usize) -> SettleOutcome {
+        let mut ph = init.to_vec();
+        let mut prev = vec![0i32; ph.len()];
+        for k in 0..max_periods {
+            prev.copy_from_slice(&ph);
+            self.period_step(&mut ph);
+            if ph == prev {
+                return SettleOutcome {
+                    phases: ph,
+                    settled: Some(k),
+                };
+            }
+        }
+        SettleOutcome {
+            phases: ph,
+            settled: None,
+        }
+    }
+}
+
+/// Snap to the template maximizing correlation with `refsig`, tie-broken
+/// toward the smallest forward rotation from `current` (then identity).
+/// Exactly mirrors `ref.snap_phase` in the JAX oracle.
+pub fn snap_phase(refsig: &[i8], current: i32, p: i32) -> i32 {
+    let pu = p as usize;
+    let mut templates = vec![0i8; pu * pu];
+    for k in 0..pu {
+        for t in 0..pu {
+            templates[k * pu + t] = amplitude(k as i32, t as i64, p) as i8;
+        }
+    }
+    snap_phase_with_templates(refsig, current, p, &templates)
+}
+
+/// Hot-path variant with a precomputed `templates[k * P + t]` table
+/// (avoids rem_euclid in the inner correlation loop — §Perf).
+fn snap_phase_with_templates(refsig: &[i8], current: i32, p: i32, templates: &[i8]) -> i32 {
+    let pu = p as usize;
+    debug_assert_eq!(refsig.len(), pu);
+    let mut best_key = i32::MIN;
+    let mut best_k = 0i32;
+    for k in 0..p {
+        let row = &templates[k as usize * pu..(k as usize + 1) * pu];
+        let mut score = 0i32;
+        for (&r, &tmpl) in refsig.iter().zip(row) {
+            score += r as i32 * tmpl as i32;
+        }
+        let rel = wrap(k - current, p);
+        let key = score * 2 * p + (p - rel);
+        if key > best_key {
+            best_key = key;
+            best_k = k;
+        }
+    }
+    best_k
+}
+
+/// Naive reference implementation of one period step (O(N^2 P)); kept as
+/// an in-crate oracle for the incremental engine.
+pub fn period_step_naive(cfg: &NetworkConfig, w: &WeightMatrix, phases: &[i32]) -> Vec<i32> {
+    let n = cfg.n;
+    let p = cfg.period() as i32;
+    let pu = cfg.period();
+    let mut out = vec![0i32; n];
+    for i in 0..n {
+        let mut refsig = vec![0i8; pu];
+        for (t, r) in refsig.iter_mut().enumerate() {
+            let mut s = 0i32;
+            for j in 0..n {
+                s += w.get(i, j) as i32 * amplitude(phases[j], t as i64, p);
+            }
+            *r = if s > 0 {
+                1
+            } else if s < 0 {
+                -1
+            } else {
+                amplitude(phases[i], t as i64, p) as i8
+            };
+        }
+        out[i] = snap_phase(&refsig, phases[i], p);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_weights(rng: &mut Rng, n: usize) -> WeightMatrix {
+        let mut w = WeightMatrix::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                w.set(i, j, rng.range_i64(-16, 16) as i8);
+            }
+        }
+        w
+    }
+
+    fn rand_phases(rng: &mut Rng, n: usize, p: i32) -> Vec<i32> {
+        (0..n).map(|_| rng.range_i64(0, p as i64) as i32).collect()
+    }
+
+    #[test]
+    fn incremental_matches_naive() {
+        let mut rng = Rng::new(21);
+        for n in [1, 2, 5, 9, 20, 33] {
+            let cfg = NetworkConfig::paper(n);
+            let w = rand_weights(&mut rng, n);
+            let mut eng = FunctionalEngine::new(cfg, w.clone());
+            for _ in 0..5 {
+                let ph0 = rand_phases(&mut rng, n, 16);
+                let want = period_step_naive(&cfg, &w, &ph0);
+                let mut got = ph0.clone();
+                eng.period_step(&mut got);
+                assert_eq!(got, want, "n={n} ph0={ph0:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_weights_freeze() {
+        let cfg = NetworkConfig::paper(7);
+        let mut eng = FunctionalEngine::new(cfg, WeightMatrix::zeros(7));
+        let mut rng = Rng::new(3);
+        let ph0 = rand_phases(&mut rng, 7, 16);
+        let mut ph = ph0.clone();
+        eng.period_step(&mut ph);
+        assert_eq!(ph, ph0);
+    }
+
+    #[test]
+    fn rotation_equivariance() {
+        let mut rng = Rng::new(4);
+        let cfg = NetworkConfig::paper(11);
+        let w = rand_weights(&mut rng, 11);
+        let mut eng = FunctionalEngine::new(cfg, w);
+        let ph0 = rand_phases(&mut rng, 11, 16);
+        let mut base = ph0.clone();
+        eng.period_step(&mut base);
+        for d in [1, 7, 15] {
+            let mut rot: Vec<i32> = ph0.iter().map(|&x| wrap(x + d, 16)).collect();
+            eng.period_step(&mut rot);
+            let want: Vec<i32> = base.iter().map(|&x| wrap(x + d, 16)).collect();
+            assert_eq!(rot, want, "d={d}");
+        }
+    }
+
+    #[test]
+    fn hopfield_equivalence_on_binary_states() {
+        // At phases {0, P/2} the step is a synchronous Hopfield update.
+        let mut rng = Rng::new(5);
+        let n = 13;
+        let cfg = NetworkConfig::paper(n);
+        let w = rand_weights(&mut rng, n);
+        let mut eng = FunctionalEngine::new(cfg, w.clone());
+        for _ in 0..20 {
+            let spins: Vec<i8> = (0..n).map(|_| rng.spin()).collect();
+            let mut ph: Vec<i32> = spins
+                .iter()
+                .map(|&s| if s > 0 { 0 } else { 8 })
+                .collect();
+            eng.period_step(&mut ph);
+            for i in 0..n {
+                let h: i32 = (0..n).map(|j| w.get(i, j) as i32 * spins[j] as i32).sum();
+                let want = if h > 0 {
+                    0
+                } else if h < 0 {
+                    8
+                } else if spins[i] > 0 {
+                    0
+                } else {
+                    8
+                };
+                assert_eq!(ph[i], want, "i={i} h={h}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_to_settle_fixed_point_detected() {
+        // A stored pattern (strongly ferro diag) settles immediately.
+        let n = 6;
+        let cfg = NetworkConfig::paper(n);
+        let mut w = WeightMatrix::zeros(n);
+        for i in 0..n {
+            w.set(i, i, 15);
+        }
+        let mut eng = FunctionalEngine::new(cfg, w);
+        let out = eng.run_to_settle(&[0, 8, 0, 8, 3, 12], 10);
+        assert_eq!(out.settled, Some(0));
+        assert_eq!(out.phases, vec![0, 8, 0, 8, 3, 12]);
+    }
+
+    #[test]
+    fn run_to_settle_two_cycle_times_out() {
+        // Pure cross pair: synchronous exchange map never settles.
+        let cfg = NetworkConfig::paper(2);
+        let mut w = WeightMatrix::zeros(2);
+        w.set(0, 1, 8);
+        w.set(1, 0, 8);
+        let mut eng = FunctionalEngine::new(cfg, w);
+        let out = eng.run_to_settle(&[0, 5], 20);
+        assert_eq!(out.settled, None);
+    }
+
+    #[test]
+    fn run_chunk_matches_run_to_settle() {
+        let mut rng = Rng::new(6);
+        let n = 10;
+        let cfg = NetworkConfig::paper(n);
+        let w = {
+            // symmetric-ish weights converge
+            let mut w = WeightMatrix::zeros(n);
+            for i in 0..n {
+                for j in 0..=i {
+                    let v = rng.range_i64(-8, 9) as i8;
+                    w.set(i, j, v);
+                    w.set(j, i, v);
+                }
+            }
+            w
+        };
+        let b = 8;
+        let mut eng = FunctionalEngine::new(cfg, w);
+        let mut phases = Vec::new();
+        let mut inits = Vec::new();
+        for _ in 0..b {
+            let ph = rand_phases(&mut rng, n, 16);
+            inits.push(ph.clone());
+            phases.extend(ph);
+        }
+        let mut settled = vec![-1i32; b];
+        eng.run_chunk(&mut phases, &mut settled, 0, 64);
+        for bi in 0..b {
+            let solo = eng.run_to_settle(&inits[bi], 64);
+            match solo.settled {
+                Some(k) => {
+                    assert_eq!(settled[bi], k as i32, "trial {bi}");
+                    assert_eq!(&phases[bi * n..(bi + 1) * n], &solo.phases[..]);
+                }
+                None => assert_eq!(settled[bi], -1),
+            }
+        }
+    }
+
+    #[test]
+    fn settled_trials_have_frozen_phases() {
+        let mut rng = Rng::new(61);
+        let n = 8;
+        let cfg = NetworkConfig::paper(n);
+        let mut w = WeightMatrix::zeros(n);
+        for i in 0..n {
+            for j in 0..=i {
+                let v = rng.range_i64(0, 6) as i8;
+                w.set(i, j, v);
+                w.set(j, i, v);
+            }
+        }
+        let mut eng = FunctionalEngine::new(cfg, w);
+        let out = eng.run_to_settle(&rand_phases(&mut rng, n, 16), 128);
+        if let Some(_) = out.settled {
+            let mut again = out.phases.clone();
+            eng.period_step(&mut again);
+            assert_eq!(again, out.phases);
+        }
+    }
+}

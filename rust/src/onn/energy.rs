@@ -1,0 +1,138 @@
+//! Ising / phase-domain energy bookkeeping.
+//!
+//! ONNs are energy-minimizing networks: Eq. (1) of the paper is the Ising
+//! Hamiltonian `H = -sum_ij J_ij s_i s_j - mu sum_i h_i s_i`.  For phase
+//! states, square waveforms give the pairwise interaction
+//! `C_ij = (1/P) sum_t s_i(t) s_j(t) = 1 - 4 d(phi_i, phi_j)/P`
+//! (a triangular function of the circular phase distance), so the
+//! phase-domain energy generalizes the binary Hamiltonian and coincides
+//! with it at phases {0, P/2}.
+
+use crate::onn::phase::distance;
+use crate::onn::weights::WeightMatrix;
+
+/// Binary Ising energy `H = -1/2 sum_{i != j} W_ij s_i s_j` (the 1/2
+/// undoes double counting of symmetric pairs; self-coupling contributes a
+/// state-independent constant and is excluded).
+pub fn ising_energy(w: &WeightMatrix, spins: &[i8]) -> f64 {
+    let n = w.n;
+    assert_eq!(spins.len(), n);
+    let mut e = 0f64;
+    for i in 0..n {
+        for j in 0..n {
+            if i != j {
+                e -= 0.5 * w.get(i, j) as f64 * spins[i] as f64 * spins[j] as f64;
+            }
+        }
+    }
+    e
+}
+
+/// Ising energy with external fields: `H = -1/2 sum W s s - sum h s`.
+pub fn ising_energy_with_field(w: &WeightMatrix, h: &[f64], spins: &[i8]) -> f64 {
+    let base = ising_energy(w, spins);
+    let field: f64 = h
+        .iter()
+        .zip(spins)
+        .map(|(&hi, &s)| hi * s as f64)
+        .sum();
+    base - field
+}
+
+/// Square-waveform correlation of two phases: `1 - 4 d / P` in [-1, 1].
+pub fn waveform_correlation(phi_i: i32, phi_j: i32, p: i32) -> f64 {
+    1.0 - 4.0 * distance(phi_i, phi_j, p) as f64 / p as f64
+}
+
+/// Phase-domain energy `-1/2 sum_{i != j} W_ij C(phi_i, phi_j)`.
+pub fn phase_energy(w: &WeightMatrix, phases: &[i32], p: i32) -> f64 {
+    let n = w.n;
+    assert_eq!(phases.len(), n);
+    let mut e = 0f64;
+    for i in 0..n {
+        for j in 0..n {
+            if i != j {
+                e -= 0.5 * w.get(i, j) as f64 * waveform_correlation(phases[i], phases[j], p);
+            }
+        }
+    }
+    e
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::onn::config::NetworkConfig;
+    use crate::onn::dynamics::FunctionalEngine;
+    use crate::onn::phase::spin_to_phase;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn ising_energy_ferro_pair() {
+        let mut w = WeightMatrix::zeros(2);
+        w.set(0, 1, 4);
+        w.set(1, 0, 4);
+        assert_eq!(ising_energy(&w, &[1, 1]), -4.0);
+        assert_eq!(ising_energy(&w, &[1, -1]), 4.0);
+    }
+
+    #[test]
+    fn field_term() {
+        let w = WeightMatrix::zeros(2);
+        let e = ising_energy_with_field(&w, &[1.0, -2.0], &[1, 1]);
+        assert_eq!(e, 1.0); // -(1*1 + -2*1) = 1
+    }
+
+    #[test]
+    fn waveform_correlation_extremes() {
+        assert_eq!(waveform_correlation(0, 0, 16), 1.0);
+        assert_eq!(waveform_correlation(0, 8, 16), -1.0);
+        assert_eq!(waveform_correlation(0, 4, 16), 0.0);
+    }
+
+    #[test]
+    fn phase_energy_matches_ising_on_binary_states() {
+        let mut rng = Rng::new(40);
+        let n = 9;
+        let mut w = WeightMatrix::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                w.set(i, j, rng.range_i64(-5, 6) as i8);
+            }
+        }
+        let spins: Vec<i8> = (0..n).map(|_| rng.spin()).collect();
+        let phases: Vec<i32> = spins.iter().map(|&s| spin_to_phase(s, 16)).collect();
+        let ei = ising_energy(&w, &spins);
+        let ep = phase_energy(&w, &phases, 16);
+        assert!((ei - ep).abs() < 1e-9, "{ei} vs {ep}");
+    }
+
+    #[test]
+    fn settling_runs_end_at_or_below_initial_energy() {
+        // Synchronous updates are not monotone step-by-step (the sync
+        // Lyapunov function couples consecutive states), but a run that
+        // settles must end at an energy no higher than where it started —
+        // the property the max-cut solver relies on.
+        let mut rng = Rng::new(41);
+        let n = 12;
+        let cfg = NetworkConfig::paper(n);
+        let mut w = WeightMatrix::zeros(n);
+        for i in 0..n {
+            for j in 0..i {
+                let v = rng.range_i64(-6, 7) as i8;
+                w.set(i, j, v);
+                w.set(j, i, v);
+            }
+        }
+        let mut eng = FunctionalEngine::new(cfg, w.clone());
+        for trial in 0..20 {
+            let ph0: Vec<i32> = (0..n).map(|_| spin_to_phase(rng.spin(), 16)).collect();
+            let e0 = phase_energy(&w, &ph0, 16);
+            let out = eng.run_to_settle(&ph0, 100);
+            if out.settled.is_some() {
+                let e1 = phase_energy(&w, &out.phases, 16);
+                assert!(e1 <= e0 + 1e-9, "trial {trial}: {e0} -> {e1}");
+            }
+        }
+    }
+}

@@ -1,0 +1,204 @@
+//! Learning rules for embedding patterns in the coupling weights.
+//!
+//! The paper trains every dataset with the **Diederich-Opper I** rule
+//! [Diederich & Opper 1987]: an iterative perceptron-like local rule that
+//! keeps strengthening a pattern's couplings until every bit of every
+//! pattern is stable with a margin.  Plain Hebbian learning is included as
+//! the baseline (and the DO-I initial condition).
+
+use crate::onn::config::NetworkConfig;
+use crate::onn::weights::WeightMatrix;
+
+/// Hebbian outer-product weights: `W_ij = (1/N) sum_mu xi_i xi_j`.
+///
+/// Returned as the float master matrix (quantize separately).  The
+/// diagonal is left at zero: the architectures *support* self-coupling
+/// (the N x N memory stores W_ii), but associative-memory training keeps
+/// it zero — a non-zero diagonal merely freezes corrupted pixels.
+pub fn hebbian(patterns: &[Vec<i8>]) -> Vec<f32> {
+    let n = patterns[0].len();
+    assert!(patterns.iter().all(|p| p.len() == n));
+    let mut w = vec![0f32; n * n];
+    for p in patterns {
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    w[i * n + j] += (p[i] as f32) * (p[j] as f32) / n as f32;
+                }
+            }
+        }
+    }
+    w
+}
+
+/// Result of Diederich-Opper-I training.
+#[derive(Debug, Clone)]
+pub struct DoiResult {
+    /// Float master weights (row-major N x N).
+    pub weights: Vec<f32>,
+    /// Sweeps over the pattern set until all margins held.
+    pub epochs: usize,
+    /// Whether every pattern reached the margin (false = hit max_epochs).
+    pub converged: bool,
+}
+
+/// Diederich-Opper I: repeat over patterns; whenever bit i of pattern mu
+/// has local field alignment `xi_i * h_i <= margin`, reinforce
+/// `W_ij += xi_i xi_j / N` for all `j != i`.  Guarantees stored patterns
+/// become fixed points (with margin) when capacity permits.  The diagonal
+/// is excluded — including it lets the rule "converge" on any load by
+/// self-stabilizing every bit, which destroys retrieval.
+pub fn diederich_opper_i(
+    patterns: &[Vec<i8>],
+    margin: f32,
+    max_epochs: usize,
+) -> DoiResult {
+    let n = patterns[0].len();
+    assert!(patterns.iter().all(|p| p.len() == n), "ragged patterns");
+    let mut w = vec![0f32; n * n];
+    let inv_n = 1.0 / n as f32;
+
+    for epoch in 0..max_epochs {
+        let mut updates = 0usize;
+        for p in patterns {
+            for i in 0..n {
+                let h: f32 = (0..n).map(|j| w[i * n + j] * p[j] as f32).sum();
+                if (p[i] as f32) * h <= margin {
+                    for j in 0..n {
+                        if j != i {
+                            w[i * n + j] += (p[i] as f32) * (p[j] as f32) * inv_n;
+                        }
+                    }
+                    updates += 1;
+                }
+            }
+        }
+        if updates == 0 {
+            return DoiResult {
+                weights: w,
+                epochs: epoch,
+                converged: true,
+            };
+        }
+    }
+    DoiResult {
+        weights: w,
+        epochs: max_epochs,
+        converged: false,
+    }
+}
+
+/// Train with DO-I and quantize to the configured precision — the full
+/// pipeline the paper uses before programming the FPGA.
+pub fn train_quantized(patterns: &[Vec<i8>], cfg: &NetworkConfig) -> WeightMatrix {
+    let res = diederich_opper_i(patterns, 0.5, 1000);
+    WeightMatrix::quantize(&res.weights, cfg.n, cfg)
+}
+
+/// Check that `pattern` is a fixed point of the sign dynamics under
+/// integer weights (the property DO-I must deliver after quantization for
+/// retrieval to work).  Zero fields count as stable (tie keeps state).
+pub fn is_fixed_point(w: &WeightMatrix, pattern: &[i8]) -> bool {
+    let n = w.n;
+    (0..n).all(|i| {
+        let h: i32 = (0..n).map(|j| w.get(i, j) as i32 * pattern[j] as i32).sum();
+        h == 0 || (h > 0) == (pattern[i] > 0)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_patterns(rng: &mut Rng, count: usize, n: usize) -> Vec<Vec<i8>> {
+        (0..count)
+            .map(|_| (0..n).map(|_| rng.spin()).collect())
+            .collect()
+    }
+
+    #[test]
+    fn hebbian_single_pattern_outer_product() {
+        let p = vec![1i8, -1, 1];
+        let w = hebbian(&[p.clone()]);
+        for i in 0..3 {
+            for j in 0..3 {
+                let want = if i == j {
+                    0.0 // diagonal excluded (see hebbian doc)
+                } else {
+                    (p[i] as f32) * (p[j] as f32) / 3.0
+                };
+                assert!((w[i * 3 + j] - want).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn doi_converges_and_stabilizes() {
+        let mut rng = Rng::new(100);
+        let pats = random_patterns(&mut rng, 3, 20);
+        let res = diederich_opper_i(&pats, 0.5, 1000);
+        assert!(res.converged, "DO-I did not converge");
+        // All patterns are strict fixed points of the float dynamics.
+        for p in &pats {
+            for i in 0..20 {
+                let h: f32 = (0..20).map(|j| res.weights[i * 20 + j] * p[j] as f32).sum();
+                assert!(
+                    (p[i] as f32) * h > 0.5,
+                    "margin violated at i={i}: {}",
+                    (p[i] as f32) * h
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn doi_quantized_patterns_remain_fixed_points() {
+        let mut rng = Rng::new(7);
+        let cfg = NetworkConfig::paper(25);
+        let pats = random_patterns(&mut rng, 4, 25);
+        let w = train_quantized(&pats, &cfg);
+        for p in &pats {
+            assert!(is_fixed_point(&w, p), "pattern lost after quantization");
+        }
+    }
+
+    #[test]
+    fn doi_inverse_patterns_also_fixed() {
+        // Z2 symmetry: -xi is a fixed point whenever xi is.
+        let mut rng = Rng::new(8);
+        let cfg = NetworkConfig::paper(16);
+        let pats = random_patterns(&mut rng, 2, 16);
+        let w = train_quantized(&pats, &cfg);
+        for p in &pats {
+            let inv: Vec<i8> = p.iter().map(|&x| -x).collect();
+            assert!(is_fixed_point(&w, &inv));
+        }
+    }
+
+    #[test]
+    fn doi_zero_margin_faster_than_large_margin() {
+        let mut rng = Rng::new(9);
+        let pats = random_patterns(&mut rng, 3, 15);
+        let small = diederich_opper_i(&pats, 0.1, 1000);
+        let large = diederich_opper_i(&pats, 2.0, 1000);
+        assert!(small.epochs <= large.epochs);
+    }
+
+    #[test]
+    fn doi_duplicate_patterns_ok() {
+        let p = vec![1i8, 1, -1, -1, 1, -1];
+        let res = diederich_opper_i(&[p.clone(), p.clone()], 0.5, 500);
+        assert!(res.converged);
+    }
+
+    #[test]
+    fn capacity_overload_does_not_converge() {
+        // Way past DO-I capacity (~2N): must report non-convergence
+        // rather than pretending.
+        let mut rng = Rng::new(10);
+        let pats = random_patterns(&mut rng, 30, 10);
+        let res = diederich_opper_i(&pats, 0.5, 50);
+        assert!(!res.converged);
+    }
+}

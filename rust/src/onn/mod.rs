@@ -1,0 +1,10 @@
+//! Domain core: quantized ONN state, learning rules, pattern datasets,
+//! and the functional (period-level) dynamics engine.
+
+pub mod config;
+pub mod dynamics;
+pub mod energy;
+pub mod learning;
+pub mod patterns;
+pub mod phase;
+pub mod weights;

@@ -1,0 +1,341 @@
+//! Letter-pattern datasets, corruption, and retrieval scoring.
+//!
+//! The paper benchmarks five datasets of pixel patterns: 3x3 (2 patterns)
+//! and 5x4, 7x6, 10x10, 22x22 (5 letter patterns each).  Pixels map to
+//! spins (+1 = black, -1 = white) and spins to oscillator phases
+//! (0 / 180 degrees).  Corruption flips a given percentage of randomly
+//! chosen pixels; the two larger sizes are nearest-neighbour upscales of
+//! the 7x6 glyphs, mirroring how such demo datasets are produced.
+
+use crate::util::rng::Rng;
+
+/// One stored pattern: a named spin image.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Pattern {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub spins: Vec<i8>, // row-major, +1/-1
+}
+
+impl Pattern {
+    pub fn from_art(name: &str, art: &[&str]) -> Self {
+        let rows = art.len();
+        let cols = art[0].len();
+        assert!(art.iter().all(|r| r.len() == cols), "ragged art: {name}");
+        let spins = art
+            .iter()
+            .flat_map(|r| r.bytes().map(|b| if b == b'#' { 1i8 } else { -1i8 }))
+            .collect();
+        Self {
+            name: name.to_string(),
+            rows,
+            cols,
+            spins,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.spins.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spins.is_empty()
+    }
+
+    /// Nearest-neighbour resample to a new grid.
+    pub fn upscale(&self, rows: usize, cols: usize) -> Pattern {
+        let mut spins = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            let sr = r * self.rows / rows;
+            for c in 0..cols {
+                let sc = c * self.cols / cols;
+                spins.push(self.spins[sr * self.cols + sc]);
+            }
+        }
+        Pattern {
+            name: self.name.clone(),
+            rows,
+            cols,
+            spins,
+        }
+    }
+
+    /// Flip `count` distinct random pixels.
+    pub fn corrupt(&self, count: usize, rng: &mut Rng) -> Pattern {
+        let mut out = self.clone();
+        for idx in rng.choose_distinct(self.len(), count) {
+            out.spins[idx] = -out.spins[idx];
+        }
+        out.name = format!("{}~{}", self.name, count);
+        out
+    }
+
+    /// Number of pixels the paper flips for a percentage level, following
+    /// its example ("corrupting a 10x10 pattern by 10% means flipping the
+    /// color on 10 pixels"): round-half-up of pct * npixels.
+    pub fn corruption_count(&self, pct: f64) -> usize {
+        ((self.len() as f64 * pct / 100.0) + 0.5).floor() as usize
+    }
+
+    /// Hamming overlap in [−1, 1]: fraction of matching pixels scaled.
+    pub fn overlap(&self, other: &[i8]) -> f64 {
+        assert_eq!(self.len(), other.len());
+        let dot: i32 = self
+            .spins
+            .iter()
+            .zip(other)
+            .map(|(&a, &b)| a as i32 * b as i32)
+            .sum();
+        dot as f64 / self.len() as f64
+    }
+
+    /// Exact match up to the global Z2 inversion symmetry of the Ising
+    /// energy (the paper reads phases out *relative to each other*).
+    pub fn matches_up_to_inversion(&self, other: &[i8]) -> bool {
+        let o = self.overlap(other);
+        o == 1.0 || o == -1.0
+    }
+
+    /// Render as ASCII art (for Figure-8-style output).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                s.push(if self.spins[r * self.cols + c] > 0 {
+                    '#'
+                } else {
+                    '.'
+                });
+            }
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// A benchmark dataset: all patterns share one grid size.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub patterns: Vec<Pattern>,
+}
+
+impl Dataset {
+    pub fn n(&self) -> usize {
+        self.rows * self.cols
+    }
+}
+
+const GLYPH_7X6: &[(&str, [&str; 7])] = &[
+    (
+        "A",
+        [
+            "..##..", ".#..#.", "#....#", "#....#", "######", "#....#", "#....#",
+        ],
+    ),
+    (
+        "C",
+        [
+            ".####.", "#....#", "#.....", "#.....", "#.....", "#....#", ".####.",
+        ],
+    ),
+    (
+        "H",
+        [
+            "#....#", "#....#", "#....#", "######", "#....#", "#....#", "#....#",
+        ],
+    ),
+    (
+        "T",
+        [
+            "######", "..##..", "..##..", "..##..", "..##..", "..##..", "..##..",
+        ],
+    ),
+    (
+        "Z",
+        [
+            "######", "....#.", "...#..", "..#...", ".#....", "#.....", "######",
+        ],
+    ),
+];
+
+const GLYPH_5X4: &[(&str, [&str; 5])] = &[
+    ("A", [".##.", "#..#", "####", "#..#", "#..#"]),
+    ("C", [".###", "#...", "#...", "#...", ".###"]),
+    ("T", ["####", ".#..", ".#..", ".#..", ".#.."]),
+    ("X", ["#..#", "#..#", ".##.", "#..#", "#..#"]),
+    ("Z", ["####", "..#.", ".#..", "#...", "####"]),
+];
+
+/// The five benchmark datasets of the paper (section 4.3).
+pub fn paper_datasets() -> Vec<Dataset> {
+    vec![
+        dataset_3x3(),
+        dataset_from_glyphs("5x4", 5, 4, GLYPH_5X4.iter().map(|(n, a)| (*n, &a[..]))),
+        dataset_from_glyphs("7x6", 7, 6, GLYPH_7X6.iter().map(|(n, a)| (*n, &a[..]))),
+        upscaled_dataset("10x10", 10, 10),
+        upscaled_dataset("22x22", 22, 22),
+    ]
+}
+
+pub fn dataset_by_name(name: &str) -> Option<Dataset> {
+    paper_datasets().into_iter().find(|d| d.name == name)
+}
+
+/// 3x3 dataset: two letter patterns ("T", "L") — the paper's 3x3 set
+/// also stores just two patterns.  (A plus/cross pair would be almost
+/// perfectly anti-correlated: with zero self-coupling no weight matrix
+/// can store both, since the second is the first's inverse everywhere
+/// except the center pixel.)
+pub fn dataset_3x3() -> Dataset {
+    Dataset {
+        name: "3x3".to_string(),
+        rows: 3,
+        cols: 3,
+        patterns: vec![
+            Pattern::from_art("T", &["###", ".#.", ".#."]),
+            Pattern::from_art("L", &["#..", "#..", "###"]),
+        ],
+    }
+}
+
+fn dataset_from_glyphs<'a>(
+    name: &str,
+    rows: usize,
+    cols: usize,
+    glyphs: impl Iterator<Item = (&'a str, &'a [&'a str])>,
+) -> Dataset {
+    let patterns = glyphs
+        .map(|(n, art)| {
+            let p = Pattern::from_art(n, art);
+            assert_eq!((p.rows, p.cols), (rows, cols));
+            p
+        })
+        .collect();
+    Dataset {
+        name: name.to_string(),
+        rows,
+        cols,
+        patterns,
+    }
+}
+
+fn upscaled_dataset(name: &str, rows: usize, cols: usize) -> Dataset {
+    let base = dataset_from_glyphs("7x6", 7, 6, GLYPH_7X6.iter().map(|(n, a)| (*n, &a[..])));
+    Dataset {
+        name: name.to_string(),
+        rows,
+        cols,
+        patterns: base.patterns.iter().map(|p| p.upscale(rows, cols)).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_dataset_inventory() {
+        let ds = paper_datasets();
+        let sizes: Vec<(usize, usize, usize)> = ds
+            .iter()
+            .map(|d| (d.rows, d.cols, d.patterns.len()))
+            .collect();
+        assert_eq!(
+            sizes,
+            vec![(3, 3, 2), (5, 4, 5), (7, 6, 5), (10, 10, 5), (22, 22, 5)]
+        );
+        // network sizes used for the artifacts
+        let ns: Vec<usize> = ds.iter().map(|d| d.n()).collect();
+        assert_eq!(ns, vec![9, 20, 42, 100, 484]);
+    }
+
+    #[test]
+    fn patterns_distinct_within_dataset() {
+        for d in paper_datasets() {
+            for i in 0..d.patterns.len() {
+                for j in (i + 1)..d.patterns.len() {
+                    let o = d.patterns[i].overlap(&d.patterns[j].spins);
+                    assert!(
+                        o.abs() < 1.0,
+                        "{}: {} == {} (overlap {o})",
+                        d.name,
+                        d.patterns[i].name,
+                        d.patterns[j].name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn from_art_roundtrip() {
+        let p = Pattern::from_art("t", &["#.", ".#"]);
+        assert_eq!(p.spins, vec![1, -1, -1, 1]);
+        assert_eq!(p.render(), "#.\n.#\n");
+    }
+
+    #[test]
+    fn corrupt_flips_exact_count() {
+        let mut rng = Rng::new(1);
+        let d = dataset_by_name("7x6").unwrap();
+        let p = &d.patterns[0];
+        for count in [0, 1, 4, 10, 21] {
+            let c = p.corrupt(count, &mut rng);
+            let diff: usize = p
+                .spins
+                .iter()
+                .zip(&c.spins)
+                .filter(|(a, b)| a != b)
+                .count();
+            assert_eq!(diff, count);
+        }
+    }
+
+    #[test]
+    fn corruption_count_matches_paper_example() {
+        let d = dataset_by_name("10x10").unwrap();
+        let p = &d.patterns[0];
+        assert_eq!(p.corruption_count(10.0), 10);
+        assert_eq!(p.corruption_count(25.0), 25);
+        assert_eq!(p.corruption_count(50.0), 50);
+        // 3x3: 10% of 9 = 0.9 -> 1 pixel
+        let d3 = dataset_3x3();
+        assert_eq!(d3.patterns[0].corruption_count(10.0), 1);
+        assert_eq!(d3.patterns[0].corruption_count(25.0), 2);
+        assert_eq!(d3.patterns[0].corruption_count(50.0), 5);
+    }
+
+    #[test]
+    fn upscale_preserves_shape() {
+        let d = dataset_by_name("22x22").unwrap();
+        for p in &d.patterns {
+            assert_eq!(p.len(), 484);
+            // Upscaled glyph keeps roughly the same ink fraction as base.
+            let base = dataset_by_name("7x6")
+                .unwrap()
+                .patterns
+                .iter()
+                .find(|b| b.name == p.name)
+                .unwrap()
+                .clone();
+            let ink_base = base.spins.iter().filter(|&&s| s > 0).count() as f64 / 42.0;
+            let ink_up = p.spins.iter().filter(|&&s| s > 0).count() as f64 / 484.0;
+            assert!((ink_base - ink_up).abs() < 0.15, "{}", p.name);
+        }
+    }
+
+    #[test]
+    fn overlap_and_inversion_match() {
+        let p = Pattern::from_art("t", &["##", ".."]);
+        let inv: Vec<i8> = p.spins.iter().map(|&x| -x).collect();
+        assert_eq!(p.overlap(&p.spins), 1.0);
+        assert_eq!(p.overlap(&inv), -1.0);
+        assert!(p.matches_up_to_inversion(&inv));
+        let near = vec![1i8, 1, -1, 1];
+        assert!(!p.matches_up_to_inversion(&near));
+    }
+}

@@ -1,0 +1,132 @@
+//! Quantized phase arithmetic and the square-wave oscillator waveform.
+//!
+//! A phase is an integer in `[0, P)` where `P = 2^phase_bits`.  An
+//! oscillator with phase `phi` outputs the square wave
+//! `s(t) = +1 if (t + phi) mod P < P/2 else -1` — exactly the circular
+//! shift register of Figure 3 of the paper with the mux tap at `phi`.
+
+/// +1/-1 square-wave amplitude of an oscillator with phase `phi` at tick
+/// `t` (both in units of the phase-update clock).
+#[inline]
+pub fn amplitude(phi: i32, t: i64, p: i32) -> i32 {
+    debug_assert!(p > 0 && p % 2 == 0);
+    let idx = (t + phi as i64).rem_euclid(p as i64) as i32;
+    if idx < p / 2 {
+        1
+    } else {
+        -1
+    }
+}
+
+/// Wrap any integer into `[0, P)`.
+#[inline]
+pub fn wrap(phi: i32, p: i32) -> i32 {
+    phi.rem_euclid(p)
+}
+
+/// Circular distance between two phases (shortest way round), in steps.
+pub fn distance(a: i32, b: i32, p: i32) -> i32 {
+    let d = (a - b).rem_euclid(p);
+    d.min(p - d)
+}
+
+/// Map a binary spin (+1/-1) to the canonical phase (0 or P/2).
+#[inline]
+pub fn spin_to_phase(spin: i8, p: i32) -> i32 {
+    if spin > 0 {
+        0
+    } else {
+        p / 2
+    }
+}
+
+/// Binarize a phase relative to a reference phase: +1 when closer to the
+/// reference than to its antiphase.  Ties (exactly 90 degrees away) snap
+/// to +1 deterministically.
+pub fn phase_to_spin(phi: i32, reference: i32, p: i32) -> i8 {
+    let d = distance(phi, reference, p);
+    let d_anti = distance(phi, wrap(reference + p / 2, p), p);
+    if d <= d_anti {
+        1
+    } else {
+        -1
+    }
+}
+
+/// Read out a whole state as spins relative to oscillator 0.
+pub fn state_to_spins(phases: &[i32], p: i32) -> Vec<i8> {
+    let r = *phases.first().unwrap_or(&0);
+    phases.iter().map(|&phi| phase_to_spin(phi, r, p)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const P: i32 = 16;
+
+    #[test]
+    fn amplitude_square_wave() {
+        // phi = 0: +1 for t in [0, 8), -1 for [8, 16).
+        for t in 0..8 {
+            assert_eq!(amplitude(0, t, P), 1);
+        }
+        for t in 8..16 {
+            assert_eq!(amplitude(0, t, P), -1);
+        }
+        // periodicity
+        assert_eq!(amplitude(0, 16, P), 1);
+        assert_eq!(amplitude(0, -1, P), -1);
+    }
+
+    #[test]
+    fn amplitude_phase_shift() {
+        for phi in 0..P {
+            for t in 0..(2 * P as i64) {
+                assert_eq!(amplitude(phi, t, P), amplitude(0, t + phi as i64, P));
+            }
+        }
+    }
+
+    #[test]
+    fn wrap_negative() {
+        assert_eq!(wrap(-1, P), 15);
+        assert_eq!(wrap(16, P), 0);
+        assert_eq!(wrap(-17, P), 15);
+    }
+
+    #[test]
+    fn distance_symmetric_and_bounded() {
+        for a in 0..P {
+            for b in 0..P {
+                let d = distance(a, b, P);
+                assert_eq!(d, distance(b, a, P));
+                assert!(d <= P / 2);
+            }
+        }
+        assert_eq!(distance(0, 15, P), 1);
+        assert_eq!(distance(0, 8, P), 8);
+    }
+
+    #[test]
+    fn spin_roundtrip() {
+        assert_eq!(spin_to_phase(1, P), 0);
+        assert_eq!(spin_to_phase(-1, P), 8);
+        assert_eq!(phase_to_spin(0, 0, P), 1);
+        assert_eq!(phase_to_spin(8, 0, P), -1);
+        // Near-canonical phases binarize correctly.
+        assert_eq!(phase_to_spin(1, 0, P), 1);
+        assert_eq!(phase_to_spin(7, 0, P), -1);
+        assert_eq!(phase_to_spin(15, 0, P), 1);
+    }
+
+    #[test]
+    fn state_to_spins_relative() {
+        // Global rotation must not change the readout.
+        let base = vec![0, 8, 0, 8];
+        let spins = state_to_spins(&base, P);
+        assert_eq!(spins, vec![1, -1, 1, -1]);
+        let rotated: Vec<i32> = base.iter().map(|x| wrap(x + 5, P)).collect();
+        assert_eq!(state_to_spins(&rotated, P), spins);
+    }
+}

@@ -1,0 +1,153 @@
+//! Coupling-weight matrix with the paper's 5-bit signed quantization.
+//!
+//! `W[i][j]` is the coupling strength *from oscillator j to oscillator i*
+//! (Eq. 2 of the paper).  The architectures allow asymmetric coupling, so
+//! all N^2 entries are stored (Table 1: memory cells cannot drop below
+//! N^2).  Quantized weights are `i8` in the configured two's-complement
+//! range; the f32 view handed to the PJRT engine is integer-valued.
+
+use crate::onn::config::NetworkConfig;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct WeightMatrix {
+    pub n: usize,
+    w: Vec<i8>, // row-major: w[i * n + j]
+}
+
+impl WeightMatrix {
+    pub fn zeros(n: usize) -> Self {
+        Self { n, w: vec![0; n * n] }
+    }
+
+    pub fn from_rows(rows: &[Vec<i8>]) -> Self {
+        let n = rows.len();
+        assert!(rows.iter().all(|r| r.len() == n), "non-square weights");
+        let mut w = Vec::with_capacity(n * n);
+        for r in rows {
+            w.extend_from_slice(r);
+        }
+        Self { n, w }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> i8 {
+        self.w[i * self.n + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: i8) {
+        self.w[i * self.n + j] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[i8] {
+        &self.w[i * self.n..(i + 1) * self.n]
+    }
+
+    pub fn as_slice(&self) -> &[i8] {
+        &self.w
+    }
+
+    /// Integer-valued f32 copy in the layout the AOT artifact expects.
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.w.iter().map(|&x| x as f32).collect()
+    }
+
+    /// Quantize a float matrix to the configured signed range, scaling so
+    /// the largest magnitude maps to the positive limit (the symmetric
+    /// scheme used when programming the FPGA weight memories).
+    pub fn quantize(master: &[f32], n: usize, cfg: &NetworkConfig) -> Self {
+        assert_eq!(master.len(), n * n);
+        let (lo, hi) = cfg.weight_range();
+        let max_abs = master.iter().fold(0f32, |m, x| m.max(x.abs()));
+        let scale = if max_abs > 0.0 {
+            hi as f32 / max_abs
+        } else {
+            0.0
+        };
+        let w = master
+            .iter()
+            .map(|&x| {
+                let q = (x * scale).round() as i32;
+                q.clamp(lo, hi) as i8
+            })
+            .collect();
+        Self { n, w }
+    }
+
+    /// True when W[i][j] == W[j][i] for all pairs.
+    pub fn is_symmetric(&self) -> bool {
+        for i in 0..self.n {
+            for j in (i + 1)..self.n {
+                if self.get(i, j) != self.get(j, i) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Largest |W| entry (used by resource models for width checks).
+    pub fn max_abs(&self) -> i32 {
+        self.w.iter().map(|&x| (x as i32).abs()).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(n: usize) -> NetworkConfig {
+        NetworkConfig::paper(n)
+    }
+
+    #[test]
+    fn index_layout() {
+        let mut w = WeightMatrix::zeros(3);
+        w.set(1, 2, 7);
+        assert_eq!(w.get(1, 2), 7);
+        assert_eq!(w.get(2, 1), 0);
+        assert_eq!(w.row(1), &[0, 0, 7]);
+    }
+
+    #[test]
+    fn quantize_maps_extremes() {
+        let master = vec![0.0, 1.0, -1.0, 0.5];
+        let w = WeightMatrix::quantize(&master, 2, &cfg(2));
+        assert_eq!(w.get(0, 1), 15); // +max -> +15
+        assert_eq!(w.get(1, 0), -15); // -max -> -15 (symmetric scale)
+        assert_eq!(w.get(1, 1), 8); // 0.5 -> round(7.5) = 8
+        assert_eq!(w.get(0, 0), 0);
+    }
+
+    #[test]
+    fn quantize_zero_matrix() {
+        let w = WeightMatrix::quantize(&[0.0; 4], 2, &cfg(2));
+        assert_eq!(w.as_slice(), &[0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn quantize_respects_range() {
+        let mut c = cfg(2);
+        c.weight_bits = 3; // [-4, 3]
+        let w = WeightMatrix::quantize(&[3.0, -3.0, 1.0, 0.2], 2, &c);
+        assert!(w.as_slice().iter().all(|&x| (-4..=3).contains(&(x as i32))));
+        assert_eq!(w.get(0, 0), 3);
+        assert_eq!(w.get(0, 1), -3);
+    }
+
+    #[test]
+    fn symmetry_check() {
+        let w = WeightMatrix::from_rows(&[vec![0, 1], vec![1, 0]]);
+        assert!(w.is_symmetric());
+        let w2 = WeightMatrix::from_rows(&[vec![0, 1], vec![2, 0]]);
+        assert!(!w2.is_symmetric());
+    }
+
+    #[test]
+    fn f32_view_is_integer_valued() {
+        let w = WeightMatrix::from_rows(&[vec![-16, 15], vec![3, 0]]);
+        let f = w.to_f32();
+        assert_eq!(f, vec![-16.0, 15.0, 3.0, 0.0]);
+    }
+}

@@ -1,0 +1,118 @@
+//! Edge detection and phase-difference measurement.
+//!
+//! The paper measures the phase difference between the reference signal
+//! (sign of the weighted sum) and the oscillator output with "an edge
+//! detector and a counter": the counter restarts on each rising edge of
+//! the reference; its value at the oscillator's own rising edge is the
+//! lag, which the update circuit adds to the oscillator phase.
+
+/// Rising-edge detector over a 1-bit signal.
+#[derive(Debug, Clone, Default)]
+pub struct RisingEdge {
+    last: bool,
+    primed: bool,
+}
+
+impl RisingEdge {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Feed the current level; true exactly on a 0 -> 1 transition.
+    /// The first sample only primes the detector.
+    pub fn update(&mut self, level: bool) -> bool {
+        let edge = self.primed && !self.last && level;
+        self.last = level;
+        self.primed = true;
+        edge
+    }
+}
+
+/// Counter of phase-update clocks since the last reference rising edge,
+/// wrapping at the oscillation period.  Invalid until the first edge.
+#[derive(Debug, Clone)]
+pub struct PhaseLagCounter {
+    p: i32,
+    count: i32,
+    valid: bool,
+}
+
+impl PhaseLagCounter {
+    pub fn new(p: i32) -> Self {
+        Self {
+            p,
+            count: 0,
+            valid: false,
+        }
+    }
+
+    /// Advance one clock; `ref_edge` marks a reference rising edge at
+    /// this clock (which restarts the count at zero).
+    pub fn tick(&mut self, ref_edge: bool) {
+        if ref_edge {
+            self.count = 0;
+            self.valid = true;
+        } else if self.valid {
+            self.count = (self.count + 1) % self.p;
+        }
+    }
+
+    /// Lag in clock ticks, if a reference edge has been seen.
+    pub fn lag(&self) -> Option<i32> {
+        self.valid.then_some(self.count)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detects_rising_only() {
+        let mut e = RisingEdge::new();
+        assert!(!e.update(false)); // prime
+        assert!(e.update(true)); // 0 -> 1
+        assert!(!e.update(true)); // steady high
+        assert!(!e.update(false)); // falling
+        assert!(e.update(true)); // rising again
+    }
+
+    #[test]
+    fn first_sample_never_edge() {
+        let mut e = RisingEdge::new();
+        assert!(!e.update(true), "power-on high is not an edge");
+        assert!(!e.update(true));
+    }
+
+    #[test]
+    fn lag_counts_from_ref_edge() {
+        let mut c = PhaseLagCounter::new(16);
+        assert_eq!(c.lag(), None);
+        c.tick(true); // ref edge at t0
+        assert_eq!(c.lag(), Some(0));
+        for want in 1..=5 {
+            c.tick(false);
+            assert_eq!(c.lag(), Some(want));
+        }
+        c.tick(true); // new edge restarts
+        assert_eq!(c.lag(), Some(0));
+    }
+
+    #[test]
+    fn lag_wraps_at_period() {
+        let mut c = PhaseLagCounter::new(4);
+        c.tick(true);
+        for _ in 0..4 {
+            c.tick(false);
+        }
+        assert_eq!(c.lag(), Some(0)); // 4 mod 4
+    }
+
+    #[test]
+    fn invalid_until_first_edge() {
+        let mut c = PhaseLagCounter::new(8);
+        c.tick(false);
+        c.tick(false);
+        assert_eq!(c.lag(), None);
+    }
+}

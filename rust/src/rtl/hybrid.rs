@@ -1,0 +1,419 @@
+//! Cycle-accurate simulator of the proposed **hybrid architecture**
+//! (paper section 3): one serial multiply-accumulate per oscillator,
+//! time-multiplexed over all N inputs on a fast clock domain, weights in
+//! addressable memory (BRAM), MAC inferable to a DSP slice.
+//!
+//! Timing (paper Fig. 6): the slow-clock rising edge at tick `t`
+//! triggers the serial accumulation whose result is consumed at tick
+//! `t+1`, where the phase updates.  Because the oscillator shift
+//! registers are clocked by the *slow* clock, the amplitudes sampled at
+//! edge `t` are exactly the values the recurrent design's combinational
+//! tree sees during cycle `t` — so a correctly synchronized hybrid
+//! design computes the *same* phase updates as the recurrent design,
+//! just one serial-latency later in wall-clock.  That is the paper's
+//! Table 6 finding ("the oscillator dynamics of the hybrid architecture
+//! are the same").
+//!
+//! The paper also observes run-to-run variance "because the signal that
+//! enables computation is not synchronized with the oscillators", which
+//! becomes visible only for small networks at high noise (3x3 / 50%).
+//! [`HybridOnn::with_stale_enable`] models that mis-synchronization: the
+//! enable fires one slow tick early, so sums lag the amplitudes by one
+//! tick and the reference waveforms shift accordingly.
+
+use crate::onn::config::NetworkConfig;
+use crate::onn::phase::wrap;
+use crate::onn::weights::WeightMatrix;
+use crate::rtl::edge::{PhaseLagCounter, RisingEdge};
+use crate::rtl::oscillator::ShiftRegOscillator;
+use crate::rtl::RtlSim;
+
+/// Fast-clock cycles of pipeline/synchronization overhead per serial
+/// sum, on top of the N accumulation cycles.  Chosen so the paper's
+/// headline frequency division reproduces: N=506 gives 512 fast cycles
+/// per slow cycle and f_osc = 50 MHz / (16 * 512) = 6.1 kHz (Table 5).
+pub const SYNC_OVERHEAD_CYCLES: usize = 6;
+
+/// The serial MAC datapath of Fig. 5: accumulator register + one
+/// multiplier whose operands are the BRAM-read weight and the muxed
+/// oscillator amplitude.  Modelled cycle-by-cycle for fidelity.
+#[derive(Debug, Clone, Default)]
+pub struct SerialMac {
+    acc: i32,
+    idx: usize,
+    busy: bool,
+    /// Total fast-clock cycles consumed over the simulation.
+    pub fast_cycles: u64,
+}
+
+impl SerialMac {
+    pub fn start(&mut self) {
+        self.acc = 0;
+        self.idx = 0;
+        self.busy = true;
+    }
+
+    /// One fast-clock cycle: read weight `w[idx]` from BRAM, mux
+    /// amplitude `amps[idx]`, accumulate. Returns the finished sum when
+    /// the counter reaches the end of the row.
+    pub fn cycle(&mut self, row: &[i8], amps: &[i32]) -> Option<i32> {
+        debug_assert!(self.busy, "cycle() before start()");
+        self.fast_cycles += 1;
+        let j = self.idx;
+        self.acc += if amps[j] > 0 {
+            row[j] as i32
+        } else {
+            -(row[j] as i32)
+        };
+        self.idx += 1;
+        if self.idx == row.len() {
+            self.busy = false;
+            self.fast_cycles += SYNC_OVERHEAD_CYCLES as u64;
+            Some(self.acc)
+        } else {
+            None
+        }
+    }
+
+    /// Run a complete serial accumulation (N + overhead fast cycles).
+    pub fn run(&mut self, row: &[i8], amps: &[i32]) -> i32 {
+        self.start();
+        loop {
+            if let Some(sum) = self.cycle(row, amps) {
+                return sum;
+            }
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct HybridOnn {
+    cfg: NetworkConfig,
+    w: WeightMatrix,
+    osc: Vec<ShiftRegOscillator>,
+    phases: Vec<i32>,
+    ref_edge: Vec<RisingEdge>,
+    own_edge: Vec<RisingEdge>,
+    lag: Vec<PhaseLagCounter>,
+    macs: Vec<SerialMac>,
+    /// Result of the most recent completed serial accumulation.
+    sums: Vec<i32>,
+    sums_primed: bool,
+    /// Mis-synchronized enable: sums lag the amplitudes by one tick.
+    stale_enable: bool,
+    amps: Vec<i32>,
+    pending: Vec<Option<i32>>,
+}
+
+impl HybridOnn {
+    pub fn new(cfg: NetworkConfig, w: WeightMatrix) -> Self {
+        assert_eq!(cfg.n, w.n);
+        let n = cfg.n;
+        let p = cfg.period();
+        Self {
+            cfg,
+            w,
+            osc: vec![ShiftRegOscillator::new(p); n],
+            phases: vec![0; n],
+            ref_edge: vec![RisingEdge::new(); n],
+            own_edge: vec![RisingEdge::new(); n],
+            lag: vec![PhaseLagCounter::new(p as i32); n],
+            macs: vec![SerialMac::default(); n],
+            sums: vec![0; n],
+            sums_primed: false,
+            stale_enable: false,
+            amps: vec![0; n],
+            pending: vec![None; n],
+        }
+    }
+
+    /// Variant with the computation-enable mis-synchronized by one slow
+    /// tick (see module docs): reproduces the paper's small-network
+    /// divergence and run-to-run variance.
+    pub fn with_stale_enable(cfg: NetworkConfig, w: WeightMatrix) -> Self {
+        let mut s = Self::new(cfg, w);
+        s.stale_enable = true;
+        s
+    }
+
+    pub fn weights(&self) -> &WeightMatrix {
+        &self.w
+    }
+
+    /// Fast-clock cycles each phase update costs: the serialization
+    /// factor of the slow clock domain (paper section 3).
+    pub fn fast_cycles_per_update(&self) -> usize {
+        self.cfg.n + SYNC_OVERHEAD_CYCLES
+    }
+
+    /// Total fast cycles burned so far across all MACs.
+    pub fn total_fast_cycles(&self) -> u64 {
+        self.macs.iter().map(|m| m.fast_cycles).sum()
+    }
+
+    fn serial_sums_from(&mut self, amps_snapshot: &[i32]) {
+        let n = self.cfg.n;
+        for i in 0..n {
+            self.sums[i] = self.macs[i].run(self.w.row(i), amps_snapshot);
+        }
+    }
+
+    fn reset_state(&mut self) {
+        let p = self.cfg.period();
+        for o in self.osc.iter_mut() {
+            *o = ShiftRegOscillator::new(p);
+        }
+        for e in self.ref_edge.iter_mut() {
+            *e = RisingEdge::new();
+        }
+        for e in self.own_edge.iter_mut() {
+            *e = RisingEdge::new();
+        }
+        for l in self.lag.iter_mut() {
+            *l = PhaseLagCounter::new(p as i32);
+        }
+        self.sums_primed = false;
+    }
+}
+
+impl RtlSim for HybridOnn {
+    fn config(&self) -> &NetworkConfig {
+        &self.cfg
+    }
+
+    fn set_phases(&mut self, phases: &[i32]) {
+        assert_eq!(phases.len(), self.cfg.n);
+        let p = self.cfg.period() as i32;
+        self.phases = phases.iter().map(|&x| wrap(x, p)).collect();
+        self.reset_state();
+    }
+
+    fn phases(&self) -> &[i32] {
+        &self.phases
+    }
+
+    fn tick(&mut self) {
+        let n = self.cfg.n;
+
+        for j in 0..n {
+            self.amps[j] = self.osc[j].amplitude(self.phases[j]);
+        }
+
+        // Serial accumulation for this slow cycle (Fig. 6): triggered at
+        // the slow edge, N + overhead fast cycles, result registered.
+        // Correctly synchronized, the snapshot is this cycle's
+        // amplitudes — the same values RA's combinational tree sees.
+        // With the enable mis-synchronized (stale_enable) the result
+        // still reflects the *previous* cycle when this one begins.
+        if self.stale_enable {
+            if !self.sums_primed {
+                let snapshot = self.amps.clone();
+                self.serial_sums_from(&snapshot);
+                self.sums_primed = true;
+            }
+        } else {
+            let snapshot = self.amps.clone();
+            self.serial_sums_from(&snapshot);
+            self.sums_primed = true;
+        }
+
+        for i in 0..n {
+            let ref_level = if self.sums[i] > 0 {
+                true
+            } else if self.sums[i] < 0 {
+                false
+            } else {
+                self.amps[i] > 0
+            };
+            let re = self.ref_edge[i].update(ref_level);
+            self.lag[i].tick(re);
+            let oe = self.own_edge[i].update(self.amps[i] > 0);
+            self.pending[i] = match (oe, self.lag[i].lag()) {
+                (true, Some(d)) => Some(d),
+                _ => None,
+            };
+        }
+
+        // Mis-synchronized enable: the computation kicked off now (from
+        // this cycle's amplitudes) is only consumed next cycle.
+        if self.stale_enable {
+            let snapshot = self.amps.clone();
+            self.serial_sums_from(&snapshot);
+        }
+
+        for o in self.osc.iter_mut() {
+            o.tick();
+        }
+        let p = self.cfg.period() as i32;
+        for i in 0..n {
+            if let Some(d) = self.pending[i].take() {
+                self.phases[i] = wrap(self.phases[i] + d, p);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::onn::learning::train_quantized;
+    use crate::onn::patterns::dataset_3x3;
+    use crate::onn::phase::{spin_to_phase, state_to_spins};
+    use crate::rtl::recurrent::RecurrentOnn;
+    use crate::util::rng::Rng;
+
+    fn cfg(n: usize) -> NetworkConfig {
+        NetworkConfig::paper(n)
+    }
+
+    #[test]
+    fn serial_mac_equals_dot_product() {
+        let mut rng = Rng::new(50);
+        let n = 23;
+        let row: Vec<i8> = (0..n).map(|_| rng.range_i64(-16, 16) as i8).collect();
+        let amps: Vec<i32> = (0..n).map(|_| rng.spin() as i32).collect();
+        let mut mac = SerialMac::default();
+        let got = mac.run(&row, &amps);
+        let want: i32 = row
+            .iter()
+            .zip(&amps)
+            .map(|(&w, &a)| w as i32 * a)
+            .sum();
+        assert_eq!(got, want);
+        assert_eq!(mac.fast_cycles, (n + SYNC_OVERHEAD_CYCLES) as u64);
+    }
+
+    #[test]
+    fn frequency_division_matches_table5() {
+        // N=506: 512 fast cycles per slow cycle; at 50 MHz fast clock the
+        // oscillation frequency is 50e6 / (16 * 512) = 6.104 kHz.
+        let sim = HybridOnn::new(cfg(506), WeightMatrix::zeros(506));
+        assert_eq!(sim.fast_cycles_per_update(), 512);
+        let f_osc = 50e6 / (16.0 * sim.fast_cycles_per_update() as f64);
+        assert!((f_osc - 6.1e3).abs() < 50.0, "f_osc = {f_osc}");
+    }
+
+    #[test]
+    fn zero_weights_hold_phases() {
+        let n = 4;
+        let mut sim = HybridOnn::new(cfg(n), WeightMatrix::zeros(n));
+        sim.set_phases(&[1, 6, 9, 14]);
+        let out = sim.run_to_settle(8);
+        assert_eq!(out.phases, vec![1, 6, 9, 14]);
+    }
+
+    #[test]
+    fn follower_aligns_to_pinned_leader() {
+        let mut w = WeightMatrix::zeros(2);
+        w.set(1, 0, 8);
+        let mut sim = HybridOnn::new(cfg(2), w);
+        sim.set_phases(&[4, 11]);
+        let out = sim.run_to_settle(20);
+        assert!(out.settled.is_some());
+        assert_eq!(out.phases, vec![4, 4]);
+    }
+
+    #[test]
+    fn stale_enable_follower_locks_one_tick_behind() {
+        // With the computation enable mis-synchronized by one slow tick
+        // (the paper's run-to-run variance source), a follower locks to
+        // the leader's waveform as sampled one tick earlier: a constant
+        // relative offset of -1 phase step.
+        let mut w = WeightMatrix::zeros(2);
+        w.set(1, 0, 8);
+        let mut sim = HybridOnn::with_stale_enable(cfg(2), w);
+        sim.set_phases(&[4, 11]);
+        let out = sim.run_to_settle(20);
+        assert!(out.settled.is_some());
+        assert_eq!(out.phases[0], 4, "free-running leader must not move");
+        assert_eq!(
+            (out.phases[1] - out.phases[0]).rem_euclid(16),
+            15,
+            "follower one stale tick behind: {:?}",
+            out.phases
+        );
+    }
+
+    #[test]
+    fn synchronized_hybrid_identical_to_recurrent() {
+        // Correctly synchronized, the two architectures compute the same
+        // phase updates (Table 6's finding) — bit-identical here.
+        let mut rng = Rng::new(123);
+        let n = 7;
+        let mut w = WeightMatrix::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                w.set(i, j, rng.range_i64(-8, 9) as i8);
+            }
+        }
+        let mut ra = RecurrentOnn::new(cfg(n), w.clone());
+        let mut ha = HybridOnn::new(cfg(n), w);
+        for _ in 0..10 {
+            let init: Vec<i32> =
+                (0..n).map(|_| rng.range_i64(0, 16) as i32).collect();
+            ra.set_phases(&init);
+            ha.set_phases(&init);
+            let (oa, ob) = (ra.run_to_settle(40), ha.run_to_settle(40));
+            assert_eq!(oa.phases, ob.phases);
+            assert_eq!(oa.settled, ob.settled);
+        }
+    }
+
+    #[test]
+    fn stored_pattern_is_stable() {
+        let ds = dataset_3x3();
+        let pats: Vec<Vec<i8>> = ds.patterns.iter().map(|p| p.spins.clone()).collect();
+        let w = train_quantized(&pats, &cfg(9));
+        let mut sim = HybridOnn::new(cfg(9), w);
+        for pat in &pats {
+            let phases: Vec<i32> = pat.iter().map(|&s| spin_to_phase(s, 16)).collect();
+            sim.set_phases(&phases);
+            let out = sim.run_to_settle(30);
+            assert!(out.settled.is_some());
+            let spins = state_to_spins(&out.phases, 16);
+            let rel: Vec<i8> = pat.iter().map(|&s| s * pat[0]).collect();
+            assert_eq!(spins, rel, "relative pattern moved");
+        }
+    }
+
+    #[test]
+    fn hybrid_close_to_recurrent_on_retrieval() {
+        // Table 6's claim: the two architectures retrieve (nearly)
+        // identically.  Run the same 3x3 corruption trials through both
+        // RTL simulators and require closely matching accuracy.
+        let ds = dataset_3x3();
+        let pats: Vec<Vec<i8>> = ds.patterns.iter().map(|p| p.spins.clone()).collect();
+        let w = train_quantized(&pats, &cfg(9));
+        let mut ra = RecurrentOnn::new(cfg(9), w.clone());
+        let mut ha = HybridOnn::new(cfg(9), w);
+        let mut rng = Rng::new(99);
+        let trials = 60;
+        let (mut ok_ra, mut ok_ha) = (0i32, 0i32);
+        for t in 0..trials {
+            let target = &ds.patterns[t % 2];
+            let corrupted = target.corrupt(2, &mut rng);
+            let phases: Vec<i32> = corrupted
+                .spins
+                .iter()
+                .map(|&s| spin_to_phase(s, 16))
+                .collect();
+            ra.set_phases(&phases);
+            ha.set_phases(&phases);
+            let (oa, ob) = (ra.run_to_settle(64), ha.run_to_settle(64));
+            if oa.settled.is_some()
+                && target.matches_up_to_inversion(&state_to_spins(&oa.phases, 16))
+            {
+                ok_ra += 1;
+            }
+            if ob.settled.is_some()
+                && target.matches_up_to_inversion(&state_to_spins(&ob.phases, 16))
+            {
+                ok_ha += 1;
+            }
+        }
+        assert!(
+            (ok_ra - ok_ha).abs() <= trials as i32 / 5,
+            "architectures diverged: RA {ok_ra} vs HA {ok_ha} of {trials}"
+        );
+    }
+}

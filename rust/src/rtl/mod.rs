@@ -1,0 +1,94 @@
+//! Cycle-accurate simulators of the paper's two digital architectures.
+//!
+//! These stand in for the paper's Verilog/FPGA implementation: every
+//! register-transfer-level mechanism the paper describes is modelled at
+//! clock-edge granularity — the circular-shift-register phase-controlled
+//! oscillator (Fig. 3), the reference-signal generation from the sign of
+//! the weighted sum, the edge detector + counter phase measurement, the
+//! parallel adder tree of the recurrent design (Fig. 4) and the serial
+//! MAC + two clock domains of the hybrid design (Figs. 5-6).
+//!
+//! The recurrent and hybrid simulators differ in exactly the way the
+//! circuits differ: the recurrent design recomputes the weighted sum
+//! combinationally *every* phase-update clock, while the hybrid design
+//! serializes the sum over N fast-clock cycles during the previous
+//! slow-clock period — so its reference signal is derived from
+//! amplitudes that are one phase-update tick stale.
+
+pub mod edge;
+pub mod hybrid;
+pub mod oscillator;
+pub mod recurrent;
+pub mod trace;
+
+use crate::onn::config::NetworkConfig;
+
+/// Result of running an RTL simulation until the phases stop changing.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RtlOutcome {
+    pub phases: Vec<i32>,
+    /// Oscillation periods elapsed until the first full period with no
+    /// phase change, or None on timeout.
+    pub settled: Option<usize>,
+    /// Total phase-update clock ticks simulated.
+    pub ticks: u64,
+}
+
+/// Common interface over the two architecture simulators.
+pub trait RtlSim {
+    fn config(&self) -> &NetworkConfig;
+    /// Load phases (mux selects) as the initial condition.
+    fn set_phases(&mut self, phases: &[i32]);
+    fn phases(&self) -> &[i32];
+    /// Advance one phase-update clock tick.
+    fn tick(&mut self);
+    /// Run whole periods until settled (no *relative* phase change
+    /// across a full period) or `max_periods` elapsed.
+    ///
+    /// Two hardware realities shape this check:
+    /// * Period 0 is warm-up — the edge detectors and lag counters only
+    ///   become valid after the first reference rising edge, so an
+    ///   unchanged period 0 does not count as settled.
+    /// * Settling is judged on phases *relative to oscillator 0*, the
+    ///   paper's own readout ("measuring the final steady-state phases
+    ///   ... in relation to each other").  The hybrid design's
+    ///   serialized sum is one tick stale, which manifests as a slow
+    ///   uniform rotation of all phases — physically irrelevant, and
+    ///   invisible to a relative-phase check.
+    fn run_to_settle(&mut self, max_periods: usize) -> RtlOutcome {
+        let p = self.config().period() ;
+        let pi = p as i32;
+        let relative = |phases: &[i32]| -> Vec<i32> {
+            let r = *phases.first().unwrap_or(&0);
+            phases
+                .iter()
+                .map(|&x| (x - r).rem_euclid(pi))
+                .collect()
+        };
+        let mut ticks = 0u64;
+        let mut prev_raw = self.phases().to_vec();
+        let mut prev_rel = relative(&prev_raw);
+        for period in 0..max_periods {
+            for _ in 0..p {
+                self.tick();
+                ticks += 1;
+            }
+            let rel = relative(self.phases());
+            if period >= 1 && rel == prev_rel {
+                return RtlOutcome {
+                    phases: prev_raw,
+                    settled: Some(period),
+                    ticks,
+                };
+            }
+            prev_rel = rel;
+            prev_raw.clear();
+            prev_raw.extend_from_slice(self.phases());
+        }
+        RtlOutcome {
+            phases: prev_raw,
+            settled: None,
+            ticks,
+        }
+    }
+}

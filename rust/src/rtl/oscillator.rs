@@ -1,0 +1,122 @@
+//! Circular shift-register phase-controlled oscillator (paper Fig. 3).
+//!
+//! `2^phase_bits` registers rotate one position left per phase-update
+//! clock; the first half initialize to 1 and the second half to 0, so
+//! every tap carries the same square wave shifted by one extra clock.
+//! Selecting tap `phi` through the mux realizes a phase shift of `phi`
+//! steps — changing the mux select is how the phase update circuit
+//! shifts the oscillator (Table 3 of the paper shows the state
+//! evolution this module reproduces).
+
+/// One phase-controlled oscillator.
+#[derive(Debug, Clone)]
+pub struct ShiftRegOscillator {
+    regs: Vec<bool>,
+}
+
+impl ShiftRegOscillator {
+    /// `p` registers (must be even); first half 1s, second half 0s.
+    pub fn new(p: usize) -> Self {
+        assert!(p >= 2 && p % 2 == 0, "period must be even, got {p}");
+        let regs = (0..p).map(|i| i < p / 2).collect();
+        Self { regs }
+    }
+
+    pub fn len(&self) -> usize {
+        self.regs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.regs.is_empty()
+    }
+
+    /// Shift one position left (register i takes register i+1's value,
+    /// the last wraps around to the first's old value).
+    pub fn tick(&mut self) {
+        self.regs.rotate_left(1);
+    }
+
+    /// Mux output at tap `phi` as a logic level (true = high).
+    pub fn output(&self, phi: i32) -> bool {
+        self.regs[phi.rem_euclid(self.regs.len() as i32) as usize]
+    }
+
+    /// Output as a +1/-1 amplitude.
+    pub fn amplitude(&self, phi: i32) -> i32 {
+        if self.output(phi) {
+            1
+        } else {
+            -1
+        }
+    }
+
+    /// Raw register row (for Table-3-style traces).
+    pub fn state(&self) -> Vec<u8> {
+        self.regs.iter().map(|&b| b as u8).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::onn::phase::amplitude as wave_amplitude;
+
+    #[test]
+    fn table3_state_evolution() {
+        // Paper Table 3 (n_phase_bits = 2): rows are time steps.
+        let mut osc = ShiftRegOscillator::new(4);
+        let expect = [
+            [1, 1, 0, 0],
+            [1, 0, 0, 1],
+            [0, 0, 1, 1],
+            [0, 1, 1, 0],
+            [1, 1, 0, 0], // one full period
+        ];
+        for (t, row) in expect.iter().enumerate() {
+            assert_eq!(osc.state(), row.to_vec(), "t={t}");
+            osc.tick();
+        }
+    }
+
+    #[test]
+    fn tap_equals_shifted_wave() {
+        // Column phi of Table 3 is the base square wave advanced by phi
+        // clocks — the algebraic model in onn::phase.
+        let p = 16;
+        let mut osc = ShiftRegOscillator::new(p);
+        for t in 0..(2 * p as i64) {
+            for phi in 0..p as i32 {
+                assert_eq!(
+                    osc.amplitude(phi),
+                    wave_amplitude(phi, t, p as i32),
+                    "phi={phi} t={t}"
+                );
+            }
+            osc.tick();
+        }
+    }
+
+    #[test]
+    fn period_matches_eq3() {
+        // Eq. (3): the oscillator repeats after 2^phase_bits clocks.
+        let mut osc = ShiftRegOscillator::new(8);
+        let init = osc.state();
+        for _ in 0..8 {
+            osc.tick();
+        }
+        assert_eq!(osc.state(), init);
+    }
+
+    #[test]
+    fn duty_cycle_half() {
+        let osc = ShiftRegOscillator::new(16);
+        let ones = osc.state().iter().filter(|&&x| x == 1).count();
+        assert_eq!(ones, 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "period must be even")]
+    fn odd_period_rejected() {
+        ShiftRegOscillator::new(3);
+    }
+}

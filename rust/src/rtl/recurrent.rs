@@ -1,0 +1,265 @@
+//! Cycle-accurate simulator of the **recurrent architecture** (prior
+//! art, paper section 2.3): every oscillator owns a fully combinational
+//! arithmetic circuit (Fig. 4) that recomputes the weighted sum of all
+//! oscillator outputs every phase-update clock.  Hardware cost of that
+//! adder tree is what scales quadratically (Fig. 9/10).
+
+use crate::onn::config::NetworkConfig;
+use crate::onn::phase::wrap;
+use crate::onn::weights::WeightMatrix;
+use crate::rtl::edge::{PhaseLagCounter, RisingEdge};
+use crate::rtl::oscillator::ShiftRegOscillator;
+use crate::rtl::RtlSim;
+
+#[derive(Debug, Clone)]
+pub struct RecurrentOnn {
+    cfg: NetworkConfig,
+    w: WeightMatrix,
+    osc: Vec<ShiftRegOscillator>,
+    phases: Vec<i32>,
+    ref_edge: Vec<RisingEdge>,
+    own_edge: Vec<RisingEdge>,
+    lag: Vec<PhaseLagCounter>,
+    // scratch
+    amps: Vec<i32>,
+    sums: Vec<i32>,
+    pending: Vec<Option<i32>>,
+}
+
+impl RecurrentOnn {
+    pub fn new(cfg: NetworkConfig, w: WeightMatrix) -> Self {
+        assert_eq!(cfg.n, w.n);
+        let n = cfg.n;
+        let p = cfg.period();
+        Self {
+            cfg,
+            w,
+            osc: vec![ShiftRegOscillator::new(p); n],
+            phases: vec![0; n],
+            ref_edge: vec![RisingEdge::new(); n],
+            own_edge: vec![RisingEdge::new(); n],
+            lag: vec![PhaseLagCounter::new(p as i32); n],
+            amps: vec![0; n],
+            sums: vec![0; n],
+            pending: vec![None; n],
+        }
+    }
+
+    pub fn weights(&self) -> &WeightMatrix {
+        &self.w
+    }
+
+    /// The combinational weighted-sum block (adder tree of Fig. 4):
+    /// sign-selected weights accumulated over all inputs.
+    fn combinational_sums(&mut self) {
+        let n = self.cfg.n;
+        for i in 0..n {
+            let row = self.w.row(i);
+            let mut acc = 0i32;
+            for j in 0..n {
+                // "multiplication" is the +-W mux of the paper
+                acc += if self.amps[j] > 0 {
+                    row[j] as i32
+                } else {
+                    -(row[j] as i32)
+                };
+            }
+            self.sums[i] = acc;
+        }
+    }
+
+    fn reset_state(&mut self) {
+        let p = self.cfg.period();
+        for o in self.osc.iter_mut() {
+            *o = ShiftRegOscillator::new(p);
+        }
+        for e in self.ref_edge.iter_mut() {
+            *e = RisingEdge::new();
+        }
+        for e in self.own_edge.iter_mut() {
+            *e = RisingEdge::new();
+        }
+        for l in self.lag.iter_mut() {
+            *l = PhaseLagCounter::new(p as i32);
+        }
+    }
+}
+
+impl RtlSim for RecurrentOnn {
+    fn config(&self) -> &NetworkConfig {
+        &self.cfg
+    }
+
+    fn set_phases(&mut self, phases: &[i32]) {
+        assert_eq!(phases.len(), self.cfg.n);
+        let p = self.cfg.period() as i32;
+        self.phases = phases.iter().map(|&x| wrap(x, p)).collect();
+        self.reset_state();
+    }
+
+    fn phases(&self) -> &[i32] {
+        &self.phases
+    }
+
+    fn tick(&mut self) {
+        let n = self.cfg.n;
+
+        // -- combinational stage (everything reads current state) --
+        for j in 0..n {
+            self.amps[j] = self.osc[j].amplitude(self.phases[j]);
+        }
+        self.combinational_sums();
+
+        for i in 0..n {
+            // Reference signal: sign of the weighted sum; exact zero
+            // follows the oscillator's own amplitude (paper section 2.3).
+            let ref_level = if self.sums[i] > 0 {
+                true
+            } else if self.sums[i] < 0 {
+                false
+            } else {
+                self.amps[i] > 0
+            };
+            let re = self.ref_edge[i].update(ref_level);
+            self.lag[i].tick(re);
+            let oe = self.own_edge[i].update(self.amps[i] > 0);
+            self.pending[i] = match (oe, self.lag[i].lag()) {
+                (true, Some(d)) => Some(d),
+                _ => None,
+            };
+        }
+
+        // -- sequential stage (clock edge) --
+        for o in self.osc.iter_mut() {
+            o.tick();
+        }
+        let p = self.cfg.period() as i32;
+        for i in 0..n {
+            if let Some(d) = self.pending[i].take() {
+                self.phases[i] = wrap(self.phases[i] + d, p);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::onn::learning::train_quantized;
+    use crate::onn::patterns::dataset_3x3;
+    use crate::onn::phase::{spin_to_phase, state_to_spins};
+    use crate::util::rng::Rng;
+
+    fn cfg(n: usize) -> NetworkConfig {
+        NetworkConfig::paper(n)
+    }
+
+    #[test]
+    fn zero_weights_hold_phases() {
+        let n = 5;
+        let mut sim = RecurrentOnn::new(cfg(n), WeightMatrix::zeros(n));
+        sim.set_phases(&[0, 3, 8, 12, 15]);
+        let out = sim.run_to_settle(8);
+        assert_eq!(out.phases, vec![0, 3, 8, 12, 15]);
+        assert_eq!(out.settled, Some(1), "period 0 is warm-up");
+    }
+
+    #[test]
+    fn follower_aligns_to_pinned_leader() {
+        // osc1 couples positively to osc0 only; osc0 sees nothing (zero
+        // row) and free-runs.  osc1 must align to osc0's phase.
+        let mut w = WeightMatrix::zeros(2);
+        w.set(1, 0, 8);
+        let mut sim = RecurrentOnn::new(cfg(2), w);
+        sim.set_phases(&[4, 11]);
+        let out = sim.run_to_settle(20);
+        assert!(out.settled.is_some());
+        assert_eq!(out.phases[0], 4, "free-running leader must not move");
+        assert_eq!(out.phases[1], 4, "follower must lock to leader");
+    }
+
+    #[test]
+    fn antiferro_follower_locks_antiphase() {
+        let mut w = WeightMatrix::zeros(2);
+        w.set(1, 0, -8);
+        let mut sim = RecurrentOnn::new(cfg(2), w);
+        sim.set_phases(&[2, 3]);
+        let out = sim.run_to_settle(20);
+        assert!(out.settled.is_some());
+        assert_eq!(out.phases[0], 2);
+        assert_eq!(
+            (out.phases[1] - out.phases[0]).rem_euclid(16),
+            8,
+            "follower must be 180 degrees out of phase"
+        );
+    }
+
+    #[test]
+    fn stored_pattern_is_stable() {
+        let ds = dataset_3x3();
+        let pats: Vec<Vec<i8>> = ds.patterns.iter().map(|p| p.spins.clone()).collect();
+        let w = train_quantized(&pats, &cfg(9));
+        let mut sim = RecurrentOnn::new(cfg(9), w);
+        for pat in &pats {
+            let phases: Vec<i32> = pat.iter().map(|&s| spin_to_phase(s, 16)).collect();
+            sim.set_phases(&phases);
+            let out = sim.run_to_settle(30);
+            assert!(out.settled.is_some(), "did not settle on stored pattern");
+            let spins = state_to_spins(&out.phases, 16);
+            let rel: Vec<i8> = pat.iter().map(|&s| s * pat[0]).collect();
+            assert_eq!(spins, rel, "stored pattern moved");
+        }
+    }
+
+    #[test]
+    fn retrieves_corrupted_3x3_pattern() {
+        let ds = dataset_3x3();
+        let pats: Vec<Vec<i8>> = ds.patterns.iter().map(|p| p.spins.clone()).collect();
+        let w = train_quantized(&pats, &cfg(9));
+        let mut sim = RecurrentOnn::new(cfg(9), w);
+        let mut rng = Rng::new(77);
+        let mut correct = 0;
+        let trials = 40;
+        for t in 0..trials {
+            let target = &ds.patterns[t % 2];
+            let corrupted = target.corrupt(1, &mut rng);
+            let phases: Vec<i32> = corrupted
+                .spins
+                .iter()
+                .map(|&s| spin_to_phase(s, 16))
+                .collect();
+            sim.set_phases(&phases);
+            let out = sim.run_to_settle(64);
+            if out.settled.is_some() {
+                let spins = state_to_spins(&out.phases, 16);
+                if target.matches_up_to_inversion(&spins) {
+                    correct += 1;
+                }
+            }
+        }
+        assert!(
+            correct >= trials * 8 / 10,
+            "retrieval too weak: {correct}/{trials}"
+        );
+    }
+
+    #[test]
+    fn set_phases_resets_detectors() {
+        let n = 3;
+        let mut w = WeightMatrix::zeros(n);
+        w.set(1, 0, 5);
+        let mut sim = RecurrentOnn::new(cfg(n), w);
+        sim.set_phases(&[0, 4, 8]);
+        let _ = sim.run_to_settle(10);
+        // Re-arm with a fresh initial condition; behaviour must be
+        // identical to a fresh simulator.
+        sim.set_phases(&[0, 4, 8]);
+        let a = sim.run_to_settle(10);
+        let mut w2 = WeightMatrix::zeros(n);
+        w2.set(1, 0, 5);
+        let mut fresh = RecurrentOnn::new(cfg(n), w2);
+        fresh.set_phases(&[0, 4, 8]);
+        let b = fresh.run_to_settle(10);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,97 @@
+//! Waveform trace capture for the RTL simulators (a minimal VCD-style
+//! recorder rendered as ASCII), used by tests and debugging sessions.
+
+/// Records named digital/integer signals over simulation ticks.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    names: Vec<String>,
+    samples: Vec<Vec<i32>>, // samples[tick][signal]
+}
+
+impl Trace {
+    pub fn new(names: &[&str]) -> Self {
+        Self {
+            names: names.iter().map(|s| s.to_string()).collect(),
+            samples: Vec::new(),
+        }
+    }
+
+    pub fn record(&mut self, values: &[i32]) {
+        assert_eq!(values.len(), self.names.len(), "trace width mismatch");
+        self.samples.push(values.to_vec());
+    }
+
+    pub fn ticks(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn signal(&self, name: &str) -> Option<Vec<i32>> {
+        let idx = self.names.iter().position(|n| n == name)?;
+        Some(self.samples.iter().map(|row| row[idx]).collect())
+    }
+
+    /// ASCII waveform: 0/1 signals drawn as _ and #, wider integers as
+    /// digit streams (mod 10).  One row per signal.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let width = self.names.iter().map(|n| n.len()).max().unwrap_or(0);
+        for (i, name) in self.names.iter().enumerate() {
+            out.push_str(&format!("{name:>width$} "));
+            let vals: Vec<i32> = self.samples.iter().map(|r| r[i]).collect();
+            let binary = vals.iter().all(|&v| v == 0 || v == 1);
+            for v in vals {
+                if binary {
+                    out.push(if v == 1 { '#' } else { '_' });
+                } else {
+                    out.push(
+                        char::from_digit((v.rem_euclid(10)) as u32, 10).unwrap_or('?'),
+                    );
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_reads_back() {
+        let mut t = Trace::new(&["clk", "phase"]);
+        t.record(&[0, 3]);
+        t.record(&[1, 4]);
+        assert_eq!(t.ticks(), 2);
+        assert_eq!(t.signal("clk"), Some(vec![0, 1]));
+        assert_eq!(t.signal("phase"), Some(vec![3, 4]));
+        assert_eq!(t.signal("nope"), None);
+    }
+
+    #[test]
+    fn renders_binary_as_waveform() {
+        let mut t = Trace::new(&["s"]);
+        for v in [0, 1, 1, 0] {
+            t.record(&[v]);
+        }
+        let r = t.render();
+        assert!(r.contains("_##_"), "{r}");
+    }
+
+    #[test]
+    fn renders_integers_as_digits() {
+        let mut t = Trace::new(&["p"]);
+        for v in [3, 12, 5] {
+            t.record(&[v]);
+        }
+        assert!(t.render().contains("325"));
+    }
+
+    #[test]
+    #[should_panic(expected = "width mismatch")]
+    fn rejects_wrong_width() {
+        let mut t = Trace::new(&["a"]);
+        t.record(&[1, 2]);
+    }
+}

@@ -1,0 +1,160 @@
+//! AOT artifact discovery: the manifest written by `python/compile/aot.py`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// One lowered HLO-text artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactInfo {
+    pub kind: String, // "chunk" | "step"
+    pub file: PathBuf,
+    pub n: usize,
+    pub batch: usize,
+    pub phase_bits: u32,
+    pub weight_bits: u32,
+    pub p: usize,
+    pub chunk: usize,
+    pub sha256: String,
+}
+
+/// The parsed artifact manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactInfo>,
+}
+
+/// Default artifact directory: `$ONN_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var_os("ONN_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let v = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let format = v
+            .get("format")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("manifest missing 'format'"))?;
+        if format != "hlo-text" {
+            return Err(anyhow!("unsupported artifact format '{format}'"));
+        }
+        let arts = v
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for (i, a) in arts.iter().enumerate() {
+            let field = |k: &str| {
+                a.get(k)
+                    .ok_or_else(|| anyhow!("artifact[{i}] missing '{k}'"))
+            };
+            artifacts.push(ArtifactInfo {
+                kind: field("kind")?
+                    .as_str()
+                    .ok_or_else(|| anyhow!("artifact[{i}].kind not a string"))?
+                    .to_string(),
+                file: dir.join(
+                    field("file")?
+                        .as_str()
+                        .ok_or_else(|| anyhow!("artifact[{i}].file not a string"))?,
+                ),
+                n: field("n")?.as_usize().ok_or_else(|| anyhow!("bad n"))?,
+                batch: field("batch")?
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("bad batch"))?,
+                phase_bits: field("phase_bits")?
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("bad phase_bits"))? as u32,
+                weight_bits: field("weight_bits")?
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("bad weight_bits"))? as u32,
+                p: field("p")?.as_usize().ok_or_else(|| anyhow!("bad p"))?,
+                chunk: field("chunk")?
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("bad chunk"))?,
+                sha256: field("sha256")?
+                    .as_str()
+                    .unwrap_or_default()
+                    .to_string(),
+            });
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            artifacts,
+        })
+    }
+
+    /// Find the chunk artifact for a network size.
+    pub fn chunk_for(&self, n: usize) -> Option<&ArtifactInfo> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == "chunk" && a.n == n)
+    }
+
+    /// Network sizes with chunk artifacts, ascending.
+    pub fn chunk_sizes(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == "chunk")
+            .map(|a| a.n)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text", "version": 1,
+      "artifacts": [
+        {"kind": "chunk", "file": "onn_n9_b64_p16_c16_chunk.hlo.txt",
+         "n": 9, "batch": 64, "phase_bits": 4, "weight_bits": 5,
+         "p": 16, "chunk": 16, "sha256": "aa"},
+        {"kind": "step", "file": "onn_n8_b4_p16_c16_step.hlo.txt",
+         "n": 8, "batch": 4, "phase_bits": 4, "weight_bits": 5,
+         "p": 16, "chunk": 1, "sha256": "bb"}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/x"), SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let c = m.chunk_for(9).unwrap();
+        assert_eq!(c.batch, 64);
+        assert_eq!(c.chunk, 16);
+        assert_eq!(c.file, PathBuf::from("/x/onn_n9_b64_p16_c16_chunk.hlo.txt"));
+        assert!(m.chunk_for(99).is_none());
+        assert_eq!(m.chunk_sizes(), vec![9]);
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let bad = SAMPLE.replace("hlo-text", "proto");
+        assert!(Manifest::parse(Path::new("/x"), &bad).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        let bad = r#"{"format":"hlo-text","artifacts":[{"kind":"chunk"}]}"#;
+        assert!(Manifest::parse(Path::new("/x"), bad).is_err());
+    }
+}

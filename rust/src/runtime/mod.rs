@@ -1,0 +1,41 @@
+//! Execution engines for the batched functional dynamics.
+//!
+//! The production path loads the HLO-text artifacts that
+//! `python/compile/aot.py` lowered from the JAX/Pallas model and runs
+//! them on the PJRT CPU client ([`engine::PjrtEngine`]).  The native
+//! engine ([`native::NativeEngine`]) implements the same [`ChunkEngine`]
+//! trait on top of `onn::dynamics` — bit-exact with the artifacts — and
+//! serves as the fallback when artifacts are absent plus as the
+//! cross-validation oracle in the integration tests.
+
+pub mod artifact;
+pub mod engine;
+pub mod native;
+pub mod sharded;
+
+use anyhow::Result;
+
+/// A batched chunk executor: the contract of one AOT artifact call.
+///
+/// `phases` is `[batch * n]` row-major, `settled[b]` is the absolute
+/// period index of trial b's first fixed point or -1, `period0` the
+/// absolute period index at the chunk start.  Implementations advance
+/// every trial by exactly `chunk_len()` periods.
+///
+/// Deliberately NOT `Send`: the PJRT handles are thread-affine, so the
+/// coordinator constructs each engine *inside* its worker thread via an
+/// [`EngineFactory`].
+pub trait ChunkEngine {
+    fn n(&self) -> usize;
+    fn batch(&self) -> usize;
+    fn chunk_len(&self) -> usize;
+    /// Install the weight matrix used by subsequent `run_chunk` calls.
+    fn set_weights(&mut self, w_f32: &[f32]) -> Result<()>;
+    fn run_chunk(&mut self, phases: &mut [i32], settled: &mut [i32], period0: i32) -> Result<()>;
+    /// Human-readable engine kind ("pjrt" / "native").
+    fn kind(&self) -> &'static str;
+}
+
+/// Constructs an engine inside a worker thread (PJRT handles are
+/// thread-affine, so they cannot cross threads after construction).
+pub type EngineFactory = Box<dyn FnOnce() -> Result<Box<dyn ChunkEngine>> + Send>;

@@ -1,0 +1,122 @@
+//! Native fallback engine: the same [`ChunkEngine`] contract implemented
+//! by the in-process functional dynamics (`onn::dynamics`).  Bit-exact
+//! with the PJRT artifacts (integer math everywhere) — the integration
+//! tests cross-validate the two engines trial-for-trial.
+
+use anyhow::{anyhow, Result};
+
+use crate::onn::config::NetworkConfig;
+use crate::onn::dynamics::FunctionalEngine;
+use crate::onn::weights::WeightMatrix;
+use crate::runtime::ChunkEngine;
+
+pub struct NativeEngine {
+    cfg: NetworkConfig,
+    batch: usize,
+    chunk: usize,
+    inner: Option<FunctionalEngine>,
+}
+
+impl NativeEngine {
+    pub fn new(cfg: NetworkConfig, batch: usize, chunk: usize) -> Self {
+        Self {
+            cfg,
+            batch,
+            chunk,
+            inner: None,
+        }
+    }
+}
+
+impl ChunkEngine for NativeEngine {
+    fn n(&self) -> usize {
+        self.cfg.n
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn chunk_len(&self) -> usize {
+        self.chunk
+    }
+
+    fn set_weights(&mut self, w_f32: &[f32]) -> Result<()> {
+        let n = self.cfg.n;
+        if w_f32.len() != n * n {
+            return Err(anyhow!("weights len {} != {}", w_f32.len(), n * n));
+        }
+        let mut w = WeightMatrix::zeros(n);
+        let (lo, hi) = self.cfg.weight_range();
+        for i in 0..n {
+            for j in 0..n {
+                let v = w_f32[i * n + j];
+                if v.fract() != 0.0 || v < lo as f32 || v > hi as f32 {
+                    return Err(anyhow!("weight [{i}][{j}] = {v} outside {lo}..={hi}"));
+                }
+                w.set(i, j, v as i8);
+            }
+        }
+        self.inner = Some(FunctionalEngine::new(self.cfg, w));
+        Ok(())
+    }
+
+    fn run_chunk(&mut self, phases: &mut [i32], settled: &mut [i32], period0: i32) -> Result<()> {
+        let eng = self
+            .inner
+            .as_mut()
+            .ok_or_else(|| anyhow!("set_weights not called"))?;
+        if phases.len() != self.batch * self.cfg.n || settled.len() != self.batch {
+            return Err(anyhow!("shape mismatch"));
+        }
+        eng.run_chunk(phases, settled, period0, self.chunk);
+        Ok(())
+    }
+
+    fn kind(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::engine::run_to_settle_batch;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn rejects_out_of_range_weights() {
+        let mut e = NativeEngine::new(NetworkConfig::paper(2), 1, 4);
+        assert!(e.set_weights(&[0.0, 99.0, 0.0, 0.0]).is_err());
+        assert!(e.set_weights(&[0.5, 0.0, 0.0, 0.0]).is_err());
+        assert!(e.set_weights(&[0.0, 15.0, -16.0, 0.0]).is_ok());
+    }
+
+    #[test]
+    fn run_requires_weights() {
+        let mut e = NativeEngine::new(NetworkConfig::paper(2), 1, 4);
+        let mut ph = vec![0, 0];
+        let mut st = vec![-1];
+        assert!(e.run_chunk(&mut ph, &mut st, 0).is_err());
+    }
+
+    #[test]
+    fn settle_batch_drives_chunks() {
+        // Ferro 3-net: everything snaps to consensus quickly.
+        let n = 3;
+        let mut e = NativeEngine::new(NetworkConfig::paper(n), 4, 4);
+        let w = [0., 8., 8., 8., 0., 8., 8., 8., 0.];
+        e.set_weights(&w).unwrap();
+        let mut rng = Rng::new(5);
+        let mut phases: Vec<i32> = (0..4 * n).map(|_| rng.range_i64(0, 16) as i32).collect();
+        let settled = run_to_settle_batch(&mut e, &mut phases, 64).unwrap();
+        for (b, s) in settled.iter().enumerate() {
+            assert!(s.is_some(), "trial {b} did not settle");
+            let ph = &phases[b * n..(b + 1) * n];
+            assert!(
+                ph.iter().all(|&x| x == ph[0]),
+                "trial {b} no consensus: {ph:?}"
+            );
+        }
+    }
+}

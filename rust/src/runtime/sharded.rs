@@ -1,0 +1,337 @@
+//! Sharded execution of one logical ONN across several engine shards —
+//! the paper's Discussion names multi-FPGA clustering ("synchronizing
+//! multiple ONNs across multiple devices will pose a challenge") as the
+//! path past a single device's 506 oscillators.  This module models
+//! that topology: a leader broadcasts the phase state each oscillation
+//! period, K shard workers each own a *row slice* of the weight matrix
+//! and compute the reference/snap for their oscillators, and the leader
+//! gathers the updated slices (an all-gather per period — exactly the
+//! synchronization cost a multi-FPGA build would pay).
+//!
+//! The sharded engine is bit-exact with the single-engine dynamics:
+//! row-partitioning the weighted sum does not change any oscillator's
+//! reference waveform.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::onn::config::NetworkConfig;
+use crate::onn::phase::{amplitude, wrap};
+use crate::onn::weights::WeightMatrix;
+use crate::runtime::ChunkEngine;
+
+/// One shard: rows `[row0, row0 + rows)` of the weight matrix.
+struct ShardSpec {
+    row0: usize,
+    rows: usize,
+    /// Row-slice of W, row-major `rows x n`.
+    w: Vec<i8>,
+}
+
+enum ShardMsg {
+    /// Full phase vector for this period; shard replies with its slice.
+    Step(Vec<i32>),
+    Stop,
+}
+
+struct ShardHandle {
+    tx: Sender<ShardMsg>,
+    rx: Receiver<Vec<i32>>,
+    join: JoinHandle<()>,
+    row0: usize,
+    rows: usize,
+}
+
+/// Leader + K shard workers executing the functional period dynamics.
+pub struct ShardedEngine {
+    cfg: NetworkConfig,
+    batch: usize,
+    chunk: usize,
+    shards: Vec<ShardHandle>,
+    /// All-gather rounds performed (the multi-device sync cost metric).
+    pub sync_rounds: u64,
+}
+
+impl ShardedEngine {
+    /// Partition `w` into `num_shards` row slices and spawn workers.
+    pub fn new(
+        cfg: NetworkConfig,
+        w: &WeightMatrix,
+        num_shards: usize,
+        batch: usize,
+        chunk: usize,
+    ) -> Result<Self> {
+        if num_shards == 0 || num_shards > cfg.n {
+            return Err(anyhow!("bad shard count {num_shards} for n={}", cfg.n));
+        }
+        if cfg.period() > 64 {
+            return Err(anyhow!("sharded engine supports phase_bits <= 6"));
+        }
+        assert_eq!(cfg.n, w.n);
+        let n = cfg.n;
+        let p = cfg.period();
+        let base = n / num_shards;
+        let extra = n % num_shards;
+        let mut shards = Vec::with_capacity(num_shards);
+        let mut row0 = 0usize;
+        for s in 0..num_shards {
+            let rows = base + usize::from(s < extra);
+            let mut slice = Vec::with_capacity(rows * n);
+            for r in row0..row0 + rows {
+                slice.extend_from_slice(w.row(r));
+            }
+            let spec = ShardSpec {
+                row0,
+                rows,
+                w: slice,
+            };
+            let (tx, shard_rx) = channel::<ShardMsg>();
+            let (reply_tx, rx) = channel::<Vec<i32>>();
+            let join = std::thread::spawn(move || shard_loop(spec, n, p, shard_rx, reply_tx));
+            shards.push(ShardHandle {
+                tx,
+                rx,
+                join,
+                row0,
+                rows,
+            });
+            row0 += rows;
+        }
+        Ok(Self {
+            cfg,
+            batch,
+            chunk,
+            shards,
+            sync_rounds: 0,
+        })
+    }
+
+    /// One synchronous period across all shards (broadcast + gather).
+    fn period_step(&mut self, phases: &mut [i32]) -> Result<()> {
+        // Broadcast the full state to every shard...
+        for sh in &self.shards {
+            sh.tx
+                .send(ShardMsg::Step(phases.to_vec()))
+                .map_err(|_| anyhow!("shard died"))?;
+        }
+        // ...and gather the updated row slices.
+        for sh in &self.shards {
+            let slice = sh.rx.recv().map_err(|_| anyhow!("shard died"))?;
+            debug_assert_eq!(slice.len(), sh.rows);
+            phases[sh.row0..sh.row0 + sh.rows].copy_from_slice(&slice);
+        }
+        self.sync_rounds += 1;
+        Ok(())
+    }
+
+    pub fn shutdown(self) {
+        for sh in &self.shards {
+            let _ = sh.tx.send(ShardMsg::Stop);
+        }
+        for sh in self.shards {
+            let _ = sh.join.join();
+        }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+}
+
+/// Worker: computes the reference waveform + phase snap for its rows
+/// from the broadcast state (the per-device compute of a multi-FPGA
+/// ONN, here the functional period semantics).
+fn shard_loop(
+    spec: ShardSpec,
+    n: usize,
+    p: usize,
+    rx: Receiver<ShardMsg>,
+    reply: Sender<Vec<i32>>,
+) {
+    let pi = p as i32;
+    // templates[k * p + t]
+    let mut templates = vec![0i8; p * p];
+    for k in 0..p {
+        for t in 0..p {
+            templates[k * p + t] = amplitude(k as i32, t as i64, pi) as i8;
+        }
+    }
+    while let Ok(ShardMsg::Step(phases)) = rx.recv() {
+        // amplitudes over the period for all oscillators
+        let mut s = vec![0i8; n * p];
+        for (j, &phi) in phases.iter().enumerate() {
+            for t in 0..p {
+                s[j * p + t] = amplitude(phi, t as i64, pi) as i8;
+            }
+        }
+        let mut out = Vec::with_capacity(spec.rows);
+        for r in 0..spec.rows {
+            let row = &spec.w[r * n..(r + 1) * n];
+            let gi = spec.row0 + r; // global oscillator index
+            // reference waveform for oscillator gi
+            let mut best_key = i32::MIN;
+            let mut best_k = 0i32;
+            let mut refsig = [0i8; 64];
+            for t in 0..p {
+                let mut sum = 0i32;
+                for j in 0..n {
+                    sum += row[j] as i32 * s[j * p + t] as i32;
+                }
+                refsig[t] = if sum > 0 {
+                    1
+                } else if sum < 0 {
+                    -1
+                } else {
+                    s[gi * p + t]
+                };
+            }
+            for k in 0..pi {
+                let trow = &templates[k as usize * p..(k as usize + 1) * p];
+                let mut score = 0i32;
+                for t in 0..p {
+                    score += refsig[t] as i32 * trow[t] as i32;
+                }
+                let rel = wrap(k - phases[gi], pi);
+                let key = score * 2 * pi + (pi - rel);
+                if key > best_key {
+                    best_key = key;
+                    best_k = k;
+                }
+            }
+            out.push(best_k);
+        }
+        if reply.send(out).is_err() {
+            break;
+        }
+    }
+}
+
+impl ChunkEngine for ShardedEngine {
+    fn n(&self) -> usize {
+        self.cfg.n
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn chunk_len(&self) -> usize {
+        self.chunk
+    }
+
+    fn set_weights(&mut self, _w: &[f32]) -> Result<()> {
+        // Weights are fixed at shard construction (they live on the
+        // remote devices); reprogramming means rebuilding the cluster.
+        Err(anyhow!(
+            "sharded engine weights are fixed at construction; rebuild the shards"
+        ))
+    }
+
+    fn run_chunk(&mut self, phases: &mut [i32], settled: &mut [i32], period0: i32) -> Result<()> {
+        let n = self.cfg.n;
+        let b = self.batch;
+        if phases.len() != b * n || settled.len() != b {
+            return Err(anyhow!("shape mismatch"));
+        }
+        let mut prev = vec![0i32; n];
+        for bi in 0..b {
+            let ph = &mut phases[bi * n..(bi + 1) * n];
+            for k in 0..self.chunk {
+                prev.copy_from_slice(ph);
+                self.period_step(ph)?;
+                if settled[bi] < 0 && ph == &prev[..] {
+                    settled[bi] = period0 + k as i32;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn kind(&self) -> &'static str {
+        "sharded"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::onn::dynamics::FunctionalEngine;
+    use crate::util::rng::Rng;
+
+    fn rand_net(rng: &mut Rng, n: usize) -> (WeightMatrix, Vec<i32>) {
+        let mut w = WeightMatrix::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                w.set(i, j, rng.range_i64(-16, 16) as i8);
+            }
+        }
+        let ph = (0..n).map(|_| rng.range_i64(0, 16) as i32).collect();
+        (w, ph)
+    }
+
+    #[test]
+    fn sharded_bit_exact_with_single_engine() {
+        let mut rng = Rng::new(88);
+        for shards in [1, 2, 3, 5] {
+            let n = 17;
+            let cfg = NetworkConfig::paper(n);
+            let (w, ph0) = rand_net(&mut rng, n);
+            let mut single = FunctionalEngine::new(cfg, w.clone());
+            let mut sharded = ShardedEngine::new(cfg, &w, shards, 1, 4).unwrap();
+            let mut a = ph0.clone();
+            let mut b = ph0.clone();
+            let mut sa = vec![-1i32; 1];
+            let mut sb = vec![-1i32; 1];
+            single.run_chunk(&mut a, &mut sa, 0, 4);
+            sharded.run_chunk(&mut b, &mut sb, 0).unwrap();
+            assert_eq!(a, b, "shards={shards}");
+            assert_eq!(sa, sb, "shards={shards}");
+            sharded.shutdown();
+        }
+    }
+
+    #[test]
+    fn sync_rounds_counted_per_period() {
+        let mut rng = Rng::new(89);
+        let n = 8;
+        let cfg = NetworkConfig::paper(n);
+        let (w, ph0) = rand_net(&mut rng, n);
+        let mut sharded = ShardedEngine::new(cfg, &w, 2, 1, 6).unwrap();
+        let mut ph = ph0;
+        let mut st = vec![-1i32; 1];
+        sharded.run_chunk(&mut ph, &mut st, 0).unwrap();
+        assert_eq!(sharded.sync_rounds, 6, "one all-gather per period");
+        sharded.shutdown();
+    }
+
+    #[test]
+    fn uneven_partition_covers_all_rows() {
+        // n=10 over 3 shards -> 4+3+3.
+        let cfg = NetworkConfig::paper(10);
+        let w = WeightMatrix::zeros(10);
+        let eng = ShardedEngine::new(cfg, &w, 3, 1, 1).unwrap();
+        let total: usize = eng.shards.iter().map(|s| s.rows).sum();
+        assert_eq!(total, 10);
+        assert_eq!(eng.shards[0].rows, 4);
+        eng.shutdown();
+    }
+
+    #[test]
+    fn rejects_bad_shard_counts() {
+        let cfg = NetworkConfig::paper(4);
+        let w = WeightMatrix::zeros(4);
+        assert!(ShardedEngine::new(cfg, &w, 0, 1, 1).is_err());
+        assert!(ShardedEngine::new(cfg, &w, 5, 1, 1).is_err());
+    }
+
+    #[test]
+    fn set_weights_refused() {
+        let cfg = NetworkConfig::paper(4);
+        let w = WeightMatrix::zeros(4);
+        let mut eng = ShardedEngine::new(cfg, &w, 2, 1, 1).unwrap();
+        assert!(eng.set_weights(&[0.0; 16]).is_err());
+        eng.shutdown();
+    }
+}

@@ -1,0 +1,219 @@
+//! Tiny command-line parser (clap is unavailable offline).
+//!
+//! Grammar: `onn-scale <subcommand> [--flag] [--key value] ...`
+//! Values parse on demand with typed getters; unknown flags are an error
+//! so typos fail loudly.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// CLI error type (implements Error so `?` works under anyhow).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl From<String> for CliError {
+    fn from(s: String) -> Self {
+        CliError(s)
+    }
+}
+
+impl From<&str> for CliError {
+    fn from(s: &str) -> Self {
+        CliError(s.to_string())
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    known: Vec<String>,
+}
+
+pub const FLAG_PRESENT: &str = "\u{1}"; // marker for value-less flags
+
+impl Args {
+    /// Parse `argv[1..]`. A leading non-`--` token is the subcommand.
+    pub fn parse(argv: &[String]) -> Result<Args, CliError> {
+        let mut it = argv.iter().peekable();
+        let subcommand = match it.peek() {
+            Some(s) if !s.starts_with("--") => Some(it.next().unwrap().clone()),
+            _ => None,
+        };
+        let mut flags = BTreeMap::new();
+        while let Some(tok) = it.next() {
+            let key = tok
+                .strip_prefix("--")
+                .ok_or_else(|| CliError(format!("expected --flag, got '{tok}'")))?;
+            if key.is_empty() {
+                return Err(CliError("empty flag name".into()));
+            }
+            let val = match it.peek() {
+                Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
+                _ => FLAG_PRESENT.to_string(),
+            };
+            if flags.insert(key.to_string(), val).is_some() {
+                return Err(CliError(format!("duplicate flag --{key}")));
+            }
+        }
+        Ok(Args {
+            subcommand,
+            flags,
+            known: Vec::new(),
+        })
+    }
+
+    pub fn from_env() -> Result<Args, CliError> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    fn mark(&mut self, key: &str) {
+        if !self.known.iter().any(|k| k == key) {
+            self.known.push(key.to_string());
+        }
+    }
+
+    /// Boolean flag: present (with or without a value of "true").
+    pub fn has(&mut self, key: &str) -> bool {
+        self.mark(key);
+        match self.flags.get(key).map(|s| s.as_str()) {
+            Some(FLAG_PRESENT) | Some("true") => true,
+            Some("false") | None => false,
+            Some(_) => true,
+        }
+    }
+
+    pub fn get_str(&mut self, key: &str, default: &str) -> String {
+        self.mark(key);
+        match self.flags.get(key) {
+            Some(v) if v != FLAG_PRESENT => v.clone(),
+            _ => default.to_string(),
+        }
+    }
+
+    pub fn get_opt_str(&mut self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.flags
+            .get(key)
+            .filter(|v| v.as_str() != FLAG_PRESENT)
+            .cloned()
+    }
+
+    pub fn get_usize(&mut self, key: &str, default: usize) -> Result<usize, CliError> {
+        self.mark(key);
+        match self.flags.get(key) {
+            Some(v) if v != FLAG_PRESENT => v
+                .parse()
+                .map_err(|_| CliError(format!("--{key}: expected integer, got '{v}'"))),
+            _ => Ok(default),
+        }
+    }
+
+    pub fn get_u64(&mut self, key: &str, default: u64) -> Result<u64, CliError> {
+        self.mark(key);
+        match self.flags.get(key) {
+            Some(v) if v != FLAG_PRESENT => v
+                .parse()
+                .map_err(|_| CliError(format!("--{key}: expected integer, got '{v}'"))),
+            _ => Ok(default),
+        }
+    }
+
+    pub fn get_f64(&mut self, key: &str, default: f64) -> Result<f64, CliError> {
+        self.mark(key);
+        match self.flags.get(key) {
+            Some(v) if v != FLAG_PRESENT => v
+                .parse()
+                .map_err(|_| CliError(format!("--{key}: expected number, got '{v}'"))),
+            _ => Ok(default),
+        }
+    }
+
+    /// Call after all getters: errors on flags nobody asked about.
+    pub fn finish(&self) -> Result<(), CliError> {
+        let unknown: Vec<&String> = self
+            .flags
+            .keys()
+            .filter(|k| !self.known.iter().any(|kk| kk == *k))
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(CliError(format!(
+                "unknown flag(s): {}",
+                unknown
+                    .iter()
+                    .map(|k| format!("--{k}"))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let mut a = Args::parse(&argv("table6 --trials 100 --engine native")).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("table6"));
+        assert_eq!(a.get_usize("trials", 1000).unwrap(), 100);
+        assert_eq!(a.get_str("engine", "pjrt"), "native");
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn defaults() {
+        let mut a = Args::parse(&argv("x")).unwrap();
+        assert_eq!(a.get_usize("trials", 1000).unwrap(), 1000);
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn boolean_flags() {
+        let mut a = Args::parse(&argv("x --verbose --deep false")).unwrap();
+        assert!(a.has("verbose"));
+        assert!(!a.has("deep"));
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = Args::parse(&argv("--help")).unwrap();
+        assert_eq!(a.subcommand, None);
+    }
+
+    #[test]
+    fn rejects_bad_tokens() {
+        assert!(Args::parse(&argv("cmd stray")).is_err());
+        assert!(Args::parse(&argv("cmd --a 1 --a 2")).is_err());
+    }
+
+    #[test]
+    fn unknown_flags_detected() {
+        let mut a = Args::parse(&argv("cmd --typo 3")).unwrap();
+        let _ = a.get_usize("trials", 1);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_number_reports_flag() {
+        let mut a = Args::parse(&argv("cmd --trials abc")).unwrap();
+        let e = a.get_usize("trials", 1).unwrap_err();
+        assert!(e.0.contains("--trials"));
+    }
+}

@@ -1,0 +1,12 @@
+//! In-tree infrastructure modules.
+//!
+//! This offline image only ships the `xla` crate's dependency closure, so
+//! the usual ecosystem crates (rand, serde_json, clap, criterion,
+//! proptest) are unavailable.  These modules are small, fully tested
+//! replacements covering exactly what the rest of the crate needs.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,177 @@
+//! Plain-text table rendering for the paper-table reproductions.
+
+/// A simple column-aligned table with a title, header row and rows of
+/// string cells. Numeric formatting is the caller's concern.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width mismatch in table '{}'",
+            self.title
+        );
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) -> &mut Self {
+        let owned: Vec<String> = cells.iter().map(|s| s.to_string()).collect();
+        self.row(&owned)
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let sep: String = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                let c = cells.get(i).map(String::as_str).unwrap_or("");
+                let pad = widths[i] - c.chars().count();
+                s.push(' ');
+                s.push_str(c);
+                s.push_str(&" ".repeat(pad + 1));
+                s.push('|');
+            }
+            s
+        };
+        let mut out = String::new();
+        out.push_str(&format!("{}\n", self.title));
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+}
+
+/// Render an ASCII log-log scatter/line chart: one char per (x, y) bucket.
+/// Series are labelled with single characters; used for the Figure
+/// reproductions so the shape is visible directly in the terminal.
+pub fn ascii_loglog_plot(
+    title: &str,
+    series: &[(&str, char, &[(f64, f64)])],
+    width: usize,
+    height: usize,
+) -> String {
+    let all: Vec<(f64, f64)> = series
+        .iter()
+        .flat_map(|(_, _, pts)| pts.iter().copied())
+        .filter(|(x, y)| *x > 0.0 && *y > 0.0)
+        .collect();
+    if all.is_empty() {
+        return format!("{title}\n(no data)\n");
+    }
+    let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    for (x, y) in &all {
+        let (lx, ly) = (x.log10(), y.log10());
+        x0 = x0.min(lx);
+        x1 = x1.max(lx);
+        y0 = y0.min(ly);
+        y1 = y1.max(ly);
+    }
+    if (x1 - x0).abs() < 1e-12 {
+        x1 = x0 + 1.0;
+    }
+    if (y1 - y0).abs() < 1e-12 {
+        y1 = y0 + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for (_, ch, pts) in series {
+        for (x, y) in pts.iter() {
+            if *x <= 0.0 || *y <= 0.0 {
+                continue;
+            }
+            let cx = ((x.log10() - x0) / (x1 - x0) * (width - 1) as f64).round() as usize;
+            let cy = ((y.log10() - y0) / (y1 - y0) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - cy][cx] = *ch;
+        }
+    }
+    let mut out = format!("{title}\n");
+    out.push_str(&format!("  y: 1e{:.1} .. 1e{:.1} (log)\n", y0, y1));
+    for row in grid {
+        out.push_str("  |");
+        out.push_str(&row.iter().collect::<String>());
+        out.push('\n');
+    }
+    out.push_str("  +");
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    out.push_str(&format!("   x: 1e{:.1} .. 1e{:.1} (log)   ", x0, x1));
+    for (name, ch, _) in series {
+        out.push_str(&format!("[{ch}]={name} "));
+    }
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("T", &["a", "bbbb"]);
+        t.row_strs(&["xx", "y"]);
+        let s = t.render();
+        assert!(s.contains("| a  | bbbb |"), "{s}");
+        assert!(s.contains("| xx | y    |"), "{s}");
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new("T", &["a"]);
+        t.row_strs(&["1", "2"]);
+    }
+
+    #[test]
+    fn plot_contains_points() {
+        let pts = [(1.0, 10.0), (10.0, 100.0), (100.0, 1000.0)];
+        let s = ascii_loglog_plot("P", &[("lin", '*', &pts)], 40, 10);
+        assert!(s.contains('*'));
+        assert!(s.contains("[*]=lin"));
+    }
+
+    #[test]
+    fn plot_handles_empty() {
+        let s = ascii_loglog_plot("P", &[("e", '*', &[])], 10, 5);
+        assert!(s.contains("no data"));
+    }
+}

@@ -1,0 +1,215 @@
+//! Coordinator integration: routing, dynamic batching, concurrency,
+//! metrics, and the TCP JSON-lines front-end, on native engine pools.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use onn_scale::coordinator::batcher::BatchPolicy;
+use onn_scale::coordinator::job::RetrievalRequest;
+use onn_scale::coordinator::server::{handle_line, serve_tcp, Coordinator, EngineKind, PoolSpec};
+use onn_scale::harness::datasets::benchmark_by_name;
+use onn_scale::onn::phase::{spin_to_phase, state_to_spins};
+use onn_scale::util::json::Json;
+use onn_scale::util::rng::Rng;
+
+fn start_3x3(max_wait_ms: u64) -> (Coordinator, onn_scale::harness::datasets::BenchmarkSet) {
+    let set = benchmark_by_name("3x3").unwrap();
+    let coord = Coordinator::start(
+        vec![PoolSpec::new(set.cfg, set.weights.clone(), EngineKind::Native)],
+        BatchPolicy {
+            max_wait: Duration::from_millis(max_wait_ms),
+            max_periods_cap: 256,
+        },
+    )
+    .unwrap();
+    (coord, set)
+}
+
+#[test]
+fn retrieves_through_full_service_stack() {
+    let (coord, set) = start_3x3(1);
+    let p = set.cfg.period() as i32;
+    let mut rng = Rng::new(1);
+    for target in &set.dataset.patterns {
+        let corrupted = target.corrupt(1, &mut rng);
+        let req = RetrievalRequest::from_pattern(coord.next_id(), &corrupted, p, 256);
+        let res = coord.retrieve_sync(req).unwrap();
+        assert!(res.settled.is_some());
+        assert!(target.matches_up_to_inversion(&state_to_spins(&res.phases, p)));
+        assert!(res.total_latency >= res.queue_latency);
+    }
+    let snap = coord.snapshot();
+    assert_eq!(snap.completed, 2);
+    assert_eq!(snap.timeouts, 0);
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn concurrent_submitters_fill_batches() {
+    let (coord, set) = start_3x3(20);
+    let coord = Arc::new(coord);
+    let p = set.cfg.period() as i32;
+    let total = 64usize;
+    let handles: Vec<_> = (0..total)
+        .map(|i| {
+            let coord = Arc::clone(&coord);
+            let set = set.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(100 + i as u64);
+                let target = &set.dataset.patterns[i % 2];
+                let corrupted = target.corrupt(1, &mut rng);
+                let req =
+                    RetrievalRequest::from_pattern(i as u64, &corrupted, p, 256);
+                let res = coord.retrieve_sync(req).unwrap();
+                (res.settled.is_some(), res.batch_occupancy)
+            })
+        })
+        .collect();
+    let results: Vec<(bool, usize)> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    assert!(results.iter().all(|(ok, _)| *ok));
+    let snap = coord.snapshot();
+    assert_eq!(snap.completed, total as u64);
+    // Dynamic batching must have packed multiple jobs per batch.
+    assert!(
+        snap.mean_occupancy > 1.5,
+        "batcher never batched: occupancy {}",
+        snap.mean_occupancy
+    );
+    assert!(snap.batches < total as u64, "one batch per job = no batching");
+    Arc::try_unwrap(coord)
+        .map_err(|_| ())
+        .unwrap()
+        .shutdown()
+        .unwrap();
+}
+
+#[test]
+fn multi_pool_routing() {
+    let set3 = benchmark_by_name("3x3").unwrap();
+    let set5 = benchmark_by_name("5x4").unwrap();
+    let coord = Coordinator::start(
+        vec![
+            PoolSpec::new(set3.cfg, set3.weights.clone(), EngineKind::Native),
+            PoolSpec::new(set5.cfg, set5.weights.clone(), EngineKind::Native),
+        ],
+        BatchPolicy::default(),
+    )
+    .unwrap();
+    assert_eq!(coord.router.routes(), vec![9, 20]);
+    let p = 16;
+    let mut rng = Rng::new(2);
+    // one job to each pool
+    for set in [&set3, &set5] {
+        let target = &set.dataset.patterns[0];
+        let corrupted = target.corrupt(1, &mut rng);
+        let req = RetrievalRequest::from_pattern(coord.next_id(), &corrupted, p, 256);
+        let res = coord.retrieve_sync(req).unwrap();
+        assert_eq!(res.phases.len(), set.cfg.n);
+    }
+    // unknown size rejected
+    let bad = RetrievalRequest {
+        id: 99,
+        n: 77,
+        phases: vec![0; 77],
+        max_periods: 8,
+    };
+    assert!(coord.router.submit(bad).is_err());
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn handle_line_roundtrip_json() {
+    let (coord, set) = start_3x3(1);
+    let target = &set.dataset.patterns[0];
+    let phases: Vec<i32> = target.spins.iter().map(|&s| spin_to_phase(s, 16)).collect();
+    let req = Json::obj(vec![
+        ("id", Json::num(5.0)),
+        ("n", Json::num(9.0)),
+        ("phases", Json::arr_i32(&phases)),
+    ])
+    .to_string();
+    let resp = handle_line(&coord.router, &req);
+    let v = Json::parse(&resp).unwrap();
+    assert_eq!(v.get("id").and_then(Json::as_usize), Some(5));
+    assert_eq!(
+        v.get("settled").and_then(Json::as_usize),
+        Some(0),
+        "stored pattern settles immediately: {resp}"
+    );
+    assert_eq!(v.get("phases").and_then(Json::as_arr).map(|a| a.len()), Some(9));
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn tcp_server_serves_multiple_clients() {
+    use std::io::{BufRead, BufReader, Write};
+    let (coord, set) = start_3x3(1);
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let router = Arc::clone(&coord.router);
+    std::thread::spawn(move || {
+        let _ = serve_tcp(router, listener);
+    });
+
+    let clients: Vec<_> = (0..3)
+        .map(|c| {
+            let set = set.clone();
+            std::thread::spawn(move || {
+                let stream = std::net::TcpStream::connect(addr).unwrap();
+                let mut w = stream.try_clone().unwrap();
+                let mut r = BufReader::new(stream);
+                let target = &set.dataset.patterns[c % 2];
+                let phases: Vec<i32> = target
+                    .spins
+                    .iter()
+                    .map(|&s| spin_to_phase(s, 16))
+                    .collect();
+                let req = Json::obj(vec![
+                    ("id", Json::num(c as f64)),
+                    ("n", Json::num(9.0)),
+                    ("phases", Json::arr_i32(&phases)),
+                ]);
+                w.write_all(req.to_string().as_bytes()).unwrap();
+                w.write_all(b"\n").unwrap();
+                let mut line = String::new();
+                r.read_line(&mut line).unwrap();
+                let v = Json::parse(line.trim()).unwrap();
+                assert!(v.get("error").is_none(), "{line}");
+                v.get("settled").and_then(Json::as_usize)
+            })
+        })
+        .collect();
+    for c in clients {
+        assert_eq!(c.join().unwrap(), Some(0));
+    }
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn timeout_reported_not_hung() {
+    // A 2-oscillator pure-cross network 2-cycles forever; the service
+    // must report a timeout, not hang.
+    use onn_scale::onn::config::NetworkConfig;
+    use onn_scale::onn::weights::WeightMatrix;
+    let mut w = WeightMatrix::zeros(2);
+    w.set(0, 1, 8);
+    w.set(1, 0, 8);
+    let coord = Coordinator::start(
+        vec![PoolSpec::new(NetworkConfig::paper(2), w, EngineKind::Native)],
+        BatchPolicy {
+            max_wait: Duration::from_millis(1),
+            max_periods_cap: 64,
+        },
+    )
+    .unwrap();
+    let req = RetrievalRequest {
+        id: 1,
+        n: 2,
+        phases: vec![0, 5],
+        max_periods: 64,
+    };
+    let res = coord.retrieve_sync(req).unwrap();
+    assert_eq!(res.settled, None);
+    assert_eq!(coord.snapshot().timeouts, 1);
+    coord.shutdown().unwrap();
+}

@@ -1,0 +1,204 @@
+//! Cross-engine integration tests: the functional (period-snap) engine,
+//! the naive oracle, and both cycle-accurate RTL simulators must tell
+//! one consistent story about the ONN dynamics.
+
+use onn_scale::harness::datasets::benchmark_by_name;
+use onn_scale::onn::config::NetworkConfig;
+use onn_scale::onn::dynamics::{period_step_naive, FunctionalEngine};
+use onn_scale::onn::learning::{is_fixed_point, train_quantized};
+use onn_scale::onn::phase::{spin_to_phase, state_to_spins};
+use onn_scale::onn::weights::WeightMatrix;
+use onn_scale::rtl::hybrid::HybridOnn;
+use onn_scale::rtl::recurrent::RecurrentOnn;
+use onn_scale::rtl::RtlSim;
+use onn_scale::util::rng::Rng;
+
+fn rand_weights(rng: &mut Rng, n: usize) -> WeightMatrix {
+    let mut w = WeightMatrix::zeros(n);
+    for i in 0..n {
+        for j in 0..n {
+            w.set(i, j, rng.range_i64(-16, 16) as i8);
+        }
+    }
+    w
+}
+
+#[test]
+fn functional_engine_matches_naive_oracle_many_sizes() {
+    let mut rng = Rng::new(1);
+    for n in [1, 2, 3, 7, 16, 31, 48, 64] {
+        let cfg = NetworkConfig::paper(n);
+        let w = rand_weights(&mut rng, n);
+        let mut eng = FunctionalEngine::new(cfg, w.clone());
+        for _ in 0..3 {
+            let ph0: Vec<i32> = (0..n).map(|_| rng.range_i64(0, 16) as i32).collect();
+            let want = period_step_naive(&cfg, &w, &ph0);
+            let mut got = ph0.clone();
+            eng.period_step(&mut got);
+            assert_eq!(got, want, "n={n}");
+        }
+    }
+}
+
+#[test]
+fn stored_patterns_stable_in_all_engines() {
+    let set = benchmark_by_name("3x3").unwrap();
+    let cfg = set.cfg;
+    let p = cfg.period() as i32;
+    let mut functional = FunctionalEngine::new(cfg, set.weights.clone());
+    let mut ra = RecurrentOnn::new(cfg, set.weights.clone());
+    let mut ha = HybridOnn::new(cfg, set.weights.clone());
+    for pat in &set.dataset.patterns {
+        assert!(is_fixed_point(&set.weights, &pat.spins));
+        let phases: Vec<i32> = pat.spins.iter().map(|&s| spin_to_phase(s, p)).collect();
+
+        let out = functional.run_to_settle(&phases, 16);
+        assert_eq!(out.settled, Some(0), "functional: stored pattern moved");
+
+        for (name, sim) in [("ra", &mut ra as &mut dyn RtlSim), ("ha", &mut ha)] {
+            sim.set_phases(&phases);
+            let out = sim.run_to_settle(30);
+            assert!(out.settled.is_some(), "{name}: did not settle");
+            let rel: Vec<i8> = pat.spins.iter().map(|&s| s * pat.spins[0]).collect();
+            assert_eq!(
+                state_to_spins(&out.phases, p),
+                rel,
+                "{name}: stored pattern moved"
+            );
+        }
+    }
+}
+
+#[test]
+fn rtl_recurrent_agrees_with_functional_on_retrieval_statistics() {
+    // The functional engine implements the (synchronized) hybrid
+    // semantics at period granularity; the paper's claim is that all
+    // these implementations retrieve (nearly) identically.
+    let set = benchmark_by_name("5x4").unwrap();
+    let p = set.cfg.period() as i32;
+    let mut functional = FunctionalEngine::new(set.cfg, set.weights.clone());
+    let mut ra = RecurrentOnn::new(set.cfg, set.weights.clone());
+    let mut rng = Rng::new(11);
+    let trials = 60;
+    let (mut ok_f, mut ok_r) = (0, 0);
+    for t in 0..trials {
+        let target = &set.dataset.patterns[t % set.dataset.patterns.len()];
+        let corrupted = target.corrupt(2, &mut rng);
+        let phases: Vec<i32> = corrupted
+            .spins
+            .iter()
+            .map(|&s| spin_to_phase(s, p))
+            .collect();
+        let fo = functional.run_to_settle(&phases, 256);
+        if fo.settled.is_some()
+            && target.matches_up_to_inversion(&state_to_spins(&fo.phases, p))
+        {
+            ok_f += 1;
+        }
+        ra.set_phases(&phases);
+        let ro = ra.run_to_settle(256);
+        if ro.settled.is_some()
+            && target.matches_up_to_inversion(&state_to_spins(&ro.phases, p))
+        {
+            ok_r += 1;
+        }
+    }
+    assert!(ok_f > trials / 2, "functional retrieval broken: {ok_f}/{trials}");
+    assert!(ok_r > trials / 2, "RTL retrieval broken: {ok_r}/{trials}");
+    assert!(
+        (ok_f as i32 - ok_r as i32).abs() <= trials as i32 / 5,
+        "engines diverged: functional {ok_f} vs rtl {ok_r}"
+    );
+}
+
+#[test]
+fn hybrid_rtl_binary_fixed_points_match_functional() {
+    // Binary fixed points of the functional dynamics must be fixed for
+    // the (synchronized) hybrid RTL as well.
+    let set = benchmark_by_name("3x3").unwrap();
+    let p = set.cfg.period() as i32;
+    let mut ha = HybridOnn::new(set.cfg, set.weights.clone());
+    for pat in &set.dataset.patterns {
+        let inv: Vec<i8> = pat.spins.iter().map(|&s| -s).collect();
+        for state in [&pat.spins, &inv] {
+            let phases: Vec<i32> = state.iter().map(|&s| spin_to_phase(s, p)).collect();
+            ha.set_phases(&phases);
+            let out = ha.run_to_settle(20);
+            assert!(out.settled.is_some());
+            let rel_want: Vec<i8> = state.iter().map(|&s| s * state[0]).collect();
+            assert_eq!(state_to_spins(&out.phases, p), rel_want);
+        }
+    }
+}
+
+#[test]
+fn settle_times_land_in_paper_band() {
+    // Paper Table 7: settle times in the ~10-36 period band for
+    // converging retrievals (our absolute values differ, but orders of
+    // magnitude must agree: not 1000).
+    let set = benchmark_by_name("7x6").unwrap();
+    let p = set.cfg.period() as i32;
+    let mut eng = FunctionalEngine::new(set.cfg, set.weights.clone());
+    let mut rng = Rng::new(5);
+    let mut settles = Vec::new();
+    for t in 0..50 {
+        let target = &set.dataset.patterns[t % 5];
+        let corrupted = target.corrupt(target.corruption_count(25.0), &mut rng);
+        let phases: Vec<i32> = corrupted
+            .spins
+            .iter()
+            .map(|&s| spin_to_phase(s, p))
+            .collect();
+        if let Some(s) = eng.run_to_settle(&phases, 256).settled {
+            settles.push(s as f64);
+        }
+    }
+    assert!(!settles.is_empty());
+    let mean = onn_scale::util::stats::mean(&settles);
+    assert!(
+        (0.5..=64.0).contains(&mean),
+        "mean settle {mean} outside plausible band"
+    );
+}
+
+#[test]
+fn serialization_cost_scales_linearly_with_n() {
+    // The hybrid design's defining trade-off: fast-clock cycles per
+    // phase update grow ~N (frequency division, paper section 5.1).
+    for n in [8, 64, 506] {
+        let sim = HybridOnn::new(NetworkConfig::paper(n), WeightMatrix::zeros(n));
+        assert_eq!(sim.fast_cycles_per_update(), n + 6);
+    }
+}
+
+#[test]
+fn quantization_preserves_retrieval_on_all_datasets() {
+    // Every paper dataset: trained + quantized weights keep all stored
+    // patterns as strict fixed points (the premise of Table 6).
+    for name in ["3x3", "5x4", "7x6", "10x10", "22x22"] {
+        let set = benchmark_by_name(name).unwrap();
+        for pat in &set.dataset.patterns {
+            assert!(
+                is_fixed_point(&set.weights, &pat.spins),
+                "{name}: '{}' unstable after quantization",
+                pat.name
+            );
+        }
+    }
+}
+
+#[test]
+fn train_quantized_roundtrip_small() {
+    let mut rng = Rng::new(3);
+    let pats: Vec<Vec<i8>> = (0..3)
+        .map(|_| (0..12).map(|_| rng.spin()).collect())
+        .collect();
+    let cfg = NetworkConfig::paper(12);
+    let w = train_quantized(&pats, &cfg);
+    let mut eng = FunctionalEngine::new(cfg, w);
+    for p0 in &pats {
+        let phases: Vec<i32> = p0.iter().map(|&s| spin_to_phase(s, 16)).collect();
+        let out = eng.run_to_settle(&phases, 8);
+        assert_eq!(out.settled, Some(0));
+    }
+}

@@ -1,0 +1,91 @@
+//! Table 6/7-shaped integration checks: the retrieval sweep driver must
+//! reproduce the paper's qualitative structure at reduced trial counts.
+
+use onn_scale::harness::datasets::benchmark_by_name;
+use onn_scale::harness::retrieval::{run_cell, Engine};
+
+#[test]
+fn accuracy_monotone_in_corruption_small_sizes() {
+    for name in ["3x3", "5x4"] {
+        let set = benchmark_by_name(name).unwrap();
+        let a10 = run_cell(&set, 10.0, 25, 1, Engine::Native).unwrap();
+        let a25 = run_cell(&set, 25.0, 25, 1, Engine::Native).unwrap();
+        let a50 = run_cell(&set, 50.0, 25, 1, Engine::Native).unwrap();
+        assert!(
+            a10.accuracy_pct() + 1e-9 >= a25.accuracy_pct(),
+            "{name}: 10% {:.1} < 25% {:.1}",
+            a10.accuracy_pct(),
+            a25.accuracy_pct()
+        );
+        assert!(
+            a25.accuracy_pct() + 1e-9 >= a50.accuracy_pct(),
+            "{name}: 25% {:.1} < 50% {:.1}",
+            a25.accuracy_pct(),
+            a50.accuracy_pct()
+        );
+    }
+}
+
+#[test]
+fn low_corruption_high_accuracy_all_sizes() {
+    // Paper Table 6: 10% corruption retrieves at or near 100% on every
+    // dataset, including the large ones only the hybrid can run.
+    for name in ["3x3", "5x4", "7x6", "10x10"] {
+        let set = benchmark_by_name(name).unwrap();
+        let cell = run_cell(&set, 10.0, 15, 2, Engine::Native).unwrap();
+        assert!(
+            cell.accuracy_pct() >= 80.0,
+            "{name} @10%: {:.1}%",
+            cell.accuracy_pct()
+        );
+    }
+}
+
+#[test]
+fn architectures_agree_on_moderate_noise() {
+    // Table 6's central claim, at test scale: RA (RTL) vs HA (native
+    // functional) accuracies close on the small datasets.
+    let set = benchmark_by_name("5x4").unwrap();
+    let ra = run_cell(&set, 25.0, 20, 3, Engine::RtlRecurrent).unwrap();
+    let ha = run_cell(&set, 25.0, 20, 3, Engine::Native).unwrap();
+    let diff = (ra.accuracy_pct() - ha.accuracy_pct()).abs();
+    assert!(
+        diff <= 20.0,
+        "architectures diverged: RA {:.1}% vs HA {:.1}%",
+        ra.accuracy_pct(),
+        ha.accuracy_pct()
+    );
+}
+
+#[test]
+fn settle_time_grows_with_corruption() {
+    // Paper Table 7: harder inputs take longer to settle (weak
+    // monotonicity; allow small-sample slack).
+    let set = benchmark_by_name("7x6").unwrap();
+    let a10 = run_cell(&set, 10.0, 20, 4, Engine::Native).unwrap();
+    let a50 = run_cell(&set, 50.0, 20, 4, Engine::Native).unwrap();
+    assert!(
+        a50.mean_settle + 2.0 >= a10.mean_settle,
+        "settle: 10% {:.1} vs 50% {:.1}",
+        a10.mean_settle,
+        a50.mean_settle
+    );
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let set = benchmark_by_name("3x3").unwrap();
+    let a = run_cell(&set, 25.0, 20, 7, Engine::Native).unwrap();
+    let b = run_cell(&set, 25.0, 20, 7, Engine::Native).unwrap();
+    assert_eq!(a, b, "same seed must reproduce the same cell");
+    let c = run_cell(&set, 25.0, 20, 8, Engine::Native).unwrap();
+    assert_eq!(a.trials, c.trials);
+}
+
+#[test]
+fn rtl_hybrid_cell_runs() {
+    let set = benchmark_by_name("3x3").unwrap();
+    let cell = run_cell(&set, 10.0, 10, 5, Engine::RtlHybrid).unwrap();
+    assert_eq!(cell.trials, 20);
+    assert!(cell.accuracy_pct() >= 80.0, "{:.1}", cell.accuracy_pct());
+}

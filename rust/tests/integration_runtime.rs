@@ -1,0 +1,151 @@
+//! AOT artifact integration: the PJRT engine (HLO text lowered from the
+//! JAX/Pallas model) must be bit-exact with the native engine, chunk
+//! after chunk, for every lowered network size.
+//!
+//! Requires `make artifacts`; tests skip politely when artifacts are
+//! missing so `cargo test` works in a fresh checkout.
+
+use onn_scale::harness::datasets::benchmark_by_name;
+use onn_scale::onn::config::NetworkConfig;
+use onn_scale::runtime::artifact::{default_dir, Manifest};
+use onn_scale::runtime::engine::{run_to_settle_batch, PjrtContext, PjrtEngine};
+use onn_scale::runtime::native::NativeEngine;
+use onn_scale::runtime::ChunkEngine;
+use onn_scale::util::rng::Rng;
+
+fn manifest_or_skip() -> Option<Manifest> {
+    match Manifest::load(&default_dir()) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP: no artifacts ({e:#}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+fn rand_w(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n * n).map(|_| rng.range_i64(-16, 16) as f32).collect()
+}
+
+#[test]
+fn pjrt_bit_exact_with_native_random_weights() {
+    let Some(manifest) = manifest_or_skip() else {
+        return;
+    };
+    let ctx = PjrtContext::cpu().expect("pjrt client");
+    let mut rng = Rng::new(42);
+    // Small sizes keep this test fast; larger sizes are covered by the
+    // crosscheck CLI and the benches.
+    for n in [8, 9, 20, 42] {
+        let Some(info) = manifest.chunk_for(n) else {
+            continue;
+        };
+        let mut pjrt = PjrtEngine::load(ctx.clone(), info).expect("load artifact");
+        let mut native = NativeEngine::new(NetworkConfig::paper(n), info.batch, info.chunk);
+        let w = rand_w(&mut rng, n);
+        pjrt.set_weights(&w).unwrap();
+        native.set_weights(&w).unwrap();
+        let b = info.batch;
+        let init: Vec<i32> = (0..b * n).map(|_| rng.range_i64(0, 16) as i32).collect();
+        let (mut pa, mut pb) = (init.clone(), init);
+        let (mut sa, mut sb) = (vec![-1i32; b], vec![-1i32; b]);
+        for k in 0..3 {
+            let p0 = (k * info.chunk) as i32;
+            pjrt.run_chunk(&mut pa, &mut sa, p0).unwrap();
+            native.run_chunk(&mut pb, &mut sb, p0).unwrap();
+            assert_eq!(pa, pb, "phases diverged at n={n} chunk {k}");
+            assert_eq!(sa, sb, "settled diverged at n={n} chunk {k}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_retrieves_trained_patterns() {
+    let Some(manifest) = manifest_or_skip() else {
+        return;
+    };
+    let set = benchmark_by_name("7x6").unwrap();
+    let Some(info) = manifest.chunk_for(set.cfg.n) else {
+        eprintln!("SKIP: no artifact for n={}", set.cfg.n);
+        return;
+    };
+    let ctx = PjrtContext::cpu().expect("pjrt client");
+    let mut eng = PjrtEngine::load(ctx, info).expect("load");
+    eng.set_weights(&set.weights.to_f32()).unwrap();
+
+    use onn_scale::onn::phase::{spin_to_phase, state_to_spins};
+    let p = set.cfg.period() as i32;
+    let b = info.batch;
+    let n = set.cfg.n;
+    let mut rng = Rng::new(9);
+    // One batch of corruptions of pattern 0.
+    let target = &set.dataset.patterns[0];
+    let mut phases = Vec::with_capacity(b * n);
+    for _ in 0..b {
+        let corrupted = target.corrupt(target.corruption_count(10.0), &mut rng);
+        phases.extend(corrupted.spins.iter().map(|&s| spin_to_phase(s, p)));
+    }
+    let settled = run_to_settle_batch(&mut eng, &mut phases, 256).unwrap();
+    let mut correct = 0;
+    for bi in 0..b {
+        let spins = state_to_spins(&phases[bi * n..(bi + 1) * n], p);
+        if settled[bi].is_some() && target.matches_up_to_inversion(&spins) {
+            correct += 1;
+        }
+    }
+    assert!(
+        correct * 10 >= b * 9,
+        "pjrt retrieval accuracy too low: {correct}/{b}"
+    );
+}
+
+#[test]
+fn settled_flags_sticky_across_chunks() {
+    let Some(manifest) = manifest_or_skip() else {
+        return;
+    };
+    let Some(info) = manifest.chunk_for(9) else {
+        return;
+    };
+    let set = benchmark_by_name("3x3").unwrap();
+    let ctx = PjrtContext::cpu().expect("pjrt client");
+    let mut eng = PjrtEngine::load(ctx, info).expect("load");
+    eng.set_weights(&set.weights.to_f32()).unwrap();
+
+    use onn_scale::onn::phase::spin_to_phase;
+    let (b, n) = (info.batch, 9);
+    let p = set.cfg.period() as i32;
+    // Start exactly on stored patterns: settle at period 0 and stay.
+    let mut phases = Vec::new();
+    for bi in 0..b {
+        let pat = &set.dataset.patterns[bi % 2];
+        phases.extend(pat.spins.iter().map(|&s| spin_to_phase(s, p)));
+    }
+    let snapshot = phases.clone();
+    let mut settled = vec![-1i32; b];
+    eng.run_chunk(&mut phases, &mut settled, 0).unwrap();
+    assert!(settled.iter().all(|&s| s == 0), "{settled:?}");
+    assert_eq!(phases, snapshot, "fixed points moved");
+    let first = settled.clone();
+    eng.run_chunk(&mut phases, &mut settled, info.chunk as i32)
+        .unwrap();
+    assert_eq!(settled, first, "settle periods must be sticky");
+    assert_eq!(phases, snapshot);
+}
+
+#[test]
+fn engine_rejects_malformed_inputs() {
+    let Some(manifest) = manifest_or_skip() else {
+        return;
+    };
+    let Some(info) = manifest.chunk_for(8) else {
+        return;
+    };
+    let ctx = PjrtContext::cpu().expect("pjrt client");
+    let mut eng = PjrtEngine::load(ctx, info).expect("load");
+    assert!(eng.set_weights(&vec![0.0; 3]).is_err());
+    eng.set_weights(&vec![0.0; 64]).unwrap();
+    let mut bad_phases = vec![0i32; 7];
+    let mut settled = vec![-1i32; info.batch];
+    assert!(eng.run_chunk(&mut bad_phases, &mut settled, 0).is_err());
+}

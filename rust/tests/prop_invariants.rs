@@ -1,0 +1,252 @@
+//! Property-based tests (hand-rolled proptest substitute): hundreds of
+//! randomized cases per invariant, deterministic seeds, shrink-free but
+//! with full case reporting on failure.
+
+use onn_scale::onn::config::NetworkConfig;
+use onn_scale::onn::dynamics::{period_step_naive, FunctionalEngine};
+use onn_scale::onn::phase::{amplitude, distance, phase_to_spin, spin_to_phase, wrap};
+use onn_scale::onn::weights::WeightMatrix;
+use onn_scale::util::json::Json;
+use onn_scale::util::rng::Rng;
+
+const CASES: usize = 200;
+
+fn rand_weights(rng: &mut Rng, n: usize) -> WeightMatrix {
+    let mut w = WeightMatrix::zeros(n);
+    for i in 0..n {
+        for j in 0..n {
+            w.set(i, j, rng.range_i64(-16, 16) as i8);
+        }
+    }
+    w
+}
+
+#[test]
+fn prop_phase_update_is_rotation_equivariant() {
+    let mut rng = Rng::new(1001);
+    for case in 0..CASES {
+        let n = 1 + rng.usize_below(12);
+        let cfg = NetworkConfig::paper(n);
+        let w = rand_weights(&mut rng, n);
+        let ph0: Vec<i32> = (0..n).map(|_| rng.range_i64(0, 16) as i32).collect();
+        let d = rng.range_i64(0, 16) as i32;
+        let mut eng = FunctionalEngine::new(cfg, w);
+        let mut a = ph0.clone();
+        eng.period_step(&mut a);
+        let mut b: Vec<i32> = ph0.iter().map(|&x| wrap(x + d, 16)).collect();
+        eng.period_step(&mut b);
+        let a_rot: Vec<i32> = a.iter().map(|&x| wrap(x + d, 16)).collect();
+        assert_eq!(b, a_rot, "case {case}: n={n} d={d} ph0={ph0:?}");
+    }
+}
+
+#[test]
+fn prop_incremental_equals_naive() {
+    let mut rng = Rng::new(1002);
+    for case in 0..CASES {
+        let n = 1 + rng.usize_below(24);
+        let cfg = NetworkConfig::paper(n);
+        let w = rand_weights(&mut rng, n);
+        let ph0: Vec<i32> = (0..n).map(|_| rng.range_i64(0, 16) as i32).collect();
+        let want = period_step_naive(&cfg, &w, &ph0);
+        let mut got = ph0.clone();
+        FunctionalEngine::new(cfg, w).period_step(&mut got);
+        assert_eq!(got, want, "case {case}: n={n}");
+    }
+}
+
+#[test]
+fn prop_phases_stay_in_range() {
+    let mut rng = Rng::new(1003);
+    for _ in 0..CASES {
+        let n = 1 + rng.usize_below(10);
+        let cfg = NetworkConfig::paper(n);
+        let w = rand_weights(&mut rng, n);
+        let mut eng = FunctionalEngine::new(cfg, w);
+        let mut ph: Vec<i32> = (0..n).map(|_| rng.range_i64(0, 16) as i32).collect();
+        for _ in 0..5 {
+            eng.period_step(&mut ph);
+            assert!(ph.iter().all(|&x| (0..16).contains(&x)), "{ph:?}");
+        }
+    }
+}
+
+#[test]
+fn prop_binary_manifold_closed() {
+    // Binary phase states stay binary under the dynamics.
+    let mut rng = Rng::new(1004);
+    for _ in 0..CASES {
+        let n = 2 + rng.usize_below(10);
+        let cfg = NetworkConfig::paper(n);
+        let w = rand_weights(&mut rng, n);
+        let mut eng = FunctionalEngine::new(cfg, w);
+        let mut ph: Vec<i32> = (0..n).map(|_| spin_to_phase(rng.spin(), 16)).collect();
+        for _ in 0..4 {
+            eng.period_step(&mut ph);
+            assert!(ph.iter().all(|&x| x == 0 || x == 8), "{ph:?}");
+        }
+    }
+}
+
+#[test]
+fn prop_amplitude_antiperiodic() {
+    // s(t + P/2) == -s(t): square waves are antiperiodic in half a
+    // period; everything in the phase algebra leans on this.
+    let mut rng = Rng::new(1005);
+    for _ in 0..CASES {
+        let phi = rng.range_i64(0, 16) as i32;
+        let t = rng.range_i64(-64, 64);
+        assert_eq!(amplitude(phi, t + 8, 16), -amplitude(phi, t, 16));
+        assert_eq!(amplitude(phi, t + 16, 16), amplitude(phi, t, 16));
+    }
+}
+
+#[test]
+fn prop_distance_triangle_inequality() {
+    let mut rng = Rng::new(1006);
+    for _ in 0..CASES {
+        let (a, b, c) = (
+            rng.range_i64(0, 16) as i32,
+            rng.range_i64(0, 16) as i32,
+            rng.range_i64(0, 16) as i32,
+        );
+        assert!(distance(a, c, 16) <= distance(a, b, 16) + distance(b, c, 16));
+    }
+}
+
+#[test]
+fn prop_spin_readout_consistent_with_distance() {
+    let mut rng = Rng::new(1007);
+    for _ in 0..CASES {
+        let phi = rng.range_i64(0, 16) as i32;
+        let r = rng.range_i64(0, 16) as i32;
+        let s = phase_to_spin(phi, r, 16);
+        let d_ref = distance(phi, r, 16);
+        let d_anti = distance(phi, wrap(r + 8, 16), 16);
+        if d_ref < d_anti {
+            assert_eq!(s, 1);
+        } else if d_anti < d_ref {
+            assert_eq!(s, -1);
+        }
+    }
+}
+
+#[test]
+fn prop_weight_quantization_bounds_and_sign() {
+    let mut rng = Rng::new(1008);
+    let cfg = NetworkConfig::paper(4);
+    for _ in 0..CASES {
+        let master: Vec<f32> = (0..16)
+            .map(|_| (rng.f64() * 4.0 - 2.0) as f32)
+            .collect();
+        let w = WeightMatrix::quantize(&master, 4, &cfg);
+        for i in 0..4 {
+            for j in 0..4 {
+                let q = w.get(i, j) as i32;
+                assert!((-16..=15).contains(&q));
+                let m = master[i * 4 + j];
+                if m > 0.05 {
+                    assert!(q >= 0, "sign flipped: {m} -> {q}");
+                }
+                if m < -0.05 {
+                    assert!(q <= 0, "sign flipped: {m} -> {q}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    let mut rng = Rng::new(1009);
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.usize_below(4) } else { rng.usize_below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bool()),
+            2 => Json::Num((rng.range_i64(-1_000_000, 1_000_000)) as f64),
+            3 => Json::Str(
+                (0..rng.usize_below(12))
+                    .map(|_| char::from(b'a' + (rng.usize_below(26) as u8)))
+                    .collect::<String>()
+                    + if rng.bool() { "\"\\\n" } else { "" },
+            ),
+            4 => Json::Arr((0..rng.usize_below(4)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.usize_below(4))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for case in 0..CASES {
+        let v = random_json(&mut rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e} in {text}"));
+        assert_eq!(back, v, "case {case}: {text}");
+    }
+}
+
+#[test]
+fn prop_corruption_count_and_overlap() {
+    use onn_scale::onn::patterns::Pattern;
+    let mut rng = Rng::new(1010);
+    for _ in 0..CASES {
+        let rows = 2 + rng.usize_below(6);
+        let cols = 2 + rng.usize_below(6);
+        let spins: Vec<i8> = (0..rows * cols).map(|_| rng.spin()).collect();
+        let pat = Pattern {
+            name: "r".into(),
+            rows,
+            cols,
+            spins,
+        };
+        let k = rng.usize_below(pat.len() + 1);
+        let c = pat.corrupt(k, &mut rng);
+        let want_overlap = 1.0 - 2.0 * k as f64 / pat.len() as f64;
+        assert!((pat.overlap(&c.spins) - want_overlap).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn prop_router_rejects_mismatched_requests() {
+    use onn_scale::coordinator::job::RetrievalRequest;
+    use onn_scale::coordinator::metrics::Metrics;
+    use onn_scale::coordinator::router::Router;
+    use std::sync::mpsc::channel;
+    use std::sync::Arc;
+
+    let mut rng = Rng::new(1011);
+    let router = Router::new(Arc::new(Metrics::default()));
+    let (tx, rx) = channel();
+    router.register(9, tx).unwrap();
+    for _ in 0..CASES {
+        let n = 1 + rng.usize_below(20);
+        let len = 1 + rng.usize_below(20);
+        let req = RetrievalRequest {
+            id: 0,
+            n,
+            phases: vec![0; len],
+            max_periods: 8,
+        };
+        let res = router.submit(req);
+        if n != len || n != 9 {
+            assert!(res.is_err(), "accepted bad request n={n} len={len}");
+        } else {
+            assert!(res.is_ok());
+            let _ = rx.try_recv();
+        }
+    }
+}
+
+#[test]
+fn prop_serial_mac_equals_dot_for_any_row() {
+    use onn_scale::rtl::hybrid::SerialMac;
+    let mut rng = Rng::new(1012);
+    for _ in 0..CASES {
+        let n = 1 + rng.usize_below(64);
+        let row: Vec<i8> = (0..n).map(|_| rng.range_i64(-16, 16) as i8).collect();
+        let amps: Vec<i32> = (0..n).map(|_| rng.spin() as i32).collect();
+        let want: i32 = row.iter().zip(&amps).map(|(&w, &a)| w as i32 * a).sum();
+        assert_eq!(SerialMac::default().run(&row, &amps), want);
+    }
+}
