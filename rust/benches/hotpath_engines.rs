@@ -14,9 +14,6 @@ use onn_scale::harness::datasets::benchmark_by_name;
 use onn_scale::onn::dynamics::{period_step_naive, FunctionalEngine};
 use onn_scale::rtl::recurrent::RecurrentOnn;
 use onn_scale::rtl::RtlSim;
-use onn_scale::runtime::artifact::{default_dir, Manifest};
-use onn_scale::runtime::engine::{PjrtContext, PjrtEngine};
-use onn_scale::runtime::ChunkEngine;
 use onn_scale::util::rng::Rng;
 
 fn main() {
@@ -46,33 +43,61 @@ fn main() {
         }
     });
 
-    // --- PJRT chunk execution (needs artifacts) ---
-    if let Ok(manifest) = Manifest::load(&default_dir()) {
-        let ctx = PjrtContext::cpu().expect("pjrt");
-        for nn in [42usize, 484] {
-            if let Some(info) = manifest.chunk_for(nn) {
-                let setn = if nn == 42 {
-                    benchmark_by_name("7x6").unwrap()
-                } else {
-                    benchmark_by_name("22x22").unwrap()
-                };
-                let mut pe = PjrtEngine::load(ctx.clone(), info).expect("load");
-                pe.set_weights(&setn.weights.to_f32()).unwrap();
-                let b = info.batch;
-                let mut phases: Vec<i32> =
-                    (0..b * nn).map(|_| rng.range_i64(0, 16) as i32).collect();
-                let mut settled = vec![-1i32; b];
-                let name = format!(
-                    "pjrt/chunk16_n{nn}_b{b} ({} trials-periods/call)",
-                    b * info.chunk
-                );
-                run(&name, 2, 10, || {
-                    pe.run_chunk(&mut phases, &mut settled, 0).unwrap();
-                });
+    // --- PJRT chunk execution (needs artifacts + the pjrt feature) ---
+    #[cfg(feature = "pjrt")]
+    {
+        use onn_scale::runtime::artifact::{default_dir, Manifest};
+        use onn_scale::runtime::engine::{PjrtContext, PjrtEngine};
+        use onn_scale::runtime::ChunkEngine;
+        if let Ok(manifest) = Manifest::load(&default_dir()) {
+            let ctx = PjrtContext::cpu().expect("pjrt");
+            for nn in [42usize, 484] {
+                if let Some(info) = manifest.chunk_for(nn) {
+                    let setn = if nn == 42 {
+                        benchmark_by_name("7x6").unwrap()
+                    } else {
+                        benchmark_by_name("22x22").unwrap()
+                    };
+                    let mut pe = PjrtEngine::load(ctx.clone(), info).expect("load");
+                    pe.set_weights(&setn.weights.to_f32()).unwrap();
+                    let b = info.batch;
+                    let mut phases: Vec<i32> =
+                        (0..b * nn).map(|_| rng.range_i64(0, 16) as i32).collect();
+                    let mut settled = vec![-1i32; b];
+                    let name = format!(
+                        "pjrt/chunk16_n{nn}_b{b} ({} trials-periods/call)",
+                        b * info.chunk
+                    );
+                    run(&name, 2, 10, || {
+                        pe.run_chunk(&mut phases, &mut settled, 0).unwrap();
+                    });
+                }
             }
+        } else {
+            println!("(artifacts missing; skipping pjrt benches — run `make artifacts`)");
         }
-    } else {
-        println!("(artifacts missing; skipping pjrt benches — run `make artifacts`)");
+    }
+    #[cfg(not(feature = "pjrt"))]
+    println!("(pjrt feature disabled; skipping pjrt benches)");
+
+    // --- solver portfolio hot path (the optimization job class) ---
+    {
+        use onn_scale::solver::graph::Graph;
+        use onn_scale::solver::portfolio::{solve_native, PortfolioParams};
+        use onn_scale::solver::reductions::max_cut;
+        let mut srng = Rng::new(77);
+        let g = Graph::random(64, 0.1, &mut srng);
+        let problem = max_cut(&g);
+        let params = PortfolioParams {
+            replicas: 32,
+            max_periods: 128,
+            plateau_chunks: 0,
+            ..Default::default()
+        };
+        run("solver/portfolio_maxcut_n64_r32_p128", 1, 5, || {
+            let out = solve_native(&problem, &params).expect("portfolio");
+            assert!(out.best_energy <= out.initial_best_energy);
+        });
     }
 
     // --- coordinator end-to-end throughput, native pool, 1 vs N workers ---

@@ -1,16 +1,23 @@
 //! Graph coloring with multi-phase encoding — exploiting the ONN's
 //! ability to "surpass binary limitations" (paper section 1): K colors
 //! map to K equally spaced phase sectors; antiferromagnetic coupling
-//! pushes adjacent nodes into different sectors.
+//! pushes adjacent nodes into different sectors.  The reduction lives in
+//! `solver::reductions::coloring` (an [`crate::solver::IsingProblem`]
+//! with `sectors = k`), the search in the annealed replica portfolio;
+//! this file owns the sector decoder and the greedy recolor polish.
 
 use crate::apps::maxcut::Graph;
-use crate::onn::config::NetworkConfig;
-use crate::onn::dynamics::FunctionalEngine;
-use crate::onn::weights::WeightMatrix;
-use crate::util::rng::Rng;
+use crate::onn::phase::wrap;
+use crate::solver::anneal::Schedule;
+use crate::solver::portfolio::{solve_native, PortfolioParams};
+use crate::solver::reductions;
 
 /// Decode a phase into one of `k` color sectors (nearest sector center).
+/// `phi` is wrapped into `[0, P)` first, so negative or unwrapped phases
+/// decode correctly instead of falling through a negative-float ->
+/// `usize` cast.
 pub fn phase_to_color(phi: i32, p: i32, k: usize) -> usize {
+    let phi = wrap(phi, p);
     let sector = p as f64 / k as f64;
     let idx = ((phi as f64 + sector / 2.0) / sector).floor() as usize;
     idx % k
@@ -32,41 +39,88 @@ pub struct ColoringResult {
     pub restarts_used: usize,
 }
 
-/// ONN k-coloring: antiferromagnetic unit couplings on edges, random
-/// phase initial conditions, decode sectors after settling; keep the
-/// best restart.
-pub fn solve_onn(graph: &Graph, k: usize, restarts: usize, max_periods: usize, seed: u64) -> ColoringResult {
-    assert!(k >= 2);
-    let cfg = NetworkConfig::paper(graph.n);
-    let p = cfg.period() as i32;
-    let n = graph.n;
-    let mut master = vec![0f32; n * n];
-    for &(i, j, w) in &graph.edges {
-        master[i * n + j] = -(w as f32);
-        master[j * n + i] = -(w as f32);
+/// Greedy recolor polish: move each vertex to a strictly
+/// less-conflicting color until a sweep changes nothing.  Total
+/// conflicts strictly decrease per move (bounded by the edge count), so
+/// the quadratic sweep cap guarantees termination at a local optimum.
+fn recolor_polish(graph: &Graph, k: usize, colors: &mut [usize]) {
+    let adj = graph.adjacency();
+    for _ in 0..(2 * graph.n * graph.n + 16) {
+        let mut changed = false;
+        for v in 0..graph.n {
+            let mut per_color = vec![0usize; k];
+            for &(u, _) in &adj[v] {
+                per_color[colors[u]] += 1;
+            }
+            let best = (0..k).min_by_key(|&c| per_color[c]).unwrap_or(0);
+            if per_color[best] < per_color[colors[v]] {
+                colors[v] = best;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
     }
-    let w = WeightMatrix::quantize(&master, n, &cfg);
-    let mut eng = FunctionalEngine::new(cfg, w);
-    let mut rng = Rng::new(seed);
+}
+
+/// ONN k-coloring: the sector-encoded reduction solved by the annealed
+/// replica portfolio; every replica's final phase state is decoded and
+/// recolor-polished, and the fewest-conflicts coloring wins.
+pub fn solve_onn(
+    graph: &Graph,
+    k: usize,
+    restarts: usize,
+    max_periods: usize,
+    seed: u64,
+) -> ColoringResult {
+    assert!(
+        (2..=16).contains(&k),
+        "k = {k} outside 2..=16 (the 16-step phase wheel caps the sector count)"
+    );
+    if graph.n == 0 {
+        return ColoringResult {
+            colors: Vec::new(),
+            conflicts: 0,
+            restarts_used: 0,
+        };
+    }
+    let problem = reductions::coloring(graph, k);
+    let params = PortfolioParams {
+        replicas: restarts.max(1),
+        max_periods: max_periods.max(8),
+        schedule: Schedule::Geometric {
+            start: 0.35,
+            factor: 0.7,
+        },
+        seed,
+        polish: false, // binary polish does not apply to sectors
+        ..Default::default()
+    };
+    let out = solve_native(&problem, &params)
+        .expect("native portfolio on a validated coloring reduction");
+    // Decode on the same phase wheel the portfolio's engine ran on.
+    let p = crate::onn::config::NetworkConfig::paper(graph.n).period() as i32;
     let mut best = ColoringResult {
-        colors: vec![0; n],
+        colors: vec![0; graph.n],
         conflicts: usize::MAX,
         restarts_used: 0,
     };
-    for r in 0..restarts {
-        let init: Vec<i32> = (0..n).map(|_| rng.range_i64(0, p as i64) as i32).collect();
-        let out = eng.run_to_settle(&init, max_periods);
-        let colors: Vec<usize> = out
-            .phases
+    // Rank candidates by the true objective (conflict count): the best
+    // tracked phase state plus every replica's final state.
+    let candidates = std::iter::once(&out.best_phases).chain(out.replica_phases.iter());
+    for (r, phases) in candidates.enumerate() {
+        let mut colors: Vec<usize> = phases
             .iter()
             .map(|&phi| phase_to_color(phi, p, k))
             .collect();
+        recolor_polish(graph, k, &mut colors);
         let c = conflicts(graph, &colors);
         if c < best.conflicts {
             best = ColoringResult {
                 colors,
                 conflicts: c,
-                restarts_used: r + 1,
+                restarts_used: r.max(1),
             };
             if c == 0 {
                 break;
@@ -129,6 +183,38 @@ mod tests {
     }
 
     #[test]
+    fn phase_to_color_wraps_negative_and_overflow() {
+        // Negative phases must wrap, not collapse through a
+        // negative-float -> usize cast.
+        assert_eq!(phase_to_color(-1, 16, 2), phase_to_color(15, 16, 2));
+        assert_eq!(phase_to_color(-8, 16, 2), phase_to_color(8, 16, 2));
+        assert_eq!(phase_to_color(-5, 16, 4), phase_to_color(11, 16, 4));
+        // Phases beyond one period wrap the same way.
+        assert_eq!(phase_to_color(16, 16, 4), phase_to_color(0, 16, 4));
+        assert_eq!(phase_to_color(35, 16, 4), phase_to_color(3, 16, 4));
+        // Exhaustive: every wrapped phase matches its canonical twin.
+        for k in 2..=8 {
+            for phi in -48..48 {
+                assert_eq!(
+                    phase_to_color(phi, 16, k),
+                    phase_to_color(phi.rem_euclid(16), 16, k),
+                    "phi={phi} k={k}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn phase_to_color_boundary_phases() {
+        // P=16, k=3: sector width 16/3; boundaries at 2.67, 8, 13.33.
+        assert_eq!(phase_to_color(2, 16, 3), 0);
+        assert_eq!(phase_to_color(3, 16, 3), 1);
+        assert_eq!(phase_to_color(8, 16, 3), 1); // exactly on the boundary
+        assert_eq!(phase_to_color(13, 16, 3), 2);
+        assert_eq!(phase_to_color(15, 16, 3), 0); // wraps to sector 0
+    }
+
+    #[test]
     fn even_cycle_two_colorable() {
         let g = cycle(8);
         let res = solve_onn(&g, 2, 20, 64, 11);
@@ -151,6 +237,7 @@ mod tests {
 
     #[test]
     fn onn_beats_or_matches_random_coloring() {
+        use crate::util::rng::Rng;
         let mut rng = Rng::new(21);
         let g = Graph::random(20, 0.25, &mut rng);
         let onn = solve_onn(&g, 2, 15, 96, 5);
@@ -162,5 +249,20 @@ mod tests {
             onn.conflicts,
             rand_conflicts
         );
+    }
+
+    #[test]
+    fn recolor_polish_never_increases_conflicts() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(22);
+        for k in [2usize, 3, 4] {
+            let g = Graph::random(16, 0.3, &mut rng);
+            let mut colors: Vec<usize> =
+                (0..g.n).map(|_| rng.usize_below(k)).collect();
+            let before = conflicts(&g, &colors);
+            recolor_polish(&g, k, &mut colors);
+            assert!(conflicts(&g, &colors) <= before);
+            assert!(colors.iter().all(|&c| c < k));
+        }
     }
 }

@@ -1,193 +1,73 @@
-//! Max-cut on the ONN-as-Ising-machine path, with a simulated-annealing
-//! baseline (the paper's Discussion names combinatorial optimization as
-//! the next step for the scaled-up hybrid architecture).
-//!
-//! Mapping: graph edge (i, j, w) becomes antiferromagnetic coupling
-//! `W_ij = W_ji = -w`; the network's binary phase states then minimize
-//! the Ising energy, whose ground state is the maximum cut.  Multi-
-//! restart: random binary initial phases per restart, best cut kept.
+//! Max-cut on the ONN-as-Ising-machine path — now a thin adapter over
+//! the `solver` subsystem: the reduction lives in
+//! `solver::reductions::max_cut`, the search in the annealed batched
+//! replica portfolio (`solver::portfolio`), and the baseline in the
+//! generic simulated annealer (`solver::sa`).  This file owns only the
+//! graph-flavored entry points and decoders the CLI/examples use.
+
+pub use crate::solver::graph::Graph;
 
 use crate::onn::config::NetworkConfig;
 use crate::onn::weights::WeightMatrix;
-use crate::util::rng::Rng;
-
-/// Undirected weighted graph.
-#[derive(Debug, Clone)]
-pub struct Graph {
-    pub n: usize,
-    pub edges: Vec<(usize, usize, i32)>,
-}
-
-impl Graph {
-    /// Erdos-Renyi random graph with unit weights.
-    pub fn random(n: usize, edge_prob: f64, rng: &mut Rng) -> Graph {
-        let mut edges = Vec::new();
-        for i in 0..n {
-            for j in (i + 1)..n {
-                if rng.f64() < edge_prob {
-                    edges.push((i, j, 1));
-                }
-            }
-        }
-        Graph { n, edges }
-    }
-
-    /// Cut value of a +-1 assignment.
-    pub fn cut_value(&self, spins: &[i8]) -> i64 {
-        assert_eq!(spins.len(), self.n);
-        self.edges
-            .iter()
-            .filter(|(i, j, _)| spins[*i] != spins[*j])
-            .map(|(_, _, w)| *w as i64)
-            .sum()
-    }
-
-    pub fn total_weight(&self) -> i64 {
-        self.edges.iter().map(|(_, _, w)| *w as i64).sum()
-    }
-}
+use crate::solver::anneal::Schedule;
+use crate::solver::portfolio::{solve_native, PortfolioParams};
+use crate::solver::reductions::max_cut;
+use crate::solver::sa;
 
 /// Result of one solver run.
 #[derive(Debug, Clone)]
 pub struct CutResult {
     pub spins: Vec<i8>,
     pub cut: i64,
-    /// Periods (ONN) or sweeps (SA) spent.
+    /// Engine chunk-periods (ONN) or sweeps (SA) spent.
     pub effort: usize,
 }
 
 /// Embed the graph into ONN weights: `W_ij = -w_ij`, quantized.
 pub fn embed(graph: &Graph, cfg: &NetworkConfig) -> WeightMatrix {
-    let n = graph.n;
-    let mut master = vec![0f32; n * n];
-    for &(i, j, w) in &graph.edges {
-        master[i * n + j] = -(w as f32);
-        master[j * n + i] = -(w as f32);
-    }
-    WeightMatrix::quantize(&master, n, cfg)
+    max_cut(graph).embed(cfg)
 }
 
-/// ONN max-cut solver: multi-restart relaxation with *asynchronous*
-/// update ordering.
-///
-/// Physical coupled oscillators update continuously; the recurrent RTL
-/// realizes this as per-oscillator updates at each oscillator's own
-/// rising edge, spread across the period.  A fully synchronous update
-/// would make dense antiferromagnetic networks flip-flop globally and
-/// never settle, so here each restart relaxes the network one
-/// oscillator at a time (async Hopfield on the binary phase manifold —
-/// equivalent to the period-snap dynamics at phases {0, P/2} by the
-/// Hopfield-equivalence property, see onn::dynamics tests).  For small
-/// networks the full phase-domain engine cross-checks this in tests.
-pub fn solve_onn(graph: &Graph, restarts: usize, max_sweeps: usize, seed: u64) -> CutResult {
-    let cfg = NetworkConfig::paper(graph.n);
-    let w = embed(graph, &cfg);
-    let n = graph.n;
-    let mut rng = Rng::new(seed);
-    let mut best = CutResult {
-        spins: vec![1; n],
-        cut: i64::MIN,
-        effort: 0,
+/// ONN max-cut: the annealed replica portfolio on the batched native
+/// engine.  `restarts` random-init replicas run as one batch for up to
+/// `max_periods` periods under a geometric phase-noise ramp; every
+/// replica gets the deterministic greedy readout polish, and the best
+/// cut wins.
+pub fn solve_onn(graph: &Graph, restarts: usize, max_periods: usize, seed: u64) -> CutResult {
+    if graph.n == 0 {
+        return CutResult {
+            spins: Vec::new(),
+            cut: 0,
+            effort: 0,
+        };
+    }
+    let problem = max_cut(graph);
+    let params = PortfolioParams {
+        replicas: restarts.max(1),
+        max_periods: max_periods.max(8),
+        schedule: Schedule::Geometric {
+            start: 0.5,
+            factor: 0.75,
+        },
+        seed,
+        ..Default::default()
     };
-    let mut effort = 0usize;
-    for _ in 0..restarts {
-        let mut spins: Vec<i8> = (0..n).map(|_| rng.spin()).collect();
-        // local fields h_i = sum_j W_ij s_j
-        let mut h: Vec<i32> = (0..n)
-            .map(|i| {
-                (0..n)
-                    .map(|j| w.get(i, j) as i32 * spins[j] as i32)
-                    .sum()
-            })
-            .collect();
-        // async relaxation: update oscillators in rising-edge order
-        // (binary states form two groups; sweep order rotates so both
-        // groups get early updates across sweeps)
-        let mut order: Vec<usize> = (0..n).collect();
-        for sweep in 0..max_sweeps {
-            rng.shuffle(&mut order);
-            let mut changed = false;
-            for &i in &order {
-                let target = if h[i] > 0 {
-                    1
-                } else if h[i] < 0 {
-                    -1
-                } else {
-                    spins[i] // tie keeps state, like the zero-sum reference rule
-                };
-                if target != spins[i] {
-                    spins[i] = target;
-                    changed = true;
-                    let si = spins[i] as i32;
-                    for j in 0..n {
-                        // h_j gains 2 * W_ji * s_i
-                        h[j] += 2 * w.get(j, i) as i32 * si;
-                    }
-                }
-            }
-            effort = effort.saturating_add(1);
-            if !changed {
-                let _ = sweep;
-                break;
-            }
-        }
-        let cut = graph.cut_value(&spins);
-        if cut > best.cut {
-            best = CutResult {
-                spins,
-                cut,
-                effort,
-            };
-        } else {
-            best.effort = effort;
-        }
+    let out = solve_native(&problem, &params)
+        .expect("native portfolio on a validated max-cut reduction");
+    CutResult {
+        cut: graph.cut_value(&out.best_spins),
+        spins: out.best_spins,
+        effort: out.periods,
     }
-    best
 }
 
-/// Simulated-annealing baseline (single-spin-flip Metropolis).
+/// Simulated-annealing baseline on the same reduction.
 pub fn solve_sa(graph: &Graph, sweeps: usize, seed: u64) -> CutResult {
-    let n = graph.n;
-    let mut rng = Rng::new(seed);
-    let mut spins: Vec<i8> = (0..n).map(|_| rng.spin()).collect();
-    // Adjacency for O(deg) delta evaluation.
-    let mut adj: Vec<Vec<(usize, i32)>> = vec![Vec::new(); n];
-    for &(i, j, w) in &graph.edges {
-        adj[i].push((j, w));
-        adj[j].push((i, w));
-    }
-    let mut cut = graph.cut_value(&spins);
-    let mut best = spins.clone();
-    let mut best_cut = cut;
-    let (t0, t1) = (2.0f64, 0.05f64);
-    for s in 0..sweeps {
-        let temp = t0 * (t1 / t0).powf(s as f64 / sweeps.max(1) as f64);
-        for _ in 0..n {
-            let i = rng.usize_below(n);
-            // Flipping i toggles every incident edge's cut membership.
-            let delta: i64 = adj[i]
-                .iter()
-                .map(|&(j, w)| {
-                    if spins[i] != spins[j] {
-                        -(w as i64)
-                    } else {
-                        w as i64
-                    }
-                })
-                .sum();
-            if delta >= 0 || rng.f64() < (delta as f64 / temp).exp() {
-                spins[i] = -spins[i];
-                cut += delta;
-                if cut > best_cut {
-                    best_cut = cut;
-                    best.copy_from_slice(&spins);
-                }
-            }
-        }
-    }
+    let problem = max_cut(graph);
+    let r = sa::anneal(&problem, sweeps, seed);
     CutResult {
-        spins: best,
-        cut: best_cut,
+        cut: graph.cut_value(&r.spins),
+        spins: r.spins,
         effort: sweeps,
     }
 }
@@ -197,37 +77,18 @@ mod tests {
     use super::*;
 
     #[test]
-    fn cut_value_bipartite_complete() {
-        // K_{2,2}: optimal cut = all 4 edges.
-        let g = Graph {
-            n: 4,
-            edges: vec![(0, 2, 1), (0, 3, 1), (1, 2, 1), (1, 3, 1)],
-        };
-        assert_eq!(g.cut_value(&[1, 1, -1, -1]), 4);
-        assert_eq!(g.cut_value(&[1, -1, 1, -1]), 2);
-    }
-
-    #[test]
     fn onn_solves_bipartite_graph_optimally() {
-        // Bipartite graphs have frustration-free Ising embeddings: the
-        // ONN must find the full cut.
-        let g = Graph {
-            n: 6,
-            edges: vec![
-                (0, 3, 1),
-                (0, 4, 1),
-                (1, 3, 1),
-                (1, 5, 1),
-                (2, 4, 1),
-                (2, 5, 1),
-            ],
-        };
+        // K_{3,3}: odd-part complete bipartite graphs have no
+        // non-optimal strict local minima, so the portfolio's readout
+        // polish guarantees the full cut.
+        let g = Graph::complete_bipartite(3, 3);
         let res = solve_onn(&g, 10, 64, 123);
-        assert_eq!(res.cut, 6, "spins: {:?}", res.spins);
+        assert_eq!(res.cut, 9, "spins: {:?}", res.spins);
     }
 
     #[test]
     fn onn_competitive_with_sa_on_random_graphs() {
+        use crate::util::rng::Rng;
         let mut rng = Rng::new(9);
         let g = Graph::random(24, 0.3, &mut rng);
         let onn = solve_onn(&g, 20, 128, 1);
@@ -266,29 +127,16 @@ mod tests {
     }
 
     #[test]
-    fn async_fixed_points_are_phase_engine_fixed_points() {
-        // The async relaxation's fixed points must also be fixed points
-        // of the full phase-domain dynamics (Hopfield equivalence on the
-        // binary manifold).
-        use crate::onn::dynamics::FunctionalEngine;
-        use crate::onn::phase::spin_to_phase;
+    fn onn_results_are_single_flip_optimal() {
+        // The portfolio's readout polish guarantees no single spin flip
+        // can improve the returned cut (the local-optimality contract
+        // the old async relaxation provided).
+        use crate::solver::reductions::max_cut;
+        use crate::solver::sa::is_local_minimum;
+        use crate::util::rng::Rng;
         let mut rng = Rng::new(77);
         let g = Graph::random(14, 0.35, &mut rng);
         let res = solve_onn(&g, 5, 64, 8);
-        let cfg = NetworkConfig::paper(g.n);
-        let w = embed(&g, &cfg);
-        let mut eng = FunctionalEngine::new(cfg, w);
-        let mut ph: Vec<i32> = res.spins.iter().map(|&s| spin_to_phase(s, 16)).collect();
-        let before = ph.clone();
-        eng.period_step(&mut ph);
-        assert_eq!(ph, before, "async fixed point moved under phase dynamics");
-    }
-
-    #[test]
-    fn random_graph_edge_count_reasonable() {
-        let mut rng = Rng::new(4);
-        let g = Graph::random(30, 0.5, &mut rng);
-        let max_edges = 30 * 29 / 2;
-        assert!(g.edges.len() > max_edges / 4 && g.edges.len() < max_edges * 3 / 4);
+        assert!(is_local_minimum(&max_cut(&g), &res.spins));
     }
 }

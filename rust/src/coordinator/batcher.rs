@@ -14,9 +14,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::coordinator::job::{Job, RetrievalResult};
+use crate::coordinator::job::{Job, RetrievalResult, SolveJob, SolveResult};
 use crate::coordinator::metrics::Metrics;
 use crate::runtime::EngineFactory;
+use crate::solver::portfolio::{solve_native, PortfolioParams};
 
 /// Batch-window policy knobs.
 #[derive(Debug, Clone, Copy)]
@@ -155,6 +156,64 @@ pub fn worker_loop(
             metrics.record_completion(result.queue_latency, result.total_latency, timed_out);
             // Receiver may have hung up (client gave up) — that's fine.
             let _ = job.reply.send(result);
+        }
+    }
+    Ok(())
+}
+
+/// The solver worker loop: pulls [`SolveJob`]s from the shared queue and
+/// runs each through the annealed replica portfolio on a fresh
+/// [`crate::runtime::native::NativeEngine`] sized for the request
+/// (solve traffic spans arbitrary problem sizes, so engines are
+/// per-request rather than per-pool — the request itself is the batch:
+/// its replicas fill the engine's batch dimension).
+///
+/// Several workers may share one queue; each request runs on exactly one
+/// worker, so concurrency scales across requests.
+pub fn solve_worker_loop(
+    rx: Arc<Mutex<Receiver<SolveJob>>>,
+    metrics: Arc<Metrics>,
+) -> Result<()> {
+    loop {
+        let job = {
+            let guard = rx.lock().expect("solve queue lock poisoned");
+            guard.recv()
+        };
+        let Ok(job) = job else { break };
+        let dequeued = Instant::now();
+        let params = PortfolioParams {
+            replicas: job.req.replicas,
+            max_periods: job.req.max_periods,
+            schedule: job.req.schedule,
+            seed: job.req.seed,
+            ..Default::default()
+        };
+        match solve_native(&job.req.problem, &params) {
+            Ok(out) => {
+                let done = Instant::now();
+                let result = SolveResult {
+                    id: job.req.id,
+                    objective: out.best_energy + job.req.problem.metadata.offset,
+                    spins: out.best_spins,
+                    phases: out.best_phases,
+                    energy: out.best_energy,
+                    periods: out.periods,
+                    replicas: out.replicas,
+                    settled_replicas: out.settled_replicas,
+                    queue_latency: dequeued.duration_since(job.submitted),
+                    total_latency: done.duration_since(job.submitted),
+                };
+                metrics.record_solve_completion(result.total_latency, result.periods);
+                // Receiver may have hung up (client gave up) — fine.
+                let _ = job.reply.send(result);
+            }
+            Err(e) => {
+                // Router validation catches malformed requests, so this
+                // is an internal failure; drop the reply (the client
+                // surfaces "worker dropped reply") and count it.
+                metrics.record_solve_failure();
+                eprintln!("solve job {} failed: {e:#}", job.req.id);
+            }
         }
     }
     Ok(())

@@ -4,6 +4,8 @@ use std::time::{Duration, Instant};
 
 use crate::onn::patterns::Pattern;
 use crate::onn::phase::spin_to_phase;
+use crate::solver::anneal::Schedule;
+use crate::solver::problem::IsingProblem;
 
 /// A retrieval request: initial oscillator phases for one trial.
 #[derive(Debug, Clone)]
@@ -55,6 +57,64 @@ pub struct Job {
     pub req: RetrievalRequest,
     pub submitted: Instant,
     pub reply: std::sync::mpsc::Sender<RetrievalResult>,
+}
+
+/// An optimization request: one Ising instance solved by the annealed
+/// replica portfolio (`solver::portfolio`) on a worker-owned engine.
+#[derive(Debug, Clone)]
+pub struct SolveRequest {
+    pub id: u64,
+    pub problem: IsingProblem,
+    /// Random-init replicas run as one batch.
+    pub replicas: usize,
+    /// Periods driven per replica (whole chunks).
+    pub max_periods: usize,
+    pub schedule: Schedule,
+    pub seed: u64,
+}
+
+impl SolveRequest {
+    pub fn new(id: u64, problem: IsingProblem) -> Self {
+        Self {
+            id,
+            problem,
+            replicas: 32,
+            max_periods: 256,
+            schedule: Schedule::Geometric {
+                start: 0.6,
+                factor: 0.8,
+            },
+            seed: 1,
+        }
+    }
+}
+
+/// The outcome of one solve request.
+#[derive(Debug, Clone)]
+pub struct SolveResult {
+    pub id: u64,
+    /// Best decoded spins (length `problem.n`).
+    pub spins: Vec<i8>,
+    /// Best phase state (length `problem.n`) for sector decoders.
+    pub phases: Vec<i32>,
+    /// `problem.energy` of the best state (offset excluded).
+    pub energy: f64,
+    /// Objective value (energy + reduction offset).
+    pub objective: f64,
+    /// Total chunk-periods the engine drove.
+    pub periods: usize,
+    pub replicas: usize,
+    pub settled_replicas: usize,
+    pub queue_latency: Duration,
+    pub total_latency: Duration,
+}
+
+/// Internal envelope for solve traffic.
+#[derive(Debug)]
+pub struct SolveJob {
+    pub req: SolveRequest,
+    pub submitted: Instant,
+    pub reply: std::sync::mpsc::Sender<SolveResult>,
 }
 
 #[cfg(test)]

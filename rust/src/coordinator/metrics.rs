@@ -15,6 +15,13 @@ pub struct Metrics {
     /// Total latency sums in microseconds.
     queue_us: AtomicU64,
     total_us: AtomicU64,
+    // --- solve traffic (the optimization job class) ---
+    pub solves_submitted: AtomicU64,
+    pub solves_completed: AtomicU64,
+    pub solves_failed: AtomicU64,
+    solve_us: AtomicU64,
+    /// Engine chunk-periods spent on solve jobs (effort accounting).
+    pub solve_periods: AtomicU64,
 }
 
 /// A point-in-time snapshot for reporting.
@@ -29,6 +36,12 @@ pub struct MetricsSnapshot {
     /// Mean real jobs per batch / batch capacity is the caller's to
     /// compute; this is the mean real jobs per batch.
     pub mean_occupancy: f64,
+    // --- solve traffic ---
+    pub solves_submitted: u64,
+    pub solves_completed: u64,
+    pub solves_failed: u64,
+    pub mean_solve_ms: f64,
+    pub solve_periods: u64,
 }
 
 impl Metrics {
@@ -53,9 +66,26 @@ impl Metrics {
             .fetch_add(total.as_micros() as u64, Ordering::Relaxed);
     }
 
+    pub fn record_solve_submit(&self) {
+        self.solves_submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_solve_completion(&self, total: Duration, periods: usize) {
+        self.solves_completed.fetch_add(1, Ordering::Relaxed);
+        self.solve_us
+            .fetch_add(total.as_micros() as u64, Ordering::Relaxed);
+        self.solve_periods
+            .fetch_add(periods as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_solve_failure(&self) {
+        self.solves_failed.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let completed = self.completed.load(Ordering::Relaxed);
         let batches = self.batches.load(Ordering::Relaxed);
+        let solves_completed = self.solves_completed.load(Ordering::Relaxed);
         let div = |num: u64, den: u64| if den == 0 { 0.0 } else { num as f64 / den as f64 };
         MetricsSnapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
@@ -65,6 +95,11 @@ impl Metrics {
             mean_queue_ms: div(self.queue_us.load(Ordering::Relaxed), completed) / 1000.0,
             mean_total_ms: div(self.total_us.load(Ordering::Relaxed), completed) / 1000.0,
             mean_occupancy: div(self.batched_jobs.load(Ordering::Relaxed), batches),
+            solves_submitted: self.solves_submitted.load(Ordering::Relaxed),
+            solves_completed,
+            solves_failed: self.solves_failed.load(Ordering::Relaxed),
+            mean_solve_ms: div(self.solve_us.load(Ordering::Relaxed), solves_completed) / 1000.0,
+            solve_periods: self.solve_periods.load(Ordering::Relaxed),
         }
     }
 }
@@ -96,5 +131,21 @@ mod tests {
         let s = Metrics::default().snapshot();
         assert_eq!(s.mean_total_ms, 0.0);
         assert_eq!(s.mean_occupancy, 0.0);
+        assert_eq!(s.mean_solve_ms, 0.0);
+    }
+
+    #[test]
+    fn solve_counters_aggregate() {
+        let m = Metrics::default();
+        m.record_solve_submit();
+        m.record_solve_submit();
+        m.record_solve_completion(Duration::from_millis(8), 128);
+        m.record_solve_failure();
+        let s = m.snapshot();
+        assert_eq!(s.solves_submitted, 2);
+        assert_eq!(s.solves_completed, 1);
+        assert_eq!(s.solves_failed, 1);
+        assert_eq!(s.solve_periods, 128);
+        assert!((s.mean_solve_ms - 8.0).abs() < 0.01);
     }
 }

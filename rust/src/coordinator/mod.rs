@@ -10,6 +10,11 @@
 //! std threads + channels stand in for tokio (unavailable offline); the
 //! batcher implements the same size-or-deadline policy a vLLM-style
 //! router uses.
+//!
+//! Since PR 1 the same front-end also serves *optimization* traffic:
+//! `"type": "solve"` JSON lines become `job::SolveRequest`s handled by a
+//! shared solver pool driving `solver::portfolio` (see
+//! `DESIGN_SOLVER.md`).
 
 pub mod batcher;
 pub mod job;

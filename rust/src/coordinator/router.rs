@@ -1,5 +1,7 @@
 //! Request router: dispatches retrieval jobs to the worker pool serving
-//! the job's network size.
+//! the job's network size, and solve jobs to the shared solver pool
+//! (solver workers build an engine per request, so one pool serves
+//! every problem size).
 
 use std::collections::BTreeMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -8,12 +10,15 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::job::{Job, RetrievalRequest, RetrievalResult};
+use crate::coordinator::job::{
+    Job, RetrievalRequest, RetrievalResult, SolveJob, SolveRequest, SolveResult,
+};
 use crate::coordinator::metrics::Metrics;
 
 /// Routing table: one job queue per network size.
 pub struct Router {
     queues: Mutex<BTreeMap<usize, Sender<Job>>>,
+    solver: Mutex<Option<Sender<SolveJob>>>,
     pub metrics: Arc<Metrics>,
 }
 
@@ -21,6 +26,7 @@ impl Router {
     pub fn new(metrics: Arc<Metrics>) -> Self {
         Self {
             queues: Mutex::new(BTreeMap::new()),
+            solver: Mutex::new(None),
             metrics,
         }
     }
@@ -65,9 +71,61 @@ impl Router {
         Ok(rrx)
     }
 
+    /// Register the solver worker pool's queue.  Replacing an existing
+    /// route is an error (shut down first).
+    pub fn register_solver(&self, tx: Sender<SolveJob>) -> Result<()> {
+        let mut s = self.solver.lock().unwrap();
+        if s.is_some() {
+            return Err(anyhow!("solver pool already registered"));
+        }
+        *s = Some(tx);
+        Ok(())
+    }
+
+    pub fn has_solver(&self) -> bool {
+        self.solver.lock().unwrap().is_some()
+    }
+
+    /// Submit a solve request; the returned channel yields the result.
+    pub fn submit_solve(&self, req: SolveRequest) -> Result<Receiver<SolveResult>> {
+        if let Err(e) = req.problem.validate() {
+            return Err(anyhow!("solve request {}: {e}", req.id));
+        }
+        if req.replicas == 0 || req.max_periods == 0 {
+            return Err(anyhow!(
+                "solve request {}: replicas and max_periods must be positive",
+                req.id
+            ));
+        }
+        // The solver pool runs paper-precision engines (16-step phase
+        // wheel); reject over-wide sector encodings here so the worker
+        // never fails internally on a client mistake.
+        if req.problem.sectors > 16 {
+            return Err(anyhow!(
+                "solve request {}: {} sectors exceed the 16-step phase wheel",
+                req.id,
+                req.problem.sectors
+            ));
+        }
+        let s = self.solver.lock().unwrap();
+        let tx = s
+            .as_ref()
+            .ok_or_else(|| anyhow!("no solver pool registered"))?;
+        let (rtx, rrx) = channel();
+        self.metrics.record_solve_submit();
+        tx.send(SolveJob {
+            req,
+            submitted: Instant::now(),
+            reply: rtx,
+        })
+        .map_err(|_| anyhow!("solver queue closed"))?;
+        Ok(rrx)
+    }
+
     /// Drop all routes (workers drain and exit).
     pub fn shutdown(&self) {
         self.queues.lock().unwrap().clear();
+        *self.solver.lock().unwrap() = None;
     }
 }
 
@@ -128,5 +186,43 @@ mod tests {
         r.register(9, tx).unwrap();
         r.shutdown();
         assert!(r.submit(req(9)).is_err());
+    }
+
+    fn solve_req(n: usize) -> SolveRequest {
+        use crate::solver::problem::IsingProblem;
+        SolveRequest::new(1, IsingProblem::new(n))
+    }
+
+    #[test]
+    fn solver_route_lifecycle() {
+        let r = Router::new(Arc::new(Metrics::default()));
+        assert!(!r.has_solver());
+        assert!(r.submit_solve(solve_req(4)).is_err(), "no pool yet");
+        let (tx, rx) = channel();
+        r.register_solver(tx).unwrap();
+        assert!(r.has_solver());
+        let (tx2, _rx2) = channel();
+        assert!(r.register_solver(tx2).is_err(), "duplicate pool");
+        let _pending = r.submit_solve(solve_req(4)).unwrap();
+        assert_eq!(rx.try_recv().unwrap().req.problem.n, 4);
+        assert_eq!(r.metrics.solves_submitted.load(std::sync::atomic::Ordering::Relaxed), 1);
+        r.shutdown();
+        assert!(!r.has_solver());
+    }
+
+    #[test]
+    fn malformed_solve_rejected() {
+        let r = Router::new(Arc::new(Metrics::default()));
+        let (tx, _rx) = channel();
+        r.register_solver(tx).unwrap();
+        let mut bad = solve_req(3);
+        bad.problem.j.pop();
+        assert!(r.submit_solve(bad).is_err());
+        let mut bad = solve_req(3);
+        bad.replicas = 0;
+        assert!(r.submit_solve(bad).is_err());
+        let mut bad = solve_req(3);
+        bad.problem.sectors = 17; // beyond the 16-step phase wheel
+        assert!(r.submit_solve(bad).is_err());
     }
 }

@@ -1,32 +1,48 @@
-//! The coordinator service: wires router + batchers + engine workers,
-//! and optionally speaks a JSON-lines protocol over TCP (the stand-in
-//! for the paper's laptop-UI -> PYNQ network link).
+//! The coordinator service: wires router + batchers + engine workers +
+//! the shared solver pool, and optionally speaks a JSON-lines protocol
+//! over TCP (the stand-in for the paper's laptop-UI -> PYNQ network
+//! link).  Two job classes share the front-end: pattern retrieval
+//! (routed by network size to a fixed-weights engine pool) and Ising
+//! optimization (`"type": "solve"`, handled by the solver pool — see
+//! `DESIGN_SOLVER.md` for the wire format).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::channel;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::batcher::{worker_loop, BatchPolicy};
-use crate::coordinator::job::{RetrievalRequest, RetrievalResult};
+use crate::coordinator::batcher::{solve_worker_loop, worker_loop, BatchPolicy};
+use crate::coordinator::job::{
+    RetrievalRequest, RetrievalResult, SolveRequest, SolveResult,
+};
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
 use crate::coordinator::router::Router;
 use crate::onn::config::NetworkConfig;
 use crate::onn::weights::WeightMatrix;
-use crate::runtime::artifact::Manifest;
-use crate::runtime::engine::{PjrtContext, PjrtEngine};
 use crate::runtime::native::NativeEngine;
 use crate::runtime::EngineFactory;
+use crate::solver::anneal::Schedule;
+use crate::solver::problem::IsingProblem;
 use crate::util::json::Json;
+
+#[cfg(feature = "pjrt")]
+use crate::runtime::artifact::Manifest;
+#[cfg(feature = "pjrt")]
+use crate::runtime::engine::{PjrtContext, PjrtEngine};
+
+/// Solver workers sharing the solve queue (engines are per-request, so
+/// this bounds concurrent solves, not problem sizes).
+const SOLVE_WORKERS: usize = 2;
 
 /// Which engine implementation a pool should run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EngineKind {
-    /// AOT artifact through PJRT (production path).
+    /// AOT artifact through PJRT (production path; needs the `pjrt`
+    /// build feature).
     Pjrt,
     /// In-process functional engine (fallback / oracle).
     Native,
@@ -74,13 +90,15 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Spin up one worker per pool spec.
+    /// Spin up one worker per pool spec, plus the shared solver pool
+    /// (always present: solve traffic needs no pre-registered weights).
     pub fn start(specs: Vec<PoolSpec>, policy: BatchPolicy) -> Result<Coordinator> {
         let metrics = Arc::new(Metrics::default());
         let router = Arc::new(Router::new(metrics.clone()));
         let mut workers = Vec::new();
         // Manifest is loaded once here (cheap); each PJRT worker compiles
         // its own executable in-thread.
+        #[cfg(feature = "pjrt")]
         let manifest = if specs.iter().any(|s| s.kind == EngineKind::Pjrt) {
             Some(Manifest::load(&crate::runtime::artifact::default_dir())?)
         } else {
@@ -91,7 +109,7 @@ impl Coordinator {
             let n = spec.cfg.n;
             let (tx, rx) = channel();
             router.register(n, tx)?;
-            let rx = std::sync::Arc::new(std::sync::Mutex::new(rx));
+            let rx = Arc::new(Mutex::new(rx));
             for _ in 0..spec.workers {
                 let factory: EngineFactory = match spec.kind {
                     EngineKind::Native => {
@@ -102,6 +120,7 @@ impl Coordinator {
                                 as Box<dyn crate::runtime::ChunkEngine>)
                         })
                     }
+                    #[cfg(feature = "pjrt")]
                     EngineKind::Pjrt => {
                         let info = manifest
                             .as_ref()
@@ -115,6 +134,13 @@ impl Coordinator {
                                 as Box<dyn crate::runtime::ChunkEngine>)
                         })
                     }
+                    #[cfg(not(feature = "pjrt"))]
+                    EngineKind::Pjrt => {
+                        return Err(anyhow!(
+                            "pool for n={n} wants the pjrt engine, but this \
+                             binary was built without the 'pjrt' feature"
+                        ))
+                    }
                 };
                 let weights = spec.weights.to_f32();
                 let m = metrics.clone();
@@ -124,6 +150,17 @@ impl Coordinator {
                 }));
             }
         }
+
+        // The shared solver pool: optimization traffic for any size.
+        let (stx, srx) = channel();
+        router.register_solver(stx)?;
+        let srx = Arc::new(Mutex::new(srx));
+        for _ in 0..SOLVE_WORKERS {
+            let m = metrics.clone();
+            let rx = srx.clone();
+            workers.push(std::thread::spawn(move || solve_worker_loop(rx, m)));
+        }
+
         Ok(Coordinator {
             router,
             metrics,
@@ -142,6 +179,12 @@ impl Coordinator {
         rx.recv().map_err(|_| anyhow!("worker dropped reply"))
     }
 
+    /// Submit an optimization job and wait.
+    pub fn solve_sync(&self, req: SolveRequest) -> Result<SolveResult> {
+        let rx = self.router.submit_solve(req)?;
+        rx.recv().map_err(|_| anyhow!("solver dropped reply"))
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         self.metrics.snapshot()
     }
@@ -158,11 +201,32 @@ impl Coordinator {
 
 // ---- TCP JSON-lines front-end ------------------------------------------------
 
-/// Request line: {"id": 1, "n": 9, "phases": [0,8,...], "max_periods": 256}
-/// Response line: {"id": 1, "phases": [...], "settled": 12} (settled
-/// null on timeout, "error" on failure).
+/// Retrieval request line:
+///   {"id": 1, "n": 9, "phases": [0,8,...], "max_periods": 256}
+///   -> {"id": 1, "phases": [...], "settled": 12}
+/// Solve request line (see DESIGN_SOLVER.md):
+///   {"type": "solve", "id": 2, "n": 6, "edges": [[0,3,1],...], ...}
+///   -> {"id": 2, "spins": [...], "energy": -9, ...}
+/// Errors come back as {"error": "..."} either way.
 pub fn handle_line(router: &Router, line: &str) -> String {
-    match parse_request(line).and_then(|req| {
+    let parsed = match Json::parse(line) {
+        Ok(v) => v,
+        Err(e) => {
+            return Json::obj(vec![("error", Json::str(format!("bad json: {e}")))]).to_string()
+        }
+    };
+    match parsed.get("type").and_then(Json::as_str) {
+        Some("solve") => handle_solve_value(router, &parsed),
+        None | Some("retrieve") => handle_retrieval_value(router, &parsed),
+        Some(other) => {
+            Json::obj(vec![("error", Json::str(format!("unknown request type '{other}'")))])
+                .to_string()
+        }
+    }
+}
+
+fn handle_retrieval_value(router: &Router, v: &Json) -> String {
+    match parse_request(v).and_then(|req| {
         let id = req.id;
         let rx = router.submit(req)?;
         let res = rx.recv().map_err(|_| anyhow!("worker dropped reply"))?;
@@ -183,8 +247,32 @@ pub fn handle_line(router: &Router, line: &str) -> String {
     }
 }
 
-fn parse_request(line: &str) -> Result<RetrievalRequest> {
-    let v = Json::parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
+fn handle_solve_value(router: &Router, v: &Json) -> String {
+    match parse_solve_request(v).and_then(|req| {
+        let id = req.id;
+        let rx = router.submit_solve(req)?;
+        let res = rx.recv().map_err(|_| anyhow!("solver dropped reply"))?;
+        Ok((id, res))
+    }) {
+        Ok((id, res)) => Json::obj(vec![
+            ("id", Json::num(id as f64)),
+            (
+                "spins",
+                Json::arr_i32(&res.spins.iter().map(|&s| s as i32).collect::<Vec<_>>()),
+            ),
+            ("phases", Json::arr_i32(&res.phases)),
+            ("energy", Json::num(res.energy)),
+            ("objective", Json::num(res.objective)),
+            ("periods", Json::num(res.periods as f64)),
+            ("replicas", Json::num(res.replicas as f64)),
+            ("settled_replicas", Json::num(res.settled_replicas as f64)),
+        ])
+        .to_string(),
+        Err(e) => Json::obj(vec![("error", Json::str(e.to_string()))]).to_string(),
+    }
+}
+
+fn parse_request(v: &Json) -> Result<RetrievalRequest> {
     let n = v
         .get("n")
         .and_then(Json::as_usize)
@@ -208,6 +296,120 @@ fn parse_request(line: &str) -> Result<RetrievalRequest> {
     })
 }
 
+/// Largest problem size accepted from the wire: the dense coupling
+/// matrix is n^2 f64s, so an unbounded `n` would let one request line
+/// allocate the coordinator to death.  4096 oscillators is ~134 MB of
+/// couplings — far beyond any current engine, cheap enough to reject.
+const MAX_WIRE_N: usize = 4096;
+/// Effort ceilings for wire requests (a local caller can exceed them by
+/// using `Coordinator::solve_sync` directly).
+const MAX_WIRE_REPLICAS: usize = 4096;
+const MAX_WIRE_PERIODS: usize = 65_536;
+
+/// Parse a solve request.  Couplings come either dense
+/// (`"j": [n*n floats]`) or sparse (`"edges": [[i, j, J_ij], ...]`);
+/// optional fields: `"h"` (length n), `"sectors"` (default 2),
+/// `"replicas"`, `"max_periods"`, `"schedule"` (geometric | linear |
+/// constant), `"noise"` (starting amplitude), `"seed"`, `"offset"`.
+fn parse_solve_request(v: &Json) -> Result<SolveRequest> {
+    let n = v
+        .get("n")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("missing 'n'"))?;
+    if n == 0 {
+        return Err(anyhow!("'n' must be positive"));
+    }
+    if n > MAX_WIRE_N {
+        return Err(anyhow!("'n' = {n} exceeds the wire limit {MAX_WIRE_N}"));
+    }
+    let mut problem = IsingProblem::new(n).with_kind("wire");
+    match (v.get("j"), v.get("edges")) {
+        (Some(j), _) => {
+            let arr = j.as_arr().ok_or_else(|| anyhow!("'j' must be an array"))?;
+            if arr.len() != n * n {
+                return Err(anyhow!("'j' has {} entries, want n^2 = {}", arr.len(), n * n));
+            }
+            for (idx, x) in arr.iter().enumerate() {
+                problem.j[idx] = x.as_f64().ok_or_else(|| anyhow!("non-numeric 'j' entry"))?;
+            }
+            // The Hamiltonian ignores the diagonal, so a client putting
+            // biases there would silently lose them — reject instead.
+            for i in 0..n {
+                if problem.j[i * n + i] != 0.0 {
+                    return Err(anyhow!("'j' diagonal must be zero; use 'h' for biases"));
+                }
+            }
+        }
+        (None, Some(edges)) => {
+            let arr = edges
+                .as_arr()
+                .ok_or_else(|| anyhow!("'edges' must be an array"))?;
+            for e in arr {
+                let t = e.as_arr().ok_or_else(|| anyhow!("edge must be [i, j, J]"))?;
+                if t.len() != 3 {
+                    return Err(anyhow!("edge must be [i, j, J]"));
+                }
+                let (i, k) = (
+                    t[0].as_usize().ok_or_else(|| anyhow!("bad edge index"))?,
+                    t[1].as_usize().ok_or_else(|| anyhow!("bad edge index"))?,
+                );
+                let w = t[2].as_f64().ok_or_else(|| anyhow!("bad edge weight"))?;
+                if i >= n || k >= n || i == k {
+                    return Err(anyhow!("edge ({i}, {k}) out of range for n={n}"));
+                }
+                problem.add_j(i, k, w);
+            }
+        }
+        (None, None) => return Err(anyhow!("missing couplings: provide 'j' or 'edges'")),
+    }
+    if let Some(h) = v.get("h") {
+        let arr = h.as_arr().ok_or_else(|| anyhow!("'h' must be an array"))?;
+        if arr.len() != n {
+            return Err(anyhow!("'h' has {} entries, want n = {}", arr.len(), n));
+        }
+        for (i, x) in arr.iter().enumerate() {
+            problem.h[i] = x.as_f64().ok_or_else(|| anyhow!("non-numeric 'h' entry"))?;
+        }
+    }
+    problem.sectors = v.get("sectors").and_then(Json::as_usize).unwrap_or(2);
+    // Validate here so a bad request fails at the router with a clear
+    // message instead of deep in the worker (which would drop the
+    // reply and count a client mistake as an internal failure).  16 is
+    // the paper-precision phase wheel every served engine uses.
+    if !(2..=16).contains(&problem.sectors) {
+        return Err(anyhow!(
+            "'sectors' = {} outside 2..=16 (the phase wheel has 16 steps)",
+            problem.sectors
+        ));
+    }
+    problem.metadata.offset = v.get("offset").and_then(Json::as_f64).unwrap_or(0.0);
+
+    let noise = v.get("noise").and_then(Json::as_f64).unwrap_or(0.6);
+    let schedule_name = v
+        .get("schedule")
+        .and_then(Json::as_str)
+        .unwrap_or("geometric");
+    let schedule = Schedule::parse(schedule_name, noise)
+        .ok_or_else(|| anyhow!("unknown schedule '{schedule_name}'"))?;
+
+    let replicas = v.get("replicas").and_then(Json::as_usize).unwrap_or(32);
+    let max_periods = v.get("max_periods").and_then(Json::as_usize).unwrap_or(256);
+    if replicas > MAX_WIRE_REPLICAS || max_periods > MAX_WIRE_PERIODS {
+        return Err(anyhow!(
+            "effort caps exceeded: replicas <= {MAX_WIRE_REPLICAS}, \
+             max_periods <= {MAX_WIRE_PERIODS}"
+        ));
+    }
+    Ok(SolveRequest {
+        id: v.get("id").and_then(Json::as_usize).unwrap_or(0) as u64,
+        problem,
+        replicas,
+        max_periods,
+        schedule,
+        seed: v.get("seed").and_then(Json::as_usize).unwrap_or(1) as u64,
+    })
+}
+
 /// Serve JSON-lines over TCP until the listener errors or the router is
 /// shut down.  One thread per connection (std-only substitute for the
 /// async accept loop).
@@ -218,7 +420,7 @@ pub fn serve_tcp(router: Arc<Router>, listener: TcpListener) -> Result<()> {
         std::thread::spawn(move || {
             let _ = handle_conn(&conn_router, stream);
         });
-        if router.routes().is_empty() {
+        if router.routes().is_empty() && !router.has_solver() {
             break;
         }
     }
@@ -244,10 +446,13 @@ fn handle_conn(router: &Router, stream: TcpStream) -> Result<()> {
 mod tests {
     use super::*;
 
+    fn parse_str(s: &str) -> Result<RetrievalRequest> {
+        parse_request(&Json::parse(s).map_err(|e| anyhow!("bad json: {e}"))?)
+    }
+
     #[test]
     fn parse_request_roundtrip() {
-        let r =
-            parse_request(r#"{"id": 3, "n": 2, "phases": [0, 8], "max_periods": 64}"#).unwrap();
+        let r = parse_str(r#"{"id": 3, "n": 2, "phases": [0, 8], "max_periods": 64}"#).unwrap();
         assert_eq!(r.id, 3);
         assert_eq!(r.n, 2);
         assert_eq!(r.phases, vec![0, 8]);
@@ -256,11 +461,10 @@ mod tests {
 
     #[test]
     fn parse_request_defaults_and_errors() {
-        let r = parse_request(r#"{"n": 1, "phases": [0]}"#).unwrap();
+        let r = parse_str(r#"{"n": 1, "phases": [0]}"#).unwrap();
         assert_eq!(r.max_periods, 256);
-        assert!(parse_request("{}").is_err());
-        assert!(parse_request("not json").is_err());
-        assert!(parse_request(r#"{"n": 1, "phases": ["x"]}"#).is_err());
+        assert!(parse_str("{}").is_err());
+        assert!(parse_str(r#"{"n": 1, "phases": ["x"]}"#).is_err());
     }
 
     #[test]
@@ -268,5 +472,62 @@ mod tests {
         let router = Router::new(Arc::new(Metrics::default()));
         let resp = handle_line(&router, r#"{"n": 5, "phases": [0,0,0,0,0]}"#);
         assert!(resp.contains("error"), "{resp}");
+        let resp = handle_line(&router, "not json");
+        assert!(resp.contains("bad json"), "{resp}");
+        let resp = handle_line(&router, r#"{"type": "frobnicate"}"#);
+        assert!(resp.contains("unknown request type"), "{resp}");
+    }
+
+    #[test]
+    fn parse_solve_request_edges_form() {
+        let r = parse_solve_request(
+            &Json::parse(
+                r#"{"type":"solve","id":7,"n":3,
+                    "edges":[[0,1,-1],[1,2,-1]],
+                    "replicas":4,"max_periods":32,
+                    "schedule":"linear","noise":0.4,"seed":9}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(r.id, 7);
+        assert_eq!(r.problem.n, 3);
+        assert_eq!(r.problem.get_j(0, 1), -1.0);
+        assert_eq!(r.problem.get_j(1, 0), -1.0);
+        assert_eq!(r.problem.get_j(0, 2), 0.0);
+        assert_eq!(r.replicas, 4);
+        assert_eq!(r.max_periods, 32);
+        assert_eq!(r.schedule, Schedule::Linear { start: 0.4 });
+        assert_eq!(r.seed, 9);
+    }
+
+    #[test]
+    fn parse_solve_request_dense_form_and_errors() {
+        let ok = parse_solve_request(
+            &Json::parse(r#"{"n":2,"j":[0,-1,-1,0],"h":[0.5,0]}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(ok.problem.get_j(0, 1), -1.0);
+        assert_eq!(ok.problem.h[0], 0.5);
+        assert_eq!(ok.schedule.name(), "geometric");
+        for bad in [
+            r#"{"j":[0,0,0,0]}"#,                      // missing n
+            r#"{"n":2}"#,                              // missing couplings
+            r#"{"n":2,"j":[0,1]}"#,                    // wrong j length
+            r#"{"n":2,"j":[1,0,0,0]}"#,                // nonzero diagonal
+            r#"{"n":2,"j":[0,1,1,0],"h":[1]}"#,        // wrong h length
+            r#"{"n":2,"edges":[[0,0,1]]}"#,            // self-loop
+            r#"{"n":2,"edges":[[0,5,1]]}"#,            // out of range
+            r#"{"n":2,"j":[0,1,1,0],"schedule":"x"}"#, // unknown schedule
+            r#"{"n":100000000,"edges":[]}"#,           // over the wire size cap
+            r#"{"n":2,"j":[0,1,1,0],"replicas":1000000}"#, // over the effort cap
+            r#"{"n":2,"j":[0,1,1,0],"sectors":17}"#,   // beyond the phase wheel
+            r#"{"n":2,"j":[0,1,1,0],"sectors":1}"#,    // degenerate sector count
+        ] {
+            assert!(
+                parse_solve_request(&Json::parse(bad).unwrap()).is_err(),
+                "{bad}"
+            );
+        }
     }
 }

@@ -8,3 +8,4 @@ pub mod datasets;
 pub mod report;
 pub mod retrieval;
 pub mod scaling;
+pub mod solverbench;

@@ -1,0 +1,307 @@
+//! Solver-path harness: ONN annealed portfolio vs simulated annealing at
+//! matched effort on G(n, p) random graphs, plus the solver throughput
+//! sweep recorded to `BENCH_solver.json` so future PRs have a perf
+//! trajectory for this path.
+//!
+//! Effort accounting: one ONN period updates all `n` oscillators of
+//! every replica, one SA sweep updates `n` spins once — so equal
+//! elementary spin updates means `sa_sweeps = replicas * max_periods`.
+//! That is the *hardware-hostile* accounting (the batched engine does
+//! replicas in parallel, SA gets the same updates sequentially); the
+//! portfolio has to win on search quality, not on bookkeeping.
+
+use std::time::Instant;
+
+use crate::harness::bench;
+use crate::solver::anneal::Schedule;
+use crate::solver::graph::Graph;
+use crate::solver::portfolio::{solve_native, PortfolioParams};
+use crate::solver::reductions::max_cut;
+use crate::solver::sa;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// One instance's head-to-head outcome.
+#[derive(Debug, Clone)]
+pub struct QualityRow {
+    pub instance: usize,
+    pub edges: usize,
+    pub onn_cut: i64,
+    pub sa_cut: i64,
+}
+
+/// The quality comparison over a batch of random instances.
+#[derive(Debug, Clone)]
+pub struct QualityReport {
+    pub n: usize,
+    pub edge_prob: f64,
+    pub replicas: usize,
+    pub max_periods: usize,
+    pub sa_sweeps: usize,
+    pub rows: Vec<QualityRow>,
+}
+
+impl QualityReport {
+    pub fn onn_mean(&self) -> f64 {
+        stats::mean(&self.rows.iter().map(|r| r.onn_cut as f64).collect::<Vec<_>>())
+    }
+
+    pub fn sa_mean(&self) -> f64 {
+        stats::mean(&self.rows.iter().map(|r| r.sa_cut as f64).collect::<Vec<_>>())
+    }
+
+    /// ONN mean / SA mean (1.0 = parity).
+    pub fn ratio(&self) -> f64 {
+        let sa = self.sa_mean();
+        if sa == 0.0 {
+            1.0
+        } else {
+            self.onn_mean() / sa
+        }
+    }
+
+    pub fn table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "max-cut on G(n={}, p={}) — ONN portfolio ({} replicas x {} periods) \
+             vs SA ({} sweeps, equal spin updates)\n",
+            self.n, self.edge_prob, self.replicas, self.max_periods, self.sa_sweeps
+        ));
+        out.push_str(&format!(
+            "  {:>8} {:>7} {:>9} {:>9} {:>8}\n",
+            "instance", "edges", "ONN cut", "SA cut", "ratio"
+        ));
+        for r in &self.rows {
+            out.push_str(&format!(
+                "  {:>8} {:>7} {:>9} {:>9} {:>8.3}\n",
+                r.instance,
+                r.edges,
+                r.onn_cut,
+                r.sa_cut,
+                r.onn_cut as f64 / (r.sa_cut.max(1)) as f64
+            ));
+        }
+        out.push_str(&format!(
+            "  mean: ONN {:.2} vs SA {:.2}  ratio {:.4}  -> {}\n",
+            self.onn_mean(),
+            self.sa_mean(),
+            self.ratio(),
+            if self.ratio() >= 0.98 {
+                "MATCHES-OR-BEATS"
+            } else {
+                "BEHIND"
+            }
+        ));
+        out
+    }
+}
+
+/// Head-to-head quality on `instances` random graphs.
+pub fn quality_vs_sa(
+    n: usize,
+    edge_prob: f64,
+    instances: usize,
+    replicas: usize,
+    max_periods: usize,
+    seed: u64,
+) -> QualityReport {
+    let sa_sweeps = replicas * max_periods;
+    let mut rng = Rng::new(seed);
+    let mut rows = Vec::with_capacity(instances);
+    for inst in 0..instances {
+        let g = Graph::random(n, edge_prob, &mut rng);
+        let problem = max_cut(&g);
+        let params = PortfolioParams {
+            replicas,
+            max_periods,
+            schedule: Schedule::Geometric {
+                start: 0.5,
+                factor: 0.8,
+            },
+            seed: seed.wrapping_add(1 + inst as u64),
+            ..Default::default()
+        };
+        let onn = solve_native(&problem, &params).expect("portfolio on valid reduction");
+        let sa = sa::anneal(&problem, sa_sweeps, seed.wrapping_add(1000 + inst as u64));
+        rows.push(QualityRow {
+            instance: inst,
+            edges: g.edges.len(),
+            onn_cut: g.cut_value(&onn.best_spins),
+            sa_cut: g.cut_value(&sa.spins),
+        });
+    }
+    QualityReport {
+        n,
+        edge_prob,
+        replicas,
+        max_periods,
+        sa_sweeps,
+        rows,
+    }
+}
+
+/// One throughput measurement: replicas x periods of annealed portfolio
+/// work per second on the native engine at size `n`.
+#[derive(Debug, Clone)]
+pub struct ThroughputPoint {
+    pub n: usize,
+    pub replicas: usize,
+    pub periods: usize,
+    pub median_s: f64,
+    pub replica_periods_per_sec: f64,
+}
+
+/// Measure solver throughput across network sizes with the shared bench
+/// timer (`harness::bench`).
+pub fn throughput_sweep(
+    sizes: &[usize],
+    replicas: usize,
+    periods: usize,
+    seed: u64,
+) -> Vec<ThroughputPoint> {
+    let mut points = Vec::with_capacity(sizes.len());
+    for &n in sizes {
+        let mut rng = Rng::new(seed.wrapping_add(n as u64));
+        let g = Graph::random(n, (8.0 / n as f64).min(0.5), &mut rng);
+        let problem = max_cut(&g);
+        let params = PortfolioParams {
+            replicas,
+            max_periods: periods,
+            schedule: Schedule::Geometric {
+                start: 0.5,
+                factor: 0.8,
+            },
+            seed,
+            plateau_chunks: 0, // disable the stall exit for steadier work
+            ..Default::default()
+        };
+        // The run is deterministic per (params, seed), so one probe run
+        // reports the periods every timed iteration will actually drive
+        // (the all-settled early exit may stop short of the nominal
+        // budget; rating nominal work would inflate the throughput).
+        let actual_periods = solve_native(&problem, &params)
+            .expect("portfolio probe")
+            .periods;
+        let r = bench::bench(&format!("solver/portfolio_n{n}"), 1, 3, || {
+            let out = solve_native(&problem, &params).expect("portfolio");
+            assert_eq!(out.replicas, replicas);
+        });
+        let median_s = r.median.as_secs_f64();
+        points.push(ThroughputPoint {
+            n,
+            replicas,
+            periods: actual_periods,
+            median_s,
+            replica_periods_per_sec: (replicas * actual_periods) as f64
+                / median_s.max(1e-12),
+        });
+    }
+    points
+}
+
+/// Serialize a throughput sweep as the `BENCH_solver.json` document.
+pub fn bench_json(points: &[ThroughputPoint], recorded_unix_s: u64) -> Json {
+    Json::obj(vec![
+        ("bench", Json::str("solver_portfolio_throughput")),
+        ("engine", Json::str("native")),
+        ("unit", Json::str("replica_periods_per_sec")),
+        ("recorded_unix_s", Json::num(recorded_unix_s as f64)),
+        (
+            "points",
+            Json::Arr(
+                points
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("n", Json::num(p.n as f64)),
+                            ("replicas", Json::num(p.replicas as f64)),
+                            ("periods", Json::num(p.periods as f64)),
+                            ("median_s", Json::num(p.median_s)),
+                            (
+                                "replica_periods_per_sec",
+                                Json::num(p.replica_periods_per_sec),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Run the sweep and write `BENCH_solver.json`-style output to `path`.
+pub fn record_throughput(
+    path: &std::path::Path,
+    sizes: &[usize],
+    replicas: usize,
+    periods: usize,
+    seed: u64,
+) -> std::io::Result<Vec<ThroughputPoint>> {
+    let t0 = Instant::now();
+    let points = throughput_sweep(sizes, replicas, periods, seed);
+    let stamp = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let doc = bench_json(&points, stamp);
+    std::fs::write(path, format!("{doc}\n"))?;
+    eprintln!(
+        "wrote {} ({} sizes in {:.1}s)",
+        path.display(),
+        points.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(points)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quality_report_aggregates() {
+        // Tiny sizes keep this test fast; the full comparison runs in
+        // the integration suite and the `solve-bench` CLI.
+        let rep = quality_vs_sa(12, 0.3, 2, 4, 32, 7);
+        assert_eq!(rep.rows.len(), 2);
+        assert_eq!(rep.sa_sweeps, 4 * 32);
+        assert!(rep.onn_mean() > 0.0);
+        assert!(rep.ratio() > 0.5, "ratio {}", rep.ratio());
+        let t = rep.table();
+        assert!(t.contains("ONN"), "{t}");
+    }
+
+    #[test]
+    fn throughput_points_have_positive_rates() {
+        let pts = throughput_sweep(&[8, 12], 4, 16, 3);
+        assert_eq!(pts.len(), 2);
+        for p in &pts {
+            assert!(p.replica_periods_per_sec > 0.0);
+        }
+    }
+
+    #[test]
+    fn bench_json_shape() {
+        let pts = vec![ThroughputPoint {
+            n: 8,
+            replicas: 4,
+            periods: 16,
+            median_s: 0.5,
+            replica_periods_per_sec: 128.0,
+        }];
+        let doc = bench_json(&pts, 123);
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        assert_eq!(
+            parsed.get("bench").and_then(Json::as_str),
+            Some("solver_portfolio_throughput")
+        );
+        assert_eq!(
+            parsed
+                .get("points")
+                .and_then(Json::as_arr)
+                .map(|a| a.len()),
+            Some(1)
+        );
+    }
+}

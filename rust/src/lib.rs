@@ -24,8 +24,12 @@
 //! * [`harness`] — drivers that regenerate every table and figure of the
 //!   paper's evaluation section, and the micro-benchmark timer used by
 //!   `cargo bench` (criterion is unavailable offline).
+//! * [`solver`] — the generic Ising/QUBO optimization subsystem: a
+//!   problem IR with reductions (max-cut, k-coloring, number
+//!   partitioning, vertex cover), phase-noise annealing schedules, and
+//!   the batched replica-portfolio driver served by the coordinator.
 //! * [`apps`] — the paper's future-work applications: max-cut and graph
-//!   coloring on the ONN-as-Ising-machine path.
+//!   coloring as thin reductions/decoders over [`solver`].
 //! * [`util`] — in-tree infrastructure (deterministic RNG, minimal JSON,
 //!   stats, CLI parsing) standing in for crates that are not available
 //!   in this offline image.
@@ -40,6 +44,7 @@ pub mod harness;
 pub mod onn;
 pub mod rtl;
 pub mod runtime;
+pub mod solver;
 pub mod util;
 
 pub use onn::config::NetworkConfig;

@@ -34,6 +34,13 @@ Applications:
   maxcut [--nodes 32] [--prob 0.3] [--restarts 20] [--seed S]
   coloring [--nodes 16] [--colors 2] [--restarts 20]
 
+Solver (generic Ising/QUBO subsystem, see DESIGN_SOLVER.md):
+  solve --problem maxcut|coloring|partition|cover [--nodes 64] [--prob 0.1]
+        [--colors 3] [--replicas 32] [--periods 256]
+        [--schedule geometric|linear|constant] [--noise 0.6] [--seed S]
+  solve-bench [--sizes 16,32,64,128] [--replicas 32] [--periods 128]
+        [--instances 5] [--out BENCH_solver.json]   quality vs SA + throughput
+
 Ablations (DESIGN.md design choices):
   ablation [--trials 50]                precision vs capacity/accuracy
   capacity [--n 20] [--trials 50]       DO-I vs Hebbian storage capacity
@@ -100,6 +107,8 @@ fn run() -> Result<()> {
         "retrieve" => cmd_retrieve(&mut args),
         "maxcut" => cmd_maxcut(&mut args),
         "coloring" => cmd_coloring(&mut args),
+        "solve" => cmd_solve(&mut args),
+        "solve-bench" => cmd_solve_bench(&mut args),
         "serve" => cmd_serve(&mut args),
         "crosscheck" => cmd_crosscheck(&mut args),
         "ablation" => cmd_ablation(&mut args),
@@ -227,6 +236,9 @@ fn cmd_coloring(args: &mut Args) -> Result<()> {
     let seed = args.get_u64("seed", 3)?;
     args.finish().map_err(|e| anyhow!(e))?;
 
+    if !(2..=16).contains(&colors) {
+        return Err(anyhow!("--colors must be in 2..=16 (16-step phase wheel)"));
+    }
     let mut rng = Rng::new(seed);
     let g = Graph::random(nodes, 0.2, &mut rng);
     println!("graph: {} nodes, {} edges, k = {colors}", g.n, g.edges.len());
@@ -234,6 +246,141 @@ fn cmd_coloring(args: &mut Args) -> Result<()> {
     let greedy = solve_greedy(&g, colors);
     println!("ONN    conflicts = {}", onn.conflicts);
     println!("greedy conflicts = {}", greedy.conflicts);
+    Ok(())
+}
+
+/// Generic Ising solve: reduce the chosen problem family onto the
+/// solver IR, run the annealed batched portfolio, and report quality
+/// against the matching classical baseline.
+fn cmd_solve(args: &mut Args) -> Result<()> {
+    use onn_scale::solver::anneal::Schedule;
+    use onn_scale::solver::graph::Graph;
+    use onn_scale::solver::portfolio::{solve_native, PortfolioParams};
+    use onn_scale::solver::{reductions, sa};
+    use onn_scale::util::rng::Rng;
+
+    let problem_kind = args.get_str("problem", "maxcut");
+    let nodes = args.get_usize("nodes", 64)?;
+    let prob = args.get_f64("prob", 0.1)?;
+    let colors = args.get_usize("colors", 3)?;
+    let replicas = args.get_usize("replicas", 32)?;
+    let periods = args.get_usize("periods", 256)?;
+    let schedule_name = args.get_str("schedule", "geometric");
+    let noise = args.get_f64("noise", 0.6)?;
+    let seed = args.get_u64("seed", 7)?;
+    args.finish().map_err(|e| anyhow!(e))?;
+
+    let schedule = Schedule::parse(&schedule_name, noise)
+        .ok_or_else(|| anyhow!("--schedule must be geometric|linear|constant"))?;
+    let params = PortfolioParams {
+        replicas,
+        max_periods: periods,
+        schedule,
+        seed,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(seed);
+    match problem_kind.as_str() {
+        "maxcut" => {
+            let g = Graph::random(nodes, prob, &mut rng);
+            let problem = reductions::max_cut(&g);
+            let out = solve_native(&problem, &params)?;
+            let cut = g.cut_value(&out.best_spins);
+            let sweeps = replicas * periods;
+            let base = sa::anneal(&problem, sweeps, seed + 1);
+            let sa_cut = g.cut_value(&base.spins);
+            println!("graph: {} nodes, {} edges", g.n, g.edges.len());
+            println!(
+                "ONN portfolio cut = {cut:>6}   ({replicas} replicas x {periods} periods, \
+                 {} settled, {} schedule)",
+                out.settled_replicas,
+                schedule.name()
+            );
+            println!("SA baseline   cut = {sa_cut:>6}   ({sweeps} sweeps, equal spin updates)");
+            println!("ratio ONN/SA = {:.3}", cut as f64 / sa_cut.max(1) as f64);
+        }
+        "coloring" => {
+            use onn_scale::apps::coloring::{conflicts, solve_greedy, solve_onn};
+            if !(2..=16).contains(&colors) {
+                return Err(anyhow!("--colors must be in 2..=16 (16-step phase wheel)"));
+            }
+            let g = Graph::random(nodes, prob, &mut rng);
+            let onn = solve_onn(&g, colors, replicas, periods, seed + 1);
+            let greedy = solve_greedy(&g, colors);
+            println!(
+                "graph: {} nodes, {} edges, k = {colors}",
+                g.n,
+                g.edges.len()
+            );
+            println!("ONN    conflicts = {}", onn.conflicts);
+            println!("greedy conflicts = {}", greedy.conflicts);
+            debug_assert_eq!(conflicts(&g, &onn.colors), onn.conflicts);
+        }
+        "partition" => {
+            let weights: Vec<i64> = (0..nodes).map(|_| rng.range_i64(1, 100)).collect();
+            let problem = reductions::number_partition(&weights);
+            let out = solve_native(&problem, &params)?;
+            let imbalance = reductions::partition_imbalance(&weights, &out.best_spins);
+            let total: i64 = weights.iter().sum();
+            println!("partitioning {nodes} numbers summing to {total}");
+            println!("ONN portfolio imbalance = {imbalance}");
+        }
+        "cover" => {
+            let g = Graph::random(nodes, prob, &mut rng);
+            let problem = reductions::min_vertex_cover(&g, 2.0);
+            let out = solve_native(&problem, &params)?;
+            let cover = reductions::decode_cover(&g, &out.best_spins);
+            let greedy = reductions::decode_cover(&g, &vec![-1i8; g.n]);
+            println!("graph: {} nodes, {} edges", g.n, g.edges.len());
+            println!(
+                "ONN cover size    = {} (valid: {})",
+                reductions::cover_size(&cover),
+                reductions::is_cover(&g, &cover)
+            );
+            println!(
+                "greedy cover size = {}",
+                reductions::cover_size(&greedy)
+            );
+        }
+        other => {
+            return Err(anyhow!(
+                "--problem '{other}' unknown (maxcut|coloring|partition|cover)"
+            ))
+        }
+    }
+    Ok(())
+}
+
+/// Solver harness: head-to-head quality vs SA on G(64, 0.1), plus the
+/// throughput sweep recorded to BENCH_solver.json.
+fn cmd_solve_bench(args: &mut Args) -> Result<()> {
+    use onn_scale::harness::solverbench;
+
+    let sizes_str = args.get_str("sizes", "16,32,64,128");
+    let replicas = args.get_usize("replicas", 32)?;
+    let periods = args.get_usize("periods", 128)?;
+    let instances = args.get_usize("instances", 5)?;
+    let out_path = args.get_str("out", "BENCH_solver.json");
+    let seed = args.get_u64("seed", 2025)?;
+    args.finish().map_err(|e| anyhow!(e))?;
+
+    let sizes: Vec<usize> = sizes_str
+        .split(',')
+        .map(|s| s.trim().parse().map_err(|_| anyhow!("bad --sizes entry '{s}'")))
+        .collect::<Result<_>>()?;
+
+    let report = solverbench::quality_vs_sa(64, 0.1, instances, replicas, periods, seed);
+    println!("{}", report.table());
+
+    let points =
+        solverbench::record_throughput(std::path::Path::new(&out_path), &sizes, replicas, periods, seed)?;
+    println!("solver throughput (native engine):");
+    for p in &points {
+        println!(
+            "  n={:<5} {:>12.0} replica-periods/s   (median {:.3} s per solve)",
+            p.n, p.replica_periods_per_sec, p.median_s
+        );
+    }
     Ok(())
 }
 
@@ -266,6 +413,17 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
 }
 
 /// Cross-validate the PJRT artifact against the bit-exact native engine.
+#[cfg(not(feature = "pjrt"))]
+fn cmd_crosscheck(args: &mut Args) -> Result<()> {
+    args.finish().map_err(|e| anyhow!(e))?;
+    Err(anyhow!(
+        "crosscheck needs the PJRT engine; rebuild with --features pjrt \
+         (and point the vendored xla dependency at the real crate)"
+    ))
+}
+
+/// Cross-validate the PJRT artifact against the bit-exact native engine.
+#[cfg(feature = "pjrt")]
 fn cmd_crosscheck(args: &mut Args) -> Result<()> {
     use onn_scale::runtime::artifact::{default_dir, Manifest};
     use onn_scale::runtime::engine::{PjrtContext, PjrtEngine};
@@ -397,7 +555,6 @@ fn cmd_shard_demo(args: &mut Args) -> Result<()> {
 
 fn cmd_info() -> Result<()> {
     use onn_scale::runtime::artifact::{default_dir, Manifest};
-    use onn_scale::runtime::engine::PjrtContext;
 
     let dir = default_dir();
     println!("artifact dir: {}", dir.display());
@@ -417,9 +574,15 @@ fn cmd_info() -> Result<()> {
         }
         Err(e) => println!("no manifest: {e:#}"),
     }
-    match PjrtContext::cpu() {
-        Ok(ctx) => println!("pjrt platform: {}", ctx.platform()),
-        Err(e) => println!("pjrt unavailable: {e:#}"),
+    #[cfg(feature = "pjrt")]
+    {
+        use onn_scale::runtime::engine::PjrtContext;
+        match PjrtContext::cpu() {
+            Ok(ctx) => println!("pjrt platform: {}", ctx.platform()),
+            Err(e) => println!("pjrt unavailable: {e:#}"),
+        }
     }
+    #[cfg(not(feature = "pjrt"))]
+    println!("pjrt: disabled at build time (rebuild with --features pjrt)");
     Ok(())
 }

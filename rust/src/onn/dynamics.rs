@@ -22,6 +22,45 @@
 use crate::onn::config::NetworkConfig;
 use crate::onn::phase::{amplitude, wrap};
 use crate::onn::weights::WeightMatrix;
+use crate::util::rng::Rng;
+
+/// Stochastic phase-kick model for annealed optimization (see
+/// `solver::anneal`): after each synchronous period update, every
+/// oscillator independently receives, with probability `amplitude`, a
+/// uniform phase kick of up to `ceil(amplitude * P/2)` steps in either
+/// direction.  Amplitude 0 restores the deterministic dynamics;
+/// amplitude 1 nearly re-randomizes the state each period.  This models
+/// the injected phase noise a physical oscillator array would use to
+/// escape local minima, and is the hook the annealing schedules drive.
+#[derive(Debug, Clone)]
+pub struct PhaseNoise {
+    amplitude: f64,
+    rng: Rng,
+}
+
+impl PhaseNoise {
+    pub fn new(amplitude: f64, seed: u64) -> Self {
+        Self {
+            amplitude: amplitude.clamp(0.0, 1.0),
+            rng: Rng::new(seed),
+        }
+    }
+
+    pub fn amplitude(&self) -> f64 {
+        self.amplitude
+    }
+
+    /// Maybe kick one phase; identity when the amplitude is zero.
+    fn kick(&mut self, phi: i32, p: i32) -> i32 {
+        if self.amplitude <= 0.0 || self.rng.f64() >= self.amplitude {
+            return phi;
+        }
+        let max_kick = ((self.amplitude * (p / 2) as f64).ceil() as i64).max(1);
+        let mag = self.rng.range_i64(1, max_kick + 1) as i32;
+        let kick = if self.rng.bool() { mag } else { -mag };
+        wrap(phi + kick, p)
+    }
+}
 
 /// Outcome of running one trial to a fixed point.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -50,6 +89,8 @@ pub struct FunctionalEngine {
     sums: Vec<i32>,     // S_i(t) for current t
     refsig: Vec<i8>,    // ref_i(t) flattened [i * P + t]
     flips: Vec<Vec<(usize, i32)>>, // per t: (oscillator, new sign)
+    /// Optional annealing noise applied after each period update.
+    noise: Option<PhaseNoise>,
 }
 
 impl FunctionalEngine {
@@ -77,11 +118,24 @@ impl FunctionalEngine {
             sums: vec![0; n],
             refsig: vec![0; n * p],
             flips: vec![Vec::new(); p],
+            noise: None,
         }
     }
 
     pub fn weights(&self) -> &WeightMatrix {
         &self.w
+    }
+
+    /// Install (or clear, with `None`) the annealing phase noise.  The
+    /// deterministic contract of every other test and the PJRT
+    /// cross-validation hold only with noise off.
+    pub fn set_noise(&mut self, noise: Option<PhaseNoise>) {
+        self.noise = noise;
+    }
+
+    /// Current noise amplitude (0 when no noise is installed).
+    pub fn noise_amplitude(&self) -> f64 {
+        self.noise.as_ref().map_or(0.0, PhaseNoise::amplitude)
     }
 
     /// One synchronous period update, in place.
@@ -162,6 +216,13 @@ impl FunctionalEngine {
                 p,
                 &self.templates,
             );
+        }
+
+        // --- 5. optional annealing kicks (identity when noise is off)
+        if let Some(noise) = self.noise.as_mut() {
+            for phi in phases.iter_mut() {
+                *phi = noise.kick(*phi, p);
+            }
         }
     }
 
@@ -436,6 +497,39 @@ mod tests {
                 }
                 None => assert_eq!(settled[bi], -1),
             }
+        }
+    }
+
+    #[test]
+    fn zero_amplitude_noise_is_identity() {
+        let mut rng = Rng::new(71);
+        let n = 9;
+        let cfg = NetworkConfig::paper(n);
+        let w = rand_weights(&mut rng, n);
+        let mut plain = FunctionalEngine::new(cfg, w.clone());
+        let mut noisy = FunctionalEngine::new(cfg, w);
+        noisy.set_noise(Some(PhaseNoise::new(0.0, 5)));
+        let ph0 = rand_phases(&mut rng, n, 16);
+        let (mut a, mut b) = (ph0.clone(), ph0);
+        for _ in 0..4 {
+            plain.period_step(&mut a);
+            noisy.period_step(&mut b);
+        }
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn full_noise_keeps_phases_in_range() {
+        let mut rng = Rng::new(72);
+        let n = 7;
+        let cfg = NetworkConfig::paper(n);
+        let mut eng = FunctionalEngine::new(cfg, rand_weights(&mut rng, n));
+        eng.set_noise(Some(PhaseNoise::new(1.0, 9)));
+        assert!((eng.noise_amplitude() - 1.0).abs() < 1e-12);
+        let mut ph = rand_phases(&mut rng, n, 16);
+        for _ in 0..16 {
+            eng.period_step(&mut ph);
+            assert!(ph.iter().all(|&x| (0..16).contains(&x)), "{ph:?}");
         }
     }
 

@@ -1,145 +1,165 @@
 //! PJRT execution engine: loads an HLO-text artifact, compiles it once on
 //! the PJRT CPU client, and runs batched chunks from the request path.
 //!
-//! This is the only place the `xla` crate is touched.  Python is never on
-//! this path — the artifact was lowered once by `python/compile/aot.py`.
+//! This is the only place the `xla` crate is touched, and everything that
+//! needs it sits behind the off-by-default `pjrt` cargo feature so the
+//! default build works fully offline through [`crate::runtime::native::NativeEngine`].
+//! Python is never on this path — the artifact was lowered once by
+//! `python/compile/aot.py`.
+//!
+//! [`run_to_settle_batch`] is engine-agnostic and always available.
 
-use std::path::Path;
-use std::sync::Arc;
+use anyhow::Result;
 
-use anyhow::{anyhow, Result};
-
-use crate::runtime::artifact::ArtifactInfo;
 use crate::runtime::ChunkEngine;
 
-/// Shared PJRT client (one per process; engines share it).
-pub struct PjrtContext {
-    client: xla::PjRtClient,
-}
+#[cfg(feature = "pjrt")]
+pub use self::pjrt_impl::{PjrtContext, PjrtEngine};
 
-impl PjrtContext {
-    pub fn cpu() -> Result<Arc<Self>> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
-        Ok(Arc::new(Self { client }))
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use std::path::Path;
+    use std::sync::Arc;
+
+    use anyhow::{anyhow, Result};
+
+    use crate::runtime::artifact::ArtifactInfo;
+    use crate::runtime::ChunkEngine;
+
+    /// Shared PJRT client (one per process; engines share it).
+    pub struct PjrtContext {
+        client: xla::PjRtClient,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-}
-
-/// One compiled chunk executable bound to a (N, batch) artifact.
-pub struct PjrtEngine {
-    ctx: Arc<PjrtContext>,
-    info: ArtifactInfo,
-    exe: xla::PjRtLoadedExecutable,
-    weights: Vec<f32>,
-}
-
-impl PjrtEngine {
-    /// Load + compile the artifact (HLO text — see aot.py for why text).
-    pub fn load(ctx: Arc<PjrtContext>, info: &ArtifactInfo) -> Result<Self> {
-        let path: &Path = &info.file;
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str()
-                .ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?,
-        )
-        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = ctx
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
-        Ok(Self {
-            ctx,
-            info: info.clone(),
-            exe,
-            weights: vec![0f32; info.n * info.n],
-        })
-    }
-
-    pub fn platform(&self) -> String {
-        self.ctx.platform()
-    }
-
-    pub fn artifact(&self) -> &ArtifactInfo {
-        &self.info
-    }
-}
-
-impl ChunkEngine for PjrtEngine {
-    fn n(&self) -> usize {
-        self.info.n
-    }
-
-    fn batch(&self) -> usize {
-        self.info.batch
-    }
-
-    fn chunk_len(&self) -> usize {
-        self.info.chunk
-    }
-
-    fn set_weights(&mut self, w_f32: &[f32]) -> Result<()> {
-        if w_f32.len() != self.info.n * self.info.n {
-            return Err(anyhow!(
-                "weights len {} != n^2 = {}",
-                w_f32.len(),
-                self.info.n * self.info.n
-            ));
+    impl PjrtContext {
+        pub fn cpu() -> Result<Arc<Self>> {
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+            Ok(Arc::new(Self { client }))
         }
-        self.weights.copy_from_slice(w_f32);
-        Ok(())
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
     }
 
-    fn run_chunk(&mut self, phases: &mut [i32], settled: &mut [i32], period0: i32) -> Result<()> {
-        let (n, b) = (self.info.n, self.info.batch);
-        if phases.len() != n * b || settled.len() != b {
-            return Err(anyhow!(
-                "shape mismatch: phases {} (want {}), settled {} (want {b})",
-                phases.len(),
-                n * b,
-                settled.len()
-            ));
-        }
-        let w = xla::Literal::vec1(&self.weights[..])
-            .reshape(&[n as i64, n as i64])
-            .map_err(|e| anyhow!("reshape w: {e:?}"))?;
-        let ph = xla::Literal::vec1(&phases[..])
-            .reshape(&[b as i64, n as i64])
-            .map_err(|e| anyhow!("reshape phases: {e:?}"))?;
-        let st = xla::Literal::vec1(&settled[..]);
-        let p0 = xla::Literal::scalar(period0);
-
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&[w, ph, st, p0])
-            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
-        let (ph_out, st_out) = result
-            .to_tuple2()
-            .map_err(|e| anyhow!("untuple: {e:?}"))?;
-        let ph_vec = ph_out
-            .to_vec::<i32>()
-            .map_err(|e| anyhow!("phases out: {e:?}"))?;
-        let st_vec = st_out
-            .to_vec::<i32>()
-            .map_err(|e| anyhow!("settled out: {e:?}"))?;
-        if ph_vec.len() != phases.len() || st_vec.len() != settled.len() {
-            return Err(anyhow!(
-                "artifact returned wrong shapes: {} / {}",
-                ph_vec.len(),
-                st_vec.len()
-            ));
-        }
-        phases.copy_from_slice(&ph_vec);
-        settled.copy_from_slice(&st_vec);
-        Ok(())
+    /// One compiled chunk executable bound to a (N, batch) artifact.
+    pub struct PjrtEngine {
+        ctx: Arc<PjrtContext>,
+        info: ArtifactInfo,
+        exe: xla::PjRtLoadedExecutable,
+        weights: Vec<f32>,
     }
 
-    fn kind(&self) -> &'static str {
-        "pjrt"
+    impl PjrtEngine {
+        /// Load + compile the artifact (HLO text — see aot.py for why text).
+        pub fn load(ctx: Arc<PjrtContext>, info: &ArtifactInfo) -> Result<Self> {
+            let path: &Path = &info.file;
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str()
+                    .ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = ctx
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+            Ok(Self {
+                ctx,
+                info: info.clone(),
+                exe,
+                weights: vec![0f32; info.n * info.n],
+            })
+        }
+
+        pub fn platform(&self) -> String {
+            self.ctx.platform()
+        }
+
+        pub fn artifact(&self) -> &ArtifactInfo {
+            &self.info
+        }
+    }
+
+    impl ChunkEngine for PjrtEngine {
+        fn n(&self) -> usize {
+            self.info.n
+        }
+
+        fn batch(&self) -> usize {
+            self.info.batch
+        }
+
+        fn chunk_len(&self) -> usize {
+            self.info.chunk
+        }
+
+        fn set_weights(&mut self, w_f32: &[f32]) -> Result<()> {
+            if w_f32.len() != self.info.n * self.info.n {
+                return Err(anyhow!(
+                    "weights len {} != n^2 = {}",
+                    w_f32.len(),
+                    self.info.n * self.info.n
+                ));
+            }
+            self.weights.copy_from_slice(w_f32);
+            Ok(())
+        }
+
+        fn run_chunk(
+            &mut self,
+            phases: &mut [i32],
+            settled: &mut [i32],
+            period0: i32,
+        ) -> Result<()> {
+            let (n, b) = (self.info.n, self.info.batch);
+            if phases.len() != n * b || settled.len() != b {
+                return Err(anyhow!(
+                    "shape mismatch: phases {} (want {}), settled {} (want {b})",
+                    phases.len(),
+                    n * b,
+                    settled.len()
+                ));
+            }
+            let w = xla::Literal::vec1(&self.weights[..])
+                .reshape(&[n as i64, n as i64])
+                .map_err(|e| anyhow!("reshape w: {e:?}"))?;
+            let ph = xla::Literal::vec1(&phases[..])
+                .reshape(&[b as i64, n as i64])
+                .map_err(|e| anyhow!("reshape phases: {e:?}"))?;
+            let st = xla::Literal::vec1(&settled[..]);
+            let p0 = xla::Literal::scalar(period0);
+
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&[w, ph, st, p0])
+                .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+            let (ph_out, st_out) = result
+                .to_tuple2()
+                .map_err(|e| anyhow!("untuple: {e:?}"))?;
+            let ph_vec = ph_out
+                .to_vec::<i32>()
+                .map_err(|e| anyhow!("phases out: {e:?}"))?;
+            let st_vec = st_out
+                .to_vec::<i32>()
+                .map_err(|e| anyhow!("settled out: {e:?}"))?;
+            if ph_vec.len() != phases.len() || st_vec.len() != settled.len() {
+                return Err(anyhow!(
+                    "artifact returned wrong shapes: {} / {}",
+                    ph_vec.len(),
+                    st_vec.len()
+                ));
+            }
+            phases.copy_from_slice(&ph_vec);
+            settled.copy_from_slice(&st_vec);
+            Ok(())
+        }
+
+        fn kind(&self) -> &'static str {
+            "pjrt"
+        }
     }
 }
 

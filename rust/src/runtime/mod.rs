@@ -13,7 +13,7 @@ pub mod engine;
 pub mod native;
 pub mod sharded;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 /// A batched chunk executor: the contract of one AOT artifact call.
 ///
@@ -34,6 +34,20 @@ pub trait ChunkEngine {
     fn run_chunk(&mut self, phases: &mut [i32], settled: &mut [i32], period0: i32) -> Result<()>;
     /// Human-readable engine kind ("pjrt" / "native").
     fn kind(&self) -> &'static str;
+
+    /// True when the engine implements the optional phase-noise hook
+    /// used by the annealed solver (`solver::portfolio`).
+    fn supports_noise(&self) -> bool {
+        false
+    }
+
+    /// Set the phase-noise amplitude in `[0, 1]` for subsequent
+    /// `run_chunk` calls (`0` restores deterministic dynamics); `seed`
+    /// derives the kick stream so runs stay reproducible.  Engines whose
+    /// dynamics are baked into an artifact (PJRT) do not support this.
+    fn set_noise(&mut self, _amplitude: f64, _seed: u64) -> Result<()> {
+        Err(anyhow!("{} engine has no phase-noise hook", self.kind()))
+    }
 }
 
 /// Constructs an engine inside a worker thread (PJRT handles are

@@ -6,7 +6,7 @@
 use anyhow::{anyhow, Result};
 
 use crate::onn::config::NetworkConfig;
-use crate::onn::dynamics::FunctionalEngine;
+use crate::onn::dynamics::{FunctionalEngine, PhaseNoise};
 use crate::onn::weights::WeightMatrix;
 use crate::runtime::ChunkEngine;
 
@@ -15,6 +15,9 @@ pub struct NativeEngine {
     batch: usize,
     chunk: usize,
     inner: Option<FunctionalEngine>,
+    /// Pending (amplitude, seed) noise setting; re-applied when weights
+    /// (and thus the inner engine) are replaced.
+    noise: Option<(f64, u64)>,
 }
 
 impl NativeEngine {
@@ -24,6 +27,16 @@ impl NativeEngine {
             batch,
             chunk,
             inner: None,
+            noise: None,
+        }
+    }
+
+    fn apply_noise(&mut self) {
+        if let Some(inner) = self.inner.as_mut() {
+            inner.set_noise(match self.noise {
+                Some((a, seed)) if a > 0.0 => Some(PhaseNoise::new(a, seed)),
+                _ => None,
+            });
         }
     }
 }
@@ -58,6 +71,7 @@ impl ChunkEngine for NativeEngine {
             }
         }
         self.inner = Some(FunctionalEngine::new(self.cfg, w));
+        self.apply_noise();
         Ok(())
     }
 
@@ -75,6 +89,19 @@ impl ChunkEngine for NativeEngine {
 
     fn kind(&self) -> &'static str {
         "native"
+    }
+
+    fn supports_noise(&self) -> bool {
+        true
+    }
+
+    fn set_noise(&mut self, amplitude: f64, seed: u64) -> Result<()> {
+        if !(0.0..=1.0).contains(&amplitude) {
+            return Err(anyhow!("noise amplitude {amplitude} outside [0, 1]"));
+        }
+        self.noise = Some((amplitude, seed));
+        self.apply_noise();
+        Ok(())
     }
 }
 
@@ -98,6 +125,30 @@ mod tests {
         let mut ph = vec![0, 0];
         let mut st = vec![-1];
         assert!(e.run_chunk(&mut ph, &mut st, 0).is_err());
+    }
+
+    #[test]
+    fn noise_hook_survives_weight_reload() {
+        let n = 3;
+        let mut e = NativeEngine::new(NetworkConfig::paper(n), 2, 4);
+        assert!(e.supports_noise());
+        assert!(e.set_noise(1.5, 1).is_err());
+        e.set_noise(0.8, 7).unwrap();
+        let w = vec![0.0f32; n * n];
+        e.set_weights(&w).unwrap();
+        // Zero weights normally freeze every state; with noise the
+        // phases must move.
+        let init = vec![1i32, 5, 9, 2, 6, 10];
+        let mut ph = init.clone();
+        let mut st = vec![-1i32; 2];
+        e.run_chunk(&mut ph, &mut st, 0).unwrap();
+        assert_ne!(ph, init, "noise did not perturb frozen dynamics");
+        // Turning noise off restores determinism.
+        e.set_noise(0.0, 7).unwrap();
+        let mut ph2 = init.clone();
+        let mut st2 = vec![-1i32; 2];
+        e.run_chunk(&mut ph2, &mut st2, 0).unwrap();
+        assert_eq!(ph2, init);
     }
 
     #[test]

@@ -1,0 +1,146 @@
+//! Phase-noise annealing schedules for the batched portfolio solver.
+//!
+//! A schedule maps a chunk index to the noise amplitude handed to the
+//! engine's phase-noise hook (`ChunkEngine::set_noise`).  Every schedule
+//! guarantees two invariants the solver and the property tests rely on:
+//! levels are monotone non-increasing over the run, and the final
+//! quarter of the chunks (at least one) is noise-free (amplitude 0) so
+//! the portfolio ends with a deterministic relaxation whose settle
+//! flags mean something — and whose plateau/all-settled early exit can
+//! actually fire before the budget is exhausted.
+
+/// Noise-amplitude schedule over a fixed number of chunks.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Schedule {
+    /// `start * factor^k`, `factor` clamped into `[0, 1]`.
+    Geometric { start: f64, factor: f64 },
+    /// Linear ramp from `start` down to zero.
+    Linear { start: f64 },
+    /// Constant level with a final noise-free chunk.
+    Constant { level: f64 },
+}
+
+impl Schedule {
+    /// Parse a schedule name with a shared starting amplitude
+    /// (the CLI/wire spelling).
+    pub fn parse(name: &str, start: f64) -> Option<Schedule> {
+        match name {
+            "geometric" => Some(Schedule::Geometric {
+                start,
+                factor: 0.8,
+            }),
+            "linear" => Some(Schedule::Linear { start }),
+            "constant" => Some(Schedule::Constant { level: start }),
+            _ => None,
+        }
+    }
+
+    /// Wire/CLI name of this schedule family.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Schedule::Geometric { .. } => "geometric",
+            Schedule::Linear { .. } => "linear",
+            Schedule::Constant { .. } => "constant",
+        }
+    }
+
+    /// Chunks at the end of a `total`-chunk run that are always
+    /// noise-free: the final quarter, at least one.  This is the
+    /// deterministic relaxation tail where settle flags are meaningful
+    /// and the portfolio's plateau/all-settled early exit can trigger.
+    pub fn noise_free_tail(total: usize) -> usize {
+        (total / 4).max(1)
+    }
+
+    /// Noise amplitude for chunk `k` of `total` (in `[0, 1]`); zero
+    /// throughout the noise-free tail regardless of family.  The ramp
+    /// families decay over the noisy prefix only, so e.g. a linear
+    /// schedule reaches zero exactly where the tail begins instead of
+    /// holding residual noise until the last chunk.
+    pub fn level(&self, k: usize, total: usize) -> f64 {
+        let tail = Self::noise_free_tail(total);
+        if total == 0 || k + tail >= total {
+            return 0.0;
+        }
+        let noisy = total - tail; // >= 1, and k < noisy here
+        let a = match *self {
+            Schedule::Geometric { start, factor } => {
+                start.max(0.0) * factor.clamp(0.0, 1.0).powi(k as i32)
+            }
+            Schedule::Linear { start } => {
+                start.max(0.0) * (1.0 - k as f64 / noisy as f64)
+            }
+            Schedule::Constant { level } => level.max(0.0),
+        };
+        a.clamp(0.0, 1.0)
+    }
+
+    /// The full level sequence for a run of `total` chunks.
+    pub fn levels(&self, total: usize) -> Vec<f64> {
+        (0..total).map(|k| self.level(k, total)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for name in ["geometric", "linear", "constant"] {
+            let s = Schedule::parse(name, 0.4).unwrap();
+            assert_eq!(s.name(), name);
+        }
+        assert!(Schedule::parse("bogus", 0.4).is_none());
+    }
+
+    #[test]
+    fn all_schedules_end_noise_free() {
+        for s in [
+            Schedule::Geometric { start: 0.9, factor: 0.5 },
+            Schedule::Linear { start: 0.7 },
+            Schedule::Constant { level: 0.3 },
+        ] {
+            for total in [1usize, 2, 5, 33] {
+                let levels = s.levels(total);
+                assert_eq!(levels.len(), total);
+                assert_eq!(*levels.last().unwrap(), 0.0, "{s:?} total={total}");
+            }
+        }
+    }
+
+    #[test]
+    fn geometric_decays_monotonically() {
+        let s = Schedule::Geometric { start: 0.8, factor: 0.6 };
+        let l = s.levels(10);
+        for w in l.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12, "{l:?}");
+        }
+        assert!((l[0] - 0.8).abs() < 1e-12);
+        assert!((l[1] - 0.48).abs() < 1e-12);
+    }
+
+    #[test]
+    fn final_quarter_is_noise_free() {
+        assert_eq!(Schedule::noise_free_tail(1), 1);
+        assert_eq!(Schedule::noise_free_tail(8), 2);
+        assert_eq!(Schedule::noise_free_tail(32), 8);
+        let s = Schedule::Constant { level: 0.5 };
+        let levels = s.levels(32);
+        assert!(levels[..24].iter().all(|&l| l == 0.5), "{levels:?}");
+        assert!(levels[24..].iter().all(|&l| l == 0.0), "{levels:?}");
+        // Linear ramps hit zero exactly where the tail begins.
+        let s = Schedule::Linear { start: 0.6 };
+        let levels = s.levels(32);
+        assert!(levels[23] > 0.0);
+        assert_eq!(levels[24], 0.0);
+    }
+
+    #[test]
+    fn levels_clamped_to_unit_interval() {
+        let s = Schedule::Constant { level: 7.0 };
+        assert_eq!(s.level(0, 3), 1.0);
+        let s = Schedule::Linear { start: -2.0 };
+        assert_eq!(s.level(0, 3), 0.0);
+    }
+}

@@ -1,0 +1,96 @@
+//! Undirected weighted graphs — the input shape shared by the graph
+//! reductions (max-cut, coloring, vertex cover).  Moved here from
+//! `apps::maxcut` so the solver subsystem has no dependency on the app
+//! layer; `apps::maxcut` re-exports it for compatibility.
+
+use crate::util::rng::Rng;
+
+/// Undirected weighted graph.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    pub n: usize,
+    pub edges: Vec<(usize, usize, i32)>,
+}
+
+impl Graph {
+    /// Erdos-Renyi random graph with unit weights.
+    pub fn random(n: usize, edge_prob: f64, rng: &mut Rng) -> Graph {
+        let mut edges = Vec::new();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if rng.f64() < edge_prob {
+                    edges.push((i, j, 1));
+                }
+            }
+        }
+        Graph { n, edges }
+    }
+
+    /// Complete bipartite graph K_{a,b} with unit weights (vertices
+    /// `0..a` on one side, `a..a+b` on the other).  Handy in tests: its
+    /// max cut is exactly `a * b`.
+    pub fn complete_bipartite(a: usize, b: usize) -> Graph {
+        let edges = (0..a)
+            .flat_map(|i| (a..a + b).map(move |j| (i, j, 1)))
+            .collect();
+        Graph { n: a + b, edges }
+    }
+
+    /// Cut value of a +-1 assignment.
+    pub fn cut_value(&self, spins: &[i8]) -> i64 {
+        assert_eq!(spins.len(), self.n);
+        self.edges
+            .iter()
+            .filter(|(i, j, _)| spins[*i] != spins[*j])
+            .map(|(_, _, w)| *w as i64)
+            .sum()
+    }
+
+    pub fn total_weight(&self) -> i64 {
+        self.edges.iter().map(|(_, _, w)| *w as i64).sum()
+    }
+
+    /// Adjacency lists (each undirected edge appears on both endpoints).
+    pub fn adjacency(&self) -> Vec<Vec<(usize, i32)>> {
+        let mut adj: Vec<Vec<(usize, i32)>> = vec![Vec::new(); self.n];
+        for &(i, j, w) in &self.edges {
+            adj[i].push((j, w));
+            adj[j].push((i, w));
+        }
+        adj
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cut_value_bipartite_complete() {
+        // K_{2,2}: optimal cut = all 4 edges.
+        let g = Graph::complete_bipartite(2, 2);
+        assert_eq!(g.cut_value(&[1, 1, -1, -1]), 4);
+        assert_eq!(g.cut_value(&[1, -1, 1, -1]), 2);
+        assert_eq!(g.total_weight(), 4);
+    }
+
+    #[test]
+    fn random_graph_edge_count_reasonable() {
+        let mut rng = Rng::new(4);
+        let g = Graph::random(30, 0.5, &mut rng);
+        let max_edges = 30 * 29 / 2;
+        assert!(g.edges.len() > max_edges / 4 && g.edges.len() < max_edges * 3 / 4);
+    }
+
+    #[test]
+    fn adjacency_mirrors_edges() {
+        let g = Graph {
+            n: 3,
+            edges: vec![(0, 1, 2), (1, 2, 1)],
+        };
+        let adj = g.adjacency();
+        assert_eq!(adj[0], vec![(1, 2)]);
+        assert_eq!(adj[1], vec![(0, 2), (2, 1)]);
+        assert_eq!(adj[2], vec![(1, 1)]);
+    }
+}

@@ -1,0 +1,37 @@
+//! Generic Ising/QUBO optimization subsystem — the paper's named target
+//! workload ("larger network sizes can be benchmarked using ...
+//! especially combinatorial optimization problems") served through the
+//! same batched chunk-engine runtime as pattern retrieval.
+//!
+//! Layout:
+//!
+//! * [`problem`] — the problem IR: [`problem::IsingProblem`] with an
+//!   exact QUBO converter and a field-to-ancilla embedding into the
+//!   quantized ONN coupling fabric.
+//! * [`graph`] — the shared graph input type for the graph reductions.
+//! * [`reductions`] — max-cut, k-coloring (multi-phase sectors), number
+//!   partitioning and minimum vertex cover onto the IR, plus decoders
+//!   with deterministic readout repair.
+//! * [`anneal`] — phase-noise annealing schedules (geometric / linear /
+//!   constant), all monotone non-increasing and ending noise-free.
+//! * [`portfolio`] — the batched replica-portfolio driver over any
+//!   [`crate::runtime::ChunkEngine`], with best-replica tracking,
+//!   plateau early exit and greedy readout polish.
+//! * [`sa`] — the simulated-annealing baseline and the greedy-descent
+//!   polish shared with the portfolio.
+//!
+//! The coordinator serves this subsystem over the JSON-lines protocol
+//! as `SolveRequest`/`SolveResult` (see `coordinator::job` and
+//! `DESIGN_SOLVER.md`).
+
+pub mod anneal;
+pub mod graph;
+pub mod portfolio;
+pub mod problem;
+pub mod reductions;
+pub mod sa;
+
+pub use anneal::Schedule;
+pub use graph::Graph;
+pub use portfolio::{solve_native, solve_portfolio, PortfolioParams, SolveOutcome};
+pub use problem::{IsingProblem, Qubo};

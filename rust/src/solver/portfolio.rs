@@ -1,0 +1,376 @@
+//! The annealed batched portfolio solver: many random-init replicas of
+//! one Ising instance run as a single batch on any [`ChunkEngine`],
+//! with a phase-noise annealing schedule driving the engine's noise
+//! hook, per-chunk best-replica tracking through the problem's energy,
+//! an energy-plateau early exit, and a deterministic greedy-descent
+//! readout polish.
+//!
+//! This is the serving path for the paper's target workload
+//! (combinatorial optimization): the same batched chunk contract the
+//! retrieval coordinator drives, so one engine fabric serves both
+//! traffic classes.
+
+use anyhow::{anyhow, Result};
+
+use crate::onn::config::NetworkConfig;
+use crate::onn::phase::spin_to_phase;
+use crate::runtime::native::NativeEngine;
+use crate::runtime::ChunkEngine;
+use crate::solver::anneal::Schedule;
+use crate::solver::problem::IsingProblem;
+use crate::solver::sa::greedy_descent;
+use crate::util::rng::Rng;
+
+/// Portfolio solve parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct PortfolioParams {
+    /// Random-init trials run as one batch (waves of `engine.batch()`).
+    pub replicas: usize,
+    /// Periods driven per replica (rounded up to whole chunks).
+    pub max_periods: usize,
+    pub schedule: Schedule,
+    pub seed: u64,
+    /// Early exit after this many consecutive noise-free chunks without
+    /// a best-energy improvement (0 disables the early exit).
+    pub plateau_chunks: usize,
+    /// Greedy single-flip readout polish (binary problems only).
+    pub polish: bool,
+}
+
+impl Default for PortfolioParams {
+    fn default() -> Self {
+        Self {
+            replicas: 32,
+            max_periods: 256,
+            schedule: Schedule::Geometric {
+                start: 0.6,
+                factor: 0.8,
+            },
+            seed: 1,
+            plateau_chunks: 3,
+            polish: true,
+        }
+    }
+}
+
+/// Result of one portfolio solve.
+#[derive(Debug, Clone)]
+pub struct SolveOutcome {
+    /// Best decoded spins (length `problem.n`; for sector problems the
+    /// binary decode of the best phase state — use `best_phases`).
+    pub best_spins: Vec<i8>,
+    /// Best phase state (length `problem.n`, ancilla stripped).
+    pub best_phases: Vec<i32>,
+    /// `problem.energy` of the best state (offset excluded).  For
+    /// sector problems this is the phase-energy proxy.
+    pub best_energy: f64,
+    /// Best energy among the replicas' *initial* states — the solver
+    /// never returns anything worse than this.
+    pub initial_best_energy: f64,
+    /// Final phase state of every replica (ancilla stripped), for
+    /// decoders that rank replicas by their own objective.
+    pub replica_phases: Vec<Vec<i32>>,
+    /// Total chunk-periods driven by the engine, summed over waves
+    /// (each period advances the whole batch of replicas at once).
+    pub periods: usize,
+    pub chunks: usize,
+    pub replicas: usize,
+    /// Replicas whose final noise-free chunk reported a fixed point.
+    pub settled_replicas: usize,
+    pub early_exit: bool,
+    /// False when the engine has no noise hook (schedule was skipped).
+    pub noise_applied: bool,
+}
+
+/// Run the portfolio on an already-constructed engine.  The engine's
+/// network size must equal [`IsingProblem::embed_dim`]; weights are
+/// installed here.
+pub fn solve_portfolio(
+    engine: &mut dyn ChunkEngine,
+    problem: &IsingProblem,
+    params: &PortfolioParams,
+) -> Result<SolveOutcome> {
+    problem.validate().map_err(|e| anyhow!("bad problem: {e}"))?;
+    if params.replicas == 0 {
+        return Err(anyhow!("replicas must be positive"));
+    }
+    let m = problem.embed_dim();
+    if engine.n() != m {
+        return Err(anyhow!(
+            "engine serves n={}, problem embeds into n={m}",
+            engine.n()
+        ));
+    }
+    let cfg = NetworkConfig::paper(m);
+    let p = cfg.period() as i32;
+    if problem.sectors > cfg.period() {
+        return Err(anyhow!(
+            "{} sectors exceed the {}-step phase wheel",
+            problem.sectors,
+            cfg.period()
+        ));
+    }
+    engine.set_weights(&problem.embed(&cfg).to_f32())?;
+    let noise_applied = engine.supports_noise();
+
+    let b = engine.batch();
+    if b == 0 {
+        return Err(anyhow!("engine reports zero batch capacity"));
+    }
+    let chunk = engine.chunk_len().max(1);
+    let chunks_per_wave = params.max_periods.div_ceil(chunk).max(1);
+    let binary = problem.sectors == 2;
+    // Exact objective for binary problems; phase-correlation proxy for
+    // sector (Potts-like) problems.
+    let eval = |phases: &[i32]| -> f64 {
+        if binary {
+            problem.energy(&problem.decode_spins(phases, p))
+        } else {
+            problem.phase_energy(&phases[..problem.n], p)
+        }
+    };
+
+    let mut rng = Rng::new(params.seed);
+    let mut best_energy = f64::INFINITY;
+    let mut best_phases = vec![0i32; m];
+    let mut initial_best = f64::INFINITY;
+    let mut replica_phases: Vec<Vec<i32>> = Vec::with_capacity(params.replicas);
+    let mut chunks_run = 0usize;
+    let mut settled_replicas = 0usize;
+    let mut early_exit = false;
+    // Best polished replica (spins, energy) across all waves.
+    let mut best_polished: Option<(Vec<i8>, f64)> = None;
+
+    let mut phases = vec![0i32; b * m];
+    let mut settled = vec![-1i32; b];
+    let mut remaining = params.replicas;
+    while remaining > 0 {
+        let real = remaining.min(b);
+        // Random init: binary problems start on the binary manifold
+        // (the Hopfield submanifold of the phase dynamics), sector
+        // problems anywhere on the phase wheel.  Padding slots repeat
+        // replica 0 so the batch is well-formed.
+        for slot in 0..b {
+            let src = slot.min(real - 1);
+            if slot < real {
+                for i in 0..m {
+                    phases[slot * m + i] = if binary {
+                        spin_to_phase(rng.spin(), p)
+                    } else {
+                        rng.range_i64(0, p as i64) as i32
+                    };
+                }
+            } else {
+                let copy: Vec<i32> = phases[src * m..(src + 1) * m].to_vec();
+                phases[slot * m..(slot + 1) * m].copy_from_slice(&copy);
+            }
+        }
+        settled.iter_mut().for_each(|s| *s = -1);
+        for slot in 0..real {
+            let e = eval(&phases[slot * m..(slot + 1) * m]);
+            initial_best = initial_best.min(e);
+            if e < best_energy {
+                best_energy = e;
+                best_phases.copy_from_slice(&phases[slot * m..(slot + 1) * m]);
+            }
+        }
+
+        let mut stall = 0usize;
+        for k in 0..chunks_per_wave {
+            // On engines without a noise hook no kicks ever happen, so
+            // the dynamics are deterministic from chunk 0 and the
+            // settle flags / early exits stay live for the whole run.
+            let level = if noise_applied {
+                params.schedule.level(k, chunks_per_wave)
+            } else {
+                0.0
+            };
+            if noise_applied {
+                engine.set_noise(level, rng.next_u64())?;
+            }
+            engine.run_chunk(&mut phases, &mut settled, (k * chunk) as i32)?;
+            chunks_run += 1;
+            if level > 0.0 {
+                // Settle flags are meaningless while kicks are active.
+                settled.iter_mut().for_each(|s| *s = -1);
+            }
+            let mut improved = false;
+            for slot in 0..real {
+                let e = eval(&phases[slot * m..(slot + 1) * m]);
+                if e < best_energy - 1e-12 {
+                    best_energy = e;
+                    best_phases.copy_from_slice(&phases[slot * m..(slot + 1) * m]);
+                    improved = true;
+                }
+            }
+            if level == 0.0 {
+                let all_settled = (0..real).all(|slot| settled[slot] >= 0);
+                if improved {
+                    stall = 0;
+                } else {
+                    stall += 1;
+                }
+                if all_settled
+                    || (params.plateau_chunks > 0 && stall >= params.plateau_chunks)
+                {
+                    early_exit = k + 1 < chunks_per_wave;
+                    break;
+                }
+            }
+        }
+
+        settled_replicas += (0..real).filter(|&slot| settled[slot] >= 0).count();
+        for slot in 0..real {
+            let full = &phases[slot * m..(slot + 1) * m];
+            replica_phases.push(full[..problem.n].to_vec());
+            if params.polish && binary {
+                // Polish every replica's final state while its true
+                // ancilla phase is still attached (the gauge matters
+                // for field problems); strict descent can only improve,
+                // so the outcome dominates every unpolished replica.
+                let mut spins = problem.decode_spins(full, p);
+                greedy_descent(problem, &mut spins);
+                let e = problem.energy(&spins);
+                if best_polished.as_ref().map_or(true, |(_, be)| e < *be) {
+                    best_polished = Some((spins, e));
+                }
+            }
+        }
+        remaining -= real;
+    }
+
+    let mut best_spins = problem.decode_spins(&best_phases, p);
+    if params.polish && binary {
+        // The best tracked state gets the same readout polish, then
+        // competes with the best polished replica; best_energy always
+        // describes best_spins.
+        greedy_descent(problem, &mut best_spins);
+        best_energy = problem.energy(&best_spins);
+        if let Some((spins, e)) = best_polished {
+            if e < best_energy {
+                best_energy = e;
+                best_spins = spins;
+            }
+        }
+        best_phases = best_spins.iter().map(|&s| spin_to_phase(s, p)).collect();
+    }
+
+    Ok(SolveOutcome {
+        best_spins,
+        best_phases: best_phases[..problem.n].to_vec(),
+        best_energy,
+        initial_best_energy: initial_best,
+        replica_phases,
+        periods: chunks_run * chunk,
+        chunks: chunks_run,
+        replicas: params.replicas,
+        settled_replicas,
+        early_exit,
+        noise_applied,
+    })
+}
+
+/// Convenience: build a [`NativeEngine`] sized for the problem and run
+/// the portfolio on it.
+pub fn solve_native(problem: &IsingProblem, params: &PortfolioParams) -> Result<SolveOutcome> {
+    let m = problem.embed_dim();
+    let batch = params.replicas.clamp(1, 64);
+    let mut engine = NativeEngine::new(NetworkConfig::paper(m), batch, 8);
+    solve_portfolio(&mut engine, problem, params)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::graph::Graph;
+    use crate::solver::reductions::{self, max_cut};
+    use crate::util::rng::Rng;
+
+    fn params(replicas: usize, periods: usize, seed: u64) -> PortfolioParams {
+        PortfolioParams {
+            replicas,
+            max_periods: periods,
+            seed,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn solves_odd_complete_bipartite_exactly() {
+        // K_{3,3}: greedy polish alone guarantees the optimum from any
+        // start, so this is deterministic regardless of dynamics.
+        let g = Graph::complete_bipartite(3, 3);
+        let p = max_cut(&g);
+        let out = solve_native(&p, &params(8, 64, 11)).unwrap();
+        assert_eq!(g.cut_value(&out.best_spins), 9);
+        assert!((reductions::cut_from_energy(&g, out.best_energy) - 9.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn never_worse_than_best_initial_replica() {
+        let mut rng = Rng::new(71);
+        for trial in 0..5 {
+            let g = Graph::random(20, 0.25, &mut rng);
+            let p = max_cut(&g);
+            let out = solve_native(&p, &params(8, 48, 100 + trial)).unwrap();
+            assert!(
+                out.best_energy <= out.initial_best_energy + 1e-9,
+                "trial {trial}: {} vs initial {}",
+                out.best_energy,
+                out.initial_best_energy
+            );
+        }
+    }
+
+    #[test]
+    fn polished_result_is_locally_optimal() {
+        use crate::solver::sa::is_local_minimum;
+        let mut rng = Rng::new(72);
+        let g = Graph::random(18, 0.3, &mut rng);
+        let p = max_cut(&g);
+        let out = solve_native(&p, &params(6, 48, 5)).unwrap();
+        assert!(is_local_minimum(&p, &out.best_spins));
+    }
+
+    #[test]
+    fn multiwave_handles_replicas_beyond_batch() {
+        let g = Graph::complete_bipartite(3, 3);
+        let p = max_cut(&g);
+        // batch caps at 64; 80 replicas forces two waves
+        let out = solve_native(&p, &params(80, 16, 2)).unwrap();
+        assert_eq!(out.replicas, 80);
+        assert_eq!(out.replica_phases.len(), 80);
+        assert_eq!(g.cut_value(&out.best_spins), 9);
+    }
+
+    #[test]
+    fn rejects_mismatched_engine() {
+        let g = Graph::complete_bipartite(2, 2);
+        let p = max_cut(&g);
+        let mut engine = NativeEngine::new(NetworkConfig::paper(7), 4, 8);
+        assert!(solve_portfolio(&mut engine, &p, &params(4, 16, 1)).is_err());
+    }
+
+    #[test]
+    fn rejects_degenerate_params() {
+        let g = Graph::complete_bipartite(2, 2);
+        let p = max_cut(&g);
+        assert!(solve_native(&p, &params(0, 16, 1)).is_err());
+        let mut bad = p.clone();
+        bad.sectors = 99;
+        assert!(solve_native(&bad, &params(4, 16, 1)).is_err());
+    }
+
+    #[test]
+    fn field_problems_run_through_ancilla() {
+        // Vertex cover has fields; the whole pipeline must handle the
+        // ancilla embed + gauge decode and return a valid cover after
+        // repair.
+        let mut rng = Rng::new(73);
+        let g = Graph::random(10, 0.3, &mut rng);
+        let p = reductions::min_vertex_cover(&g, 2.0);
+        let out = solve_native(&p, &params(8, 64, 3)).unwrap();
+        let cover = reductions::decode_cover(&g, &out.best_spins);
+        assert!(reductions::is_cover(&g, &cover));
+    }
+}

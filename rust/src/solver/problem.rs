@@ -1,0 +1,454 @@
+//! The solver's problem IR: a quantizable Ising Hamiltonian
+//! `H(s) = -1/2 sum_{i != j} J_ij s_i s_j - sum_i h_i s_i` with an
+//! optional multi-phase (Potts-like) mode for sector-encoded problems
+//! such as k-coloring, plus the QUBO <-> Ising converter every textbook
+//! reduction routes through.
+//!
+//! External fields have no direct analog in the coupling-only ONN
+//! fabric, so [`IsingProblem::embed`] uses the standard gauge trick: one
+//! ancilla oscillator coupled to every biased spin with `J_{i,anc} =
+//! h_i`.  The ground state is recovered relative to the ancilla's sign
+//! ([`IsingProblem::decode_spins`]), which makes the embedding exact —
+//! not a penalty approximation.
+
+use crate::onn::config::NetworkConfig;
+use crate::onn::energy::waveform_correlation;
+use crate::onn::phase::{phase_to_spin, state_to_spins};
+use crate::onn::weights::WeightMatrix;
+
+/// Descriptive metadata carried alongside the Hamiltonian.
+#[derive(Debug, Clone, Default)]
+pub struct ProblemMeta {
+    /// Human-readable problem family ("max-cut", "qubo", ...).
+    pub kind: String,
+    /// Constant added to `energy` to recover the original objective
+    /// (QUBO reductions are energy-equal only up to a constant).
+    pub offset: f64,
+}
+
+/// An Ising optimization instance.
+#[derive(Debug, Clone)]
+pub struct IsingProblem {
+    pub n: usize,
+    /// Symmetric couplings, row-major `j[i * n + k]`; diagonal ignored.
+    pub j: Vec<f64>,
+    /// External fields, length `n`.
+    pub h: Vec<f64>,
+    /// Phase sectors the state is decoded into: 2 = binary Ising,
+    /// k > 2 = multi-phase sector encoding (e.g. k-coloring).
+    pub sectors: usize,
+    pub metadata: ProblemMeta,
+}
+
+impl IsingProblem {
+    pub fn new(n: usize) -> Self {
+        Self {
+            n,
+            j: vec![0.0; n * n],
+            h: vec![0.0; n],
+            sectors: 2,
+            metadata: ProblemMeta::default(),
+        }
+    }
+
+    pub fn with_kind(mut self, kind: &str) -> Self {
+        self.metadata.kind = kind.to_string();
+        self
+    }
+
+    #[inline]
+    pub fn get_j(&self, i: usize, k: usize) -> f64 {
+        self.j[i * self.n + k]
+    }
+
+    /// Symmetric coupling setter.
+    pub fn set_j(&mut self, i: usize, k: usize, v: f64) {
+        assert_ne!(i, k, "diagonal couplings are ignored; use h for biases");
+        self.j[i * self.n + k] = v;
+        self.j[k * self.n + i] = v;
+    }
+
+    /// Symmetric coupling increment (reductions accumulate terms).
+    pub fn add_j(&mut self, i: usize, k: usize, v: f64) {
+        assert_ne!(i, k);
+        self.j[i * self.n + k] += v;
+        self.j[k * self.n + i] += v;
+    }
+
+    pub fn has_field(&self) -> bool {
+        self.h.iter().any(|&x| x != 0.0)
+    }
+
+    /// Structural validity: square J, matching h, symmetric couplings.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n == 0 {
+            return Err("empty problem (n = 0)".into());
+        }
+        if self.j.len() != self.n * self.n {
+            return Err(format!("j has {} entries, want n^2 = {}", self.j.len(), self.n * self.n));
+        }
+        if self.h.len() != self.n {
+            return Err(format!("h has {} entries, want n = {}", self.h.len(), self.n));
+        }
+        if self.sectors < 2 {
+            return Err(format!("sectors {} < 2", self.sectors));
+        }
+        for i in 0..self.n {
+            for k in (i + 1)..self.n {
+                if (self.get_j(i, k) - self.get_j(k, i)).abs() > 1e-9 {
+                    return Err(format!("asymmetric coupling at ({i}, {k})"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// `H(s) = -1/2 sum_{i != j} J_ij s_i s_j - sum_i h_i s_i`.
+    pub fn energy(&self, spins: &[i8]) -> f64 {
+        assert_eq!(spins.len(), self.n);
+        let mut e = 0.0;
+        for i in 0..self.n {
+            for k in 0..self.n {
+                if i != k {
+                    e -= 0.5 * self.get_j(i, k) * spins[i] as f64 * spins[k] as f64;
+                }
+            }
+            e -= self.h[i] * spins[i] as f64;
+        }
+        e
+    }
+
+    /// Original objective value (energy plus the reduction offset).
+    pub fn objective(&self, spins: &[i8]) -> f64 {
+        self.energy(spins) + self.metadata.offset
+    }
+
+    /// Phase-domain energy proxy using the square-wave correlation
+    /// (coincides with [`Self::energy`] on binary phase states); used to
+    /// rank multi-phase (sector) replicas where no spin decode exists.
+    pub fn phase_energy(&self, phases: &[i32], p: i32) -> f64 {
+        assert_eq!(phases.len(), self.n);
+        let mut e = 0.0;
+        for i in 0..self.n {
+            for k in 0..self.n {
+                if i != k {
+                    e -= 0.5
+                        * self.get_j(i, k)
+                        * waveform_correlation(phases[i], phases[k], p);
+                }
+            }
+            // Fields only make sense for binary problems, where the
+            // solver evaluates via `energy` on decoded spins instead;
+            // include them against phase 0 for completeness.
+            e -= self.h[i] * waveform_correlation(phases[i], 0, p);
+        }
+        e
+    }
+
+    /// Number of oscillators the embedded network needs (ancilla
+    /// included when fields are present).
+    pub fn embed_dim(&self) -> usize {
+        self.n + usize::from(self.has_field())
+    }
+
+    /// Quantize into the ONN coupling fabric.  Fields become couplings
+    /// to one trailing ancilla oscillator (`J_{i,anc} = h_i`); the whole
+    /// matrix is scaled so the largest magnitude maps to the positive
+    /// quantization limit.
+    pub fn embed(&self, cfg: &NetworkConfig) -> WeightMatrix {
+        let m = self.embed_dim();
+        assert_eq!(cfg.n, m, "config sized {} but embedding needs {m}", cfg.n);
+        let mut master = vec![0f32; m * m];
+        for i in 0..self.n {
+            for k in 0..self.n {
+                if i != k {
+                    master[i * m + k] = self.get_j(i, k) as f32;
+                }
+            }
+        }
+        if self.has_field() {
+            let anc = self.n;
+            for i in 0..self.n {
+                master[i * m + anc] = self.h[i] as f32;
+                master[anc * m + i] = self.h[i] as f32;
+            }
+        }
+        WeightMatrix::quantize(&master, m, cfg)
+    }
+
+    /// Decode an embedded phase state (length [`Self::embed_dim`]) into
+    /// problem spins (length `n`), gauge-fixed to the ancilla when
+    /// fields are present.
+    pub fn decode_spins(&self, phases: &[i32], p: i32) -> Vec<i8> {
+        assert_eq!(phases.len(), self.embed_dim());
+        if self.has_field() {
+            let anc = phases[self.n];
+            (0..self.n)
+                .map(|i| phase_to_spin(phases[i], anc, p))
+                .collect()
+        } else {
+            state_to_spins(&phases[..self.n], p)
+        }
+    }
+
+    /// Exhaustive ground-state search; test-sized instances only.
+    pub fn brute_force(&self) -> (Vec<i8>, f64) {
+        assert!(self.n <= 24, "brute force capped at n = 24");
+        let mut best_spins = vec![1i8; self.n];
+        let mut best_e = f64::INFINITY;
+        for mask in 0u64..(1u64 << self.n) {
+            let spins: Vec<i8> = (0..self.n)
+                .map(|i| if mask >> i & 1 == 1 { 1 } else { -1 })
+                .collect();
+            let e = self.energy(&spins);
+            if e < best_e {
+                best_e = e;
+                best_spins = spins;
+            }
+        }
+        (best_spins, best_e)
+    }
+
+    /// Convert to QUBO over `x = (1 + s) / 2`:
+    /// `E(x) = sum_ij Q_ij x_i x_j` with `E(x(s)) = energy(s) + C`.
+    pub fn to_qubo(&self) -> Qubo {
+        let n = self.n;
+        let mut q = vec![0.0; n * n];
+        for i in 0..n {
+            let mut row_off = 0.0;
+            for k in 0..n {
+                if i != k {
+                    q[i * n + k] = -2.0 * self.get_j(i, k);
+                    row_off += self.get_j(i, k);
+                }
+            }
+            // h_i = -(sum_k Q_ik) / 2  =>  Q_ii = -2 h_i + 2 sum_{k != i} J_ik
+            q[i * n + i] = -2.0 * self.h[i] + 2.0 * row_off;
+        }
+        Qubo { n, q }
+    }
+}
+
+/// A QUBO instance: `E(x) = sum_i sum_j Q_ij x_i x_j` over binary
+/// `x in {0, 1}^n` (diagonal entries are the linear terms, `x_i^2 = x_i`;
+/// off-diagonal entries are stored symmetrically).
+#[derive(Debug, Clone)]
+pub struct Qubo {
+    pub n: usize,
+    pub q: Vec<f64>,
+}
+
+impl Qubo {
+    pub fn new(n: usize) -> Self {
+        Self {
+            n,
+            q: vec![0.0; n * n],
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, k: usize) -> f64 {
+        self.q[i * self.n + k]
+    }
+
+    /// Add `v * x_i * x_j` (split symmetrically for i != j).
+    pub fn add(&mut self, i: usize, k: usize, v: f64) {
+        if i == k {
+            self.q[i * self.n + i] += v;
+        } else {
+            self.q[i * self.n + k] += v / 2.0;
+            self.q[k * self.n + i] += v / 2.0;
+        }
+    }
+
+    /// Add `v * x_i` (linear term).
+    pub fn add_linear(&mut self, i: usize, v: f64) {
+        self.q[i * self.n + i] += v;
+    }
+
+    pub fn value(&self, x: &[u8]) -> f64 {
+        assert_eq!(x.len(), self.n);
+        let mut e = 0.0;
+        for i in 0..self.n {
+            if x[i] == 0 {
+                continue;
+            }
+            for k in 0..self.n {
+                if x[k] != 0 {
+                    e += self.get(i, k);
+                }
+            }
+        }
+        e
+    }
+
+    /// Convert to Ising via `x = (1 + s) / 2`; the returned problem's
+    /// `metadata.offset` makes `objective(s) == value(x(s))` exactly.
+    pub fn to_ising(&self) -> IsingProblem {
+        let n = self.n;
+        let mut p = IsingProblem::new(n).with_kind("qubo");
+        let mut offset = 0.0;
+        for i in 0..n {
+            let mut row_sum = 0.0;
+            for k in 0..n {
+                row_sum += self.get(i, k);
+                if i != k {
+                    p.j[i * n + k] = -self.get(i, k) / 2.0;
+                    offset += self.get(i, k) / 4.0;
+                }
+            }
+            p.h[i] = -row_sum / 2.0;
+            offset += self.get(i, i) / 2.0;
+        }
+        p.metadata.offset = offset;
+        p
+    }
+}
+
+/// Map binary spins to QUBO bits (`+1 -> 1`, `-1 -> 0`).
+pub fn spins_to_bits(spins: &[i8]) -> Vec<u8> {
+    spins.iter().map(|&s| u8::from(s > 0)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_problem(rng: &mut Rng, n: usize, with_field: bool) -> IsingProblem {
+        let mut p = IsingProblem::new(n);
+        for i in 0..n {
+            for k in (i + 1)..n {
+                p.set_j(i, k, rng.range_i64(-5, 6) as f64);
+            }
+            if with_field {
+                p.h[i] = rng.range_i64(-3, 4) as f64;
+            }
+        }
+        p
+    }
+
+    #[test]
+    fn energy_matches_onn_energy_module() {
+        // The f64 energy must agree with onn::energy on quantized
+        // integer couplings.
+        use crate::onn::energy::ising_energy;
+        let mut rng = Rng::new(31);
+        let n = 8;
+        let mut p = IsingProblem::new(n);
+        let mut w = WeightMatrix::zeros(n);
+        for i in 0..n {
+            for k in (i + 1)..n {
+                let v = rng.range_i64(-10, 11);
+                p.set_j(i, k, v as f64);
+                w.set(i, k, v as i8);
+                w.set(k, i, v as i8);
+            }
+        }
+        for _ in 0..10 {
+            let spins: Vec<i8> = (0..n).map(|_| rng.spin()).collect();
+            assert!((p.energy(&spins) - ising_energy(&w, &spins)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn qubo_ising_energy_identity() {
+        let mut rng = Rng::new(32);
+        for _ in 0..50 {
+            let n = 1 + rng.usize_below(7);
+            let mut q = Qubo::new(n);
+            for i in 0..n {
+                for k in i..n {
+                    q.add(i, k, rng.range_i64(-6, 7) as f64);
+                }
+            }
+            let p = q.to_ising();
+            let spins: Vec<i8> = (0..n).map(|_| rng.spin()).collect();
+            let x = spins_to_bits(&spins);
+            assert!(
+                (q.value(&x) - p.objective(&spins)).abs() < 1e-9,
+                "qubo {} vs ising {}",
+                q.value(&x),
+                p.objective(&spins)
+            );
+        }
+    }
+
+    #[test]
+    fn qubo_roundtrip_preserves_couplings() {
+        let mut rng = Rng::new(33);
+        let p = random_problem(&mut rng, 6, true);
+        let back = p.to_qubo().to_ising();
+        for i in 0..p.n {
+            assert!((p.h[i] - back.h[i]).abs() < 1e-9, "h[{i}]");
+            for k in 0..p.n {
+                if i != k {
+                    assert!((p.get_j(i, k) - back.get_j(i, k)).abs() < 1e-9, "j[{i}][{k}]");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn embed_without_field_matches_quantize() {
+        let mut rng = Rng::new(34);
+        let mut p = random_problem(&mut rng, 5, false);
+        p.set_j(0, 1, 5.0); // pin the largest magnitude
+        assert_eq!(p.embed_dim(), 5);
+        let cfg = NetworkConfig::paper(5);
+        let w = p.embed(&cfg);
+        assert!(w.is_symmetric());
+        assert_eq!(w.max_abs(), 15); // strongest coupling saturates
+    }
+
+    #[test]
+    fn embed_with_field_adds_ancilla_and_decodes_gauge() {
+        let mut rng = Rng::new(35);
+        let mut p = random_problem(&mut rng, 4, true);
+        p.h[0] = 2.0; // guarantee a field so the ancilla is present
+        assert_eq!(p.embed_dim(), 5);
+        let cfg = NetworkConfig::paper(5);
+        let w = p.embed(&cfg);
+        assert!(w.is_symmetric());
+        // Decoding is gauge-fixed to the ancilla: flipping the whole
+        // embedded state leaves the decoded spins unchanged.
+        let phases = vec![0, 8, 0, 8, 0];
+        let flipped: Vec<i32> = phases.iter().map(|&x| (x + 8) % 16).collect();
+        assert_eq!(p.decode_spins(&phases, 16), p.decode_spins(&flipped, 16));
+        assert_eq!(p.decode_spins(&phases, 16), vec![1, -1, 1, -1]);
+    }
+
+    #[test]
+    fn brute_force_finds_ferro_ground_state() {
+        let mut p = IsingProblem::new(3);
+        p.set_j(0, 1, 2.0);
+        p.set_j(1, 2, 2.0);
+        p.h[0] = 0.5; // break the global-flip degeneracy
+        let (spins, e) = p.brute_force();
+        assert_eq!(spins, vec![1, 1, 1]);
+        assert!((e - (-4.5)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn validate_catches_malformed() {
+        let mut p = IsingProblem::new(3);
+        assert!(p.validate().is_ok());
+        p.j[1] = 3.0; // asymmetric
+        assert!(p.validate().is_err());
+        let mut p = IsingProblem::new(2);
+        p.h.pop();
+        assert!(p.validate().is_err());
+        assert!(IsingProblem::new(0).validate().is_err());
+    }
+
+    #[test]
+    fn phase_energy_matches_energy_on_binary_states() {
+        let mut rng = Rng::new(36);
+        let p = random_problem(&mut rng, 6, false);
+        for _ in 0..10 {
+            let spins: Vec<i8> = (0..6).map(|_| rng.spin()).collect();
+            let phases: Vec<i32> = spins.iter().map(|&s| if s > 0 { 0 } else { 8 }).collect();
+            assert!((p.energy(&spins) - p.phase_energy(&phases, 16)).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,198 @@
+//! Textbook reductions onto the [`IsingProblem`] IR, plus the matching
+//! decoders.  Each reduction is exact (Lucas 2014-style formulations):
+//! the Hamiltonian's ground state is an optimal solution of the source
+//! problem, and the decoder includes the cheap deterministic repair a
+//! physical Ising machine would apply at readout.
+
+use crate::solver::graph::Graph;
+use crate::solver::problem::{IsingProblem, Qubo};
+
+/// Max-cut: `J_ij = -w_ij` (antiferromagnetic).  With that sign,
+/// `H(s) = sum_edges w_ij s_i s_j` and `cut(s) = (W_total - H(s)) / 2`,
+/// so lower energy is exactly a larger cut.
+pub fn max_cut(graph: &Graph) -> IsingProblem {
+    let mut p = IsingProblem::new(graph.n).with_kind("max-cut");
+    for &(i, j, w) in &graph.edges {
+        p.add_j(i, j, -(w as f64));
+    }
+    p
+}
+
+/// Cut value recovered from the max-cut Hamiltonian's energy.
+pub fn cut_from_energy(graph: &Graph, energy: f64) -> f64 {
+    (graph.total_weight() as f64 - energy) / 2.0
+}
+
+/// k-coloring via multi-phase sectors: antiferromagnetic couplings push
+/// adjacent vertices into different phase sectors; `sectors = k` tells
+/// the solver/decoder to read out `k` equally spaced sectors instead of
+/// binary spins ("surpassing binary limitations", paper section 1).
+pub fn coloring(graph: &Graph, k: usize) -> IsingProblem {
+    assert!(k >= 2, "coloring needs k >= 2");
+    let mut p = max_cut(graph).with_kind("k-coloring");
+    p.sectors = k;
+    p
+}
+
+/// Number partitioning: minimize `(sum_i a_i s_i)^2`, i.e.
+/// `J_ij = -a_i a_j` up to a state-independent constant.
+pub fn number_partition(weights: &[i64]) -> IsingProblem {
+    let n = weights.len();
+    let mut p = IsingProblem::new(n).with_kind("number-partition");
+    for i in 0..n {
+        for j in (i + 1)..n {
+            p.set_j(i, j, -(weights[i] as f64 * weights[j] as f64));
+        }
+    }
+    p
+}
+
+/// Absolute subset-sum imbalance of a partition assignment.
+pub fn partition_imbalance(weights: &[i64], spins: &[i8]) -> i64 {
+    assert_eq!(weights.len(), spins.len());
+    weights
+        .iter()
+        .zip(spins)
+        .map(|(&a, &s)| a * s as i64)
+        .sum::<i64>()
+        .abs()
+}
+
+/// Minimum vertex cover as a penalized QUBO
+/// (`E = sum_i x_i + penalty * sum_edges (1 - x_i)(1 - x_j)`,
+/// `x_i = 1` means "in the cover"), converted exactly to Ising.  Any
+/// `penalty > 1` makes every uncovered edge cost more than covering it;
+/// the conversion introduces external fields, so this reduction also
+/// exercises the ancilla embedding.
+pub fn min_vertex_cover(graph: &Graph, penalty: f64) -> IsingProblem {
+    assert!(penalty > 1.0, "vertex-cover penalty must exceed 1");
+    let mut q = Qubo::new(graph.n);
+    for i in 0..graph.n {
+        q.add_linear(i, 1.0);
+    }
+    let mut constant = 0.0;
+    for &(i, j, _) in &graph.edges {
+        // (1 - x_i)(1 - x_j) = 1 - x_i - x_j + x_i x_j
+        constant += penalty;
+        q.add_linear(i, -penalty);
+        q.add_linear(j, -penalty);
+        q.add(i, j, penalty);
+    }
+    let mut p = q.to_ising().with_kind("min-vertex-cover");
+    p.metadata.offset += constant;
+    p
+}
+
+/// Decode spins into a vertex cover (`s_i = +1` -> in cover), then
+/// repair: add endpoints until every edge is covered, and drop vertices
+/// whose removal keeps the cover valid.  The result is always a valid
+/// cover no matter how bad the input spins are.
+pub fn decode_cover(graph: &Graph, spins: &[i8]) -> Vec<bool> {
+    assert_eq!(spins.len(), graph.n);
+    let mut cover: Vec<bool> = spins.iter().map(|&s| s > 0).collect();
+    let adj = graph.adjacency();
+    // Repair pass 1: cover every uncovered edge via its higher-degree
+    // endpoint (classic greedy).
+    for &(i, j, _) in &graph.edges {
+        if !cover[i] && !cover[j] {
+            if adj[i].len() >= adj[j].len() {
+                cover[i] = true;
+            } else {
+                cover[j] = true;
+            }
+        }
+    }
+    // Repair pass 2: drop redundant vertices.  Dropping v is safe when
+    // every neighbor is (still) in the cover; later candidates see the
+    // updated cover, so the result stays valid.
+    for v in 0..graph.n {
+        if cover[v] && adj[v].iter().all(|&(u, _)| cover[u]) {
+            cover[v] = false;
+        }
+    }
+    cover
+}
+
+pub fn cover_size(cover: &[bool]) -> usize {
+    cover.iter().filter(|&&b| b).count()
+}
+
+/// True when every edge has at least one endpoint in the cover.
+pub fn is_cover(graph: &Graph, cover: &[bool]) -> bool {
+    graph.edges.iter().all(|&(i, j, _)| cover[i] || cover[j])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn max_cut_energy_cut_identity() {
+        let mut rng = Rng::new(51);
+        let g = Graph::random(10, 0.4, &mut rng);
+        let p = max_cut(&g);
+        for _ in 0..20 {
+            let spins: Vec<i8> = (0..g.n).map(|_| rng.spin()).collect();
+            let via_energy = cut_from_energy(&g, p.energy(&spins));
+            assert!((via_energy - g.cut_value(&spins) as f64).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn max_cut_ground_state_is_max_cut() {
+        let g = Graph::complete_bipartite(3, 2);
+        let p = max_cut(&g);
+        let (spins, e) = p.brute_force();
+        assert_eq!(g.cut_value(&spins), 6); // all K_{3,2} edges
+        assert!((cut_from_energy(&g, e) - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn coloring_sets_sectors() {
+        let g = Graph::complete_bipartite(2, 2);
+        let p = coloring(&g, 3);
+        assert_eq!(p.sectors, 3);
+        assert!(p.get_j(0, 2) < 0.0);
+    }
+
+    #[test]
+    fn partition_ground_state_balances() {
+        let weights = [4i64, 3, 2, 2, 1];
+        let p = number_partition(&weights);
+        let (spins, _) = p.brute_force();
+        // 4+2 vs 3+2+1: perfect balance exists.
+        assert_eq!(partition_imbalance(&weights, &spins), 0);
+    }
+
+    #[test]
+    fn vertex_cover_ground_state_is_minimum() {
+        // Star K_{1,4}: minimum cover = the hub alone.
+        let g = Graph {
+            n: 5,
+            edges: vec![(0, 1, 1), (0, 2, 1), (0, 3, 1), (0, 4, 1)],
+        };
+        let p = min_vertex_cover(&g, 2.0);
+        assert!(p.has_field(), "VC reduction must produce fields");
+        let (spins, e) = p.brute_force();
+        let cover = decode_cover(&g, &spins);
+        assert!(is_cover(&g, &cover));
+        assert_eq!(cover_size(&cover), 1);
+        assert!(cover[0]);
+        // objective == cover size at the optimum (no penalty active)
+        assert!((p.metadata.offset + e - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn decode_cover_repairs_invalid_states() {
+        let mut rng = Rng::new(52);
+        let g = Graph::random(12, 0.3, &mut rng);
+        // Worst case: nothing in the cover.
+        let cover = decode_cover(&g, &vec![-1i8; g.n]);
+        assert!(is_cover(&g, &cover));
+        // All-in is pruned to something no larger.
+        let full = decode_cover(&g, &vec![1i8; g.n]);
+        assert!(is_cover(&g, &full));
+        assert!(cover_size(&full) <= g.n);
+    }
+}

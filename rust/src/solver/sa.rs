@@ -1,0 +1,201 @@
+//! Simulated-annealing baseline on the [`IsingProblem`] IR —
+//! single-spin-flip Metropolis with cached local fields, the reference
+//! every ONN-portfolio result is judged against (`harness::solverbench`).
+
+use crate::solver::problem::IsingProblem;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct SaResult {
+    pub spins: Vec<i8>,
+    /// Energy of the best state seen (the problem's `energy`, offset
+    /// excluded).
+    pub energy: f64,
+    pub sweeps: usize,
+}
+
+/// Local fields `f_i = sum_{j != i} J_ij s_j + h_i`; flipping spin `i`
+/// changes the energy by `2 s_i f_i`.  Shared by the annealer, the
+/// descent polish, and the local-minimum predicate so they can never
+/// disagree about what a field is.
+fn local_fields(problem: &IsingProblem, spins: &[i8]) -> Vec<f64> {
+    let n = problem.n;
+    (0..n)
+        .map(|i| {
+            let mut v = problem.h[i];
+            for j in 0..n {
+                if j != i {
+                    v += problem.get_j(i, j) * spins[j] as f64;
+                }
+            }
+            v
+        })
+        .collect()
+}
+
+/// Anneal with a geometric temperature ramp scaled to the instance's
+/// coupling magnitudes.  `sweeps * n` single-flip attempts total; the
+/// best state seen anywhere along the walk is returned.
+pub fn anneal(problem: &IsingProblem, sweeps: usize, seed: u64) -> SaResult {
+    let n = problem.n;
+    let mut rng = Rng::new(seed);
+    let mut spins: Vec<i8> = (0..n).map(|_| rng.spin()).collect();
+    let mut f = local_fields(problem, &spins);
+    let mut energy = problem.energy(&spins);
+    let mut best = spins.clone();
+    let mut best_energy = energy;
+
+    // Temperature scale from the worst-case local field magnitude.
+    let scale = (0..n)
+        .map(|i| {
+            (0..n)
+                .filter(|&j| j != i)
+                .map(|j| problem.get_j(i, j).abs())
+                .sum::<f64>()
+                + problem.h[i].abs()
+        })
+        .fold(0.0f64, f64::max)
+        .max(1e-9);
+    let (t0, t1) = (0.8 * scale, 0.01 * scale);
+
+    for s in 0..sweeps {
+        let temp = t0 * (t1 / t0).powf(s as f64 / sweeps.max(1) as f64);
+        for _ in 0..n {
+            let i = rng.usize_below(n);
+            let delta = 2.0 * spins[i] as f64 * f[i];
+            if delta <= 0.0 || rng.f64() < (-delta / temp).exp() {
+                spins[i] = -spins[i];
+                energy += delta;
+                let si = spins[i] as f64;
+                for j in 0..n {
+                    if j != i {
+                        // f_j changes by J_ji * (s_i_new - s_i_old)
+                        f[j] += 2.0 * problem.get_j(j, i) * si;
+                    }
+                }
+                if energy < best_energy {
+                    best_energy = energy;
+                    best.copy_from_slice(&spins);
+                }
+            }
+        }
+    }
+    SaResult {
+        spins: best,
+        energy: best_energy,
+        sweeps,
+    }
+}
+
+/// Greedy single-flip descent to a strict local minimum: align each spin
+/// with its local field until a full sweep makes no change.  This is the
+/// deterministic readout polish the portfolio applies to every replica
+/// (physical Ising machines do the same at readout), and the reason a
+/// portfolio result can never be worse than its best initial replica.
+pub fn greedy_descent(problem: &IsingProblem, spins: &mut [i8]) {
+    let n = problem.n;
+    assert_eq!(spins.len(), n);
+    let mut f = local_fields(problem, spins);
+    // Strict descent terminates (energy decreases by a positive amount
+    // each flip — at least 2 on integer-valued instances, whose energy
+    // span is O(n^2 * |J|_max)); the quadratic sweep cap comfortably
+    // exceeds any productive-sweep count, so the local-minimum
+    // postcondition holds whenever the loop exits.
+    for _ in 0..(4 * n * n + 16) {
+        let mut changed = false;
+        for i in 0..n {
+            let target = if f[i] > 0.0 {
+                1
+            } else if f[i] < 0.0 {
+                -1
+            } else {
+                spins[i]
+            };
+            if target != spins[i] {
+                spins[i] = target;
+                changed = true;
+                let si = spins[i] as f64;
+                for j in 0..n {
+                    if j != i {
+                        f[j] += 2.0 * problem.get_j(j, i) * si;
+                    }
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+}
+
+/// True when no single flip strictly lowers the energy (the postcondition
+/// of [`greedy_descent`]).
+pub fn is_local_minimum(problem: &IsingProblem, spins: &[i8]) -> bool {
+    let f = local_fields(problem, spins);
+    // delta for flipping i is 2 s_i f_i; it must be >= 0 everywhere.
+    spins
+        .iter()
+        .zip(&f)
+        .all(|(&s, &fi)| s as f64 * fi >= 0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::graph::Graph;
+    use crate::solver::reductions::max_cut;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn sa_finds_triangle_optimum() {
+        let g = Graph {
+            n: 3,
+            edges: vec![(0, 1, 1), (1, 2, 1), (0, 2, 1)],
+        };
+        let p = max_cut(&g);
+        let r = anneal(&p, 50, 3);
+        assert_eq!(g.cut_value(&r.spins), 2);
+        assert!((r.energy - p.energy(&r.spins)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn descent_reaches_local_minimum_and_never_worsens() {
+        let mut rng = Rng::new(61);
+        for _ in 0..20 {
+            let g = Graph::random(12, 0.4, &mut rng);
+            let p = max_cut(&g);
+            let mut spins: Vec<i8> = (0..g.n).map(|_| rng.spin()).collect();
+            let before = p.energy(&spins);
+            greedy_descent(&p, &mut spins);
+            let after = p.energy(&spins);
+            assert!(after <= before + 1e-9);
+            assert!(is_local_minimum(&p, &spins));
+        }
+    }
+
+    #[test]
+    fn descent_solves_odd_part_complete_bipartite() {
+        // Complete bipartite graphs with odd parts have no non-optimal
+        // strict local minima under single-flip max-cut descent, so the
+        // polish alone must find the full cut from any start.
+        let g = Graph::complete_bipartite(3, 3);
+        let p = max_cut(&g);
+        let mut rng = Rng::new(62);
+        for _ in 0..16 {
+            let mut spins: Vec<i8> = (0..g.n).map(|_| rng.spin()).collect();
+            greedy_descent(&p, &mut spins);
+            assert_eq!(g.cut_value(&spins), 9, "spins {spins:?}");
+        }
+    }
+
+    #[test]
+    fn sa_tracks_best_seen_not_final() {
+        let mut rng = Rng::new(63);
+        let g = Graph::random(16, 0.4, &mut rng);
+        let p = max_cut(&g);
+        let r = anneal(&p, 120, 9);
+        // The reported energy must be consistent and locally plausible:
+        // recomputing from the spins gives the same number.
+        assert!((p.energy(&r.spins) - r.energy).abs() < 1e-9);
+    }
+}

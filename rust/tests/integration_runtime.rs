@@ -3,7 +3,11 @@
 //! after chunk, for every lowered network size.
 //!
 //! Requires `make artifacts`; tests skip politely when artifacts are
-//! missing so `cargo test` works in a fresh checkout.
+//! missing so `cargo test` works in a fresh checkout.  The whole suite
+//! is gated on the `pjrt` build feature (the default offline build has
+//! no PJRT engine to cross-validate).
+
+#![cfg(feature = "pjrt")]
 
 use onn_scale::harness::datasets::benchmark_by_name;
 use onn_scale::onn::config::NetworkConfig;

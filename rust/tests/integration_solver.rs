@@ -1,0 +1,296 @@
+//! Solver subsystem integration: the annealed batched portfolio on the
+//! native chunk engine, the coordinator's SolveRequest path end-to-end
+//! over TCP JSON-lines, and the ONN-vs-SA quality contract the harness
+//! demonstrates.
+
+use std::sync::Arc;
+
+use onn_scale::coordinator::batcher::BatchPolicy;
+use onn_scale::coordinator::job::SolveRequest;
+use onn_scale::coordinator::server::{handle_line, serve_tcp, Coordinator, EngineKind, PoolSpec};
+use onn_scale::harness::datasets::benchmark_by_name;
+use onn_scale::harness::solverbench;
+use onn_scale::solver::anneal::Schedule;
+use onn_scale::solver::graph::Graph;
+use onn_scale::solver::portfolio::{solve_native, PortfolioParams};
+use onn_scale::solver::{reductions, sa};
+use onn_scale::util::json::Json;
+use onn_scale::util::rng::Rng;
+
+fn portfolio_params(replicas: usize, max_periods: usize, seed: u64) -> PortfolioParams {
+    PortfolioParams {
+        replicas,
+        max_periods,
+        seed,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn portfolio_never_worse_than_best_initial_replica() {
+    let mut rng = Rng::new(41);
+    for trial in 0..4 {
+        let g = Graph::random(24, 0.2, &mut rng);
+        let problem = reductions::max_cut(&g);
+        let out = solve_native(&problem, &portfolio_params(8, 64, 500 + trial)).unwrap();
+        assert!(
+            out.best_energy <= out.initial_best_energy + 1e-9,
+            "trial {trial}: best {} vs initial {}",
+            out.best_energy,
+            out.initial_best_energy
+        );
+        // The decode relation is monotone: lower energy = larger cut.
+        let best_cut = g.cut_value(&out.best_spins);
+        let initial_cut = reductions::cut_from_energy(&g, out.initial_best_energy);
+        assert!(
+            best_cut as f64 >= initial_cut - 1e-9,
+            "trial {trial}: cut {best_cut} vs initial {initial_cut}"
+        );
+    }
+}
+
+#[test]
+fn portfolio_matches_or_beats_sa_on_g64() {
+    // The acceptance contract: on G(n=64, p=0.1), the batched annealed
+    // portfolio holds its own against SA given the same number of
+    // elementary spin updates.  The harness's solve-bench CLI prints the
+    // full table; here two instances with a safety margin keep the suite
+    // fast and deterministic.
+    let report = solverbench::quality_vs_sa(64, 0.1, 2, 24, 128, 4242);
+    assert!(
+        report.ratio() >= 0.95,
+        "ONN mean {} fell behind SA mean {} (ratio {})\n{}",
+        report.onn_mean(),
+        report.sa_mean(),
+        report.ratio(),
+        report.table()
+    );
+}
+
+#[test]
+fn coordinator_serves_solve_requests_in_process() {
+    let coord = Coordinator::start(vec![], BatchPolicy::default()).unwrap();
+    assert!(coord.router.has_solver());
+    let g = Graph::complete_bipartite(3, 3);
+    let mut req = SolveRequest::new(coord.next_id(), reductions::max_cut(&g));
+    req.replicas = 8;
+    req.max_periods = 64;
+    req.seed = 9;
+    let res = coord.solve_sync(req).unwrap();
+    // K_{3,3} has no non-optimal strict local minima, so the polished
+    // portfolio result is exactly the max cut.
+    assert_eq!(g.cut_value(&res.spins), 9);
+    assert!((res.energy - (-9.0)).abs() < 1e-9, "energy {}", res.energy);
+    assert_eq!(res.replicas, 8);
+    assert!(res.total_latency >= res.queue_latency);
+    let snap = coord.snapshot();
+    assert_eq!(snap.solves_submitted, 1);
+    assert_eq!(snap.solves_completed, 1);
+    assert_eq!(snap.solves_failed, 0);
+    assert!(snap.solve_periods > 0);
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn solve_and_retrieval_share_the_wire() {
+    // One coordinator, both job classes through handle_line.
+    let set = benchmark_by_name("3x3").unwrap();
+    let coord = Coordinator::start(
+        vec![PoolSpec::new(set.cfg, set.weights.clone(), EngineKind::Native)],
+        BatchPolicy::default(),
+    )
+    .unwrap();
+
+    // Retrieval line (untyped, the legacy format).
+    use onn_scale::onn::phase::spin_to_phase;
+    let phases: Vec<i32> = set.dataset.patterns[0]
+        .spins
+        .iter()
+        .map(|&s| spin_to_phase(s, 16))
+        .collect();
+    let req = Json::obj(vec![
+        ("id", Json::num(1.0)),
+        ("n", Json::num(9.0)),
+        ("phases", Json::arr_i32(&phases)),
+    ]);
+    let resp = handle_line(&coord.router, &req.to_string());
+    let v = Json::parse(&resp).unwrap();
+    assert!(v.get("error").is_none(), "{resp}");
+    assert_eq!(v.get("settled").and_then(Json::as_usize), Some(0));
+
+    // Solve line (typed).
+    let g = Graph::complete_bipartite(3, 3);
+    let edges = Json::Arr(
+        g.edges
+            .iter()
+            .map(|&(i, j, w)| Json::arr_i32(&[i as i32, j as i32, -(w)]))
+            .collect(),
+    );
+    let req = Json::obj(vec![
+        ("type", Json::str("solve")),
+        ("id", Json::num(2.0)),
+        ("n", Json::num(6.0)),
+        ("edges", edges),
+        ("replicas", Json::num(8.0)),
+        ("max_periods", Json::num(64.0)),
+        ("seed", Json::num(3.0)),
+    ]);
+    let resp = handle_line(&coord.router, &req.to_string());
+    let v = Json::parse(&resp).unwrap();
+    assert!(v.get("error").is_none(), "{resp}");
+    let spins: Vec<i8> = v
+        .get("spins")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .map(|x| x.as_i64().unwrap() as i8)
+        .collect();
+    assert_eq!(spins.len(), 6);
+    assert_eq!(g.cut_value(&spins), 9);
+    assert_eq!(v.get("energy").and_then(Json::as_f64), Some(-9.0));
+
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn solve_request_end_to_end_over_tcp() {
+    use std::io::{BufRead, BufReader, Write};
+    let set = benchmark_by_name("3x3").unwrap();
+    let coord = Coordinator::start(
+        vec![PoolSpec::new(set.cfg, set.weights.clone(), EngineKind::Native)],
+        BatchPolicy::default(),
+    )
+    .unwrap();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let router = Arc::clone(&coord.router);
+    std::thread::spawn(move || {
+        let _ = serve_tcp(router, listener);
+    });
+
+    let stream = std::net::TcpStream::connect(addr).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+    let line = r#"{"type":"solve","id":7,"n":6,"edges":[[0,3,-1],[0,4,-1],[0,5,-1],[1,3,-1],[1,4,-1],[1,5,-1],[2,3,-1],[2,4,-1],[2,5,-1]],"replicas":8,"max_periods":64,"schedule":"geometric","noise":0.5,"seed":5}"#;
+    w.write_all(line.as_bytes()).unwrap();
+    w.write_all(b"\n").unwrap();
+    let mut resp = String::new();
+    r.read_line(&mut resp).unwrap();
+    let v = Json::parse(resp.trim()).unwrap();
+    assert!(v.get("error").is_none(), "{resp}");
+    assert_eq!(v.get("id").and_then(Json::as_usize), Some(7));
+    let spins: Vec<i8> = v
+        .get("spins")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .map(|x| x.as_i64().unwrap() as i8)
+        .collect();
+    // The wire carried K_{3,3} couplings (J = -1 per edge): the served
+    // answer must be the exact max cut.
+    let g = Graph::complete_bipartite(3, 3);
+    assert_eq!(g.cut_value(&spins), 9);
+    assert_eq!(v.get("energy").and_then(Json::as_f64), Some(-9.0));
+    assert_eq!(v.get("replicas").and_then(Json::as_usize), Some(8));
+
+    // Malformed solve line comes back as an error, not a hang.
+    let mut w2 = w;
+    w2.write_all(br#"{"type":"solve","n":2}"#).unwrap();
+    w2.write_all(b"\n").unwrap();
+    let mut resp2 = String::new();
+    r.read_line(&mut resp2).unwrap();
+    assert!(resp2.contains("error"), "{resp2}");
+
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn sector_problems_round_trip_through_portfolio() {
+    // k-coloring (sectors = 3) on a 3-colorable graph: the sector
+    // decoder plus recolor polish must produce a proper coloring.
+    use onn_scale::apps::coloring::solve_onn;
+    let g = Graph {
+        n: 6,
+        edges: vec![
+            (0, 1, 1),
+            (1, 2, 1),
+            (2, 0, 1), // triangle needs 3 colors
+            (3, 4, 1),
+            (4, 5, 1),
+            (5, 3, 1), // second triangle
+            (0, 3, 1),
+        ],
+    };
+    let res = solve_onn(&g, 3, 20, 96, 13);
+    assert_eq!(res.conflicts, 0, "colors {:?}", res.colors);
+}
+
+#[test]
+fn vertex_cover_served_and_repaired() {
+    let mut rng = Rng::new(47);
+    let g = Graph::random(12, 0.25, &mut rng);
+    let problem = reductions::min_vertex_cover(&g, 2.0);
+    let out = solve_native(&problem, &portfolio_params(8, 64, 3)).unwrap();
+    let cover = reductions::decode_cover(&g, &out.best_spins);
+    assert!(reductions::is_cover(&g, &cover));
+    // The solved cover must not be larger than greedy-from-nothing.
+    let baseline = reductions::decode_cover(&g, &vec![-1i8; g.n]);
+    assert!(
+        reductions::cover_size(&cover) <= reductions::cover_size(&baseline),
+        "solved {} vs baseline {}",
+        reductions::cover_size(&cover),
+        reductions::cover_size(&baseline)
+    );
+}
+
+#[test]
+fn schedules_drive_noise_through_the_engine() {
+    // A constant schedule with a large amplitude must leave the zero-J
+    // problem's replicas scrambled mid-run but still finish noise-free:
+    // the final chunk has level 0, so frozen dynamics settle again.
+    use onn_scale::solver::problem::IsingProblem;
+    let problem = IsingProblem::new(5);
+    let params = PortfolioParams {
+        replicas: 4,
+        max_periods: 64,
+        schedule: Schedule::Constant { level: 0.9 },
+        seed: 8,
+        plateau_chunks: 0,
+        polish: false,
+    };
+    let out = solve_native(&problem, &params).unwrap();
+    assert!(out.noise_applied);
+    // Zero couplings: every state has energy 0; with the noise-free
+    // tail the frozen dynamics settle every replica.
+    assert_eq!(out.settled_replicas, 4, "tail chunks must be noise-free");
+    assert_eq!(out.best_energy, 0.0);
+}
+
+#[test]
+fn all_settled_replicas_trigger_early_exit() {
+    // Zero couplings freeze the dynamics the moment noise stops; with a
+    // long budget (64 chunks, noise-free tail of 16) the portfolio must
+    // stop at the first settled noise-free chunk instead of burning the
+    // remaining budget.
+    use onn_scale::solver::problem::IsingProblem;
+    let problem = IsingProblem::new(4);
+    let params = PortfolioParams {
+        replicas: 4,
+        max_periods: 512, // 64 chunks of 8
+        schedule: Schedule::Geometric {
+            start: 0.6,
+            factor: 0.8,
+        },
+        seed: 21,
+        polish: false,
+        ..Default::default()
+    };
+    let out = solve_native(&problem, &params).unwrap();
+    assert!(out.early_exit, "all-settled early exit never fired");
+    assert!(
+        out.chunks < 64,
+        "burned the whole budget: {} chunks",
+        out.chunks
+    );
+    assert_eq!(out.settled_replicas, 4);
+}

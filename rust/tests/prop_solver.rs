@@ -1,0 +1,226 @@
+//! Property tests for the solver subsystem: annealing-schedule
+//! invariants, QUBO <-> Ising round-trips on brute-forceable instances,
+//! noise-hook determinism, and descent/polish contracts.
+
+use onn_scale::solver::anneal::Schedule;
+use onn_scale::solver::problem::{spins_to_bits, IsingProblem, Qubo};
+use onn_scale::solver::sa::{greedy_descent, is_local_minimum};
+use onn_scale::util::rng::Rng;
+
+const CASES: usize = 200;
+
+fn random_schedule(rng: &mut Rng) -> Schedule {
+    let start = rng.f64() * 1.5; // may exceed 1: levels must clamp
+    match rng.usize_below(3) {
+        0 => Schedule::Geometric {
+            start,
+            factor: rng.f64(),
+        },
+        1 => Schedule::Linear { start },
+        _ => Schedule::Constant { level: start },
+    }
+}
+
+fn random_ising(rng: &mut Rng, n: usize, with_field: bool) -> IsingProblem {
+    let mut p = IsingProblem::new(n);
+    for i in 0..n {
+        for k in (i + 1)..n {
+            p.set_j(i, k, rng.range_i64(-6, 7) as f64);
+        }
+        if with_field {
+            p.h[i] = rng.range_i64(-4, 5) as f64;
+        }
+    }
+    p
+}
+
+#[test]
+fn prop_schedules_monotone_nonincreasing_and_end_at_zero() {
+    let mut rng = Rng::new(2001);
+    for case in 0..CASES {
+        let s = random_schedule(&mut rng);
+        let total = 1 + rng.usize_below(40);
+        let levels = s.levels(total);
+        assert_eq!(levels.len(), total);
+        assert_eq!(
+            *levels.last().unwrap(),
+            0.0,
+            "case {case}: {s:?} total={total} must end noise-free"
+        );
+        for (k, w) in levels.windows(2).enumerate() {
+            assert!(
+                w[1] <= w[0] + 1e-12,
+                "case {case}: {s:?} rose at chunk {k}: {levels:?}"
+            );
+        }
+        for (k, &l) in levels.iter().enumerate() {
+            assert!(
+                (0.0..=1.0).contains(&l),
+                "case {case}: level {l} at {k} outside [0, 1]"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_qubo_ising_objective_identity_on_all_states() {
+    // On every state of brute-forceable instances, the converted Ising
+    // objective equals the QUBO value exactly.
+    let mut rng = Rng::new(2002);
+    for case in 0..60 {
+        let n = 1 + rng.usize_below(8);
+        let mut q = Qubo::new(n);
+        for i in 0..n {
+            for k in i..n {
+                q.add(i, k, rng.range_i64(-8, 9) as f64);
+            }
+        }
+        let p = q.to_ising();
+        for mask in 0u64..(1u64 << n) {
+            let spins: Vec<i8> = (0..n)
+                .map(|i| if mask >> i & 1 == 1 { 1 } else { -1 })
+                .collect();
+            let x = spins_to_bits(&spins);
+            assert!(
+                (q.value(&x) - p.objective(&spins)).abs() < 1e-9,
+                "case {case} mask {mask}: {} vs {}",
+                q.value(&x),
+                p.objective(&spins)
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_qubo_ising_roundtrip_preserves_argmin() {
+    // Ising -> QUBO -> Ising on n <= 12: the round-tripped Hamiltonian
+    // has the same minimizers (energies shift only by the offset).
+    let mut rng = Rng::new(2003);
+    for case in 0..40 {
+        let n = 2 + rng.usize_below(11); // 2..=12
+        let p = random_ising(&mut rng, n, rng.bool());
+        let rt = p.to_qubo().to_ising();
+        let (argmin, e_min) = p.brute_force();
+        let (rt_argmin, rt_min) = rt.brute_force();
+        // The original argmin must be optimal for the round-trip too.
+        assert!(
+            (rt.energy(&argmin) - rt_min).abs() < 1e-9,
+            "case {case}: original argmin not optimal after round-trip"
+        );
+        // And vice versa (degenerate minima may differ as states).
+        assert!(
+            (p.energy(&rt_argmin) - e_min).abs() < 1e-9,
+            "case {case}: round-trip argmin not optimal originally"
+        );
+    }
+}
+
+#[test]
+fn prop_embed_decode_roundtrip_on_binary_states() {
+    // Embedding to the quantized fabric and decoding relative to the
+    // ancilla must invert on canonical binary phase states.
+    use onn_scale::onn::phase::spin_to_phase;
+    let mut rng = Rng::new(2004);
+    for case in 0..CASES {
+        let n = 2 + rng.usize_below(10);
+        let p = random_ising(&mut rng, n, rng.bool());
+        let spins: Vec<i8> = (0..n).map(|_| rng.spin()).collect();
+        let mut phases: Vec<i32> = spins.iter().map(|&s| spin_to_phase(s, 16)).collect();
+        if p.has_field() {
+            phases.push(0); // ancilla at +1
+        }
+        let decoded = p.decode_spins(&phases, 16);
+        let inverted: Vec<i8> = spins.iter().map(|&s| -s).collect();
+        if p.has_field() {
+            // The ancilla gauge-fixes the decode exactly.
+            assert_eq!(decoded, spins, "case {case}");
+        } else {
+            // Without fields the Hamiltonian is inversion-symmetric, so
+            // the decode is defined up to a global flip.
+            assert!(
+                decoded == spins || decoded == inverted,
+                "case {case}: {decoded:?} vs {spins:?}"
+            );
+        }
+        // Global phase inversion decodes identically (gauge symmetry).
+        let flipped: Vec<i32> = phases.iter().map(|&x| (x + 8) % 16).collect();
+        assert_eq!(p.decode_spins(&flipped, 16), decoded, "case {case} flipped");
+    }
+}
+
+#[test]
+fn prop_greedy_descent_monotone_and_locally_optimal() {
+    let mut rng = Rng::new(2005);
+    for case in 0..CASES {
+        let n = 2 + rng.usize_below(14);
+        let p = random_ising(&mut rng, n, rng.bool());
+        let mut spins: Vec<i8> = (0..n).map(|_| rng.spin()).collect();
+        let before = p.energy(&spins);
+        greedy_descent(&p, &mut spins);
+        let after = p.energy(&spins);
+        assert!(after <= before + 1e-9, "case {case}: {before} -> {after}");
+        assert!(is_local_minimum(&p, &spins), "case {case}");
+    }
+}
+
+#[test]
+fn prop_phase_noise_is_deterministic_per_seed() {
+    use onn_scale::onn::config::NetworkConfig;
+    use onn_scale::onn::dynamics::{FunctionalEngine, PhaseNoise};
+    use onn_scale::onn::weights::WeightMatrix;
+    let mut rng = Rng::new(2006);
+    for case in 0..40 {
+        let n = 2 + rng.usize_below(8);
+        let cfg = NetworkConfig::paper(n);
+        let mut w = WeightMatrix::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                w.set(i, j, rng.range_i64(-16, 16) as i8);
+            }
+        }
+        let amplitude = rng.f64();
+        let seed = rng.next_u64();
+        let ph0: Vec<i32> = (0..n).map(|_| rng.range_i64(0, 16) as i32).collect();
+        let run = |w: WeightMatrix, ph0: &[i32]| {
+            let mut eng = FunctionalEngine::new(cfg, w);
+            eng.set_noise(Some(PhaseNoise::new(amplitude, seed)));
+            let mut ph = ph0.to_vec();
+            for _ in 0..6 {
+                eng.period_step(&mut ph);
+            }
+            ph
+        };
+        let a = run(w.clone(), &ph0);
+        let b = run(w, &ph0);
+        assert_eq!(a, b, "case {case}: same seed must reproduce");
+        assert!(a.iter().all(|&x| (0..16).contains(&x)), "case {case}");
+    }
+}
+
+#[test]
+fn prop_vertex_cover_reduction_optimum_is_minimum_cover() {
+    use onn_scale::solver::graph::Graph;
+    use onn_scale::solver::reductions::{cover_size, decode_cover, is_cover, min_vertex_cover};
+    let mut rng = Rng::new(2007);
+    for case in 0..25 {
+        let n = 3 + rng.usize_below(6); // 3..=8
+        let g = Graph::random(n, 0.4, &mut rng);
+        let p = min_vertex_cover(&g, 2.0);
+        let (spins, _) = p.brute_force();
+        let cover = decode_cover(&g, &spins);
+        assert!(is_cover(&g, &cover), "case {case}");
+        // Exhaustive minimum cover for comparison.
+        let mut best = usize::MAX;
+        for mask in 0u64..(1u64 << n) {
+            let cand: Vec<bool> = (0..n).map(|i| mask >> i & 1 == 1).collect();
+            if is_cover(&g, &cand) {
+                best = best.min(cand.iter().filter(|&&b| b).count());
+            }
+        }
+        assert_eq!(
+            cover_size(&cover),
+            best,
+            "case {case}: reduction optimum is not a minimum cover"
+        );
+    }
+}

@@ -1,0 +1,208 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! This image has no crates.io access, so the workspace vendors the
+//! subset of anyhow it actually uses: [`Error`], [`Result`], the
+//! [`anyhow!`] macro, and the [`Context`] extension trait.  Semantics
+//! match the real crate for these paths:
+//!
+//! * any `std::error::Error + Send + Sync + 'static` converts via `?`;
+//! * `{e}` prints the outermost message, `{e:#}` the whole cause chain
+//!   joined by `": "`;
+//! * `context`/`with_context` wrap an error with a higher-level message.
+//!
+//! A production checkout can swap this path dependency for the real
+//! `anyhow` without touching any source file.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `anyhow::Result<T>`: a `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamic error with an optional cause chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Build an error from a displayable message (no cause).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error {
+            msg: message.to_string(),
+            source: None,
+        }
+    }
+
+    /// Wrap a concrete error value.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Self {
+        Error {
+            msg: error.to_string(),
+            source: Some(Box::new(error)),
+        }
+    }
+
+    /// Wrap this error with a higher-level message (cause chain grows).
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error {
+            msg: context.to_string(),
+            source: Some(Box::new(Chained {
+                msg: self.msg,
+                source: self.source,
+            })),
+        }
+    }
+
+    /// The outermost message.
+    pub fn to_string_outer(&self) -> &str {
+        &self.msg
+    }
+
+    /// Root-to-leaf iteration of the cause chain messages.
+    fn write_chain(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur: Option<&(dyn StdError + 'static)> = self
+            .source
+            .as_ref()
+            .map(|b| &**b as &(dyn StdError + 'static));
+        while let Some(e) = cur {
+            write!(f, ": {e}")?;
+            cur = e.source();
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            self.write_chain(f)
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.write_chain(f)
+    }
+}
+
+/// Internal link type so a wrapped [`Error`] can live in a
+/// `dyn std::error::Error` cause chain ([`Error`] itself deliberately
+/// does not implement `std::error::Error`, to keep the blanket `From`).
+struct Chained {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl fmt::Display for Chained {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Debug for Chained {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl StdError for Chained {
+    fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        self.source
+            .as_ref()
+            .map(|b| &**b as &(dyn StdError + 'static))
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+/// Extension trait adding `context`/`with_context` to `Result`.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+/// `anyhow!(...)`: build an [`Error`] from a format string or any
+/// displayable expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)+) => {
+        $crate::Error::msg(format!($fmt, $($arg)+))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(format!("{e}"), "missing file");
+    }
+
+    #[test]
+    fn macro_forms() {
+        let e = anyhow!("plain");
+        assert_eq!(format!("{e}"), "plain");
+        let n = 3;
+        let e = anyhow!("n={n}");
+        assert_eq!(format!("{e}"), "n=3");
+        let e = anyhow!("a {} b {}", 1, 2);
+        assert_eq!(format!("{e}"), "a 1 b 2");
+        let e = anyhow!(String::from("owned"));
+        assert_eq!(format!("{e}"), "owned");
+    }
+
+    #[test]
+    fn alternate_prints_cause_chain() {
+        let e: Error = Err::<(), _>(io_err())
+            .with_context(|| "reading manifest".to_string())
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: missing file");
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Error>();
+    }
+}

@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# CI gate: format, lints, offline release build, tests, and a check that
+# the pjrt feature still typechecks against the vendored xla stub.
+# Everything runs offline (dependencies are vendored under rust/vendor/).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "==> cargo fmt --check"
+cargo fmt --check
+
+echo "==> cargo clippy -- -D warnings"
+cargo clippy --all-targets -- -D warnings
+
+echo "==> cargo build --release"
+cargo build --release
+
+echo "==> cargo test -q"
+cargo test -q
+
+echo "==> cargo check --features pjrt (stub xla)"
+cargo check --features pjrt
+
+echo "CI OK"
