@@ -9,7 +9,7 @@
 use crate::apps::maxcut::Graph;
 use crate::onn::phase::wrap;
 use crate::solver::anneal::Schedule;
-use crate::solver::portfolio::{solve_native, PortfolioParams};
+use crate::solver::portfolio::{solve_with, EngineSelect, PortfolioParams};
 use crate::solver::reductions;
 
 /// Decode a phase into one of `k` color sectors (nearest sector center).
@@ -74,6 +74,19 @@ pub fn solve_onn(
     max_periods: usize,
     seed: u64,
 ) -> ColoringResult {
+    solve_onn_with(graph, k, restarts, max_periods, seed, EngineSelect::Native)
+}
+
+/// [`solve_onn`] on an explicitly selected engine fabric (native or
+/// row-sharded — the answer is bit-identical either way).
+pub fn solve_onn_with(
+    graph: &Graph,
+    k: usize,
+    restarts: usize,
+    max_periods: usize,
+    seed: u64,
+    select: EngineSelect,
+) -> ColoringResult {
     assert!(
         (2..=16).contains(&k),
         "k = {k} outside 2..=16 (the 16-step phase wheel caps the sector count)"
@@ -97,8 +110,8 @@ pub fn solve_onn(
         polish: false, // binary polish does not apply to sectors
         ..Default::default()
     };
-    let out = solve_native(&problem, &params)
-        .expect("native portfolio on a validated coloring reduction");
+    let out = solve_with(&problem, &params, select)
+        .expect("portfolio on a validated coloring reduction");
     // Decode on the same phase wheel the portfolio's engine ran on.
     let p = crate::onn::config::NetworkConfig::paper(graph.n).period() as i32;
     let mut best = ColoringResult {

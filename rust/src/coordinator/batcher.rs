@@ -17,7 +17,7 @@ use anyhow::Result;
 use crate::coordinator::job::{Job, RetrievalResult, SolveJob, SolveResult};
 use crate::coordinator::metrics::Metrics;
 use crate::runtime::EngineFactory;
-use crate::solver::portfolio::{solve_native, PortfolioParams};
+use crate::solver::portfolio::{solve_with, EngineSelect, PortfolioParams};
 
 /// Batch-window policy knobs.
 #[derive(Debug, Clone, Copy)]
@@ -162,17 +162,21 @@ pub fn worker_loop(
 }
 
 /// The solver worker loop: pulls [`SolveJob`]s from the shared queue and
-/// runs each through the annealed replica portfolio on a fresh
-/// [`crate::runtime::native::NativeEngine`] sized for the request
-/// (solve traffic spans arbitrary problem sizes, so engines are
-/// per-request rather than per-pool — the request itself is the batch:
-/// its replicas fill the engine's batch dimension).
+/// runs each through the annealed replica portfolio on a fresh engine
+/// sized for the request (solve traffic spans arbitrary problem sizes,
+/// so engines are per-request rather than per-pool — the request itself
+/// is the batch: its replicas fill the engine's batch dimension).
+/// `select` is the pool's engine-selection rule: requests embedding
+/// above the configured oscillator threshold run on the row-sharded
+/// cluster instead of a single native engine; a request's explicit
+/// `shards` field overrides the rule.
 ///
 /// Several workers may share one queue; each request runs on exactly one
 /// worker, so concurrency scales across requests.
 pub fn solve_worker_loop(
     rx: Arc<Mutex<Receiver<SolveJob>>>,
     metrics: Arc<Metrics>,
+    select: EngineSelect,
 ) -> Result<()> {
     loop {
         let job = {
@@ -188,7 +192,12 @@ pub fn solve_worker_loop(
             seed: job.req.seed,
             ..Default::default()
         };
-        match solve_native(&job.req.problem, &params) {
+        let job_select = match job.req.shards {
+            Some(1) => EngineSelect::Native,
+            Some(k) => EngineSelect::Sharded { shards: k },
+            None => select,
+        };
+        match solve_with(&job.req.problem, &params, job_select) {
             Ok(out) => {
                 let done = Instant::now();
                 let result = SolveResult {
@@ -200,10 +209,16 @@ pub fn solve_worker_loop(
                     periods: out.periods,
                     replicas: out.replicas,
                     settled_replicas: out.settled_replicas,
+                    engine: out.engine,
+                    sync_rounds: out.sync_rounds,
                     queue_latency: dequeued.duration_since(job.submitted),
                     total_latency: done.duration_since(job.submitted),
                 };
-                metrics.record_solve_completion(result.total_latency, result.periods);
+                metrics.record_solve_completion(
+                    result.total_latency,
+                    result.periods,
+                    result.sync_rounds,
+                );
                 // Receiver may have hung up (client gave up) — fine.
                 let _ = job.reply.send(result);
             }

@@ -71,6 +71,9 @@ pub struct SolveRequest {
     pub max_periods: usize,
     pub schedule: Schedule,
     pub seed: u64,
+    /// Explicit shard-count override; `None` lets the solver pool pick
+    /// the engine by its oscillator threshold (1 forces native).
+    pub shards: Option<usize>,
 }
 
 impl SolveRequest {
@@ -85,6 +88,7 @@ impl SolveRequest {
                 factor: 0.8,
             },
             seed: 1,
+            shards: None,
         }
     }
 }
@@ -105,6 +109,11 @@ pub struct SolveResult {
     pub periods: usize,
     pub replicas: usize,
     pub settled_replicas: usize,
+    /// Engine kind that served the solve ("native" / "sharded").
+    pub engine: &'static str,
+    /// All-gather synchronization rounds the engine performed (0 on the
+    /// native path) — the multi-device sync-cost metric.
+    pub sync_rounds: u64,
     pub queue_latency: Duration,
     pub total_latency: Duration,
 }

@@ -22,6 +22,11 @@ pub struct Metrics {
     solve_us: AtomicU64,
     /// Engine chunk-periods spent on solve jobs (effort accounting).
     pub solve_periods: AtomicU64,
+    /// Solves served by the sharded multi-device fabric.
+    pub solves_sharded: AtomicU64,
+    /// All-gather synchronization rounds spent on sharded solves (the
+    /// multi-device sync-cost metric, summed over completed jobs).
+    pub solve_sync_rounds: AtomicU64,
 }
 
 /// A point-in-time snapshot for reporting.
@@ -42,6 +47,8 @@ pub struct MetricsSnapshot {
     pub solves_failed: u64,
     pub mean_solve_ms: f64,
     pub solve_periods: u64,
+    pub solves_sharded: u64,
+    pub solve_sync_rounds: u64,
 }
 
 impl Metrics {
@@ -70,12 +77,17 @@ impl Metrics {
         self.solves_submitted.fetch_add(1, Ordering::Relaxed);
     }
 
-    pub fn record_solve_completion(&self, total: Duration, periods: usize) {
+    pub fn record_solve_completion(&self, total: Duration, periods: usize, sync_rounds: u64) {
         self.solves_completed.fetch_add(1, Ordering::Relaxed);
         self.solve_us
             .fetch_add(total.as_micros() as u64, Ordering::Relaxed);
         self.solve_periods
             .fetch_add(periods as u64, Ordering::Relaxed);
+        if sync_rounds > 0 {
+            self.solves_sharded.fetch_add(1, Ordering::Relaxed);
+            self.solve_sync_rounds
+                .fetch_add(sync_rounds, Ordering::Relaxed);
+        }
     }
 
     pub fn record_solve_failure(&self) {
@@ -100,6 +112,8 @@ impl Metrics {
             solves_failed: self.solves_failed.load(Ordering::Relaxed),
             mean_solve_ms: div(self.solve_us.load(Ordering::Relaxed), solves_completed) / 1000.0,
             solve_periods: self.solve_periods.load(Ordering::Relaxed),
+            solves_sharded: self.solves_sharded.load(Ordering::Relaxed),
+            solve_sync_rounds: self.solve_sync_rounds.load(Ordering::Relaxed),
         }
     }
 }
@@ -139,7 +153,7 @@ mod tests {
         let m = Metrics::default();
         m.record_solve_submit();
         m.record_solve_submit();
-        m.record_solve_completion(Duration::from_millis(8), 128);
+        m.record_solve_completion(Duration::from_millis(8), 128, 0);
         m.record_solve_failure();
         let s = m.snapshot();
         assert_eq!(s.solves_submitted, 2);
@@ -147,5 +161,12 @@ mod tests {
         assert_eq!(s.solves_failed, 1);
         assert_eq!(s.solve_periods, 128);
         assert!((s.mean_solve_ms - 8.0).abs() < 0.01);
+        assert_eq!(s.solves_sharded, 0, "native solves are not sharded");
+        // A sharded completion adds its sync rounds to the pool totals.
+        m.record_solve_completion(Duration::from_millis(4), 64, 96);
+        let s = m.snapshot();
+        assert_eq!(s.solves_completed, 2);
+        assert_eq!(s.solves_sharded, 1);
+        assert_eq!(s.solve_sync_rounds, 96);
     }
 }

@@ -14,7 +14,10 @@
 //! Since PR 1 the same front-end also serves *optimization* traffic:
 //! `"type": "solve"` JSON lines become `job::SolveRequest`s handled by a
 //! shared solver pool driving `solver::portfolio` (see
-//! `DESIGN_SOLVER.md`).
+//! `DESIGN_SOLVER.md`).  Solves whose embedding exceeds the pool's
+//! oscillator threshold run on the row-sharded multi-device engine
+//! (`server::SolverPoolConfig`), bit-exact with the native path, and
+//! report their all-gather `sync_rounds` in results and metrics.
 
 pub mod batcher;
 pub mod job;

@@ -107,6 +107,18 @@ impl Router {
                 req.problem.sectors
             ));
         }
+        // An explicit shard override must leave every shard at least one
+        // row of the embedded coupling matrix.
+        if let Some(shards) = req.shards {
+            let m = req.problem.embed_dim();
+            if shards == 0 || shards > m {
+                return Err(anyhow!(
+                    "solve request {}: {shards} shards invalid for an \
+                     {m}-oscillator embedding (want 1..={m})",
+                    req.id
+                ));
+            }
+        }
         let s = self.solver.lock().unwrap();
         let tx = s
             .as_ref()
@@ -224,5 +236,14 @@ mod tests {
         let mut bad = solve_req(3);
         bad.problem.sectors = 17; // beyond the 16-step phase wheel
         assert!(r.submit_solve(bad).is_err());
+        let mut bad = solve_req(3);
+        bad.shards = Some(0);
+        assert!(r.submit_solve(bad).is_err());
+        let mut bad = solve_req(3);
+        bad.shards = Some(4); // more shards than oscillators
+        assert!(r.submit_solve(bad).is_err());
+        let mut ok = solve_req(3);
+        ok.shards = Some(3);
+        assert!(r.submit_solve(ok).is_ok());
     }
 }

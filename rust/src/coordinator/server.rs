@@ -26,6 +26,7 @@ use crate::onn::weights::WeightMatrix;
 use crate::runtime::native::NativeEngine;
 use crate::runtime::EngineFactory;
 use crate::solver::anneal::Schedule;
+use crate::solver::portfolio::{EngineSelect, DEFAULT_MAX_SHARDS, DEFAULT_SHARD_THRESHOLD};
 use crate::solver::problem::IsingProblem;
 use crate::util::json::Json;
 
@@ -37,6 +38,40 @@ use crate::runtime::engine::{PjrtContext, PjrtEngine};
 /// Solver workers sharing the solve queue (engines are per-request, so
 /// this bounds concurrent solves, not problem sizes).
 const SOLVE_WORKERS: usize = 2;
+
+/// Solver pool configuration: worker count and the engine-selection
+/// rule.  Requests whose embedding reaches `shard_threshold`
+/// oscillators run on the row-sharded cluster (one shard per
+/// `shard_threshold` rows, capped at `max_shards`) instead of a single
+/// native engine — selection never changes the answer, only where the
+/// rows live.
+#[derive(Debug, Clone, Copy)]
+pub struct SolverPoolConfig {
+    pub workers: usize,
+    pub shard_threshold: usize,
+    pub max_shards: usize,
+}
+
+impl Default for SolverPoolConfig {
+    fn default() -> Self {
+        Self {
+            workers: SOLVE_WORKERS,
+            shard_threshold: DEFAULT_SHARD_THRESHOLD,
+            max_shards: DEFAULT_MAX_SHARDS,
+        }
+    }
+}
+
+impl SolverPoolConfig {
+    /// The selection rule the pool's workers apply per request.  A
+    /// `max_shards` below 2 disables sharding (every size runs native).
+    pub fn select(&self) -> EngineSelect {
+        EngineSelect::Auto {
+            threshold: self.shard_threshold.max(1),
+            max_shards: self.max_shards,
+        }
+    }
+}
 
 /// Which engine implementation a pool should run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -91,8 +126,19 @@ pub struct Coordinator {
 
 impl Coordinator {
     /// Spin up one worker per pool spec, plus the shared solver pool
-    /// (always present: solve traffic needs no pre-registered weights).
+    /// (always present: solve traffic needs no pre-registered weights)
+    /// with the default engine-selection rule.
     pub fn start(specs: Vec<PoolSpec>, policy: BatchPolicy) -> Result<Coordinator> {
+        Self::start_with_solver(specs, policy, SolverPoolConfig::default())
+    }
+
+    /// [`Coordinator::start`] with an explicit solver-pool configuration
+    /// (worker count + the shard threshold for large solves).
+    pub fn start_with_solver(
+        specs: Vec<PoolSpec>,
+        policy: BatchPolicy,
+        solver: SolverPoolConfig,
+    ) -> Result<Coordinator> {
         let metrics = Arc::new(Metrics::default());
         let router = Arc::new(Router::new(metrics.clone()));
         let mut workers = Vec::new();
@@ -151,14 +197,17 @@ impl Coordinator {
             }
         }
 
-        // The shared solver pool: optimization traffic for any size.
+        // The shared solver pool: optimization traffic for any size;
+        // the selection rule places each request on the native or
+        // sharded fabric.
         let (stx, srx) = channel();
         router.register_solver(stx)?;
         let srx = Arc::new(Mutex::new(srx));
-        for _ in 0..SOLVE_WORKERS {
+        let select = solver.select();
+        for _ in 0..solver.workers.max(1) {
             let m = metrics.clone();
             let rx = srx.clone();
-            workers.push(std::thread::spawn(move || solve_worker_loop(rx, m)));
+            workers.push(std::thread::spawn(move || solve_worker_loop(rx, m, select)));
         }
 
         Ok(Coordinator {
@@ -266,6 +315,8 @@ fn handle_solve_value(router: &Router, v: &Json) -> String {
             ("periods", Json::num(res.periods as f64)),
             ("replicas", Json::num(res.replicas as f64)),
             ("settled_replicas", Json::num(res.settled_replicas as f64)),
+            ("engine", Json::str(res.engine)),
+            ("sync_rounds", Json::num(res.sync_rounds as f64)),
         ])
         .to_string(),
         Err(e) => Json::obj(vec![("error", Json::str(e.to_string()))]).to_string(),
@@ -305,12 +356,16 @@ const MAX_WIRE_N: usize = 4096;
 /// using `Coordinator::solve_sync` directly).
 const MAX_WIRE_REPLICAS: usize = 4096;
 const MAX_WIRE_PERIODS: usize = 65_536;
+/// Shard-override ceiling: every shard is a worker thread on the
+/// serving host, so cap what one request line may demand.
+const MAX_WIRE_SHARDS: usize = 64;
 
 /// Parse a solve request.  Couplings come either dense
 /// (`"j": [n*n floats]`) or sparse (`"edges": [[i, j, J_ij], ...]`);
 /// optional fields: `"h"` (length n), `"sectors"` (default 2),
 /// `"replicas"`, `"max_periods"`, `"schedule"` (geometric | linear |
-/// constant), `"noise"` (starting amplitude), `"seed"`, `"offset"`.
+/// constant), `"noise"` (starting amplitude), `"seed"`, `"offset"`,
+/// `"shards"` (explicit engine override; absent = threshold rule).
 fn parse_solve_request(v: &Json) -> Result<SolveRequest> {
     let n = v
         .get("n")
@@ -400,6 +455,18 @@ fn parse_solve_request(v: &Json) -> Result<SolveRequest> {
              max_periods <= {MAX_WIRE_PERIODS}"
         ));
     }
+    let shards = match v.get("shards") {
+        None => None,
+        Some(s) => {
+            let k = s
+                .as_usize()
+                .ok_or_else(|| anyhow!("'shards' must be a non-negative integer"))?;
+            if k == 0 || k > MAX_WIRE_SHARDS {
+                return Err(anyhow!("'shards' = {k} outside 1..={MAX_WIRE_SHARDS}"));
+            }
+            Some(k)
+        }
+    };
     Ok(SolveRequest {
         id: v.get("id").and_then(Json::as_usize).unwrap_or(0) as u64,
         problem,
@@ -407,6 +474,7 @@ fn parse_solve_request(v: &Json) -> Result<SolveRequest> {
         max_periods,
         schedule,
         seed: v.get("seed").and_then(Json::as_usize).unwrap_or(1) as u64,
+        shards,
     })
 }
 
@@ -484,7 +552,7 @@ mod tests {
             &Json::parse(
                 r#"{"type":"solve","id":7,"n":3,
                     "edges":[[0,1,-1],[1,2,-1]],
-                    "replicas":4,"max_periods":32,
+                    "replicas":4,"max_periods":32,"shards":2,
                     "schedule":"linear","noise":0.4,"seed":9}"#,
             )
             .unwrap(),
@@ -499,6 +567,7 @@ mod tests {
         assert_eq!(r.max_periods, 32);
         assert_eq!(r.schedule, Schedule::Linear { start: 0.4 });
         assert_eq!(r.seed, 9);
+        assert_eq!(r.shards, Some(2));
     }
 
     #[test]
@@ -510,6 +579,7 @@ mod tests {
         assert_eq!(ok.problem.get_j(0, 1), -1.0);
         assert_eq!(ok.problem.h[0], 0.5);
         assert_eq!(ok.schedule.name(), "geometric");
+        assert_eq!(ok.shards, None, "no override by default");
         for bad in [
             r#"{"j":[0,0,0,0]}"#,                      // missing n
             r#"{"n":2}"#,                              // missing couplings
@@ -523,6 +593,8 @@ mod tests {
             r#"{"n":2,"j":[0,1,1,0],"replicas":1000000}"#, // over the effort cap
             r#"{"n":2,"j":[0,1,1,0],"sectors":17}"#,   // beyond the phase wheel
             r#"{"n":2,"j":[0,1,1,0],"sectors":1}"#,    // degenerate sector count
+            r#"{"n":2,"j":[0,1,1,0],"shards":0}"#,     // zero shards
+            r#"{"n":2,"j":[0,1,1,0],"shards":1000}"#,  // over the shard cap
         ] {
             assert!(
                 parse_solve_request(&Json::parse(bad).unwrap()).is_err(),

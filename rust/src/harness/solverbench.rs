@@ -15,7 +15,7 @@ use std::time::Instant;
 use crate::harness::bench;
 use crate::solver::anneal::Schedule;
 use crate::solver::graph::Graph;
-use crate::solver::portfolio::{solve_native, PortfolioParams};
+use crate::solver::portfolio::{solve_native, solve_with, EngineSelect, PortfolioParams};
 use crate::solver::reductions::max_cut;
 use crate::solver::sa;
 use crate::util::json::Json;
@@ -142,7 +142,7 @@ pub fn quality_vs_sa(
 }
 
 /// One throughput measurement: replicas x periods of annealed portfolio
-/// work per second on the native engine at size `n`.
+/// work per second on one engine fabric at size `n`.
 #[derive(Debug, Clone)]
 pub struct ThroughputPoint {
     pub n: usize,
@@ -150,16 +150,32 @@ pub struct ThroughputPoint {
     pub periods: usize,
     pub median_s: f64,
     pub replica_periods_per_sec: f64,
+    /// Engine kind that ran this row ("native" / "sharded").
+    pub engine: &'static str,
+    /// Shard workers (1 on the native rows).
+    pub shards: usize,
+    /// All-gather sync rounds of the probe run (0 on native rows) — the
+    /// distributed-coordination cost the row's rate already pays for.
+    pub sync_rounds: u64,
 }
 
 /// Measure solver throughput across network sizes with the shared bench
-/// timer (`harness::bench`).
+/// timer (`harness::bench`); `shards <= 1` rates the native engine, a
+/// larger count rates the row-sharded cluster on identical work (the
+/// trajectories are bit-exact, so rows differ only in where time goes:
+/// compute vs per-period all-gather synchronization).
 pub fn throughput_sweep(
     sizes: &[usize],
     replicas: usize,
     periods: usize,
     seed: u64,
+    shards: usize,
 ) -> Vec<ThroughputPoint> {
+    let select = if shards <= 1 {
+        EngineSelect::Native
+    } else {
+        EngineSelect::Sharded { shards }
+    };
     let mut points = Vec::with_capacity(sizes.len());
     for &n in sizes {
         let mut rng = Rng::new(seed.wrapping_add(n as u64));
@@ -180,11 +196,10 @@ pub fn throughput_sweep(
         // reports the periods every timed iteration will actually drive
         // (the all-settled early exit may stop short of the nominal
         // budget; rating nominal work would inflate the throughput).
-        let actual_periods = solve_native(&problem, &params)
-            .expect("portfolio probe")
-            .periods;
-        let r = bench::bench(&format!("solver/portfolio_n{n}"), 1, 3, || {
-            let out = solve_native(&problem, &params).expect("portfolio");
+        let probe = solve_with(&problem, &params, select).expect("portfolio probe");
+        let actual_periods = probe.periods;
+        let r = bench::bench(&format!("solver/portfolio_{}_n{n}", probe.engine), 1, 3, || {
+            let out = solve_with(&problem, &params, select).expect("portfolio");
             assert_eq!(out.replicas, replicas);
         });
         let median_s = r.median.as_secs_f64();
@@ -195,16 +210,27 @@ pub fn throughput_sweep(
             median_s,
             replica_periods_per_sec: (replicas * actual_periods) as f64
                 / median_s.max(1e-12),
+            engine: probe.engine,
+            shards: select.shards_for(problem.embed_dim()),
+            sync_rounds: probe.sync_rounds,
         });
     }
     points
 }
 
 /// Serialize a throughput sweep as the `BENCH_solver.json` document.
+/// Each point carries its engine label, so native and sharded rows for
+/// the same sizes live side by side in one trajectory file.
 pub fn bench_json(points: &[ThroughputPoint], recorded_unix_s: u64) -> Json {
+    let mut engines: Vec<&'static str> = Vec::new();
+    for p in points {
+        if !engines.contains(&p.engine) {
+            engines.push(p.engine);
+        }
+    }
     Json::obj(vec![
         ("bench", Json::str("solver_portfolio_throughput")),
-        ("engine", Json::str("native")),
+        ("engines", Json::Arr(engines.into_iter().map(Json::str).collect())),
         ("unit", Json::str("replica_periods_per_sec")),
         ("recorded_unix_s", Json::num(recorded_unix_s as f64)),
         (
@@ -215,6 +241,9 @@ pub fn bench_json(points: &[ThroughputPoint], recorded_unix_s: u64) -> Json {
                     .map(|p| {
                         Json::obj(vec![
                             ("n", Json::num(p.n as f64)),
+                            ("engine", Json::str(p.engine)),
+                            ("shards", Json::num(p.shards as f64)),
+                            ("sync_rounds", Json::num(p.sync_rounds as f64)),
                             ("replicas", Json::num(p.replicas as f64)),
                             ("periods", Json::num(p.periods as f64)),
                             ("median_s", Json::num(p.median_s)),
@@ -230,16 +259,23 @@ pub fn bench_json(points: &[ThroughputPoint], recorded_unix_s: u64) -> Json {
     ])
 }
 
-/// Run the sweep and write `BENCH_solver.json`-style output to `path`.
+/// Run the sweep(s) and write `BENCH_solver.json`-style output to
+/// `path`: always the native rows, plus — when `shards >= 2` — the
+/// sharded rows on the exact same instances, so the file records
+/// native-vs-sharded replica-periods/sec vs N.
 pub fn record_throughput(
     path: &std::path::Path,
     sizes: &[usize],
     replicas: usize,
     periods: usize,
     seed: u64,
+    shards: usize,
 ) -> std::io::Result<Vec<ThroughputPoint>> {
     let t0 = Instant::now();
-    let points = throughput_sweep(sizes, replicas, periods, seed);
+    let mut points = throughput_sweep(sizes, replicas, periods, seed, 1);
+    if shards >= 2 {
+        points.extend(throughput_sweep(sizes, replicas, periods, seed, shards));
+    }
     let stamp = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_secs())
@@ -247,7 +283,7 @@ pub fn record_throughput(
     let doc = bench_json(&points, stamp);
     std::fs::write(path, format!("{doc}\n"))?;
     eprintln!(
-        "wrote {} ({} sizes in {:.1}s)",
+        "wrote {} ({} rows in {:.1}s)",
         path.display(),
         points.len(),
         t0.elapsed().as_secs_f64()
@@ -274,34 +310,60 @@ mod tests {
 
     #[test]
     fn throughput_points_have_positive_rates() {
-        let pts = throughput_sweep(&[8, 12], 4, 16, 3);
+        let pts = throughput_sweep(&[8, 12], 4, 16, 3, 1);
         assert_eq!(pts.len(), 2);
         for p in &pts {
             assert!(p.replica_periods_per_sec > 0.0);
+            assert_eq!(p.engine, "native");
+            assert_eq!(p.sync_rounds, 0);
         }
     }
 
     #[test]
+    fn sharded_sweep_rows_carry_sync_cost() {
+        let pts = throughput_sweep(&[10], 2, 8, 3, 2);
+        assert_eq!(pts.len(), 1);
+        assert_eq!(pts[0].engine, "sharded");
+        assert_eq!(pts[0].shards, 2);
+        assert!(pts[0].sync_rounds > 0, "sharded rows must pay sync rounds");
+        assert!(pts[0].replica_periods_per_sec > 0.0);
+    }
+
+    #[test]
     fn bench_json_shape() {
-        let pts = vec![ThroughputPoint {
-            n: 8,
-            replicas: 4,
-            periods: 16,
-            median_s: 0.5,
-            replica_periods_per_sec: 128.0,
-        }];
+        let pts = vec![
+            ThroughputPoint {
+                n: 8,
+                replicas: 4,
+                periods: 16,
+                median_s: 0.5,
+                replica_periods_per_sec: 128.0,
+                engine: "native",
+                shards: 1,
+                sync_rounds: 0,
+            },
+            ThroughputPoint {
+                n: 8,
+                replicas: 4,
+                periods: 16,
+                median_s: 0.7,
+                replica_periods_per_sec: 91.0,
+                engine: "sharded",
+                shards: 2,
+                sync_rounds: 64,
+            },
+        ];
         let doc = bench_json(&pts, 123);
         let parsed = Json::parse(&doc.to_string()).unwrap();
         assert_eq!(
             parsed.get("bench").and_then(Json::as_str),
             Some("solver_portfolio_throughput")
         );
-        assert_eq!(
-            parsed
-                .get("points")
-                .and_then(Json::as_arr)
-                .map(|a| a.len()),
-            Some(1)
-        );
+        let engines = parsed.get("engines").and_then(Json::as_arr).unwrap();
+        assert_eq!(engines.len(), 2);
+        let points = parsed.get("points").and_then(Json::as_arr).unwrap();
+        assert_eq!(points.len(), 2);
+        assert_eq!(points[1].get("engine").and_then(Json::as_str), Some("sharded"));
+        assert_eq!(points[1].get("sync_rounds").and_then(Json::as_usize), Some(64));
     }
 }

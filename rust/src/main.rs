@@ -38,13 +38,17 @@ Solver (generic Ising/QUBO subsystem, see DESIGN_SOLVER.md):
   solve --problem maxcut|coloring|partition|cover [--nodes 64] [--prob 0.1]
         [--colors 3] [--replicas 32] [--periods 256]
         [--schedule geometric|linear|constant] [--noise 0.6] [--seed S]
+        [--shards K]      K=0 auto-selects by size; K>1 forces the
+                          sharded multi-device engine (bit-exact)
   solve-bench [--sizes 16,32,64,128] [--replicas 32] [--periods 128]
-        [--instances 5] [--out BENCH_solver.json]   quality vs SA + throughput
+        [--instances 5] [--shards K] [--out BENCH_solver.json]
+                          quality vs SA + native (and, with --shards,
+                          sharded) throughput rows
 
 Ablations (DESIGN.md design choices):
   ablation [--trials 50]                precision vs capacity/accuracy
   capacity [--n 20] [--trials 50]       DO-I vs Hebbian storage capacity
-  shard-demo [--n 42] [--shards 4]      multi-device sharding (future work)
+  shard-demo [--n 42] [--shards 4]      multi-device sharding bit-exactness demo
 
 Service / validation:
   serve [--addr 127.0.0.1:7020] --dataset 7x6 [--engine pjrt]
@@ -255,7 +259,7 @@ fn cmd_coloring(args: &mut Args) -> Result<()> {
 fn cmd_solve(args: &mut Args) -> Result<()> {
     use onn_scale::solver::anneal::Schedule;
     use onn_scale::solver::graph::Graph;
-    use onn_scale::solver::portfolio::{solve_native, PortfolioParams};
+    use onn_scale::solver::portfolio::{solve_with, EngineSelect, PortfolioParams};
     use onn_scale::solver::{reductions, sa};
     use onn_scale::util::rng::Rng;
 
@@ -268,10 +272,18 @@ fn cmd_solve(args: &mut Args) -> Result<()> {
     let schedule_name = args.get_str("schedule", "geometric");
     let noise = args.get_f64("noise", 0.6)?;
     let seed = args.get_u64("seed", 7)?;
+    let shards = args.get_usize("shards", 0)?;
     args.finish().map_err(|e| anyhow!(e))?;
 
     let schedule = Schedule::parse(&schedule_name, noise)
         .ok_or_else(|| anyhow!("--schedule must be geometric|linear|constant"))?;
+    // 0 = size-based auto-selection; 1 = force native; K > 1 = force a
+    // K-shard cluster.  Either way the answer is bit-identical.
+    let select = match shards {
+        0 => EngineSelect::default(),
+        1 => EngineSelect::Native,
+        k => EngineSelect::Sharded { shards: k },
+    };
     let params = PortfolioParams {
         replicas,
         max_periods: periods,
@@ -284,7 +296,7 @@ fn cmd_solve(args: &mut Args) -> Result<()> {
         "maxcut" => {
             let g = Graph::random(nodes, prob, &mut rng);
             let problem = reductions::max_cut(&g);
-            let out = solve_native(&problem, &params)?;
+            let out = solve_with(&problem, &params, select)?;
             let cut = g.cut_value(&out.best_spins);
             let sweeps = replicas * periods;
             let base = sa::anneal(&problem, sweeps, seed + 1);
@@ -292,20 +304,22 @@ fn cmd_solve(args: &mut Args) -> Result<()> {
             println!("graph: {} nodes, {} edges", g.n, g.edges.len());
             println!(
                 "ONN portfolio cut = {cut:>6}   ({replicas} replicas x {periods} periods, \
-                 {} settled, {} schedule)",
+                 {} settled, {} schedule, {} engine, {} sync rounds)",
                 out.settled_replicas,
-                schedule.name()
+                schedule.name(),
+                out.engine,
+                out.sync_rounds
             );
             println!("SA baseline   cut = {sa_cut:>6}   ({sweeps} sweeps, equal spin updates)");
             println!("ratio ONN/SA = {:.3}", cut as f64 / sa_cut.max(1) as f64);
         }
         "coloring" => {
-            use onn_scale::apps::coloring::{conflicts, solve_greedy, solve_onn};
+            use onn_scale::apps::coloring::{conflicts, solve_greedy, solve_onn_with};
             if !(2..=16).contains(&colors) {
                 return Err(anyhow!("--colors must be in 2..=16 (16-step phase wheel)"));
             }
             let g = Graph::random(nodes, prob, &mut rng);
-            let onn = solve_onn(&g, colors, replicas, periods, seed + 1);
+            let onn = solve_onn_with(&g, colors, replicas, periods, seed + 1, select);
             let greedy = solve_greedy(&g, colors);
             println!(
                 "graph: {} nodes, {} edges, k = {colors}",
@@ -319,16 +333,19 @@ fn cmd_solve(args: &mut Args) -> Result<()> {
         "partition" => {
             let weights: Vec<i64> = (0..nodes).map(|_| rng.range_i64(1, 100)).collect();
             let problem = reductions::number_partition(&weights);
-            let out = solve_native(&problem, &params)?;
+            let out = solve_with(&problem, &params, select)?;
             let imbalance = reductions::partition_imbalance(&weights, &out.best_spins);
             let total: i64 = weights.iter().sum();
             println!("partitioning {nodes} numbers summing to {total}");
-            println!("ONN portfolio imbalance = {imbalance}");
+            println!(
+                "ONN portfolio imbalance = {imbalance}   ({} engine, {} sync rounds)",
+                out.engine, out.sync_rounds
+            );
         }
         "cover" => {
             let g = Graph::random(nodes, prob, &mut rng);
             let problem = reductions::min_vertex_cover(&g, 2.0);
-            let out = solve_native(&problem, &params)?;
+            let out = solve_with(&problem, &params, select)?;
             let cover = reductions::decode_cover(&g, &out.best_spins);
             let greedy = reductions::decode_cover(&g, &vec![-1i8; g.n]);
             println!("graph: {} nodes, {} edges", g.n, g.edges.len());
@@ -360,6 +377,7 @@ fn cmd_solve_bench(args: &mut Args) -> Result<()> {
     let replicas = args.get_usize("replicas", 32)?;
     let periods = args.get_usize("periods", 128)?;
     let instances = args.get_usize("instances", 5)?;
+    let shards = args.get_usize("shards", 0)?;
     let out_path = args.get_str("out", "BENCH_solver.json");
     let seed = args.get_u64("seed", 2025)?;
     args.finish().map_err(|e| anyhow!(e))?;
@@ -372,13 +390,20 @@ fn cmd_solve_bench(args: &mut Args) -> Result<()> {
     let report = solverbench::quality_vs_sa(64, 0.1, instances, replicas, periods, seed);
     println!("{}", report.table());
 
-    let points =
-        solverbench::record_throughput(std::path::Path::new(&out_path), &sizes, replicas, periods, seed)?;
-    println!("solver throughput (native engine):");
+    let points = solverbench::record_throughput(
+        std::path::Path::new(&out_path),
+        &sizes,
+        replicas,
+        periods,
+        seed,
+        shards,
+    )?;
+    println!("solver throughput (native vs sharded replica-periods/sec):");
     for p in &points {
         println!(
-            "  n={:<5} {:>12.0} replica-periods/s   (median {:.3} s per solve)",
-            p.n, p.replica_periods_per_sec, p.median_s
+            "  n={:<5} {:>9} {:>12.0} replica-periods/s   (median {:.3} s per \
+             solve, {} sync rounds)",
+            p.n, p.engine, p.replica_periods_per_sec, p.median_s, p.sync_rounds
         );
     }
     Ok(())

@@ -32,17 +32,29 @@ use crate::util::rng::Rng;
 /// amplitude 1 nearly re-randomizes the state each period.  This models
 /// the injected phase noise a physical oscillator array would use to
 /// escape local minima, and is the hook the annealing schedules drive.
+///
+/// The kick stream is *counter-indexed*, not sequential: the draw for
+/// oscillator `i` at period `tick` is a pure function of
+/// `(seed, tick, i)` and never depends on any other oscillator's draws.
+/// That makes the stream decomposable under row partitioning — a
+/// sharded engine (`runtime::sharded`) reproduces the single-engine
+/// kicks exactly by indexing with its global row numbers, which is what
+/// keeps the multi-device solve bit-exact with the native one.
 #[derive(Debug, Clone)]
 pub struct PhaseNoise {
     amplitude: f64,
-    rng: Rng,
+    seed: u64,
+    /// Periods elapsed since this stream was installed (the `tick` half
+    /// of the kick-stream index).
+    tick: u64,
 }
 
 impl PhaseNoise {
     pub fn new(amplitude: f64, seed: u64) -> Self {
         Self {
             amplitude: amplitude.clamp(0.0, 1.0),
-            rng: Rng::new(seed),
+            seed,
+            tick: 0,
         }
     }
 
@@ -50,15 +62,34 @@ impl PhaseNoise {
         self.amplitude
     }
 
-    /// Maybe kick one phase; identity when the amplitude is zero.
-    fn kick(&mut self, phi: i32, p: i32) -> i32 {
-        if self.amplitude <= 0.0 || self.rng.f64() >= self.amplitude {
+    /// The pure kick function: maybe kick `phi` of oscillator `osc` at
+    /// period `tick`.  Identity when the amplitude is zero.  Exposed so
+    /// row-sharded engines can replay the exact per-oscillator stream
+    /// from `(seed, tick, global row index)`.
+    pub fn kick_at(seed: u64, tick: u64, osc: usize, amplitude: f64, phi: i32, p: i32) -> i32 {
+        if amplitude <= 0.0 {
             return phi;
         }
-        let max_kick = ((self.amplitude * (p / 2) as f64).ceil() as i64).max(1);
-        let mag = self.rng.range_i64(1, max_kick + 1) as i32;
-        let kick = if self.rng.bool() { mag } else { -mag };
+        // Two fork steps mix (tick, osc) into an independent stream per
+        // kick-site; each draws at most three values.
+        let mut rng = Rng::new(seed).fork(tick).fork(osc as u64);
+        if rng.f64() >= amplitude {
+            return phi;
+        }
+        let max_kick = ((amplitude * (p / 2) as f64).ceil() as i64).max(1);
+        let mag = rng.range_i64(1, max_kick + 1) as i32;
+        let kick = if rng.bool() { mag } else { -mag };
         wrap(phi + kick, p)
+    }
+
+    /// Maybe kick oscillator `osc` at the current period.
+    fn kick(&self, osc: usize, phi: i32, p: i32) -> i32 {
+        Self::kick_at(self.seed, self.tick, osc, self.amplitude, phi, p)
+    }
+
+    /// Advance to the next period's slice of the kick stream.
+    fn end_period(&mut self) {
+        self.tick += 1;
     }
 }
 
@@ -220,9 +251,10 @@ impl FunctionalEngine {
 
         // --- 5. optional annealing kicks (identity when noise is off)
         if let Some(noise) = self.noise.as_mut() {
-            for phi in phases.iter_mut() {
-                *phi = noise.kick(*phi, p);
+            for (i, phi) in phases.iter_mut().enumerate() {
+                *phi = noise.kick(i, *phi, p);
             }
+            noise.end_period();
         }
     }
 

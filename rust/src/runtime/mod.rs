@@ -15,6 +15,33 @@ pub mod sharded;
 
 use anyhow::{anyhow, Result};
 
+use crate::onn::config::NetworkConfig;
+use crate::onn::weights::WeightMatrix;
+
+/// Validate an f32 weight payload (length n^2, integer-valued entries
+/// inside the config's signed range) and build the quantized matrix.
+/// The native and sharded engines both install weights through this one
+/// gate, so the two fabrics accept exactly the same matrices — part of
+/// their bit-exactness contract.
+pub(crate) fn checked_weights(cfg: &NetworkConfig, w_f32: &[f32]) -> Result<WeightMatrix> {
+    let n = cfg.n;
+    if w_f32.len() != n * n {
+        return Err(anyhow!("weights len {} != {}", w_f32.len(), n * n));
+    }
+    let (lo, hi) = cfg.weight_range();
+    let mut w = WeightMatrix::zeros(n);
+    for i in 0..n {
+        for j in 0..n {
+            let v = w_f32[i * n + j];
+            if v.fract() != 0.0 || v < lo as f32 || v > hi as f32 {
+                return Err(anyhow!("weight [{i}][{j}] = {v} outside {lo}..={hi}"));
+            }
+            w.set(i, j, v as i8);
+        }
+    }
+    Ok(w)
+}
+
 /// A batched chunk executor: the contract of one AOT artifact call.
 ///
 /// `phases` is `[batch * n]` row-major, `settled[b]` is the absolute
@@ -47,6 +74,14 @@ pub trait ChunkEngine {
     /// dynamics are baked into an artifact (PJRT) do not support this.
     fn set_noise(&mut self, _amplitude: f64, _seed: u64) -> Result<()> {
         Err(anyhow!("{} engine has no phase-noise hook", self.kind()))
+    }
+
+    /// Cross-device synchronization rounds this engine has performed —
+    /// the all-gather cost a multi-device fabric pays, one round per
+    /// period per batch trial it has driven.  Single-device engines
+    /// report 0.
+    fn sync_rounds(&self) -> u64 {
+        0
     }
 }
 

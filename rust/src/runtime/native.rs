@@ -7,7 +7,6 @@ use anyhow::{anyhow, Result};
 
 use crate::onn::config::NetworkConfig;
 use crate::onn::dynamics::{FunctionalEngine, PhaseNoise};
-use crate::onn::weights::WeightMatrix;
 use crate::runtime::ChunkEngine;
 
 pub struct NativeEngine {
@@ -55,21 +54,7 @@ impl ChunkEngine for NativeEngine {
     }
 
     fn set_weights(&mut self, w_f32: &[f32]) -> Result<()> {
-        let n = self.cfg.n;
-        if w_f32.len() != n * n {
-            return Err(anyhow!("weights len {} != {}", w_f32.len(), n * n));
-        }
-        let mut w = WeightMatrix::zeros(n);
-        let (lo, hi) = self.cfg.weight_range();
-        for i in 0..n {
-            for j in 0..n {
-                let v = w_f32[i * n + j];
-                if v.fract() != 0.0 || v < lo as f32 || v > hi as f32 {
-                    return Err(anyhow!("weight [{i}][{j}] = {v} outside {lo}..={hi}"));
-                }
-                w.set(i, j, v as i8);
-            }
-        }
+        let w = crate::runtime::checked_weights(&self.cfg, w_f32)?;
         self.inner = Some(FunctionalEngine::new(self.cfg, w));
         self.apply_noise();
         Ok(())

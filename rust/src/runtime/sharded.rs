@@ -5,12 +5,18 @@
 //! that topology: a leader broadcasts the phase state each oscillation
 //! period, K shard workers each own a *row slice* of the weight matrix
 //! and compute the reference/snap for their oscillators, and the leader
-//! gathers the updated slices (an all-gather per period — exactly the
-//! synchronization cost a multi-FPGA build would pay).
+//! gathers the updated slices (an all-gather per period of every batch
+//! trial — exactly the synchronization cost a multi-FPGA build would
+//! pay per network update).
 //!
 //! The sharded engine is bit-exact with the single-engine dynamics:
 //! row-partitioning the weighted sum does not change any oscillator's
-//! reference waveform.
+//! reference waveform.  The same holds *with annealing noise on*: the
+//! phase-kick stream (`onn::dynamics::PhaseNoise`) is counter-indexed by
+//! `(seed, period tick, global oscillator index)`, so each shard replays
+//! exactly the kicks the single engine would apply to its rows — the
+//! leader broadcasts the tick, the shard derives its slice of the stream
+//! from the seed plus its row offset.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
@@ -18,6 +24,7 @@ use std::thread::JoinHandle;
 use anyhow::{anyhow, Result};
 
 use crate::onn::config::NetworkConfig;
+use crate::onn::dynamics::PhaseNoise;
 use crate::onn::phase::{amplitude, wrap};
 use crate::onn::weights::WeightMatrix;
 use crate::runtime::ChunkEngine;
@@ -31,15 +38,20 @@ struct ShardSpec {
 }
 
 enum ShardMsg {
-    /// Full phase vector for this period; shard replies with its slice.
-    Step(Vec<i32>),
+    /// Full phase vector + the leader's period tick for this period;
+    /// the shard replies with its updated row slice.
+    Step(Vec<i32>, u64),
+    /// Reprogram this shard's row slice of the weight matrix.
+    SetWeights(Vec<i8>),
+    /// Install `(amplitude, seed)` phase noise; amplitude <= 0 clears it.
+    SetNoise(f64, u64),
     Stop,
 }
 
 struct ShardHandle {
     tx: Sender<ShardMsg>,
     rx: Receiver<Vec<i32>>,
-    join: JoinHandle<()>,
+    join: Option<JoinHandle<()>>,
     row0: usize,
     rows: usize,
 }
@@ -50,8 +62,15 @@ pub struct ShardedEngine {
     batch: usize,
     chunk: usize,
     shards: Vec<ShardHandle>,
-    /// All-gather rounds performed (the multi-device sync cost metric).
+    /// All-gather rounds performed — one per period *per batch trial*,
+    /// since the leader walks the batch sequentially (the multi-device
+    /// sync cost metric).
     pub sync_rounds: u64,
+    /// Active noise setting; `Some` only for amplitude > 0.
+    noise: Option<(f64, u64)>,
+    /// Period index into the kick stream since the last `set_noise` /
+    /// `set_weights` (mirrors `PhaseNoise`'s tick on the single engine).
+    tick: u64,
 }
 
 impl ShardedEngine {
@@ -93,7 +112,7 @@ impl ShardedEngine {
             shards.push(ShardHandle {
                 tx,
                 rx,
-                join,
+                join: Some(join),
                 row0,
                 rows,
             });
@@ -105,7 +124,22 @@ impl ShardedEngine {
             chunk,
             shards,
             sync_rounds: 0,
+            noise: None,
+            tick: 0,
         })
+    }
+
+    /// Build a cluster with all-zero couplings; callers program it later
+    /// through [`ChunkEngine::set_weights`] (the solver path, where the
+    /// problem arrives after the engine exists).
+    pub fn unprogrammed(
+        cfg: NetworkConfig,
+        num_shards: usize,
+        batch: usize,
+        chunk: usize,
+    ) -> Result<Self> {
+        let w = WeightMatrix::zeros(cfg.n);
+        Self::new(cfg, &w, num_shards, batch, chunk)
     }
 
     /// One synchronous period across all shards (broadcast + gather).
@@ -113,7 +147,7 @@ impl ShardedEngine {
         // Broadcast the full state to every shard...
         for sh in &self.shards {
             sh.tx
-                .send(ShardMsg::Step(phases.to_vec()))
+                .send(ShardMsg::Step(phases.to_vec(), self.tick))
                 .map_err(|_| anyhow!("shard died"))?;
         }
         // ...and gather the updated row slices.
@@ -123,20 +157,40 @@ impl ShardedEngine {
             phases[sh.row0..sh.row0 + sh.rows].copy_from_slice(&slice);
         }
         self.sync_rounds += 1;
+        if self.noise.is_some() {
+            // Mirror PhaseNoise: the tick advances one slice per noisy
+            // period, so the shards' kick streams track the single
+            // engine's exactly.
+            self.tick += 1;
+        }
         Ok(())
     }
 
-    pub fn shutdown(self) {
-        for sh in &self.shards {
-            let _ = sh.tx.send(ShardMsg::Stop);
-        }
-        for sh in self.shards {
-            let _ = sh.join.join();
-        }
-    }
+    /// Stop the shard workers and wait for them.  Dropping the engine
+    /// does the same (see the `Drop` impl); this explicit form keeps
+    /// call sites readable.
+    pub fn shutdown(self) {}
 
     pub fn num_shards(&self) -> usize {
         self.shards.len()
+    }
+}
+
+/// Shard threads must not outlive the leader — a solve that errors
+/// mid-anneal unwinds through here instead of leaking K workers per
+/// failed request.
+impl Drop for ShardedEngine {
+    fn drop(&mut self) {
+        for sh in &self.shards {
+            // The shard may already be gone (its channel closed); that
+            // is fine on this path.
+            let _ = sh.tx.send(ShardMsg::Stop);
+        }
+        for sh in &mut self.shards {
+            if let Some(join) = sh.join.take() {
+                let _ = join.join();
+            }
+        }
     }
 }
 
@@ -144,7 +198,7 @@ impl ShardedEngine {
 /// from the broadcast state (the per-device compute of a multi-FPGA
 /// ONN, here the functional period semantics).
 fn shard_loop(
-    spec: ShardSpec,
+    mut spec: ShardSpec,
     n: usize,
     p: usize,
     rx: Receiver<ShardMsg>,
@@ -158,7 +212,23 @@ fn shard_loop(
             templates[k * p + t] = amplitude(k as i32, t as i64, pi) as i8;
         }
     }
-    while let Ok(ShardMsg::Step(phases)) = rx.recv() {
+    // This shard's slice of the annealing kick stream; `Some` only for
+    // amplitude > 0.
+    let mut noise: Option<(f64, u64)> = None;
+    loop {
+        let (phases, tick) = match rx.recv() {
+            Ok(ShardMsg::Step(phases, tick)) => (phases, tick),
+            Ok(ShardMsg::SetWeights(w)) => {
+                debug_assert_eq!(w.len(), spec.rows * n);
+                spec.w = w;
+                continue;
+            }
+            Ok(ShardMsg::SetNoise(a, seed)) => {
+                noise = (a > 0.0).then_some((a, seed));
+                continue;
+            }
+            Ok(ShardMsg::Stop) | Err(_) => break,
+        };
         // amplitudes over the period for all oscillators
         let mut s = vec![0i8; n * p];
         for (j, &phi) in phases.iter().enumerate() {
@@ -200,6 +270,13 @@ fn shard_loop(
                     best_k = k;
                 }
             }
+            // The annealing kick for this oscillator is derived from
+            // (seed, broadcast tick, global row index) — the same pure
+            // function the single engine evaluates, so the sharded
+            // trajectory stays bit-exact under noise.
+            if let Some((a, seed)) = noise {
+                best_k = PhaseNoise::kick_at(seed, tick, gi, a, best_k, pi);
+            }
             out.push(best_k);
         }
         if reply.send(out).is_err() {
@@ -221,12 +298,25 @@ impl ChunkEngine for ShardedEngine {
         self.chunk
     }
 
-    fn set_weights(&mut self, _w: &[f32]) -> Result<()> {
-        // Weights are fixed at shard construction (they live on the
-        // remote devices); reprogramming means rebuilding the cluster.
-        Err(anyhow!(
-            "sharded engine weights are fixed at construction; rebuild the shards"
-        ))
+    fn set_weights(&mut self, w_f32: &[f32]) -> Result<()> {
+        // Reprogramming the cluster reloads every device's row slice —
+        // the shared validation gate guarantees both fabrics accept
+        // exactly the same matrices (part of the bit-exact contract).
+        let n = self.cfg.n;
+        let w = crate::runtime::checked_weights(&self.cfg, w_f32)?;
+        for sh in &self.shards {
+            let mut slice = Vec::with_capacity(sh.rows * n);
+            for r in sh.row0..sh.row0 + sh.rows {
+                slice.extend_from_slice(w.row(r));
+            }
+            sh.tx
+                .send(ShardMsg::SetWeights(slice))
+                .map_err(|_| anyhow!("shard died"))?;
+        }
+        // The native engine rebuilds its PhaseNoise on reload, which
+        // restarts the kick stream; mirror that here.
+        self.tick = 0;
+        Ok(())
     }
 
     fn run_chunk(&mut self, phases: &mut [i32], settled: &mut [i32], period0: i32) -> Result<()> {
@@ -251,6 +341,30 @@ impl ChunkEngine for ShardedEngine {
 
     fn kind(&self) -> &'static str {
         "sharded"
+    }
+
+    fn supports_noise(&self) -> bool {
+        true
+    }
+
+    fn set_noise(&mut self, amplitude: f64, seed: u64) -> Result<()> {
+        if !(0.0..=1.0).contains(&amplitude) {
+            return Err(anyhow!("noise amplitude {amplitude} outside [0, 1]"));
+        }
+        self.noise = (amplitude > 0.0).then_some((amplitude, seed));
+        // A fresh setting restarts the kick stream, exactly like
+        // installing a fresh PhaseNoise on the single engine.
+        self.tick = 0;
+        for sh in &self.shards {
+            sh.tx
+                .send(ShardMsg::SetNoise(amplitude, seed))
+                .map_err(|_| anyhow!("shard died"))?;
+        }
+        Ok(())
+    }
+
+    fn sync_rounds(&self) -> u64 {
+        self.sync_rounds
     }
 }
 
@@ -327,11 +441,74 @@ mod tests {
     }
 
     #[test]
-    fn set_weights_refused() {
-        let cfg = NetworkConfig::paper(4);
-        let w = WeightMatrix::zeros(4);
-        let mut eng = ShardedEngine::new(cfg, &w, 2, 1, 1).unwrap();
-        assert!(eng.set_weights(&[0.0; 16]).is_err());
-        eng.shutdown();
+    fn set_weights_reprograms_all_shards() {
+        let mut rng = Rng::new(90);
+        let n = 11;
+        let cfg = NetworkConfig::paper(n);
+        let (w, ph0) = rand_net(&mut rng, n);
+        // Build the cluster blank, then program it over the wire-style
+        // reload path; it must match a single engine built directly.
+        let mut sharded = ShardedEngine::unprogrammed(cfg, 3, 1, 5).unwrap();
+        sharded.set_weights(&w.to_f32()).unwrap();
+        let mut single = FunctionalEngine::new(cfg, w);
+        let (mut a, mut b) = (ph0.clone(), ph0);
+        let (mut sa, mut sb) = (vec![-1i32; 1], vec![-1i32; 1]);
+        single.run_chunk(&mut a, &mut sa, 0, 5);
+        sharded.run_chunk(&mut b, &mut sb, 0).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(sa, sb);
+        // Bad reloads are rejected with the same rules as the native
+        // engine: wrong length, fractional, or out-of-range entries.
+        assert!(sharded.set_weights(&[0.0; 4]).is_err());
+        let mut bad = vec![0.0f32; n * n];
+        bad[1] = 0.5;
+        assert!(sharded.set_weights(&bad).is_err());
+        bad[1] = 99.0;
+        assert!(sharded.set_weights(&bad).is_err());
+        sharded.shutdown();
+    }
+
+    #[test]
+    fn noisy_dynamics_bit_exact_with_native_engine() {
+        use crate::runtime::native::NativeEngine;
+        let mut rng = Rng::new(91);
+        let n = 13;
+        let cfg = NetworkConfig::paper(n);
+        let (w, _) = rand_net(&mut rng, n);
+        let w_f32 = w.to_f32();
+        let b = 2usize;
+        for shards in [2usize, 4, 5] {
+            let mut native = NativeEngine::new(cfg, b, 4);
+            let mut sharded = ShardedEngine::unprogrammed(cfg, shards, b, 4).unwrap();
+            native.set_weights(&w_f32).unwrap();
+            sharded.set_weights(&w_f32).unwrap();
+            native.set_noise(0.7, 42).unwrap();
+            sharded.set_noise(0.7, 42).unwrap();
+            let init: Vec<i32> = (0..b * n).map(|_| rng.range_i64(0, 16) as i32).collect();
+            let (mut pa, mut pb) = (init.clone(), init);
+            let (mut sa, mut sb) = (vec![-1i32; b], vec![-1i32; b]);
+            for chunk in 0..3 {
+                native.run_chunk(&mut pa, &mut sa, chunk * 4).unwrap();
+                sharded.run_chunk(&mut pb, &mut sb, chunk * 4).unwrap();
+                assert_eq!(pa, pb, "shards={shards} chunk={chunk}");
+                assert_eq!(sa, sb, "shards={shards} chunk={chunk}");
+            }
+            sharded.shutdown();
+        }
+    }
+
+    #[test]
+    fn drop_joins_shard_threads_without_explicit_shutdown() {
+        // The error paths of a solve drop the engine without calling
+        // shutdown(); the Drop impl must stop + join the workers (a
+        // leak would hang nothing here, but the join proves the Stop
+        // reached every shard).
+        let cfg = NetworkConfig::paper(6);
+        let w = WeightMatrix::zeros(6);
+        let mut eng = ShardedEngine::new(cfg, &w, 3, 1, 2).unwrap();
+        let mut ph = vec![0i32; 6];
+        let mut st = vec![-1i32; 1];
+        eng.run_chunk(&mut ph, &mut st, 0).unwrap();
+        drop(eng);
     }
 }

@@ -16,7 +16,10 @@
 //!   constant), all monotone non-increasing and ending noise-free.
 //! * [`portfolio`] — the batched replica-portfolio driver over any
 //!   [`crate::runtime::ChunkEngine`], with best-replica tracking,
-//!   plateau early exit and greedy readout polish.
+//!   plateau early exit and greedy readout polish; plus the
+//!   engine-selection layer ([`portfolio::EngineSelect`]) that places a
+//!   solve on the single native engine or the row-sharded cluster
+//!   (bit-exact either way, noise included).
 //! * [`sa`] — the simulated-annealing baseline and the greedy-descent
 //!   polish shared with the portfolio.
 //!
@@ -33,5 +36,8 @@ pub mod sa;
 
 pub use anneal::Schedule;
 pub use graph::Graph;
-pub use portfolio::{solve_native, solve_portfolio, PortfolioParams, SolveOutcome};
+pub use portfolio::{
+    build_engine, solve_native, solve_portfolio, solve_with, EngineSelect, PortfolioParams,
+    SolveOutcome,
+};
 pub use problem::{IsingProblem, Qubo};

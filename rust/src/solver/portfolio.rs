@@ -15,11 +15,86 @@ use anyhow::{anyhow, Result};
 use crate::onn::config::NetworkConfig;
 use crate::onn::phase::spin_to_phase;
 use crate::runtime::native::NativeEngine;
+use crate::runtime::sharded::ShardedEngine;
 use crate::runtime::ChunkEngine;
 use crate::solver::anneal::Schedule;
 use crate::solver::problem::IsingProblem;
 use crate::solver::sa::greedy_descent;
 use crate::util::rng::Rng;
+
+/// Embedded sizes at or above this many oscillators default to the
+/// sharded fabric: a single device tops out near the paper's 506
+/// oscillators, so one engine per request stops scaling well before the
+/// wire's 4096-oscillator cap.
+pub const DEFAULT_SHARD_THRESHOLD: usize = 256;
+
+/// Default cap on shard workers per solve.
+pub const DEFAULT_MAX_SHARDS: usize = 8;
+
+/// Which engine fabric a solve runs on — the engine-selection layer the
+/// coordinator's solver pool and the CLI configure.  Selection never
+/// changes the answer: the sharded engine is bit-exact with the native
+/// one (noise included), so this is purely a capacity/locality choice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineSelect {
+    /// Single in-process engine.
+    Native,
+    /// Row-sharded leader + worker cluster with exactly this many
+    /// shards (a count of 1 collapses to the native engine).
+    Sharded { shards: usize },
+    /// Native below `threshold` oscillators; at or above it, one shard
+    /// per `threshold` rows (`ceil(m / threshold)`, at least 2), capped
+    /// at `max_shards`.  A `max_shards` below 2 disables sharding
+    /// entirely (every size runs native).
+    Auto { threshold: usize, max_shards: usize },
+}
+
+impl Default for EngineSelect {
+    fn default() -> Self {
+        EngineSelect::Auto {
+            threshold: DEFAULT_SHARD_THRESHOLD,
+            max_shards: DEFAULT_MAX_SHARDS,
+        }
+    }
+}
+
+impl EngineSelect {
+    /// Shard count this selection resolves to for an `m`-oscillator
+    /// embedding (1 = single native engine).  Never exceeds `m`: a
+    /// shard needs at least one row.
+    pub fn shards_for(&self, m: usize) -> usize {
+        let k = match *self {
+            EngineSelect::Native => 1,
+            EngineSelect::Sharded { shards } => shards.max(1),
+            EngineSelect::Auto { threshold, max_shards } => {
+                let t = threshold.max(1);
+                if m < t || max_shards < 2 {
+                    1
+                } else {
+                    m.div_ceil(t).clamp(2, max_shards)
+                }
+            }
+        };
+        k.min(m.max(1))
+    }
+}
+
+/// Build the engine a selection resolves to for an `m`-oscillator
+/// problem (`batch` replicas per wave, `chunk` periods per engine call).
+pub fn build_engine(
+    m: usize,
+    batch: usize,
+    chunk: usize,
+    select: EngineSelect,
+) -> Result<Box<dyn ChunkEngine>> {
+    let cfg = NetworkConfig::paper(m);
+    let shards = select.shards_for(m);
+    if shards <= 1 {
+        Ok(Box::new(NativeEngine::new(cfg, batch, chunk)))
+    } else {
+        Ok(Box::new(ShardedEngine::unprogrammed(cfg, shards, batch, chunk)?))
+    }
+}
 
 /// Portfolio solve parameters.
 #[derive(Debug, Clone, Copy)]
@@ -80,6 +155,11 @@ pub struct SolveOutcome {
     pub early_exit: bool,
     /// False when the engine has no noise hook (schedule was skipped).
     pub noise_applied: bool,
+    /// Engine kind that ran the solve ("native" / "sharded" / "pjrt").
+    pub engine: &'static str,
+    /// All-gather synchronization rounds the engine performed — the
+    /// multi-device sync-cost metric (0 on single-device engines).
+    pub sync_rounds: u64,
 }
 
 /// Run the portfolio on an already-constructed engine.  The engine's
@@ -267,16 +347,30 @@ pub fn solve_portfolio(
         settled_replicas,
         early_exit,
         noise_applied,
+        engine: engine.kind(),
+        sync_rounds: engine.sync_rounds(),
     })
 }
 
-/// Convenience: build a [`NativeEngine`] sized for the problem and run
-/// the portfolio on it.
-pub fn solve_native(problem: &IsingProblem, params: &PortfolioParams) -> Result<SolveOutcome> {
+/// Build the selected engine for the problem and run the portfolio on
+/// it — the coordinator's solve path.  Batch and chunk geometry are
+/// identical across selections, so the outcome is bit-identical whether
+/// the fabric is one engine or a shard cluster.
+pub fn solve_with(
+    problem: &IsingProblem,
+    params: &PortfolioParams,
+    select: EngineSelect,
+) -> Result<SolveOutcome> {
     let m = problem.embed_dim();
     let batch = params.replicas.clamp(1, 64);
-    let mut engine = NativeEngine::new(NetworkConfig::paper(m), batch, 8);
-    solve_portfolio(&mut engine, problem, params)
+    let mut engine = build_engine(m, batch, 8, select)?;
+    solve_portfolio(engine.as_mut(), problem, params)
+}
+
+/// Convenience: run the portfolio on a single [`NativeEngine`] sized
+/// for the problem.
+pub fn solve_native(problem: &IsingProblem, params: &PortfolioParams) -> Result<SolveOutcome> {
+    solve_with(problem, params, EngineSelect::Native)
 }
 
 #[cfg(test)]
@@ -359,6 +453,73 @@ mod tests {
         let mut bad = p.clone();
         bad.sectors = 99;
         assert!(solve_native(&bad, &params(4, 16, 1)).is_err());
+    }
+
+    #[test]
+    fn plateau_exit_waits_for_the_noise_free_tail() {
+        // Zero couplings: every state has energy 0, so no chunk ever
+        // improves the best energy and a stall counter that ran during
+        // noisy chunks would fire after chunk 0 with plateau_chunks = 1.
+        // The regression contract: the plateau early exit must not fire
+        // while the schedule's amplitude is still above the noise-free
+        // tail threshold — only the deterministic tail, where settle
+        // flags and plateaus mean something, may stop the run.
+        use crate::solver::problem::IsingProblem;
+        let problem = IsingProblem::new(5);
+        let params = PortfolioParams {
+            replicas: 4,
+            max_periods: 64, // 8 chunks of 8
+            schedule: Schedule::Constant { level: 0.8 },
+            seed: 17,
+            plateau_chunks: 1,
+            polish: false,
+        };
+        let out = solve_native(&problem, &params).unwrap();
+        let chunks_total = 64usize.div_ceil(8);
+        let noisy = chunks_total - Schedule::noise_free_tail(chunks_total);
+        assert!(out.early_exit, "the tail exit itself must still fire");
+        assert!(
+            out.chunks > noisy,
+            "plateau exit fired during the noisy prefix: {} chunks run, {noisy} noisy",
+            out.chunks
+        );
+        assert_eq!(out.best_energy, 0.0);
+    }
+
+    #[test]
+    fn engine_selection_resolves_by_threshold() {
+        let auto = EngineSelect::Auto { threshold: 100, max_shards: 4 };
+        assert_eq!(auto.shards_for(99), 1);
+        assert_eq!(auto.shards_for(100), 2);
+        assert_eq!(auto.shards_for(250), 3);
+        assert_eq!(auto.shards_for(4000), 4, "cap applies");
+        let off = EngineSelect::Auto { threshold: 100, max_shards: 1 };
+        assert_eq!(off.shards_for(4000), 1, "max_shards < 2 disables sharding");
+        assert_eq!(EngineSelect::Native.shards_for(4000), 1);
+        assert_eq!(EngineSelect::Sharded { shards: 5 }.shards_for(64), 5);
+        assert_eq!(
+            EngineSelect::Sharded { shards: 9 }.shards_for(3),
+            3,
+            "never more shards than rows"
+        );
+    }
+
+    #[test]
+    fn sharded_selection_solves_bit_identically_to_native() {
+        let mut rng = Rng::new(74);
+        let g = Graph::random(14, 0.3, &mut rng);
+        let p = max_cut(&g);
+        let prm = params(6, 48, 19);
+        let native = solve_native(&p, &prm).unwrap();
+        assert_eq!(native.engine, "native");
+        assert_eq!(native.sync_rounds, 0);
+        let sharded = solve_with(&p, &prm, EngineSelect::Sharded { shards: 3 }).unwrap();
+        assert_eq!(sharded.engine, "sharded");
+        assert!(sharded.sync_rounds > 0);
+        assert_eq!(sharded.best_energy, native.best_energy);
+        assert_eq!(sharded.best_spins, native.best_spins);
+        assert_eq!(sharded.best_phases, native.best_phases);
+        assert_eq!(sharded.periods, native.periods);
     }
 
     #[test]

@@ -7,7 +7,9 @@ use std::sync::Arc;
 
 use onn_scale::coordinator::batcher::BatchPolicy;
 use onn_scale::coordinator::job::SolveRequest;
-use onn_scale::coordinator::server::{handle_line, serve_tcp, Coordinator, EngineKind, PoolSpec};
+use onn_scale::coordinator::server::{
+    handle_line, serve_tcp, Coordinator, EngineKind, PoolSpec, SolverPoolConfig,
+};
 use onn_scale::harness::datasets::benchmark_by_name;
 use onn_scale::harness::solverbench;
 use onn_scale::solver::anneal::Schedule;
@@ -201,6 +203,112 @@ fn solve_request_end_to_end_over_tcp() {
     r.read_line(&mut resp2).unwrap();
     assert!(resp2.contains("error"), "{resp2}");
 
+    coord.shutdown().unwrap();
+}
+
+/// JSON-lines solve request for a random graph with J = -1 couplings.
+fn solve_line_json(id: u64, g: &Graph, replicas: usize, max_periods: usize, seed: u64) -> String {
+    let edges = Json::Arr(
+        g.edges
+            .iter()
+            .map(|&(i, j, w)| Json::arr_i32(&[i as i32, j as i32, -w]))
+            .collect(),
+    );
+    Json::obj(vec![
+        ("type", Json::str("solve")),
+        ("id", Json::num(id as f64)),
+        ("n", Json::num(g.n as f64)),
+        ("edges", edges),
+        ("replicas", Json::num(replicas as f64)),
+        ("max_periods", Json::num(max_periods as f64)),
+        ("seed", Json::num(seed as f64)),
+    ])
+    .to_string()
+}
+
+#[test]
+fn sharded_solve_over_tcp_matches_the_native_path() {
+    use std::io::{BufRead, BufReader, Write};
+    // A solver pool whose threshold forces sharding for n >= 12; the
+    // same request served by a default pool (threshold 256) runs
+    // native.  Same seed => identical trajectories => identical wire
+    // answers, the distributed-faithfulness contract end to end.
+    let sharded_coord = Coordinator::start_with_solver(
+        vec![],
+        BatchPolicy::default(),
+        SolverPoolConfig { workers: 1, shard_threshold: 12, max_shards: 3 },
+    )
+    .unwrap();
+    let native_coord = Coordinator::start(vec![], BatchPolicy::default()).unwrap();
+
+    let g = Graph::random(18, 0.3, &mut Rng::new(55));
+    let line = solve_line_json(31, &g, 6, 64, 12);
+
+    // Sharded pool over real TCP.
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let router = Arc::clone(&sharded_coord.router);
+    std::thread::spawn(move || {
+        let _ = serve_tcp(router, listener);
+    });
+    let stream = std::net::TcpStream::connect(addr).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+    w.write_all(line.as_bytes()).unwrap();
+    w.write_all(b"\n").unwrap();
+    let mut resp = String::new();
+    r.read_line(&mut resp).unwrap();
+    let sharded = Json::parse(resp.trim()).unwrap();
+    assert!(sharded.get("error").is_none(), "{resp}");
+    assert_eq!(sharded.get("engine").and_then(Json::as_str), Some("sharded"));
+    let sync_rounds = sharded.get("sync_rounds").and_then(Json::as_usize).unwrap();
+    assert!(sync_rounds > 0, "sharded solve must report its sync cost");
+
+    // Native pool through the same line handler.
+    let native = Json::parse(&handle_line(&native_coord.router, &line)).unwrap();
+    assert!(native.get("error").is_none());
+    assert_eq!(native.get("engine").and_then(Json::as_str), Some("native"));
+    assert_eq!(native.get("sync_rounds").and_then(Json::as_usize), Some(0));
+
+    // Equal seed => equal answer, field for field.
+    assert_eq!(
+        sharded.get("energy").and_then(Json::as_f64),
+        native.get("energy").and_then(Json::as_f64)
+    );
+    assert_eq!(sharded.get("spins"), native.get("spins"));
+    assert_eq!(sharded.get("phases"), native.get("phases"));
+    assert_eq!(sharded.get("periods"), native.get("periods"));
+
+    // The solve metrics expose the distributed sync cost.
+    let snap = sharded_coord.snapshot();
+    assert_eq!(snap.solves_completed, 1);
+    assert_eq!(snap.solves_sharded, 1);
+    assert_eq!(snap.solve_sync_rounds, sync_rounds as u64);
+    let snap = native_coord.snapshot();
+    assert_eq!(snap.solves_sharded, 0);
+    assert_eq!(snap.solve_sync_rounds, 0);
+
+    sharded_coord.shutdown().unwrap();
+    native_coord.shutdown().unwrap();
+}
+
+#[test]
+fn wire_shards_override_forces_the_sharded_engine() {
+    // Below the default threshold, but the request line pins shards=2:
+    // the pool must honor the override and still return the native
+    // answer bit for bit.
+    let coord = Coordinator::start(vec![], BatchPolicy::default()).unwrap();
+    let g = Graph::random(10, 0.4, &mut Rng::new(77));
+    let base = solve_line_json(41, &g, 4, 32, 9);
+    let native = Json::parse(&handle_line(&coord.router, &base)).unwrap();
+    assert_eq!(native.get("engine").and_then(Json::as_str), Some("native"));
+    let with_override = format!("{}{}", &base[..base.len() - 1], ",\"shards\":2}");
+    let sharded = Json::parse(&handle_line(&coord.router, &with_override)).unwrap();
+    assert!(sharded.get("error").is_none(), "{sharded}");
+    assert_eq!(sharded.get("engine").and_then(Json::as_str), Some("sharded"));
+    assert!(sharded.get("sync_rounds").and_then(Json::as_usize).unwrap() > 0);
+    assert_eq!(sharded.get("energy"), native.get("energy"));
+    assert_eq!(sharded.get("spins"), native.get("spins"));
     coord.shutdown().unwrap();
 }
 

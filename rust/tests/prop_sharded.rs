@@ -1,0 +1,168 @@
+//! Property tests for the sharded solve fabric: a leader + K row-shard
+//! workers must be bit-exact with the single `NativeEngine` — with the
+//! annealing phase noise enabled — at every period, for random sizes,
+//! weights, seeds, and shard counts (K = 1..5, including splits that do
+//! not divide the row count).  This is the faithfulness question the
+//! multi-device discussion of the paper raises: distributing the rows
+//! (and the kick stream) must not change the dynamics at all.
+
+use onn_scale::onn::config::NetworkConfig;
+use onn_scale::runtime::native::NativeEngine;
+use onn_scale::runtime::sharded::ShardedEngine;
+use onn_scale::runtime::ChunkEngine;
+use onn_scale::solver::portfolio::{solve_native, solve_with, EngineSelect, PortfolioParams};
+use onn_scale::solver::reductions::max_cut;
+use onn_scale::solver::Graph;
+use onn_scale::util::rng::Rng;
+
+fn rand_weights_f32(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n * n).map(|_| rng.range_i64(-16, 16) as f32).collect()
+}
+
+#[test]
+fn prop_sharded_noisy_dynamics_bit_exact_at_every_period() {
+    let mut rng = Rng::new(9001);
+    for case in 0..25 {
+        let n = 2 + rng.usize_below(22); // 2..=23: plenty of non-dividing splits
+        for k in 1..=5usize {
+            let shards = k.min(n);
+            let cfg = NetworkConfig::paper(n);
+            let batch = 1 + rng.usize_below(3);
+            // chunk = 1 makes every run_chunk a single period, so the
+            // walk below compares the trajectories period by period.
+            let mut native = NativeEngine::new(cfg, batch, 1);
+            let mut sharded = ShardedEngine::unprogrammed(cfg, shards, batch, 1).unwrap();
+            let w = rand_weights_f32(&mut rng, n);
+            native.set_weights(&w).unwrap();
+            sharded.set_weights(&w).unwrap();
+            let amplitude = 0.2 + rng.f64() * 0.8;
+            let seed = rng.next_u64();
+            native.set_noise(amplitude, seed).unwrap();
+            sharded.set_noise(amplitude, seed).unwrap();
+            let init: Vec<i32> = (0..batch * n).map(|_| rng.range_i64(0, 16) as i32).collect();
+            let (mut pa, mut pb) = (init.clone(), init);
+            let (mut sa, mut sb) = (vec![-1i32; batch], vec![-1i32; batch]);
+            for period in 0..10 {
+                native.run_chunk(&mut pa, &mut sa, period).unwrap();
+                sharded.run_chunk(&mut pb, &mut sb, period).unwrap();
+                assert_eq!(
+                    pa, pb,
+                    "case {case} n={n} shards={shards} period {period}: phases diverged"
+                );
+                assert_eq!(
+                    sa, sb,
+                    "case {case} n={n} shards={shards} period {period}: settle flags diverged"
+                );
+            }
+            // One all-gather per period per trial: the sync-cost metric
+            // is exactly the period count.
+            assert_eq!(sharded.sync_rounds, (10 * batch) as u64, "case {case}");
+        }
+    }
+}
+
+#[test]
+fn prop_sharded_tracks_mid_run_noise_changes() {
+    // The portfolio re-seeds the noise before every chunk (annealing
+    // schedules decay the amplitude), so equivalence must survive
+    // set_noise calls interleaved with run_chunk — including turning
+    // the noise off (the deterministic relaxation tail).
+    let mut rng = Rng::new(9002);
+    for case in 0..12 {
+        let n = 3 + rng.usize_below(15);
+        let shards = (2 + rng.usize_below(4)).min(n);
+        let cfg = NetworkConfig::paper(n);
+        let mut native = NativeEngine::new(cfg, 2, 4);
+        let mut sharded = ShardedEngine::unprogrammed(cfg, shards, 2, 4).unwrap();
+        let w = rand_weights_f32(&mut rng, n);
+        native.set_weights(&w).unwrap();
+        sharded.set_weights(&w).unwrap();
+        let init: Vec<i32> = (0..2 * n).map(|_| rng.range_i64(0, 16) as i32).collect();
+        let (mut pa, mut pb) = (init.clone(), init);
+        let (mut sa, mut sb) = (vec![-1i32; 2], vec![-1i32; 2]);
+        let levels = [0.9, 0.5, 0.2, 0.0];
+        for (chunk, &level) in levels.iter().enumerate() {
+            let seed = rng.next_u64();
+            native.set_noise(level, seed).unwrap();
+            sharded.set_noise(level, seed).unwrap();
+            native.run_chunk(&mut pa, &mut sa, (chunk * 4) as i32).unwrap();
+            sharded.run_chunk(&mut pb, &mut sb, (chunk * 4) as i32).unwrap();
+            assert_eq!(pa, pb, "case {case} chunk {chunk} level {level}");
+            assert_eq!(sa, sb, "case {case} chunk {chunk} level {level}");
+        }
+    }
+}
+
+#[test]
+fn prop_sharded_portfolio_solve_matches_native_exactly() {
+    // End to end through the annealed replica portfolio: same seed,
+    // identical trajectories, identical final energies — for K = 2..5
+    // on sizes where K never divides, sometimes divides, the row count.
+    let mut rng = Rng::new(9003);
+    for case in 0..5u64 {
+        let n = 8 + rng.usize_below(10); // 8..=17
+        let g = Graph::random(n, 0.3, &mut rng);
+        let problem = max_cut(&g);
+        let params = PortfolioParams {
+            replicas: 6,
+            max_periods: 48,
+            seed: 4000 + case,
+            ..Default::default()
+        };
+        let native = solve_native(&problem, &params).unwrap();
+        assert_eq!(native.engine, "native");
+        assert!(native.noise_applied, "native engine must anneal");
+        for shards in [2usize, 3, 5] {
+            let out = solve_with(&problem, &params, EngineSelect::Sharded { shards }).unwrap();
+            assert_eq!(out.engine, "sharded", "case {case} shards={shards}");
+            assert!(out.noise_applied, "case {case} shards={shards}");
+            assert_eq!(
+                out.best_energy,
+                native.best_energy,
+                "case {case} shards={shards}: final energies differ"
+            );
+            assert_eq!(out.best_phases, native.best_phases, "case {case} shards={shards}");
+            assert_eq!(out.best_spins, native.best_spins, "case {case} shards={shards}");
+            assert_eq!(out.periods, native.periods, "case {case} shards={shards}");
+            assert_eq!(out.settled_replicas, native.settled_replicas);
+            assert!(out.sync_rounds > 0, "case {case} shards={shards}");
+        }
+    }
+}
+
+#[test]
+fn prop_auto_selection_is_transparent_to_results() {
+    // Auto must route by size without changing the answer: below the
+    // threshold it is the native engine; above, the sharded cluster
+    // with the same bit-exact trajectory.
+    let mut rng = Rng::new(9004);
+    let g = Graph::random(20, 0.25, &mut rng);
+    let problem = max_cut(&g);
+    let params = PortfolioParams {
+        replicas: 4,
+        max_periods: 32,
+        seed: 11,
+        ..Default::default()
+    };
+    let native = solve_native(&problem, &params).unwrap();
+    let below = solve_with(
+        &problem,
+        &params,
+        EngineSelect::Auto { threshold: 64, max_shards: 4 },
+    )
+    .unwrap();
+    assert_eq!(below.engine, "native");
+    let above = solve_with(
+        &problem,
+        &params,
+        EngineSelect::Auto { threshold: 8, max_shards: 3 },
+    )
+    .unwrap();
+    assert_eq!(above.engine, "sharded");
+    assert!(above.sync_rounds > 0);
+    for out in [&below, &above] {
+        assert_eq!(out.best_energy, native.best_energy);
+        assert_eq!(out.best_phases, native.best_phases);
+        assert_eq!(out.periods, native.periods);
+    }
+}

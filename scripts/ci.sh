@@ -15,9 +15,20 @@ echo "==> cargo build --release"
 cargo build --release
 
 echo "==> cargo test -q"
+# Includes the sharded solve suite: the prop_sharded bit-exactness
+# properties and the integration_solver TCP tests are registered
+# [[test]] targets, so the full run covers them.
 cargo test -q
 
 echo "==> cargo check --features pjrt (stub xla)"
 cargo check --features pjrt
+
+echo "==> solve-bench --shards gate (BENCH_solver.json must carry sharded rows)"
+./target/release/onn-scale solve-bench --sizes 12,16 --replicas 4 --periods 32 \
+  --instances 1 --shards 2 --out BENCH_solver.json
+grep -q '"engine":"native"' BENCH_solver.json \
+  || { echo "BENCH_solver.json is missing the native rows"; exit 1; }
+grep -q '"engine":"sharded"' BENCH_solver.json \
+  || { echo "BENCH_solver.json is missing the sharded rows"; exit 1; }
 
 echo "CI OK"
