@@ -7,6 +7,12 @@
 //! serving router uses to trade latency for occupancy.  Unused batch
 //! slots are padded with a copy of the first job's phases (the engine's
 //! batch shape is baked into the AOT artifact).
+//!
+//! Solve traffic batches the same way ([`collect_solve_batch`]): small
+//! compatible `SolveRequest`s coalesce into one lane-block engine whose
+//! batch lanes carry *different problems* (DESIGN_SOLVER.md §7), packed
+//! and driven by `solver::portfolio::solve_packed` — bit-exact with the
+//! one-engine-per-request path at equal seed.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::{Arc, Mutex};
@@ -14,10 +20,14 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::coordinator::job::{Job, RetrievalResult, SolveJob, SolveResult};
+use crate::coordinator::job::{Job, RetrievalResult, SolveJob, SolveRequest, SolveResult};
 use crate::coordinator::metrics::Metrics;
 use crate::runtime::EngineFactory;
-use crate::solver::portfolio::{solve_with, EngineSelect, PortfolioParams};
+use crate::solver::portfolio::{
+    solve_packed_native, solve_with, EngineSelect, PortfolioParams, DEFAULT_CHUNK,
+    MAX_WAVE_REPLICAS,
+};
+use crate::solver::problem::IsingProblem;
 
 /// Batch-window policy knobs.
 #[derive(Debug, Clone, Copy)]
@@ -161,74 +171,263 @@ pub fn worker_loop(
     Ok(())
 }
 
-/// The solver worker loop: pulls [`SolveJob`]s from the shared queue and
-/// runs each through the annealed replica portfolio on a fresh engine
-/// sized for the request (solve traffic spans arbitrary problem sizes,
-/// so engines are per-request rather than per-pool — the request itself
-/// is the batch: its replicas fill the engine's batch dimension).
-/// `select` is the pool's engine-selection rule: requests embedding
-/// above the configured oscillator threshold run on the row-sharded
-/// cluster instead of a single native engine; a request's explicit
-/// `shards` field overrides the rule.
-///
-/// Several workers may share one queue; each request runs on exactly one
-/// worker, so concurrency scales across requests.
-pub fn solve_worker_loop(
-    rx: Arc<Mutex<Receiver<SolveJob>>>,
-    metrics: Arc<Metrics>,
-    select: EngineSelect,
-) -> Result<()> {
-    loop {
-        let job = {
-            let guard = rx.lock().expect("solve queue lock poisoned");
-            guard.recv()
-        };
-        let Ok(job) = job else { break };
-        let dequeued = Instant::now();
-        let params = PortfolioParams {
-            replicas: job.req.replicas,
-            max_periods: job.req.max_periods,
-            schedule: job.req.schedule,
-            seed: job.req.seed,
-            ..Default::default()
-        };
-        let job_select = match job.req.shards {
-            Some(1) => EngineSelect::Native,
-            Some(k) => EngineSelect::Sharded { shards: k },
-            None => select,
-        };
-        match solve_with(&job.req.problem, &params, job_select) {
-            Ok(out) => {
-                let done = Instant::now();
-                let result = SolveResult {
-                    id: job.req.id,
-                    objective: out.best_energy + job.req.problem.metadata.offset,
-                    spins: out.best_spins,
-                    phases: out.best_phases,
-                    energy: out.best_energy,
-                    periods: out.periods,
-                    replicas: out.replicas,
-                    settled_replicas: out.settled_replicas,
-                    engine: out.engine,
-                    sync_rounds: out.sync_rounds,
-                    queue_latency: dequeued.duration_since(job.submitted),
-                    total_latency: done.duration_since(job.submitted),
-                };
+/// Packing policy of the solver pool: which solve requests may share
+/// one lane-block engine, and how long the first request in a window
+/// waits for company.
+#[derive(Debug, Clone, Copy)]
+pub struct SolvePackPolicy {
+    /// Largest oscillator-count bucket (power of two) that still packs;
+    /// bigger embeddings run one engine per request.  0 disables
+    /// packing entirely.
+    pub max_oscillators: usize,
+    /// Lane capacity of one packed engine (also the per-request replica
+    /// cap for packing; bounded by the portfolio's 64-replica wave).
+    pub max_lanes: usize,
+    /// Maximum time the first solve in a window waits for company.
+    pub max_wait: Duration,
+}
+
+impl Default for SolvePackPolicy {
+    fn default() -> Self {
+        Self {
+            max_oscillators: 64,
+            max_lanes: MAX_WAVE_REPLICAS,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Batching compatibility key of a packable solve request, or `None`
+/// when the request must run solo.  Two requests coalesce iff their
+/// keys are equal: same oscillator-count bucket (embedding rounded up
+/// to a power of two) and same chunk-count budget — per-lane weights,
+/// noise streams, and plateau exits take care of every other
+/// difference (seeds, schedules, replica counts).  Requests with an
+/// explicit `shards` override never pack (engine placement is theirs).
+pub fn solve_pack_key(req: &SolveRequest, policy: &SolvePackPolicy) -> Option<(usize, usize)> {
+    if policy.max_oscillators == 0 || policy.max_lanes == 0 {
+        return None;
+    }
+    if req.shards.is_some() {
+        return None;
+    }
+    if req.replicas == 0 || req.replicas > policy.max_lanes.min(MAX_WAVE_REPLICAS) {
+        return None;
+    }
+    let bucket = req.problem.embed_dim().next_power_of_two();
+    if bucket > policy.max_oscillators {
+        return None;
+    }
+    Some((bucket, req.max_periods.div_ceil(DEFAULT_CHUNK).max(1)))
+}
+
+/// Collect one solve batch: `pending` (a job carried over from the
+/// previous window) or the next received job opens the window; packable
+/// jobs with the same compatibility key join until the deadline, the
+/// lane budget (2x one engine — the overflow backfills retired lanes
+/// mid-run), or an incompatible job closes it.  The incompatible job is
+/// returned as the next window's seed, never dropped.  `None` means the
+/// queue disconnected with nothing left to serve.
+pub fn collect_solve_batch(
+    rx: &Receiver<SolveJob>,
+    pending: Option<SolveJob>,
+    policy: &SolvePackPolicy,
+) -> Option<(Vec<SolveJob>, Option<SolveJob>)> {
+    let first = match pending {
+        Some(j) => j,
+        None => rx.recv().ok()?,
+    };
+    let Some(key) = solve_pack_key(&first.req, policy) else {
+        return Some((vec![first], None));
+    };
+    let deadline = Instant::now() + policy.max_wait;
+    let mut lanes = first.req.replicas;
+    let mut jobs = vec![first];
+    while lanes < policy.max_lanes * 2 {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(j) => {
+                if solve_pack_key(&j.req, policy) == Some(key) {
+                    lanes += j.req.replicas;
+                    jobs.push(j);
+                } else {
+                    return Some((jobs, Some(j)));
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some((jobs, None))
+}
+
+fn solve_result_from(job: &SolveJob, out: crate::solver::portfolio::SolveOutcome) -> SolveResult {
+    let done = Instant::now();
+    SolveResult {
+        id: job.req.id,
+        objective: out.best_energy + job.req.problem.metadata.offset,
+        spins: out.best_spins,
+        phases: out.best_phases,
+        energy: out.best_energy,
+        periods: out.periods,
+        replicas: out.replicas,
+        settled_replicas: out.settled_replicas,
+        engine: out.engine,
+        sync_rounds: out.sync_rounds,
+        queue_latency: Duration::ZERO,
+        total_latency: done.duration_since(job.submitted),
+    }
+}
+
+/// Run one solve solo on its own engine (the one-engine-per-request
+/// path: oversized, sharded, overridden, or simply lonely requests).
+fn solve_one(job: SolveJob, metrics: &Metrics, select: EngineSelect) {
+    let dequeued = Instant::now();
+    let params = PortfolioParams {
+        replicas: job.req.replicas,
+        max_periods: job.req.max_periods,
+        schedule: job.req.schedule,
+        seed: job.req.seed,
+        ..Default::default()
+    };
+    let job_select = match job.req.shards {
+        Some(1) => EngineSelect::Native,
+        Some(k) => EngineSelect::Sharded { shards: k },
+        None => select,
+    };
+    match solve_with(&job.req.problem, &params, job_select) {
+        Ok(out) => {
+            let mut result = solve_result_from(&job, out);
+            result.queue_latency = dequeued.duration_since(job.submitted);
+            metrics.record_solve_completion(
+                result.total_latency,
+                result.periods,
+                result.sync_rounds,
+            );
+            // Receiver may have hung up (client gave up) — fine.
+            let _ = job.reply.send(result);
+        }
+        Err(e) => {
+            // Router validation catches malformed requests, so this is
+            // an internal failure; drop the reply (the client surfaces
+            // "worker dropped reply") and count it.
+            metrics.record_solve_failure();
+            eprintln!("solve job {} failed: {e:#}", job.req.id);
+        }
+    }
+}
+
+/// Run a coalesced batch on one shared lane-block engine.  Every job
+/// receives exactly the `SolveResult` its solo run would produce (the
+/// packed driver is bit-exact lane by lane); jobs beyond the engine's
+/// lane capacity backfill lanes as earlier problems retire.
+fn solve_packed_batch(jobs: Vec<SolveJob>, metrics: &Metrics, policy: &SolvePackPolicy) {
+    let dequeued = Instant::now();
+    let bucket = jobs
+        .iter()
+        .map(|j| j.req.problem.embed_dim())
+        .max()
+        .unwrap_or(1)
+        .next_power_of_two();
+    let total: usize = jobs.iter().map(|j| j.req.replicas).sum();
+    let lanes = total.min(policy.max_lanes);
+    let entries: Vec<(IsingProblem, PortfolioParams)> = jobs
+        .iter()
+        .map(|j| {
+            (
+                j.req.problem.clone(),
+                PortfolioParams {
+                    replicas: j.req.replicas,
+                    max_periods: j.req.max_periods,
+                    schedule: j.req.schedule,
+                    seed: j.req.seed,
+                    ..Default::default()
+                },
+            )
+        })
+        .collect();
+    match solve_packed_native(bucket, lanes, DEFAULT_CHUNK, &entries) {
+        Ok(outs) => {
+            for (job, out) in jobs.into_iter().zip(outs) {
+                if out.early_exit {
+                    metrics.record_solve_lanes_retired(out.replicas as u64);
+                }
+                let mut result = solve_result_from(&job, out);
+                result.queue_latency = dequeued.duration_since(job.submitted);
                 metrics.record_solve_completion(
                     result.total_latency,
                     result.periods,
                     result.sync_rounds,
                 );
-                // Receiver may have hung up (client gave up) — fine.
                 let _ = job.reply.send(result);
             }
-            Err(e) => {
-                // Router validation catches malformed requests, so this
-                // is an internal failure; drop the reply (the client
-                // surfaces "worker dropped reply") and count it.
+        }
+        Err(e) => {
+            // All entries were router-validated, so this is internal;
+            // every job in the batch surfaces the dropped reply.
+            eprintln!("packed solve batch failed: {e:#}");
+            for job in jobs {
                 metrics.record_solve_failure();
-                eprintln!("solve job {} failed: {e:#}", job.req.id);
+                eprintln!("solve job {} failed in packed batch", job.req.id);
             }
+        }
+    }
+}
+
+/// The parked-job slot a solver pool's workers share: a job that
+/// closed a batch window (incompatible with it) waits here and is
+/// picked up by *whichever* worker collects next — not necessarily the
+/// one that parked it, so an idle worker never waits behind a busy
+/// neighbor's batch.
+pub type SolvePending = Arc<Mutex<Option<SolveJob>>>;
+
+/// The solver worker loop: pulls [`SolveJob`]s from the shared queue.
+/// Small compatible requests coalesce ([`collect_solve_batch`]) into
+/// one lane-block engine whose batch lanes carry different problems;
+/// everything else runs one engine per request, where `select` places
+/// the request on the native or row-sharded fabric (a request's
+/// explicit `shards` field overrides the rule).
+///
+/// Several workers may share one queue: batch *collection* is
+/// serialized by the lock, batch *execution* runs in parallel across
+/// workers — the same occupancy/throughput trade the retrieval pool
+/// makes.  The `pending` slot (shared, accessed only under the queue
+/// lock) carries a window-closing job to the next collection, on any
+/// worker.
+pub fn solve_worker_loop(
+    rx: Arc<Mutex<Receiver<SolveJob>>>,
+    pending: SolvePending,
+    metrics: Arc<Metrics>,
+    select: EngineSelect,
+    pack: SolvePackPolicy,
+) -> Result<()> {
+    loop {
+        // The pending slot is only touched while holding the queue
+        // lock, so take-collect-park is one atomic step: the next
+        // collector (whichever worker gets the lock) always sees the
+        // parked job before it can block on the queue.
+        let jobs = {
+            let guard = rx.lock().expect("solve queue lock poisoned");
+            let carry_in = pending.lock().expect("pending slot poisoned").take();
+            match collect_solve_batch(&guard, carry_in, &pack) {
+                None => None,
+                Some((jobs, carry)) => {
+                    if carry.is_some() {
+                        *pending.lock().expect("pending slot poisoned") = carry;
+                    }
+                    Some(jobs)
+                }
+            }
+        };
+        let Some(jobs) = jobs else { break };
+        metrics.record_solve_batch(jobs.len());
+        if jobs.len() == 1 {
+            solve_one(jobs.into_iter().next().expect("len checked"), &metrics, select);
+        } else {
+            solve_packed_batch(jobs, &metrics, &pack);
         }
     }
     Ok(())
@@ -287,5 +486,112 @@ mod tests {
         let (tx, rx) = channel::<Job>();
         drop(tx);
         assert!(collect_batch(&rx, 4, &BatchPolicy::default()).is_none());
+    }
+
+    fn solve_job(
+        n: usize,
+        replicas: usize,
+        max_periods: usize,
+        reply: std::sync::mpsc::Sender<SolveResult>,
+    ) -> SolveJob {
+        let mut req = SolveRequest::new(n as u64, IsingProblem::new(n));
+        req.replicas = replicas;
+        req.max_periods = max_periods;
+        SolveJob {
+            req,
+            submitted: Instant::now(),
+            reply,
+        }
+    }
+
+    #[test]
+    fn pack_key_encodes_the_compatibility_rules() {
+        let policy = SolvePackPolicy::default();
+        let (rtx, _rrx) = channel();
+        let a = solve_job(10, 8, 64, rtx.clone());
+        let b = solve_job(14, 4, 57, rtx.clone()); // same bucket (16), same 8-chunk budget
+        let key = solve_pack_key(&a.req, &policy).unwrap();
+        assert_eq!(key, (16, 8));
+        assert_eq!(solve_pack_key(&b.req, &policy), Some(key));
+        // Different bucket or different chunk budget: incompatible.
+        assert_ne!(solve_pack_key(&solve_job(20, 8, 64, rtx.clone()).req, &policy), Some(key));
+        assert_ne!(solve_pack_key(&solve_job(10, 8, 72, rtx.clone()).req, &policy), Some(key));
+        // Never packable: shards override, oversized embedding or
+        // replica count, packing disabled.
+        let mut c = solve_job(10, 8, 64, rtx.clone());
+        c.req.shards = Some(2);
+        assert_eq!(solve_pack_key(&c.req, &policy), None);
+        assert_eq!(solve_pack_key(&solve_job(100, 8, 64, rtx.clone()).req, &policy), None);
+        assert_eq!(solve_pack_key(&solve_job(10, 100, 64, rtx.clone()).req, &policy), None);
+        let off = SolvePackPolicy {
+            max_oscillators: 0,
+            ..Default::default()
+        };
+        assert_eq!(solve_pack_key(&a.req, &off), None);
+    }
+
+    #[test]
+    fn solve_collect_coalesces_compatible_jobs() {
+        let (tx, rx) = channel();
+        let (rtx, _rrx) = channel();
+        for _ in 0..3 {
+            tx.send(solve_job(12, 4, 64, rtx.clone())).unwrap();
+        }
+        let policy = SolvePackPolicy {
+            max_wait: Duration::from_millis(50),
+            ..Default::default()
+        };
+        let (jobs, carry) = collect_solve_batch(&rx, None, &policy).unwrap();
+        assert_eq!(jobs.len(), 3);
+        assert!(carry.is_none());
+    }
+
+    #[test]
+    fn solve_collect_parks_the_incompatible_job() {
+        let (tx, rx) = channel();
+        let (rtx, _rrx) = channel();
+        tx.send(solve_job(12, 4, 64, rtx.clone())).unwrap();
+        tx.send(solve_job(12, 4, 64, rtx.clone())).unwrap();
+        tx.send(solve_job(40, 4, 64, rtx.clone())).unwrap(); // other bucket
+        let policy = SolvePackPolicy {
+            max_wait: Duration::from_millis(50),
+            ..Default::default()
+        };
+        let (jobs, carry) = collect_solve_batch(&rx, None, &policy).unwrap();
+        assert_eq!(jobs.len(), 2);
+        let carry = carry.expect("incompatible job seeds the next window");
+        assert_eq!(carry.req.problem.n, 40);
+        // The carried job opens the next window without another recv.
+        let (jobs, carry) = collect_solve_batch(&rx, Some(carry), &policy).unwrap();
+        assert_eq!(jobs.len(), 1);
+        assert!(carry.is_none());
+    }
+
+    #[test]
+    fn solve_collect_unpackable_job_goes_straight_through() {
+        let (tx, rx) = channel();
+        let (rtx, _rrx) = channel();
+        let mut j = solve_job(12, 4, 64, rtx.clone());
+        j.req.shards = Some(2); // explicit placement: never packs
+        tx.send(j).unwrap();
+        let policy = SolvePackPolicy {
+            max_wait: Duration::from_millis(200),
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let (jobs, carry) = collect_solve_batch(&rx, None, &policy).unwrap();
+        assert_eq!(jobs.len(), 1);
+        assert!(carry.is_none());
+        assert!(
+            t0.elapsed() < Duration::from_millis(150),
+            "solo jobs must not wait out the batch window"
+        );
+    }
+
+    #[test]
+    fn solve_collect_none_after_disconnect() {
+        let (tx, rx) = channel::<SolveJob>();
+        drop(tx);
+        assert!(collect_solve_batch(&rx, None, &SolvePackPolicy::default()).is_none());
     }
 }

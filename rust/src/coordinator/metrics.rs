@@ -27,6 +27,17 @@ pub struct Metrics {
     /// All-gather synchronization rounds spent on sharded solves (the
     /// multi-device sync-cost metric, summed over completed jobs).
     pub solve_sync_rounds: AtomicU64,
+    /// Solve batches collected by the pool's workers (a solo request
+    /// counts as a batch of one).
+    pub solve_batches: AtomicU64,
+    /// Sum of real solve jobs over all solve batches (occupancy
+    /// numerator; occupancy > 1 means requests coalesced onto shared
+    /// lane-block engines).
+    pub solve_batched_jobs: AtomicU64,
+    /// Lanes of packed solves that retired before their period budget
+    /// (per-lane plateau / all-settled early exit) — capacity the
+    /// batcher handed back for backfill.
+    pub solve_lanes_retired: AtomicU64,
 }
 
 /// A point-in-time snapshot for reporting.
@@ -49,6 +60,11 @@ pub struct MetricsSnapshot {
     pub solve_periods: u64,
     pub solves_sharded: u64,
     pub solve_sync_rounds: u64,
+    pub solve_batches: u64,
+    /// Mean real solve jobs per solve batch (> 1 iff requests shared
+    /// lane-block engines).
+    pub solve_batch_occupancy: f64,
+    pub solve_lanes_retired: u64,
 }
 
 impl Metrics {
@@ -94,6 +110,16 @@ impl Metrics {
         self.solves_failed.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub fn record_solve_batch(&self, real_jobs: usize) {
+        self.solve_batches.fetch_add(1, Ordering::Relaxed);
+        self.solve_batched_jobs
+            .fetch_add(real_jobs as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_solve_lanes_retired(&self, lanes: u64) {
+        self.solve_lanes_retired.fetch_add(lanes, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let completed = self.completed.load(Ordering::Relaxed);
         let batches = self.batches.load(Ordering::Relaxed);
@@ -114,6 +140,12 @@ impl Metrics {
             solve_periods: self.solve_periods.load(Ordering::Relaxed),
             solves_sharded: self.solves_sharded.load(Ordering::Relaxed),
             solve_sync_rounds: self.solve_sync_rounds.load(Ordering::Relaxed),
+            solve_batches: self.solve_batches.load(Ordering::Relaxed),
+            solve_batch_occupancy: div(
+                self.solve_batched_jobs.load(Ordering::Relaxed),
+                self.solve_batches.load(Ordering::Relaxed),
+            ),
+            solve_lanes_retired: self.solve_lanes_retired.load(Ordering::Relaxed),
         }
     }
 }
@@ -168,5 +200,20 @@ mod tests {
         assert_eq!(s.solves_completed, 2);
         assert_eq!(s.solves_sharded, 1);
         assert_eq!(s.solve_sync_rounds, 96);
+    }
+
+    #[test]
+    fn solve_batch_occupancy_aggregates() {
+        let m = Metrics::default();
+        let s = m.snapshot();
+        assert_eq!(s.solve_batches, 0);
+        assert_eq!(s.solve_batch_occupancy, 0.0, "no NaN on the empty pool");
+        m.record_solve_batch(3);
+        m.record_solve_batch(1);
+        m.record_solve_lanes_retired(8);
+        let s = m.snapshot();
+        assert_eq!(s.solve_batches, 2);
+        assert!((s.solve_batch_occupancy - 2.0).abs() < 1e-9);
+        assert_eq!(s.solve_lanes_retired, 8);
     }
 }

@@ -12,10 +12,13 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::channel;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::batcher::{solve_worker_loop, worker_loop, BatchPolicy};
+use crate::coordinator::batcher::{
+    solve_worker_loop, worker_loop, BatchPolicy, SolvePackPolicy, SolvePending,
+};
 use crate::coordinator::job::{
     RetrievalRequest, RetrievalResult, SolveRequest, SolveResult,
 };
@@ -39,25 +42,40 @@ use crate::runtime::engine::{PjrtContext, PjrtEngine};
 /// this bounds concurrent solves, not problem sizes).
 const SOLVE_WORKERS: usize = 2;
 
-/// Solver pool configuration: worker count and the engine-selection
-/// rule.  Requests whose embedding reaches `shard_threshold`
-/// oscillators run on the row-sharded cluster (one shard per
-/// `shard_threshold` rows, capped at `max_shards`) instead of a single
-/// native engine — selection never changes the answer, only where the
-/// rows live.
+/// Solver pool configuration: worker count, the engine-selection rule,
+/// and the multi-problem packing policy.  Requests whose embedding
+/// reaches `shard_threshold` oscillators run on the row-sharded cluster
+/// (one shard per `shard_threshold` rows, capped at `max_shards`)
+/// instead of a single native engine; *small* requests (embedding
+/// bucket at most `pack_max_oscillators`, replicas at most
+/// `pack_max_lanes`) coalesce onto shared lane-block engines after
+/// waiting up to `pack_max_wait` for company.  Neither placement nor
+/// packing ever changes the answer, only where the lanes live.
 #[derive(Debug, Clone, Copy)]
 pub struct SolverPoolConfig {
     pub workers: usize,
     pub shard_threshold: usize,
     pub max_shards: usize,
+    /// Largest embedding bucket (power of two) that still packs; 0
+    /// disables solve-side batching (every request gets its own engine).
+    pub pack_max_oscillators: usize,
+    /// Lane capacity of one packed engine (and the per-request replica
+    /// cap for packing).
+    pub pack_max_lanes: usize,
+    /// How long the first small solve in a window waits for company.
+    pub pack_max_wait: Duration,
 }
 
 impl Default for SolverPoolConfig {
     fn default() -> Self {
+        let pack = SolvePackPolicy::default();
         Self {
             workers: SOLVE_WORKERS,
             shard_threshold: DEFAULT_SHARD_THRESHOLD,
             max_shards: DEFAULT_MAX_SHARDS,
+            pack_max_oscillators: pack.max_oscillators,
+            pack_max_lanes: pack.max_lanes,
+            pack_max_wait: pack.max_wait,
         }
     }
 }
@@ -69,6 +87,21 @@ impl SolverPoolConfig {
         EngineSelect::Auto {
             threshold: self.shard_threshold.max(1),
             max_shards: self.max_shards,
+        }
+    }
+
+    /// The packing policy the pool's workers apply per batch window.
+    /// Packing yields to sharding: a request big enough for the
+    /// row-sharded fabric (embedding at or above `shard_threshold`)
+    /// must never be diverted onto a packed native engine, so the
+    /// packable bucket is clamped below the threshold.
+    pub fn pack(&self) -> SolvePackPolicy {
+        SolvePackPolicy {
+            max_oscillators: self
+                .pack_max_oscillators
+                .min(self.shard_threshold.saturating_sub(1)),
+            max_lanes: self.pack_max_lanes,
+            max_wait: self.pack_max_wait,
         }
     }
 }
@@ -199,15 +232,21 @@ impl Coordinator {
 
         // The shared solver pool: optimization traffic for any size;
         // the selection rule places each request on the native or
-        // sharded fabric.
+        // sharded fabric, and the packing policy coalesces small
+        // compatible requests onto shared lane-block engines.
         let (stx, srx) = channel();
         router.register_solver(stx)?;
         let srx = Arc::new(Mutex::new(srx));
+        let pending: SolvePending = Arc::new(Mutex::new(None));
         let select = solver.select();
+        let pack = solver.pack();
         for _ in 0..solver.workers.max(1) {
             let m = metrics.clone();
             let rx = srx.clone();
-            workers.push(std::thread::spawn(move || solve_worker_loop(rx, m, select)));
+            let pend = pending.clone();
+            workers.push(std::thread::spawn(move || {
+                solve_worker_loop(rx, pend, m, select, pack)
+            }));
         }
 
         Ok(Coordinator {
@@ -544,6 +583,23 @@ mod tests {
         assert!(resp.contains("bad json"), "{resp}");
         let resp = handle_line(&router, r#"{"type": "frobnicate"}"#);
         assert!(resp.contains("unknown request type"), "{resp}");
+    }
+
+    #[test]
+    fn pack_policy_yields_to_the_shard_threshold() {
+        // A pool that shards at 12 oscillators must not divert 12+
+        // requests onto packed native engines.
+        let cfg = SolverPoolConfig {
+            shard_threshold: 12,
+            ..Default::default()
+        };
+        assert_eq!(cfg.pack().max_oscillators, 11);
+        assert_eq!(SolverPoolConfig::default().pack().max_oscillators, 64);
+        let off = SolverPoolConfig {
+            pack_max_oscillators: 0,
+            ..Default::default()
+        };
+        assert_eq!(off.pack().max_oscillators, 0, "packing stays disableable");
     }
 
     #[test]

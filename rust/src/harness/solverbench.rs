@@ -15,8 +15,12 @@ use std::time::Instant;
 use crate::harness::bench;
 use crate::solver::anneal::Schedule;
 use crate::solver::graph::Graph;
-use crate::solver::portfolio::{solve_native, solve_with, EngineSelect, PortfolioParams};
-use crate::solver::reductions::max_cut;
+use crate::solver::portfolio::{
+    solve_native, solve_packed_native, solve_with, EngineSelect, PortfolioParams, DEFAULT_CHUNK,
+    MAX_WAVE_REPLICAS,
+};
+use crate::solver::problem::IsingProblem;
+use crate::solver::reductions::{coloring, max_cut};
 use crate::solver::sa;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -218,10 +222,109 @@ pub fn throughput_sweep(
     points
 }
 
+/// One packed-vs-unpacked serving measurement: a mix of small
+/// max-cut/coloring instances solved once through a shared lane-block
+/// engine (`solve_packed`) and once one-engine-per-request — identical
+/// answers (the packed path is bit-exact lane by lane), so the rows
+/// differ only in where the serving time goes.
+#[derive(Debug, Clone)]
+pub struct PackedPoint {
+    /// Oscillator bucket of the shared engine.
+    pub bucket_n: usize,
+    /// Problems in the mix (all sharing the one engine).
+    pub problems: usize,
+    /// Lane capacity of the packed engine (problems beyond it backfill
+    /// retired lanes mid-run).  `problems` > 1 sharing these lanes IS
+    /// the batch occupancy the row demonstrates.
+    pub lanes: usize,
+    pub packed_median_s: f64,
+    pub unpacked_median_s: f64,
+    /// Aggregate replica-periods/sec through the shared engine.
+    pub packed_rps: f64,
+    /// The same work, one engine per request.
+    pub unpacked_rps: f64,
+}
+
+/// Measure the packed solve path against the one-engine-per-request
+/// baseline on a mix of `problems` small instances (alternating max-cut
+/// and 3-coloring, sizes cycling inside one bucket).
+pub fn packed_throughput(
+    problems: usize,
+    replicas: usize,
+    periods: usize,
+    seed: u64,
+) -> PackedPoint {
+    assert!(problems >= 1);
+    // A packed lane block carries at most one solo wave of replicas;
+    // clamp instead of panicking when the CLI asks for more.
+    let replicas = replicas.clamp(1, MAX_WAVE_REPLICAS);
+    let sizes = [10usize, 12, 14, 16];
+    let mut rng = Rng::new(seed);
+    let mut entries: Vec<(IsingProblem, PortfolioParams)> = Vec::with_capacity(problems);
+    for i in 0..problems {
+        let n = sizes[i % sizes.len()];
+        let g = Graph::random(n, 0.3, &mut rng);
+        let problem = if i % 2 == 0 { max_cut(&g) } else { coloring(&g, 3) };
+        let params = PortfolioParams {
+            replicas,
+            max_periods: periods,
+            seed: seed.wrapping_add(1 + i as u64),
+            plateau_chunks: 0, // steady work: rate the full budget
+            ..Default::default()
+        };
+        entries.push((problem, params));
+    }
+    let bucket_n = entries
+        .iter()
+        .map(|(p, _)| p.embed_dim())
+        .max()
+        .expect("problems >= 1")
+        .next_power_of_two();
+    let lanes = (problems * replicas).min(MAX_WAVE_REPLICAS).max(replicas);
+    // One probe run pins the aggregate work actually driven (identical
+    // on both paths — they are bit-exact) and sanity-checks exactly
+    // that before rating anything.
+    let probe =
+        solve_packed_native(bucket_n, lanes, DEFAULT_CHUNK, &entries).expect("packed probe");
+    let total_rp: usize = probe.iter().map(|o| o.replicas * o.periods).sum();
+    for ((problem, params), out) in entries.iter().zip(&probe) {
+        let solo = solve_with(problem, params, EngineSelect::Native).expect("solo probe");
+        assert_eq!(
+            (out.best_energy, out.periods),
+            (solo.best_energy, solo.periods),
+            "packed probe diverged from solo"
+        );
+    }
+    let rp = bench::bench(&format!("solver/packed_x{problems}_b{bucket_n}"), 1, 3, || {
+        solve_packed_native(bucket_n, lanes, DEFAULT_CHUNK, &entries).expect("packed");
+    });
+    let ru = bench::bench(&format!("solver/unpacked_x{problems}_b{bucket_n}"), 1, 3, || {
+        for (problem, params) in &entries {
+            solve_with(problem, params, EngineSelect::Native).expect("unpacked");
+        }
+    });
+    let (packed_median_s, unpacked_median_s) =
+        (rp.median.as_secs_f64(), ru.median.as_secs_f64());
+    PackedPoint {
+        bucket_n,
+        problems,
+        lanes,
+        packed_median_s,
+        unpacked_median_s,
+        packed_rps: total_rp as f64 / packed_median_s.max(1e-12),
+        unpacked_rps: total_rp as f64 / unpacked_median_s.max(1e-12),
+    }
+}
+
 /// Serialize a throughput sweep as the `BENCH_solver.json` document.
 /// Each point carries its engine label, so native and sharded rows for
-/// the same sizes live side by side in one trajectory file.
-pub fn bench_json(points: &[ThroughputPoint], recorded_unix_s: u64) -> Json {
+/// the same sizes live side by side in one trajectory file; packed
+/// rows (one per measured mix) sit alongside under `"packed"`.
+pub fn bench_json(
+    points: &[ThroughputPoint],
+    packed: &[PackedPoint],
+    recorded_unix_s: u64,
+) -> Json {
     let mut engines: Vec<&'static str> = Vec::new();
     for p in points {
         if !engines.contains(&p.engine) {
@@ -256,13 +359,41 @@ pub fn bench_json(points: &[ThroughputPoint], recorded_unix_s: u64) -> Json {
                     .collect(),
             ),
         ),
+        (
+            "packed",
+            Json::Arr(
+                packed
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("bucket_n", Json::num(p.bucket_n as f64)),
+                            ("problems", Json::num(p.problems as f64)),
+                            ("lanes", Json::num(p.lanes as f64)),
+                            ("packed_median_s", Json::num(p.packed_median_s)),
+                            ("unpacked_median_s", Json::num(p.unpacked_median_s)),
+                            (
+                                "packed_replica_periods_per_sec",
+                                Json::num(p.packed_rps),
+                            ),
+                            (
+                                "unpacked_replica_periods_per_sec",
+                                Json::num(p.unpacked_rps),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
     ])
 }
 
 /// Run the sweep(s) and write `BENCH_solver.json`-style output to
 /// `path`: always the native rows, plus — when `shards >= 2` — the
-/// sharded rows on the exact same instances, so the file records
-/// native-vs-sharded replica-periods/sec vs N.
+/// sharded rows on the exact same instances (native-vs-sharded
+/// replica-periods/sec vs N), plus — when `packed_problems >= 2` — one
+/// packed row comparing a `packed_problems`-instance mix through a
+/// shared lane-block engine against the one-engine-per-request
+/// baseline.
 pub fn record_throughput(
     path: &std::path::Path,
     sizes: &[usize],
@@ -270,25 +401,31 @@ pub fn record_throughput(
     periods: usize,
     seed: u64,
     shards: usize,
-) -> std::io::Result<Vec<ThroughputPoint>> {
+    packed_problems: usize,
+) -> std::io::Result<(Vec<ThroughputPoint>, Vec<PackedPoint>)> {
     let t0 = Instant::now();
     let mut points = throughput_sweep(sizes, replicas, periods, seed, 1);
     if shards >= 2 {
         points.extend(throughput_sweep(sizes, replicas, periods, seed, shards));
     }
+    let mut packed = Vec::new();
+    if packed_problems >= 2 {
+        packed.push(packed_throughput(packed_problems, replicas, periods, seed));
+    }
     let stamp = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_secs())
         .unwrap_or(0);
-    let doc = bench_json(&points, stamp);
+    let doc = bench_json(&points, &packed, stamp);
     std::fs::write(path, format!("{doc}\n"))?;
     eprintln!(
-        "wrote {} ({} rows in {:.1}s)",
+        "wrote {} ({} rows + {} packed in {:.1}s)",
         path.display(),
         points.len(),
+        packed.len(),
         t0.elapsed().as_secs_f64()
     );
-    Ok(points)
+    Ok((points, packed))
 }
 
 #[cfg(test)]
@@ -353,7 +490,16 @@ mod tests {
                 sync_rounds: 64,
             },
         ];
-        let doc = bench_json(&pts, 123);
+        let packed = vec![PackedPoint {
+            bucket_n: 16,
+            problems: 4,
+            lanes: 16,
+            packed_median_s: 0.2,
+            unpacked_median_s: 0.3,
+            packed_rps: 320.0,
+            unpacked_rps: 213.0,
+        }];
+        let doc = bench_json(&pts, &packed, 123);
         let parsed = Json::parse(&doc.to_string()).unwrap();
         assert_eq!(
             parsed.get("bench").and_then(Json::as_str),
@@ -365,5 +511,29 @@ mod tests {
         assert_eq!(points.len(), 2);
         assert_eq!(points[1].get("engine").and_then(Json::as_str), Some("sharded"));
         assert_eq!(points[1].get("sync_rounds").and_then(Json::as_usize), Some(64));
+        let prow = &parsed.get("packed").and_then(Json::as_arr).unwrap()[0];
+        assert_eq!(prow.get("problems").and_then(Json::as_usize), Some(4));
+        assert_eq!(
+            prow.get("packed_replica_periods_per_sec").and_then(Json::as_f64),
+            Some(320.0)
+        );
+        assert_eq!(
+            prow.get("unpacked_replica_periods_per_sec").and_then(Json::as_f64),
+            Some(213.0)
+        );
+    }
+
+    #[test]
+    fn packed_point_rates_a_real_mix() {
+        // Small mix, tiny effort: the row must show several problems
+        // sharing one engine and positive rates for both serving modes
+        // (the probe inside asserts packed == solo answers before any
+        // timing happens).
+        let p = packed_throughput(3, 2, 16, 9);
+        assert!(p.problems > 1, "the mix must actually share an engine");
+        assert_eq!(p.problems, 3);
+        assert!(p.bucket_n >= 14 && p.bucket_n.is_power_of_two());
+        assert!(p.packed_rps > 0.0);
+        assert!(p.unpacked_rps > 0.0);
     }
 }

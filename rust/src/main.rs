@@ -41,9 +41,13 @@ Solver (generic Ising/QUBO subsystem, see DESIGN_SOLVER.md):
         [--shards K]      K=0 auto-selects by size; K>1 forces the
                           sharded multi-device engine (bit-exact)
   solve-bench [--sizes 16,32,64,128] [--replicas 32] [--periods 128]
-        [--instances 5] [--shards K] [--out BENCH_solver.json]
+        [--instances 5] [--shards K] [--packed [N]]
+        [--out BENCH_solver.json]
                           quality vs SA + native (and, with --shards,
-                          sharded) throughput rows
+                          sharded) throughput rows; --packed adds an
+                          N-instance (default 6) small-mix row comparing
+                          the shared lane-block engine against
+                          one-engine-per-request serving
 
 Ablations (DESIGN.md design choices):
   ablation [--trials 50]                precision vs capacity/accuracy
@@ -378,6 +382,13 @@ fn cmd_solve_bench(args: &mut Args) -> Result<()> {
     let periods = args.get_usize("periods", 128)?;
     let instances = args.get_usize("instances", 5)?;
     let shards = args.get_usize("shards", 0)?;
+    // `--packed` alone records the default 6-instance mix; `--packed N`
+    // sizes the mix explicitly.
+    let packed_problems = if args.has("packed") {
+        args.get_usize("packed", 6)?.max(2)
+    } else {
+        0
+    };
     let out_path = args.get_str("out", "BENCH_solver.json");
     let seed = args.get_u64("seed", 2025)?;
     args.finish().map_err(|e| anyhow!(e))?;
@@ -390,13 +401,14 @@ fn cmd_solve_bench(args: &mut Args) -> Result<()> {
     let report = solverbench::quality_vs_sa(64, 0.1, instances, replicas, periods, seed);
     println!("{}", report.table());
 
-    let points = solverbench::record_throughput(
+    let (points, packed) = solverbench::record_throughput(
         std::path::Path::new(&out_path),
         &sizes,
         replicas,
         periods,
         seed,
         shards,
+        packed_problems,
     )?;
     println!("solver throughput (native vs sharded replica-periods/sec):");
     for p in &points {
@@ -404,6 +416,20 @@ fn cmd_solve_bench(args: &mut Args) -> Result<()> {
             "  n={:<5} {:>9} {:>12.0} replica-periods/s   (median {:.3} s per \
              solve, {} sync rounds)",
             p.n, p.engine, p.replica_periods_per_sec, p.median_s, p.sync_rounds
+        );
+    }
+    for p in &packed {
+        println!(
+            "packed serving ({} problems sharing one {}-lane engine, bucket n={}):",
+            p.problems, p.lanes, p.bucket_n
+        );
+        println!(
+            "  packed   {:>12.0} replica-periods/s   (median {:.3} s per mix)",
+            p.packed_rps, p.packed_median_s
+        );
+        println!(
+            "  unpacked {:>12.0} replica-periods/s   (median {:.3} s per mix)",
+            p.unpacked_rps, p.unpacked_median_s
         );
     }
     Ok(())

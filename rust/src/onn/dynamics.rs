@@ -62,6 +62,14 @@ impl PhaseNoise {
         self.amplitude
     }
 
+    /// Periods consumed from this stream so far.  A fresh stream starts
+    /// at 0 — the lane-block engines rebuild their `PhaseNoise` on every
+    /// (re)programming, which is what guarantees a backfilled lane never
+    /// inherits a retired problem's tick counter.
+    pub fn tick(&self) -> u64 {
+        self.tick
+    }
+
     /// The pure kick function: maybe kick `phi` of oscillator `osc` at
     /// period `tick`.  Identity when the amplitude is zero.  Exposed so
     /// row-sharded engines can replay the exact per-oscillator stream
@@ -167,6 +175,15 @@ impl FunctionalEngine {
     /// Current noise amplitude (0 when no noise is installed).
     pub fn noise_amplitude(&self) -> f64 {
         self.noise.as_ref().map_or(0.0, PhaseNoise::amplitude)
+    }
+
+    /// Tick of the installed kick stream (0 when no noise is installed).
+    /// The tick advances once per period *in batch-walk order*, so a
+    /// batch of `b` slots stepped through one chunk of `c` periods gives
+    /// slot `s` the ticks `[s * c, (s + 1) * c)` — the per-lane indexing
+    /// the packed solve driver relies on being position-independent.
+    pub fn noise_tick(&self) -> u64 {
+        self.noise.as_ref().map_or(0, PhaseNoise::tick)
     }
 
     /// One synchronous period update, in place.
@@ -563,6 +580,23 @@ mod tests {
             eng.period_step(&mut ph);
             assert!(ph.iter().all(|&x| (0..16).contains(&x)), "{ph:?}");
         }
+    }
+
+    #[test]
+    fn noise_tick_advances_in_batch_walk_order() {
+        // The tick index the lane-block engines depend on: one step per
+        // period in batch-walk order, restarted by every reinstall.
+        let cfg = NetworkConfig::paper(4);
+        let mut eng = FunctionalEngine::new(cfg, WeightMatrix::zeros(4));
+        assert_eq!(eng.noise_tick(), 0, "no stream installed");
+        eng.set_noise(Some(PhaseNoise::new(0.5, 3)));
+        assert_eq!(eng.noise_tick(), 0, "fresh stream");
+        let mut phases = vec![0i32; 3 * 4];
+        let mut settled = vec![-1i32; 3];
+        eng.run_chunk(&mut phases, &mut settled, 0, 5);
+        assert_eq!(eng.noise_tick(), 15, "3 slots x 5 periods");
+        eng.set_noise(Some(PhaseNoise::new(0.5, 3)));
+        assert_eq!(eng.noise_tick(), 0, "reinstall restarts the stream");
     }
 
     #[test]

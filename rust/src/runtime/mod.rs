@@ -83,6 +83,47 @@ pub trait ChunkEngine {
     fn sync_rounds(&self) -> u64 {
         0
     }
+
+    /// True when the engine can carve its batch dimension into *lane
+    /// blocks* — contiguous lane ranges each programmed with their own
+    /// coupling matrix and annealing kick stream, so one engine serves
+    /// several small problems at once (the packed solve path of
+    /// `solver::portfolio::solve_packed`; DESIGN_SOLVER.md §7).
+    fn supports_lane_blocks(&self) -> bool {
+        false
+    }
+
+    /// Program lanes `[lane0, lane0 + lanes)` as one block carrying its
+    /// own full `n x n` coupling matrix (callers zero-pad problems
+    /// smaller than the engine).  Re-programming a lane range (same
+    /// `lane0`) replaces the weights AND discards any installed noise
+    /// stream — a backfilled block must never inherit the retired
+    /// problem's kick-stream tick.  While any block is programmed,
+    /// `run_chunk` advances block lanes only; a global `set_weights`
+    /// clears every block and returns the engine to whole-batch mode.
+    /// The transition is one-way without it: programming any block
+    /// invalidates prior whole-batch weights, so clearing the last
+    /// block leaves the engine demanding a fresh `set_weights` rather
+    /// than silently resuming a stale pre-packing problem.
+    fn set_lane_block(&mut self, _lane0: usize, _lanes: usize, _w_f32: &[f32]) -> Result<()> {
+        Err(anyhow!("{} engine has no lane-block support", self.kind()))
+    }
+
+    /// Install (or, with amplitude 0, clear) the annealing noise of the
+    /// block starting at `lane0`, restarting its kick stream.  The
+    /// stream is *block-local*: within the block the tick advances
+    /// exactly as it would on a dedicated engine of `lanes` batch slots,
+    /// so a lane block's trajectory is bit-exact with the same problem
+    /// run solo at the same seed.
+    fn set_lane_block_noise(&mut self, _lane0: usize, _amplitude: f64, _seed: u64) -> Result<()> {
+        Err(anyhow!("{} engine has no lane-block support", self.kind()))
+    }
+
+    /// Retire the block starting at `lane0`: its lanes stop advancing
+    /// and become free for a new block.
+    fn clear_lane_block(&mut self, _lane0: usize) -> Result<()> {
+        Err(anyhow!("{} engine has no lane-block support", self.kind()))
+    }
 }
 
 /// Constructs an engine inside a worker thread (PJRT handles are

@@ -2,12 +2,27 @@
 //! by the in-process functional dynamics (`onn::dynamics`).  Bit-exact
 //! with the PJRT artifacts (integer math everywhere) — the integration
 //! tests cross-validate the two engines trial-for-trial.
+//!
+//! Besides the whole-batch mode, the engine supports *lane blocks*
+//! (DESIGN_SOLVER.md §7): contiguous batch-lane ranges each backed by
+//! their own [`FunctionalEngine`], so one engine carries several small
+//! Ising problems at once.  A block behaves exactly like a dedicated
+//! engine of its own size — same weights gate, same noise tick walk —
+//! which is what makes the packed solve path bit-exact with solo runs.
 
 use anyhow::{anyhow, Result};
 
 use crate::onn::config::NetworkConfig;
 use crate::onn::dynamics::{FunctionalEngine, PhaseNoise};
 use crate::runtime::ChunkEngine;
+
+/// One programmed lane block: lanes `[lane0, lane0 + lanes)` running
+/// their own problem on a private functional engine.
+struct LaneBlock {
+    lane0: usize,
+    lanes: usize,
+    engine: FunctionalEngine,
+}
 
 pub struct NativeEngine {
     cfg: NetworkConfig,
@@ -17,6 +32,9 @@ pub struct NativeEngine {
     /// Pending (amplitude, seed) noise setting; re-applied when weights
     /// (and thus the inner engine) are replaced.
     noise: Option<(f64, u64)>,
+    /// Programmed lane blocks; non-empty switches `run_chunk` to
+    /// block-dispatch mode (only block lanes advance).
+    blocks: Vec<LaneBlock>,
 }
 
 impl NativeEngine {
@@ -27,6 +45,7 @@ impl NativeEngine {
             chunk,
             inner: None,
             noise: None,
+            blocks: Vec::new(),
         }
     }
 
@@ -37,6 +56,13 @@ impl NativeEngine {
                 _ => None,
             });
         }
+    }
+
+    fn block_mut(&mut self, lane0: usize) -> Result<&mut LaneBlock> {
+        self.blocks
+            .iter_mut()
+            .find(|b| b.lane0 == lane0)
+            .ok_or_else(|| anyhow!("no lane block programmed at lane {lane0}"))
     }
 }
 
@@ -55,19 +81,35 @@ impl ChunkEngine for NativeEngine {
 
     fn set_weights(&mut self, w_f32: &[f32]) -> Result<()> {
         let w = crate::runtime::checked_weights(&self.cfg, w_f32)?;
+        // Whole-batch programming retires every lane block.
+        self.blocks.clear();
         self.inner = Some(FunctionalEngine::new(self.cfg, w));
         self.apply_noise();
         Ok(())
     }
 
     fn run_chunk(&mut self, phases: &mut [i32], settled: &mut [i32], period0: i32) -> Result<()> {
+        let n = self.cfg.n;
+        if phases.len() != self.batch * n || settled.len() != self.batch {
+            return Err(anyhow!("shape mismatch"));
+        }
+        if !self.blocks.is_empty() {
+            // Lane-block mode: each block advances through its own
+            // engine; lanes outside every block stay untouched.
+            for blk in self.blocks.iter_mut() {
+                blk.engine.run_chunk(
+                    &mut phases[blk.lane0 * n..(blk.lane0 + blk.lanes) * n],
+                    &mut settled[blk.lane0..blk.lane0 + blk.lanes],
+                    period0,
+                    self.chunk,
+                );
+            }
+            return Ok(());
+        }
         let eng = self
             .inner
             .as_mut()
             .ok_or_else(|| anyhow!("set_weights not called"))?;
-        if phases.len() != self.batch * self.cfg.n || settled.len() != self.batch {
-            return Err(anyhow!("shape mismatch"));
-        }
         eng.run_chunk(phases, settled, period0, self.chunk);
         Ok(())
     }
@@ -86,6 +128,62 @@ impl ChunkEngine for NativeEngine {
         }
         self.noise = Some((amplitude, seed));
         self.apply_noise();
+        Ok(())
+    }
+
+    fn supports_lane_blocks(&self) -> bool {
+        true
+    }
+
+    fn set_lane_block(&mut self, lane0: usize, lanes: usize, w_f32: &[f32]) -> Result<()> {
+        if lanes == 0 || lane0 + lanes > self.batch {
+            return Err(anyhow!(
+                "lane block [{lane0}, {}) outside the {}-lane batch",
+                lane0 + lanes,
+                self.batch
+            ));
+        }
+        if self
+            .blocks
+            .iter()
+            .any(|b| b.lane0 != lane0 && lane0 < b.lane0 + b.lanes && b.lane0 < lane0 + lanes)
+        {
+            return Err(anyhow!("lane block at {lane0} overlaps a programmed block"));
+        }
+        let w = crate::runtime::checked_weights(&self.cfg, w_f32)?;
+        // Entering lane-block mode invalidates any whole-batch
+        // programming: once the last block is cleared the engine
+        // demands a fresh set_weights instead of silently resuming a
+        // stale pre-packing problem.
+        self.inner = None;
+        // Replacing a block rebuilds its engine, which also discards the
+        // previous problem's kick stream (fresh noise is installed via
+        // set_lane_block_noise).
+        self.blocks.retain(|b| b.lane0 != lane0);
+        self.blocks.push(LaneBlock {
+            lane0,
+            lanes,
+            engine: FunctionalEngine::new(self.cfg, w),
+        });
+        Ok(())
+    }
+
+    fn set_lane_block_noise(&mut self, lane0: usize, amplitude: f64, seed: u64) -> Result<()> {
+        if !(0.0..=1.0).contains(&amplitude) {
+            return Err(anyhow!("noise amplitude {amplitude} outside [0, 1]"));
+        }
+        let blk = self.block_mut(lane0)?;
+        blk.engine
+            .set_noise((amplitude > 0.0).then(|| PhaseNoise::new(amplitude, seed)));
+        Ok(())
+    }
+
+    fn clear_lane_block(&mut self, lane0: usize) -> Result<()> {
+        let before = self.blocks.len();
+        self.blocks.retain(|b| b.lane0 != lane0);
+        if self.blocks.len() == before {
+            return Err(anyhow!("no lane block programmed at lane {lane0}"));
+        }
         Ok(())
     }
 }
@@ -134,6 +232,73 @@ mod tests {
         let mut st2 = vec![-1i32; 2];
         e.run_chunk(&mut ph2, &mut st2, 0).unwrap();
         assert_eq!(ph2, init);
+    }
+
+    #[test]
+    fn lane_blocks_match_dedicated_engines() {
+        // Two blocks with different couplings + different noise streams
+        // must each reproduce a dedicated engine of their own size.
+        let n = 4;
+        let cfg = NetworkConfig::paper(n);
+        let mut rng = Rng::new(31);
+        let wa: Vec<f32> = (0..n * n).map(|_| rng.range_i64(-8, 9) as f32).collect();
+        let wb: Vec<f32> = (0..n * n).map(|_| rng.range_i64(-8, 9) as f32).collect();
+        let init: Vec<i32> = (0..5 * n).map(|_| rng.range_i64(0, 16) as i32).collect();
+
+        let mut packed = NativeEngine::new(cfg, 5, 4);
+        assert!(packed.supports_lane_blocks());
+        packed.set_lane_block(0, 2, &wa).unwrap();
+        packed.set_lane_block(2, 2, &wb).unwrap();
+        packed.set_lane_block_noise(0, 0.8, 11).unwrap();
+        packed.set_lane_block_noise(2, 0.4, 22).unwrap();
+        let mut pp = init.clone();
+        let mut ps = vec![-1i32; 5];
+        packed.run_chunk(&mut pp, &mut ps, 0).unwrap();
+
+        for (lane0, w, amp, seed) in [(0usize, &wa, 0.8, 11u64), (2, &wb, 0.4, 22)] {
+            let mut solo = NativeEngine::new(cfg, 2, 4);
+            solo.set_weights(w).unwrap();
+            solo.set_noise(amp, seed).unwrap();
+            let mut sp = init[lane0 * n..(lane0 + 2) * n].to_vec();
+            let mut ss = vec![-1i32; 2];
+            solo.run_chunk(&mut sp, &mut ss, 0).unwrap();
+            assert_eq!(&pp[lane0 * n..(lane0 + 2) * n], &sp[..], "block at {lane0}");
+            assert_eq!(&ps[lane0..lane0 + 2], &ss[..], "block at {lane0}");
+        }
+        // The unprogrammed lane (index 4) never advances.
+        assert_eq!(&pp[4 * n..], &init[4 * n..]);
+        assert_eq!(ps[4], -1);
+    }
+
+    #[test]
+    fn lane_block_validation() {
+        let cfg = NetworkConfig::paper(3);
+        let w = vec![0.0f32; 9];
+        let mut e = NativeEngine::new(cfg, 4, 4);
+        assert!(e.set_lane_block(3, 2, &w).is_err(), "out of range");
+        assert!(e.set_lane_block(0, 0, &w).is_err(), "empty block");
+        assert!(e.set_lane_block(0, 2, &[0.5; 9]).is_err(), "bad weights");
+        e.set_lane_block(0, 2, &w).unwrap();
+        assert!(e.set_lane_block(1, 2, &w).is_err(), "overlap");
+        assert!(e.set_lane_block_noise(2, 0.5, 1).is_err(), "no block there");
+        assert!(e.set_lane_block_noise(0, 1.5, 1).is_err(), "amplitude range");
+        e.set_lane_block(2, 2, &w).unwrap();
+        e.clear_lane_block(0).unwrap();
+        assert!(e.clear_lane_block(0).is_err(), "already cleared");
+        // Clearing the LAST block must not fall back to any stale
+        // whole-batch programming — the engine demands set_weights.
+        e.clear_lane_block(2).unwrap();
+        let mut ph = vec![0i32; 12];
+        let mut st = vec![-1i32; 4];
+        assert!(
+            e.run_chunk(&mut ph, &mut st, 0).is_err(),
+            "stale whole-batch weights must not resume after packing"
+        );
+        // Global programming restores whole-batch mode: every lane
+        // advances again.
+        e.set_weights(&w).unwrap();
+        e.run_chunk(&mut ph, &mut st, 0).unwrap();
+        assert!(st.iter().all(|&s| s >= 0), "zero weights settle instantly");
     }
 
     #[test]

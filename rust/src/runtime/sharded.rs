@@ -41,10 +41,21 @@ enum ShardMsg {
     /// Full phase vector + the leader's period tick for this period;
     /// the shard replies with its updated row slice.
     Step(Vec<i32>, u64),
-    /// Reprogram this shard's row slice of the weight matrix.
+    /// One period of the lane block keyed by its first lane: phase
+    /// vector of one lane, block-local tick.
+    StepBlock(Vec<i32>, u64, usize),
+    /// Reprogram this shard's row slice of the weight matrix (also
+    /// drops every lane block: whole-batch mode).
     SetWeights(Vec<i8>),
+    /// (Re)program this shard's row slice of one lane block's matrix;
+    /// any noise the block carried is discarded (fresh stream).
+    SetBlockWeights(usize, Vec<i8>),
     /// Install `(amplitude, seed)` phase noise; amplitude <= 0 clears it.
     SetNoise(f64, u64),
+    /// Per-block noise stream; amplitude <= 0 clears it.
+    SetBlockNoise(usize, f64, u64),
+    /// Retire one lane block.
+    ClearBlock(usize),
     Stop,
 }
 
@@ -54,6 +65,22 @@ struct ShardHandle {
     join: Option<JoinHandle<()>>,
     row0: usize,
     rows: usize,
+}
+
+/// Leader-side record of one lane block (packed multi-problem mode):
+/// which lanes it owns and where its block-local kick stream stands.
+struct BlockInfo {
+    lane0: usize,
+    lanes: usize,
+    /// Block-local kick-stream tick; reset by `set_lane_block` /
+    /// `set_lane_block_noise`, advanced per period in batch-walk order
+    /// within the block — exactly the walk a dedicated engine of
+    /// `lanes` slots performs, which keeps packed lanes bit-exact with
+    /// solo runs.
+    tick: u64,
+    /// Current amplitude (the tick only advances while noise is live,
+    /// mirroring `PhaseNoise` on the single engine).
+    amplitude: f64,
 }
 
 /// Leader + K shard workers executing the functional period dynamics.
@@ -71,6 +98,14 @@ pub struct ShardedEngine {
     /// Period index into the kick stream since the last `set_noise` /
     /// `set_weights` (mirrors `PhaseNoise`'s tick on the single engine).
     tick: u64,
+    /// Programmed lane blocks; non-empty switches `run_chunk` to
+    /// block-dispatch mode (only block lanes advance).
+    blocks: Vec<BlockInfo>,
+    /// Set when lane-block mode has invalidated the whole-batch
+    /// weights/kick stream: after the last block is cleared the engine
+    /// demands a fresh `set_weights` instead of silently resuming a
+    /// stale pre-packing problem mid-stream.
+    whole_batch_stale: bool,
 }
 
 impl ShardedEngine {
@@ -126,6 +161,8 @@ impl ShardedEngine {
             sync_rounds: 0,
             noise: None,
             tick: 0,
+            blocks: Vec::new(),
+            whole_batch_stale: false,
         })
     }
 
@@ -166,6 +203,37 @@ impl ShardedEngine {
         Ok(())
     }
 
+    /// One synchronous period of the lane block at `blocks[idx]` for a
+    /// single lane's phase vector (broadcast + gather, same all-gather
+    /// as the whole-batch path).
+    fn period_step_block(&mut self, idx: usize, phases: &mut [i32]) -> Result<()> {
+        let (lane0, tick) = (self.blocks[idx].lane0, self.blocks[idx].tick);
+        for sh in &self.shards {
+            sh.tx
+                .send(ShardMsg::StepBlock(phases.to_vec(), tick, lane0))
+                .map_err(|_| anyhow!("shard died"))?;
+        }
+        for sh in &self.shards {
+            let slice = sh.rx.recv().map_err(|_| anyhow!("shard died"))?;
+            if slice.len() != sh.rows {
+                return Err(anyhow!("shard stepped an unprogrammed lane block"));
+            }
+            phases[sh.row0..sh.row0 + sh.rows].copy_from_slice(&slice);
+        }
+        self.sync_rounds += 1;
+        if self.blocks[idx].amplitude > 0.0 {
+            self.blocks[idx].tick += 1;
+        }
+        Ok(())
+    }
+
+    fn block_position(&self, lane0: usize) -> Result<usize> {
+        self.blocks
+            .iter()
+            .position(|b| b.lane0 == lane0)
+            .ok_or_else(|| anyhow!("no lane block programmed at lane {lane0}"))
+    }
+
     /// Stop the shard workers and wait for them.  Dropping the engine
     /// does the same (see the `Drop` impl); this explicit form keeps
     /// call sites readable.
@@ -194,9 +262,75 @@ impl Drop for ShardedEngine {
     }
 }
 
+/// One shard's slice of a synchronous period: the reference waveform +
+/// phase snap for `spec`'s rows from the broadcast state, plus the
+/// annealing kick derived from `(seed, tick, global row index)` — the
+/// same pure function the single engine evaluates, so the sharded
+/// trajectory stays bit-exact under noise.
+fn shard_step(
+    spec: &ShardSpec,
+    n: usize,
+    p: usize,
+    templates: &[i8],
+    phases: &[i32],
+    tick: u64,
+    noise: Option<(f64, u64)>,
+) -> Vec<i32> {
+    let pi = p as i32;
+    // amplitudes over the period for all oscillators
+    let mut s = vec![0i8; n * p];
+    for (j, &phi) in phases.iter().enumerate() {
+        for t in 0..p {
+            s[j * p + t] = amplitude(phi, t as i64, pi) as i8;
+        }
+    }
+    let mut out = Vec::with_capacity(spec.rows);
+    for r in 0..spec.rows {
+        let row = &spec.w[r * n..(r + 1) * n];
+        let gi = spec.row0 + r; // global oscillator index
+        // reference waveform for oscillator gi
+        let mut best_key = i32::MIN;
+        let mut best_k = 0i32;
+        let mut refsig = [0i8; 64];
+        for t in 0..p {
+            let mut sum = 0i32;
+            for j in 0..n {
+                sum += row[j] as i32 * s[j * p + t] as i32;
+            }
+            refsig[t] = if sum > 0 {
+                1
+            } else if sum < 0 {
+                -1
+            } else {
+                s[gi * p + t]
+            };
+        }
+        for k in 0..pi {
+            let trow = &templates[k as usize * p..(k as usize + 1) * p];
+            let mut score = 0i32;
+            for t in 0..p {
+                score += refsig[t] as i32 * trow[t] as i32;
+            }
+            let rel = wrap(k - phases[gi], pi);
+            let key = score * 2 * pi + (pi - rel);
+            if key > best_key {
+                best_key = key;
+                best_k = k;
+            }
+        }
+        if let Some((a, seed)) = noise {
+            best_k = PhaseNoise::kick_at(seed, tick, gi, a, best_k, pi);
+        }
+        out.push(best_k);
+    }
+    out
+}
+
 /// Worker: computes the reference waveform + phase snap for its rows
 /// from the broadcast state (the per-device compute of a multi-FPGA
-/// ONN, here the functional period semantics).
+/// ONN, here the functional period semantics).  Besides the whole-batch
+/// weights, the worker holds its row slice of every programmed lane
+/// block — one small Ising problem per block in packed mode.
 fn shard_loop(
     mut spec: ShardSpec,
     n: usize,
@@ -215,70 +349,67 @@ fn shard_loop(
     // This shard's slice of the annealing kick stream; `Some` only for
     // amplitude > 0.
     let mut noise: Option<(f64, u64)> = None;
+    // Lane blocks as this shard sees them: its row slice of each
+    // block's matrix plus the block's slice of the kick stream.
+    struct ShardBlock {
+        lane0: usize,
+        spec: ShardSpec,
+        noise: Option<(f64, u64)>,
+    }
+    let mut blocks: Vec<ShardBlock> = Vec::new();
     loop {
-        let (phases, tick) = match rx.recv() {
-            Ok(ShardMsg::Step(phases, tick)) => (phases, tick),
+        let out = match rx.recv() {
+            Ok(ShardMsg::Step(phases, tick)) => {
+                shard_step(&spec, n, p, &templates, &phases, tick, noise)
+            }
+            Ok(ShardMsg::StepBlock(phases, tick, lane0)) => {
+                match blocks.iter().find(|b| b.lane0 == lane0) {
+                    Some(blk) => {
+                        shard_step(&blk.spec, n, p, &templates, &phases, tick, blk.noise)
+                    }
+                    // Protocol error: reply with an empty slice so the
+                    // leader errors instead of deadlocking on recv.
+                    None => Vec::new(),
+                }
+            }
             Ok(ShardMsg::SetWeights(w)) => {
                 debug_assert_eq!(w.len(), spec.rows * n);
                 spec.w = w;
+                blocks.clear();
+                continue;
+            }
+            Ok(ShardMsg::SetBlockWeights(lane0, w)) => {
+                debug_assert_eq!(w.len(), spec.rows * n);
+                // Reprogramming drops any noise the block carried — a
+                // backfilled block starts a fresh kick stream.
+                blocks.retain(|b| b.lane0 != lane0);
+                blocks.push(ShardBlock {
+                    lane0,
+                    spec: ShardSpec {
+                        row0: spec.row0,
+                        rows: spec.rows,
+                        w,
+                    },
+                    noise: None,
+                });
                 continue;
             }
             Ok(ShardMsg::SetNoise(a, seed)) => {
                 noise = (a > 0.0).then_some((a, seed));
                 continue;
             }
+            Ok(ShardMsg::SetBlockNoise(lane0, a, seed)) => {
+                if let Some(blk) = blocks.iter_mut().find(|b| b.lane0 == lane0) {
+                    blk.noise = (a > 0.0).then_some((a, seed));
+                }
+                continue;
+            }
+            Ok(ShardMsg::ClearBlock(lane0)) => {
+                blocks.retain(|b| b.lane0 != lane0);
+                continue;
+            }
             Ok(ShardMsg::Stop) | Err(_) => break,
         };
-        // amplitudes over the period for all oscillators
-        let mut s = vec![0i8; n * p];
-        for (j, &phi) in phases.iter().enumerate() {
-            for t in 0..p {
-                s[j * p + t] = amplitude(phi, t as i64, pi) as i8;
-            }
-        }
-        let mut out = Vec::with_capacity(spec.rows);
-        for r in 0..spec.rows {
-            let row = &spec.w[r * n..(r + 1) * n];
-            let gi = spec.row0 + r; // global oscillator index
-            // reference waveform for oscillator gi
-            let mut best_key = i32::MIN;
-            let mut best_k = 0i32;
-            let mut refsig = [0i8; 64];
-            for t in 0..p {
-                let mut sum = 0i32;
-                for j in 0..n {
-                    sum += row[j] as i32 * s[j * p + t] as i32;
-                }
-                refsig[t] = if sum > 0 {
-                    1
-                } else if sum < 0 {
-                    -1
-                } else {
-                    s[gi * p + t]
-                };
-            }
-            for k in 0..pi {
-                let trow = &templates[k as usize * p..(k as usize + 1) * p];
-                let mut score = 0i32;
-                for t in 0..p {
-                    score += refsig[t] as i32 * trow[t] as i32;
-                }
-                let rel = wrap(k - phases[gi], pi);
-                let key = score * 2 * pi + (pi - rel);
-                if key > best_key {
-                    best_key = key;
-                    best_k = k;
-                }
-            }
-            // The annealing kick for this oscillator is derived from
-            // (seed, broadcast tick, global row index) — the same pure
-            // function the single engine evaluates, so the sharded
-            // trajectory stays bit-exact under noise.
-            if let Some((a, seed)) = noise {
-                best_k = PhaseNoise::kick_at(seed, tick, gi, a, best_k, pi);
-            }
-            out.push(best_k);
-        }
         if reply.send(out).is_err() {
             break;
         }
@@ -314,8 +445,12 @@ impl ChunkEngine for ShardedEngine {
                 .map_err(|_| anyhow!("shard died"))?;
         }
         // The native engine rebuilds its PhaseNoise on reload, which
-        // restarts the kick stream; mirror that here.
+        // restarts the kick stream; mirror that here.  Whole-batch
+        // programming also retires every lane block (shards drop theirs
+        // in the SetWeights handler).
         self.tick = 0;
+        self.blocks.clear();
+        self.whole_batch_stale = false;
         Ok(())
     }
 
@@ -326,6 +461,32 @@ impl ChunkEngine for ShardedEngine {
             return Err(anyhow!("shape mismatch"));
         }
         let mut prev = vec![0i32; n];
+        if !self.blocks.is_empty() {
+            // Lane-block mode: each block's lanes advance with that
+            // block's couplings + kick stream; other lanes stay put.
+            let spans: Vec<(usize, usize)> =
+                self.blocks.iter().map(|blk| (blk.lane0, blk.lanes)).collect();
+            for (idx, (lane0, lanes)) in spans.into_iter().enumerate() {
+                for slot in 0..lanes {
+                    let bi = lane0 + slot;
+                    let ph = &mut phases[bi * n..(bi + 1) * n];
+                    for k in 0..self.chunk {
+                        prev.copy_from_slice(ph);
+                        self.period_step_block(idx, ph)?;
+                        if settled[bi] < 0 && ph == &prev[..] {
+                            settled[bi] = period0 + k as i32;
+                        }
+                    }
+                }
+            }
+            return Ok(());
+        }
+        if self.whole_batch_stale {
+            return Err(anyhow!(
+                "whole-batch weights were invalidated by lane-block mode; \
+                 call set_weights before running the full batch"
+            ));
+        }
         for bi in 0..b {
             let ph = &mut phases[bi * n..(bi + 1) * n];
             for k in 0..self.chunk {
@@ -365,6 +526,75 @@ impl ChunkEngine for ShardedEngine {
 
     fn sync_rounds(&self) -> u64 {
         self.sync_rounds
+    }
+
+    fn supports_lane_blocks(&self) -> bool {
+        true
+    }
+
+    fn set_lane_block(&mut self, lane0: usize, lanes: usize, w_f32: &[f32]) -> Result<()> {
+        if lanes == 0 || lane0 + lanes > self.batch {
+            return Err(anyhow!(
+                "lane block [{lane0}, {}) outside the {}-lane batch",
+                lane0 + lanes,
+                self.batch
+            ));
+        }
+        if self
+            .blocks
+            .iter()
+            .any(|b| b.lane0 != lane0 && lane0 < b.lane0 + b.lanes && b.lane0 < lane0 + lanes)
+        {
+            return Err(anyhow!("lane block at {lane0} overlaps a programmed block"));
+        }
+        let w = crate::runtime::checked_weights(&self.cfg, w_f32)?;
+        for sh in &self.shards {
+            let mut slice = Vec::with_capacity(sh.rows * self.cfg.n);
+            for r in sh.row0..sh.row0 + sh.rows {
+                slice.extend_from_slice(w.row(r));
+            }
+            sh.tx
+                .send(ShardMsg::SetBlockWeights(lane0, slice))
+                .map_err(|_| anyhow!("shard died"))?;
+        }
+        self.blocks.retain(|b| b.lane0 != lane0);
+        self.blocks.push(BlockInfo {
+            lane0,
+            lanes,
+            tick: 0,
+            amplitude: 0.0,
+        });
+        // Entering lane-block mode invalidates the whole-batch stream.
+        self.whole_batch_stale = true;
+        Ok(())
+    }
+
+    fn set_lane_block_noise(&mut self, lane0: usize, amplitude: f64, seed: u64) -> Result<()> {
+        if !(0.0..=1.0).contains(&amplitude) {
+            return Err(anyhow!("noise amplitude {amplitude} outside [0, 1]"));
+        }
+        let idx = self.block_position(lane0)?;
+        // A fresh setting restarts the block's kick stream, exactly like
+        // installing a fresh PhaseNoise on a dedicated engine.
+        self.blocks[idx].tick = 0;
+        self.blocks[idx].amplitude = amplitude;
+        for sh in &self.shards {
+            sh.tx
+                .send(ShardMsg::SetBlockNoise(lane0, amplitude, seed))
+                .map_err(|_| anyhow!("shard died"))?;
+        }
+        Ok(())
+    }
+
+    fn clear_lane_block(&mut self, lane0: usize) -> Result<()> {
+        let idx = self.block_position(lane0)?;
+        self.blocks.remove(idx);
+        for sh in &self.shards {
+            sh.tx
+                .send(ShardMsg::ClearBlock(lane0))
+                .map_err(|_| anyhow!("shard died"))?;
+        }
+        Ok(())
     }
 }
 
@@ -495,6 +725,52 @@ mod tests {
             }
             sharded.shutdown();
         }
+    }
+
+    #[test]
+    fn lane_blocks_bit_exact_with_native_lane_blocks() {
+        use crate::runtime::native::NativeEngine;
+        let mut rng = Rng::new(92);
+        let n = 9;
+        let cfg = NetworkConfig::paper(n);
+        let (wa, _) = rand_net(&mut rng, n);
+        let (wb, _) = rand_net(&mut rng, n);
+        let init: Vec<i32> = (0..5 * n).map(|_| rng.range_i64(0, 16) as i32).collect();
+        let mut native = NativeEngine::new(cfg, 5, 3);
+        let mut sharded = ShardedEngine::unprogrammed(cfg, 3, 5, 3).unwrap();
+        for e in [
+            &mut native as &mut dyn ChunkEngine,
+            &mut sharded as &mut dyn ChunkEngine,
+        ] {
+            assert!(e.supports_lane_blocks());
+            e.set_lane_block(0, 2, &wa.to_f32()).unwrap();
+            e.set_lane_block(2, 3, &wb.to_f32()).unwrap();
+            e.set_lane_block_noise(0, 0.7, 5).unwrap();
+            e.set_lane_block_noise(2, 0.3, 6).unwrap();
+        }
+        let (mut pa, mut pb) = (init.clone(), init.clone());
+        let (mut sa, mut sb) = (vec![-1i32; 5], vec![-1i32; 5]);
+        for chunk in 0..3 {
+            native.run_chunk(&mut pa, &mut sa, chunk * 3).unwrap();
+            sharded.run_chunk(&mut pb, &mut sb, chunk * 3).unwrap();
+            assert_eq!(pa, pb, "chunk {chunk}");
+            assert_eq!(sa, sb, "chunk {chunk}");
+        }
+        // Retiring one block freezes its lanes on both fabrics.
+        native.clear_lane_block(0).unwrap();
+        sharded.clear_lane_block(0).unwrap();
+        let frozen = pa[..2 * n].to_vec();
+        native.run_chunk(&mut pa, &mut sa, 9).unwrap();
+        sharded.run_chunk(&mut pb, &mut sb, 9).unwrap();
+        assert_eq!(pa, pb);
+        assert_eq!(&pa[..2 * n], &frozen[..], "retired lanes frozen");
+        // Clearing the LAST block must not silently resume the stale
+        // whole-batch stream on either fabric.
+        native.clear_lane_block(2).unwrap();
+        sharded.clear_lane_block(2).unwrap();
+        assert!(native.run_chunk(&mut pa, &mut sa, 12).is_err());
+        assert!(sharded.run_chunk(&mut pb, &mut sb, 12).is_err());
+        sharded.shutdown();
     }
 
     #[test]

@@ -31,6 +31,18 @@ pub const DEFAULT_SHARD_THRESHOLD: usize = 256;
 /// Default cap on shard workers per solve.
 pub const DEFAULT_MAX_SHARDS: usize = 8;
 
+/// Replicas driven per engine wave: the solo portfolio caps one batch
+/// at this many random-init trials (more replicas run as extra waves),
+/// and a packed lane block carries at most this many lanes, so packed
+/// and solo runs always share identical wave geometry.
+pub const MAX_WAVE_REPLICAS: usize = 64;
+
+/// Default periods per engine chunk — the granularity at which the
+/// annealing schedule is stepped and settle flags are read.  Shared by
+/// the solo and packed solve paths so a packed lane's chunk walk is
+/// identical to its solo run.
+pub const DEFAULT_CHUNK: usize = 8;
+
 /// Which engine fabric a solve runs on — the engine-selection layer the
 /// coordinator's solver pool and the CLI configure.  Selection never
 /// changes the answer: the sharded engine is bit-exact with the native
@@ -110,6 +122,11 @@ pub struct PortfolioParams {
     pub plateau_chunks: usize,
     /// Greedy single-flip readout polish (binary problems only).
     pub polish: bool,
+    /// Periods per engine chunk, threaded into the engine the solve
+    /// builds.  Packed solves require every co-scheduled lane's params
+    /// to match the shared engine's chunk (part of the batching
+    /// compatibility rules, DESIGN_SOLVER.md §7).
+    pub chunk: usize,
 }
 
 impl Default for PortfolioParams {
@@ -124,6 +141,7 @@ impl Default for PortfolioParams {
             seed: 1,
             plateau_chunks: 3,
             polish: true,
+            chunk: DEFAULT_CHUNK,
         }
     }
 }
@@ -200,15 +218,7 @@ pub fn solve_portfolio(
     let chunk = engine.chunk_len().max(1);
     let chunks_per_wave = params.max_periods.div_ceil(chunk).max(1);
     let binary = problem.sectors == 2;
-    // Exact objective for binary problems; phase-correlation proxy for
-    // sector (Potts-like) problems.
-    let eval = |phases: &[i32]| -> f64 {
-        if binary {
-            problem.energy(&problem.decode_spins(phases, p))
-        } else {
-            problem.phase_energy(&phases[..problem.n], p)
-        }
-    };
+    let eval = |phases: &[i32]| -> f64 { eval_state(problem, phases, p) };
 
     let mut rng = Rng::new(params.seed);
     let mut best_energy = f64::INFINITY;
@@ -304,36 +314,14 @@ pub fn solve_portfolio(
             let full = &phases[slot * m..(slot + 1) * m];
             replica_phases.push(full[..problem.n].to_vec());
             if params.polish && binary {
-                // Polish every replica's final state while its true
-                // ancilla phase is still attached (the gauge matters
-                // for field problems); strict descent can only improve,
-                // so the outcome dominates every unpolished replica.
-                let mut spins = problem.decode_spins(full, p);
-                greedy_descent(problem, &mut spins);
-                let e = problem.energy(&spins);
-                if best_polished.as_ref().map_or(true, |(_, be)| e < *be) {
-                    best_polished = Some((spins, e));
-                }
+                polish_replica(problem, full, p, &mut best_polished);
             }
         }
         remaining -= real;
     }
 
-    let mut best_spins = problem.decode_spins(&best_phases, p);
-    if params.polish && binary {
-        // The best tracked state gets the same readout polish, then
-        // competes with the best polished replica; best_energy always
-        // describes best_spins.
-        greedy_descent(problem, &mut best_spins);
-        best_energy = problem.energy(&best_spins);
-        if let Some((spins, e)) = best_polished {
-            if e < best_energy {
-                best_energy = e;
-                best_spins = spins;
-            }
-        }
-        best_phases = best_spins.iter().map(|&s| spin_to_phase(s, p)).collect();
-    }
+    let (best_spins, best_phases, best_energy) =
+        finish_readout(problem, params.polish, p, best_energy, best_phases, best_polished);
 
     Ok(SolveOutcome {
         best_spins,
@@ -352,6 +340,65 @@ pub fn solve_portfolio(
     })
 }
 
+/// Replica scoring: the exact Hamiltonian for binary problems (via the
+/// gauge decode of the full embedded state), the phase-correlation
+/// proxy for sector (Potts-like) problems.  Shared by the solo and
+/// packed drivers so both rank replicas identically.
+fn eval_state(problem: &IsingProblem, full: &[i32], p: i32) -> f64 {
+    if problem.sectors == 2 {
+        problem.energy(&problem.decode_spins(full, p))
+    } else {
+        problem.phase_energy(&full[..problem.n], p)
+    }
+}
+
+/// Polish one replica's final state (its true ancilla phase still
+/// attached — the gauge matters for field problems) and fold it into
+/// the running best: strict descent can only improve, so the winner
+/// dominates every unpolished replica.  Shared by the solo and packed
+/// drivers; callers gate on `polish && binary`.
+fn polish_replica(
+    problem: &IsingProblem,
+    full: &[i32],
+    p: i32,
+    best_polished: &mut Option<(Vec<i8>, f64)>,
+) {
+    let mut spins = problem.decode_spins(full, p);
+    greedy_descent(problem, &mut spins);
+    let e = problem.energy(&spins);
+    if best_polished.as_ref().map_or(true, |(_, be)| e < *be) {
+        *best_polished = Some((spins, e));
+    }
+}
+
+/// The deterministic readout tail shared by the solo and packed
+/// drivers: decode the best tracked state, give it the same polish the
+/// replicas got, and let the best polished replica compete —
+/// `best_energy` always describes the returned spins.
+fn finish_readout(
+    problem: &IsingProblem,
+    polish: bool,
+    p: i32,
+    mut best_energy: f64,
+    mut best_phases: Vec<i32>,
+    best_polished: Option<(Vec<i8>, f64)>,
+) -> (Vec<i8>, Vec<i32>, f64) {
+    let binary = problem.sectors == 2;
+    let mut best_spins = problem.decode_spins(&best_phases, p);
+    if polish && binary {
+        greedy_descent(problem, &mut best_spins);
+        best_energy = problem.energy(&best_spins);
+        if let Some((spins, e)) = best_polished {
+            if e < best_energy {
+                best_energy = e;
+                best_spins = spins;
+            }
+        }
+        best_phases = best_spins.iter().map(|&s| spin_to_phase(s, p)).collect();
+    }
+    (best_spins, best_phases, best_energy)
+}
+
 /// Build the selected engine for the problem and run the portfolio on
 /// it — the coordinator's solve path.  Batch and chunk geometry are
 /// identical across selections, so the outcome is bit-identical whether
@@ -361,9 +408,12 @@ pub fn solve_with(
     params: &PortfolioParams,
     select: EngineSelect,
 ) -> Result<SolveOutcome> {
+    if params.chunk == 0 {
+        return Err(anyhow!("chunk must be positive"));
+    }
     let m = problem.embed_dim();
-    let batch = params.replicas.clamp(1, 64);
-    let mut engine = build_engine(m, batch, 8, select)?;
+    let batch = params.replicas.clamp(1, MAX_WAVE_REPLICAS);
+    let mut engine = build_engine(m, batch, params.chunk, select)?;
     solve_portfolio(engine.as_mut(), problem, params)
 }
 
@@ -371,6 +421,407 @@ pub fn solve_with(
 /// for the problem.
 pub fn solve_native(problem: &IsingProblem, params: &PortfolioParams) -> Result<SolveOutcome> {
     solve_with(problem, params, EngineSelect::Native)
+}
+
+// ---- Packed multi-problem solve (DESIGN_SOLVER.md §7) -----------------------
+
+/// First-fit allocator over the engine's batch lanes: tracks free
+/// contiguous ranges so retired blocks can be backfilled mid-run.
+struct LaneAlloc {
+    /// Free `(lane0, len)` ranges, sorted by `lane0`, never adjacent.
+    free: Vec<(usize, usize)>,
+}
+
+impl LaneAlloc {
+    fn new(total: usize) -> Self {
+        Self {
+            free: vec![(0, total)],
+        }
+    }
+
+    /// First free range that fits, split on allocation.
+    fn alloc(&mut self, lanes: usize) -> Option<usize> {
+        debug_assert!(lanes > 0);
+        let idx = self.free.iter().position(|&(_, len)| len >= lanes)?;
+        let (start, len) = self.free[idx];
+        if len == lanes {
+            self.free.remove(idx);
+        } else {
+            self.free[idx] = (start + lanes, len - lanes);
+        }
+        Some(start)
+    }
+
+    /// Return a range, merging with free neighbors.
+    fn release(&mut self, lane0: usize, lanes: usize) {
+        let idx = self
+            .free
+            .iter()
+            .position(|&(s, _)| s > lane0)
+            .unwrap_or(self.free.len());
+        self.free.insert(idx, (lane0, lanes));
+        if idx + 1 < self.free.len() && self.free[idx].0 + self.free[idx].1 == self.free[idx + 1].0
+        {
+            self.free[idx].1 += self.free[idx + 1].1;
+            self.free.remove(idx + 1);
+        }
+        if idx > 0 && self.free[idx - 1].0 + self.free[idx - 1].1 == self.free[idx].0 {
+            self.free[idx - 1].1 += self.free[idx].1;
+            self.free.remove(idx);
+        }
+    }
+}
+
+/// The shared phase/settle buffers plus engine geometry of one packed
+/// run (kept separate from the engine so block placement can borrow
+/// both without fighting).
+struct PackedBuffers {
+    phases: Vec<i32>,
+    settled: Vec<i32>,
+    n: usize,
+    p: i32,
+    chunk: usize,
+}
+
+/// One live lane block inside a packed solve: a problem's replicas
+/// occupying lanes `[lane0, lane0 + lanes)` of the shared engine, with
+/// exactly the per-problem state the solo portfolio tracks.
+struct PackedLane {
+    entry: usize,
+    lane0: usize,
+    lanes: usize,
+    /// The problem's embedding size (`<= n`; lanes are zero-padded).
+    m: usize,
+    /// Private rng replaying the solo draw sequence: replica inits
+    /// first, then one kick seed per chunk.
+    rng: Rng,
+    chunk_idx: usize,
+    chunks_per_wave: usize,
+    level: f64,
+    stall: usize,
+    chunks_run: usize,
+    best_energy: f64,
+    best_phases: Vec<i32>,
+    initial_best: f64,
+    /// `Some(early)` once the lane's run is over (plateau/all-settled
+    /// early exit, or budget exhausted with `early = false`).
+    exit: Option<bool>,
+}
+
+/// Program entry `entry` onto lanes `[lane0, lane0 + replicas)`: embed
+/// and zero-pad its couplings, draw its replica inits, reset its settle
+/// flags.  Padded oscillators are uncoupled (they freeze under the
+/// deterministic dynamics, and kicks are per-oscillator independent),
+/// so the real oscillators' trajectories are bit-exact with a dedicated
+/// engine of size `m` — the lane-packing weight layout's invariant.
+fn place_lane(
+    engine: &mut dyn ChunkEngine,
+    buf: &mut PackedBuffers,
+    entries: &[(IsingProblem, PortfolioParams)],
+    entry: usize,
+    lane0: usize,
+) -> Result<PackedLane> {
+    let (problem, params) = &entries[entry];
+    let (n, p) = (buf.n, buf.p);
+    let m = problem.embed_dim();
+    let binary = problem.sectors == 2;
+    let wm = problem.embed(&NetworkConfig::paper(m));
+    let mut w = vec![0f32; n * n];
+    for i in 0..m {
+        for j in 0..m {
+            w[i * n + j] = wm.get(i, j) as f32;
+        }
+    }
+    engine.set_lane_block(lane0, params.replicas, &w)?;
+    let mut rng = Rng::new(params.seed);
+    for slot in 0..params.replicas {
+        let row = (lane0 + slot) * n;
+        for i in 0..m {
+            buf.phases[row + i] = if binary {
+                spin_to_phase(rng.spin(), p)
+            } else {
+                rng.range_i64(0, p as i64) as i32
+            };
+        }
+        for i in m..n {
+            buf.phases[row + i] = 0;
+        }
+        buf.settled[lane0 + slot] = -1;
+    }
+    let mut best_energy = f64::INFINITY;
+    let mut best_phases = vec![0i32; m];
+    let mut initial_best = f64::INFINITY;
+    for slot in 0..params.replicas {
+        let row = (lane0 + slot) * n;
+        let e = eval_state(problem, &buf.phases[row..row + m], p);
+        initial_best = initial_best.min(e);
+        if e < best_energy {
+            best_energy = e;
+            best_phases.copy_from_slice(&buf.phases[row..row + m]);
+        }
+    }
+    Ok(PackedLane {
+        entry,
+        lane0,
+        lanes: params.replicas,
+        m,
+        rng,
+        chunk_idx: 0,
+        chunks_per_wave: params.max_periods.div_ceil(buf.chunk).max(1),
+        level: 0.0,
+        stall: 0,
+        chunks_run: 0,
+        best_energy,
+        best_phases,
+        initial_best,
+        exit: None,
+    })
+}
+
+/// Read a retired lane block out into a [`SolveOutcome`] — the same
+/// readout-polish tail the solo portfolio runs at wave end.
+fn finish_lane(
+    engine: &dyn ChunkEngine,
+    buf: &PackedBuffers,
+    entries: &[(IsingProblem, PortfolioParams)],
+    lane: &PackedLane,
+    early: bool,
+    noise_applied: bool,
+) -> SolveOutcome {
+    let (problem, params) = &entries[lane.entry];
+    let (n, p) = (buf.n, buf.p);
+    let binary = problem.sectors == 2;
+    let mut settled_replicas = 0usize;
+    let mut replica_phases = Vec::with_capacity(lane.lanes);
+    let mut best_polished: Option<(Vec<i8>, f64)> = None;
+    for slot in 0..lane.lanes {
+        if buf.settled[lane.lane0 + slot] >= 0 {
+            settled_replicas += 1;
+        }
+        let row = (lane.lane0 + slot) * n;
+        let full = &buf.phases[row..row + lane.m];
+        replica_phases.push(full[..problem.n].to_vec());
+        if params.polish && binary {
+            polish_replica(problem, full, p, &mut best_polished);
+        }
+    }
+    let (best_spins, best_phases, best_energy) = finish_readout(
+        problem,
+        params.polish,
+        p,
+        lane.best_energy,
+        lane.best_phases.clone(),
+        best_polished,
+    );
+    // Attribute only this block's share of the fabric's all-gather
+    // rounds: a distributed engine pays one round per period per lane,
+    // so the block's own cost is lanes * periods — exactly what a solo
+    // run of this problem on the same fabric would report.  (The
+    // engine-wide counter spans every co-resident problem.)
+    let sync_rounds = if engine.sync_rounds() > 0 {
+        (lane.lanes * lane.chunks_run * buf.chunk) as u64
+    } else {
+        0
+    };
+    SolveOutcome {
+        best_spins,
+        best_phases: best_phases[..problem.n].to_vec(),
+        best_energy,
+        initial_best_energy: lane.initial_best,
+        replica_phases,
+        periods: lane.chunks_run * buf.chunk,
+        chunks: lane.chunks_run,
+        replicas: lane.lanes,
+        settled_replicas,
+        early_exit: early,
+        noise_applied,
+        engine: engine.kind(),
+        sync_rounds,
+    }
+}
+
+/// Pack several small problems onto one lane-block engine and anneal
+/// them concurrently, one contiguous block of `replicas` lanes per
+/// problem.  Entries beyond the engine's lane capacity queue up and
+/// *backfill* lanes as earlier blocks retire (per-lane plateau /
+/// all-settled early exit, or budget exhaustion); a backfilled block
+/// always starts a fresh kick stream.
+///
+/// The load-bearing contract: every returned outcome is **bit-exact**
+/// (energies, spins, phases, period counts) with the same problem run
+/// through [`solve_with`] solo at the same seed — regardless of which
+/// lanes it landed on, what its neighbors were, or whether it was
+/// backfilled.  `rust/tests/prop_packed.rs` holds the proof obligation.
+///
+/// Requirements: the engine supports lane blocks, every entry's
+/// `params.chunk` equals the engine's chunk, `replicas` fits both the
+/// engine's lanes and [`MAX_WAVE_REPLICAS`] (so solo runs are a single
+/// wave), and every embedding fits the engine's oscillator count.
+pub fn solve_packed(
+    engine: &mut dyn ChunkEngine,
+    entries: &[(IsingProblem, PortfolioParams)],
+) -> Result<Vec<SolveOutcome>> {
+    if !engine.supports_lane_blocks() {
+        return Err(anyhow!("{} engine cannot pack lane blocks", engine.kind()));
+    }
+    let n = engine.n();
+    let b = engine.batch();
+    let chunk = engine.chunk_len().max(1);
+    let cfg = NetworkConfig::paper(n);
+    let p = cfg.period() as i32;
+    let noise_applied = engine.supports_noise();
+    for (idx, (problem, params)) in entries.iter().enumerate() {
+        problem
+            .validate()
+            .map_err(|e| anyhow!("entry {idx}: bad problem: {e}"))?;
+        if params.replicas == 0 {
+            return Err(anyhow!("entry {idx}: replicas must be positive"));
+        }
+        if params.replicas > b.min(MAX_WAVE_REPLICAS) {
+            return Err(anyhow!(
+                "entry {idx}: {} replicas exceed the packable wave \
+                 (engine lanes {b}, wave cap {MAX_WAVE_REPLICAS})",
+                params.replicas
+            ));
+        }
+        if params.chunk != chunk {
+            return Err(anyhow!(
+                "entry {idx}: chunk {} != engine chunk {chunk} \
+                 (packed lanes must share the solo chunk geometry)",
+                params.chunk
+            ));
+        }
+        if problem.embed_dim() > n {
+            return Err(anyhow!(
+                "entry {idx}: embeds into {} oscillators, engine serves {n}",
+                problem.embed_dim()
+            ));
+        }
+        if problem.sectors > cfg.period() {
+            return Err(anyhow!(
+                "entry {idx}: {} sectors exceed the {}-step phase wheel",
+                problem.sectors,
+                cfg.period()
+            ));
+        }
+    }
+    let mut buf = PackedBuffers {
+        phases: vec![0i32; b * n],
+        settled: vec![-1i32; b],
+        n,
+        p,
+        chunk,
+    };
+    let mut outcomes: Vec<Option<SolveOutcome>> = entries.iter().map(|_| None).collect();
+    let mut alloc = LaneAlloc::new(b);
+    let mut queue: std::collections::VecDeque<usize> = (0..entries.len()).collect();
+    let mut active: Vec<PackedLane> = Vec::new();
+    let mut gp = 0usize; // engine-global chunk counter (settle-flag base)
+
+    loop {
+        // FIFO placement/backfill: strictly in submission order, so the
+        // lane assignment is deterministic (not that it matters for the
+        // answers — lanes are bit-independent).
+        while let Some(&next) = queue.front() {
+            let lanes = entries[next].1.replicas;
+            let Some(lane0) = alloc.alloc(lanes) else { break };
+            queue.pop_front();
+            active.push(place_lane(engine, &mut buf, entries, next, lane0)?);
+        }
+        if active.is_empty() {
+            break;
+        }
+        // Per-block annealing level + kick seed for this chunk — each
+        // block walks its own schedule exactly as its solo run would.
+        for lane in active.iter_mut() {
+            let params = &entries[lane.entry].1;
+            lane.level = if noise_applied {
+                params.schedule.level(lane.chunk_idx, lane.chunks_per_wave)
+            } else {
+                0.0
+            };
+            if noise_applied {
+                engine.set_lane_block_noise(lane.lane0, lane.level, lane.rng.next_u64())?;
+            }
+        }
+        engine.run_chunk(&mut buf.phases, &mut buf.settled, (gp * chunk) as i32)?;
+        gp += 1;
+        for lane in active.iter_mut() {
+            let (problem, params) = &entries[lane.entry];
+            let k = lane.chunk_idx;
+            lane.chunk_idx += 1;
+            lane.chunks_run += 1;
+            if lane.level > 0.0 {
+                // Settle flags are meaningless while kicks are active.
+                for s in &mut buf.settled[lane.lane0..lane.lane0 + lane.lanes] {
+                    *s = -1;
+                }
+            }
+            let mut improved = false;
+            for slot in 0..lane.lanes {
+                let row = (lane.lane0 + slot) * n;
+                let e = eval_state(problem, &buf.phases[row..row + lane.m], p);
+                if e < lane.best_energy - 1e-12 {
+                    lane.best_energy = e;
+                    lane.best_phases
+                        .copy_from_slice(&buf.phases[row..row + lane.m]);
+                    improved = true;
+                }
+            }
+            if lane.level == 0.0 {
+                let all_settled = (0..lane.lanes).all(|s| buf.settled[lane.lane0 + s] >= 0);
+                if improved {
+                    lane.stall = 0;
+                } else {
+                    lane.stall += 1;
+                }
+                if all_settled
+                    || (params.plateau_chunks > 0 && lane.stall >= params.plateau_chunks)
+                {
+                    lane.exit = Some(k + 1 < lane.chunks_per_wave);
+                }
+            }
+            if lane.exit.is_none() && lane.chunk_idx >= lane.chunks_per_wave {
+                lane.exit = Some(false);
+            }
+        }
+        // Retire finished blocks; their lanes free up and are backfilled
+        // from the queue at the top of the next iteration.
+        let mut still = Vec::with_capacity(active.len());
+        for lane in active.drain(..) {
+            match lane.exit {
+                Some(early) => {
+                    outcomes[lane.entry] =
+                        Some(finish_lane(&*engine, &buf, entries, &lane, early, noise_applied));
+                    engine.clear_lane_block(lane.lane0)?;
+                    alloc.release(lane.lane0, lane.lanes);
+                }
+                None => still.push(lane),
+            }
+        }
+        active = still;
+    }
+    Ok(outcomes
+        .into_iter()
+        .map(|o| o.expect("every entry retired"))
+        .collect())
+}
+
+/// Build one bucket-sized native lane-block engine and pack `entries`
+/// onto it — the coordinator's packed solve path.  `lanes` bounds how
+/// many lanes run concurrently; entries beyond the capacity queue and
+/// backfill lanes as earlier problems retire.
+pub fn solve_packed_native(
+    bucket_n: usize,
+    lanes: usize,
+    chunk: usize,
+    entries: &[(IsingProblem, PortfolioParams)],
+) -> Result<Vec<SolveOutcome>> {
+    if bucket_n == 0 || lanes == 0 || chunk == 0 {
+        return Err(anyhow!("degenerate packed engine geometry"));
+    }
+    let mut engine = NativeEngine::new(NetworkConfig::paper(bucket_n), lanes, chunk);
+    solve_packed(&mut engine, entries)
 }
 
 #[cfg(test)]
@@ -473,6 +924,7 @@ mod tests {
             seed: 17,
             plateau_chunks: 1,
             polish: false,
+            ..Default::default()
         };
         let out = solve_native(&problem, &params).unwrap();
         let chunks_total = 64usize.div_ceil(8);
@@ -520,6 +972,100 @@ mod tests {
         assert_eq!(sharded.best_spins, native.best_spins);
         assert_eq!(sharded.best_phases, native.best_phases);
         assert_eq!(sharded.periods, native.periods);
+    }
+
+    #[test]
+    fn lane_alloc_first_fit_and_merge() {
+        let mut a = LaneAlloc::new(10);
+        assert_eq!(a.alloc(4), Some(0));
+        assert_eq!(a.alloc(4), Some(4));
+        assert_eq!(a.alloc(4), None, "only 2 lanes left");
+        assert_eq!(a.alloc(2), Some(8));
+        a.release(0, 4);
+        a.release(8, 2);
+        assert_eq!(a.alloc(5), None, "free space is fragmented");
+        a.release(4, 4);
+        assert_eq!(a.free, vec![(0, 10)], "release merges adjacent ranges");
+        assert_eq!(a.alloc(10), Some(0));
+    }
+
+    #[test]
+    fn chunk_threads_from_params_into_the_engine() {
+        let g = Graph::complete_bipartite(3, 3);
+        let p = max_cut(&g);
+        let mut prm = params(4, 32, 5);
+        prm.chunk = 4;
+        let out = solve_native(&p, &prm).unwrap();
+        assert_eq!(out.periods, out.chunks * 4, "engine ran 4-period chunks");
+        prm.chunk = 0;
+        assert!(solve_native(&p, &prm).is_err(), "degenerate chunk rejected");
+    }
+
+    #[test]
+    fn packed_rejects_incompatible_entries() {
+        let g = Graph::complete_bipartite(2, 2);
+        let p = max_cut(&g);
+        let ok = params(4, 16, 1);
+        // chunk mismatch with the shared engine
+        let mut bad_chunk = ok;
+        bad_chunk.chunk = 4;
+        assert!(solve_packed_native(8, 8, 8, &[(p.clone(), bad_chunk)]).is_err());
+        // more replicas than the engine has lanes
+        assert!(solve_packed_native(8, 2, 8, &[(p.clone(), ok)]).is_err());
+        // embedding larger than the bucket
+        assert!(solve_packed_native(2, 8, 8, &[(p.clone(), ok)]).is_err());
+        // zero replicas
+        assert!(solve_packed_native(8, 8, 8, &[(p.clone(), params(0, 16, 1))]).is_err());
+        // degenerate engine geometry
+        assert!(solve_packed_native(0, 8, 8, &[(p.clone(), ok)]).is_err());
+        // empty batch is fine
+        assert_eq!(solve_packed_native(8, 8, 8, &[]).unwrap().len(), 0);
+        // a non-lane-block engine is rejected outright
+        struct NoBlocks;
+        impl ChunkEngine for NoBlocks {
+            fn n(&self) -> usize {
+                4
+            }
+            fn batch(&self) -> usize {
+                4
+            }
+            fn chunk_len(&self) -> usize {
+                8
+            }
+            fn set_weights(&mut self, _w: &[f32]) -> Result<()> {
+                Ok(())
+            }
+            fn run_chunk(&mut self, _p: &mut [i32], _s: &mut [i32], _p0: i32) -> Result<()> {
+                Ok(())
+            }
+            fn kind(&self) -> &'static str {
+                "stub"
+            }
+        }
+        assert!(solve_packed(&mut NoBlocks, &[(p, ok)]).is_err());
+    }
+
+    #[test]
+    fn packed_pair_matches_solo_runs() {
+        // The smallest end-to-end packing: two different max-cut
+        // problems sharing one engine, each bit-exact with its solo run.
+        let mut rng = Rng::new(75);
+        let ga = Graph::random(8, 0.4, &mut rng);
+        let gb = Graph::random(11, 0.3, &mut rng);
+        let entries = vec![
+            (max_cut(&ga), params(4, 48, 21)),
+            (max_cut(&gb), params(6, 48, 22)),
+        ];
+        let packed = solve_packed_native(16, 10, 8, &entries).unwrap();
+        for ((problem, prm), out) in entries.iter().zip(&packed) {
+            let solo = solve_with(problem, prm, EngineSelect::Native).unwrap();
+            assert_eq!(out.best_energy, solo.best_energy);
+            assert_eq!(out.best_spins, solo.best_spins);
+            assert_eq!(out.best_phases, solo.best_phases);
+            assert_eq!(out.periods, solo.periods);
+            assert_eq!(out.settled_replicas, solo.settled_replicas);
+            assert_eq!(out.replica_phases, solo.replica_phases);
+        }
     }
 
     #[test]

@@ -236,7 +236,12 @@ fn sharded_solve_over_tcp_matches_the_native_path() {
     let sharded_coord = Coordinator::start_with_solver(
         vec![],
         BatchPolicy::default(),
-        SolverPoolConfig { workers: 1, shard_threshold: 12, max_shards: 3 },
+        SolverPoolConfig {
+            workers: 1,
+            shard_threshold: 12,
+            max_shards: 3,
+            ..Default::default()
+        },
     )
     .unwrap();
     let native_coord = Coordinator::start(vec![], BatchPolicy::default()).unwrap();
@@ -313,6 +318,100 @@ fn wire_shards_override_forces_the_sharded_engine() {
 }
 
 #[test]
+fn concurrent_small_solves_coalesce_and_match_the_unbatched_pool() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::sync::Barrier;
+    use std::time::Duration;
+    // A packing pool with one worker and a generous window: N clients
+    // submitting small solves concurrently over real TCP must coalesce
+    // onto shared lane-block engines (occupancy > 1 in the metrics) and
+    // each must receive byte-for-byte the response an unbatched pool
+    // (packing disabled) serves for the same line.
+    let packed_coord = Coordinator::start_with_solver(
+        vec![],
+        BatchPolicy::default(),
+        SolverPoolConfig {
+            workers: 1,
+            pack_max_wait: Duration::from_millis(300),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let unbatched_coord = Coordinator::start_with_solver(
+        vec![],
+        BatchPolicy::default(),
+        SolverPoolConfig {
+            workers: 1,
+            pack_max_oscillators: 0, // packing off: one engine per request
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let router = Arc::clone(&packed_coord.router);
+    std::thread::spawn(move || {
+        let _ = serve_tcp(router, listener);
+    });
+
+    // Same oscillator bucket (9..=12 -> 16) and same period budget, so
+    // every request is pack-compatible; different graphs and seeds.
+    let lines: Vec<String> = (0..4u64)
+        .map(|i| {
+            let g = Graph::random(9 + i as usize, 0.4, &mut Rng::new(300 + i));
+            solve_line_json(100 + i, &g, 4, 32, 40 + i)
+        })
+        .collect();
+    let barrier = Arc::new(Barrier::new(lines.len()));
+    let handles: Vec<_> = lines
+        .iter()
+        .map(|line| {
+            let line = line.clone();
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                let stream = std::net::TcpStream::connect(addr).unwrap();
+                let mut w = stream.try_clone().unwrap();
+                let mut r = BufReader::new(stream);
+                barrier.wait();
+                w.write_all(line.as_bytes()).unwrap();
+                w.write_all(b"\n").unwrap();
+                let mut resp = String::new();
+                r.read_line(&mut resp).unwrap();
+                resp.trim().to_string()
+            })
+        })
+        .collect();
+    let responses: Vec<String> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    for (line, resp) in lines.iter().zip(&responses) {
+        assert!(!resp.contains("error"), "{resp}");
+        let want = handle_line(&unbatched_coord.router, line);
+        assert_eq!(
+            resp, &want,
+            "packed pool answered differently from the unbatched pool"
+        );
+    }
+
+    let snap = packed_coord.snapshot();
+    assert_eq!(snap.solves_completed, 4);
+    assert!(snap.solve_batches >= 1);
+    assert!(
+        snap.solve_batch_occupancy > 1.0,
+        "no coalescing happened: occupancy {}",
+        snap.solve_batch_occupancy
+    );
+    let snap = unbatched_coord.snapshot();
+    assert!(
+        (snap.solve_batch_occupancy - 1.0).abs() < 1e-9,
+        "the unbatched pool must run one engine per request"
+    );
+
+    packed_coord.shutdown().unwrap();
+    unbatched_coord.shutdown().unwrap();
+}
+
+#[test]
 fn sector_problems_round_trip_through_portfolio() {
     // k-coloring (sectors = 3) on a 3-colorable graph: the sector
     // decoder plus recolor polish must produce a proper coloring.
@@ -365,6 +464,7 @@ fn schedules_drive_noise_through_the_engine() {
         seed: 8,
         plateau_chunks: 0,
         polish: false,
+        ..Default::default()
     };
     let out = solve_native(&problem, &params).unwrap();
     assert!(out.noise_applied);

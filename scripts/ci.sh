@@ -23,12 +23,16 @@ cargo test -q
 echo "==> cargo check --features pjrt (stub xla)"
 cargo check --features pjrt
 
-echo "==> solve-bench --shards gate (BENCH_solver.json must carry sharded rows)"
+echo "==> solve-bench --shards/--packed gate (BENCH_solver.json must carry sharded + packed rows)"
 ./target/release/onn-scale solve-bench --sizes 12,16 --replicas 4 --periods 32 \
-  --instances 1 --shards 2 --out BENCH_solver.json
+  --instances 1 --shards 2 --packed 4 --out BENCH_solver.json
 grep -q '"engine":"native"' BENCH_solver.json \
   || { echo "BENCH_solver.json is missing the native rows"; exit 1; }
 grep -q '"engine":"sharded"' BENCH_solver.json \
   || { echo "BENCH_solver.json is missing the sharded rows"; exit 1; }
+grep -q '"packed_replica_periods_per_sec"' BENCH_solver.json \
+  || { echo "BENCH_solver.json is missing the packed serving row"; exit 1; }
+grep -q '"unpacked_replica_periods_per_sec"' BENCH_solver.json \
+  || { echo "BENCH_solver.json is missing the one-engine-per-request baseline row"; exit 1; }
 
 echo "CI OK"
