@@ -277,6 +277,8 @@ fn solve_result_from(job: &SolveJob, out: crate::solver::portfolio::SolveOutcome
         settled_replicas: out.settled_replicas,
         engine: out.engine,
         sync_rounds: out.sync_rounds,
+        quantization_error: out.quantization_error,
+        hardware: out.hardware,
         queue_latency: Duration::ZERO,
         total_latency: done.duration_since(job.submitted),
     }
@@ -307,6 +309,9 @@ fn solve_one(job: SolveJob, metrics: &Metrics, select: EngineSelect) {
                 result.periods,
                 result.sync_rounds,
             );
+            if let Some(hw) = &result.hardware {
+                metrics.record_solve_hardware(hw.fast_cycles);
+            }
             // Receiver may have hung up (client gave up) — fine.
             let _ = job.reply.send(result);
         }

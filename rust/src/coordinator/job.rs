@@ -4,6 +4,7 @@ use std::time::{Duration, Instant};
 
 use crate::onn::patterns::Pattern;
 use crate::onn::phase::spin_to_phase;
+use crate::runtime::HardwareCost;
 use crate::solver::anneal::Schedule;
 use crate::solver::problem::IsingProblem;
 
@@ -109,11 +110,18 @@ pub struct SolveResult {
     pub periods: usize,
     pub replicas: usize,
     pub settled_replicas: usize,
-    /// Engine kind that served the solve ("native" / "sharded").
+    /// Engine kind that served the solve ("native" / "sharded" /
+    /// "rtl").
     pub engine: &'static str,
     /// All-gather synchronization rounds the engine performed (0 on the
     /// native path) — the multi-device sync-cost metric.
     pub sync_rounds: u64,
+    /// RMS rounding loss of the quantized coupling embedding, as a
+    /// fraction of the quantization full scale.
+    pub quantization_error: f64,
+    /// Emulated hardware cost — present when the bit-true rtl engine
+    /// served the solve.
+    pub hardware: Option<HardwareCost>,
     pub queue_latency: Duration,
     pub total_latency: Duration,
 }

@@ -38,6 +38,11 @@ pub struct Metrics {
     /// (per-lane plateau / all-settled early exit) — capacity the
     /// batcher handed back for backfill.
     pub solve_lanes_retired: AtomicU64,
+    /// Solves served by the bit-true emulated-hardware (rtl) engine.
+    pub solves_rtl: AtomicU64,
+    /// Emulated fast-clock cycles those solves consumed — the hardware
+    /// time-to-solution meter, summed over completed rtl jobs.
+    pub solve_fast_cycles: AtomicU64,
 }
 
 /// A point-in-time snapshot for reporting.
@@ -65,6 +70,8 @@ pub struct MetricsSnapshot {
     /// lane-block engines).
     pub solve_batch_occupancy: f64,
     pub solve_lanes_retired: u64,
+    pub solves_rtl: u64,
+    pub solve_fast_cycles: u64,
 }
 
 impl Metrics {
@@ -120,6 +127,14 @@ impl Metrics {
         self.solve_lanes_retired.fetch_add(lanes, Ordering::Relaxed);
     }
 
+    /// A completed solve that ran on the emulated-hardware engine:
+    /// count it and meter its fast-clock cycles.
+    pub fn record_solve_hardware(&self, fast_cycles: u64) {
+        self.solves_rtl.fetch_add(1, Ordering::Relaxed);
+        self.solve_fast_cycles
+            .fetch_add(fast_cycles, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let completed = self.completed.load(Ordering::Relaxed);
         let batches = self.batches.load(Ordering::Relaxed);
@@ -146,6 +161,8 @@ impl Metrics {
                 self.solve_batches.load(Ordering::Relaxed),
             ),
             solve_lanes_retired: self.solve_lanes_retired.load(Ordering::Relaxed),
+            solves_rtl: self.solves_rtl.load(Ordering::Relaxed),
+            solve_fast_cycles: self.solve_fast_cycles.load(Ordering::Relaxed),
         }
     }
 }
@@ -200,6 +217,13 @@ mod tests {
         assert_eq!(s.solves_completed, 2);
         assert_eq!(s.solves_sharded, 1);
         assert_eq!(s.solve_sync_rounds, 96);
+        // An rtl completion meters its emulated fast-clock cycles.
+        assert_eq!(s.solves_rtl, 0);
+        m.record_solve_completion(Duration::from_millis(2), 32, 0);
+        m.record_solve_hardware(512);
+        let s = m.snapshot();
+        assert_eq!(s.solves_rtl, 1);
+        assert_eq!(s.solve_fast_cycles, 512);
     }
 
     #[test]

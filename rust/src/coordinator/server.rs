@@ -51,6 +51,11 @@ const SOLVE_WORKERS: usize = 2;
 /// `pack_max_lanes`) coalesce onto shared lane-block engines after
 /// waiting up to `pack_max_wait` for company.  Neither placement nor
 /// packing ever changes the answer, only where the lanes live.
+///
+/// Setting `rtl` serves solve traffic on the bit-true emulated-hardware
+/// engine instead — a different *dynamics* (cycle-accurate serial MACs
+/// at paper precision, still deterministic at equal seed), with the
+/// emulated hardware cost reported per result and in the pool metrics.
 #[derive(Debug, Clone, Copy)]
 pub struct SolverPoolConfig {
     pub workers: usize,
@@ -64,6 +69,11 @@ pub struct SolverPoolConfig {
     pub pack_max_lanes: usize,
     /// How long the first small solve in a window waits for company.
     pub pack_max_wait: Duration,
+    /// Serve solve traffic on `runtime::rtl::RtlEngine`.  Overrides the
+    /// shard threshold (the emulated device is single-fabric) and
+    /// disables multi-problem packing (it has no lane blocks); an
+    /// explicit per-request `shards` override still wins.
+    pub rtl: bool,
 }
 
 impl Default for SolverPoolConfig {
@@ -76,14 +86,19 @@ impl Default for SolverPoolConfig {
             pack_max_oscillators: pack.max_oscillators,
             pack_max_lanes: pack.max_lanes,
             pack_max_wait: pack.max_wait,
+            rtl: false,
         }
     }
 }
 
 impl SolverPoolConfig {
     /// The selection rule the pool's workers apply per request.  A
-    /// `max_shards` below 2 disables sharding (every size runs native).
+    /// `max_shards` below 2 disables sharding (every size runs native);
+    /// an rtl pool pins every request to the emulated-hardware engine.
     pub fn select(&self) -> EngineSelect {
+        if self.rtl {
+            return EngineSelect::Rtl;
+        }
         EngineSelect::Auto {
             threshold: self.shard_threshold.max(1),
             max_shards: self.max_shards,
@@ -94,8 +109,17 @@ impl SolverPoolConfig {
     /// Packing yields to sharding: a request big enough for the
     /// row-sharded fabric (embedding at or above `shard_threshold`)
     /// must never be diverted onto a packed native engine, so the
-    /// packable bucket is clamped below the threshold.
+    /// packable bucket is clamped below the threshold.  An rtl pool
+    /// never packs: the emulated device has no lane blocks, and
+    /// silently serving packed requests on a float engine would change
+    /// the dynamics the operator asked for.
     pub fn pack(&self) -> SolvePackPolicy {
+        if self.rtl {
+            return SolvePackPolicy {
+                max_oscillators: 0,
+                ..SolvePackPolicy::default()
+            };
+        }
         SolvePackPolicy {
             max_oscillators: self
                 .pack_max_oscillators
@@ -342,22 +366,30 @@ fn handle_solve_value(router: &Router, v: &Json) -> String {
         let res = rx.recv().map_err(|_| anyhow!("solver dropped reply"))?;
         Ok((id, res))
     }) {
-        Ok((id, res)) => Json::obj(vec![
-            ("id", Json::num(id as f64)),
-            (
-                "spins",
-                Json::arr_i32(&res.spins.iter().map(|&s| s as i32).collect::<Vec<_>>()),
-            ),
-            ("phases", Json::arr_i32(&res.phases)),
-            ("energy", Json::num(res.energy)),
-            ("objective", Json::num(res.objective)),
-            ("periods", Json::num(res.periods as f64)),
-            ("replicas", Json::num(res.replicas as f64)),
-            ("settled_replicas", Json::num(res.settled_replicas as f64)),
-            ("engine", Json::str(res.engine)),
-            ("sync_rounds", Json::num(res.sync_rounds as f64)),
-        ])
-        .to_string(),
+        Ok((id, res)) => {
+            let mut fields = vec![
+                ("id", Json::num(id as f64)),
+                (
+                    "spins",
+                    Json::arr_i32(&res.spins.iter().map(|&s| s as i32).collect::<Vec<_>>()),
+                ),
+                ("phases", Json::arr_i32(&res.phases)),
+                ("energy", Json::num(res.energy)),
+                ("objective", Json::num(res.objective)),
+                ("periods", Json::num(res.periods as f64)),
+                ("replicas", Json::num(res.replicas as f64)),
+                ("settled_replicas", Json::num(res.settled_replicas as f64)),
+                ("engine", Json::str(res.engine)),
+                ("sync_rounds", Json::num(res.sync_rounds as f64)),
+                ("quantization_error", Json::num(res.quantization_error)),
+            ];
+            if let Some(hw) = &res.hardware {
+                fields.push(("hw_fast_cycles", Json::num(hw.fast_cycles as f64)));
+                fields.push(("hw_emulated_s", Json::num(hw.emulated_s)));
+                fields.push(("hw_fits_device", Json::Bool(hw.fits_device)));
+            }
+            Json::obj(fields).to_string()
+        }
         Err(e) => Json::obj(vec![("error", Json::str(e.to_string()))]).to_string(),
     }
 }
@@ -600,6 +632,21 @@ mod tests {
             ..Default::default()
         };
         assert_eq!(off.pack().max_oscillators, 0, "packing stays disableable");
+    }
+
+    #[test]
+    fn rtl_pool_pins_selection_and_disables_packing() {
+        let cfg = SolverPoolConfig {
+            rtl: true,
+            ..Default::default()
+        };
+        assert_eq!(cfg.select(), EngineSelect::Rtl);
+        assert_eq!(
+            cfg.pack().max_oscillators,
+            0,
+            "the emulated device has no lane blocks, so nothing may pack"
+        );
+        assert_ne!(SolverPoolConfig::default().select(), EngineSelect::Rtl);
     }
 
     #[test]

@@ -1,5 +1,7 @@
 //! Paper-table/figure renderers: each function prints the same rows the
-//! paper reports, from our measured data.
+//! paper reports, from our measured data — plus the solver-path
+//! trajectory renderer that puts `BENCH_solver.json` (replica-periods/
+//! sec, packed serving, float-vs-rtl quality) next to the paper tables.
 
 use crate::fpga::device::zynq7020;
 use crate::fpga::resources::{estimate, max_oscillators};
@@ -8,6 +10,7 @@ use crate::harness::scaling::{
     fig12_balance, fig12_crossover, hybrid_sweep, recurrent_sweep, table5_rows, Sweep,
 };
 use crate::onn::config::NetworkConfig;
+use crate::util::json::Json;
 use crate::util::table::{ascii_loglog_plot, Table};
 
 fn fmt_f(x: f64, prec: usize) -> String {
@@ -257,6 +260,99 @@ pub fn fig12() -> String {
     out
 }
 
+/// Render a `BENCH_solver.json` document (written by `solve-bench`)
+/// in the same table style as the paper reproduction: the solver
+/// throughput trajectory (replica-periods/sec vs N per engine), the
+/// packed-serving comparison, and the float-native vs bit-true-RTL
+/// quality/time-to-solution rows.  Missing sections render as absent —
+/// older trajectory files stay readable.
+pub fn solver_bench_report(doc: &Json) -> String {
+    let num = |row: &Json, key: &str| row.get(key).and_then(Json::as_f64).unwrap_or(0.0);
+    let mut out = String::new();
+    if let Some(stamp) = doc.get("recorded_unix_s").and_then(Json::as_f64) {
+        out.push_str(&format!(
+            "BENCH_solver.json (recorded at unix {stamp:.0})\n"
+        ));
+    }
+    if let Some(points) = doc.get("points").and_then(Json::as_arr) {
+        let mut t = Table::new(
+            "Solver throughput: replica-periods/sec vs N per engine fabric",
+            &["N", "Engine", "Shards", "Replicas", "Periods", "RP/s", "Sync rounds"],
+        );
+        for p in points {
+            t.row(&[
+                fmt_f(num(p, "n"), 0),
+                p.get("engine").and_then(Json::as_str).unwrap_or("?").to_string(),
+                fmt_f(num(p, "shards"), 0),
+                fmt_f(num(p, "replicas"), 0),
+                fmt_f(num(p, "periods"), 0),
+                fmt_f(num(p, "replica_periods_per_sec"), 0),
+                fmt_f(num(p, "sync_rounds"), 0),
+            ]);
+        }
+        out.push_str(&t.render());
+    }
+    if let Some(packed) = doc.get("packed").and_then(Json::as_arr) {
+        if !packed.is_empty() {
+            let mut t = Table::new(
+                "Packed serving: shared lane-block engine vs one-engine-per-request",
+                &["Bucket N", "Problems", "Lanes", "Packed RP/s", "Unpacked RP/s", "Speedup"],
+            );
+            for p in packed {
+                let (pr, ur) = (
+                    num(p, "packed_replica_periods_per_sec"),
+                    num(p, "unpacked_replica_periods_per_sec"),
+                );
+                t.row(&[
+                    fmt_f(num(p, "bucket_n"), 0),
+                    fmt_f(num(p, "problems"), 0),
+                    fmt_f(num(p, "lanes"), 0),
+                    fmt_f(pr, 0),
+                    fmt_f(ur, 0),
+                    fmt_f(if ur > 0.0 { pr / ur } else { 0.0 }, 2),
+                ]);
+            }
+            out.push_str(&t.render());
+        }
+    }
+    if let Some(rtl) = doc.get("rtl").and_then(Json::as_arr) {
+        if !rtl.is_empty() {
+            let mut t = Table::new(
+                "Float-native vs bit-true RTL: quality and emulated time-to-solution",
+                &[
+                    "N",
+                    "Native cut",
+                    "RTL cut",
+                    "Quant err",
+                    "Periods",
+                    "Fast cycles",
+                    "f_logic [MHz]",
+                    "Emulated [s]",
+                    "Host sim [s]",
+                ],
+            );
+            for p in rtl {
+                t.row(&[
+                    fmt_f(num(p, "n"), 0),
+                    fmt_f(num(p, "native_cut"), 0),
+                    fmt_f(num(p, "rtl_cut"), 0),
+                    fmt_f(num(p, "quantization_error"), 4),
+                    fmt_f(num(p, "periods"), 0),
+                    fmt_f(num(p, "fast_cycles"), 0),
+                    fmt_f(num(p, "f_logic_mhz"), 1),
+                    format!("{:.3e}", num(p, "emulated_s")),
+                    fmt_f(num(p, "host_s"), 3),
+                ]);
+            }
+            out.push_str(&t.render());
+        }
+    }
+    if out.is_empty() {
+        out.push_str("BENCH_solver.json carries no recognizable sections\n");
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -282,6 +378,53 @@ mod tests {
         let s = table2();
         assert!(s.contains("This work (hybrid)"));
         assert!(s.contains("506") || s.contains("50"), "{s}");
+    }
+
+    #[test]
+    fn solver_bench_report_renders_all_sections() {
+        use crate::harness::solverbench::{bench_json, PackedPoint, RtlPoint, ThroughputPoint};
+        let pts = vec![ThroughputPoint {
+            n: 8,
+            replicas: 4,
+            periods: 16,
+            median_s: 0.5,
+            replica_periods_per_sec: 128.0,
+            engine: "native",
+            shards: 1,
+            sync_rounds: 0,
+        }];
+        let packed = vec![PackedPoint {
+            bucket_n: 16,
+            problems: 3,
+            lanes: 12,
+            packed_median_s: 0.2,
+            unpacked_median_s: 0.3,
+            packed_rps: 300.0,
+            unpacked_rps: 200.0,
+        }];
+        let rtl = vec![RtlPoint {
+            n: 8,
+            engine: "rtl",
+            native_cut: 11,
+            rtl_cut: 10,
+            native_energy: -7.0,
+            rtl_energy: -6.0,
+            quantization_error: 0.0,
+            periods: 16,
+            fast_cycles: 7_168,
+            f_logic_mhz: 99.0,
+            emulated_s: 7.2e-5,
+            host_s: 0.01,
+        }];
+        let doc = bench_json(&pts, &packed, &rtl, 42);
+        let s = solver_bench_report(&doc);
+        assert!(s.contains("Solver throughput"), "{s}");
+        assert!(s.contains("Packed serving"), "{s}");
+        assert!(s.contains("bit-true RTL"), "{s}");
+        assert!(s.contains("native"), "{s}");
+        // Unrelated documents degrade gracefully instead of panicking.
+        let s = solver_bench_report(&Json::obj(vec![("x", Json::num(1.0))]));
+        assert!(s.contains("no recognizable sections"), "{s}");
     }
 
     #[test]

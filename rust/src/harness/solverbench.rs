@@ -222,6 +222,85 @@ pub fn throughput_sweep(
     points
 }
 
+/// One float-native vs bit-true-RTL head-to-head row: the same max-cut
+/// instance solved on both fabrics at equal params/seed.  The fabrics
+/// run *different dynamics* (the rtl engine is the cycle-accurate
+/// serial-MAC hardware model), so the row compares solution quality —
+/// and prices the hardware run in emulated fast-clock time-to-solution
+/// next to the host-simulation wall time.
+#[derive(Debug, Clone)]
+pub struct RtlPoint {
+    pub n: usize,
+    /// Always "rtl" — the row's engine tag (and the CI gate's key).
+    pub engine: &'static str,
+    pub native_cut: i64,
+    pub rtl_cut: i64,
+    pub native_energy: f64,
+    pub rtl_energy: f64,
+    /// RMS coupling rounding loss of the quantized embedding.
+    pub quantization_error: f64,
+    /// Periods the rtl portfolio drove (early exits included).
+    pub periods: usize,
+    /// Emulated fast-clock cycles of the rtl solve (lanes serialized).
+    pub fast_cycles: u64,
+    /// Modeled logic frequency of the synthesized design (MHz).
+    pub f_logic_mhz: f64,
+    /// Emulated hardware time-to-solution in seconds.
+    pub emulated_s: f64,
+    /// Host wall-clock seconds the cycle-accurate simulation took.
+    pub host_s: f64,
+}
+
+/// Solve one max-cut instance per size on the float-native engine and
+/// on the bit-true rtl engine at identical params/seed, and price the
+/// hardware run (`solve-bench --rtl`).
+pub fn rtl_comparison(
+    sizes: &[usize],
+    replicas: usize,
+    periods: usize,
+    seed: u64,
+) -> Vec<RtlPoint> {
+    let mut points = Vec::with_capacity(sizes.len());
+    for &n in sizes {
+        let mut rng = Rng::new(seed.wrapping_add(n as u64));
+        let g = Graph::random(n, (8.0 / n as f64).min(0.5), &mut rng);
+        let problem = max_cut(&g);
+        let params = PortfolioParams {
+            replicas,
+            max_periods: periods,
+            schedule: Schedule::Geometric {
+                start: 0.5,
+                factor: 0.8,
+            },
+            seed,
+            ..Default::default()
+        };
+        let native = solve_with(&problem, &params, EngineSelect::Native).expect("native solve");
+        let t0 = Instant::now();
+        let rtl = solve_with(&problem, &params, EngineSelect::Rtl).expect("rtl solve");
+        let host_s = t0.elapsed().as_secs_f64();
+        let hw = rtl
+            .hardware
+            .clone()
+            .expect("rtl outcomes report hardware cost");
+        points.push(RtlPoint {
+            n,
+            engine: "rtl",
+            native_cut: g.cut_value(&native.best_spins),
+            rtl_cut: g.cut_value(&rtl.best_spins),
+            native_energy: native.best_energy,
+            rtl_energy: rtl.best_energy,
+            quantization_error: rtl.quantization_error,
+            periods: rtl.periods,
+            fast_cycles: hw.fast_cycles,
+            f_logic_mhz: hw.f_logic_mhz,
+            emulated_s: hw.emulated_s,
+            host_s,
+        });
+    }
+    points
+}
+
 /// One packed-vs-unpacked serving measurement: a mix of small
 /// max-cut/coloring instances solved once through a shared lane-block
 /// engine (`solve_packed`) and once one-engine-per-request — identical
@@ -319,10 +398,12 @@ pub fn packed_throughput(
 /// Serialize a throughput sweep as the `BENCH_solver.json` document.
 /// Each point carries its engine label, so native and sharded rows for
 /// the same sizes live side by side in one trajectory file; packed
-/// rows (one per measured mix) sit alongside under `"packed"`.
+/// rows (one per measured mix) sit alongside under `"packed"`, and
+/// float-vs-bit-true hardware rows under `"rtl"`.
 pub fn bench_json(
     points: &[ThroughputPoint],
     packed: &[PackedPoint],
+    rtl: &[RtlPoint],
     recorded_unix_s: u64,
 ) -> Json {
     let mut engines: Vec<&'static str> = Vec::new();
@@ -384,6 +465,29 @@ pub fn bench_json(
                     .collect(),
             ),
         ),
+        (
+            "rtl",
+            Json::Arr(
+                rtl.iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("engine", Json::str(p.engine)),
+                            ("n", Json::num(p.n as f64)),
+                            ("native_cut", Json::num(p.native_cut as f64)),
+                            ("rtl_cut", Json::num(p.rtl_cut as f64)),
+                            ("native_energy", Json::num(p.native_energy)),
+                            ("rtl_energy", Json::num(p.rtl_energy)),
+                            ("quantization_error", Json::num(p.quantization_error)),
+                            ("periods", Json::num(p.periods as f64)),
+                            ("fast_cycles", Json::num(p.fast_cycles as f64)),
+                            ("f_logic_mhz", Json::num(p.f_logic_mhz)),
+                            ("emulated_s", Json::num(p.emulated_s)),
+                            ("host_s", Json::num(p.host_s)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
     ])
 }
 
@@ -393,7 +497,9 @@ pub fn bench_json(
 /// replica-periods/sec vs N), plus — when `packed_problems >= 2` — one
 /// packed row comparing a `packed_problems`-instance mix through a
 /// shared lane-block engine against the one-engine-per-request
-/// baseline.
+/// baseline, plus — when `rtl` — one float-vs-bit-true row per size
+/// (solution quality + emulated hardware time-to-solution).
+#[allow(clippy::too_many_arguments)]
 pub fn record_throughput(
     path: &std::path::Path,
     sizes: &[usize],
@@ -402,7 +508,8 @@ pub fn record_throughput(
     seed: u64,
     shards: usize,
     packed_problems: usize,
-) -> std::io::Result<(Vec<ThroughputPoint>, Vec<PackedPoint>)> {
+    rtl: bool,
+) -> std::io::Result<(Vec<ThroughputPoint>, Vec<PackedPoint>, Vec<RtlPoint>)> {
     let t0 = Instant::now();
     let mut points = throughput_sweep(sizes, replicas, periods, seed, 1);
     if shards >= 2 {
@@ -412,20 +519,26 @@ pub fn record_throughput(
     if packed_problems >= 2 {
         packed.push(packed_throughput(packed_problems, replicas, periods, seed));
     }
+    let rtl_points = if rtl {
+        rtl_comparison(sizes, replicas, periods, seed)
+    } else {
+        Vec::new()
+    };
     let stamp = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_secs())
         .unwrap_or(0);
-    let doc = bench_json(&points, &packed, stamp);
+    let doc = bench_json(&points, &packed, &rtl_points, stamp);
     std::fs::write(path, format!("{doc}\n"))?;
     eprintln!(
-        "wrote {} ({} rows + {} packed in {:.1}s)",
+        "wrote {} ({} rows + {} packed + {} rtl in {:.1}s)",
         path.display(),
         points.len(),
         packed.len(),
+        rtl_points.len(),
         t0.elapsed().as_secs_f64()
     );
-    Ok((points, packed))
+    Ok((points, packed, rtl_points))
 }
 
 #[cfg(test)]
@@ -499,7 +612,21 @@ mod tests {
             packed_rps: 320.0,
             unpacked_rps: 213.0,
         }];
-        let doc = bench_json(&pts, &packed, 123);
+        let rtl = vec![RtlPoint {
+            n: 8,
+            engine: "rtl",
+            native_cut: 11,
+            rtl_cut: 11,
+            native_energy: -7.0,
+            rtl_energy: -7.0,
+            quantization_error: 0.01,
+            periods: 64,
+            fast_cycles: 14_336,
+            f_logic_mhz: 100.0,
+            emulated_s: 1.4e-4,
+            host_s: 0.02,
+        }];
+        let doc = bench_json(&pts, &packed, &rtl, 123);
         let parsed = Json::parse(&doc.to_string()).unwrap();
         assert_eq!(
             parsed.get("bench").and_then(Json::as_str),
@@ -521,6 +648,33 @@ mod tests {
             prow.get("unpacked_replica_periods_per_sec").and_then(Json::as_f64),
             Some(213.0)
         );
+        let rrow = &parsed.get("rtl").and_then(Json::as_arr).unwrap()[0];
+        assert_eq!(rrow.get("engine").and_then(Json::as_str), Some("rtl"));
+        assert_eq!(rrow.get("rtl_cut").and_then(Json::as_usize), Some(11));
+        assert_eq!(rrow.get("fast_cycles").and_then(Json::as_usize), Some(14_336));
+        assert!(
+            doc.to_string().contains("\"engine\":\"rtl\""),
+            "the CI gate greps for this literal"
+        );
+    }
+
+    #[test]
+    fn rtl_rows_price_the_hardware_run() {
+        let pts = rtl_comparison(&[8], 2, 16, 5);
+        assert_eq!(pts.len(), 1);
+        let p = &pts[0];
+        assert_eq!(p.engine, "rtl");
+        assert!(p.periods > 0 && p.periods <= 16);
+        // 2 replica lanes serialized, 16 ticks per period, n + 6 fast
+        // cycles per tick.
+        assert_eq!(
+            p.fast_cycles,
+            (2 * p.periods * 16 * (8 + 6)) as u64,
+            "fast-cycle meter disagrees with the serialization model"
+        );
+        assert!(p.emulated_s > 0.0 && p.f_logic_mhz > 0.0);
+        assert!(p.native_cut > 0 && p.rtl_cut > 0);
+        assert_eq!(p.quantization_error, 0.0, "±1 max-cut couplings are exact");
     }
 
     #[test]

@@ -16,9 +16,11 @@
 //!   MAC per oscillator, near-linear hardware).
 //! * [`fpga`] — the Zynq-7020 resource/timing model and the log-log
 //!   regression used for the paper's scaling figures.
-//! * [`runtime`] — the PJRT execution engine that loads the HLO-text
-//!   artifacts produced by `python/compile/aot.py` (plus a native
-//!   fallback implementing the same trait).
+//! * [`runtime`] — the engines behind one batched chunk contract: the
+//!   PJRT executor for the HLO-text artifacts of
+//!   `python/compile/aot.py`, the bit-exact native fallback, the
+//!   row-sharded multi-device cluster, and the bit-true
+//!   emulated-hardware engine over the RTL hybrid datapath.
 //! * [`coordinator`] — the retrieval service: request router, dynamic
 //!   batcher and worker pool feeding the engines.
 //! * [`harness`] — drivers that regenerate every table and figure of the

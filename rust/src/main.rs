@@ -40,14 +40,22 @@ Solver (generic Ising/QUBO subsystem, see DESIGN_SOLVER.md):
         [--schedule geometric|linear|constant] [--noise 0.6] [--seed S]
         [--shards K]      K=0 auto-selects by size; K>1 forces the
                           sharded multi-device engine (bit-exact)
+        [--rtl]           run on the bit-true emulated-hardware engine
+                          (cycle-accurate serial MACs; reports the
+                          emulated fast-cycle cost)
   solve-bench [--sizes 16,32,64,128] [--replicas 32] [--periods 128]
-        [--instances 5] [--shards K] [--packed [N]]
+        [--instances 5] [--shards K] [--packed [N]] [--rtl]
         [--out BENCH_solver.json]
                           quality vs SA + native (and, with --shards,
                           sharded) throughput rows; --packed adds an
                           N-instance (default 6) small-mix row comparing
                           the shared lane-block engine against
-                          one-engine-per-request serving
+                          one-engine-per-request serving; --rtl adds
+                          float-native vs bit-true rows (quality +
+                          emulated time-to-solution)
+  solve-report [--path BENCH_solver.json]
+                          render the recorded solver trajectory next to
+                          the paper tables
 
 Ablations (DESIGN.md design choices):
   ablation [--trials 50]                precision vs capacity/accuracy
@@ -117,6 +125,7 @@ fn run() -> Result<()> {
         "coloring" => cmd_coloring(&mut args),
         "solve" => cmd_solve(&mut args),
         "solve-bench" => cmd_solve_bench(&mut args),
+        "solve-report" => cmd_solve_report(&mut args),
         "serve" => cmd_serve(&mut args),
         "crosscheck" => cmd_crosscheck(&mut args),
         "ablation" => cmd_ablation(&mut args),
@@ -277,16 +286,26 @@ fn cmd_solve(args: &mut Args) -> Result<()> {
     let noise = args.get_f64("noise", 0.6)?;
     let seed = args.get_u64("seed", 7)?;
     let shards = args.get_usize("shards", 0)?;
+    let rtl = args.has("rtl");
     args.finish().map_err(|e| anyhow!(e))?;
 
     let schedule = Schedule::parse(&schedule_name, noise)
         .ok_or_else(|| anyhow!("--schedule must be geometric|linear|constant"))?;
     // 0 = size-based auto-selection; 1 = force native; K > 1 = force a
-    // K-shard cluster.  Either way the answer is bit-identical.
-    let select = match shards {
-        0 => EngineSelect::default(),
-        1 => EngineSelect::Native,
-        k => EngineSelect::Sharded { shards: k },
+    // K-shard cluster (bit-identical either way).  --rtl instead runs
+    // the bit-true emulated-hardware engine; any explicit --shards
+    // (native included) contradicts it.
+    if rtl && shards != 0 {
+        return Err(anyhow!("--rtl and --shards are mutually exclusive"));
+    }
+    let select = if rtl {
+        EngineSelect::Rtl
+    } else {
+        match shards {
+            0 => EngineSelect::default(),
+            1 => EngineSelect::Native,
+            k => EngineSelect::Sharded { shards: k },
+        }
     };
     let params = PortfolioParams {
         replicas,
@@ -294,6 +313,17 @@ fn cmd_solve(args: &mut Args) -> Result<()> {
         schedule,
         seed,
         ..Default::default()
+    };
+    // Emulated-hardware cost line for rtl solves (silent elsewhere).
+    let print_hardware = |out: &onn_scale::solver::portfolio::SolveOutcome| {
+        if let Some(hw) = &out.hardware {
+            println!(
+                "emulated hardware: {} fast cycles @ {:.1} MHz -> {:.3e} s \
+                 (fits device: {}, quantization error {:.4})",
+                hw.fast_cycles, hw.f_logic_mhz, hw.emulated_s, hw.fits_device,
+                out.quantization_error
+            );
+        }
     };
     let mut rng = Rng::new(seed);
     match problem_kind.as_str() {
@@ -316,6 +346,7 @@ fn cmd_solve(args: &mut Args) -> Result<()> {
             );
             println!("SA baseline   cut = {sa_cut:>6}   ({sweeps} sweeps, equal spin updates)");
             println!("ratio ONN/SA = {:.3}", cut as f64 / sa_cut.max(1) as f64);
+            print_hardware(&out);
         }
         "coloring" => {
             use onn_scale::apps::coloring::{conflicts, solve_greedy, solve_onn_with};
@@ -345,6 +376,7 @@ fn cmd_solve(args: &mut Args) -> Result<()> {
                 "ONN portfolio imbalance = {imbalance}   ({} engine, {} sync rounds)",
                 out.engine, out.sync_rounds
             );
+            print_hardware(&out);
         }
         "cover" => {
             let g = Graph::random(nodes, prob, &mut rng);
@@ -362,6 +394,7 @@ fn cmd_solve(args: &mut Args) -> Result<()> {
                 "greedy cover size = {}",
                 reductions::cover_size(&greedy)
             );
+            print_hardware(&out);
         }
         other => {
             return Err(anyhow!(
@@ -389,6 +422,7 @@ fn cmd_solve_bench(args: &mut Args) -> Result<()> {
     } else {
         0
     };
+    let rtl = args.has("rtl");
     let out_path = args.get_str("out", "BENCH_solver.json");
     let seed = args.get_u64("seed", 2025)?;
     args.finish().map_err(|e| anyhow!(e))?;
@@ -401,7 +435,7 @@ fn cmd_solve_bench(args: &mut Args) -> Result<()> {
     let report = solverbench::quality_vs_sa(64, 0.1, instances, replicas, periods, seed);
     println!("{}", report.table());
 
-    let (points, packed) = solverbench::record_throughput(
+    let (points, packed, rtl_points) = solverbench::record_throughput(
         std::path::Path::new(&out_path),
         &sizes,
         replicas,
@@ -409,6 +443,7 @@ fn cmd_solve_bench(args: &mut Args) -> Result<()> {
         seed,
         shards,
         packed_problems,
+        rtl,
     )?;
     println!("solver throughput (native vs sharded replica-periods/sec):");
     for p in &points {
@@ -432,6 +467,37 @@ fn cmd_solve_bench(args: &mut Args) -> Result<()> {
             p.unpacked_rps, p.unpacked_median_s
         );
     }
+    if !rtl_points.is_empty() {
+        println!("float-native vs bit-true rtl (quality + emulated time-to-solution):");
+        for p in &rtl_points {
+            println!(
+                "  n={:<5} cut {:>5} vs {:>5} (native/rtl)  quant err {:.4}  \
+                 {} fast cycles @ {:.1} MHz -> {:.3e} s emulated ({:.3} s host sim)",
+                p.n,
+                p.native_cut,
+                p.rtl_cut,
+                p.quantization_error,
+                p.fast_cycles,
+                p.f_logic_mhz,
+                p.emulated_s,
+                p.host_s
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Render the recorded `BENCH_solver.json` trajectory next to the paper
+/// tables (the harness/report wiring of the solver-path benchmarks).
+fn cmd_solve_report(args: &mut Args) -> Result<()> {
+    use onn_scale::util::json::Json;
+
+    let path = args.get_str("path", "BENCH_solver.json");
+    args.finish().map_err(|e| anyhow!(e))?;
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| anyhow!("cannot read {path}: {e} (run solve-bench first)"))?;
+    let doc = Json::parse(&text).map_err(|e| anyhow!("bad JSON in {path}: {e}"))?;
+    println!("{}", report::solver_bench_report(&doc));
     Ok(())
 }
 

@@ -57,6 +57,16 @@ impl WeightMatrix {
     /// the largest magnitude maps to the positive limit (the symmetric
     /// scheme used when programming the FPGA weight memories).
     pub fn quantize(master: &[f32], n: usize, cfg: &NetworkConfig) -> Self {
+        Self::quantize_with_error(master, n, cfg).0
+    }
+
+    /// [`Self::quantize`] plus the rounding loss it introduced: the RMS
+    /// deviation between the scaled master and the quantized entries, as
+    /// a fraction of the positive quantization limit (so 0 means the
+    /// couplings were representable exactly; pure rounding is bounded by
+    /// `0.5 / hi`).  The solver reports this per solve — the precision
+    /// cost of running on the bit-true hardware fabric.
+    pub fn quantize_with_error(master: &[f32], n: usize, cfg: &NetworkConfig) -> (Self, f64) {
         assert_eq!(master.len(), n * n);
         let (lo, hi) = cfg.weight_range();
         let max_abs = master.iter().fold(0f32, |m, x| m.max(x.abs()));
@@ -65,14 +75,22 @@ impl WeightMatrix {
         } else {
             0.0
         };
-        let w = master
+        let mut sq = 0f64;
+        let w: Vec<i8> = master
             .iter()
             .map(|&x| {
-                let q = (x * scale).round() as i32;
-                q.clamp(lo, hi) as i8
+                let q = ((x * scale).round() as i32).clamp(lo, hi);
+                let err = q as f64 - (x * scale) as f64;
+                sq += err * err;
+                q as i8
             })
             .collect();
-        Self { n, w }
+        let rms = if n > 0 && hi > 0 {
+            (sq / (n * n) as f64).sqrt() / hi as f64
+        } else {
+            0.0
+        };
+        (Self { n, w }, rms)
     }
 
     /// True when W[i][j] == W[j][i] for all pairs.
@@ -118,6 +136,20 @@ mod tests {
         assert_eq!(w.get(1, 0), -15); // -max -> -15 (symmetric scale)
         assert_eq!(w.get(1, 1), 8); // 0.5 -> round(7.5) = 8
         assert_eq!(w.get(0, 0), 0);
+    }
+
+    #[test]
+    fn quantize_with_error_reports_rounding_loss() {
+        let (w, err) = WeightMatrix::quantize_with_error(&[0.0, 1.0, -1.0, 0.5], 2, &cfg(2));
+        assert_eq!(w.get(1, 1), 8);
+        // Only 0.5 rounds (7.5 -> 8): RMS = sqrt(0.25 / 4) over 15.
+        let want = (0.25f64 / 4.0).sqrt() / 15.0;
+        assert!((err - want).abs() < 1e-9, "err = {err}, want {want}");
+        // Exactly representable matrices report zero loss.
+        let (_, exact) = WeightMatrix::quantize_with_error(&[0.0, 1.0, -1.0, 0.0], 2, &cfg(2));
+        assert_eq!(exact, 0.0);
+        let (_, zeros) = WeightMatrix::quantize_with_error(&[0.0; 4], 2, &cfg(2));
+        assert_eq!(zeros, 0.0);
     }
 
     #[test]

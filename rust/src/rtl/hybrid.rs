@@ -20,13 +20,23 @@
 //! [`HybridOnn::with_stale_enable`] models that mis-synchronization: the
 //! enable fires one slow tick early, so sums lag the amplitudes by one
 //! tick and the reference waveforms shift accordingly.
+//!
+//! Since the solver-engine refactor the simulator is a **resumable
+//! chunked stepper with a batch-lane dimension**: one `HybridOnn` holds
+//! any number of independent register-state lanes sharing the weight
+//! memory (the way one synthesized core is re-run per anneal replica),
+//! each steppable period by period with settle tracking that survives
+//! chunk boundaries ([`HybridOnn::step_lane_period`]).  The classic
+//! run-to-completion interface ([`RtlSim`], lane 0) is unchanged and
+//! tick-for-tick identical — `rust/tests/prop_rtl.rs` holds that proof
+//! obligation against the untouched recurrent simulator.
 
 use crate::onn::config::NetworkConfig;
 use crate::onn::phase::wrap;
 use crate::onn::weights::WeightMatrix;
 use crate::rtl::edge::{PhaseLagCounter, RisingEdge};
 use crate::rtl::oscillator::ShiftRegOscillator;
-use crate::rtl::RtlSim;
+use crate::rtl::{relative_phases, RtlSim};
 
 /// Fast-clock cycles of pipeline/synchronization overhead per serial
 /// sum, on top of the N accumulation cycles.  Chosen so the paper's
@@ -86,10 +96,11 @@ impl SerialMac {
     }
 }
 
+/// Register state of one lane: everything a synthesized hybrid core
+/// holds besides the (shared) weight memory.  One lane per concurrent
+/// anneal replica; lanes are fully independent.
 #[derive(Debug, Clone)]
-pub struct HybridOnn {
-    cfg: NetworkConfig,
-    w: WeightMatrix,
+struct LaneState {
     osc: Vec<ShiftRegOscillator>,
     phases: Vec<i32>,
     ref_edge: Vec<RisingEdge>,
@@ -99,20 +110,22 @@ pub struct HybridOnn {
     /// Result of the most recent completed serial accumulation.
     sums: Vec<i32>,
     sums_primed: bool,
-    /// Mis-synchronized enable: sums lag the amplitudes by one tick.
-    stale_enable: bool,
     amps: Vec<i32>,
     pending: Vec<Option<i32>>,
+    /// Whole periods stepped since the last phase (re)program — the
+    /// resumable analog of the run-to-completion loop counter (period 0
+    /// is edge-detector warm-up and never counts as settled).
+    periods_done: usize,
+    /// Relative phases after the previous period (settle comparand),
+    /// carried across chunk boundaries.
+    prev_rel: Vec<i32>,
 }
 
-impl HybridOnn {
-    pub fn new(cfg: NetworkConfig, w: WeightMatrix) -> Self {
-        assert_eq!(cfg.n, w.n);
+impl LaneState {
+    fn new(cfg: &NetworkConfig) -> Self {
         let n = cfg.n;
         let p = cfg.period();
         Self {
-            cfg,
-            w,
             osc: vec![ShiftRegOscillator::new(p); n],
             phases: vec![0; n],
             ref_edge: vec![RisingEdge::new(); n],
@@ -121,45 +134,22 @@ impl HybridOnn {
             macs: vec![SerialMac::default(); n],
             sums: vec![0; n],
             sums_primed: false,
-            stale_enable: false,
             amps: vec![0; n],
             pending: vec![None; n],
+            periods_done: 0,
+            prev_rel: vec![0; n],
         }
     }
 
-    /// Variant with the computation-enable mis-synchronized by one slow
-    /// tick (see module docs): reproduces the paper's small-network
-    /// divergence and run-to-run variance.
-    pub fn with_stale_enable(cfg: NetworkConfig, w: WeightMatrix) -> Self {
-        let mut s = Self::new(cfg, w);
-        s.stale_enable = true;
-        s
-    }
-
-    pub fn weights(&self) -> &WeightMatrix {
-        &self.w
-    }
-
-    /// Fast-clock cycles each phase update costs: the serialization
-    /// factor of the slow clock domain (paper section 3).
-    pub fn fast_cycles_per_update(&self) -> usize {
-        self.cfg.n + SYNC_OVERHEAD_CYCLES
-    }
-
-    /// Total fast cycles burned so far across all MACs.
-    pub fn total_fast_cycles(&self) -> u64 {
-        self.macs.iter().map(|m| m.fast_cycles).sum()
-    }
-
-    fn serial_sums_from(&mut self, amps_snapshot: &[i32]) {
-        let n = self.cfg.n;
-        for i in 0..n {
-            self.sums[i] = self.macs[i].run(self.w.row(i), amps_snapshot);
-        }
-    }
-
-    fn reset_state(&mut self) {
-        let p = self.cfg.period();
+    /// Load phases (mux selects) and reset every register to power-on
+    /// state — a fresh run.  MAC cycle counters deliberately survive:
+    /// they meter total emulated hardware work across runs.
+    fn program(&mut self, cfg: &NetworkConfig, phases: &[i32]) {
+        assert_eq!(phases.len(), cfg.n);
+        let p = cfg.period();
+        let pi = p as i32;
+        self.phases.clear();
+        self.phases.extend(phases.iter().map(|&x| wrap(x, pi)));
         for o in self.osc.iter_mut() {
             *o = ShiftRegOscillator::new(p);
         }
@@ -170,30 +160,26 @@ impl HybridOnn {
             *e = RisingEdge::new();
         }
         for l in self.lag.iter_mut() {
-            *l = PhaseLagCounter::new(p as i32);
+            *l = PhaseLagCounter::new(pi);
+        }
+        for pd in self.pending.iter_mut() {
+            *pd = None;
         }
         self.sums_primed = false;
-    }
-}
-
-impl RtlSim for HybridOnn {
-    fn config(&self) -> &NetworkConfig {
-        &self.cfg
+        self.periods_done = 0;
+        self.prev_rel = relative_phases(&self.phases, pi);
     }
 
-    fn set_phases(&mut self, phases: &[i32]) {
-        assert_eq!(phases.len(), self.cfg.n);
-        let p = self.cfg.period() as i32;
-        self.phases = phases.iter().map(|&x| wrap(x, p)).collect();
-        self.reset_state();
+    fn serial_sums_from(&mut self, w: &WeightMatrix, amps_snapshot: &[i32]) {
+        for (i, mac) in self.macs.iter_mut().enumerate() {
+            self.sums[i] = mac.run(w.row(i), amps_snapshot);
+        }
     }
 
-    fn phases(&self) -> &[i32] {
-        &self.phases
-    }
-
-    fn tick(&mut self) {
-        let n = self.cfg.n;
+    /// One phase-update clock tick (the old monolithic simulator's
+    /// `tick`, verbatim, against this lane's registers).
+    fn tick(&mut self, cfg: &NetworkConfig, w: &WeightMatrix, stale_enable: bool) {
+        let n = cfg.n;
 
         for j in 0..n {
             self.amps[j] = self.osc[j].amplitude(self.phases[j]);
@@ -205,15 +191,15 @@ impl RtlSim for HybridOnn {
         // amplitudes — the same values RA's combinational tree sees.
         // With the enable mis-synchronized (stale_enable) the result
         // still reflects the *previous* cycle when this one begins.
-        if self.stale_enable {
+        if stale_enable {
             if !self.sums_primed {
                 let snapshot = self.amps.clone();
-                self.serial_sums_from(&snapshot);
+                self.serial_sums_from(w, &snapshot);
                 self.sums_primed = true;
             }
         } else {
             let snapshot = self.amps.clone();
-            self.serial_sums_from(&snapshot);
+            self.serial_sums_from(w, &snapshot);
             self.sums_primed = true;
         }
 
@@ -236,20 +222,170 @@ impl RtlSim for HybridOnn {
 
         // Mis-synchronized enable: the computation kicked off now (from
         // this cycle's amplitudes) is only consumed next cycle.
-        if self.stale_enable {
+        if stale_enable {
             let snapshot = self.amps.clone();
-            self.serial_sums_from(&snapshot);
+            self.serial_sums_from(w, &snapshot);
         }
 
         for o in self.osc.iter_mut() {
             o.tick();
         }
-        let p = self.cfg.period() as i32;
+        let p = cfg.period() as i32;
         for i in 0..n {
             if let Some(d) = self.pending[i].take() {
                 self.phases[i] = wrap(self.phases[i] + d, p);
             }
         }
+    }
+
+    /// Advance one whole oscillation period (P ticks) and update the
+    /// chunk-spanning settle tracker.  Returns true when this period's
+    /// relative phases reproduced the previous period's — the same
+    /// criterion, warm-up rule included, as the run-to-completion
+    /// `RtlSim::run_to_settle`.
+    fn step_period(&mut self, cfg: &NetworkConfig, w: &WeightMatrix, stale_enable: bool) -> bool {
+        for _ in 0..cfg.period() {
+            self.tick(cfg, w, stale_enable);
+        }
+        let rel = relative_phases(&self.phases, cfg.period() as i32);
+        let settled = self.periods_done >= 1 && rel == self.prev_rel;
+        self.prev_rel = rel;
+        self.periods_done += 1;
+        settled
+    }
+}
+
+/// The multi-lane hybrid-architecture simulator.  [`RtlSim`] (the
+/// classic single-trial interface) drives lane 0; the lane API carries
+/// the batch dimension of the solver engine (`runtime::rtl`).
+#[derive(Debug, Clone)]
+pub struct HybridOnn {
+    cfg: NetworkConfig,
+    w: WeightMatrix,
+    /// Mis-synchronized enable: sums lag the amplitudes by one tick.
+    stale_enable: bool,
+    lanes: Vec<LaneState>,
+}
+
+impl HybridOnn {
+    pub fn new(cfg: NetworkConfig, w: WeightMatrix) -> Self {
+        Self::with_lanes(cfg, w, 1)
+    }
+
+    /// A simulator with `lanes` independent register-state lanes sharing
+    /// one weight memory — the batch dimension of the RTL solver engine.
+    pub fn with_lanes(cfg: NetworkConfig, w: WeightMatrix, lanes: usize) -> Self {
+        assert_eq!(cfg.n, w.n);
+        assert!(lanes >= 1, "a simulator needs at least one lane");
+        Self {
+            cfg,
+            w,
+            stale_enable: false,
+            lanes: (0..lanes).map(|_| LaneState::new(&cfg)).collect(),
+        }
+    }
+
+    /// Variant with the computation-enable mis-synchronized by one slow
+    /// tick (see module docs): reproduces the paper's small-network
+    /// divergence and run-to-run variance.
+    pub fn with_stale_enable(cfg: NetworkConfig, w: WeightMatrix) -> Self {
+        let mut s = Self::new(cfg, w);
+        s.stale_enable = true;
+        s
+    }
+
+    pub fn weights(&self) -> &WeightMatrix {
+        &self.w
+    }
+
+    /// Number of independent register-state lanes.
+    pub fn lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Fast-clock cycles each phase update costs: the serialization
+    /// factor of the slow clock domain (paper section 3).
+    pub fn fast_cycles_per_update(&self) -> usize {
+        self.cfg.n + SYNC_OVERHEAD_CYCLES
+    }
+
+    /// Total fast cycles burned so far across all MACs of all lanes.
+    pub fn total_fast_cycles(&self) -> u64 {
+        self.lanes
+            .iter()
+            .flat_map(|l| l.macs.iter())
+            .map(|m| m.fast_cycles)
+            .sum()
+    }
+
+    /// Emulated wall-clock fast cycles of one lane: its N MACs run in
+    /// parallel in hardware (one per oscillator), so the lane's elapsed
+    /// fast-clock time is any single MAC's cycle count.
+    pub fn lane_fast_cycles(&self, lane: usize) -> u64 {
+        self.lanes[lane].macs.first().map_or(0, |m| m.fast_cycles)
+    }
+
+    /// Program a lane's phases and reset its registers — a fresh run on
+    /// that lane.  Other lanes are untouched.
+    pub fn set_lane_phases(&mut self, lane: usize, phases: &[i32]) {
+        let cfg = self.cfg;
+        self.lanes[lane].program(&cfg, phases);
+    }
+
+    pub fn lane_phases(&self, lane: usize) -> &[i32] {
+        &self.lanes[lane].phases
+    }
+
+    /// Advance one phase-update clock tick on one lane.
+    pub fn tick_lane(&mut self, lane: usize) {
+        let cfg = self.cfg;
+        let stale = self.stale_enable;
+        // Split the borrow: the lane is mutated, the weights only read.
+        let (w, lanes) = (&self.w, &mut self.lanes);
+        lanes[lane].tick(&cfg, w, stale);
+    }
+
+    /// Advance one lane by one whole period (P ticks); true when the
+    /// lane's relative phases reproduced the previous period's (the
+    /// resumable settle criterion — see `RtlSim::run_to_settle`).
+    pub fn step_lane_period(&mut self, lane: usize) -> bool {
+        let cfg = self.cfg;
+        let stale = self.stale_enable;
+        let (w, lanes) = (&self.w, &mut self.lanes);
+        lanes[lane].step_period(&cfg, w, stale)
+    }
+
+    /// Apply an in-place phase perturbation to one lane *without*
+    /// resetting its registers — the injected annealing kick of the
+    /// solver engine: the update circuit rewrites the mux selects while
+    /// shift registers, edge detectors and counters keep running.  The
+    /// settle comparand is rebased on the kicked state so the next
+    /// period is judged against what the hardware actually holds.
+    pub fn kick_lane_phases(&mut self, lane: usize, mut kick: impl FnMut(usize, i32) -> i32) {
+        let p = self.cfg.period() as i32;
+        let l = &mut self.lanes[lane];
+        for (i, phi) in l.phases.iter_mut().enumerate() {
+            *phi = wrap(kick(i, *phi), p);
+        }
+        l.prev_rel = relative_phases(&l.phases, p);
+    }
+}
+
+impl RtlSim for HybridOnn {
+    fn config(&self) -> &NetworkConfig {
+        &self.cfg
+    }
+
+    fn set_phases(&mut self, phases: &[i32]) {
+        self.set_lane_phases(0, phases);
+    }
+
+    fn phases(&self) -> &[i32] {
+        self.lane_phases(0)
+    }
+
+    fn tick(&mut self) {
+        self.tick_lane(0);
     }
 }
 
@@ -415,5 +551,84 @@ mod tests {
             (ok_ra - ok_ha).abs() <= trials as i32 / 5,
             "architectures diverged: RA {ok_ra} vs HA {ok_ha} of {trials}"
         );
+    }
+
+    #[test]
+    fn lanes_are_independent_and_match_solo_runs() {
+        // Every lane of a 3-lane simulator must reproduce the trajectory
+        // of a dedicated single-lane simulator started from its init.
+        let mut rng = Rng::new(321);
+        let n = 5;
+        let mut w = WeightMatrix::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                w.set(i, j, rng.range_i64(-8, 9) as i8);
+            }
+        }
+        let inits: Vec<Vec<i32>> = (0..3)
+            .map(|_| (0..n).map(|_| rng.range_i64(0, 16) as i32).collect())
+            .collect();
+        let mut multi = HybridOnn::with_lanes(cfg(n), w.clone(), 3);
+        for (lane, init) in inits.iter().enumerate() {
+            multi.set_lane_phases(lane, init);
+        }
+        for period in 0..12 {
+            // Interleave lane stepping to prove independence.
+            for lane in [2usize, 0, 1] {
+                multi.step_lane_period(lane);
+            }
+            for (lane, init) in inits.iter().enumerate() {
+                let mut solo = HybridOnn::new(cfg(n), w.clone());
+                solo.set_phases(init);
+                for _ in 0..(period + 1) * 16 {
+                    solo.tick();
+                }
+                assert_eq!(
+                    multi.lane_phases(lane),
+                    solo.phases(),
+                    "lane {lane} diverged at period {period}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn step_lane_period_settles_like_run_to_settle() {
+        // The resumable per-period settle tracker must fire at exactly
+        // the period index the monolithic run_to_settle reports.
+        let mut w = WeightMatrix::zeros(2);
+        w.set(1, 0, 8);
+        let mut oracle = HybridOnn::new(cfg(2), w.clone());
+        oracle.set_phases(&[4, 11]);
+        let out = oracle.run_to_settle(20);
+        let want = out.settled.expect("pinned leader settles");
+
+        let mut sim = HybridOnn::new(cfg(2), w);
+        sim.set_lane_phases(0, &[4, 11]);
+        let mut got = None;
+        for period in 0..20 {
+            if sim.step_lane_period(0) {
+                got = Some(period);
+                break;
+            }
+        }
+        assert_eq!(got, Some(want));
+    }
+
+    #[test]
+    fn kick_preserves_register_state() {
+        // A kick rewrites mux selects only: zero weights then hold the
+        // kicked phases, and the MAC cycle meter keeps accumulating.
+        let n = 3;
+        let mut sim = HybridOnn::new(cfg(n), WeightMatrix::zeros(n));
+        sim.set_lane_phases(0, &[1, 5, 9]);
+        sim.step_lane_period(0);
+        let before = sim.lane_fast_cycles(0);
+        assert!(before > 0);
+        sim.kick_lane_phases(0, |i, phi| phi + 1 + i as i32);
+        assert_eq!(sim.lane_phases(0), &[2, 7, 12]);
+        sim.step_lane_period(0);
+        assert_eq!(sim.lane_phases(0), &[2, 7, 12], "zero weights must hold");
+        assert!(sim.lane_fast_cycles(0) > before);
     }
 }

@@ -23,6 +23,18 @@ pub mod trace;
 
 use crate::onn::config::NetworkConfig;
 
+/// Phases relative to oscillator 0, wrapped into `[0, P)` — the
+/// paper's readout ("measuring the final steady-state phases ... in
+/// relation to each other") and the quantity settling is judged on.
+/// One definition shared by the run-to-completion driver below and the
+/// resumable lane stepper (`hybrid::HybridOnn`), so the two settle
+/// paths — proven index-equal in `rust/tests/prop_rtl.rs` — can never
+/// drift apart.
+pub(crate) fn relative_phases(phases: &[i32], p: i32) -> Vec<i32> {
+    let r = *phases.first().unwrap_or(&0);
+    phases.iter().map(|&x| (x - r).rem_euclid(p)).collect()
+}
+
 /// Result of running an RTL simulation until the phases stop changing.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct RtlOutcome {
@@ -56,15 +68,9 @@ pub trait RtlSim {
     ///   uniform rotation of all phases — physically irrelevant, and
     ///   invisible to a relative-phase check.
     fn run_to_settle(&mut self, max_periods: usize) -> RtlOutcome {
-        let p = self.config().period() ;
+        let p = self.config().period();
         let pi = p as i32;
-        let relative = |phases: &[i32]| -> Vec<i32> {
-            let r = *phases.first().unwrap_or(&0);
-            phases
-                .iter()
-                .map(|&x| (x - r).rem_euclid(pi))
-                .collect()
-        };
+        let relative = |phases: &[i32]| relative_phases(phases, pi);
         let mut ticks = 0u64;
         let mut prev_raw = self.phases().to_vec();
         let mut prev_rel = relative(&prev_raw);

@@ -6,11 +6,16 @@
 //! engine ([`native::NativeEngine`]) implements the same [`ChunkEngine`]
 //! trait on top of `onn::dynamics` — bit-exact with the artifacts — and
 //! serves as the fallback when artifacts are absent plus as the
-//! cross-validation oracle in the integration tests.
+//! cross-validation oracle in the integration tests.  Two more fabrics
+//! implement the trait: the row-sharded multi-device cluster
+//! ([`sharded::ShardedEngine`], bit-exact with native) and the bit-true
+//! emulated-hardware engine ([`rtl::RtlEngine`]) that runs the paper's
+//! serial-MAC hybrid datapath cycle by cycle.
 
 pub mod artifact;
 pub mod engine;
 pub mod native;
+pub mod rtl;
 pub mod sharded;
 
 use anyhow::{anyhow, Result};
@@ -20,9 +25,11 @@ use crate::onn::weights::WeightMatrix;
 
 /// Validate an f32 weight payload (length n^2, integer-valued entries
 /// inside the config's signed range) and build the quantized matrix.
-/// The native and sharded engines both install weights through this one
-/// gate, so the two fabrics accept exactly the same matrices — part of
-/// their bit-exactness contract.
+/// The native, sharded, and rtl engines all install weights through
+/// this one gate, so every fabric accepts exactly the same matrices —
+/// part of the native/sharded bit-exactness contract, and what puts
+/// the rtl engine on the same quantized couplings a programmed FPGA
+/// would hold.
 pub(crate) fn checked_weights(cfg: &NetworkConfig, w_f32: &[f32]) -> Result<WeightMatrix> {
     let n = cfg.n;
     if w_f32.len() != n * n {
@@ -42,6 +49,31 @@ pub(crate) fn checked_weights(cfg: &NetworkConfig, w_f32: &[f32]) -> Result<Weig
     Ok(w)
 }
 
+/// Emulated hardware cost of a solve, as reported by an engine that
+/// models the synthesized design cycle by cycle ([`rtl::RtlEngine`]).
+/// Float fabrics report `None` from [`ChunkEngine::hardware_cost`] —
+/// they have no hardware to meter.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HardwareCost {
+    /// Fast-clock cycles the run consumed, batch lanes serialized onto
+    /// one device (each phase update costs N + sync-overhead cycles —
+    /// the serial-MAC trade-off of paper section 3).
+    pub fast_cycles: u64,
+    /// Modeled logic frequency of the synthesized design in MHz
+    /// (`fpga::timing::logic_frequency_hybrid`).
+    pub f_logic_mhz: f64,
+    /// Emulated wall-clock seconds: `fast_cycles / (f_logic_mhz * 1e6)`
+    /// — the hardware time-to-solution the benchmarks compare against
+    /// host-simulation time.
+    pub emulated_s: f64,
+    /// Whether the design fits the reference device (Zynq-7020) at this
+    /// network size (`fpga::resources::hybrid`).
+    pub fits_device: bool,
+    /// Mean utilization percent on the reference device (the paper's
+    /// "total area used" aggregate).
+    pub area_percent: f64,
+}
+
 /// A batched chunk executor: the contract of one AOT artifact call.
 ///
 /// `phases` is `[batch * n]` row-major, `settled[b]` is the absolute
@@ -59,7 +91,8 @@ pub trait ChunkEngine {
     /// Install the weight matrix used by subsequent `run_chunk` calls.
     fn set_weights(&mut self, w_f32: &[f32]) -> Result<()>;
     fn run_chunk(&mut self, phases: &mut [i32], settled: &mut [i32], period0: i32) -> Result<()>;
-    /// Human-readable engine kind ("pjrt" / "native").
+    /// Human-readable engine kind ("pjrt" / "native" / "sharded" /
+    /// "rtl").
     fn kind(&self) -> &'static str;
 
     /// True when the engine implements the optional phase-noise hook
@@ -123,6 +156,27 @@ pub trait ChunkEngine {
     /// and become free for a new block.
     fn clear_lane_block(&mut self, _lane0: usize) -> Result<()> {
         Err(anyhow!("{} engine has no lane-block support", self.kind()))
+    }
+
+    /// Optional hook: the caller has just (re)written lanes
+    /// `[0, active)` of the phase buffer as fresh trials for a new wave,
+    /// and any lanes at or beyond `active` are padding it will never
+    /// read.  Engines with per-lane *hidden* state (the rtl engine's
+    /// register files) need this: value-sniffing cannot tell a fresh
+    /// init that happens to equal a lane's current phases from an
+    /// untouched lane, so they reset the active lanes unconditionally —
+    /// and stop advancing (and cost-metering) the padding.  Stateless
+    /// fabrics ignore it: their dynamics are a pure function of the
+    /// buffer, and padding lanes advancing is harmless.
+    fn begin_wave(&mut self, _active: usize) -> Result<()> {
+        Ok(())
+    }
+
+    /// Emulated hardware cost accumulated since the last `set_weights`,
+    /// for engines that model the synthesized design cycle by cycle
+    /// (the rtl engine).  Float fabrics return `None`.
+    fn hardware_cost(&self) -> Option<HardwareCost> {
+        None
     }
 }
 

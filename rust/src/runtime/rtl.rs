@@ -1,0 +1,404 @@
+//! The bit-true emulated-hardware engine: the paper's serial-MAC hybrid
+//! datapath (`rtl::hybrid::HybridOnn`) served through the same
+//! [`ChunkEngine`] contract as the float fabrics, so the solver
+//! portfolio and the coordinator can put solve traffic on the
+//! cycle-accurate hardware model instead of `onn::dynamics`.
+//!
+//! Contract notes (DESIGN_SOLVER.md §8):
+//!
+//! * **Lanes.** The engine's batch dimension maps onto independent
+//!   register-state lanes of one multi-lane `HybridOnn` sharing the
+//!   weight memory — the way one synthesized core is re-run per anneal
+//!   replica.  `run_chunk` detects externally (re)written lane phases
+//!   (the portfolio's wave inits) and reprograms just those lanes,
+//!   resetting their registers like a fresh hardware run.
+//! * **Noise.** The annealing hook applies *quantized phase kicks* on
+//!   the exact counter-indexed stream of `onn::dynamics::PhaseNoise`
+//!   (`kick_at(seed, tick, oscillator)`): after each emulated period
+//!   the update circuit rewrites the mux selects in place, registers
+//!   keep running.  The tick walks in batch-lane order and restarts on
+//!   `set_noise`/`set_weights`, mirroring the native engine — so an rtl
+//!   solve is deterministic at equal seed (`rust/tests/prop_rtl.rs`).
+//! * **Settling** is judged on phases relative to oscillator 0 across
+//!   whole periods (the RTL semantics, warm-up period excluded), with
+//!   the comparand carried across chunk boundaries.
+//! * **Cost.** The lanes' `SerialMac` cycle counters meter emulated
+//!   fast-clock work; [`ChunkEngine::hardware_cost`] converts it to an
+//!   emulated time-to-solution via `fpga::timing` and reports device
+//!   fit via `fpga::resources::hybrid`.
+//!
+//! Unsupported: lane blocks (one emulated device carries one problem)
+//! and, by construction, the PJRT artifact path.
+
+use anyhow::{anyhow, Result};
+
+use crate::fpga::device::{zynq7020, Device};
+use crate::fpga::resources;
+use crate::fpga::timing;
+use crate::onn::config::NetworkConfig;
+use crate::onn::dynamics::PhaseNoise;
+use crate::rtl::hybrid::HybridOnn;
+use crate::runtime::{ChunkEngine, HardwareCost};
+
+pub struct RtlEngine {
+    cfg: NetworkConfig,
+    batch: usize,
+    chunk: usize,
+    device: Device,
+    sim: Option<HybridOnn>,
+    /// Pending (amplitude, seed) noise setting; amplitude 0 disables.
+    noise: Option<(f64, u64)>,
+    /// Periods consumed from the kick stream since the last
+    /// `set_noise`/`set_weights` (the `tick` half of the kick index),
+    /// advancing in batch-lane order like the native engine's.
+    noise_tick: u64,
+    /// Lanes `[0, active)` advance (and are cost-metered); the rest is
+    /// caller-declared padding (`begin_wave`).  Whole batch by default.
+    active: usize,
+    /// A `begin_wave` arrived: the next `run_chunk` reprograms the
+    /// active lanes unconditionally — a fresh init that happens to
+    /// equal a lane's current phases must still reset its registers.
+    pending_wave: Option<usize>,
+}
+
+impl RtlEngine {
+    /// An engine serving `cfg.n` oscillators with `batch` lanes and
+    /// `chunk` periods per `run_chunk` call, modeled on the paper's
+    /// reference device (Zynq-7020).
+    pub fn new(cfg: NetworkConfig, batch: usize, chunk: usize) -> Self {
+        Self {
+            cfg,
+            batch,
+            chunk,
+            device: zynq7020(),
+            sim: None,
+            noise: None,
+            noise_tick: 0,
+            active: batch,
+            pending_wave: None,
+        }
+    }
+}
+
+impl ChunkEngine for RtlEngine {
+    fn n(&self) -> usize {
+        self.cfg.n
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn chunk_len(&self) -> usize {
+        self.chunk
+    }
+
+    fn set_weights(&mut self, w_f32: &[f32]) -> Result<()> {
+        let w = crate::runtime::checked_weights(&self.cfg, w_f32)?;
+        self.sim = Some(HybridOnn::with_lanes(self.cfg, w, self.batch));
+        // Reprogramming the weight memory restarts the kick stream,
+        // exactly like the native engine rebuilding its PhaseNoise —
+        // and returns the whole batch to active duty.
+        self.noise_tick = 0;
+        self.active = self.batch;
+        self.pending_wave = None;
+        Ok(())
+    }
+
+    fn run_chunk(&mut self, phases: &mut [i32], settled: &mut [i32], period0: i32) -> Result<()> {
+        let n = self.cfg.n;
+        if phases.len() != self.batch * n || settled.len() != self.batch {
+            return Err(anyhow!("shape mismatch"));
+        }
+        let wave = self.pending_wave.take();
+        if let Some(active) = wave {
+            self.active = active;
+        }
+        let sim = self
+            .sim
+            .as_mut()
+            .ok_or_else(|| anyhow!("set_weights not called"))?;
+        let p = self.cfg.period() as i32;
+        // A declared wave reprograms every active lane unconditionally
+        // (a fresh init may coincide with the lane's current phases —
+        // its registers must reset anyway); otherwise externally
+        // rewritten lanes are detected by value and reprogrammed, and
+        // untouched lanes resume.  Lanes past `active` are padding:
+        // never stepped, never metered.
+        for lane in 0..self.active {
+            let slice = &phases[lane * n..(lane + 1) * n];
+            if wave.is_some() || sim.lane_phases(lane) != slice {
+                sim.set_lane_phases(lane, slice);
+            }
+        }
+        let noise = self.noise.filter(|&(a, _)| a > 0.0);
+        for lane in 0..self.active {
+            for k in 0..self.chunk {
+                let settled_now = sim.step_lane_period(lane);
+                if let Some((amp, seed)) = noise {
+                    let tick = self.noise_tick;
+                    sim.kick_lane_phases(lane, |i, phi| {
+                        PhaseNoise::kick_at(seed, tick, i, amp, phi, p)
+                    });
+                    self.noise_tick += 1;
+                }
+                if settled_now && settled[lane] < 0 {
+                    settled[lane] = period0 + k as i32;
+                }
+            }
+            phases[lane * n..(lane + 1) * n].copy_from_slice(sim.lane_phases(lane));
+        }
+        Ok(())
+    }
+
+    fn kind(&self) -> &'static str {
+        "rtl"
+    }
+
+    fn supports_noise(&self) -> bool {
+        true
+    }
+
+    fn set_noise(&mut self, amplitude: f64, seed: u64) -> Result<()> {
+        if !(0.0..=1.0).contains(&amplitude) {
+            return Err(anyhow!("noise amplitude {amplitude} outside [0, 1]"));
+        }
+        self.noise = Some((amplitude, seed));
+        self.noise_tick = 0;
+        Ok(())
+    }
+
+    fn begin_wave(&mut self, active: usize) -> Result<()> {
+        if active == 0 || active > self.batch {
+            return Err(anyhow!(
+                "wave of {active} lanes outside the {}-lane batch",
+                self.batch
+            ));
+        }
+        self.pending_wave = Some(active);
+        Ok(())
+    }
+
+    fn hardware_cost(&self) -> Option<HardwareCost> {
+        let sim = self.sim.as_ref()?;
+        // One device runs the lanes back to back: the emulated elapsed
+        // fast-clock time is the sum of each lane's (parallel-MAC) wall
+        // clock — N MACs per lane tick in lockstep, so any single MAC's
+        // counter is its lane's elapsed cycles.
+        let fast_cycles: u64 = (0..sim.lanes()).map(|l| sim.lane_fast_cycles(l)).sum();
+        let f_logic_mhz = timing::logic_frequency_hybrid(self.cfg.n, &self.device);
+        let res = resources::hybrid(&self.cfg, &self.device);
+        Some(HardwareCost {
+            fast_cycles,
+            f_logic_mhz,
+            emulated_s: fast_cycles as f64 / (f_logic_mhz * 1e6),
+            fits_device: res.fits(&self.device),
+            area_percent: res.area_percent(&self.device),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rtl::hybrid::SYNC_OVERHEAD_CYCLES;
+    use crate::rtl::RtlSim;
+    use crate::util::rng::Rng;
+
+    fn rand_w(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n * n).map(|_| rng.range_i64(-8, 9) as f32).collect()
+    }
+
+    #[test]
+    fn shape_and_weight_validation() {
+        let mut e = RtlEngine::new(NetworkConfig::paper(2), 1, 4);
+        let mut ph = vec![0, 0];
+        let mut st = vec![-1];
+        assert!(e.run_chunk(&mut ph, &mut st, 0).is_err(), "needs weights");
+        assert!(e.set_weights(&[0.0, 99.0, 0.0, 0.0]).is_err());
+        assert!(e.set_weights(&[0.5, 0.0, 0.0, 0.0]).is_err());
+        e.set_weights(&[0.0, 15.0, -16.0, 0.0]).unwrap();
+        assert!(e.run_chunk(&mut ph, &mut st, 0).is_ok());
+        let mut bad = vec![0, 0, 0];
+        assert!(e.run_chunk(&mut bad, &mut st, 0).is_err(), "bad shape");
+        assert!(e.set_noise(1.5, 1).is_err(), "amplitude range");
+    }
+
+    #[test]
+    fn lanes_match_the_monolithic_simulator() {
+        // Each engine lane must reproduce a solo HybridOnn trajectory,
+        // across chunk boundaries, lane by lane.
+        let mut rng = Rng::new(91);
+        let n = 6;
+        let cfg = NetworkConfig::paper(n);
+        let w = rand_w(&mut rng, n);
+        let mut e = RtlEngine::new(cfg, 3, 4);
+        e.set_weights(&w).unwrap();
+        let init: Vec<i32> = (0..3 * n).map(|_| rng.range_i64(0, 16) as i32).collect();
+        let mut ph = init.clone();
+        let mut st = vec![-1i32; 3];
+        for chunk_idx in 0..3 {
+            e.run_chunk(&mut ph, &mut st, chunk_idx * 4).unwrap();
+            for lane in 0..3 {
+                let wm = crate::runtime::checked_weights(&cfg, &w).unwrap();
+                let mut solo = HybridOnn::new(cfg, wm);
+                solo.set_phases(&init[lane * n..(lane + 1) * n]);
+                for _ in 0..(chunk_idx as usize + 1) * 4 * 16 {
+                    solo.tick();
+                }
+                assert_eq!(
+                    &ph[lane * n..(lane + 1) * n],
+                    solo.phases(),
+                    "lane {lane} chunk {chunk_idx}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn settle_flags_resume_across_chunks() {
+        // A pinned leader/follower pair settles after a few periods;
+        // the flag must carry the absolute period index even when the
+        // settling period falls in a later chunk.
+        let n = 2;
+        let cfg = NetworkConfig::paper(n);
+        let mut w = vec![0.0f32; 4];
+        w[2] = 8.0; // w[1][0]: follower 1 listens to leader 0
+        let mut e = RtlEngine::new(cfg, 1, 2);
+        e.set_weights(&w).unwrap();
+        let mut ph = vec![4, 11];
+        let mut st = vec![-1i32];
+        let mut chunk_idx = 0;
+        while st[0] < 0 && chunk_idx < 10 {
+            e.run_chunk(&mut ph, &mut st, chunk_idx * 2).unwrap();
+            chunk_idx += 1;
+        }
+        let wm = crate::runtime::checked_weights(&cfg, &w).unwrap();
+        let mut oracle = HybridOnn::new(cfg, wm);
+        oracle.set_phases(&[4, 11]);
+        let want = oracle.run_to_settle(20).settled.unwrap() as i32;
+        assert_eq!(st[0], want, "chunked settle index != run_to_settle");
+    }
+
+    #[test]
+    fn noise_follows_the_counter_indexed_stream() {
+        // Zero weights freeze the deterministic dynamics, so the engine
+        // trajectory is exactly the kick stream: replaying kick_at by
+        // hand (batch-lane tick order) must reproduce it.
+        let n = 4;
+        let cfg = NetworkConfig::paper(n);
+        let (amp, seed) = (0.9, 77u64);
+        let zeros = vec![0.0f32; n * n];
+        let mut e = RtlEngine::new(cfg, 2, 3);
+        e.set_weights(&zeros).unwrap();
+        e.set_noise(amp, seed).unwrap();
+        let init: Vec<i32> = vec![1, 5, 9, 13, 2, 6, 10, 14];
+        let mut ph = init.clone();
+        let mut st = vec![-1i32; 2];
+        e.run_chunk(&mut ph, &mut st, 0).unwrap();
+        let mut want = init.clone();
+        let mut tick = 0u64;
+        for lane in 0..2usize {
+            for _ in 0..3 {
+                for i in 0..n {
+                    let phi = want[lane * n + i];
+                    want[lane * n + i] = PhaseNoise::kick_at(seed, tick, i, amp, phi, 16);
+                }
+                tick += 1;
+            }
+        }
+        assert_eq!(ph, want, "kick stream diverged from kick_at replay");
+        // Reinstalling the noise restarts the stream: a fresh engine
+        // from the same state reproduces the same chunk.
+        e.set_noise(amp, seed).unwrap();
+        let mut ph2 = init.clone();
+        let mut st2 = vec![-1i32; 2];
+        e.run_chunk(&mut ph2, &mut st2, 0).unwrap();
+        assert_eq!(ph2, ph, "set_noise must restart the stream");
+    }
+
+    #[test]
+    fn begin_wave_reprograms_even_when_phases_coincide() {
+        // A fresh wave whose init happens to equal the lane's settled
+        // state must still get a fresh hardware run: registers reset,
+        // warm-up period re-armed.  Value sniffing alone cannot see it
+        // — that is exactly what the begin_wave hook exists for.
+        let n = 2;
+        let cfg = NetworkConfig::paper(n);
+        let mut w = vec![0.0f32; 4];
+        w[2] = 8.0; // follower 1 listens to leader 0
+        let mut e = RtlEngine::new(cfg, 1, 4);
+        e.set_weights(&w).unwrap();
+        assert!(e.begin_wave(0).is_err(), "empty wave rejected");
+        assert!(e.begin_wave(2).is_err(), "wave beyond the batch rejected");
+        let mut ph = vec![4, 11];
+        let mut st = vec![-1i32];
+        e.run_chunk(&mut ph, &mut st, 0).unwrap();
+        assert_eq!(ph, vec![4, 4], "pair must have locked");
+        // Same buffer, new trial: without the wave hook the stale
+        // settle tracker fires instantly at index 0...
+        let mut st2 = vec![-1i32];
+        e.run_chunk(&mut ph, &mut st2, 0).unwrap();
+        assert_eq!(st2[0], 0, "sniff path resumes the old run");
+        // ...with it, the lane restarts and the warm-up rule holds: a
+        // fixed point is first *confirmed* at period 1.
+        e.begin_wave(1).unwrap();
+        let mut st3 = vec![-1i32];
+        e.run_chunk(&mut ph, &mut st3, 0).unwrap();
+        assert_eq!(st3[0], 1, "reprogrammed lane must re-arm warm-up");
+    }
+
+    #[test]
+    fn padding_lanes_are_neither_stepped_nor_metered() {
+        // begin_wave(3) on a 4-lane engine: the padding lane's buffer
+        // slice stays untouched, its settle flag stays clear, and the
+        // hardware meter prices exactly the three active lanes.
+        let n = 3;
+        let cfg = NetworkConfig::paper(n);
+        let zeros = vec![0.0f32; n * n];
+        let mut e = RtlEngine::new(cfg, 4, 2);
+        e.set_weights(&zeros).unwrap();
+        e.begin_wave(3).unwrap();
+        let init: Vec<i32> = (0..4 * n).map(|i| (i as i32 * 5) % 16).collect();
+        let mut ph = init.clone();
+        let mut st = vec![-1i32; 4];
+        e.run_chunk(&mut ph, &mut st, 0).unwrap();
+        assert_eq!(&ph[3 * n..], &init[3 * n..], "padding lane moved");
+        assert_eq!(st[3], -1, "padding lane reported a settle");
+        assert!(st[..3].iter().all(|&s| s >= 0), "active lanes settle");
+        let hw = e.hardware_cost().unwrap();
+        assert_eq!(
+            hw.fast_cycles,
+            (3 * 2 * 16 * (n + SYNC_OVERHEAD_CYCLES)) as u64,
+            "the meter must count the three active lanes only"
+        );
+        // A global set_weights returns the whole batch to active duty.
+        e.set_weights(&zeros).unwrap();
+        let mut ph2 = init.clone();
+        let mut st2 = vec![-1i32; 4];
+        e.run_chunk(&mut ph2, &mut st2, 0).unwrap();
+        assert!(st2.iter().all(|&s| s >= 0), "all four lanes advance again");
+    }
+
+    #[test]
+    fn hardware_cost_meters_serialized_lanes() {
+        let n = 5;
+        let cfg = NetworkConfig::paper(n);
+        let zeros = vec![0.0f32; n * n];
+        let mut e = RtlEngine::new(cfg, 2, 4);
+        assert!(e.hardware_cost().is_none(), "no cost before weights");
+        e.set_weights(&zeros).unwrap();
+        let mut ph = vec![0i32; 2 * n];
+        let mut st = vec![-1i32; 2];
+        e.run_chunk(&mut ph, &mut st, 0).unwrap();
+        let hw = e.hardware_cost().unwrap();
+        // 2 lanes x 4 periods x 16 ticks, each tick one serial sum of
+        // n + overhead fast cycles.
+        let want = (2 * 4 * 16 * (n + SYNC_OVERHEAD_CYCLES)) as u64;
+        assert_eq!(hw.fast_cycles, want);
+        assert!(hw.f_logic_mhz > 0.0);
+        assert!(hw.emulated_s > 0.0);
+        assert!(hw.fits_device, "n=5 trivially fits the Zynq-7020");
+        assert!(hw.area_percent > 0.0);
+    }
+}

@@ -15,8 +15,9 @@ use anyhow::{anyhow, Result};
 use crate::onn::config::NetworkConfig;
 use crate::onn::phase::spin_to_phase;
 use crate::runtime::native::NativeEngine;
+use crate::runtime::rtl::RtlEngine;
 use crate::runtime::sharded::ShardedEngine;
-use crate::runtime::ChunkEngine;
+use crate::runtime::{ChunkEngine, HardwareCost};
 use crate::solver::anneal::Schedule;
 use crate::solver::problem::IsingProblem;
 use crate::solver::sa::greedy_descent;
@@ -44,9 +45,14 @@ pub const MAX_WAVE_REPLICAS: usize = 64;
 pub const DEFAULT_CHUNK: usize = 8;
 
 /// Which engine fabric a solve runs on — the engine-selection layer the
-/// coordinator's solver pool and the CLI configure.  Selection never
-/// changes the answer: the sharded engine is bit-exact with the native
-/// one (noise included), so this is purely a capacity/locality choice.
+/// coordinator's solver pool and the CLI configure.  Among the float
+/// fabrics selection never changes the answer: the sharded engine is
+/// bit-exact with the native one (noise included), so that choice is
+/// purely capacity/locality.  [`EngineSelect::Rtl`] is different in
+/// kind: it runs the *bit-true hardware model* (cycle-accurate serial
+/// MACs, RTL settle semantics), deterministic at equal seed but not
+/// trajectory-identical to the float fabrics — and it reports the
+/// emulated hardware cost in the outcome.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EngineSelect {
     /// Single in-process engine.
@@ -54,6 +60,9 @@ pub enum EngineSelect {
     /// Row-sharded leader + worker cluster with exactly this many
     /// shards (a count of 1 collapses to the native engine).
     Sharded { shards: usize },
+    /// The bit-true emulated-hardware engine (`runtime::rtl`): the
+    /// paper's serial-MAC hybrid datapath at paper precision.
+    Rtl,
     /// Native below `threshold` oscillators; at or above it, one shard
     /// per `threshold` rows (`ceil(m / threshold)`, at least 2), capped
     /// at `max_shards`.  A `max_shards` below 2 disables sharding
@@ -76,7 +85,7 @@ impl EngineSelect {
     /// shard needs at least one row.
     pub fn shards_for(&self, m: usize) -> usize {
         let k = match *self {
-            EngineSelect::Native => 1,
+            EngineSelect::Native | EngineSelect::Rtl => 1,
             EngineSelect::Sharded { shards } => shards.max(1),
             EngineSelect::Auto { threshold, max_shards } => {
                 let t = threshold.max(1);
@@ -100,6 +109,9 @@ pub fn build_engine(
     select: EngineSelect,
 ) -> Result<Box<dyn ChunkEngine>> {
     let cfg = NetworkConfig::paper(m);
+    if select == EngineSelect::Rtl {
+        return Ok(Box::new(RtlEngine::new(cfg, batch, chunk)));
+    }
     let shards = select.shards_for(m);
     if shards <= 1 {
         Ok(Box::new(NativeEngine::new(cfg, batch, chunk)))
@@ -173,11 +185,19 @@ pub struct SolveOutcome {
     pub early_exit: bool,
     /// False when the engine has no noise hook (schedule was skipped).
     pub noise_applied: bool,
-    /// Engine kind that ran the solve ("native" / "sharded" / "pjrt").
+    /// Engine kind that ran the solve ("native" / "sharded" / "rtl" /
+    /// "pjrt").
     pub engine: &'static str,
     /// All-gather synchronization rounds the engine performed — the
     /// multi-device sync-cost metric (0 on single-device engines).
     pub sync_rounds: u64,
+    /// RMS rounding loss of mapping the problem's couplings through
+    /// `WeightMatrix::quantize` at the engine's precision, as a fraction
+    /// of the quantization full scale (0 = exactly representable).
+    pub quantization_error: f64,
+    /// Emulated hardware cost of the solve — present only when the
+    /// engine models the synthesized design (the rtl engine).
+    pub hardware: Option<HardwareCost>,
 }
 
 /// Run the portfolio on an already-constructed engine.  The engine's
@@ -208,7 +228,8 @@ pub fn solve_portfolio(
             cfg.period()
         ));
     }
-    engine.set_weights(&problem.embed(&cfg).to_f32())?;
+    let (wq, quantization_error) = problem.embed_with_error(&cfg);
+    engine.set_weights(&wq.to_f32())?;
     let noise_applied = engine.supports_noise();
 
     let b = engine.batch();
@@ -256,6 +277,11 @@ pub fn solve_portfolio(
             }
         }
         settled.iter_mut().for_each(|s| *s = -1);
+        // Tell stateful engines the first `real` lanes are fresh trials
+        // and the rest is padding (the rtl engine resets those register
+        // lanes unconditionally and neither advances nor meters the
+        // padding); float fabrics ignore this.
+        engine.begin_wave(real)?;
         for slot in 0..real {
             let e = eval(&phases[slot * m..(slot + 1) * m]);
             initial_best = initial_best.min(e);
@@ -337,6 +363,8 @@ pub fn solve_portfolio(
         noise_applied,
         engine: engine.kind(),
         sync_rounds: engine.sync_rounds(),
+        quantization_error,
+        hardware: engine.hardware_cost(),
     })
 }
 
@@ -503,6 +531,9 @@ struct PackedLane {
     best_energy: f64,
     best_phases: Vec<i32>,
     initial_best: f64,
+    /// Quantization loss of this problem's embedding (same value its
+    /// solo run reports).
+    quantization_error: f64,
     /// `Some(early)` once the lane's run is over (plateau/all-settled
     /// early exit, or budget exhausted with `early = false`).
     exit: Option<bool>,
@@ -525,7 +556,7 @@ fn place_lane(
     let (n, p) = (buf.n, buf.p);
     let m = problem.embed_dim();
     let binary = problem.sectors == 2;
-    let wm = problem.embed(&NetworkConfig::paper(m));
+    let (wm, quantization_error) = problem.embed_with_error(&NetworkConfig::paper(m));
     let mut w = vec![0f32; n * n];
     for i in 0..m {
         for j in 0..m {
@@ -574,6 +605,7 @@ fn place_lane(
         best_energy,
         best_phases,
         initial_best,
+        quantization_error,
         exit: None,
     })
 }
@@ -637,6 +669,9 @@ fn finish_lane(
         noise_applied,
         engine: engine.kind(),
         sync_rounds,
+        quantization_error: lane.quantization_error,
+        // Lane-block fabrics are float engines; no hardware model.
+        hardware: None,
     }
 }
 
@@ -948,6 +983,7 @@ mod tests {
         let off = EngineSelect::Auto { threshold: 100, max_shards: 1 };
         assert_eq!(off.shards_for(4000), 1, "max_shards < 2 disables sharding");
         assert_eq!(EngineSelect::Native.shards_for(4000), 1);
+        assert_eq!(EngineSelect::Rtl.shards_for(4000), 1, "one emulated device");
         assert_eq!(EngineSelect::Sharded { shards: 5 }.shards_for(64), 5);
         assert_eq!(
             EngineSelect::Sharded { shards: 9 }.shards_for(3),
@@ -972,6 +1008,77 @@ mod tests {
         assert_eq!(sharded.best_spins, native.best_spins);
         assert_eq!(sharded.best_phases, native.best_phases);
         assert_eq!(sharded.periods, native.periods);
+    }
+
+    #[test]
+    fn rtl_selection_runs_the_hardware_model() {
+        // K_{3,3}: the readout polish alone guarantees the optimum, so
+        // the bit-true engine must land on cut 9 like the float one —
+        // while additionally reporting the emulated hardware cost.
+        let g = Graph::complete_bipartite(3, 3);
+        let p = max_cut(&g);
+        let out = solve_with(&p, &params(4, 32, 13), EngineSelect::Rtl).unwrap();
+        assert_eq!(out.engine, "rtl");
+        assert_eq!(out.sync_rounds, 0);
+        assert_eq!(g.cut_value(&out.best_spins), 9);
+        assert_eq!(out.quantization_error, 0.0, "±1 couplings scale exactly");
+        let hw = out.hardware.expect("rtl solves report hardware cost");
+        assert!(hw.fast_cycles > 0);
+        assert!(hw.emulated_s > 0.0);
+        assert!(hw.fits_device, "a 6-oscillator design fits the device");
+        // Float fabrics report the same quantization error but no
+        // hardware model.
+        let native = solve_native(&p, &params(4, 32, 13)).unwrap();
+        assert!(native.hardware.is_none());
+        assert_eq!(native.quantization_error, 0.0);
+    }
+
+    #[test]
+    fn rtl_hardware_meter_counts_only_real_replicas() {
+        // 65 replicas on a 64-lane wave: the second wave carries one
+        // real replica plus 63 padding slots.  The emulated cost must
+        // price exactly the 65 real lane-runs — padded lanes are
+        // declared via begin_wave and neither stepped nor metered.
+        use crate::solver::problem::IsingProblem;
+        let problem = IsingProblem::new(4);
+        let prm = PortfolioParams {
+            replicas: 65,
+            max_periods: 8, // one chunk per wave (noise-free: tail of 1)
+            seed: 31,
+            polish: false,
+            ..Default::default()
+        };
+        let out = solve_with(&problem, &prm, EngineSelect::Rtl).unwrap();
+        assert_eq!(out.replicas, 65);
+        assert_eq!(out.periods, 16, "two waves of one 8-period chunk");
+        let hw = out.hardware.unwrap();
+        assert_eq!(
+            hw.fast_cycles,
+            65 * 8 * 16 * (4 + 6),
+            "the meter must count 65 real lane-runs, not 128"
+        );
+    }
+
+    #[test]
+    fn quantization_error_is_reported_for_lossy_couplings() {
+        // Couplings {1, 3.7} cannot all map exactly onto the 5-bit
+        // grid, so the reported rounding loss must be positive (and
+        // identical across engine selections — it is a property of the
+        // embedding, not the fabric).
+        use crate::solver::problem::IsingProblem;
+        let mut p = IsingProblem::new(4);
+        p.set_j(0, 1, 3.7);
+        p.set_j(1, 2, 1.0);
+        p.set_j(2, 3, 1.0);
+        let prm = params(4, 32, 5);
+        let native = solve_native(&p, &prm).unwrap();
+        assert!(
+            native.quantization_error > 0.0,
+            "lossy couplings must report a positive error"
+        );
+        assert!(native.quantization_error <= 0.5 / 15.0 + 1e-12);
+        let rtl = solve_with(&p, &prm, EngineSelect::Rtl).unwrap();
+        assert_eq!(rtl.quantization_error, native.quantization_error);
     }
 
     #[test]

@@ -156,6 +156,14 @@ impl IsingProblem {
     /// matrix is scaled so the largest magnitude maps to the positive
     /// quantization limit.
     pub fn embed(&self, cfg: &NetworkConfig) -> WeightMatrix {
+        self.embed_with_error(cfg).0
+    }
+
+    /// [`Self::embed`] plus the quantization error it cost (RMS rounding
+    /// loss as a fraction of the quantization full scale — see
+    /// [`WeightMatrix::quantize_with_error`]), which the solver surfaces
+    /// per solve outcome.
+    pub fn embed_with_error(&self, cfg: &NetworkConfig) -> (WeightMatrix, f64) {
         let m = self.embed_dim();
         assert_eq!(cfg.n, m, "config sized {} but embedding needs {m}", cfg.n);
         let mut master = vec![0f32; m * m];
@@ -173,7 +181,7 @@ impl IsingProblem {
                 master[anc * m + i] = self.h[i] as f32;
             }
         }
-        WeightMatrix::quantize(&master, m, cfg)
+        WeightMatrix::quantize_with_error(&master, m, cfg)
     }
 
     /// Decode an embedded phase state (length [`Self::embed_dim`]) into

@@ -4,7 +4,9 @@
 
 use onn_scale::onn::config::NetworkConfig;
 use onn_scale::onn::dynamics::{period_step_naive, FunctionalEngine};
-use onn_scale::onn::phase::{amplitude, distance, phase_to_spin, spin_to_phase, wrap};
+use onn_scale::onn::phase::{
+    amplitude, distance, phase_to_spin, spin_to_phase, state_to_spins, wrap,
+};
 use onn_scale::onn::weights::WeightMatrix;
 use onn_scale::util::json::Json;
 use onn_scale::util::rng::Rng;
@@ -153,6 +155,83 @@ fn prop_weight_quantization_bounds_and_sign() {
                 }
             }
         }
+    }
+}
+
+#[test]
+fn prop_quantize_preserves_structure_at_all_precisions() {
+    // The FPGA programming path at every configured precision (3..=8
+    // signed weight bits): a symmetric float master quantizes to a
+    // symmetric matrix, every entry lands in the two's-complement
+    // range, the strongest coupling saturates the positive limit, and
+    // the reported rounding loss is bounded by half an LSB.
+    let mut rng = Rng::new(1013);
+    for case in 0..CASES {
+        let weight_bits = 3 + (case % 6) as u32;
+        let n = 2 + rng.usize_below(6);
+        let mut cfg = NetworkConfig::paper(n);
+        cfg.weight_bits = weight_bits;
+        let (lo, hi) = cfg.weight_range();
+        let mut master = vec![0f32; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                let v = (rng.f64() * 8.0 - 4.0) as f32;
+                master[i * n + j] = v;
+                master[j * n + i] = v;
+            }
+        }
+        let (w, err) = WeightMatrix::quantize_with_error(&master, n, &cfg);
+        assert!(
+            w.is_symmetric(),
+            "case {case}: {weight_bits} bits broke symmetry"
+        );
+        assert!(
+            w.as_slice().iter().all(|&q| (lo..=hi).contains(&(q as i32))),
+            "case {case}: {weight_bits}-bit entry out of [{lo}, {hi}]"
+        );
+        assert!(w.max_abs() <= hi, "case {case}: max_abs over the limit");
+        let max_abs = master.iter().fold(0f32, |m, x| m.max(x.abs()));
+        if max_abs > 0.0 {
+            assert_eq!(
+                w.max_abs(),
+                hi,
+                "case {case}: strongest coupling must saturate {hi}"
+            );
+        }
+        assert!(
+            (0.0..=0.5 / hi as f64 + 1e-9).contains(&err),
+            "case {case}: rounding loss {err} outside [0, half an LSB]"
+        );
+    }
+}
+
+#[test]
+fn prop_spin_phase_roundtrip_across_phase_precisions() {
+    // The binary encode/readout pair at every phase wheel the config
+    // allows (4..=64 steps): canonical phases decode back to their
+    // spins, and the relative readout is invariant under the global
+    // rotations the quantized dynamics produce.
+    let mut rng = Rng::new(1014);
+    for case in 0..CASES {
+        let phase_bits = 2 + (case % 5) as u32;
+        let p = 1i32 << phase_bits;
+        for s in [-1i8, 1] {
+            assert_eq!(
+                phase_to_spin(spin_to_phase(s, p), 0, p),
+                s,
+                "case {case}: p={p} spin {s} did not round-trip"
+            );
+        }
+        let n = 2 + rng.usize_below(8);
+        let spins: Vec<i8> = (0..n).map(|_| rng.spin()).collect();
+        let d = rng.range_i64(0, p as i64) as i32;
+        let phases: Vec<i32> = spins
+            .iter()
+            .map(|&s| wrap(spin_to_phase(s, p) + d, p))
+            .collect();
+        let decoded = state_to_spins(&phases, p);
+        let rel: Vec<i8> = spins.iter().map(|&s| s * spins[0]).collect();
+        assert_eq!(decoded, rel, "case {case}: p={p} d={d}");
     }
 }
 

@@ -1,0 +1,290 @@
+//! Property obligations of the RTL solver-engine refactor (ISSUE 4):
+//!
+//! (a) The chunked, batch-lane hybrid stepper (`runtime::rtl::RtlEngine`
+//!     over the multi-lane `HybridOnn`) is **tick-for-tick identical**
+//!     to the pre-refactor run-to-completion simulator.  Oracles:
+//!     `RecurrentOnn` — untouched by the refactor and structurally the
+//!     synchronized hybrid's per-tick dynamics (the paper's Table 6
+//!     finding, pinned by `synchronized_hybrid_identical_to_recurrent`)
+//!     — for the trajectory, and `HybridOnn::run_to_settle` (the
+//!     monolithic driver) for the settle index.
+//!
+//! (b) An `RtlEngine` solve is **deterministic at equal seed**
+//!     end-to-end: through `solver::portfolio::solve_with`, and through
+//!     the coordinator's TCP JSON-lines path on an rtl-configured
+//!     solver pool.
+
+use std::sync::Arc;
+
+use onn_scale::coordinator::batcher::BatchPolicy;
+use onn_scale::coordinator::server::{handle_line, serve_tcp, Coordinator, SolverPoolConfig};
+use onn_scale::onn::config::NetworkConfig;
+use onn_scale::onn::weights::WeightMatrix;
+use onn_scale::rtl::hybrid::HybridOnn;
+use onn_scale::rtl::recurrent::RecurrentOnn;
+use onn_scale::rtl::RtlSim;
+use onn_scale::runtime::rtl::RtlEngine;
+use onn_scale::runtime::ChunkEngine;
+use onn_scale::solver::graph::Graph;
+use onn_scale::solver::portfolio::{solve_with, EngineSelect, PortfolioParams};
+use onn_scale::solver::reductions::max_cut;
+use onn_scale::util::json::Json;
+use onn_scale::util::rng::Rng;
+
+fn symmetric_weights(rng: &mut Rng, n: usize) -> WeightMatrix {
+    let mut w = WeightMatrix::zeros(n);
+    for i in 0..n {
+        for j in 0..=i {
+            let v = rng.range_i64(-8, 9) as i8;
+            w.set(i, j, v);
+            w.set(j, i, v);
+        }
+    }
+    w
+}
+
+#[test]
+fn chunked_lanes_match_the_pre_refactor_trajectory_tick_for_tick() {
+    let mut rng = Rng::new(7001);
+    for &n in &[5usize, 9] {
+        let cfg = NetworkConfig::paper(n);
+        let w = symmetric_weights(&mut rng, n);
+        for chunk in [1usize, 3, 8] {
+            let batch = 2usize;
+            let total_periods = 24usize;
+            let mut engine = RtlEngine::new(cfg, batch, chunk);
+            engine.set_weights(&w.to_f32()).unwrap();
+            let inits: Vec<Vec<i32>> = (0..batch)
+                .map(|_| (0..n).map(|_| rng.range_i64(0, 16) as i32).collect())
+                .collect();
+            let mut phases: Vec<i32> = inits.concat();
+            let mut settled = vec![-1i32; batch];
+            // Per-lane oracles, ticked by hand: the recurrent design
+            // (pre-refactor reference dynamics) and a monolithic hybrid
+            // driven through the classic single-trial RtlSim interface.
+            let mut ra_oracles: Vec<RecurrentOnn> = inits
+                .iter()
+                .map(|init| {
+                    let mut ra = RecurrentOnn::new(cfg, w.clone());
+                    ra.set_phases(init);
+                    ra
+                })
+                .collect();
+            let mut ha_oracles: Vec<HybridOnn> = inits
+                .iter()
+                .map(|init| {
+                    let mut ha = HybridOnn::new(cfg, w.clone());
+                    ha.set_phases(init);
+                    ha
+                })
+                .collect();
+            for chunk_idx in 0..total_periods / chunk {
+                engine
+                    .run_chunk(&mut phases, &mut settled, (chunk_idx * chunk) as i32)
+                    .unwrap();
+                for lane in 0..batch {
+                    for _ in 0..chunk * 16 {
+                        ra_oracles[lane].tick();
+                        ha_oracles[lane].tick();
+                    }
+                    assert_eq!(
+                        &phases[lane * n..(lane + 1) * n],
+                        ra_oracles[lane].phases(),
+                        "n={n} chunk_len={chunk} lane={lane} chunk={chunk_idx}: \
+                         diverged from the recurrent oracle"
+                    );
+                    assert_eq!(
+                        &phases[lane * n..(lane + 1) * n],
+                        ha_oracles[lane].phases(),
+                        "n={n} chunk_len={chunk} lane={lane} chunk={chunk_idx}: \
+                         diverged from the monolithic hybrid"
+                    );
+                }
+            }
+            // The chunk-spanning settle flags must report exactly the
+            // period index the monolithic run-to-completion driver does.
+            for (lane, init) in inits.iter().enumerate() {
+                let mut mono = HybridOnn::new(cfg, w.clone());
+                mono.set_phases(init);
+                let out = mono.run_to_settle(total_periods);
+                match out.settled {
+                    Some(k) => assert_eq!(
+                        settled[lane], k as i32,
+                        "n={n} chunk_len={chunk} lane={lane}: settle index"
+                    ),
+                    None => assert_eq!(
+                        settled[lane], -1,
+                        "n={n} chunk_len={chunk} lane={lane}: phantom settle"
+                    ),
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn rtl_solve_is_deterministic_through_solve_with() {
+    let g = Graph::random(10, 0.35, &mut Rng::new(7100));
+    let problem = max_cut(&g);
+    let params = PortfolioParams {
+        replicas: 4,
+        max_periods: 32,
+        seed: 4242,
+        ..Default::default()
+    };
+    let a = solve_with(&problem, &params, EngineSelect::Rtl).unwrap();
+    let b = solve_with(&problem, &params, EngineSelect::Rtl).unwrap();
+    assert_eq!(a.engine, "rtl");
+    assert!(a.noise_applied, "the rtl engine must support the noise hook");
+    assert_eq!(a.best_energy, b.best_energy);
+    assert_eq!(a.best_spins, b.best_spins);
+    assert_eq!(a.best_phases, b.best_phases);
+    assert_eq!(a.replica_phases, b.replica_phases);
+    assert_eq!(a.periods, b.periods);
+    assert_eq!(a.settled_replicas, b.settled_replicas);
+    assert_eq!(a.quantization_error, b.quantization_error);
+    let (ha, hb) = (a.hardware.unwrap(), b.hardware.unwrap());
+    assert_eq!(ha, hb, "the emulated cost meter must be deterministic too");
+    assert!(ha.fast_cycles > 0);
+    // A different seed must explore differently — the noise hook is
+    // actually wired, not silently ignored.
+    let mut other = params;
+    other.seed = 4243;
+    let c = solve_with(&problem, &other, EngineSelect::Rtl).unwrap();
+    assert_ne!(
+        a.replica_phases, c.replica_phases,
+        "different seeds produced identical trajectories"
+    );
+}
+
+/// JSON-lines solve request for a graph with J = -1 couplings.
+fn solve_line_json(id: u64, g: &Graph, replicas: usize, max_periods: usize, seed: u64) -> String {
+    let edges = Json::Arr(
+        g.edges
+            .iter()
+            .map(|&(i, j, w)| Json::arr_i32(&[i as i32, j as i32, -w]))
+            .collect(),
+    );
+    Json::obj(vec![
+        ("type", Json::str("solve")),
+        ("id", Json::num(id as f64)),
+        ("n", Json::num(g.n as f64)),
+        ("edges", edges),
+        ("replicas", Json::num(replicas as f64)),
+        ("max_periods", Json::num(max_periods as f64)),
+        ("seed", Json::num(seed as f64)),
+    ])
+    .to_string()
+}
+
+#[test]
+fn rtl_solve_is_deterministic_over_tcp() {
+    use std::io::{BufRead, BufReader, Write};
+    let coord = Coordinator::start_with_solver(
+        vec![],
+        BatchPolicy::default(),
+        SolverPoolConfig {
+            workers: 1,
+            rtl: true,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let g = Graph::random(8, 0.4, &mut Rng::new(7200));
+    let line = solve_line_json(61, &g, 4, 32, 17);
+
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let router = Arc::clone(&coord.router);
+    std::thread::spawn(move || {
+        let _ = serve_tcp(router, listener);
+    });
+    let stream = std::net::TcpStream::connect(addr).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+    let mut responses = Vec::new();
+    for _ in 0..2 {
+        w.write_all(line.as_bytes()).unwrap();
+        w.write_all(b"\n").unwrap();
+        let mut resp = String::new();
+        r.read_line(&mut resp).unwrap();
+        responses.push(resp.trim().to_string());
+    }
+    assert_eq!(
+        responses[0], responses[1],
+        "equal seed must serve byte-identical rtl responses"
+    );
+    let v = Json::parse(&responses[0]).unwrap();
+    assert!(v.get("error").is_none(), "{}", responses[0]);
+    assert_eq!(v.get("engine").and_then(Json::as_str), Some("rtl"));
+    assert_eq!(v.get("sync_rounds").and_then(Json::as_usize), Some(0));
+    assert!(
+        v.get("hw_fast_cycles").and_then(Json::as_usize).unwrap() > 0,
+        "rtl responses must price the emulated hardware run"
+    );
+    assert!(v.get("hw_emulated_s").and_then(Json::as_f64).unwrap() > 0.0);
+    assert_eq!(v.get("hw_fits_device").and_then(Json::as_bool), Some(true));
+    assert!(v.get("quantization_error").and_then(Json::as_f64).is_some());
+
+    // The in-process path of a second rtl pool serves the same bytes —
+    // the whole stack is deterministic, not just one connection.
+    let coord2 = Coordinator::start_with_solver(
+        vec![],
+        BatchPolicy::default(),
+        SolverPoolConfig {
+            workers: 1,
+            rtl: true,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let inproc = handle_line(&coord2.router, &line);
+    assert_eq!(inproc, responses[0]);
+
+    // Metrics meter the rtl fast cycles.
+    let snap = coord.snapshot();
+    assert_eq!(snap.solves_completed, 2);
+    assert_eq!(snap.solves_rtl, 2);
+    assert!(snap.solve_fast_cycles > 0);
+    assert_eq!(snap.solves_sharded, 0);
+
+    coord.shutdown().unwrap();
+    coord2.shutdown().unwrap();
+}
+
+#[test]
+fn rtl_and_native_pools_share_the_wire_contract() {
+    // The same request line served by an rtl pool and a native pool:
+    // different dynamics, same wire shape — and both report the same
+    // embedding quantization error (a property of the problem).
+    let rtl_coord = Coordinator::start_with_solver(
+        vec![],
+        BatchPolicy::default(),
+        SolverPoolConfig {
+            workers: 1,
+            rtl: true,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let native_coord = Coordinator::start(vec![], BatchPolicy::default()).unwrap();
+    let g = Graph::random(9, 0.4, &mut Rng::new(7300));
+    let line = solve_line_json(71, &g, 4, 32, 23);
+    let rtl = Json::parse(&handle_line(&rtl_coord.router, &line)).unwrap();
+    let native = Json::parse(&handle_line(&native_coord.router, &line)).unwrap();
+    assert!(rtl.get("error").is_none(), "{rtl}");
+    assert!(native.get("error").is_none(), "{native}");
+    assert_eq!(rtl.get("engine").and_then(Json::as_str), Some("rtl"));
+    assert_eq!(native.get("engine").and_then(Json::as_str), Some("native"));
+    assert_eq!(
+        rtl.get("quantization_error").and_then(Json::as_f64),
+        native.get("quantization_error").and_then(Json::as_f64)
+    );
+    assert!(rtl.get("hw_fast_cycles").is_some());
+    assert!(
+        native.get("hw_fast_cycles").is_none(),
+        "float fabrics have no hardware to meter"
+    );
+    rtl_coord.shutdown().unwrap();
+    native_coord.shutdown().unwrap();
+}

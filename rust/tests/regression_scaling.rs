@@ -1,0 +1,62 @@
+//! Regression pins on the paper's headline hardware-scaling claims
+//! (`harness::scaling` over the fpga resource/timing models), so a
+//! refactor of the resource model, the sweep sizes, or the regression
+//! fit cannot silently break the reproduction:
+//!
+//! * Hybrid LUT usage scales **near-linearly** — the paper's headline
+//!   exponent is 1.22 (Fig. 9), "overcoming quadratic hardware
+//!   scaling".
+//! * Recurrent LUT usage scales **~quadratically** (paper: 2.08) — the
+//!   prior-art baseline the hybrid design is measured against.
+//! * The capacity consequence: ~10x more oscillators on the same
+//!   device (506 vs 48, Table 5).
+
+use onn_scale::harness::scaling::{hybrid_sweep, recurrent_sweep, table5_rows};
+
+#[test]
+fn hybrid_lut_exponent_stays_near_linear() {
+    let fit = hybrid_sweep().lut_fit();
+    assert!(
+        (fit.slope - 1.22).abs() <= 0.15,
+        "hybrid LUT exponent drifted off the paper's 1.22: {:.3}",
+        fit.slope
+    );
+    assert!(fit.r2 > 0.97, "hybrid LUT fit degraded: r2 = {:.4}", fit.r2);
+}
+
+#[test]
+fn recurrent_lut_exponent_stays_quadratic() {
+    let fit = recurrent_sweep().lut_fit();
+    assert!(
+        (fit.slope - 2.08).abs() <= 0.25,
+        "recurrent LUT exponent drifted off the paper's 2.08: {:.3}",
+        fit.slope
+    );
+    assert!(
+        fit.r2 > 0.97,
+        "recurrent LUT fit degraded: r2 = {:.4}",
+        fit.r2
+    );
+}
+
+#[test]
+fn scaling_gap_preserves_the_capacity_headline() {
+    // The two exponents must stay far enough apart to reproduce the
+    // paper's capacity result: ~10.5x more oscillators on the hybrid
+    // design at the same device.
+    let ha = hybrid_sweep().lut_fit().slope;
+    let ra = recurrent_sweep().lut_fit().slope;
+    assert!(
+        ra - ha >= 0.6,
+        "exponent gap collapsed: recurrent {ra:.3} vs hybrid {ha:.3}"
+    );
+    let rows = table5_rows();
+    let hybrid_n = rows.iter().find(|r| r.arch == "Hybrid").unwrap().max_n;
+    let recurrent_n = rows.iter().find(|r| r.arch == "Recurrent").unwrap().max_n;
+    let ratio = hybrid_n as f64 / recurrent_n as f64;
+    assert!(
+        (9.0..=11.5).contains(&ratio),
+        "capacity ratio {ratio:.2} drifted off the paper's 10.5 \
+         ({hybrid_n} vs {recurrent_n})"
+    );
+}

@@ -23,9 +23,9 @@ cargo test -q
 echo "==> cargo check --features pjrt (stub xla)"
 cargo check --features pjrt
 
-echo "==> solve-bench --shards/--packed gate (BENCH_solver.json must carry sharded + packed rows)"
+echo "==> solve-bench --shards/--packed/--rtl gate (BENCH_solver.json must carry sharded + packed + rtl rows)"
 ./target/release/onn-scale solve-bench --sizes 12,16 --replicas 4 --periods 32 \
-  --instances 1 --shards 2 --packed 4 --out BENCH_solver.json
+  --instances 1 --shards 2 --packed 4 --rtl --out BENCH_solver.json
 grep -q '"engine":"native"' BENCH_solver.json \
   || { echo "BENCH_solver.json is missing the native rows"; exit 1; }
 grep -q '"engine":"sharded"' BENCH_solver.json \
@@ -34,5 +34,10 @@ grep -q '"packed_replica_periods_per_sec"' BENCH_solver.json \
   || { echo "BENCH_solver.json is missing the packed serving row"; exit 1; }
 grep -q '"unpacked_replica_periods_per_sec"' BENCH_solver.json \
   || { echo "BENCH_solver.json is missing the one-engine-per-request baseline row"; exit 1; }
+grep -q '"engine":"rtl"' BENCH_solver.json \
+  || { echo "BENCH_solver.json is missing the bit-true rtl rows"; exit 1; }
+
+echo "==> solve-report renders the recorded trajectory"
+./target/release/onn-scale solve-report --path BENCH_solver.json >/dev/null
 
 echo "CI OK"
