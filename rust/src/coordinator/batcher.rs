@@ -24,10 +24,11 @@ use crate::coordinator::job::{Job, RetrievalResult, SolveJob, SolveRequest, Solv
 use crate::coordinator::metrics::Metrics;
 use crate::runtime::EngineFactory;
 use crate::solver::portfolio::{
-    solve_packed_native, solve_with, EngineSelect, PortfolioParams, DEFAULT_CHUNK,
+    solve_packed_native, solve_with_trace, EngineSelect, PortfolioParams, DEFAULT_CHUNK,
     MAX_WAVE_REPLICAS,
 };
 use crate::solver::problem::IsingProblem;
+use crate::telemetry::{sink, DEFAULT_TRACE_CAP};
 
 /// Batch-window policy knobs.
 #[derive(Debug, Clone, Copy)]
@@ -203,12 +204,14 @@ impl Default for SolvePackPolicy {
 /// to a power of two) and same chunk-count budget — per-lane weights,
 /// noise streams, and plateau exits take care of every other
 /// difference (seeds, schedules, replica counts).  Requests with an
-/// explicit `shards` override never pack (engine placement is theirs).
+/// explicit `shards` or `rtl` placement never pack (engine placement is
+/// theirs), and traced requests run solo so the trace describes one
+/// solve, not a shared engine.
 pub fn solve_pack_key(req: &SolveRequest, policy: &SolvePackPolicy) -> Option<(usize, usize)> {
     if policy.max_oscillators == 0 || policy.max_lanes == 0 {
         return None;
     }
-    if req.shards.is_some() {
+    if req.shards.is_some() || req.rtl || req.trace {
         return None;
     }
     if req.replicas == 0 || req.replicas > policy.max_lanes.min(MAX_WAVE_REPLICAS) {
@@ -279,6 +282,7 @@ fn solve_result_from(job: &SolveJob, out: crate::solver::portfolio::SolveOutcome
         sync_rounds: out.sync_rounds,
         quantization_error: out.quantization_error,
         hardware: out.hardware,
+        trace: None,
         queue_latency: Duration::ZERO,
         total_latency: done.duration_since(job.submitted),
     }
@@ -295,19 +299,26 @@ fn solve_one(job: SolveJob, metrics: &Metrics, select: EngineSelect) {
         seed: job.req.seed,
         ..Default::default()
     };
-    let job_select = match job.req.shards {
-        Some(1) => EngineSelect::Native,
-        Some(k) => EngineSelect::Sharded { shards: k },
-        None => select,
+    let job_select = if job.req.rtl {
+        EngineSelect::Rtl
+    } else {
+        match job.req.shards {
+            Some(1) => EngineSelect::Native,
+            Some(k) => EngineSelect::Sharded { shards: k },
+            None => select,
+        }
     };
-    match solve_with(&job.req.problem, &params, job_select) {
+    let trace_sink = job.req.trace.then(|| sink(DEFAULT_TRACE_CAP));
+    match solve_with_trace(&job.req.problem, &params, job_select, trace_sink.as_ref()) {
         Ok(out) => {
             let mut result = solve_result_from(&job, out);
+            result.trace = trace_sink.map(|s| s.borrow_mut().take());
             result.queue_latency = dequeued.duration_since(job.submitted);
             metrics.record_solve_completion(
                 result.total_latency,
                 result.periods,
                 result.sync_rounds,
+                result.engine,
             );
             if let Some(hw) = &result.hardware {
                 metrics.record_solve_hardware(hw.fast_cycles);
@@ -366,6 +377,7 @@ fn solve_packed_batch(jobs: Vec<SolveJob>, metrics: &Metrics, policy: &SolvePack
                     result.total_latency,
                     result.periods,
                     result.sync_rounds,
+                    result.engine,
                 );
                 let _ = job.reply.send(result);
             }

@@ -7,6 +7,7 @@ use crate::onn::phase::spin_to_phase;
 use crate::runtime::HardwareCost;
 use crate::solver::anneal::Schedule;
 use crate::solver::problem::IsingProblem;
+use crate::telemetry::TraceRecord;
 
 /// A retrieval request: initial oscillator phases for one trial.
 #[derive(Debug, Clone)]
@@ -75,6 +76,13 @@ pub struct SolveRequest {
     /// Explicit shard-count override; `None` lets the solver pool pick
     /// the engine by its oscillator threshold (1 forces native).
     pub shards: Option<usize>,
+    /// Force the bit-true emulated-hardware engine for this request
+    /// (mutually exclusive with `shards`).
+    pub rtl: bool,
+    /// Attach a compact solve-lifecycle trace to the result
+    /// (DESIGN_SOLVER.md §9).  Traced requests run solo — they never
+    /// coalesce onto packed lane-block engines.
+    pub trace: bool,
 }
 
 impl SolveRequest {
@@ -90,6 +98,8 @@ impl SolveRequest {
             },
             seed: 1,
             shards: None,
+            rtl: false,
+            trace: false,
         }
     }
 }
@@ -122,6 +132,8 @@ pub struct SolveResult {
     /// Emulated hardware cost — present when the bit-true rtl engine
     /// served the solve.
     pub hardware: Option<HardwareCost>,
+    /// Solve-lifecycle trace — present when the request set `trace`.
+    pub trace: Option<Vec<TraceRecord>>,
     pub queue_latency: Duration,
     pub total_latency: Duration,
 }

@@ -1,8 +1,17 @@
-//! Service metrics: counters and latency aggregates, cheap enough for
-//! the hot path (atomics; latencies accumulate as running sums).
+//! Service metrics: counters, exact latency sums (means), and
+//! log-bucketed histograms (percentiles), cheap enough for the hot path
+//! (every record is a handful of relaxed atomic adds).
+//!
+//! Snapshots export two ways (DESIGN_SOLVER.md §9): a JSON object
+//! ([`MetricsSnapshot::to_json`]) and Prometheus-style text
+//! ([`MetricsSnapshot::prometheus`]), both served by the wire command
+//! `{"type": "metrics"}`.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
+
+use crate::telemetry::{LatencyHistogram, LatencySummary};
+use crate::util::json::Json;
 
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -12,16 +21,27 @@ pub struct Metrics {
     pub batches: AtomicU64,
     /// Sum of real jobs over all batches (occupancy numerator).
     pub batched_jobs: AtomicU64,
-    /// Total latency sums in microseconds.
+    /// Total latency sums in microseconds (exact means).
     queue_us: AtomicU64,
     total_us: AtomicU64,
+    /// Latency histograms (p50/p90/p99 at snapshot time).
+    queue_hist: LatencyHistogram,
+    total_hist: LatencyHistogram,
     // --- solve traffic (the optimization job class) ---
     pub solves_submitted: AtomicU64,
     pub solves_completed: AtomicU64,
     pub solves_failed: AtomicU64,
     solve_us: AtomicU64,
+    solve_hist: LatencyHistogram,
+    /// Per-engine-kind solve latency, keyed by the engine that actually
+    /// served the job (`SolveOutcome::engine`).
+    solve_hist_native: LatencyHistogram,
+    solve_hist_sharded: LatencyHistogram,
+    solve_hist_rtl: LatencyHistogram,
     /// Engine chunk-periods spent on solve jobs (effort accounting).
     pub solve_periods: AtomicU64,
+    /// Solves served by the single-device float fabrics (native/pjrt).
+    pub solves_native: AtomicU64,
     /// Solves served by the sharded multi-device fabric.
     pub solves_sharded: AtomicU64,
     /// All-gather synchronization rounds spent on sharded solves (the
@@ -57,12 +77,22 @@ pub struct MetricsSnapshot {
     /// Mean real jobs per batch / batch capacity is the caller's to
     /// compute; this is the mean real jobs per batch.
     pub mean_occupancy: f64,
+    /// Retrieval latency percentiles (histogram estimates; the exact
+    /// means above come from the running sums).
+    pub queue: LatencySummary,
+    pub total: LatencySummary,
     // --- solve traffic ---
     pub solves_submitted: u64,
     pub solves_completed: u64,
     pub solves_failed: u64,
     pub mean_solve_ms: f64,
+    /// Solve latency percentiles, pool-wide and per engine kind.
+    pub solve: LatencySummary,
+    pub solve_native: LatencySummary,
+    pub solve_sharded: LatencySummary,
+    pub solve_rtl: LatencySummary,
     pub solve_periods: u64,
+    pub solves_native: u64,
     pub solves_sharded: u64,
     pub solve_sync_rounds: u64,
     pub solve_batches: u64,
@@ -94,22 +124,47 @@ impl Metrics {
             .fetch_add(queue.as_micros() as u64, Ordering::Relaxed);
         self.total_us
             .fetch_add(total.as_micros() as u64, Ordering::Relaxed);
+        self.queue_hist.record(queue);
+        self.total_hist.record(total);
     }
 
     pub fn record_solve_submit(&self) {
         self.solves_submitted.fetch_add(1, Ordering::Relaxed);
     }
 
-    pub fn record_solve_completion(&self, total: Duration, periods: usize, sync_rounds: u64) {
+    /// A completed solve.  `engine` is the kind that actually served it
+    /// (`SolveOutcome::engine`: "native"/"pjrt"/"sharded"/"rtl") — the
+    /// classification is explicit, not inferred from side channels like
+    /// sync-round counts, so a sharded run that happened to sync zero
+    /// times still lands in the sharded column.
+    pub fn record_solve_completion(
+        &self,
+        total: Duration,
+        periods: usize,
+        sync_rounds: u64,
+        engine: &str,
+    ) {
         self.solves_completed.fetch_add(1, Ordering::Relaxed);
         self.solve_us
             .fetch_add(total.as_micros() as u64, Ordering::Relaxed);
+        self.solve_hist.record(total);
         self.solve_periods
             .fetch_add(periods as u64, Ordering::Relaxed);
-        if sync_rounds > 0 {
-            self.solves_sharded.fetch_add(1, Ordering::Relaxed);
-            self.solve_sync_rounds
-                .fetch_add(sync_rounds, Ordering::Relaxed);
+        self.solve_sync_rounds
+            .fetch_add(sync_rounds, Ordering::Relaxed);
+        match engine {
+            "sharded" => {
+                self.solves_sharded.fetch_add(1, Ordering::Relaxed);
+                self.solve_hist_sharded.record(total);
+            }
+            "rtl" => {
+                self.solves_rtl.fetch_add(1, Ordering::Relaxed);
+                self.solve_hist_rtl.record(total);
+            }
+            _ => {
+                self.solves_native.fetch_add(1, Ordering::Relaxed);
+                self.solve_hist_native.record(total);
+            }
         }
     }
 
@@ -127,10 +182,10 @@ impl Metrics {
         self.solve_lanes_retired.fetch_add(lanes, Ordering::Relaxed);
     }
 
-    /// A completed solve that ran on the emulated-hardware engine:
-    /// count it and meter its fast-clock cycles.
+    /// Meter the emulated fast-clock cycles of a completed rtl solve.
+    /// The rtl job *count* comes from [`Self::record_solve_completion`]
+    /// classifying on the engine kind.
     pub fn record_solve_hardware(&self, fast_cycles: u64) {
-        self.solves_rtl.fetch_add(1, Ordering::Relaxed);
         self.solve_fast_cycles
             .fetch_add(fast_cycles, Ordering::Relaxed);
     }
@@ -139,6 +194,7 @@ impl Metrics {
         let completed = self.completed.load(Ordering::Relaxed);
         let batches = self.batches.load(Ordering::Relaxed);
         let solves_completed = self.solves_completed.load(Ordering::Relaxed);
+        let solve_batches = self.solve_batches.load(Ordering::Relaxed);
         let div = |num: u64, den: u64| if den == 0 { 0.0 } else { num as f64 / den as f64 };
         MetricsSnapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
@@ -148,17 +204,24 @@ impl Metrics {
             mean_queue_ms: div(self.queue_us.load(Ordering::Relaxed), completed) / 1000.0,
             mean_total_ms: div(self.total_us.load(Ordering::Relaxed), completed) / 1000.0,
             mean_occupancy: div(self.batched_jobs.load(Ordering::Relaxed), batches),
+            queue: self.queue_hist.summary(),
+            total: self.total_hist.summary(),
             solves_submitted: self.solves_submitted.load(Ordering::Relaxed),
             solves_completed,
             solves_failed: self.solves_failed.load(Ordering::Relaxed),
             mean_solve_ms: div(self.solve_us.load(Ordering::Relaxed), solves_completed) / 1000.0,
+            solve: self.solve_hist.summary(),
+            solve_native: self.solve_hist_native.summary(),
+            solve_sharded: self.solve_hist_sharded.summary(),
+            solve_rtl: self.solve_hist_rtl.summary(),
             solve_periods: self.solve_periods.load(Ordering::Relaxed),
+            solves_native: self.solves_native.load(Ordering::Relaxed),
             solves_sharded: self.solves_sharded.load(Ordering::Relaxed),
             solve_sync_rounds: self.solve_sync_rounds.load(Ordering::Relaxed),
-            solve_batches: self.solve_batches.load(Ordering::Relaxed),
+            solve_batches,
             solve_batch_occupancy: div(
                 self.solve_batched_jobs.load(Ordering::Relaxed),
-                self.solve_batches.load(Ordering::Relaxed),
+                solve_batches,
             ),
             solve_lanes_retired: self.solve_lanes_retired.load(Ordering::Relaxed),
             solves_rtl: self.solves_rtl.load(Ordering::Relaxed),
@@ -167,9 +230,119 @@ impl Metrics {
     }
 }
 
+fn summary_json(s: &LatencySummary) -> Json {
+    Json::obj(vec![
+        ("count", Json::num(s.count as f64)),
+        ("mean_ms", Json::num(s.mean_ms)),
+        ("p50_ms", Json::num(s.p50_ms)),
+        ("p90_ms", Json::num(s.p90_ms)),
+        ("p99_ms", Json::num(s.p99_ms)),
+    ])
+}
+
+impl MetricsSnapshot {
+    /// The snapshot as one JSON object — counters at the top level,
+    /// latency summaries as nested objects (each with `count`/`mean_ms`/
+    /// `p50_ms`/`p90_ms`/`p99_ms`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("submitted", Json::num(self.submitted as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("timeouts", Json::num(self.timeouts as f64)),
+            ("batches", Json::num(self.batches as f64)),
+            ("mean_queue_ms", Json::num(self.mean_queue_ms)),
+            ("mean_total_ms", Json::num(self.mean_total_ms)),
+            ("mean_occupancy", Json::num(self.mean_occupancy)),
+            ("queue", summary_json(&self.queue)),
+            ("total", summary_json(&self.total)),
+            ("solves_submitted", Json::num(self.solves_submitted as f64)),
+            ("solves_completed", Json::num(self.solves_completed as f64)),
+            ("solves_failed", Json::num(self.solves_failed as f64)),
+            ("mean_solve_ms", Json::num(self.mean_solve_ms)),
+            ("solve", summary_json(&self.solve)),
+            ("solve_native", summary_json(&self.solve_native)),
+            ("solve_sharded", summary_json(&self.solve_sharded)),
+            ("solve_rtl", summary_json(&self.solve_rtl)),
+            ("solve_periods", Json::num(self.solve_periods as f64)),
+            ("solves_native", Json::num(self.solves_native as f64)),
+            ("solves_sharded", Json::num(self.solves_sharded as f64)),
+            ("solve_sync_rounds", Json::num(self.solve_sync_rounds as f64)),
+            ("solve_batches", Json::num(self.solve_batches as f64)),
+            (
+                "solve_batch_occupancy",
+                Json::num(self.solve_batch_occupancy),
+            ),
+            (
+                "solve_lanes_retired",
+                Json::num(self.solve_lanes_retired as f64),
+            ),
+            ("solves_rtl", Json::num(self.solves_rtl as f64)),
+            ("solve_fast_cycles", Json::num(self.solve_fast_cycles as f64)),
+        ])
+    }
+
+    /// Prometheus-style text exposition: `onn_`-prefixed counters and
+    /// gauges plus quantile'd latency summaries.
+    pub fn prometheus(&self) -> String {
+        use std::fmt::Write;
+        let mut out = String::new();
+        let counters: [(&str, u64); 13] = [
+            ("onn_jobs_submitted", self.submitted),
+            ("onn_jobs_completed", self.completed),
+            ("onn_jobs_timeouts", self.timeouts),
+            ("onn_batches", self.batches),
+            ("onn_solves_submitted", self.solves_submitted),
+            ("onn_solves_completed", self.solves_completed),
+            ("onn_solves_failed", self.solves_failed),
+            ("onn_solve_periods", self.solve_periods),
+            ("onn_solve_sync_rounds", self.solve_sync_rounds),
+            ("onn_solve_batches", self.solve_batches),
+            ("onn_solve_lanes_retired", self.solve_lanes_retired),
+            ("onn_solve_fast_cycles", self.solve_fast_cycles),
+            ("onn_solves_total_all_engines", self.solves_completed),
+        ];
+        for (name, v) in counters {
+            let _ = writeln!(out, "# TYPE {name} counter\n{name} {v}");
+        }
+        for (kind, v) in [
+            ("native", self.solves_native),
+            ("sharded", self.solves_sharded),
+            ("rtl", self.solves_rtl),
+        ] {
+            let _ = writeln!(
+                out,
+                "# TYPE onn_solves_by_engine counter\nonn_solves_by_engine{{engine=\"{kind}\"}} {v}"
+            );
+        }
+        for (name, v) in [
+            ("onn_batch_occupancy", self.mean_occupancy),
+            ("onn_solve_batch_occupancy", self.solve_batch_occupancy),
+        ] {
+            let _ = writeln!(out, "# TYPE {name} gauge\n{name} {v}");
+        }
+        for (name, s) in [
+            ("onn_queue_latency", &self.queue),
+            ("onn_total_latency", &self.total),
+            ("onn_solve_latency", &self.solve),
+            ("onn_solve_latency_native", &self.solve_native),
+            ("onn_solve_latency_sharded", &self.solve_sharded),
+            ("onn_solve_latency_rtl", &self.solve_rtl),
+        ] {
+            let _ = writeln!(out, "# TYPE {name}_ms summary");
+            for (q, v) in [("0.5", s.p50_ms), ("0.9", s.p90_ms), ("0.99", s.p99_ms)] {
+                let _ = writeln!(out, "{name}_ms{{quantile=\"{q}\"}} {v}");
+            }
+            let _ = writeln!(out, "{name}_ms_sum {}", s.mean_ms * s.count as f64);
+            let _ = writeln!(out, "{name}_ms_count {}", s.count);
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Arc;
 
     #[test]
     fn snapshot_aggregates() {
@@ -187,6 +360,10 @@ mod tests {
         assert!((s.mean_queue_ms - 3.0).abs() < 0.01);
         assert!((s.mean_total_ms - 15.0).abs() < 0.01);
         assert!((s.mean_occupancy - 2.0).abs() < 1e-9);
+        // Histograms saw the same samples as the sums.
+        assert_eq!(s.queue.count, 2);
+        assert_eq!(s.total.count, 2);
+        assert!(s.total.p50_ms >= 10.0, "p50 never under-reports");
     }
 
     #[test]
@@ -195,6 +372,12 @@ mod tests {
         assert_eq!(s.mean_total_ms, 0.0);
         assert_eq!(s.mean_occupancy, 0.0);
         assert_eq!(s.mean_solve_ms, 0.0);
+        for sum in [s.queue, s.total, s.solve, s.solve_native, s.solve_sharded, s.solve_rtl] {
+            assert_eq!(sum, LatencySummary::default());
+            for v in [sum.mean_ms, sum.p50_ms, sum.p90_ms, sum.p99_ms] {
+                assert!(v.is_finite(), "empty summaries stay finite");
+            }
+        }
     }
 
     #[test]
@@ -202,7 +385,7 @@ mod tests {
         let m = Metrics::default();
         m.record_solve_submit();
         m.record_solve_submit();
-        m.record_solve_completion(Duration::from_millis(8), 128, 0);
+        m.record_solve_completion(Duration::from_millis(8), 128, 0, "native");
         m.record_solve_failure();
         let s = m.snapshot();
         assert_eq!(s.solves_submitted, 2);
@@ -210,20 +393,30 @@ mod tests {
         assert_eq!(s.solves_failed, 1);
         assert_eq!(s.solve_periods, 128);
         assert!((s.mean_solve_ms - 8.0).abs() < 0.01);
+        assert_eq!(s.solves_native, 1);
         assert_eq!(s.solves_sharded, 0, "native solves are not sharded");
-        // A sharded completion adds its sync rounds to the pool totals.
-        m.record_solve_completion(Duration::from_millis(4), 64, 96);
+        // A sharded completion adds its sync rounds to the pool totals
+        // — and classifies by its engine kind even if it never synced.
+        m.record_solve_completion(Duration::from_millis(4), 64, 96, "sharded");
+        m.record_solve_completion(Duration::from_millis(4), 64, 0, "sharded");
         let s = m.snapshot();
-        assert_eq!(s.solves_completed, 2);
-        assert_eq!(s.solves_sharded, 1);
+        assert_eq!(s.solves_completed, 3);
+        assert_eq!(s.solves_sharded, 2, "kind is explicit, not sync-inferred");
         assert_eq!(s.solve_sync_rounds, 96);
+        assert_eq!(s.solve_sharded.count, 2);
         // An rtl completion meters its emulated fast-clock cycles.
         assert_eq!(s.solves_rtl, 0);
-        m.record_solve_completion(Duration::from_millis(2), 32, 0);
+        m.record_solve_completion(Duration::from_millis(2), 32, 0, "rtl");
         m.record_solve_hardware(512);
         let s = m.snapshot();
         assert_eq!(s.solves_rtl, 1);
         assert_eq!(s.solve_fast_cycles, 512);
+        assert_eq!(s.solve_rtl.count, 1);
+        assert_eq!(s.solve.count, 4, "pool-wide histogram sees every kind");
+        // Per-kind counts and histograms agree.
+        assert_eq!(s.solves_native, s.solve_native.count);
+        assert_eq!(s.solves_sharded, s.solve_sharded.count);
+        assert_eq!(s.solves_rtl, s.solve_rtl.count);
     }
 
     #[test]
@@ -239,5 +432,82 @@ mod tests {
         assert_eq!(s.solve_batches, 2);
         assert!((s.solve_batch_occupancy - 2.0).abs() < 1e-9);
         assert_eq!(s.solve_lanes_retired, 8);
+    }
+
+    #[test]
+    fn concurrent_recording_is_consistent() {
+        let m = Arc::new(Metrics::default());
+        let threads = 4;
+        let per_thread = 250u64;
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let m = Arc::clone(&m);
+                std::thread::spawn(move || {
+                    let kinds = ["native", "sharded", "rtl"];
+                    for i in 0..per_thread {
+                        let d = Duration::from_micros(1 + (i % 1000) * 17);
+                        m.record_completion(d, d * 2, false);
+                        m.record_solve_completion(
+                            d,
+                            8,
+                            0,
+                            kinds[((t as u64 + i) % 3) as usize],
+                        );
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = m.snapshot();
+        let n = threads as u64 * per_thread;
+        assert_eq!(s.completed, n);
+        assert_eq!(s.solves_completed, n);
+        // Every sample landed in exactly one bucket of each histogram.
+        assert_eq!(s.queue.count, n);
+        assert_eq!(s.total.count, n);
+        assert_eq!(s.solve.count, n);
+        assert_eq!(
+            s.solve_native.count + s.solve_sharded.count + s.solve_rtl.count,
+            n,
+            "per-kind histograms partition the pool-wide one"
+        );
+        assert_eq!(s.solves_native + s.solves_sharded + s.solves_rtl, n);
+        // Percentile invariants hold under concurrency and never NaN.
+        for sum in [s.queue, s.total, s.solve, s.solve_native, s.solve_sharded, s.solve_rtl] {
+            assert!(sum.p50_ms <= sum.p90_ms && sum.p90_ms <= sum.p99_ms);
+            for v in [sum.mean_ms, sum.p50_ms, sum.p90_ms, sum.p99_ms] {
+                assert!(v.is_finite());
+            }
+        }
+        assert_eq!(s.solve_periods, n * 8);
+    }
+
+    #[test]
+    fn exports_carry_percentiles_and_per_engine_counters() {
+        let m = Metrics::default();
+        m.record_completion(Duration::from_millis(1), Duration::from_millis(3), false);
+        m.record_solve_completion(Duration::from_millis(5), 16, 0, "native");
+        m.record_solve_completion(Duration::from_millis(7), 16, 12, "sharded");
+        m.record_solve_completion(Duration::from_millis(9), 16, 0, "rtl");
+        let s = m.snapshot();
+        let j = s.to_json();
+        for key in ["solve", "solve_native", "solve_sharded", "solve_rtl"] {
+            let sub = j.get(key).expect(key);
+            for field in ["count", "mean_ms", "p50_ms", "p90_ms", "p99_ms"] {
+                assert!(sub.get(field).and_then(Json::as_f64).is_some(), "{key}.{field}");
+            }
+        }
+        assert_eq!(j.get("solves_native").and_then(Json::as_f64), Some(1.0));
+        // Round-trips through the hand-rolled parser.
+        let back = Json::parse(&j.to_string()).unwrap();
+        let count = back.get("solve").and_then(|s| s.get("count"));
+        assert_eq!(count.and_then(Json::as_f64), Some(3.0));
+        let text = s.prometheus();
+        assert!(text.contains("onn_solve_latency_ms{quantile=\"0.99\"}"));
+        assert!(text.contains("onn_solves_by_engine{engine=\"sharded\"} 1"));
+        assert!(text.contains("onn_solves_by_engine{engine=\"rtl\"} 1"));
+        assert!(text.contains("# TYPE onn_solve_latency_ms summary"));
     }
 }

@@ -107,6 +107,14 @@ impl Router {
                 req.problem.sectors
             ));
         }
+        // Placement overrides are exclusive: the emulated-hardware
+        // engine is single-fabric, so it cannot also be row-sharded.
+        if req.rtl && req.shards.is_some() {
+            return Err(anyhow!(
+                "solve request {}: 'rtl' and 'shards' are mutually exclusive",
+                req.id
+            ));
+        }
         // An explicit shard override must leave every shard at least one
         // row of the embedded coupling matrix.
         if let Some(shards) = req.shards {
@@ -242,8 +250,16 @@ mod tests {
         let mut bad = solve_req(3);
         bad.shards = Some(4); // more shards than oscillators
         assert!(r.submit_solve(bad).is_err());
+        let mut bad = solve_req(3);
+        bad.rtl = true;
+        bad.shards = Some(2); // placement overrides are exclusive
+        assert!(r.submit_solve(bad).is_err());
         let mut ok = solve_req(3);
         ok.shards = Some(3);
         assert!(r.submit_solve(ok).is_ok());
+        let mut ok = solve_req(3);
+        ok.rtl = true;
+        ok.trace = true;
+        assert!(r.submit_solve(ok).is_ok(), "rtl + trace is a valid combo");
     }
 }

@@ -319,6 +319,9 @@ impl Coordinator {
 /// Solve request line (see DESIGN_SOLVER.md):
 ///   {"type": "solve", "id": 2, "n": 6, "edges": [[0,3,1],...], ...}
 ///   -> {"id": 2, "spins": [...], "energy": -9, ...}
+/// Metrics scrape (DESIGN_SOLVER.md §9):
+///   {"type": "metrics"}
+///   -> {"type": "metrics", "snapshot": {...}, "prometheus": "..."}
 /// Errors come back as {"error": "..."} either way.
 pub fn handle_line(router: &Router, line: &str) -> String {
     let parsed = match Json::parse(line) {
@@ -329,6 +332,15 @@ pub fn handle_line(router: &Router, line: &str) -> String {
     };
     match parsed.get("type").and_then(Json::as_str) {
         Some("solve") => handle_solve_value(router, &parsed),
+        Some("metrics") => {
+            let snap = router.metrics.snapshot();
+            Json::obj(vec![
+                ("type", Json::str("metrics")),
+                ("snapshot", snap.to_json()),
+                ("prometheus", Json::str(snap.prometheus())),
+            ])
+            .to_string()
+        }
         None | Some("retrieve") => handle_retrieval_value(router, &parsed),
         Some(other) => {
             Json::obj(vec![("error", Json::str(format!("unknown request type '{other}'")))])
@@ -388,6 +400,15 @@ fn handle_solve_value(router: &Router, v: &Json) -> String {
                 fields.push(("hw_emulated_s", Json::num(hw.emulated_s)));
                 fields.push(("hw_fits_device", Json::Bool(hw.fits_device)));
             }
+            // Present only when the request asked for it, so untraced
+            // responses are byte-identical to the pre-telemetry wire.
+            let trace = res
+                .trace
+                .as_ref()
+                .map(|t| Json::Arr(t.iter().map(|r| r.to_json()).collect()));
+            if let Some(trace) = trace {
+                fields.push(("trace", trace));
+            }
             Json::obj(fields).to_string()
         }
         Err(e) => Json::obj(vec![("error", Json::str(e.to_string()))]).to_string(),
@@ -436,7 +457,10 @@ const MAX_WIRE_SHARDS: usize = 64;
 /// optional fields: `"h"` (length n), `"sectors"` (default 2),
 /// `"replicas"`, `"max_periods"`, `"schedule"` (geometric | linear |
 /// constant), `"noise"` (starting amplitude), `"seed"`, `"offset"`,
-/// `"shards"` (explicit engine override; absent = threshold rule).
+/// `"shards"` (explicit engine override; absent = threshold rule),
+/// `"rtl"` (force the emulated-hardware engine; exclusive with
+/// `"shards"`), `"trace"` (attach a solve-lifecycle trace to the
+/// result).
 fn parse_solve_request(v: &Json) -> Result<SolveRequest> {
     let n = v
         .get("n")
@@ -538,6 +562,17 @@ fn parse_solve_request(v: &Json) -> Result<SolveRequest> {
             Some(k)
         }
     };
+    let bool_field = |key: &str| match v.get(key) {
+        None => Ok(false),
+        Some(b) => b
+            .as_bool()
+            .ok_or_else(|| anyhow!("'{key}' must be a boolean")),
+    };
+    let rtl = bool_field("rtl")?;
+    let trace = bool_field("trace")?;
+    if rtl && shards.is_some() {
+        return Err(anyhow!("'rtl' and 'shards' are mutually exclusive"));
+    }
     Ok(SolveRequest {
         id: v.get("id").and_then(Json::as_usize).unwrap_or(0) as u64,
         problem,
@@ -546,6 +581,8 @@ fn parse_solve_request(v: &Json) -> Result<SolveRequest> {
         schedule,
         seed: v.get("seed").and_then(Json::as_usize).unwrap_or(1) as u64,
         shards,
+        rtl,
+        trace,
     })
 }
 
@@ -683,6 +720,12 @@ mod tests {
         assert_eq!(ok.problem.h[0], 0.5);
         assert_eq!(ok.schedule.name(), "geometric");
         assert_eq!(ok.shards, None, "no override by default");
+        assert!(!ok.rtl && !ok.trace, "observability flags default off");
+        let flagged = parse_solve_request(
+            &Json::parse(r#"{"n":2,"j":[0,-1,-1,0],"rtl":true,"trace":true}"#).unwrap(),
+        )
+        .unwrap();
+        assert!(flagged.rtl && flagged.trace);
         for bad in [
             r#"{"j":[0,0,0,0]}"#,                      // missing n
             r#"{"n":2}"#,                              // missing couplings
@@ -698,6 +741,9 @@ mod tests {
             r#"{"n":2,"j":[0,1,1,0],"sectors":1}"#,    // degenerate sector count
             r#"{"n":2,"j":[0,1,1,0],"shards":0}"#,     // zero shards
             r#"{"n":2,"j":[0,1,1,0],"shards":1000}"#,  // over the shard cap
+            r#"{"n":2,"j":[0,1,1,0],"rtl":1}"#,        // rtl must be boolean
+            r#"{"n":2,"j":[0,1,1,0],"trace":"yes"}"#,  // trace must be boolean
+            r#"{"n":2,"j":[0,1,1,0],"rtl":true,"shards":2}"#, // exclusive overrides
         ] {
             assert!(
                 parse_solve_request(&Json::parse(bad).unwrap()).is_err(),

@@ -263,9 +263,10 @@ pub fn fig12() -> String {
 /// Render a `BENCH_solver.json` document (written by `solve-bench`)
 /// in the same table style as the paper reproduction: the solver
 /// throughput trajectory (replica-periods/sec vs N per engine), the
-/// packed-serving comparison, and the float-native vs bit-true-RTL
-/// quality/time-to-solution rows.  Missing sections render as absent —
-/// older trajectory files stay readable.
+/// packed-serving comparison, the float-native vs bit-true-RTL
+/// quality/time-to-solution rows, the per-fabric latency percentiles,
+/// and the per-chunk convergence trajectories.  Missing sections
+/// render as absent — older trajectory files stay readable.
 pub fn solver_bench_report(doc: &Json) -> String {
     let num = |row: &Json, key: &str| row.get(key).and_then(Json::as_f64).unwrap_or(0.0);
     let mut out = String::new();
@@ -347,6 +348,53 @@ pub fn solver_bench_report(doc: &Json) -> String {
             out.push_str(&t.render());
         }
     }
+    if let Some(lat) = doc.get("latency").and_then(Json::as_arr) {
+        if !lat.is_empty() {
+            let mut t = Table::new(
+                "Solve latency percentiles per engine fabric (log-bucketed, \
+                 upper-bound estimates)",
+                &["Engine", "N", "Samples", "Mean [ms]", "p50 [ms]", "p90 [ms]", "p99 [ms]"],
+            );
+            for p in lat {
+                t.row(&[
+                    p.get("engine").and_then(Json::as_str).unwrap_or("?").to_string(),
+                    fmt_f(num(p, "n"), 0),
+                    fmt_f(num(p, "samples"), 0),
+                    fmt_f(num(p, "mean_ms"), 3),
+                    fmt_f(num(p, "p50_ms"), 3),
+                    fmt_f(num(p, "p90_ms"), 3),
+                    fmt_f(num(p, "p99_ms"), 3),
+                ]);
+            }
+            out.push_str(&t.render());
+        }
+    }
+    if let Some(conv) = doc.get("convergence").and_then(Json::as_arr) {
+        if !conv.is_empty() {
+            let mut t = Table::new(
+                "Convergence traces: running best energy per anneal chunk",
+                &["N", "Engine", "Waves", "Chunks", "First E", "Last E", "Final E", "Monotone"],
+            );
+            for p in conv {
+                let traj = p.get("best_energy").and_then(Json::as_arr).unwrap_or(&[]);
+                let first = traj.first().and_then(Json::as_f64).unwrap_or(0.0);
+                let last = traj.last().and_then(Json::as_f64).unwrap_or(0.0);
+                let mono = p.get("monotone").and_then(Json::as_bool).unwrap_or(false);
+                let flag = if mono { "yes" } else { "NO" };
+                t.row(&[
+                    fmt_f(num(p, "n"), 0),
+                    p.get("engine").and_then(Json::as_str).unwrap_or("?").to_string(),
+                    fmt_f(num(p, "waves"), 0),
+                    fmt_f(num(p, "chunks"), 0),
+                    fmt_f(first, 2),
+                    fmt_f(last, 2),
+                    fmt_f(num(p, "final_energy"), 2),
+                    flag.to_string(),
+                ]);
+            }
+            out.push_str(&t.render());
+        }
+    }
     if out.is_empty() {
         out.push_str("BENCH_solver.json carries no recognizable sections\n");
     }
@@ -382,7 +430,11 @@ mod tests {
 
     #[test]
     fn solver_bench_report_renders_all_sections() {
-        use crate::harness::solverbench::{bench_json, PackedPoint, RtlPoint, ThroughputPoint};
+        use crate::harness::solverbench::{
+            bench_json, ConvergencePoint, LatencyPoint, PackedPoint, RtlPoint, SolverBench,
+            ThroughputPoint,
+        };
+        use crate::telemetry::LatencySummary;
         let pts = vec![ThroughputPoint {
             n: 8,
             replicas: 4,
@@ -416,12 +468,41 @@ mod tests {
             emulated_s: 7.2e-5,
             host_s: 0.01,
         }];
-        let doc = bench_json(&pts, &packed, &rtl, 42);
+        let bench = SolverBench {
+            points: pts,
+            packed,
+            rtl,
+            latency: vec![LatencyPoint {
+                engine: "native",
+                n: 8,
+                samples: 9,
+                summary: LatencySummary {
+                    count: 9,
+                    mean_ms: 1.2,
+                    p50_ms: 1.024,
+                    p90_ms: 2.048,
+                    p99_ms: 2.048,
+                },
+            }],
+            convergence: vec![ConvergencePoint {
+                n: 8,
+                engine: "native",
+                waves: 1,
+                best_energy: vec![-3.0, -6.0],
+                monotone: true,
+                final_energy: -6.0,
+            }],
+        };
+        let doc = bench_json(&bench, 42);
         let s = solver_bench_report(&doc);
         assert!(s.contains("Solver throughput"), "{s}");
         assert!(s.contains("Packed serving"), "{s}");
         assert!(s.contains("bit-true RTL"), "{s}");
         assert!(s.contains("native"), "{s}");
+        assert!(s.contains("latency percentiles"), "{s}");
+        assert!(s.contains("p99 [ms]"), "{s}");
+        assert!(s.contains("Convergence traces"), "{s}");
+        assert!(s.contains("yes"), "monotone flag renders: {s}");
         // Unrelated documents degrade gracefully instead of panicking.
         let s = solver_bench_report(&Json::obj(vec![("x", Json::num(1.0))]));
         assert!(s.contains("no recognizable sections"), "{s}");

@@ -16,12 +16,13 @@ use crate::harness::bench;
 use crate::solver::anneal::Schedule;
 use crate::solver::graph::Graph;
 use crate::solver::portfolio::{
-    solve_native, solve_packed_native, solve_with, EngineSelect, PortfolioParams, DEFAULT_CHUNK,
-    MAX_WAVE_REPLICAS,
+    solve_native, solve_packed_native, solve_with, solve_with_trace, EngineSelect,
+    PortfolioParams, DEFAULT_CHUNK, MAX_WAVE_REPLICAS,
 };
 use crate::solver::problem::IsingProblem;
 use crate::solver::reductions::{coloring, max_cut};
 use crate::solver::sa;
+use crate::telemetry::{sink, LatencyHistogram, LatencySummary, TraceEvent, DEFAULT_TRACE_CAP};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::stats;
@@ -395,17 +396,166 @@ pub fn packed_throughput(
     }
 }
 
+/// Latency percentiles of repeated solves on one engine fabric,
+/// measured through the same log-bucketed histogram the serving
+/// metrics use ([`crate::telemetry::LatencyHistogram`]), so the bench
+/// file and a live pool's `metrics` snapshot report comparable
+/// quantile estimates (bucket upper bounds, never under-estimates).
+#[derive(Debug, Clone)]
+pub struct LatencyPoint {
+    /// Engine kind that served the samples ("native"/"sharded"/"rtl").
+    pub engine: &'static str,
+    pub n: usize,
+    /// Repeated solves of one fixed instance (identical work, so the
+    /// spread is pure serving jitter).
+    pub samples: usize,
+    pub summary: LatencySummary,
+}
+
+/// Solve one small max-cut instance `samples` times per engine fabric
+/// (native always; sharded when `shards >= 2`; rtl when `rtl`) and
+/// report log-bucketed latency percentiles per fabric.
+pub fn latency_percentiles(
+    n: usize,
+    replicas: usize,
+    periods: usize,
+    seed: u64,
+    samples: usize,
+    shards: usize,
+    rtl: bool,
+) -> Vec<LatencyPoint> {
+    let samples = samples.max(1);
+    let mut fabrics: Vec<(&'static str, EngineSelect)> = vec![("native", EngineSelect::Native)];
+    if shards >= 2 {
+        fabrics.push(("sharded", EngineSelect::Sharded { shards }));
+    }
+    if rtl {
+        fabrics.push(("rtl", EngineSelect::Rtl));
+    }
+    let mut rng = Rng::new(seed.wrapping_add(n as u64));
+    let g = Graph::random(n, (8.0 / n as f64).min(0.5), &mut rng);
+    let problem = max_cut(&g);
+    let params = PortfolioParams {
+        replicas,
+        max_periods: periods,
+        schedule: Schedule::Geometric {
+            start: 0.5,
+            factor: 0.8,
+        },
+        seed,
+        ..Default::default()
+    };
+    let mut rows = Vec::with_capacity(fabrics.len());
+    for (engine, select) in fabrics {
+        let hist = LatencyHistogram::new();
+        for _ in 0..samples {
+            let t0 = Instant::now();
+            solve_with(&problem, &params, select).expect("latency probe");
+            hist.record(t0.elapsed());
+        }
+        rows.push(LatencyPoint {
+            engine,
+            n,
+            samples,
+            summary: hist.summary(),
+        });
+    }
+    rows
+}
+
+/// The per-chunk best-energy trajectory of one traced solve: the
+/// `chunk` events of the telemetry contract (DESIGN_SOLVER.md §9),
+/// persisted so the bench file carries convergence shape, not just
+/// end-to-end rates.
+#[derive(Debug, Clone)]
+pub struct ConvergencePoint {
+    pub n: usize,
+    pub engine: &'static str,
+    /// Replica waves the portfolio drove.
+    pub waves: usize,
+    /// Running best energy after each anneal chunk, in chunk order.
+    pub best_energy: Vec<f64>,
+    /// Whether the trajectory is monotone non-increasing (it must be —
+    /// the solver keeps a running best; persisted so a regression is
+    /// visible in the artifact itself).
+    pub monotone: bool,
+    /// The outcome's best energy (<= the last chunk entry: greedy
+    /// polish may still improve on the raw readout).
+    pub final_energy: f64,
+}
+
+/// Run one traced native solve per size and extract the per-chunk
+/// best-energy trajectory from the trace (tracing never perturbs the
+/// solve, so these rows price nothing — they show convergence shape).
+pub fn convergence_traces(
+    sizes: &[usize],
+    replicas: usize,
+    periods: usize,
+    seed: u64,
+) -> Vec<ConvergencePoint> {
+    let mut rows = Vec::with_capacity(sizes.len());
+    for &n in sizes {
+        let mut rng = Rng::new(seed.wrapping_add(n as u64));
+        let g = Graph::random(n, (8.0 / n as f64).min(0.5), &mut rng);
+        let problem = max_cut(&g);
+        let params = PortfolioParams {
+            replicas,
+            max_periods: periods,
+            schedule: Schedule::Geometric {
+                start: 0.5,
+                factor: 0.8,
+            },
+            seed,
+            ..Default::default()
+        };
+        let trace = sink(DEFAULT_TRACE_CAP);
+        let out = solve_with_trace(&problem, &params, EngineSelect::Native, Some(&trace))
+            .expect("traced convergence probe");
+        let rec = trace.borrow();
+        let mut best = Vec::new();
+        let mut waves = 0usize;
+        for r in rec.records() {
+            match &r.event {
+                TraceEvent::Chunk { best_energy, .. } => best.push(*best_energy),
+                TraceEvent::WaveEnd { .. } => waves += 1,
+                _ => {}
+            }
+        }
+        let monotone = best.windows(2).all(|w| w[1] <= w[0] + 1e-12);
+        rows.push(ConvergencePoint {
+            n,
+            engine: out.engine,
+            waves,
+            best_energy: best,
+            monotone,
+            final_energy: out.best_energy,
+        });
+    }
+    rows
+}
+
+/// Everything one `record_throughput` run measured — the in-memory
+/// mirror of the `BENCH_solver.json` document it writes.
+#[derive(Debug, Clone, Default)]
+pub struct SolverBench {
+    pub points: Vec<ThroughputPoint>,
+    pub packed: Vec<PackedPoint>,
+    pub rtl: Vec<RtlPoint>,
+    pub latency: Vec<LatencyPoint>,
+    pub convergence: Vec<ConvergencePoint>,
+}
+
 /// Serialize a throughput sweep as the `BENCH_solver.json` document.
 /// Each point carries its engine label, so native and sharded rows for
 /// the same sizes live side by side in one trajectory file; packed
-/// rows (one per measured mix) sit alongside under `"packed"`, and
-/// float-vs-bit-true hardware rows under `"rtl"`.
-pub fn bench_json(
-    points: &[ThroughputPoint],
-    packed: &[PackedPoint],
-    rtl: &[RtlPoint],
-    recorded_unix_s: u64,
-) -> Json {
+/// rows (one per measured mix) sit alongside under `"packed"`,
+/// float-vs-bit-true hardware rows under `"rtl"`, latency percentiles
+/// per fabric under `"latency"`, and per-chunk best-energy
+/// trajectories under `"convergence"`.
+pub fn bench_json(bench: &SolverBench, recorded_unix_s: u64) -> Json {
+    let points = &bench.points;
+    let packed = &bench.packed;
+    let rtl = &bench.rtl;
     let mut engines: Vec<&'static str> = Vec::new();
     for p in points {
         if !engines.contains(&p.engine) {
@@ -488,6 +638,50 @@ pub fn bench_json(
                     .collect(),
             ),
         ),
+        (
+            "latency",
+            Json::Arr(
+                bench
+                    .latency
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("engine", Json::str(p.engine)),
+                            ("n", Json::num(p.n as f64)),
+                            ("samples", Json::num(p.samples as f64)),
+                            ("count", Json::num(p.summary.count as f64)),
+                            ("mean_ms", Json::num(p.summary.mean_ms)),
+                            ("p50_ms", Json::num(p.summary.p50_ms)),
+                            ("p90_ms", Json::num(p.summary.p90_ms)),
+                            ("p99_ms", Json::num(p.summary.p99_ms)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "convergence",
+            Json::Arr(
+                bench
+                    .convergence
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("n", Json::num(p.n as f64)),
+                            ("engine", Json::str(p.engine)),
+                            ("waves", Json::num(p.waves as f64)),
+                            ("chunks", Json::num(p.best_energy.len() as f64)),
+                            ("monotone", Json::Bool(p.monotone)),
+                            (
+                                "best_energy",
+                                Json::Arr(p.best_energy.iter().map(|&e| Json::num(e)).collect()),
+                            ),
+                            ("final_energy", Json::num(p.final_energy)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
     ])
 }
 
@@ -498,7 +692,10 @@ pub fn bench_json(
 /// packed row comparing a `packed_problems`-instance mix through a
 /// shared lane-block engine against the one-engine-per-request
 /// baseline, plus — when `rtl` — one float-vs-bit-true row per size
-/// (solution quality + emulated hardware time-to-solution).
+/// (solution quality + emulated hardware time-to-solution).  Every run
+/// also records latency percentiles per engine fabric (repeated solves
+/// of the smallest size through a log-bucketed histogram) and one
+/// traced convergence trajectory per size.
 #[allow(clippy::too_many_arguments)]
 pub fn record_throughput(
     path: &std::path::Path,
@@ -509,7 +706,10 @@ pub fn record_throughput(
     shards: usize,
     packed_problems: usize,
     rtl: bool,
-) -> std::io::Result<(Vec<ThroughputPoint>, Vec<PackedPoint>, Vec<RtlPoint>)> {
+) -> std::io::Result<SolverBench> {
+    // Repeated solves per fabric for the percentile rows: enough to
+    // make p90 land off the extremes, few enough to stay cheap.
+    const LATENCY_SAMPLES: usize = 9;
     let t0 = Instant::now();
     let mut points = throughput_sweep(sizes, replicas, periods, seed, 1);
     if shards >= 2 {
@@ -524,21 +724,34 @@ pub fn record_throughput(
     } else {
         Vec::new()
     };
+    let latency_n = sizes.iter().copied().min().unwrap_or(16);
+    let latency =
+        latency_percentiles(latency_n, replicas, periods, seed, LATENCY_SAMPLES, shards, rtl);
+    let convergence = convergence_traces(sizes, replicas, periods, seed);
+    let bench = SolverBench {
+        points,
+        packed,
+        rtl: rtl_points,
+        latency,
+        convergence,
+    };
     let stamp = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_secs())
         .unwrap_or(0);
-    let doc = bench_json(&points, &packed, &rtl_points, stamp);
+    let doc = bench_json(&bench, stamp);
     std::fs::write(path, format!("{doc}\n"))?;
     eprintln!(
-        "wrote {} ({} rows + {} packed + {} rtl in {:.1}s)",
+        "wrote {} ({} rows + {} packed + {} rtl + {} latency + {} convergence in {:.1}s)",
         path.display(),
-        points.len(),
-        packed.len(),
-        rtl_points.len(),
+        bench.points.len(),
+        bench.packed.len(),
+        bench.rtl.len(),
+        bench.latency.len(),
+        bench.convergence.len(),
         t0.elapsed().as_secs_f64()
     );
-    Ok((points, packed, rtl_points))
+    Ok(bench)
 }
 
 #[cfg(test)]
@@ -626,7 +839,32 @@ mod tests {
             emulated_s: 1.4e-4,
             host_s: 0.02,
         }];
-        let doc = bench_json(&pts, &packed, &rtl, 123);
+        let bench = SolverBench {
+            points: pts,
+            packed,
+            rtl,
+            latency: vec![LatencyPoint {
+                engine: "native",
+                n: 8,
+                samples: 9,
+                summary: LatencySummary {
+                    count: 9,
+                    mean_ms: 1.5,
+                    p50_ms: 1.024,
+                    p90_ms: 2.048,
+                    p99_ms: 2.048,
+                },
+            }],
+            convergence: vec![ConvergencePoint {
+                n: 8,
+                engine: "native",
+                waves: 1,
+                best_energy: vec![-3.0, -5.0, -5.0],
+                monotone: true,
+                final_energy: -5.5,
+            }],
+        };
+        let doc = bench_json(&bench, 123);
         let parsed = Json::parse(&doc.to_string()).unwrap();
         assert_eq!(
             parsed.get("bench").and_then(Json::as_str),
@@ -652,10 +890,21 @@ mod tests {
         assert_eq!(rrow.get("engine").and_then(Json::as_str), Some("rtl"));
         assert_eq!(rrow.get("rtl_cut").and_then(Json::as_usize), Some(11));
         assert_eq!(rrow.get("fast_cycles").and_then(Json::as_usize), Some(14_336));
+        let lrow = &parsed.get("latency").and_then(Json::as_arr).unwrap()[0];
+        assert_eq!(lrow.get("engine").and_then(Json::as_str), Some("native"));
+        assert_eq!(lrow.get("p50_ms").and_then(Json::as_f64), Some(1.024));
+        assert_eq!(lrow.get("p99_ms").and_then(Json::as_f64), Some(2.048));
+        let crow = &parsed.get("convergence").and_then(Json::as_arr).unwrap()[0];
+        assert_eq!(crow.get("chunks").and_then(Json::as_usize), Some(3));
+        assert_eq!(crow.get("monotone").and_then(Json::as_bool), Some(true));
+        assert_eq!(crow.get("best_energy").and_then(Json::as_arr).map(|a| a.len()), Some(3));
         assert!(
             doc.to_string().contains("\"engine\":\"rtl\""),
             "the CI gate greps for this literal"
         );
+        for key in ["\"p50_ms\"", "\"convergence\""] {
+            assert!(doc.to_string().contains(key), "the CI gate greps for {key}");
+        }
     }
 
     #[test]
@@ -675,6 +924,42 @@ mod tests {
         assert!(p.emulated_s > 0.0 && p.f_logic_mhz > 0.0);
         assert!(p.native_cut > 0 && p.rtl_cut > 0);
         assert_eq!(p.quantization_error, 0.0, "±1 max-cut couplings are exact");
+    }
+
+    #[test]
+    fn latency_rows_cover_each_engine_fabric() {
+        let rows = latency_percentiles(8, 2, 8, 3, 3, 2, true);
+        let engines: Vec<_> = rows.iter().map(|r| r.engine).collect();
+        assert_eq!(engines, vec!["native", "sharded", "rtl"]);
+        for r in &rows {
+            assert_eq!(r.samples, 3);
+            assert_eq!(r.summary.count, 3, "every sample lands in a bucket");
+            assert!(
+                r.summary.p50_ms <= r.summary.p90_ms && r.summary.p90_ms <= r.summary.p99_ms,
+                "percentiles ordered on {}",
+                r.engine
+            );
+            assert!(r.summary.mean_ms.is_finite() && r.summary.p99_ms > 0.0);
+        }
+    }
+
+    #[test]
+    fn convergence_traces_are_monotone_per_chunk() {
+        let rows = convergence_traces(&[8, 10], 2, 16, 5);
+        assert_eq!(rows.len(), 2);
+        for c in &rows {
+            assert_eq!(c.engine, "native");
+            assert!(!c.best_energy.is_empty(), "a solve always runs chunks");
+            assert!(c.waves >= 1);
+            assert!(c.monotone, "running best energy can only improve");
+            let last = *c.best_energy.last().unwrap();
+            assert!(
+                c.final_energy <= last + 1e-9,
+                "polish may improve on the last chunk ({last}), never regress \
+                 ({})",
+                c.final_energy
+            );
+        }
     }
 
     #[test]

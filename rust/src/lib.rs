@@ -32,6 +32,10 @@
 //!   the batched replica-portfolio driver served by the coordinator.
 //! * [`apps`] — the paper's future-work applications: max-cut and graph
 //!   coloring as thin reductions/decoders over [`solver`].
+//! * [`telemetry`] — observability: the solve-lifecycle trace recorder
+//!   threaded through the portfolio and the engines, and the
+//!   log-bucketed latency histograms behind the coordinator's metrics
+//!   percentiles and `"type": "metrics"` wire command.
 //! * [`util`] — in-tree infrastructure (deterministic RNG, minimal JSON,
 //!   stats, CLI parsing) standing in for crates that are not available
 //!   in this offline image.
@@ -47,6 +51,7 @@ pub mod onn;
 pub mod rtl;
 pub mod runtime;
 pub mod solver;
+pub mod telemetry;
 pub mod util;
 
 pub use onn::config::NetworkConfig;

@@ -43,6 +43,12 @@ Solver (generic Ising/QUBO subsystem, see DESIGN_SOLVER.md):
         [--rtl]           run on the bit-true emulated-hardware engine
                           (cycle-accurate serial MACs; reports the
                           emulated fast-cycle cost)
+        [--trace FILE]    export the solve-lifecycle trace as JSONL
+                          (wave/chunk/engine spans, DESIGN_SOLVER.md §9)
+  trace-check --path FILE
+                          validate a JSONL trace export against the
+                          telemetry schema (field presence + monotonic
+                          seq/timestamps)
   solve-bench [--sizes 16,32,64,128] [--replicas 32] [--periods 128]
         [--instances 5] [--shards K] [--packed [N]] [--rtl]
         [--out BENCH_solver.json]
@@ -52,7 +58,9 @@ Solver (generic Ising/QUBO subsystem, see DESIGN_SOLVER.md):
                           the shared lane-block engine against
                           one-engine-per-request serving; --rtl adds
                           float-native vs bit-true rows (quality +
-                          emulated time-to-solution)
+                          emulated time-to-solution); every run also
+                          records latency percentiles and a convergence
+                          trace per size
   solve-report [--path BENCH_solver.json]
                           render the recorded solver trajectory next to
                           the paper tables
@@ -124,6 +132,7 @@ fn run() -> Result<()> {
         "maxcut" => cmd_maxcut(&mut args),
         "coloring" => cmd_coloring(&mut args),
         "solve" => cmd_solve(&mut args),
+        "trace-check" => cmd_trace_check(&mut args),
         "solve-bench" => cmd_solve_bench(&mut args),
         "solve-report" => cmd_solve_report(&mut args),
         "serve" => cmd_serve(&mut args),
@@ -272,8 +281,9 @@ fn cmd_coloring(args: &mut Args) -> Result<()> {
 fn cmd_solve(args: &mut Args) -> Result<()> {
     use onn_scale::solver::anneal::Schedule;
     use onn_scale::solver::graph::Graph;
-    use onn_scale::solver::portfolio::{solve_with, EngineSelect, PortfolioParams};
+    use onn_scale::solver::portfolio::{solve_with_trace, EngineSelect, PortfolioParams};
     use onn_scale::solver::{reductions, sa};
+    use onn_scale::telemetry;
     use onn_scale::util::rng::Rng;
 
     let problem_kind = args.get_str("problem", "maxcut");
@@ -287,10 +297,19 @@ fn cmd_solve(args: &mut Args) -> Result<()> {
     let seed = args.get_u64("seed", 7)?;
     let shards = args.get_usize("shards", 0)?;
     let rtl = args.has("rtl");
+    let trace_path = args.get_opt_str("trace");
     args.finish().map_err(|e| anyhow!(e))?;
 
     let schedule = Schedule::parse(&schedule_name, noise)
         .ok_or_else(|| anyhow!("--schedule must be geometric|linear|constant"))?;
+    if trace_path.is_some() && problem_kind == "coloring" {
+        return Err(anyhow!(
+            "--trace is supported for the portfolio problems \
+             (maxcut|partition|cover), not coloring"
+        ));
+    }
+    let trace_cap = telemetry::DEFAULT_TRACE_CAP;
+    let trace_sink = trace_path.as_ref().map(|_| telemetry::sink(trace_cap));
     // 0 = size-based auto-selection; 1 = force native; K > 1 = force a
     // K-shard cluster (bit-identical either way).  --rtl instead runs
     // the bit-true emulated-hardware engine; any explicit --shards
@@ -330,7 +349,7 @@ fn cmd_solve(args: &mut Args) -> Result<()> {
         "maxcut" => {
             let g = Graph::random(nodes, prob, &mut rng);
             let problem = reductions::max_cut(&g);
-            let out = solve_with(&problem, &params, select)?;
+            let out = solve_with_trace(&problem, &params, select, trace_sink.as_ref())?;
             let cut = g.cut_value(&out.best_spins);
             let sweeps = replicas * periods;
             let base = sa::anneal(&problem, sweeps, seed + 1);
@@ -368,7 +387,7 @@ fn cmd_solve(args: &mut Args) -> Result<()> {
         "partition" => {
             let weights: Vec<i64> = (0..nodes).map(|_| rng.range_i64(1, 100)).collect();
             let problem = reductions::number_partition(&weights);
-            let out = solve_with(&problem, &params, select)?;
+            let out = solve_with_trace(&problem, &params, select, trace_sink.as_ref())?;
             let imbalance = reductions::partition_imbalance(&weights, &out.best_spins);
             let total: i64 = weights.iter().sum();
             println!("partitioning {nodes} numbers summing to {total}");
@@ -381,7 +400,7 @@ fn cmd_solve(args: &mut Args) -> Result<()> {
         "cover" => {
             let g = Graph::random(nodes, prob, &mut rng);
             let problem = reductions::min_vertex_cover(&g, 2.0);
-            let out = solve_with(&problem, &params, select)?;
+            let out = solve_with_trace(&problem, &params, select, trace_sink.as_ref())?;
             let cover = reductions::decode_cover(&g, &out.best_spins);
             let greedy = reductions::decode_cover(&g, &vec![-1i8; g.n]);
             println!("graph: {} nodes, {} edges", g.n, g.edges.len());
@@ -402,6 +421,30 @@ fn cmd_solve(args: &mut Args) -> Result<()> {
             ))
         }
     }
+    if let (Some(path), Some(sink)) = (&trace_path, &trace_sink) {
+        let rec = sink.borrow();
+        std::fs::write(path, rec.to_jsonl())
+            .map_err(|e| anyhow!("cannot write trace to {path}: {e}"))?;
+        println!(
+            "trace: {} records ({} dropped to the ring) -> {path}",
+            rec.len(),
+            rec.dropped()
+        );
+    }
+    Ok(())
+}
+
+/// Validate a JSONL trace export (`solve --trace FILE`) against the
+/// telemetry schema — the `trace-check` CI gate.
+fn cmd_trace_check(args: &mut Args) -> Result<()> {
+    use onn_scale::telemetry::validate_trace_jsonl;
+
+    let path = args.get_str("path", "trace.jsonl");
+    args.finish().map_err(|e| anyhow!(e))?;
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| anyhow!("cannot read {path}: {e} (run solve --trace first)"))?;
+    let count = validate_trace_jsonl(&text).map_err(|e| anyhow!("invalid trace {path}: {e}"))?;
+    println!("trace OK: {count} records ({path})");
     Ok(())
 }
 
@@ -435,7 +478,7 @@ fn cmd_solve_bench(args: &mut Args) -> Result<()> {
     let report = solverbench::quality_vs_sa(64, 0.1, instances, replicas, periods, seed);
     println!("{}", report.table());
 
-    let (points, packed, rtl_points) = solverbench::record_throughput(
+    let bench = solverbench::record_throughput(
         std::path::Path::new(&out_path),
         &sizes,
         replicas,
@@ -446,14 +489,14 @@ fn cmd_solve_bench(args: &mut Args) -> Result<()> {
         rtl,
     )?;
     println!("solver throughput (native vs sharded replica-periods/sec):");
-    for p in &points {
+    for p in &bench.points {
         println!(
             "  n={:<5} {:>9} {:>12.0} replica-periods/s   (median {:.3} s per \
              solve, {} sync rounds)",
             p.n, p.engine, p.replica_periods_per_sec, p.median_s, p.sync_rounds
         );
     }
-    for p in &packed {
+    for p in &bench.packed {
         println!(
             "packed serving ({} problems sharing one {}-lane engine, bucket n={}):",
             p.problems, p.lanes, p.bucket_n
@@ -467,9 +510,9 @@ fn cmd_solve_bench(args: &mut Args) -> Result<()> {
             p.unpacked_rps, p.unpacked_median_s
         );
     }
-    if !rtl_points.is_empty() {
+    if !bench.rtl.is_empty() {
         println!("float-native vs bit-true rtl (quality + emulated time-to-solution):");
-        for p in &rtl_points {
+        for p in &bench.rtl {
             println!(
                 "  n={:<5} cut {:>5} vs {:>5} (native/rtl)  quant err {:.4}  \
                  {} fast cycles @ {:.1} MHz -> {:.3e} s emulated ({:.3} s host sim)",
@@ -483,6 +526,36 @@ fn cmd_solve_bench(args: &mut Args) -> Result<()> {
                 p.host_s
             );
         }
+    }
+    println!("solve latency percentiles (log-bucketed, upper-bound estimates):");
+    for p in &bench.latency {
+        println!(
+            "  {:<8} n={:<4} {} samples  mean {:.3} ms  p50 {:.3}  p90 {:.3}  \
+             p99 {:.3} ms",
+            p.engine,
+            p.n,
+            p.samples,
+            p.summary.mean_ms,
+            p.summary.p50_ms,
+            p.summary.p90_ms,
+            p.summary.p99_ms
+        );
+    }
+    println!("convergence traces (running best energy per anneal chunk):");
+    for c in &bench.convergence {
+        let first = c.best_energy.first().copied().unwrap_or(0.0);
+        println!(
+            "  n={:<5} {:>8} {} waves, {} chunks: {:.2} -> {:.2} (final {:.2}, \
+             monotone: {})",
+            c.n,
+            c.engine,
+            c.waves,
+            c.best_energy.len(),
+            first,
+            c.best_energy.last().copied().unwrap_or(first),
+            c.final_energy,
+            if c.monotone { "yes" } else { "NO" }
+        );
     }
     Ok(())
 }

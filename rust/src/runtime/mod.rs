@@ -178,6 +178,16 @@ pub trait ChunkEngine {
     fn hardware_cost(&self) -> Option<HardwareCost> {
         None
     }
+
+    /// Install (or, with `None`, remove) a solve-lifecycle trace sink
+    /// (DESIGN_SOLVER.md §9).  Instrumented engines record one
+    /// `engine_chunk` span per `run_chunk` call — host step time plus
+    /// their own meters (sync-round latency on the sharded cluster,
+    /// fast-cycle deltas on the rtl engine).  Recording only observes
+    /// values the engine already computed; a traced run is bit-identical
+    /// to an untraced one.  Engines without instrumentation ignore the
+    /// sink.
+    fn set_trace_sink(&mut self, _sink: Option<crate::telemetry::TraceSink>) {}
 }
 
 /// Constructs an engine inside a worker thread (PJRT handles are

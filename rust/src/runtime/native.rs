@@ -15,6 +15,7 @@ use anyhow::{anyhow, Result};
 use crate::onn::config::NetworkConfig;
 use crate::onn::dynamics::{FunctionalEngine, PhaseNoise};
 use crate::runtime::ChunkEngine;
+use crate::telemetry::{TraceEvent, TraceSink};
 
 /// One programmed lane block: lanes `[lane0, lane0 + lanes)` running
 /// their own problem on a private functional engine.
@@ -35,6 +36,10 @@ pub struct NativeEngine {
     /// Programmed lane blocks; non-empty switches `run_chunk` to
     /// block-dispatch mode (only block lanes advance).
     blocks: Vec<LaneBlock>,
+    /// Lifecycle trace sink; when set, `run_chunk` records one
+    /// `engine_chunk` span (host step time; this fabric has no sync or
+    /// cycle meters).
+    trace: Option<TraceSink>,
 }
 
 impl NativeEngine {
@@ -46,6 +51,7 @@ impl NativeEngine {
             inner: None,
             noise: None,
             blocks: Vec::new(),
+            trace: None,
         }
     }
 
@@ -63,6 +69,37 @@ impl NativeEngine {
             .iter_mut()
             .find(|b| b.lane0 == lane0)
             .ok_or_else(|| anyhow!("no lane block programmed at lane {lane0}"))
+    }
+
+    fn run_chunk_inner(
+        &mut self,
+        phases: &mut [i32],
+        settled: &mut [i32],
+        period0: i32,
+    ) -> Result<()> {
+        let n = self.cfg.n;
+        if phases.len() != self.batch * n || settled.len() != self.batch {
+            return Err(anyhow!("shape mismatch"));
+        }
+        if !self.blocks.is_empty() {
+            // Lane-block mode: each block advances through its own
+            // engine; lanes outside every block stay untouched.
+            for blk in self.blocks.iter_mut() {
+                blk.engine.run_chunk(
+                    &mut phases[blk.lane0 * n..(blk.lane0 + blk.lanes) * n],
+                    &mut settled[blk.lane0..blk.lane0 + blk.lanes],
+                    period0,
+                    self.chunk,
+                );
+            }
+            return Ok(());
+        }
+        let eng = self
+            .inner
+            .as_mut()
+            .ok_or_else(|| anyhow!("set_weights not called"))?;
+        eng.run_chunk(phases, settled, period0, self.chunk);
+        Ok(())
     }
 }
 
@@ -89,28 +126,18 @@ impl ChunkEngine for NativeEngine {
     }
 
     fn run_chunk(&mut self, phases: &mut [i32], settled: &mut [i32], period0: i32) -> Result<()> {
-        let n = self.cfg.n;
-        if phases.len() != self.batch * n || settled.len() != self.batch {
-            return Err(anyhow!("shape mismatch"));
+        let t0 = self.trace.as_ref().map(|_| std::time::Instant::now());
+        self.run_chunk_inner(phases, settled, period0)?;
+        if let (Some(sink), Some(t0)) = (self.trace.as_ref(), t0) {
+            sink.borrow_mut().record(TraceEvent::EngineChunk {
+                engine: "native",
+                period0: period0 as i64,
+                step_us: t0.elapsed().as_micros().min(u64::MAX as u128) as u64,
+                sync_rounds: 0,
+                sync_us: 0,
+                fast_cycles: 0,
+            });
         }
-        if !self.blocks.is_empty() {
-            // Lane-block mode: each block advances through its own
-            // engine; lanes outside every block stay untouched.
-            for blk in self.blocks.iter_mut() {
-                blk.engine.run_chunk(
-                    &mut phases[blk.lane0 * n..(blk.lane0 + blk.lanes) * n],
-                    &mut settled[blk.lane0..blk.lane0 + blk.lanes],
-                    period0,
-                    self.chunk,
-                );
-            }
-            return Ok(());
-        }
-        let eng = self
-            .inner
-            .as_mut()
-            .ok_or_else(|| anyhow!("set_weights not called"))?;
-        eng.run_chunk(phases, settled, period0, self.chunk);
         Ok(())
     }
 
@@ -185,6 +212,10 @@ impl ChunkEngine for NativeEngine {
             return Err(anyhow!("no lane block programmed at lane {lane0}"));
         }
         Ok(())
+    }
+
+    fn set_trace_sink(&mut self, sink: Option<TraceSink>) {
+        self.trace = sink;
     }
 }
 

@@ -39,6 +39,7 @@ use crate::onn::config::NetworkConfig;
 use crate::onn::dynamics::PhaseNoise;
 use crate::rtl::hybrid::HybridOnn;
 use crate::runtime::{ChunkEngine, HardwareCost};
+use crate::telemetry::{TraceEvent, TraceSink};
 
 pub struct RtlEngine {
     cfg: NetworkConfig,
@@ -59,6 +60,10 @@ pub struct RtlEngine {
     /// active lanes unconditionally — a fresh init that happens to
     /// equal a lane's current phases must still reset its registers.
     pending_wave: Option<usize>,
+    /// Lifecycle trace sink; when set, `run_chunk` records one
+    /// `engine_chunk` span carrying the chunk's emulated fast-cycle
+    /// delta next to the host step time.
+    trace: Option<TraceSink>,
 }
 
 impl RtlEngine {
@@ -76,7 +81,16 @@ impl RtlEngine {
             noise_tick: 0,
             active: batch,
             pending_wave: None,
+            trace: None,
         }
+    }
+
+    /// Sum of every lane's fast-cycle counter (0 before `set_weights`).
+    fn total_fast_cycles(&self) -> u64 {
+        self.sim
+            .as_ref()
+            .map(|s| (0..s.lanes()).map(|l| s.lane_fast_cycles(l)).sum())
+            .unwrap_or(0)
     }
 }
 
@@ -106,6 +120,8 @@ impl ChunkEngine for RtlEngine {
     }
 
     fn run_chunk(&mut self, phases: &mut [i32], settled: &mut [i32], period0: i32) -> Result<()> {
+        let t0 = self.trace.as_ref().map(|_| std::time::Instant::now());
+        let cycles0 = self.total_fast_cycles();
         let n = self.cfg.n;
         if phases.len() != self.batch * n || settled.len() != self.batch {
             return Err(anyhow!("shape mismatch"));
@@ -147,6 +163,16 @@ impl ChunkEngine for RtlEngine {
                 }
             }
             phases[lane * n..(lane + 1) * n].copy_from_slice(sim.lane_phases(lane));
+        }
+        if let (Some(t0), Some(sink)) = (t0, self.trace.as_ref()) {
+            sink.borrow_mut().record(TraceEvent::EngineChunk {
+                engine: "rtl",
+                period0: period0 as i64,
+                step_us: t0.elapsed().as_micros().min(u64::MAX as u128) as u64,
+                sync_rounds: 0,
+                sync_us: 0,
+                fast_cycles: self.total_fast_cycles() - cycles0,
+            });
         }
         Ok(())
     }
@@ -195,6 +221,10 @@ impl ChunkEngine for RtlEngine {
             fits_device: res.fits(&self.device),
             area_percent: res.area_percent(&self.device),
         })
+    }
+
+    fn set_trace_sink(&mut self, sink: Option<TraceSink>) {
+        self.trace = sink;
     }
 }
 

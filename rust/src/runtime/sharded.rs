@@ -28,6 +28,7 @@ use crate::onn::dynamics::PhaseNoise;
 use crate::onn::phase::{amplitude, wrap};
 use crate::onn::weights::WeightMatrix;
 use crate::runtime::ChunkEngine;
+use crate::telemetry::{TraceEvent, TraceSink};
 
 /// One shard: rows `[row0, row0 + rows)` of the weight matrix.
 struct ShardSpec {
@@ -106,6 +107,13 @@ pub struct ShardedEngine {
     /// demands a fresh `set_weights` instead of silently resuming a
     /// stale pre-packing problem mid-stream.
     whole_batch_stale: bool,
+    /// Lifecycle trace sink; when set, `run_chunk` records one
+    /// `engine_chunk` span carrying the chunk's all-gather round count
+    /// and the microseconds spent inside those rounds.
+    trace: Option<TraceSink>,
+    /// Microseconds spent in broadcast+gather since the current
+    /// `run_chunk` began; only accumulated while tracing.
+    sync_us_acc: u64,
 }
 
 impl ShardedEngine {
@@ -163,6 +171,8 @@ impl ShardedEngine {
             tick: 0,
             blocks: Vec::new(),
             whole_batch_stale: false,
+            trace: None,
+            sync_us_acc: 0,
         })
     }
 
@@ -181,6 +191,7 @@ impl ShardedEngine {
 
     /// One synchronous period across all shards (broadcast + gather).
     fn period_step(&mut self, phases: &mut [i32]) -> Result<()> {
+        let t0 = self.trace.as_ref().map(|_| std::time::Instant::now());
         // Broadcast the full state to every shard...
         for sh in &self.shards {
             sh.tx
@@ -192,6 +203,9 @@ impl ShardedEngine {
             let slice = sh.rx.recv().map_err(|_| anyhow!("shard died"))?;
             debug_assert_eq!(slice.len(), sh.rows);
             phases[sh.row0..sh.row0 + sh.rows].copy_from_slice(&slice);
+        }
+        if let Some(t0) = t0 {
+            self.sync_us_acc += t0.elapsed().as_micros().min(u64::MAX as u128) as u64;
         }
         self.sync_rounds += 1;
         if self.noise.is_some() {
@@ -207,6 +221,7 @@ impl ShardedEngine {
     /// single lane's phase vector (broadcast + gather, same all-gather
     /// as the whole-batch path).
     fn period_step_block(&mut self, idx: usize, phases: &mut [i32]) -> Result<()> {
+        let t0 = self.trace.as_ref().map(|_| std::time::Instant::now());
         let (lane0, tick) = (self.blocks[idx].lane0, self.blocks[idx].tick);
         for sh in &self.shards {
             sh.tx
@@ -220,6 +235,9 @@ impl ShardedEngine {
             }
             phases[sh.row0..sh.row0 + sh.rows].copy_from_slice(&slice);
         }
+        if let Some(t0) = t0 {
+            self.sync_us_acc += t0.elapsed().as_micros().min(u64::MAX as u128) as u64;
+        }
         self.sync_rounds += 1;
         if self.blocks[idx].amplitude > 0.0 {
             self.blocks[idx].tick += 1;
@@ -232,6 +250,57 @@ impl ShardedEngine {
             .iter()
             .position(|b| b.lane0 == lane0)
             .ok_or_else(|| anyhow!("no lane block programmed at lane {lane0}"))
+    }
+
+    fn run_chunk_inner(
+        &mut self,
+        phases: &mut [i32],
+        settled: &mut [i32],
+        period0: i32,
+    ) -> Result<()> {
+        let n = self.cfg.n;
+        let b = self.batch;
+        if phases.len() != b * n || settled.len() != b {
+            return Err(anyhow!("shape mismatch"));
+        }
+        let mut prev = vec![0i32; n];
+        if !self.blocks.is_empty() {
+            // Lane-block mode: each block's lanes advance with that
+            // block's couplings + kick stream; other lanes stay put.
+            let spans: Vec<(usize, usize)> =
+                self.blocks.iter().map(|blk| (blk.lane0, blk.lanes)).collect();
+            for (idx, (lane0, lanes)) in spans.into_iter().enumerate() {
+                for slot in 0..lanes {
+                    let bi = lane0 + slot;
+                    let ph = &mut phases[bi * n..(bi + 1) * n];
+                    for k in 0..self.chunk {
+                        prev.copy_from_slice(ph);
+                        self.period_step_block(idx, ph)?;
+                        if settled[bi] < 0 && ph == &prev[..] {
+                            settled[bi] = period0 + k as i32;
+                        }
+                    }
+                }
+            }
+            return Ok(());
+        }
+        if self.whole_batch_stale {
+            return Err(anyhow!(
+                "whole-batch weights were invalidated by lane-block mode; \
+                 call set_weights before running the full batch"
+            ));
+        }
+        for bi in 0..b {
+            let ph = &mut phases[bi * n..(bi + 1) * n];
+            for k in 0..self.chunk {
+                prev.copy_from_slice(ph);
+                self.period_step(ph)?;
+                if settled[bi] < 0 && ph == &prev[..] {
+                    settled[bi] = period0 + k as i32;
+                }
+            }
+        }
+        Ok(())
     }
 
     /// Stop the shard workers and wait for them.  Dropping the engine
@@ -455,47 +524,19 @@ impl ChunkEngine for ShardedEngine {
     }
 
     fn run_chunk(&mut self, phases: &mut [i32], settled: &mut [i32], period0: i32) -> Result<()> {
-        let n = self.cfg.n;
-        let b = self.batch;
-        if phases.len() != b * n || settled.len() != b {
-            return Err(anyhow!("shape mismatch"));
-        }
-        let mut prev = vec![0i32; n];
-        if !self.blocks.is_empty() {
-            // Lane-block mode: each block's lanes advance with that
-            // block's couplings + kick stream; other lanes stay put.
-            let spans: Vec<(usize, usize)> =
-                self.blocks.iter().map(|blk| (blk.lane0, blk.lanes)).collect();
-            for (idx, (lane0, lanes)) in spans.into_iter().enumerate() {
-                for slot in 0..lanes {
-                    let bi = lane0 + slot;
-                    let ph = &mut phases[bi * n..(bi + 1) * n];
-                    for k in 0..self.chunk {
-                        prev.copy_from_slice(ph);
-                        self.period_step_block(idx, ph)?;
-                        if settled[bi] < 0 && ph == &prev[..] {
-                            settled[bi] = period0 + k as i32;
-                        }
-                    }
-                }
-            }
-            return Ok(());
-        }
-        if self.whole_batch_stale {
-            return Err(anyhow!(
-                "whole-batch weights were invalidated by lane-block mode; \
-                 call set_weights before running the full batch"
-            ));
-        }
-        for bi in 0..b {
-            let ph = &mut phases[bi * n..(bi + 1) * n];
-            for k in 0..self.chunk {
-                prev.copy_from_slice(ph);
-                self.period_step(ph)?;
-                if settled[bi] < 0 && ph == &prev[..] {
-                    settled[bi] = period0 + k as i32;
-                }
-            }
+        let t0 = self.trace.as_ref().map(|_| std::time::Instant::now());
+        let rounds0 = self.sync_rounds;
+        self.sync_us_acc = 0;
+        self.run_chunk_inner(phases, settled, period0)?;
+        if let (Some(t0), Some(sink)) = (t0, self.trace.as_ref()) {
+            sink.borrow_mut().record(TraceEvent::EngineChunk {
+                engine: "sharded",
+                period0: period0 as i64,
+                step_us: t0.elapsed().as_micros().min(u64::MAX as u128) as u64,
+                sync_rounds: self.sync_rounds - rounds0,
+                sync_us: self.sync_us_acc,
+                fast_cycles: 0,
+            });
         }
         Ok(())
     }
@@ -595,6 +636,10 @@ impl ChunkEngine for ShardedEngine {
                 .map_err(|_| anyhow!("shard died"))?;
         }
         Ok(())
+    }
+
+    fn set_trace_sink(&mut self, sink: Option<TraceSink>) {
+        self.trace = sink;
     }
 }
 

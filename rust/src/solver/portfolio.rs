@@ -21,6 +21,7 @@ use crate::runtime::{ChunkEngine, HardwareCost};
 use crate::solver::anneal::Schedule;
 use crate::solver::problem::IsingProblem;
 use crate::solver::sa::greedy_descent;
+use crate::telemetry::{TraceEvent, TraceSink};
 use crate::util::rng::Rng;
 
 /// Embedded sizes at or above this many oscillators default to the
@@ -200,6 +201,13 @@ pub struct SolveOutcome {
     pub hardware: Option<HardwareCost>,
 }
 
+/// Record one lifecycle event when a sink is attached; free when not.
+fn trace_event(trace: Option<&TraceSink>, event: TraceEvent) {
+    if let Some(sink) = trace {
+        sink.borrow_mut().record(event);
+    }
+}
+
 /// Run the portfolio on an already-constructed engine.  The engine's
 /// network size must equal [`IsingProblem::embed_dim`]; weights are
 /// installed here.
@@ -207,6 +215,22 @@ pub fn solve_portfolio(
     engine: &mut dyn ChunkEngine,
     problem: &IsingProblem,
     params: &PortfolioParams,
+) -> Result<SolveOutcome> {
+    solve_portfolio_traced(engine, problem, params, None)
+}
+
+/// [`solve_portfolio`] with an optional lifecycle trace sink
+/// (DESIGN_SOLVER.md §9).  The sink is installed on the engine for the
+/// duration of the solve, so engine `engine_chunk` spans interleave
+/// with the portfolio's wave/chunk events.  Tracing only *observes*
+/// values the solve computed anyway — it draws nothing from the RNG
+/// and issues no extra engine calls, so a traced solve is bit-identical
+/// to an untraced one at equal seed.
+pub fn solve_portfolio_traced(
+    engine: &mut dyn ChunkEngine,
+    problem: &IsingProblem,
+    params: &PortfolioParams,
+    trace: Option<&TraceSink>,
 ) -> Result<SolveOutcome> {
     problem.validate().map_err(|e| anyhow!("bad problem: {e}"))?;
     if params.replicas == 0 {
@@ -231,6 +255,17 @@ pub fn solve_portfolio(
     let (wq, quantization_error) = problem.embed_with_error(&cfg);
     engine.set_weights(&wq.to_f32())?;
     let noise_applied = engine.supports_noise();
+    if let Some(sink) = trace {
+        engine.set_trace_sink(Some(sink.clone()));
+    }
+    trace_event(
+        trace,
+        TraceEvent::SolveStart {
+            n: m,
+            engine: engine.kind(),
+            replicas: params.replicas,
+        },
+    );
 
     let b = engine.batch();
     if b == 0 {
@@ -255,6 +290,7 @@ pub fn solve_portfolio(
     let mut phases = vec![0i32; b * m];
     let mut settled = vec![-1i32; b];
     let mut remaining = params.replicas;
+    let mut wave_idx = 0usize;
     while remaining > 0 {
         let real = remaining.min(b);
         // Random init: binary problems start on the binary manifold
@@ -282,6 +318,13 @@ pub fn solve_portfolio(
         // lanes unconditionally and neither advances nor meters the
         // padding); float fabrics ignore this.
         engine.begin_wave(real)?;
+        trace_event(
+            trace,
+            TraceEvent::WaveStart {
+                wave: wave_idx,
+                lanes: real,
+            },
+        );
         for slot in 0..real {
             let e = eval(&phases[slot * m..(slot + 1) * m]);
             initial_best = initial_best.min(e);
@@ -292,6 +335,8 @@ pub fn solve_portfolio(
         }
 
         let mut stall = 0usize;
+        let mut wave_exit = "completed";
+        let mut wave_chunks = 0usize;
         for k in 0..chunks_per_wave {
             // On engines without a noise hook no kicks ever happen, so
             // the dynamics are deterministic from chunk 0 and the
@@ -306,6 +351,7 @@ pub fn solve_portfolio(
             }
             engine.run_chunk(&mut phases, &mut settled, (k * chunk) as i32)?;
             chunks_run += 1;
+            wave_chunks = k + 1;
             if level > 0.0 {
                 // Settle flags are meaningless while kicks are active.
                 settled.iter_mut().for_each(|s| *s = -1);
@@ -319,6 +365,16 @@ pub fn solve_portfolio(
                     improved = true;
                 }
             }
+            if let Some(sink) = trace {
+                let settled_lanes = (0..real).filter(|&slot| settled[slot] >= 0).count();
+                sink.borrow_mut().record(TraceEvent::Chunk {
+                    wave: wave_idx,
+                    chunk: k,
+                    noise: level,
+                    best_energy,
+                    settled_lanes,
+                });
+            }
             if level == 0.0 {
                 let all_settled = (0..real).all(|slot| settled[slot] >= 0);
                 if improved {
@@ -330,24 +386,59 @@ pub fn solve_portfolio(
                     || (params.plateau_chunks > 0 && stall >= params.plateau_chunks)
                 {
                     early_exit = k + 1 < chunks_per_wave;
+                    wave_exit = if all_settled { "all_settled" } else { "plateau" };
                     break;
                 }
             }
         }
 
-        settled_replicas += (0..real).filter(|&slot| settled[slot] >= 0).count();
+        let wave_settled = (0..real).filter(|&slot| settled[slot] >= 0).count();
+        settled_replicas += wave_settled;
+        trace_event(
+            trace,
+            TraceEvent::WaveEnd {
+                wave: wave_idx,
+                lanes: real,
+                settled_lanes: wave_settled,
+                chunks: wave_chunks,
+                exit: wave_exit,
+            },
+        );
         for slot in 0..real {
             let full = &phases[slot * m..(slot + 1) * m];
             replica_phases.push(full[..problem.n].to_vec());
             if params.polish && binary {
-                polish_replica(problem, full, p, &mut best_polished);
+                let post_energy = polish_replica(problem, full, p, &mut best_polished);
+                if let Some(sink) = trace {
+                    // For binary problems `eval` is exactly the decoded
+                    // pre-descent Hamiltonian, so pre/post is the polish
+                    // delta.  Computed only when tracing.
+                    sink.borrow_mut().record(TraceEvent::Polish {
+                        replica: replica_phases.len() - 1,
+                        pre_energy: eval(full),
+                        post_energy,
+                    });
+                }
             }
         }
         remaining -= real;
+        wave_idx += 1;
     }
 
     let (best_spins, best_phases, best_energy) =
         finish_readout(problem, params.polish, p, best_energy, best_phases, best_polished);
+
+    trace_event(
+        trace,
+        TraceEvent::SolveEnd {
+            best_energy,
+            periods: chunks_run * chunk,
+            settled_replicas,
+        },
+    );
+    if trace.is_some() {
+        engine.set_trace_sink(None);
+    }
 
     Ok(SolveOutcome {
         best_spins,
@@ -384,19 +475,21 @@ fn eval_state(problem: &IsingProblem, full: &[i32], p: i32) -> f64 {
 /// attached — the gauge matters for field problems) and fold it into
 /// the running best: strict descent can only improve, so the winner
 /// dominates every unpolished replica.  Shared by the solo and packed
-/// drivers; callers gate on `polish && binary`.
+/// drivers; callers gate on `polish && binary`.  Returns the polished
+/// energy (the trace's `polish.post_energy`).
 fn polish_replica(
     problem: &IsingProblem,
     full: &[i32],
     p: i32,
     best_polished: &mut Option<(Vec<i8>, f64)>,
-) {
+) -> f64 {
     let mut spins = problem.decode_spins(full, p);
     greedy_descent(problem, &mut spins);
     let e = problem.energy(&spins);
     if best_polished.as_ref().map_or(true, |(_, be)| e < *be) {
         *best_polished = Some((spins, e));
     }
+    e
 }
 
 /// The deterministic readout tail shared by the solo and packed
@@ -436,13 +529,24 @@ pub fn solve_with(
     params: &PortfolioParams,
     select: EngineSelect,
 ) -> Result<SolveOutcome> {
+    solve_with_trace(problem, params, select, None)
+}
+
+/// [`solve_with`] with an optional lifecycle trace sink — see
+/// [`solve_portfolio_traced`] for the tracing contract.
+pub fn solve_with_trace(
+    problem: &IsingProblem,
+    params: &PortfolioParams,
+    select: EngineSelect,
+    trace: Option<&TraceSink>,
+) -> Result<SolveOutcome> {
     if params.chunk == 0 {
         return Err(anyhow!("chunk must be positive"));
     }
     let m = problem.embed_dim();
     let batch = params.replicas.clamp(1, MAX_WAVE_REPLICAS);
     let mut engine = build_engine(m, batch, params.chunk, select)?;
-    solve_portfolio(engine.as_mut(), problem, params)
+    solve_portfolio_traced(engine.as_mut(), problem, params, trace)
 }
 
 /// Convenience: run the portfolio on a single [`NativeEngine`] sized

@@ -1,0 +1,172 @@
+//! Log-bucketed latency histograms (DESIGN_SOLVER.md §9).
+//!
+//! The coordinator's hot path records durations with one atomic add per
+//! sample — no locks, no allocation — into power-of-two microsecond
+//! buckets: bucket 0 holds sub-microsecond samples, bucket `i` (i >= 1)
+//! holds `[2^(i-1), 2^i)` µs.  Forty buckets cover everything from
+//! sub-µs up to ~6 days, which is more than any solve or retrieval
+//! latency this stack can produce.  Percentiles are estimated at
+//! snapshot time from the bucket counts and reported as each bucket's
+//! upper bound (a conservative over-estimate, never an under-estimate).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Number of power-of-two buckets; bucket `BUCKETS - 1` absorbs
+/// everything at or above `2^(BUCKETS - 2)` µs.
+pub const BUCKETS: usize = 40;
+
+/// Bucket index for a sample of `us` microseconds.
+fn bucket_index(us: u64) -> usize {
+    if us == 0 {
+        0
+    } else {
+        ((64 - us.leading_zeros()) as usize).min(BUCKETS - 1)
+    }
+}
+
+/// Inclusive upper bound of bucket `i`, in milliseconds.
+pub fn bucket_upper_ms(i: usize) -> f64 {
+    // Bucket i covers [2^(i-1), 2^i) µs, so its upper bound is 2^i µs.
+    (1u64 << i) as f64 / 1e3
+}
+
+/// Percentile snapshot of one histogram.  All fields are finite for
+/// every histogram state, including empty (zeros, never NaN).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct LatencySummary {
+    pub count: u64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p90_ms: f64,
+    pub p99_ms: f64,
+}
+
+/// Lock-free log-bucketed histogram: one atomic add per sample.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; BUCKETS],
+    sum_us: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, d: Duration) {
+        self.record_us(d.as_micros().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn record_us(&self, us: u64) {
+        self.buckets[bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    /// One consistent read of every bucket counter.
+    pub fn bucket_counts(&self) -> [u64; BUCKETS] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+
+    pub fn count(&self) -> u64 {
+        self.bucket_counts().iter().sum()
+    }
+
+    /// Percentiles from the bucket counts.  The count and the
+    /// percentiles come from one bucket snapshot, so the summary is
+    /// internally consistent even under concurrent recording.
+    pub fn summary(&self) -> LatencySummary {
+        let counts = self.bucket_counts();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return LatencySummary::default();
+        }
+        let sum_us = self.sum_us.load(Ordering::Relaxed);
+        LatencySummary {
+            count: total,
+            mean_ms: sum_us as f64 / total as f64 / 1e3,
+            p50_ms: percentile(&counts, total, 0.50),
+            p90_ms: percentile(&counts, total, 0.90),
+            p99_ms: percentile(&counts, total, 0.99),
+        }
+    }
+}
+
+/// Upper bound (ms) of the bucket holding the q-th quantile sample.
+fn percentile(counts: &[u64; BUCKETS], total: u64, q: f64) -> f64 {
+    let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+    let mut cum = 0u64;
+    for (i, &c) in counts.iter().enumerate() {
+        cum += c;
+        if cum >= rank {
+            return bucket_upper_ms(i);
+        }
+    }
+    bucket_upper_ms(BUCKETS - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_layout_is_power_of_two_microseconds() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(1023), 10);
+        assert_eq!(bucket_index(1024), 11);
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+        assert_eq!(bucket_upper_ms(0), 0.001);
+        assert_eq!(bucket_upper_ms(11), 2.048);
+    }
+
+    #[test]
+    fn empty_summary_is_all_zero_and_finite() {
+        let h = LatencyHistogram::new();
+        let s = h.summary();
+        assert_eq!(s, LatencySummary::default());
+        for v in [s.mean_ms, s.p50_ms, s.p90_ms, s.p99_ms] {
+            assert!(v.is_finite());
+        }
+    }
+
+    #[test]
+    fn percentiles_bound_the_samples_and_stay_ordered() {
+        let h = LatencyHistogram::new();
+        // 100 samples: 1..=100 ms.
+        for ms in 1..=100u64 {
+            h.record(Duration::from_millis(ms));
+        }
+        let s = h.summary();
+        assert_eq!(s.count, 100);
+        assert!(s.p50_ms <= s.p90_ms && s.p90_ms <= s.p99_ms);
+        // Upper-bound estimates never under-report...
+        assert!(s.p50_ms >= 50.0, "p50 {} under the true median", s.p50_ms);
+        // ...and stay within one power of two of the true value.
+        assert!(s.p50_ms <= 128.0, "p50 {} too coarse", s.p50_ms);
+        assert!(s.p99_ms <= 256.0, "p99 {} too coarse", s.p99_ms);
+        assert!((s.mean_ms - 50.5).abs() < 0.5, "mean {}", s.mean_ms);
+    }
+
+    #[test]
+    fn bucket_counts_sum_to_sample_count() {
+        let h = LatencyHistogram::new();
+        for us in [0u64, 1, 7, 900, 1024, 1_000_000] {
+            h.record_us(us);
+        }
+        assert_eq!(h.count(), 6);
+        assert_eq!(h.bucket_counts().iter().sum::<u64>(), 6);
+    }
+}

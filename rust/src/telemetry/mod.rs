@@ -1,0 +1,14 @@
+//! Observability for the solver stack (DESIGN_SOLVER.md §9): the
+//! solve-lifecycle trace recorder threaded through the portfolio and
+//! the engines, and the log-bucketed latency histograms behind the
+//! coordinator's `Metrics` percentiles and the `"type": "metrics"`
+//! wire command.
+
+pub mod hist;
+pub mod trace;
+
+pub use hist::{bucket_upper_ms, LatencyHistogram, LatencySummary, BUCKETS};
+pub use trace::{
+    sink, validate_trace_jsonl, TraceEvent, TraceRecord, TraceRecorder, TraceSink,
+    DEFAULT_TRACE_CAP,
+};

@@ -1,0 +1,447 @@
+//! Solve-lifecycle tracing (DESIGN_SOLVER.md §9): a ring-buffered
+//! span/event recorder with monotonic timestamps, cheap enough to leave
+//! compiled into the hot path (recording is a `RefCell` borrow plus a
+//! `VecDeque` push; disabled tracing costs one `Option` test).
+//!
+//! The recorder observes the solve — it never participates in it.  The
+//! portfolio and the engines record values they already computed, and
+//! draw nothing from any RNG, so a traced solve is bit-identical to an
+//! untraced one (`rust/tests/integration_telemetry.rs` proves it).
+//!
+//! Export formats: JSONL (one record per line, `solve --trace <path>`)
+//! and the compact wire attachment (`"trace": true` on a solve
+//! request).  Both flatten every record to the same schema, validated
+//! by [`validate_trace_jsonl`] (the `trace-check` CLI gate).
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::rc::Rc;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Default ring capacity: enough for every chunk of a 64-replica,
+/// 256-period solve with engine spans, small enough to ship on the wire.
+pub const DEFAULT_TRACE_CAP: usize = 4096;
+
+/// One lifecycle event.  Field meanings are part of the telemetry
+/// contract (DESIGN_SOLVER.md §9); energies are the solver's objective
+/// values, timestamps live on the enclosing [`TraceRecord`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEvent {
+    /// Portfolio accepted the problem and programmed the engine.
+    SolveStart {
+        n: usize,
+        engine: &'static str,
+        replicas: usize,
+    },
+    /// A wave of `lanes` fresh replicas started annealing.
+    WaveStart { wave: usize, lanes: usize },
+    /// One anneal chunk finished: the running best energy across all
+    /// waves so far (monotone non-increasing) and this wave's settled
+    /// lane count after the chunk.
+    Chunk {
+        wave: usize,
+        chunk: usize,
+        noise: f64,
+        best_energy: f64,
+        settled_lanes: usize,
+    },
+    /// The wave retired.  `exit` is "completed" (ran every chunk),
+    /// "all_settled", or "plateau" (early exits).
+    WaveEnd {
+        wave: usize,
+        lanes: usize,
+        settled_lanes: usize,
+        chunks: usize,
+        exit: &'static str,
+    },
+    /// Greedy single-flip polish on one replica's readout.
+    Polish {
+        replica: usize,
+        pre_energy: f64,
+        post_energy: f64,
+    },
+    /// One engine `run_chunk` span: host step time plus the engine's
+    /// own meters over the chunk (all deltas, zero where a fabric has
+    /// no such meter — sync for sharded, fast cycles for rtl).
+    EngineChunk {
+        engine: &'static str,
+        period0: i64,
+        step_us: u64,
+        sync_rounds: u64,
+        sync_us: u64,
+        fast_cycles: u64,
+    },
+    /// Portfolio readout done.
+    SolveEnd {
+        best_energy: f64,
+        periods: usize,
+        settled_replicas: usize,
+    },
+}
+
+impl TraceEvent {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceEvent::SolveStart { .. } => "solve_start",
+            TraceEvent::WaveStart { .. } => "wave_start",
+            TraceEvent::Chunk { .. } => "chunk",
+            TraceEvent::WaveEnd { .. } => "wave_end",
+            TraceEvent::Polish { .. } => "polish",
+            TraceEvent::EngineChunk { .. } => "engine_chunk",
+            TraceEvent::SolveEnd { .. } => "solve_end",
+        }
+    }
+}
+
+/// One recorded event with its sequence number and microseconds since
+/// the recorder's origin (monotonic: `t_us` never decreases, `seq`
+/// strictly increases even across ring-buffer drops).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceRecord {
+    pub seq: u64,
+    pub t_us: u64,
+    pub event: TraceEvent,
+}
+
+impl TraceRecord {
+    /// Flatten to the documented JSONL/wire schema: `seq`, `t_us`,
+    /// `event`, plus the event's own fields at the top level.
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("seq", Json::num(self.seq as f64)),
+            ("t_us", Json::num(self.t_us as f64)),
+            ("event", Json::str(self.event.name())),
+        ];
+        match &self.event {
+            TraceEvent::SolveStart {
+                n,
+                engine,
+                replicas,
+            } => {
+                fields.push(("n", Json::num(*n as f64)));
+                fields.push(("engine", Json::str(engine)));
+                fields.push(("replicas", Json::num(*replicas as f64)));
+            }
+            TraceEvent::WaveStart { wave, lanes } => {
+                fields.push(("wave", Json::num(*wave as f64)));
+                fields.push(("lanes", Json::num(*lanes as f64)));
+            }
+            TraceEvent::Chunk {
+                wave,
+                chunk,
+                noise,
+                best_energy,
+                settled_lanes,
+            } => {
+                fields.push(("wave", Json::num(*wave as f64)));
+                fields.push(("chunk", Json::num(*chunk as f64)));
+                fields.push(("noise", Json::num(*noise)));
+                fields.push(("best_energy", Json::num(*best_energy)));
+                fields.push(("settled_lanes", Json::num(*settled_lanes as f64)));
+            }
+            TraceEvent::WaveEnd {
+                wave,
+                lanes,
+                settled_lanes,
+                chunks,
+                exit,
+            } => {
+                fields.push(("wave", Json::num(*wave as f64)));
+                fields.push(("lanes", Json::num(*lanes as f64)));
+                fields.push(("settled_lanes", Json::num(*settled_lanes as f64)));
+                fields.push(("chunks", Json::num(*chunks as f64)));
+                fields.push(("exit", Json::str(exit)));
+            }
+            TraceEvent::Polish {
+                replica,
+                pre_energy,
+                post_energy,
+            } => {
+                fields.push(("replica", Json::num(*replica as f64)));
+                fields.push(("pre_energy", Json::num(*pre_energy)));
+                fields.push(("post_energy", Json::num(*post_energy)));
+            }
+            TraceEvent::EngineChunk {
+                engine,
+                period0,
+                step_us,
+                sync_rounds,
+                sync_us,
+                fast_cycles,
+            } => {
+                fields.push(("engine", Json::str(engine)));
+                fields.push(("period0", Json::num(*period0 as f64)));
+                fields.push(("step_us", Json::num(*step_us as f64)));
+                fields.push(("sync_rounds", Json::num(*sync_rounds as f64)));
+                fields.push(("sync_us", Json::num(*sync_us as f64)));
+                fields.push(("fast_cycles", Json::num(*fast_cycles as f64)));
+            }
+            TraceEvent::SolveEnd {
+                best_energy,
+                periods,
+                settled_replicas,
+            } => {
+                fields.push(("best_energy", Json::num(*best_energy)));
+                fields.push(("periods", Json::num(*periods as f64)));
+                fields.push(("settled_replicas", Json::num(*settled_replicas as f64)));
+            }
+        }
+        Json::obj(fields)
+    }
+}
+
+/// Ring-buffered recorder.  When the ring is full the oldest record is
+/// dropped (and counted) — the tail of a solve is always retained.
+#[derive(Debug)]
+pub struct TraceRecorder {
+    origin: Instant,
+    cap: usize,
+    next_seq: u64,
+    dropped: u64,
+    records: VecDeque<TraceRecord>,
+}
+
+impl TraceRecorder {
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        Self {
+            origin: Instant::now(),
+            cap,
+            next_seq: 0,
+            dropped: 0,
+            records: VecDeque::with_capacity(cap.min(1024)),
+        }
+    }
+
+    pub fn record(&mut self, event: TraceEvent) {
+        if self.records.len() == self.cap {
+            self.records.pop_front();
+            self.dropped += 1;
+        }
+        let t_us = self.origin.elapsed().as_micros().min(u64::MAX as u128) as u64;
+        self.records.push_back(TraceRecord {
+            seq: self.next_seq,
+            t_us,
+            event,
+        });
+        self.next_seq += 1;
+    }
+
+    pub fn records(&self) -> &VecDeque<TraceRecord> {
+        &self.records
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Records dropped to the ring so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Move the retained records out (e.g. into a `SolveResult`).
+    pub fn take(&mut self) -> Vec<TraceRecord> {
+        self.records.drain(..).collect()
+    }
+
+    /// One JSON object per line, newline-terminated.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for r in &self.records {
+            out.push_str(&r.to_json().to_string());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Shared handle threaded through the (single-threaded, `!Send`) solve
+/// path: the portfolio and the engine both hold one.
+pub type TraceSink = Rc<RefCell<TraceRecorder>>;
+
+/// A fresh sink with the given ring capacity.
+pub fn sink(cap: usize) -> TraceSink {
+    Rc::new(RefCell::new(TraceRecorder::new(cap)))
+}
+
+/// Required per-event fields: `(numeric fields, string fields)`.
+fn schema(event: &str) -> Option<(&'static [&'static str], &'static [&'static str])> {
+    Some(match event {
+        "solve_start" => (&["n", "replicas"][..], &["engine"][..]),
+        "wave_start" => (&["wave", "lanes"][..], &[][..]),
+        "chunk" => (
+            &["wave", "chunk", "noise", "best_energy", "settled_lanes"][..],
+            &[][..],
+        ),
+        "wave_end" => (
+            &["wave", "lanes", "settled_lanes", "chunks"][..],
+            &["exit"][..],
+        ),
+        "polish" => (&["replica", "pre_energy", "post_energy"][..], &[][..]),
+        "engine_chunk" => (
+            &["period0", "step_us", "sync_rounds", "sync_us", "fast_cycles"][..],
+            &["engine"][..],
+        ),
+        "solve_end" => (
+            &["best_energy", "periods", "settled_replicas"][..],
+            &[][..],
+        ),
+        _ => return None,
+    })
+}
+
+/// Validate a JSONL trace export against the documented schema: every
+/// line parses, carries `seq`/`t_us`/`event`, `seq` strictly increases,
+/// `t_us` never decreases, the event name is known, and the event's
+/// required fields are present with the right types.  Returns the
+/// record count.
+pub fn validate_trace_jsonl(text: &str) -> Result<usize, String> {
+    let mut count = 0usize;
+    let mut prev_seq: Option<u64> = None;
+    let mut prev_t: Option<u64> = None;
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let ln = i + 1;
+        let v = Json::parse(line).map_err(|e| format!("line {ln}: bad JSON: {e}"))?;
+        let seq = v
+            .get("seq")
+            .and_then(Json::as_i64)
+            .ok_or_else(|| format!("line {ln}: missing numeric 'seq'"))? as u64;
+        let t_us = v
+            .get("t_us")
+            .and_then(Json::as_i64)
+            .ok_or_else(|| format!("line {ln}: missing numeric 't_us'"))? as u64;
+        let event = v
+            .get("event")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("line {ln}: missing string 'event'"))?
+            .to_string();
+        if let Some(p) = prev_seq {
+            if seq <= p {
+                return Err(format!("line {ln}: seq {seq} not above previous {p}"));
+            }
+        }
+        if let Some(p) = prev_t {
+            if t_us < p {
+                return Err(format!("line {ln}: t_us {t_us} below previous {p}"));
+            }
+        }
+        let (nums, strs) =
+            schema(&event).ok_or_else(|| format!("line {ln}: unknown event '{event}'"))?;
+        for k in nums {
+            if v.get(k).and_then(Json::as_f64).is_none() {
+                return Err(format!("line {ln}: event '{event}' missing numeric '{k}'"));
+            }
+        }
+        for k in strs {
+            if v.get(k).and_then(Json::as_str).is_none() {
+                return Err(format!("line {ln}: event '{event}' missing string '{k}'"));
+            }
+        }
+        prev_seq = Some(seq);
+        prev_t = Some(t_us);
+        count += 1;
+    }
+    Ok(count)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(i: usize) -> TraceEvent {
+        TraceEvent::Chunk {
+            wave: 0,
+            chunk: i,
+            noise: 0.5,
+            best_energy: -(i as f64),
+            settled_lanes: i,
+        }
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_keeps_seq_monotone() {
+        let mut rec = TraceRecorder::new(3);
+        for i in 0..5 {
+            rec.record(ev(i));
+        }
+        assert_eq!(rec.len(), 3);
+        assert_eq!(rec.dropped(), 2);
+        let seqs: Vec<u64> = rec.records().iter().map(|r| r.seq).collect();
+        assert_eq!(seqs, vec![2, 3, 4], "oldest records dropped");
+        let ts: Vec<u64> = rec.records().iter().map(|r| r.t_us).collect();
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]), "timestamps monotone");
+    }
+
+    #[test]
+    fn jsonl_round_trips_through_the_validator() {
+        let mut rec = TraceRecorder::new(64);
+        rec.record(TraceEvent::SolveStart {
+            n: 8,
+            engine: "native",
+            replicas: 4,
+        });
+        rec.record(TraceEvent::WaveStart { wave: 0, lanes: 4 });
+        rec.record(ev(0));
+        rec.record(TraceEvent::EngineChunk {
+            engine: "sharded",
+            period0: 0,
+            step_us: 12,
+            sync_rounds: 8,
+            sync_us: 3,
+            fast_cycles: 0,
+        });
+        rec.record(TraceEvent::WaveEnd {
+            wave: 0,
+            lanes: 4,
+            settled_lanes: 4,
+            chunks: 1,
+            exit: "all_settled",
+        });
+        rec.record(TraceEvent::Polish {
+            replica: 0,
+            pre_energy: -3.0,
+            post_energy: -4.0,
+        });
+        rec.record(TraceEvent::SolveEnd {
+            best_energy: -4.0,
+            periods: 8,
+            settled_replicas: 4,
+        });
+        let jsonl = rec.to_jsonl();
+        assert_eq!(validate_trace_jsonl(&jsonl).unwrap(), 7);
+    }
+
+    #[test]
+    fn validator_rejects_schema_violations() {
+        let ok = r#"{"seq":0,"t_us":1,"event":"wave_start","wave":0,"lanes":2}"#;
+        assert_eq!(validate_trace_jsonl(ok).unwrap(), 1);
+        for (bad, why) in [
+            (r#"{"t_us":1,"event":"wave_start","wave":0,"lanes":2}"#, "no seq"),
+            (r#"{"seq":0,"t_us":1,"event":"nope"}"#, "unknown event"),
+            (r#"{"seq":0,"t_us":1,"event":"wave_start","wave":0}"#, "missing field"),
+            (
+                r#"{"seq":0,"t_us":1,"event":"wave_end","wave":0,"lanes":1,"settled_lanes":0,"chunks":1,"exit":3}"#,
+                "exit must be a string",
+            ),
+            ("not json", "parse error"),
+        ] {
+            assert!(validate_trace_jsonl(bad).is_err(), "{why}");
+        }
+        // Ordering violations across lines.
+        let unordered_seq = format!("{ok}\n{ok}");
+        assert!(validate_trace_jsonl(&unordered_seq).is_err(), "seq must rise");
+        let t_back = r#"{"seq":0,"t_us":9,"event":"wave_start","wave":0,"lanes":2}
+{"seq":1,"t_us":3,"event":"wave_start","wave":1,"lanes":2}"#;
+        assert!(validate_trace_jsonl(t_back).is_err(), "t_us must not rewind");
+    }
+}

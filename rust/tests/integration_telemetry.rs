@@ -1,0 +1,269 @@
+//! Observability integration: the solve-lifecycle trace contract
+//! (bit-identical traced runs, monotone convergence), the wire trace
+//! attachment, and the `{"type": "metrics"}` command scraped from a
+//! live TCP pool after mixed native/sharded/rtl traffic
+//! (DESIGN_SOLVER.md §9).
+
+use std::sync::Arc;
+
+use onn_scale::coordinator::batcher::BatchPolicy;
+use onn_scale::coordinator::server::{handle_line, serve_tcp, Coordinator};
+use onn_scale::solver::graph::Graph;
+use onn_scale::solver::portfolio::{solve_native, solve_with_trace, EngineSelect, PortfolioParams};
+use onn_scale::solver::reductions;
+use onn_scale::telemetry::{sink, validate_trace_jsonl, TraceEvent, TraceSink, DEFAULT_TRACE_CAP};
+use onn_scale::util::json::Json;
+use onn_scale::util::rng::Rng;
+
+fn params(replicas: usize, max_periods: usize, seed: u64) -> PortfolioParams {
+    PortfolioParams {
+        replicas,
+        max_periods,
+        seed,
+        ..Default::default()
+    }
+}
+
+/// JSON-lines solve request with optional engine/trace overrides.
+fn solve_line(id: u64, g: &Graph, seed: u64, extra: &[(&str, Json)]) -> String {
+    let edges = Json::Arr(
+        g.edges
+            .iter()
+            .map(|&(i, j, w)| Json::arr_i32(&[i as i32, j as i32, -w]))
+            .collect(),
+    );
+    let mut fields = vec![
+        ("type", Json::str("solve")),
+        ("id", Json::num(id as f64)),
+        ("n", Json::num(g.n as f64)),
+        ("edges", edges),
+        ("replicas", Json::num(4.0)),
+        ("max_periods", Json::num(32.0)),
+        ("seed", Json::num(seed as f64)),
+    ];
+    fields.extend(extra.iter().cloned());
+    Json::obj(fields).to_string()
+}
+
+fn ask(coord: &Coordinator, line: &str) -> Json {
+    Json::parse(&handle_line(&coord.router, line)).unwrap()
+}
+
+/// The recorded stream with wall-clock timestamps stripped: everything
+/// that must be bit-identical between equal-seed runs.
+fn events(s: &TraceSink) -> Vec<(u64, TraceEvent)> {
+    let mut out = Vec::new();
+    for r in s.borrow().records() {
+        out.push((r.seq, r.event.clone()));
+    }
+    out
+}
+
+#[test]
+fn traced_solve_is_bit_identical_and_monotone() {
+    // The core telemetry contract: tracing observes, never perturbs.
+    // Two equal-seed traced runs must record identical event streams,
+    // and the traced outcome must equal the untraced one field for
+    // field.
+    let g = Graph::random(20, 0.3, &mut Rng::new(91));
+    let problem = reductions::max_cut(&g);
+    let p = params(6, 64, 17);
+
+    let sink_a = sink(DEFAULT_TRACE_CAP);
+    let out_a = solve_with_trace(&problem, &p, EngineSelect::Native, Some(&sink_a)).unwrap();
+    let sink_b = sink(DEFAULT_TRACE_CAP);
+    let out_b = solve_with_trace(&problem, &p, EngineSelect::Native, Some(&sink_b)).unwrap();
+    let untraced = solve_native(&problem, &p).unwrap();
+
+    // Tracing perturbed nothing: traced == untraced, bit for bit.
+    assert_eq!(out_a.best_energy, untraced.best_energy);
+    assert_eq!(out_a.best_spins, untraced.best_spins);
+    assert_eq!(out_a.best_phases, untraced.best_phases);
+    assert_eq!(out_a.periods, untraced.periods);
+    assert_eq!(out_a.settled_replicas, untraced.settled_replicas);
+    assert_eq!(out_a.chunks, untraced.chunks);
+    assert_eq!(out_b.best_energy, untraced.best_energy);
+
+    // Equal seeds record equal event streams (timestamps excluded —
+    // they are wall-clock, everything else must match exactly).
+    let ev_a = events(&sink_a);
+    let ev_b = events(&sink_b);
+    assert!(!ev_a.is_empty());
+    assert_eq!(ev_a, ev_b, "equal-seed traces must be bit-identical");
+
+    // The lifecycle brackets: starts with solve_start, ends with
+    // solve_end, and the engine recorded its chunk spans.
+    assert!(matches!(ev_a.first().unwrap().1, TraceEvent::SolveStart { .. }));
+    assert!(matches!(ev_a.last().unwrap().1, TraceEvent::SolveEnd { .. }));
+    let has_engine_span = ev_a
+        .iter()
+        .any(|(_, e)| matches!(e, TraceEvent::EngineChunk { engine: "native", .. }));
+    assert!(has_engine_span, "the native engine must record chunk spans");
+
+    // Per-chunk running best energy is monotone non-increasing.
+    let trajectory: Vec<f64> = ev_a
+        .iter()
+        .filter_map(|(_, e)| match e {
+            TraceEvent::Chunk { best_energy, .. } => Some(*best_energy),
+            _ => None,
+        })
+        .collect();
+    assert!(!trajectory.is_empty(), "chunk events must be recorded");
+    assert!(
+        trajectory.windows(2).all(|w| w[1] <= w[0] + 1e-12),
+        "best energy regressed: {trajectory:?}"
+    );
+    // The final outcome is at least as good as the last chunk's best
+    // (readout polish may improve it further, never worsen it).
+    assert!(out_a.best_energy <= trajectory.last().unwrap() + 1e-9);
+
+    // The JSONL export round-trips through the schema validator.
+    let jsonl = sink_a.borrow().to_jsonl();
+    assert_eq!(validate_trace_jsonl(&jsonl).unwrap(), ev_a.len());
+}
+
+#[test]
+fn sharded_trace_carries_engine_sync_spans() {
+    // The sharded fabric's engine_chunk spans must meter all-gather
+    // rounds, and tracing must not disturb the native/sharded
+    // bit-exactness contract.
+    let g = Graph::random(14, 0.3, &mut Rng::new(92));
+    let problem = reductions::max_cut(&g);
+    let p = params(4, 32, 23);
+    let trace = sink(DEFAULT_TRACE_CAP);
+    let select = EngineSelect::Sharded { shards: 2 };
+    let sharded = solve_with_trace(&problem, &p, select, Some(&trace)).unwrap();
+    let native = solve_native(&problem, &p).unwrap();
+    assert_eq!(sharded.best_energy, native.best_energy);
+    assert_eq!(sharded.best_phases, native.best_phases);
+    let rec = trace.borrow();
+    let sync_total: u64 = rec
+        .records()
+        .iter()
+        .filter_map(|r| match &r.event {
+            TraceEvent::EngineChunk { engine: "sharded", sync_rounds, .. } => Some(*sync_rounds),
+            _ => None,
+        })
+        .sum();
+    assert!(sync_total > 0, "a sharded solve pays all-gather rounds");
+    assert_eq!(
+        sync_total, sharded.sync_rounds,
+        "per-chunk sync deltas must sum to the outcome's total"
+    );
+}
+
+#[test]
+fn wire_trace_attachment_is_optional_and_valid() {
+    let coord = Coordinator::start(vec![], BatchPolicy::default()).unwrap();
+    let g = Graph::random(10, 0.4, &mut Rng::new(93));
+
+    // Untraced request: the response must not carry a trace key (the
+    // pre-telemetry wire stays byte-compatible).
+    let plain = ask(&coord, &solve_line(1, &g, 5, &[]));
+    assert!(plain.get("error").is_none(), "{plain}");
+    assert!(plain.get("trace").is_none(), "untraced responses carry no trace");
+
+    // "trace": false behaves exactly like an absent field.
+    let explicit_off = ask(&coord, &solve_line(2, &g, 5, &[("trace", Json::Bool(false))]));
+    assert!(explicit_off.get("trace").is_none());
+
+    // "trace": true attaches the lifecycle records; the same solve
+    // fields come back unchanged.
+    let traced = ask(&coord, &solve_line(3, &g, 5, &[("trace", Json::Bool(true))]));
+    assert!(traced.get("error").is_none(), "{traced}");
+    assert_eq!(traced.get("energy"), plain.get("energy"));
+    assert_eq!(traced.get("spins"), plain.get("spins"));
+    assert_eq!(traced.get("periods"), plain.get("periods"));
+    let records = traced.get("trace").and_then(Json::as_arr).expect("trace array");
+    assert!(!records.is_empty());
+    let first = records.first().unwrap();
+    assert_eq!(first.get("event").and_then(Json::as_str), Some("solve_start"));
+    let last = records.last().unwrap();
+    assert_eq!(last.get("event").and_then(Json::as_str), Some("solve_end"));
+    // The attachment is schema-valid line by line.
+    let jsonl: String = records.iter().map(|r| format!("{r}\n")).collect();
+    assert_eq!(validate_trace_jsonl(&jsonl).unwrap(), records.len());
+
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn metrics_command_scrapes_a_live_mixed_engine_pool() {
+    use std::io::{BufRead, BufReader, Write};
+    // One pool serves native, sharded (per-request override), and rtl
+    // (per-request override) solves over real TCP; the metrics command
+    // must then report per-engine counters and latency percentiles.
+    let coord = Coordinator::start(vec![], BatchPolicy::default()).unwrap();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let router = Arc::clone(&coord.router);
+    std::thread::spawn(move || {
+        let _ = serve_tcp(router, listener);
+    });
+
+    let stream = std::net::TcpStream::connect(addr).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+    let mut call = |line: &str| -> Json {
+        w.write_all(line.as_bytes()).unwrap();
+        w.write_all(b"\n").unwrap();
+        let mut resp = String::new();
+        r.read_line(&mut resp).unwrap();
+        Json::parse(resp.trim()).unwrap_or_else(|e| panic!("bad response {resp}: {e}"))
+    };
+
+    let g = Graph::random(10, 0.4, &mut Rng::new(94));
+    let native = call(&solve_line(11, &g, 7, &[]));
+    assert!(native.get("error").is_none(), "{native}");
+    assert_eq!(native.get("engine").and_then(Json::as_str), Some("native"));
+    let sharded = call(&solve_line(12, &g, 7, &[("shards", Json::num(2.0))]));
+    assert!(sharded.get("error").is_none(), "{sharded}");
+    assert_eq!(sharded.get("engine").and_then(Json::as_str), Some("sharded"));
+    let rtl = call(&solve_line(13, &g, 7, &[("rtl", Json::Bool(true))]));
+    assert!(rtl.get("error").is_none(), "{rtl}");
+    assert_eq!(rtl.get("engine").and_then(Json::as_str), Some("rtl"));
+
+    let m = call(r#"{"type":"metrics"}"#);
+    assert_eq!(m.get("type").and_then(Json::as_str), Some("metrics"));
+    let snap = m.get("snapshot").expect("snapshot object");
+    assert_eq!(snap.get("solves_completed").and_then(Json::as_usize), Some(3));
+    assert_eq!(snap.get("solves_native").and_then(Json::as_usize), Some(1));
+    assert_eq!(snap.get("solves_sharded").and_then(Json::as_usize), Some(1));
+    assert_eq!(snap.get("solves_rtl").and_then(Json::as_usize), Some(1));
+    assert!(
+        snap.get("solve_sync_rounds").and_then(Json::as_usize).unwrap() > 0,
+        "the sharded solve must surface its sync cost"
+    );
+    assert!(
+        snap.get("solve_fast_cycles").and_then(Json::as_usize).unwrap() > 0,
+        "the rtl solve must surface its emulated cycles"
+    );
+    // Percentile fields: pool-wide and per engine kind, ordered and
+    // consistent with the per-kind counters.
+    for (key, want_count) in [
+        ("solve", 3usize),
+        ("solve_native", 1),
+        ("solve_sharded", 1),
+        ("solve_rtl", 1),
+    ] {
+        let s = snap.get(key).unwrap_or_else(|| panic!("missing {key}"));
+        assert_eq!(s.get("count").and_then(Json::as_usize), Some(want_count), "{key}");
+        let q = |f: &str| s.get(f).and_then(Json::as_f64).unwrap_or(-1.0);
+        let (p50, p90, p99) = (q("p50_ms"), q("p90_ms"), q("p99_ms"));
+        assert!(p50 > 0.0 && p50 <= p90 && p90 <= p99, "{key}: {p50} {p90} {p99}");
+        assert!(q("mean_ms") > 0.0, "{key} saw real samples");
+    }
+    let text = m.get("prometheus").and_then(Json::as_str).unwrap();
+    for needle in [
+        "onn_solves_by_engine{engine=\"native\"} 1",
+        "onn_solves_by_engine{engine=\"sharded\"} 1",
+        "onn_solves_by_engine{engine=\"rtl\"} 1",
+        "onn_solve_latency_ms{quantile=\"0.99\"}",
+        "onn_solve_latency_rtl_ms_count 1",
+        "# TYPE onn_solve_latency_ms summary",
+    ] {
+        assert!(text.contains(needle), "prometheus text missing {needle}:\n{text}");
+    }
+
+    coord.shutdown().unwrap();
+}

@@ -36,8 +36,25 @@ grep -q '"unpacked_replica_periods_per_sec"' BENCH_solver.json \
   || { echo "BENCH_solver.json is missing the one-engine-per-request baseline row"; exit 1; }
 grep -q '"engine":"rtl"' BENCH_solver.json \
   || { echo "BENCH_solver.json is missing the bit-true rtl rows"; exit 1; }
+grep -q '"p50_ms"' BENCH_solver.json \
+  || { echo "BENCH_solver.json is missing the latency percentile rows"; exit 1; }
+grep -q '"convergence"' BENCH_solver.json \
+  || { echo "BENCH_solver.json is missing the convergence trace section"; exit 1; }
 
 echo "==> solve-report renders the recorded trajectory"
 ./target/release/onn-scale solve-report --path BENCH_solver.json >/dev/null
+
+echo "==> solve --trace exports a schema-valid JSONL lifecycle trace"
+TRACE_FILE="${TMPDIR:-/tmp}/onn_trace_ci_$$.jsonl"
+trap 'rm -f "$TRACE_FILE"' EXIT
+./target/release/onn-scale solve --problem maxcut --nodes 24 --replicas 8 \
+  --periods 64 --seed 7 --trace "$TRACE_FILE" >/dev/null
+# trace-check validates field presence per event and monotonic
+# seq/t_us ordering — the telemetry contract of DESIGN_SOLVER.md §9.
+./target/release/onn-scale trace-check --path "$TRACE_FILE"
+grep -q '"event":"solve_start"' "$TRACE_FILE" \
+  || { echo "trace is missing the solve_start record"; exit 1; }
+grep -q '"event":"chunk"' "$TRACE_FILE" \
+  || { echo "trace is missing per-chunk convergence records"; exit 1; }
 
 echo "CI OK"
