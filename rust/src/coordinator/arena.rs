@@ -1,0 +1,238 @@
+//! The warm engine arena: a per-worker cache of standing engine
+//! fabrics, reprogrammed between requests instead of rebuilt.
+//!
+//! Building an engine is the expensive part of a small solve — a
+//! matrix allocation for the native fabric, a register-file build for
+//! the rtl model, and for the sharded fabric a full spawn (and later
+//! join) of every shard thread.  The serving hot path the paper's
+//! hardware targets is *reprogramming a standing fabric*: weights and
+//! noise change per request, the fabric does not.  The arena makes the
+//! same move in software: engines are checked out by geometry key,
+//! reprogrammed via `set_weights`/`set_noise` inside the portfolio
+//! driver, and checked back in warm — shard threads stay alive across
+//! requests.
+//!
+//! [`ChunkEngine`] is deliberately not `Send` (PJRT stream affinity),
+//! so an arena is owned by exactly one solver worker thread and never
+//! shared; only the hit/miss/evict counters ride the shared
+//! [`Metrics`].
+//!
+//! The load-bearing contract: an arena-served solve is **bit-identical**
+//! to a cold-engine solve at equal seed.  `set_weights` fully
+//! reprograms every fabric (the portfolio reports `sync_rounds` as a
+//! delta so a warm sharded engine's counter carry-over is invisible),
+//! and the portfolio re-draws all replica state per solve, so nothing
+//! of a previous tenant survives but the allocation itself.
+//! `rust/tests/integration_streaming.rs` holds the proof obligation.
+
+use anyhow::Result;
+
+use crate::coordinator::metrics::Metrics;
+use crate::runtime::ChunkEngine;
+use crate::solver::portfolio::EngineSelect;
+
+/// Geometry key identifying which standing engine can serve a solve:
+/// the fabric kind with everything that is baked in at construction
+/// time (oscillator count, batch lanes, chunk length, shard count).
+/// Anything *not* in the key — weights, noise, replica state — is
+/// reprogrammed per request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArenaKey {
+    Native { n: usize, batch: usize, chunk: usize },
+    Sharded { n: usize, shards: usize, batch: usize, chunk: usize },
+    Rtl { n: usize, batch: usize, chunk: usize },
+}
+
+impl ArenaKey {
+    /// The key a solo solve resolves to: mirrors
+    /// [`crate::solver::portfolio::build_engine`]'s fabric choice so a
+    /// checked-out engine is exactly what a cold build would construct.
+    pub fn for_solve(m: usize, batch: usize, chunk: usize, select: EngineSelect) -> Self {
+        if select == EngineSelect::Rtl {
+            return ArenaKey::Rtl { n: m, batch, chunk };
+        }
+        let shards = select.shards_for(m);
+        if shards <= 1 {
+            ArenaKey::Native { n: m, batch, chunk }
+        } else {
+            ArenaKey::Sharded { n: m, shards, batch, chunk }
+        }
+    }
+}
+
+/// One parked warm engine with its LRU stamp.
+struct Slot {
+    key: ArenaKey,
+    engine: Box<dyn ChunkEngine>,
+    last_used: u64,
+}
+
+/// A bounded LRU pool of warm engines, owned by one solver worker
+/// thread.  `capacity` 0 disables warming entirely (every checkout is
+/// a miss, every checkin a drop) — the cold-engine baseline the
+/// connection-scale bench measures against.
+pub struct EngineArena {
+    capacity: usize,
+    slots: Vec<Slot>,
+    clock: u64,
+}
+
+impl EngineArena {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            capacity,
+            slots: Vec::new(),
+            clock: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Warm engines currently parked.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Check out an engine for `key`: a parked match is removed and
+    /// returned warm (hit); otherwise `build` constructs a cold one
+    /// (miss).  Either way the caller owns the engine until
+    /// [`checkin`](Self::checkin).
+    pub fn checkout(
+        &mut self,
+        key: ArenaKey,
+        metrics: &Metrics,
+        build: impl FnOnce() -> Result<Box<dyn ChunkEngine>>,
+    ) -> Result<Box<dyn ChunkEngine>> {
+        if let Some(idx) = self.slots.iter().position(|s| s.key == key) {
+            metrics.record_arena_hit();
+            return Ok(self.slots.swap_remove(idx).engine);
+        }
+        metrics.record_arena_miss();
+        build()
+    }
+
+    /// Park an engine for reuse.  With the arena at capacity the
+    /// least-recently-used slot is evicted (shard threads join on
+    /// drop); with capacity 0 the engine is dropped immediately.
+    ///
+    /// Only check in *healthy* engines: a solve that failed mid-flight
+    /// may leave the fabric in an undefined state — discard it instead.
+    /// A *cancelled* solve is healthy by contract (the portfolio bails
+    /// only at chunk boundaries and detaches any trace sink first).
+    pub fn checkin(&mut self, key: ArenaKey, engine: Box<dyn ChunkEngine>, metrics: &Metrics) {
+        if self.capacity == 0 {
+            metrics.record_arena_eviction();
+            return;
+        }
+        self.clock += 1;
+        self.slots.push(Slot {
+            key,
+            engine,
+            last_used: self.clock,
+        });
+        if self.slots.len() > self.capacity {
+            let lru = self
+                .slots
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, s)| s.last_used)
+                .map(|(i, _)| i)
+                .expect("arena over capacity implies at least one slot");
+            self.slots.swap_remove(lru);
+            metrics.record_arena_eviction();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::portfolio::build_engine;
+
+    fn build(key: ArenaKey) -> Result<Box<dyn ChunkEngine>> {
+        let (m, batch, chunk, select) = match key {
+            ArenaKey::Native { n, batch, chunk } => (n, batch, chunk, EngineSelect::Native),
+            ArenaKey::Sharded { n, shards, batch, chunk } => {
+                (n, batch, chunk, EngineSelect::Sharded { shards })
+            }
+            ArenaKey::Rtl { n, batch, chunk } => (n, batch, chunk, EngineSelect::Rtl),
+        };
+        build_engine(m, batch, chunk, select)
+    }
+
+    #[test]
+    fn key_resolution_mirrors_build_engine() {
+        let auto = EngineSelect::Auto { threshold: 100, max_shards: 4 };
+        assert_eq!(
+            ArenaKey::for_solve(24, 8, 8, auto),
+            ArenaKey::Native { n: 24, batch: 8, chunk: 8 }
+        );
+        assert_eq!(
+            ArenaKey::for_solve(250, 8, 8, auto),
+            ArenaKey::Sharded { n: 250, shards: 3, batch: 8, chunk: 8 }
+        );
+        assert_eq!(
+            ArenaKey::for_solve(24, 8, 8, EngineSelect::Rtl),
+            ArenaKey::Rtl { n: 24, batch: 8, chunk: 8 }
+        );
+        assert_eq!(
+            ArenaKey::for_solve(24, 8, 8, EngineSelect::Sharded { shards: 1 }),
+            ArenaKey::Native { n: 24, batch: 8, chunk: 8 },
+            "a single-shard selection collapses to the native fabric"
+        );
+    }
+
+    #[test]
+    fn hit_miss_evict_lifecycle() {
+        let metrics = Metrics::new();
+        let mut arena = EngineArena::new(2);
+        let ka = ArenaKey::Native { n: 8, batch: 4, chunk: 8 };
+        let kb = ArenaKey::Native { n: 16, batch: 4, chunk: 8 };
+        let kc = ArenaKey::Native { n: 32, batch: 4, chunk: 8 };
+
+        // Cold start: miss, then the checked-in engine hits.
+        let ea = arena.checkout(ka, &metrics, || build(ka)).unwrap();
+        arena.checkin(ka, ea, &metrics);
+        assert_eq!(arena.len(), 1);
+        let ea = arena.checkout(ka, &metrics, || build(ka)).unwrap();
+        assert_eq!(ea.n(), 8);
+        assert!(arena.is_empty(), "checkout removes the parked slot");
+        arena.checkin(ka, ea, &metrics);
+
+        // Fill to capacity, then overflow evicts the LRU slot (ka —
+        // parked earliest).
+        let eb = arena.checkout(kb, &metrics, || build(kb)).unwrap();
+        arena.checkin(kb, eb, &metrics);
+        let ec = arena.checkout(kc, &metrics, || build(kc)).unwrap();
+        arena.checkin(kc, ec, &metrics);
+        assert_eq!(arena.len(), 2);
+        let snap = metrics.snapshot();
+        assert_eq!(snap.arena_hits, 1);
+        assert_eq!(snap.arena_misses, 3);
+        assert_eq!(snap.arena_evictions, 1);
+        // ka was evicted; kb and kc still hit.
+        assert_eq!(arena.checkout(kb, &metrics, || build(kb)).unwrap().n(), 16);
+        assert_eq!(arena.checkout(kc, &metrics, || build(kc)).unwrap().n(), 32);
+        assert_eq!(metrics.snapshot().arena_hits, 3);
+    }
+
+    #[test]
+    fn capacity_zero_disables_warming() {
+        let metrics = Metrics::new();
+        let mut arena = EngineArena::new(0);
+        let k = ArenaKey::Native { n: 8, batch: 4, chunk: 8 };
+        let e = arena.checkout(k, &metrics, || build(k)).unwrap();
+        arena.checkin(k, e, &metrics);
+        assert!(arena.is_empty());
+        let snap = metrics.snapshot();
+        assert_eq!(snap.arena_hits, 0);
+        assert_eq!(snap.arena_misses, 1);
+        assert_eq!(snap.arena_evictions, 1, "capacity 0 drops on checkin");
+    }
+}

@@ -20,12 +20,15 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::coordinator::job::{Job, RetrievalResult, SolveJob, SolveRequest, SolveResult};
+use crate::coordinator::arena::{ArenaKey, EngineArena};
+use crate::coordinator::job::{
+    Job, ProgressEvent, RetrievalResult, SolveJob, SolveRequest, SolveResult,
+};
 use crate::coordinator::metrics::Metrics;
 use crate::runtime::EngineFactory;
 use crate::solver::portfolio::{
-    solve_packed_native, solve_with_trace, EngineSelect, PortfolioParams, DEFAULT_CHUNK,
-    MAX_WAVE_REPLICAS,
+    build_engine, is_cancelled, solve_packed_hooked, solve_portfolio_hooked, EngineSelect,
+    PortfolioParams, SolveHooks, DEFAULT_CHUNK, MAX_WAVE_REPLICAS,
 };
 use crate::solver::problem::IsingProblem;
 use crate::telemetry::{sink, DEFAULT_TRACE_CAP};
@@ -288,9 +291,32 @@ fn solve_result_from(job: &SolveJob, out: crate::solver::portfolio::SolveOutcome
     }
 }
 
+/// The per-chunk progress closure of a streaming job: forwards
+/// `(best_energy, periods)` to the front end's progress channel, tagged
+/// with the connection token and request id.
+fn progress_fn(job: &SolveJob) -> Option<Box<dyn Fn(f64, usize)>> {
+    job.progress.clone().map(|(tx, token)| {
+        let id = job.req.id;
+        Box::new(move |best_energy: f64, periods: usize| {
+            // The front end may have gone away mid-solve — fine.
+            let _ = tx.send(ProgressEvent {
+                token,
+                id,
+                best_energy,
+                periods,
+            });
+        }) as Box<dyn Fn(f64, usize)>
+    })
+}
+
 /// Run one solve solo on its own engine (the one-engine-per-request
 /// path: oversized, sharded, overridden, or simply lonely requests).
-fn solve_one(job: SolveJob, metrics: &Metrics, select: EngineSelect) {
+/// The engine comes from the worker's warm `arena` when a standing one
+/// matches the request's geometry, and goes back in warm after the
+/// solve (also after a *cancelled* solve — the portfolio bails at chunk
+/// boundaries, leaving the fabric healthy); only a failed solve
+/// discards it.
+fn solve_one(job: SolveJob, metrics: &Metrics, select: EngineSelect, arena: &mut EngineArena) {
     let dequeued = Instant::now();
     let params = PortfolioParams {
         replicas: job.req.replicas,
@@ -308,9 +334,33 @@ fn solve_one(job: SolveJob, metrics: &Metrics, select: EngineSelect) {
             None => select,
         }
     };
+    let m = job.req.problem.embed_dim();
+    let batch = params.replicas.clamp(1, MAX_WAVE_REPLICAS);
+    let key = ArenaKey::for_solve(m, batch, params.chunk, job_select);
+    let mut engine =
+        match arena.checkout(key, metrics, || build_engine(m, batch, params.chunk, job_select)) {
+            Ok(engine) => engine,
+            Err(e) => {
+                metrics.record_solve_failure();
+                eprintln!("solve job {} failed to build an engine: {e:#}", job.req.id);
+                return;
+            }
+        };
+    let progress = progress_fn(&job);
+    let hooks = SolveHooks {
+        cancel: job.cancel.as_deref(),
+        progress: progress.as_deref(),
+    };
     let trace_sink = job.req.trace.then(|| sink(DEFAULT_TRACE_CAP));
-    match solve_with_trace(&job.req.problem, &params, job_select, trace_sink.as_ref()) {
+    match solve_portfolio_hooked(
+        engine.as_mut(),
+        &job.req.problem,
+        &params,
+        trace_sink.as_ref(),
+        hooks,
+    ) {
         Ok(out) => {
+            arena.checkin(key, engine, metrics);
             let mut result = solve_result_from(&job, out);
             result.trace = trace_sink.map(|s| s.borrow_mut().take());
             result.queue_latency = dequeued.duration_since(job.submitted);
@@ -326,10 +376,17 @@ fn solve_one(job: SolveJob, metrics: &Metrics, select: EngineSelect) {
             // Receiver may have hung up (client gave up) — fine.
             let _ = job.reply.send(result);
         }
+        Err(e) if is_cancelled(&e) => {
+            // The client went away; nobody is waiting on the reply.
+            // The engine stopped at a chunk boundary and is healthy.
+            arena.checkin(key, engine, metrics);
+            metrics.record_solve_cancelled();
+        }
         Err(e) => {
             // Router validation catches malformed requests, so this is
             // an internal failure; drop the reply (the client surfaces
-            // "worker dropped reply") and count it.
+            // "worker dropped reply") and count it.  The engine's state
+            // is suspect — discard it rather than park it warm.
             metrics.record_solve_failure();
             eprintln!("solve job {} failed: {e:#}", job.req.id);
         }
@@ -340,7 +397,24 @@ fn solve_one(job: SolveJob, metrics: &Metrics, select: EngineSelect) {
 /// receives exactly the `SolveResult` its solo run would produce (the
 /// packed driver is bit-exact lane by lane); jobs beyond the engine's
 /// lane capacity backfill lanes as earlier problems retire.
-fn solve_packed_batch(jobs: Vec<SolveJob>, metrics: &Metrics, policy: &SolvePackPolicy) {
+///
+/// The engine comes from the worker's warm `arena`, keyed at the fixed
+/// `(bucket, policy.max_lanes)` geometry so every batch in a bucket
+/// reuses one standing engine regardless of its composition — lane
+/// blocks beyond the batch stay unprogrammed and uncoupled, so the
+/// per-lane results don't depend on the lane count.
+///
+/// A packed-driver error must not take down unrelated clients: the
+/// blast radius of one bad entry is contained by falling back to solo
+/// [`solve_one`] per job (counted in `solve_pack_fallbacks`), so an
+/// unrelated neighbor can't fail your request.
+fn solve_packed_batch(
+    jobs: Vec<SolveJob>,
+    metrics: &Metrics,
+    policy: &SolvePackPolicy,
+    select: EngineSelect,
+    arena: &mut EngineArena,
+) {
     let dequeued = Instant::now();
     let bucket = jobs
         .iter()
@@ -348,8 +422,7 @@ fn solve_packed_batch(jobs: Vec<SolveJob>, metrics: &Metrics, policy: &SolvePack
         .max()
         .unwrap_or(1)
         .next_power_of_two();
-    let total: usize = jobs.iter().map(|j| j.req.replicas).sum();
-    let lanes = total.min(policy.max_lanes);
+    let lanes = policy.max_lanes.max(1);
     let entries: Vec<(IsingProblem, PortfolioParams)> = jobs
         .iter()
         .map(|j| {
@@ -365,9 +438,45 @@ fn solve_packed_batch(jobs: Vec<SolveJob>, metrics: &Metrics, policy: &SolvePack
             )
         })
         .collect();
-    match solve_packed_native(bucket, lanes, DEFAULT_CHUNK, &entries) {
+    let key = ArenaKey::Native {
+        n: bucket,
+        batch: lanes,
+        chunk: DEFAULT_CHUNK,
+    };
+    let mut engine = match arena.checkout(key, metrics, || {
+        build_engine(bucket, lanes, DEFAULT_CHUNK, EngineSelect::Native)
+    }) {
+        Ok(engine) => engine,
+        Err(e) => {
+            eprintln!("packed engine build failed, falling back to solo solves: {e:#}");
+            metrics.record_solve_pack_fallback();
+            for job in jobs {
+                solve_one(job, metrics, select, arena);
+            }
+            return;
+        }
+    };
+    let progress_fns: Vec<Option<Box<dyn Fn(f64, usize)>>> =
+        jobs.iter().map(progress_fn).collect();
+    let hooks: Vec<SolveHooks<'_>> = jobs
+        .iter()
+        .zip(&progress_fns)
+        .map(|(job, progress)| SolveHooks {
+            cancel: job.cancel.as_deref(),
+            progress: progress.as_deref(),
+        })
+        .collect();
+    match solve_packed_hooked(engine.as_mut(), &entries, &hooks) {
         Ok(outs) => {
+            drop(hooks);
+            arena.checkin(key, engine, metrics);
             for (job, out) in jobs.into_iter().zip(outs) {
+                let Some(out) = out else {
+                    // Cancelled mid-pack: lanes were freed, nobody is
+                    // waiting on the reply.
+                    metrics.record_solve_cancelled();
+                    continue;
+                };
                 if out.early_exit {
                     metrics.record_solve_lanes_retired(out.replicas as u64);
                 }
@@ -383,12 +492,14 @@ fn solve_packed_batch(jobs: Vec<SolveJob>, metrics: &Metrics, policy: &SolvePack
             }
         }
         Err(e) => {
-            // All entries were router-validated, so this is internal;
-            // every job in the batch surfaces the dropped reply.
-            eprintln!("packed solve batch failed: {e:#}");
+            // One bad entry (or an internal packed-driver fault) must
+            // not drop every coalesced client's reply: discard the
+            // suspect engine and rerun each job solo on its own engine.
+            eprintln!("packed solve batch failed, falling back to solo solves: {e:#}");
+            metrics.record_solve_pack_fallback();
+            drop(hooks);
             for job in jobs {
-                metrics.record_solve_failure();
-                eprintln!("solve job {} failed in packed batch", job.req.id);
+                solve_one(job, metrics, select, arena);
             }
         }
     }
@@ -420,7 +531,12 @@ pub fn solve_worker_loop(
     metrics: Arc<Metrics>,
     select: EngineSelect,
     pack: SolvePackPolicy,
+    arena_capacity: usize,
 ) -> Result<()> {
+    // Engines are thread-affine (`ChunkEngine` is not `Send`), so each
+    // worker owns its warm arena outright; only the hit/miss/evict
+    // counters are shared, through `metrics`.
+    let mut arena = EngineArena::new(arena_capacity);
     loop {
         // The pending slot is only touched while holding the queue
         // lock, so take-collect-park is one atomic step: the next
@@ -442,9 +558,14 @@ pub fn solve_worker_loop(
         let Some(jobs) = jobs else { break };
         metrics.record_solve_batch(jobs.len());
         if jobs.len() == 1 {
-            solve_one(jobs.into_iter().next().expect("len checked"), &metrics, select);
+            solve_one(
+                jobs.into_iter().next().expect("len checked"),
+                &metrics,
+                select,
+                &mut arena,
+            );
         } else {
-            solve_packed_batch(jobs, &metrics, &pack);
+            solve_packed_batch(jobs, &metrics, &pack, select, &mut arena);
         }
     }
     Ok(())
@@ -518,6 +639,8 @@ mod tests {
             req,
             submitted: Instant::now(),
             reply,
+            cancel: None,
+            progress: None,
         }
     }
 
@@ -610,5 +733,54 @@ mod tests {
         let (tx, rx) = channel::<SolveJob>();
         drop(tx);
         assert!(collect_solve_batch(&rx, None, &SolvePackPolicy::default()).is_none());
+    }
+
+    #[test]
+    fn packed_batch_failure_falls_back_to_solo_per_job() {
+        // A batch whose packed run *must* fail internally: one job's
+        // replica count exceeds the packed engine's lane capacity
+        // (collect would normally reject it, but the blast-radius
+        // contract is about internal failures, whatever their source).
+        // Every coalesced job must still get its reply via the solo
+        // fallback — one bad neighbor can't blackhole the batch.
+        let metrics = Metrics::default();
+        let policy = SolvePackPolicy {
+            max_lanes: 8,
+            ..Default::default()
+        };
+        let mut arena = EngineArena::new(4);
+        let (rtx, rrx) = channel();
+        let jobs = vec![
+            solve_job(6, 16, 16, rtx.clone()), // 16 replicas > 8 lanes
+            solve_job(6, 4, 16, rtx.clone()),
+        ];
+        solve_packed_batch(jobs, &metrics, &policy, EngineSelect::Native, &mut arena);
+        let mut ids: Vec<u64> = (0..2).map(|_| rrx.try_recv().unwrap().id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![6, 6], "both jobs replied through the fallback");
+        let snap = metrics.snapshot();
+        assert_eq!(snap.solve_pack_fallbacks, 1);
+        assert_eq!(snap.solves_failed, 0, "fallback is not a failure");
+        assert_eq!(snap.solves_completed, 2);
+    }
+
+    #[test]
+    fn cancelled_solo_job_is_counted_and_dropped() {
+        use std::sync::atomic::AtomicBool;
+        let metrics = Metrics::default();
+        let mut arena = EngineArena::new(4);
+        let (rtx, rrx) = channel();
+        let mut job = solve_job(8, 4, 64, rtx);
+        job.cancel = Some(Arc::new(AtomicBool::new(true))); // pre-cancelled
+        solve_one(job, &metrics, EngineSelect::Native, &mut arena);
+        assert!(rrx.try_recv().is_err(), "no reply for a cancelled solve");
+        let snap = metrics.snapshot();
+        assert_eq!(snap.solves_cancelled, 1);
+        assert_eq!(snap.solves_failed, 0, "cancellation is not a failure");
+        assert_eq!(
+            arena.len(),
+            1,
+            "a cancelled solve's engine goes back in warm"
+        );
     }
 }

@@ -1,5 +1,7 @@
 //! Job/request/result types flowing through the coordinator.
 
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::onn::patterns::Pattern;
@@ -83,6 +85,10 @@ pub struct SolveRequest {
     /// (DESIGN_SOLVER.md §9).  Traced requests run solo — they never
     /// coalesce onto packed lane-block engines.
     pub trace: bool,
+    /// Stream `{"type":"progress"}` lines to the client while the
+    /// anneal runs (DESIGN_SOLVER.md §10).  Only the evented front end
+    /// honors this; the thread-per-connection server ignores it.
+    pub stream: bool,
 }
 
 impl SolveRequest {
@@ -100,8 +106,23 @@ impl SolveRequest {
             shards: None,
             rtl: false,
             trace: false,
+            stream: false,
         }
     }
+}
+
+/// One mid-anneal progress report, routed back to the submitting
+/// connection by `token` (the front end's connection identifier).
+#[derive(Debug, Clone, Copy)]
+pub struct ProgressEvent {
+    /// Connection token of the submitting client.
+    pub token: u64,
+    /// Request id the progress belongs to.
+    pub id: u64,
+    /// Best energy found so far across all replicas.
+    pub best_energy: f64,
+    /// Periods driven so far.
+    pub periods: usize,
 }
 
 /// The outcome of one solve request.
@@ -144,6 +165,14 @@ pub struct SolveJob {
     pub req: SolveRequest,
     pub submitted: Instant,
     pub reply: std::sync::mpsc::Sender<SolveResult>,
+    /// Set by the front end when the submitting client disconnects; the
+    /// portfolio driver checks it at every chunk boundary and abandons
+    /// the solve (`None` = not cancellable).
+    pub cancel: Option<Arc<AtomicBool>>,
+    /// Progress sink + connection token for streaming requests: the
+    /// worker sends one [`ProgressEvent`] per chunk and the front end
+    /// routes it to the token's connection (`None` = no streaming).
+    pub progress: Option<(std::sync::mpsc::Sender<ProgressEvent>, u64)>,
 }
 
 #[cfg(test)]

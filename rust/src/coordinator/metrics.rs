@@ -63,6 +63,21 @@ pub struct Metrics {
     /// Emulated fast-clock cycles those solves consumed — the hardware
     /// time-to-solution meter, summed over completed rtl jobs.
     pub solve_fast_cycles: AtomicU64,
+    /// Solves abandoned mid-run because their client went away (the
+    /// evented front end's cancel-on-disconnect).  Not failures: the
+    /// work was healthy, nobody wanted the answer anymore.
+    pub solves_cancelled: AtomicU64,
+    /// Packed batches that fell back to per-job solo solves after an
+    /// internal packed-path error (the blast-radius containment of the
+    /// coalescing batcher).
+    pub solve_pack_fallbacks: AtomicU64,
+    /// Warm-engine arena checkouts that reused a standing engine
+    /// (reprogram instead of rebuild).
+    pub arena_hits: AtomicU64,
+    /// Arena checkouts that had to build a fresh engine.
+    pub arena_misses: AtomicU64,
+    /// Warm engines evicted to respect the arena's capacity cap.
+    pub arena_evictions: AtomicU64,
 }
 
 /// A point-in-time snapshot for reporting.
@@ -102,6 +117,11 @@ pub struct MetricsSnapshot {
     pub solve_lanes_retired: u64,
     pub solves_rtl: u64,
     pub solve_fast_cycles: u64,
+    pub solves_cancelled: u64,
+    pub solve_pack_fallbacks: u64,
+    pub arena_hits: u64,
+    pub arena_misses: u64,
+    pub arena_evictions: u64,
 }
 
 impl Metrics {
@@ -182,6 +202,31 @@ impl Metrics {
         self.solve_lanes_retired.fetch_add(lanes, Ordering::Relaxed);
     }
 
+    /// A solve abandoned because its client disconnected mid-run.
+    pub fn record_solve_cancelled(&self) {
+        self.solves_cancelled.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A packed batch that fell back to per-job solo solves.
+    pub fn record_solve_pack_fallback(&self) {
+        self.solve_pack_fallbacks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// An arena checkout served by a standing warm engine.
+    pub fn record_arena_hit(&self) {
+        self.arena_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// An arena checkout that built a fresh engine.
+    pub fn record_arena_miss(&self) {
+        self.arena_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A warm engine evicted by the arena's capacity cap.
+    pub fn record_arena_eviction(&self) {
+        self.arena_evictions.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Meter the emulated fast-clock cycles of a completed rtl solve.
     /// The rtl job *count* comes from [`Self::record_solve_completion`]
     /// classifying on the engine kind.
@@ -226,6 +271,11 @@ impl Metrics {
             solve_lanes_retired: self.solve_lanes_retired.load(Ordering::Relaxed),
             solves_rtl: self.solves_rtl.load(Ordering::Relaxed),
             solve_fast_cycles: self.solve_fast_cycles.load(Ordering::Relaxed),
+            solves_cancelled: self.solves_cancelled.load(Ordering::Relaxed),
+            solve_pack_fallbacks: self.solve_pack_fallbacks.load(Ordering::Relaxed),
+            arena_hits: self.arena_hits.load(Ordering::Relaxed),
+            arena_misses: self.arena_misses.load(Ordering::Relaxed),
+            arena_evictions: self.arena_evictions.load(Ordering::Relaxed),
         }
     }
 }
@@ -241,6 +291,17 @@ fn summary_json(s: &LatencySummary) -> Json {
 }
 
 impl MetricsSnapshot {
+    /// Fraction of arena checkouts served by a standing warm engine
+    /// (0.0 on an empty or disabled arena, never NaN).
+    pub fn arena_hit_rate(&self) -> f64 {
+        let total = self.arena_hits + self.arena_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.arena_hits as f64 / total as f64
+        }
+    }
+
     /// The snapshot as one JSON object — counters at the top level,
     /// latency summaries as nested objects (each with `count`/`mean_ms`/
     /// `p50_ms`/`p90_ms`/`p99_ms`).
@@ -278,6 +339,15 @@ impl MetricsSnapshot {
             ),
             ("solves_rtl", Json::num(self.solves_rtl as f64)),
             ("solve_fast_cycles", Json::num(self.solve_fast_cycles as f64)),
+            ("solves_cancelled", Json::num(self.solves_cancelled as f64)),
+            (
+                "solve_pack_fallbacks",
+                Json::num(self.solve_pack_fallbacks as f64),
+            ),
+            ("arena_hits", Json::num(self.arena_hits as f64)),
+            ("arena_misses", Json::num(self.arena_misses as f64)),
+            ("arena_evictions", Json::num(self.arena_evictions as f64)),
+            ("arena_hit_rate", Json::num(self.arena_hit_rate())),
         ])
     }
 
@@ -286,7 +356,7 @@ impl MetricsSnapshot {
     pub fn prometheus(&self) -> String {
         use std::fmt::Write;
         let mut out = String::new();
-        let counters: [(&str, u64); 13] = [
+        let counters: [(&str, u64); 18] = [
             ("onn_jobs_submitted", self.submitted),
             ("onn_jobs_completed", self.completed),
             ("onn_jobs_timeouts", self.timeouts),
@@ -299,6 +369,11 @@ impl MetricsSnapshot {
             ("onn_solve_batches", self.solve_batches),
             ("onn_solve_lanes_retired", self.solve_lanes_retired),
             ("onn_solve_fast_cycles", self.solve_fast_cycles),
+            ("onn_solves_cancelled", self.solves_cancelled),
+            ("onn_solve_pack_fallbacks", self.solve_pack_fallbacks),
+            ("onn_arena_hits", self.arena_hits),
+            ("onn_arena_misses", self.arena_misses),
+            ("onn_arena_evictions", self.arena_evictions),
             ("onn_solves_total_all_engines", self.solves_completed),
         ];
         for (name, v) in counters {
@@ -317,6 +392,7 @@ impl MetricsSnapshot {
         for (name, v) in [
             ("onn_batch_occupancy", self.mean_occupancy),
             ("onn_solve_batch_occupancy", self.solve_batch_occupancy),
+            ("onn_arena_hit_rate", self.arena_hit_rate()),
         ] {
             let _ = writeln!(out, "# TYPE {name} gauge\n{name} {v}");
         }
@@ -432,6 +508,41 @@ mod tests {
         assert_eq!(s.solve_batches, 2);
         assert!((s.solve_batch_occupancy - 2.0).abs() < 1e-9);
         assert_eq!(s.solve_lanes_retired, 8);
+    }
+
+    #[test]
+    fn lifecycle_and_arena_counters_aggregate() {
+        let m = Metrics::default();
+        let s = m.snapshot();
+        assert_eq!(s.arena_hit_rate(), 0.0, "empty arena never NaNs");
+        m.record_solve_cancelled();
+        m.record_solve_pack_fallback();
+        m.record_arena_miss();
+        m.record_arena_hit();
+        m.record_arena_hit();
+        m.record_arena_eviction();
+        let s = m.snapshot();
+        assert_eq!(s.solves_cancelled, 1);
+        assert_eq!(s.solve_pack_fallbacks, 1);
+        assert_eq!(s.arena_hits, 2);
+        assert_eq!(s.arena_misses, 1);
+        assert_eq!(s.arena_evictions, 1);
+        assert!((s.arena_hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+        let j = s.to_json();
+        for key in [
+            "solves_cancelled",
+            "solve_pack_fallbacks",
+            "arena_hits",
+            "arena_misses",
+            "arena_evictions",
+            "arena_hit_rate",
+        ] {
+            assert!(j.get(key).and_then(Json::as_f64).is_some(), "{key}");
+        }
+        let text = s.prometheus();
+        assert!(text.contains("onn_solves_cancelled 1"));
+        assert!(text.contains("onn_arena_hits 2"));
+        assert!(text.contains("onn_arena_hit_rate"));
     }
 
     #[test]

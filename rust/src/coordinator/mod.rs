@@ -19,8 +19,10 @@
 //! (`server::SolverPoolConfig`), bit-exact with the native path, and
 //! report their all-gather `sync_rounds` in results and metrics.
 
+pub mod arena;
 pub mod batcher;
 pub mod job;
 pub mod metrics;
 pub mod router;
 pub mod server;
+pub mod stream;

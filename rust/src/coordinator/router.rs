@@ -4,6 +4,7 @@
 //! every problem size).
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -11,7 +12,7 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::job::{
-    Job, RetrievalRequest, RetrievalResult, SolveJob, SolveRequest, SolveResult,
+    Job, ProgressEvent, RetrievalRequest, RetrievalResult, SolveJob, SolveRequest, SolveResult,
 };
 use crate::coordinator::metrics::Metrics;
 
@@ -19,6 +20,10 @@ use crate::coordinator::metrics::Metrics;
 pub struct Router {
     queues: Mutex<BTreeMap<usize, Sender<Job>>>,
     solver: Mutex<Option<Sender<SolveJob>>>,
+    /// Latched by [`shutdown`](Self::shutdown); serve loops poll it so
+    /// a shut-down coordinator's listener exits without needing one
+    /// more client to connect.
+    shutdown: AtomicBool,
     pub metrics: Arc<Metrics>,
 }
 
@@ -27,8 +32,14 @@ impl Router {
         Self {
             queues: Mutex::new(BTreeMap::new()),
             solver: Mutex::new(None),
+            shutdown: AtomicBool::new(false),
             metrics,
         }
+    }
+
+    /// Whether [`shutdown`](Self::shutdown) has been called.
+    pub fn is_shutdown(&self) -> bool {
+        self.shutdown.load(Ordering::Relaxed)
     }
 
     /// Register a worker queue for network size `n`.  Replacing an
@@ -88,6 +99,19 @@ impl Router {
 
     /// Submit a solve request; the returned channel yields the result.
     pub fn submit_solve(&self, req: SolveRequest) -> Result<Receiver<SolveResult>> {
+        self.submit_solve_hooked(req, None, None)
+    }
+
+    /// [`submit_solve`](Self::submit_solve) with serving-lifecycle
+    /// hooks: a cancel flag the front end sets when the client
+    /// disconnects, and a progress sink + connection token for
+    /// streaming requests.
+    pub fn submit_solve_hooked(
+        &self,
+        req: SolveRequest,
+        cancel: Option<Arc<AtomicBool>>,
+        progress: Option<(Sender<ProgressEvent>, u64)>,
+    ) -> Result<Receiver<SolveResult>> {
         if let Err(e) = req.problem.validate() {
             return Err(anyhow!("solve request {}: {e}", req.id));
         }
@@ -137,13 +161,17 @@ impl Router {
             req,
             submitted: Instant::now(),
             reply: rtx,
+            cancel,
+            progress,
         })
         .map_err(|_| anyhow!("solver queue closed"))?;
         Ok(rrx)
     }
 
-    /// Drop all routes (workers drain and exit).
+    /// Drop all routes (workers drain and exit) and latch the shutdown
+    /// flag the serve loops poll.
     pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::Relaxed);
         self.queues.lock().unwrap().clear();
         *self.solver.lock().unwrap() = None;
     }
@@ -204,7 +232,9 @@ mod tests {
         let r = Router::new(Arc::new(Metrics::default()));
         let (tx, _rx) = channel();
         r.register(9, tx).unwrap();
+        assert!(!r.is_shutdown());
         r.shutdown();
+        assert!(r.is_shutdown(), "serve loops poll this latch to exit");
         assert!(r.submit(req(9)).is_err());
     }
 

@@ -38,8 +38,9 @@ use crate::runtime::artifact::Manifest;
 #[cfg(feature = "pjrt")]
 use crate::runtime::engine::{PjrtContext, PjrtEngine};
 
-/// Solver workers sharing the solve queue (engines are per-request, so
-/// this bounds concurrent solves, not problem sizes).
+/// Solver workers sharing the solve queue (engines are built per
+/// request geometry and parked warm in each worker's arena, so this
+/// bounds concurrent solves, not problem sizes).
 const SOLVE_WORKERS: usize = 2;
 
 /// Solver pool configuration: worker count, the engine-selection rule,
@@ -74,7 +75,18 @@ pub struct SolverPoolConfig {
     /// disables multi-problem packing (it has no lane blocks); an
     /// explicit per-request `shards` override still wins.
     pub rtl: bool,
+    /// Warm engines each solver worker parks between requests
+    /// (`coordinator::arena`): a request whose geometry matches a
+    /// parked engine reprograms it via `set_weights`/`set_noise`
+    /// instead of building a fresh one (shard threads stay alive across
+    /// requests).  0 disables warming — every request builds cold, the
+    /// pre-arena behavior.
+    pub arena_capacity: usize,
 }
+
+/// Warm engines parked per solver worker by default: enough for a
+/// handful of hot request geometries without hoarding memory.
+pub const DEFAULT_ARENA_CAPACITY: usize = 8;
 
 impl Default for SolverPoolConfig {
     fn default() -> Self {
@@ -87,6 +99,7 @@ impl Default for SolverPoolConfig {
             pack_max_lanes: pack.max_lanes,
             pack_max_wait: pack.max_wait,
             rtl: false,
+            arena_capacity: DEFAULT_ARENA_CAPACITY,
         }
     }
 }
@@ -264,12 +277,13 @@ impl Coordinator {
         let pending: SolvePending = Arc::new(Mutex::new(None));
         let select = solver.select();
         let pack = solver.pack();
+        let arena_capacity = solver.arena_capacity;
         for _ in 0..solver.workers.max(1) {
             let m = metrics.clone();
             let rx = srx.clone();
             let pend = pending.clone();
             workers.push(std::thread::spawn(move || {
-                solve_worker_loop(rx, pend, m, select, pack)
+                solve_worker_loop(rx, pend, m, select, pack, arena_capacity)
             }));
         }
 
@@ -332,21 +346,77 @@ pub fn handle_line(router: &Router, line: &str) -> String {
     };
     match parsed.get("type").and_then(Json::as_str) {
         Some("solve") => handle_solve_value(router, &parsed),
-        Some("metrics") => {
-            let snap = router.metrics.snapshot();
-            Json::obj(vec![
-                ("type", Json::str("metrics")),
-                ("snapshot", snap.to_json()),
-                ("prometheus", Json::str(snap.prometheus())),
-            ])
-            .to_string()
-        }
+        Some("metrics") => metrics_line(router),
         None | Some("retrieve") => handle_retrieval_value(router, &parsed),
-        Some(other) => {
-            Json::obj(vec![("error", Json::str(format!("unknown request type '{other}'")))])
-                .to_string()
-        }
+        Some(other) => error_line(&format!("unknown request type '{other}'")),
     }
+}
+
+/// One `{"error": ...}` response line (shared by both front ends).
+pub fn error_line(msg: &str) -> String {
+    Json::obj(vec![("error", Json::str(msg))]).to_string()
+}
+
+/// The `{"type": "metrics"}` response line (shared by both front ends).
+pub fn metrics_line(router: &Router) -> String {
+    let snap = router.metrics.snapshot();
+    Json::obj(vec![
+        ("type", Json::str("metrics")),
+        ("snapshot", snap.to_json()),
+        ("prometheus", Json::str(snap.prometheus())),
+    ])
+    .to_string()
+}
+
+/// Serialize one retrieval result for the wire (shared by both front
+/// ends so the evented server's responses are byte-identical to the
+/// thread-per-connection server's).
+pub fn retrieval_result_json(id: u64, res: &RetrievalResult) -> Json {
+    Json::obj(vec![
+        ("id", Json::num(id as f64)),
+        ("phases", Json::arr_i32(&res.phases)),
+        (
+            "settled",
+            res.settled
+                .map(|s| Json::num(s as f64))
+                .unwrap_or(Json::Null),
+        ),
+    ])
+}
+
+/// Serialize one solve result for the wire (shared by both front ends).
+pub fn solve_result_json(id: u64, res: &SolveResult) -> Json {
+    let mut fields = vec![
+        ("id", Json::num(id as f64)),
+        (
+            "spins",
+            Json::arr_i32(&res.spins.iter().map(|&s| s as i32).collect::<Vec<_>>()),
+        ),
+        ("phases", Json::arr_i32(&res.phases)),
+        ("energy", Json::num(res.energy)),
+        ("objective", Json::num(res.objective)),
+        ("periods", Json::num(res.periods as f64)),
+        ("replicas", Json::num(res.replicas as f64)),
+        ("settled_replicas", Json::num(res.settled_replicas as f64)),
+        ("engine", Json::str(res.engine)),
+        ("sync_rounds", Json::num(res.sync_rounds as f64)),
+        ("quantization_error", Json::num(res.quantization_error)),
+    ];
+    if let Some(hw) = &res.hardware {
+        fields.push(("hw_fast_cycles", Json::num(hw.fast_cycles as f64)));
+        fields.push(("hw_emulated_s", Json::num(hw.emulated_s)));
+        fields.push(("hw_fits_device", Json::Bool(hw.fits_device)));
+    }
+    // Present only when the request asked for it, so untraced
+    // responses are byte-identical to the pre-telemetry wire.
+    let trace = res
+        .trace
+        .as_ref()
+        .map(|t| Json::Arr(t.iter().map(|r| r.to_json()).collect()));
+    if let Some(trace) = trace {
+        fields.push(("trace", trace));
+    }
+    Json::obj(fields)
 }
 
 fn handle_retrieval_value(router: &Router, v: &Json) -> String {
@@ -356,18 +426,8 @@ fn handle_retrieval_value(router: &Router, v: &Json) -> String {
         let res = rx.recv().map_err(|_| anyhow!("worker dropped reply"))?;
         Ok((id, res))
     }) {
-        Ok((id, res)) => Json::obj(vec![
-            ("id", Json::num(id as f64)),
-            ("phases", Json::arr_i32(&res.phases)),
-            (
-                "settled",
-                res.settled
-                    .map(|s| Json::num(s as f64))
-                    .unwrap_or(Json::Null),
-            ),
-        ])
-        .to_string(),
-        Err(e) => Json::obj(vec![("error", Json::str(e.to_string()))]).to_string(),
+        Ok((id, res)) => retrieval_result_json(id, &res).to_string(),
+        Err(e) => error_line(&e.to_string()),
     }
 }
 
@@ -378,48 +438,22 @@ fn handle_solve_value(router: &Router, v: &Json) -> String {
         let res = rx.recv().map_err(|_| anyhow!("solver dropped reply"))?;
         Ok((id, res))
     }) {
-        Ok((id, res)) => {
-            let mut fields = vec![
-                ("id", Json::num(id as f64)),
-                (
-                    "spins",
-                    Json::arr_i32(&res.spins.iter().map(|&s| s as i32).collect::<Vec<_>>()),
-                ),
-                ("phases", Json::arr_i32(&res.phases)),
-                ("energy", Json::num(res.energy)),
-                ("objective", Json::num(res.objective)),
-                ("periods", Json::num(res.periods as f64)),
-                ("replicas", Json::num(res.replicas as f64)),
-                ("settled_replicas", Json::num(res.settled_replicas as f64)),
-                ("engine", Json::str(res.engine)),
-                ("sync_rounds", Json::num(res.sync_rounds as f64)),
-                ("quantization_error", Json::num(res.quantization_error)),
-            ];
-            if let Some(hw) = &res.hardware {
-                fields.push(("hw_fast_cycles", Json::num(hw.fast_cycles as f64)));
-                fields.push(("hw_emulated_s", Json::num(hw.emulated_s)));
-                fields.push(("hw_fits_device", Json::Bool(hw.fits_device)));
-            }
-            // Present only when the request asked for it, so untraced
-            // responses are byte-identical to the pre-telemetry wire.
-            let trace = res
-                .trace
-                .as_ref()
-                .map(|t| Json::Arr(t.iter().map(|r| r.to_json()).collect()));
-            if let Some(trace) = trace {
-                fields.push(("trace", trace));
-            }
-            Json::obj(fields).to_string()
-        }
-        Err(e) => Json::obj(vec![("error", Json::str(e.to_string()))]).to_string(),
+        Ok((id, res)) => solve_result_json(id, &res).to_string(),
+        Err(e) => error_line(&e.to_string()),
     }
 }
 
-fn parse_request(v: &Json) -> Result<RetrievalRequest> {
+pub(crate) fn parse_request(v: &Json) -> Result<RetrievalRequest> {
     let n = v
         .get("n")
         .and_then(Json::as_usize)
         .ok_or_else(|| anyhow!("missing 'n'"))?;
+    // The retrieval path enforces the same wire ceilings as the solve
+    // path: an unbounded 'n' or 'max_periods' would let one request
+    // line allocate or busy the coordinator to death.
+    if n > MAX_WIRE_N {
+        return Err(anyhow!("'n' = {n} exceeds the wire limit {MAX_WIRE_N}"));
+    }
     let phases: Vec<i32> = v
         .get("phases")
         .and_then(Json::as_arr)
@@ -428,14 +462,20 @@ fn parse_request(v: &Json) -> Result<RetrievalRequest> {
         .map(|x| x.as_i64().map(|v| v as i32))
         .collect::<Option<Vec<i32>>>()
         .ok_or_else(|| anyhow!("non-numeric phase"))?;
+    let max_periods = v
+        .get("max_periods")
+        .and_then(Json::as_usize)
+        .unwrap_or(256);
+    if max_periods > MAX_WIRE_PERIODS {
+        return Err(anyhow!(
+            "'max_periods' = {max_periods} exceeds the wire limit {MAX_WIRE_PERIODS}"
+        ));
+    }
     Ok(RetrievalRequest {
         id: v.get("id").and_then(Json::as_usize).unwrap_or(0) as u64,
         n,
         phases,
-        max_periods: v
-            .get("max_periods")
-            .and_then(Json::as_usize)
-            .unwrap_or(256),
+        max_periods,
     })
 }
 
@@ -460,8 +500,9 @@ const MAX_WIRE_SHARDS: usize = 64;
 /// `"shards"` (explicit engine override; absent = threshold rule),
 /// `"rtl"` (force the emulated-hardware engine; exclusive with
 /// `"shards"`), `"trace"` (attach a solve-lifecycle trace to the
-/// result).
-fn parse_solve_request(v: &Json) -> Result<SolveRequest> {
+/// result), `"stream"` (emit `{"type":"progress"}` lines mid-anneal —
+/// honored by the evented front end, DESIGN_SOLVER.md §10).
+pub(crate) fn parse_solve_request(v: &Json) -> Result<SolveRequest> {
     let n = v
         .get("n")
         .and_then(Json::as_usize)
@@ -570,6 +611,7 @@ fn parse_solve_request(v: &Json) -> Result<SolveRequest> {
     };
     let rtl = bool_field("rtl")?;
     let trace = bool_field("trace")?;
+    let stream = bool_field("stream")?;
     if rtl && shards.is_some() {
         return Err(anyhow!("'rtl' and 'shards' are mutually exclusive"));
     }
@@ -583,24 +625,42 @@ fn parse_solve_request(v: &Json) -> Result<SolveRequest> {
         shards,
         rtl,
         trace,
+        stream,
     })
 }
 
 /// Serve JSON-lines over TCP until the listener errors or the router is
-/// shut down.  One thread per connection (std-only substitute for the
-/// async accept loop).
+/// shut down.  One thread per connection (the evented front end,
+/// `coordinator::stream::serve_evented`, is the scalable alternative —
+/// this loop stays as the baseline the connection-scale bench measures
+/// against).
+///
+/// The listener runs nonblocking and the loop polls the router's
+/// shutdown latch between accepts, so `Coordinator::shutdown` stops the
+/// serve thread without needing one more client to connect (the old
+/// loop blocked in accept and only ever checked a condition —
+/// `!has_solver()` — that a live pool never satisfies).
 pub fn serve_tcp(router: Arc<Router>, listener: TcpListener) -> Result<()> {
-    for stream in listener.incoming() {
-        let stream = stream?;
-        let conn_router = Arc::clone(&router);
-        std::thread::spawn(move || {
-            let _ = handle_conn(&conn_router, stream);
-        });
-        if router.routes().is_empty() && !router.has_solver() {
-            break;
+    listener.set_nonblocking(true)?;
+    loop {
+        if router.is_shutdown() {
+            return Ok(());
+        }
+        match listener.accept() {
+            Ok((stream, _addr)) => {
+                // Connection handlers do blocking line-at-a-time I/O.
+                stream.set_nonblocking(false)?;
+                let conn_router = Arc::clone(&router);
+                std::thread::spawn(move || {
+                    let _ = handle_conn(&conn_router, stream);
+                });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(e.into()),
         }
     }
-    Ok(())
 }
 
 fn handle_conn(router: &Router, stream: TcpStream) -> Result<()> {
@@ -641,6 +701,18 @@ mod tests {
         assert_eq!(r.max_periods, 256);
         assert!(parse_str("{}").is_err());
         assert!(parse_str(r#"{"n": 1, "phases": ["x"]}"#).is_err());
+        // The retrieval path enforces the same wire ceilings as the
+        // solve path.
+        assert!(
+            parse_str(r#"{"n": 100000000, "phases": []}"#).is_err(),
+            "'n' over the wire size cap must be rejected"
+        );
+        assert!(
+            parse_str(r#"{"n": 1, "phases": [0], "max_periods": 100000000}"#).is_err(),
+            "'max_periods' over the wire effort cap must be rejected"
+        );
+        // At-the-cap requests still parse.
+        assert!(parse_str(r#"{"n": 1, "phases": [0], "max_periods": 65536}"#).is_ok());
     }
 
     #[test]
@@ -721,11 +793,17 @@ mod tests {
         assert_eq!(ok.schedule.name(), "geometric");
         assert_eq!(ok.shards, None, "no override by default");
         assert!(!ok.rtl && !ok.trace, "observability flags default off");
+        assert!(!ok.stream, "streaming defaults off");
         let flagged = parse_solve_request(
             &Json::parse(r#"{"n":2,"j":[0,-1,-1,0],"rtl":true,"trace":true}"#).unwrap(),
         )
         .unwrap();
         assert!(flagged.rtl && flagged.trace);
+        let streaming = parse_solve_request(
+            &Json::parse(r#"{"n":2,"j":[0,-1,-1,0],"stream":true}"#).unwrap(),
+        )
+        .unwrap();
+        assert!(streaming.stream);
         for bad in [
             r#"{"j":[0,0,0,0]}"#,                      // missing n
             r#"{"n":2}"#,                              // missing couplings
@@ -743,6 +821,7 @@ mod tests {
             r#"{"n":2,"j":[0,1,1,0],"shards":1000}"#,  // over the shard cap
             r#"{"n":2,"j":[0,1,1,0],"rtl":1}"#,        // rtl must be boolean
             r#"{"n":2,"j":[0,1,1,0],"trace":"yes"}"#,  // trace must be boolean
+            r#"{"n":2,"j":[0,1,1,0],"stream":0}"#,     // stream must be boolean
             r#"{"n":2,"j":[0,1,1,0],"rtl":true,"shards":2}"#, // exclusive overrides
         ] {
             assert!(

@@ -1,0 +1,413 @@
+//! The evented streaming front end: one readiness loop over
+//! nonblocking sockets multiplexing every connection — no thread per
+//! connection — with mid-anneal `{"type":"progress"}` JSON lines for
+//! streaming solves and cancellation of a solve whose client
+//! disconnected (DESIGN_SOLVER.md §10).
+//!
+//! This is the serving shape the paper's endgame needs: the
+//! fully connected ONN as a network *service* (laptop UI -> PYNQ link),
+//! where thousands of idle-ish clients must not cost a thread each and
+//! an abandoned request must not burn engine time.  The loop is a
+//! std-only poll(2) readiness loop (tokio/mio are unavailable offline);
+//! requests are submitted to the same router/solver pool as the
+//! thread-per-connection server ([`serve_tcp`]), and responses are
+//! byte-identical — only the transport changes.
+//!
+//! Per connection the loop keeps a read buffer (JSON lines are cut at
+//! `\n`), a bounded write buffer (a slow or dead consumer is
+//! disconnected rather than allowed to wedge the loop), and a `token`
+//! identifying it in the in-flight tables.  A solve submitted from a
+//! connection carries a cancel flag (set the moment the connection
+//! drops — the portfolio driver checks it at every chunk boundary) and,
+//! for `"stream": true` requests, a progress sender that routes
+//! per-chunk `{"type":"progress","id":...,"best_energy":...,
+//! "periods":...}` lines back to the submitting connection.
+//!
+//! [`serve_tcp`]: crate::coordinator::server::serve_tcp
+
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::job::{ProgressEvent, RetrievalResult, SolveResult};
+use crate::coordinator::router::Router;
+use crate::coordinator::server::{
+    error_line, metrics_line, parse_request, parse_solve_request, retrieval_result_json,
+    solve_result_json,
+};
+use crate::util::json::Json;
+
+/// Write-buffer cap per connection: a consumer that falls this far
+/// behind (or stopped reading entirely) is disconnected instead of
+/// growing the buffer without bound.
+const MAX_WBUF: usize = 1 << 20;
+
+/// Bytes read per connection per loop iteration (bounds how long one
+/// flooding connection can hold the loop).
+const READ_CHUNK: usize = 16 * 1024;
+
+/// Readiness-wait bound: the loop also has to drain worker reply
+/// channels (mpsc, invisible to poll), so it never sleeps longer than
+/// this even with no socket activity.
+const POLL_TIMEOUT_MS: i32 = 1;
+
+#[cfg(unix)]
+mod sys {
+    //! Minimal poll(2) binding.  std links libc already; declaring the
+    //! one symbol we need avoids a vendored libc crate.
+
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct PollFd {
+        pub fd: i32,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLOUT: i16 = 0x004;
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: u64, timeout: i32) -> i32;
+    }
+
+    /// Wait until any fd is ready or the timeout elapses.  The loop
+    /// treats readiness as advisory (every socket op is nonblocking),
+    /// so errors are folded into "nothing ready".
+    pub fn wait(fds: &mut [PollFd], timeout_ms: i32) {
+        if fds.is_empty() {
+            std::thread::sleep(std::time::Duration::from_millis(timeout_ms.max(1) as u64));
+            return;
+        }
+        unsafe {
+            poll(fds.as_mut_ptr(), fds.len() as u64, timeout_ms);
+        }
+    }
+}
+
+/// One multiplexed connection.
+struct Conn {
+    stream: TcpStream,
+    token: u64,
+    rbuf: Vec<u8>,
+    wbuf: VecDeque<u8>,
+    dead: bool,
+}
+
+impl Conn {
+    fn push_line(&mut self, line: &str) {
+        self.wbuf.extend(line.as_bytes());
+        self.wbuf.push_back(b'\n');
+        if self.wbuf.len() > MAX_WBUF {
+            // Slow consumer: drop the connection rather than buffer
+            // without bound (its in-flight solves get cancelled like
+            // any other disconnect).
+            self.dead = true;
+        }
+    }
+}
+
+/// An outstanding request whose reply will arrive on a worker channel.
+enum InFlight {
+    Solve {
+        token: u64,
+        id: u64,
+        cancel: Arc<AtomicBool>,
+        rx: Receiver<SolveResult>,
+    },
+    Retrieve {
+        token: u64,
+        id: u64,
+        rx: Receiver<RetrievalResult>,
+    },
+}
+
+impl InFlight {
+    fn token(&self) -> u64 {
+        match self {
+            InFlight::Solve { token, .. } | InFlight::Retrieve { token, .. } => *token,
+        }
+    }
+}
+
+/// Serve the JSON-lines protocol on an evented readiness loop until the
+/// router is shut down.  Protocol-compatible with
+/// [`serve_tcp`](crate::coordinator::server::serve_tcp) plus two
+/// serving-lifecycle behaviors only this front end provides:
+/// `"stream": true` solves emit `{"type":"progress"}` lines mid-anneal,
+/// and a client disconnect cancels its outstanding solves at the next
+/// chunk boundary.  Responses to a connection that pipelines several
+/// requests come back in completion order (ids disambiguate).
+pub fn serve_evented(router: Arc<Router>, listener: TcpListener) -> Result<()> {
+    listener.set_nonblocking(true)?;
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut inflight: Vec<InFlight> = Vec::new();
+    let mut next_token: u64 = 1;
+    // One shared progress channel: workers tag events with the
+    // submitting connection's token, the loop routes them back.
+    let (ptx, prx) = channel::<ProgressEvent>();
+
+    loop {
+        if router.is_shutdown() {
+            return Ok(());
+        }
+
+        wait_for_readiness(&listener, &conns);
+
+        // Accept every pending connection.
+        loop {
+            match listener.accept() {
+                Ok((stream, _addr)) => {
+                    stream.set_nonblocking(true)?;
+                    conns.push(Conn {
+                        stream,
+                        token: next_token,
+                        rbuf: Vec::new(),
+                        wbuf: VecDeque::new(),
+                        dead: false,
+                    });
+                    next_token += 1;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => break,
+                Err(e) => return Err(e.into()),
+            }
+        }
+
+        // Read sweep: pull bytes, cut complete lines, dispatch each.
+        // One flooding connection is bounded to READ_CHUNK bytes per
+        // iteration, so its malformed lines can't stall the others.
+        let mut chunk = [0u8; READ_CHUNK];
+        for conn in conns.iter_mut() {
+            if conn.dead {
+                continue;
+            }
+            match conn.stream.read(&mut chunk) {
+                Ok(0) => conn.dead = true,
+                Ok(got) => conn.rbuf.extend_from_slice(&chunk[..got]),
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {}
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => conn.dead = true,
+            }
+            while let Some(pos) = conn.rbuf.iter().position(|&b| b == b'\n') {
+                let raw: Vec<u8> = conn.rbuf.drain(..=pos).collect();
+                let line = String::from_utf8_lossy(&raw[..pos]);
+                let line = line.trim();
+                if line.is_empty() {
+                    continue;
+                }
+                if let Some(resp) = dispatch_line(&router, line, conn.token, &ptx, &mut inflight)
+                {
+                    conn.push_line(&resp);
+                }
+            }
+        }
+
+        // Route progress events to their owner connections.
+        while let Ok(ev) = prx.try_recv() {
+            if let Some(conn) = conns.iter_mut().find(|c| c.token == ev.token && !c.dead) {
+                conn.push_line(&progress_line(&ev));
+            }
+        }
+
+        // Reply sweep: poll every in-flight request without blocking.
+        let mut still = Vec::with_capacity(inflight.len());
+        for entry in inflight.drain(..) {
+            if let Some(entry) = poll_inflight(entry, &mut conns) {
+                still.push(entry);
+            }
+        }
+        inflight = still;
+
+        // Flush write buffers.
+        for conn in conns.iter_mut() {
+            flush_conn(conn);
+        }
+
+        // Reap dead connections: cancel their outstanding solves (the
+        // worker abandons the anneal at the next chunk boundary) and
+        // drop their reply channels.
+        if conns.iter().any(|c| c.dead) {
+            let dead: Vec<u64> = conns.iter().filter(|c| c.dead).map(|c| c.token).collect();
+            inflight.retain(|entry| {
+                let gone = dead.contains(&entry.token());
+                if gone {
+                    if let InFlight::Solve { cancel, .. } = entry {
+                        cancel.store(true, Ordering::Relaxed);
+                    }
+                }
+                !gone
+            });
+            conns.retain(|c| !c.dead);
+        }
+    }
+}
+
+/// Block until a socket is ready or the timeout elapses — poll(2) on
+/// unix, a plain bounded sleep elsewhere (every socket op in the loop
+/// is nonblocking, so readiness is a latency optimization, not a
+/// correctness requirement).
+#[cfg(unix)]
+fn wait_for_readiness(listener: &TcpListener, conns: &[Conn]) {
+    use std::os::unix::io::AsRawFd;
+    let mut fds: Vec<sys::PollFd> = Vec::with_capacity(conns.len() + 1);
+    fds.push(sys::PollFd {
+        fd: listener.as_raw_fd(),
+        events: sys::POLLIN,
+        revents: 0,
+    });
+    for conn in conns {
+        let mut events = sys::POLLIN;
+        if !conn.wbuf.is_empty() {
+            events |= sys::POLLOUT;
+        }
+        fds.push(sys::PollFd {
+            fd: conn.stream.as_raw_fd(),
+            events,
+            revents: 0,
+        });
+    }
+    sys::wait(&mut fds, POLL_TIMEOUT_MS);
+}
+
+#[cfg(not(unix))]
+fn wait_for_readiness(_listener: &TcpListener, _conns: &[Conn]) {
+    std::thread::sleep(std::time::Duration::from_millis(POLL_TIMEOUT_MS.max(1) as u64));
+}
+
+/// One `{"type":"progress"}` line (DESIGN_SOLVER.md §10).
+fn progress_line(ev: &ProgressEvent) -> String {
+    Json::obj(vec![
+        ("type", Json::str("progress")),
+        ("id", Json::num(ev.id as f64)),
+        ("best_energy", Json::num(ev.best_energy)),
+        ("periods", Json::num(ev.periods as f64)),
+    ])
+    .to_string()
+}
+
+/// Dispatch one request line.  Returns `Some(response)` for immediate
+/// replies (metrics, parse/routing errors); queues an [`InFlight`]
+/// entry and returns `None` when a worker owns the reply.
+fn dispatch_line(
+    router: &Router,
+    line: &str,
+    token: u64,
+    ptx: &Sender<ProgressEvent>,
+    inflight: &mut Vec<InFlight>,
+) -> Option<String> {
+    let parsed = match Json::parse(line) {
+        Ok(v) => v,
+        Err(e) => return Some(error_line(&format!("bad json: {e}"))),
+    };
+    match parsed.get("type").and_then(Json::as_str) {
+        Some("metrics") => Some(metrics_line(router)),
+        Some("solve") => {
+            let req = match parse_solve_request(&parsed) {
+                Ok(req) => req,
+                Err(e) => return Some(error_line(&e.to_string())),
+            };
+            let id = req.id;
+            let cancel = Arc::new(AtomicBool::new(false));
+            let progress = req.stream.then(|| (ptx.clone(), token));
+            match router.submit_solve_hooked(req, Some(cancel.clone()), progress) {
+                Ok(rx) => {
+                    inflight.push(InFlight::Solve {
+                        token,
+                        id,
+                        cancel,
+                        rx,
+                    });
+                    None
+                }
+                Err(e) => Some(error_line(&e.to_string())),
+            }
+        }
+        None | Some("retrieve") => {
+            let req = match parse_request(&parsed) {
+                Ok(req) => req,
+                Err(e) => return Some(error_line(&e.to_string())),
+            };
+            let id = req.id;
+            match router.submit(req) {
+                Ok(rx) => {
+                    inflight.push(InFlight::Retrieve { token, id, rx });
+                    None
+                }
+                Err(e) => Some(error_line(&e.to_string())),
+            }
+        }
+        Some(other) => Some(error_line(&format!("unknown request type '{other}'"))),
+    }
+}
+
+/// Poll one in-flight request: route its reply (or its worker's
+/// disappearance) to the owner connection.  Returns the entry when the
+/// reply is still pending.
+fn poll_inflight(entry: InFlight, conns: &mut [Conn]) -> Option<InFlight> {
+    let push = |conns: &mut [Conn], token: u64, line: String| {
+        if let Some(conn) = conns.iter_mut().find(|c| c.token == token && !c.dead) {
+            conn.push_line(&line);
+        }
+    };
+    match entry {
+        InFlight::Solve {
+            token,
+            id,
+            cancel,
+            rx,
+        } => match rx.try_recv() {
+            Ok(res) => {
+                push(conns, token, solve_result_json(id, &res).to_string());
+                None
+            }
+            Err(TryRecvError::Empty) => Some(InFlight::Solve {
+                token,
+                id,
+                cancel,
+                rx,
+            }),
+            Err(TryRecvError::Disconnected) => {
+                // The worker dropped the reply: an internal failure or
+                // a cancelled solve racing the disconnect sweep.
+                push(conns, token, error_line("solver dropped reply"));
+                None
+            }
+        },
+        InFlight::Retrieve { token, id, rx } => match rx.try_recv() {
+            Ok(res) => {
+                push(conns, token, retrieval_result_json(id, &res).to_string());
+                None
+            }
+            Err(TryRecvError::Empty) => Some(InFlight::Retrieve { token, id, rx }),
+            Err(TryRecvError::Disconnected) => {
+                push(conns, token, error_line("worker dropped reply"));
+                None
+            }
+        },
+    }
+}
+
+/// Write as much of the connection's buffered output as the socket
+/// accepts right now.
+fn flush_conn(conn: &mut Conn) {
+    while !conn.wbuf.is_empty() && !conn.dead {
+        let (front, _) = conn.wbuf.as_slices();
+        match conn.stream.write(front) {
+            Ok(0) => {
+                conn.dead = true;
+            }
+            Ok(wrote) => {
+                conn.wbuf.drain(..wrote);
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(_) => conn.dead = true,
+        }
+    }
+}

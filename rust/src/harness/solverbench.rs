@@ -10,8 +10,15 @@
 //! replicas in parallel, SA gets the same updates sequentially); the
 //! portfolio has to win on search quality, not on bookkeeping.
 
-use std::time::Instant;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
+use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::server::{serve_tcp, Coordinator, SolverPoolConfig};
+use crate::coordinator::stream::serve_evented;
 use crate::harness::bench;
 use crate::solver::anneal::Schedule;
 use crate::solver::graph::Graph;
@@ -534,6 +541,161 @@ pub fn convergence_traces(
     rows
 }
 
+/// One connection-scale serving measurement: the same solve traffic
+/// driven by `clients` concurrent streaming connections against both
+/// front ends — the thread-per-connection baseline (`serve_tcp`, cold
+/// engine per request: arena disabled) and the evented readiness loop
+/// (`serve_evented`, warm engine arena) — on otherwise identical pools.
+#[derive(Debug, Clone)]
+pub struct ConnectionScalePoint {
+    /// Concurrent client connections driving each front end.
+    pub clients: usize,
+    /// Wall seconds each front end was driven.
+    pub measure_s: f64,
+    /// Solves completed inside the window, per front end.
+    pub baseline_solves: u64,
+    pub evented_solves: u64,
+    pub baseline_solves_per_sec: f64,
+    pub evented_solves_per_sec: f64,
+    /// evented rate / baseline rate — the serving-path speedup the
+    /// evented front end + warm arena buy at this connection count.
+    pub speedup: f64,
+    /// Warm-arena hit rate of the evented run (the baseline runs with
+    /// the arena disabled, so its rate is definitionally 0).
+    pub arena_hit_rate: f64,
+}
+
+/// Drive one front end with `clients` concurrent connections for
+/// `measure` wall time; returns (solves completed, elapsed seconds,
+/// arena hit rate).  Every client loops a small streaming max-cut
+/// request and waits for its result line before sending the next, so
+/// the count is *sustained served solves*, not submissions.
+fn drive_front_end(
+    evented: bool,
+    clients: usize,
+    seed: u64,
+    measure: Duration,
+) -> (u64, f64, f64) {
+    let solver = SolverPoolConfig {
+        // The baseline is the pre-arena serving shape: every request
+        // builds a cold engine.  The evented run keeps the default
+        // warm-arena capacity.
+        arena_capacity: if evented {
+            SolverPoolConfig::default().arena_capacity
+        } else {
+            0
+        },
+        ..Default::default()
+    };
+    let coord = Coordinator::start_with_solver(Vec::new(), BatchPolicy::default(), solver)
+        .expect("coordinator for connection-scale bench");
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind bench listener");
+    let addr = listener.local_addr().expect("bench listener addr");
+    let router = Arc::clone(&coord.router);
+    let serve = std::thread::spawn(move || {
+        if evented {
+            serve_evented(router, listener)
+        } else {
+            serve_tcp(router, listener)
+        }
+    });
+
+    // One small ring instance; identical request bytes hit both front
+    // ends ("stream" is parsed by both, honored only by the evented
+    // loop), so the rows differ in serving shape, never in work.
+    let n = 12usize;
+    let edges = (0..n)
+        .map(|i| format!("[{},{},1]", i, (i + 1) % n))
+        .collect::<Vec<_>>()
+        .join(",");
+    let solved = Arc::new(AtomicU64::new(0));
+    let t0 = Instant::now();
+    let deadline = t0 + measure;
+    let mut drivers = Vec::with_capacity(clients);
+    for c in 0..clients {
+        let solved = Arc::clone(&solved);
+        let edges = edges.clone();
+        drivers.push(std::thread::spawn(move || {
+            let stream = match TcpStream::connect(addr) {
+                Ok(s) => s,
+                Err(_) => return,
+            };
+            let mut writer = match stream.try_clone() {
+                Ok(s) => s,
+                Err(_) => return,
+            };
+            let mut reader = BufReader::new(stream);
+            let mut line = String::new();
+            let mut iter = 0u64;
+            while Instant::now() < deadline {
+                let req = format!(
+                    "{{\"type\":\"solve\",\"id\":{iter},\"n\":{n},\
+                     \"edges\":[{edges}],\"replicas\":2,\"max_periods\":8,\
+                     \"stream\":true,\"seed\":{}}}\n",
+                    seed.wrapping_add(1 + c as u64).wrapping_add(iter)
+                );
+                if writer.write_all(req.as_bytes()).is_err() {
+                    return;
+                }
+                // Progress lines arrive interleaved; only the result
+                // line (it alone carries "spins") completes the solve.
+                loop {
+                    line.clear();
+                    match reader.read_line(&mut line) {
+                        Ok(0) | Err(_) => return,
+                        Ok(_) => {}
+                    }
+                    if line.contains("\"spins\"") {
+                        solved.fetch_add(1, Ordering::Relaxed);
+                        break;
+                    }
+                    if line.contains("\"error\"") {
+                        break;
+                    }
+                }
+                iter += 1;
+            }
+        }));
+    }
+    for d in drivers {
+        let _ = d.join();
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let hit_rate = coord.snapshot().arena_hit_rate();
+    coord.shutdown().expect("bench pool shutdown");
+    serve
+        .join()
+        .expect("serve thread")
+        .expect("serve loop exits on shutdown");
+    (solved.load(Ordering::Relaxed), elapsed, hit_rate)
+}
+
+/// Measure sustained solves/sec at `clients` concurrent streaming
+/// connections on the thread-per-connection baseline vs the evented
+/// front end (`solve-bench --connections N`).
+pub fn connection_scale(clients: usize, seed: u64, measure: Duration) -> ConnectionScalePoint {
+    let clients = clients.max(1);
+    let (baseline_solves, baseline_s, _) = drive_front_end(false, clients, seed, measure);
+    let (evented_solves, evented_s, arena_hit_rate) =
+        drive_front_end(true, clients, seed, measure);
+    let baseline_solves_per_sec = baseline_solves as f64 / baseline_s.max(1e-9);
+    let evented_solves_per_sec = evented_solves as f64 / evented_s.max(1e-9);
+    ConnectionScalePoint {
+        clients,
+        measure_s: measure.as_secs_f64(),
+        baseline_solves,
+        evented_solves,
+        baseline_solves_per_sec,
+        evented_solves_per_sec,
+        speedup: if baseline_solves_per_sec > 0.0 {
+            evented_solves_per_sec / baseline_solves_per_sec
+        } else {
+            0.0
+        },
+        arena_hit_rate,
+    }
+}
+
 /// Everything one `record_throughput` run measured — the in-memory
 /// mirror of the `BENCH_solver.json` document it writes.
 #[derive(Debug, Clone, Default)]
@@ -543,6 +705,7 @@ pub struct SolverBench {
     pub rtl: Vec<RtlPoint>,
     pub latency: Vec<LatencyPoint>,
     pub convergence: Vec<ConvergencePoint>,
+    pub connection_scale: Vec<ConnectionScalePoint>,
 }
 
 /// Serialize a throughput sweep as the `BENCH_solver.json` document.
@@ -550,8 +713,10 @@ pub struct SolverBench {
 /// the same sizes live side by side in one trajectory file; packed
 /// rows (one per measured mix) sit alongside under `"packed"`,
 /// float-vs-bit-true hardware rows under `"rtl"`, latency percentiles
-/// per fabric under `"latency"`, and per-chunk best-energy
-/// trajectories under `"convergence"`.
+/// per fabric under `"latency"`, per-chunk best-energy trajectories
+/// under `"convergence"`, and connection-scale serving rows (evented
+/// front end vs thread-per-connection baseline) under
+/// `"connection_scale"`.
 pub fn bench_json(bench: &SolverBench, recorded_unix_s: u64) -> Json {
     let points = &bench.points;
     let packed = &bench.packed;
@@ -682,6 +847,33 @@ pub fn bench_json(bench: &SolverBench, recorded_unix_s: u64) -> Json {
                     .collect(),
             ),
         ),
+        (
+            "connection_scale",
+            Json::Arr(
+                bench
+                    .connection_scale
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("clients", Json::num(p.clients as f64)),
+                            ("measure_s", Json::num(p.measure_s)),
+                            ("baseline_solves", Json::num(p.baseline_solves as f64)),
+                            ("evented_solves", Json::num(p.evented_solves as f64)),
+                            (
+                                "baseline_solves_per_sec",
+                                Json::num(p.baseline_solves_per_sec),
+                            ),
+                            (
+                                "evented_solves_per_sec",
+                                Json::num(p.evented_solves_per_sec),
+                            ),
+                            ("speedup", Json::num(p.speedup)),
+                            ("arena_hit_rate", Json::num(p.arena_hit_rate)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
     ])
 }
 
@@ -692,7 +884,10 @@ pub fn bench_json(bench: &SolverBench, recorded_unix_s: u64) -> Json {
 /// packed row comparing a `packed_problems`-instance mix through a
 /// shared lane-block engine against the one-engine-per-request
 /// baseline, plus — when `rtl` — one float-vs-bit-true row per size
-/// (solution quality + emulated hardware time-to-solution).  Every run
+/// (solution quality + emulated hardware time-to-solution), plus —
+/// when `connections >= 1` — one connection-scale serving row
+/// (sustained solves/sec at `connections` concurrent streaming clients,
+/// evented front end vs thread-per-connection baseline).  Every run
 /// also records latency percentiles per engine fabric (repeated solves
 /// of the smallest size through a log-bucketed histogram) and one
 /// traced convergence trajectory per size.
@@ -706,10 +901,14 @@ pub fn record_throughput(
     shards: usize,
     packed_problems: usize,
     rtl: bool,
+    connections: usize,
 ) -> std::io::Result<SolverBench> {
     // Repeated solves per fabric for the percentile rows: enough to
     // make p90 land off the extremes, few enough to stay cheap.
     const LATENCY_SAMPLES: usize = 9;
+    // Wall time each front end is driven for the connection-scale row:
+    // long enough to amortize accept/warmup, short enough for CI.
+    const CONNECTION_MEASURE: Duration = Duration::from_millis(1200);
     let t0 = Instant::now();
     let mut points = throughput_sweep(sizes, replicas, periods, seed, 1);
     if shards >= 2 {
@@ -728,12 +927,18 @@ pub fn record_throughput(
     let latency =
         latency_percentiles(latency_n, replicas, periods, seed, LATENCY_SAMPLES, shards, rtl);
     let convergence = convergence_traces(sizes, replicas, periods, seed);
+    let connection_points = if connections >= 1 {
+        vec![connection_scale(connections, seed, CONNECTION_MEASURE)]
+    } else {
+        Vec::new()
+    };
     let bench = SolverBench {
         points,
         packed,
         rtl: rtl_points,
         latency,
         convergence,
+        connection_scale: connection_points,
     };
     let stamp = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
@@ -742,13 +947,15 @@ pub fn record_throughput(
     let doc = bench_json(&bench, stamp);
     std::fs::write(path, format!("{doc}\n"))?;
     eprintln!(
-        "wrote {} ({} rows + {} packed + {} rtl + {} latency + {} convergence in {:.1}s)",
+        "wrote {} ({} rows + {} packed + {} rtl + {} latency + {} convergence \
+         + {} connection-scale in {:.1}s)",
         path.display(),
         bench.points.len(),
         bench.packed.len(),
         bench.rtl.len(),
         bench.latency.len(),
         bench.convergence.len(),
+        bench.connection_scale.len(),
         t0.elapsed().as_secs_f64()
     );
     Ok(bench)
@@ -863,6 +1070,16 @@ mod tests {
                 monotone: true,
                 final_energy: -5.5,
             }],
+            connection_scale: vec![ConnectionScalePoint {
+                clients: 64,
+                measure_s: 1.2,
+                baseline_solves: 600,
+                evented_solves: 1500,
+                baseline_solves_per_sec: 500.0,
+                evented_solves_per_sec: 1250.0,
+                speedup: 2.5,
+                arena_hit_rate: 0.9,
+            }],
         };
         let doc = bench_json(&bench, 123);
         let parsed = Json::parse(&doc.to_string()).unwrap();
@@ -898,11 +1115,15 @@ mod tests {
         assert_eq!(crow.get("chunks").and_then(Json::as_usize), Some(3));
         assert_eq!(crow.get("monotone").and_then(Json::as_bool), Some(true));
         assert_eq!(crow.get("best_energy").and_then(Json::as_arr).map(|a| a.len()), Some(3));
+        let srow = &parsed.get("connection_scale").and_then(Json::as_arr).unwrap()[0];
+        assert_eq!(srow.get("clients").and_then(Json::as_usize), Some(64));
+        assert_eq!(srow.get("speedup").and_then(Json::as_f64), Some(2.5));
+        assert_eq!(srow.get("arena_hit_rate").and_then(Json::as_f64), Some(0.9));
         assert!(
             doc.to_string().contains("\"engine\":\"rtl\""),
             "the CI gate greps for this literal"
         );
-        for key in ["\"p50_ms\"", "\"convergence\""] {
+        for key in ["\"p50_ms\"", "\"convergence\"", "\"connection_scale\"", "\"speedup\""] {
             assert!(doc.to_string().contains(key), "the CI gate greps for {key}");
         }
     }
@@ -960,6 +1181,23 @@ mod tests {
                 c.final_energy
             );
         }
+    }
+
+    #[test]
+    fn connection_scale_rates_both_front_ends() {
+        // Tiny scale keeps the test fast; `solve-bench --connections`
+        // runs the real 64-client row.  Both front ends must serve real
+        // solves inside the window and the evented run must exercise
+        // the warm arena (rate in [0, 1]; > 0 once any geometry
+        // repeats, which two looping clients guarantee).
+        let p = connection_scale(2, 11, Duration::from_millis(300));
+        assert_eq!(p.clients, 2);
+        assert!(p.baseline_solves > 0, "baseline served no solves");
+        assert!(p.evented_solves > 0, "evented front end served no solves");
+        assert!(p.baseline_solves_per_sec > 0.0);
+        assert!(p.evented_solves_per_sec > 0.0);
+        assert!(p.speedup > 0.0);
+        assert!((0.0..=1.0).contains(&p.arena_hit_rate));
     }
 
     #[test]

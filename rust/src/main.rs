@@ -13,6 +13,7 @@ use anyhow::{anyhow, Result};
 
 use onn_scale::coordinator::batcher::BatchPolicy;
 use onn_scale::coordinator::server::{serve_tcp, Coordinator, EngineKind, PoolSpec};
+use onn_scale::coordinator::stream::serve_evented;
 use onn_scale::harness::datasets::benchmark_by_name;
 use onn_scale::harness::report::{self, RetrievalReport};
 use onn_scale::harness::retrieval::{run_cell, CellStats, Engine, CORRUPTION_LEVELS};
@@ -51,16 +52,20 @@ Solver (generic Ising/QUBO subsystem, see DESIGN_SOLVER.md):
                           seq/timestamps)
   solve-bench [--sizes 16,32,64,128] [--replicas 32] [--periods 128]
         [--instances 5] [--shards K] [--packed [N]] [--rtl]
-        [--out BENCH_solver.json]
+        [--connections [N]] [--out BENCH_solver.json]
                           quality vs SA + native (and, with --shards,
                           sharded) throughput rows; --packed adds an
                           N-instance (default 6) small-mix row comparing
                           the shared lane-block engine against
                           one-engine-per-request serving; --rtl adds
                           float-native vs bit-true rows (quality +
-                          emulated time-to-solution); every run also
-                          records latency percentiles and a convergence
-                          trace per size
+                          emulated time-to-solution); --connections adds
+                          a connection-scale serving row (sustained
+                          solves/sec at N (default 64) concurrent
+                          streaming clients, evented front end vs
+                          thread-per-connection baseline); every run
+                          also records latency percentiles and a
+                          convergence trace per size
   solve-report [--path BENCH_solver.json]
                           render the recorded solver trajectory next to
                           the paper tables
@@ -71,7 +76,11 @@ Ablations (DESIGN.md design choices):
   shard-demo [--n 42] [--shards 4]      multi-device sharding bit-exactness demo
 
 Service / validation:
-  serve [--addr 127.0.0.1:7020] --dataset 7x6 [--engine pjrt]
+  serve [--addr 127.0.0.1:7020] --dataset 7x6 [--engine pjrt] [--threads]
+                          evented streaming front end by default
+                          (mid-anneal progress lines + disconnect
+                          cancellation, DESIGN_SOLVER.md §10);
+                          --threads keeps thread-per-connection
   crosscheck [--dataset 3x3] [--trials 16]   pjrt vs native bit-exactness
   info                                        artifact + platform info
 ";
@@ -466,6 +475,13 @@ fn cmd_solve_bench(args: &mut Args) -> Result<()> {
         0
     };
     let rtl = args.has("rtl");
+    // `--connections` alone records the 64-client row of the issue's
+    // acceptance gate; `--connections N` sizes it explicitly.
+    let connections = if args.has("connections") {
+        args.get_usize("connections", 64)?.max(1)
+    } else {
+        0
+    };
     let out_path = args.get_str("out", "BENCH_solver.json");
     let seed = args.get_u64("seed", 2025)?;
     args.finish().map_err(|e| anyhow!(e))?;
@@ -487,6 +503,7 @@ fn cmd_solve_bench(args: &mut Args) -> Result<()> {
         shards,
         packed_problems,
         rtl,
+        connections,
     )?;
     println!("solver throughput (native vs sharded replica-periods/sec):");
     for p in &bench.points {
@@ -541,6 +558,22 @@ fn cmd_solve_bench(args: &mut Args) -> Result<()> {
             p.summary.p99_ms
         );
     }
+    if !bench.connection_scale.is_empty() {
+        println!("connection scale (sustained solves/sec, streaming clients):");
+        for p in &bench.connection_scale {
+            println!(
+                "  {:>4} clients  baseline {:>8.1}/s ({} solves)  evented \
+                 {:>8.1}/s ({} solves)  speedup {:.2}x  arena hit rate {:.2}",
+                p.clients,
+                p.baseline_solves_per_sec,
+                p.baseline_solves,
+                p.evented_solves_per_sec,
+                p.evented_solves,
+                p.speedup,
+                p.arena_hit_rate
+            );
+        }
+    }
     println!("convergence traces (running best energy per anneal chunk):");
     for c in &bench.convergence {
         let first = c.best_energy.first().copied().unwrap_or(0.0);
@@ -578,6 +611,10 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
     let addr = args.get_str("addr", "127.0.0.1:7020");
     let dataset = args.get_str("dataset", "7x6");
     let engine = args.get_str("engine", "native");
+    // The evented readiness loop is the default front end (streaming
+    // progress + disconnect cancellation, DESIGN_SOLVER.md §10);
+    // `--threads` keeps the thread-per-connection baseline.
+    let threads = args.has("threads");
     args.finish().map_err(|e| anyhow!(e))?;
 
     let set = benchmark_by_name(&dataset).ok_or_else(|| anyhow!("unknown dataset"))?;
@@ -595,11 +632,20 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
     )?;
     let listener = std::net::TcpListener::bind(&addr)?;
     println!(
-        "serving dataset {} (n={}) on {} via {} engine; JSON-lines: \
-         {{\"n\":{},\"phases\":[...]}}",
-        dataset, set.cfg.n, addr, engine, set.cfg.n
+        "serving dataset {} (n={}) on {} via {} engine ({} front end); \
+         JSON-lines: {{\"n\":{},\"phases\":[...]}}",
+        dataset,
+        set.cfg.n,
+        addr,
+        engine,
+        if threads { "thread-per-connection" } else { "evented" },
+        set.cfg.n
     );
-    serve_tcp(Arc::clone(&coord.router), listener)
+    if threads {
+        serve_tcp(Arc::clone(&coord.router), listener)
+    } else {
+        serve_evented(Arc::clone(&coord.router), listener)
+    }
 }
 
 /// Cross-validate the PJRT artifact against the bit-exact native engine.

@@ -10,6 +10,8 @@
 //! retrieval coordinator drives, so one engine fabric serves both
 //! traffic classes.
 
+use std::sync::atomic::{AtomicBool, Ordering};
+
 use anyhow::{anyhow, Result};
 
 use crate::onn::config::NetworkConfig;
@@ -208,6 +210,48 @@ fn trace_event(trace: Option<&TraceSink>, event: TraceEvent) {
     }
 }
 
+/// Error message of a cancelled solve.  The vendored `anyhow` stand-in
+/// has no typed downcast, so cancellation is signalled by this sentinel
+/// message and detected with [`is_cancelled`] — callers must not wrap
+/// the error in further context before checking.
+pub const CANCELLED_MSG: &str = "solve cancelled: client went away";
+
+/// The error a cancelled solve returns.
+pub fn cancelled_err() -> anyhow::Error {
+    anyhow!(CANCELLED_MSG)
+}
+
+/// Whether an error is the cancellation sentinel (see [`CANCELLED_MSG`]).
+pub fn is_cancelled(e: &anyhow::Error) -> bool {
+    e.to_string() == CANCELLED_MSG
+}
+
+/// Optional per-solve lifecycle hooks threaded from the serving front
+/// end into the chunk loop: a cancel flag checked at every chunk
+/// boundary (a disconnected client's solve stops mid-anneal instead of
+/// burning its full period budget) and a progress callback fired once
+/// per chunk with the running best energy and periods driven so far
+/// (the `{"type":"progress"}` stream of the evented server).  Both
+/// hooks only *observe* values the solve computed anyway — a hooked
+/// run that is never cancelled is bit-identical to an unhooked one.
+#[derive(Clone, Copy, Default)]
+pub struct SolveHooks<'a> {
+    pub cancel: Option<&'a AtomicBool>,
+    pub progress: Option<&'a dyn Fn(f64, usize)>,
+}
+
+impl SolveHooks<'_> {
+    pub fn cancelled(&self) -> bool {
+        self.cancel.is_some_and(|c| c.load(Ordering::Relaxed))
+    }
+
+    fn emit_progress(&self, best_energy: f64, periods: usize) {
+        if let Some(f) = self.progress {
+            f(best_energy, periods);
+        }
+    }
+}
+
 /// Run the portfolio on an already-constructed engine.  The engine's
 /// network size must equal [`IsingProblem::embed_dim`]; weights are
 /// installed here.
@@ -232,6 +276,22 @@ pub fn solve_portfolio_traced(
     params: &PortfolioParams,
     trace: Option<&TraceSink>,
 ) -> Result<SolveOutcome> {
+    solve_portfolio_hooked(engine, problem, params, trace, SolveHooks::default())
+}
+
+/// [`solve_portfolio_traced`] with serving-lifecycle hooks
+/// ([`SolveHooks`]): the cancel flag is checked before every chunk
+/// (returning the [`CANCELLED_MSG`] sentinel error when set — the
+/// engine is left healthy, weights installed and reusable), and the
+/// progress callback fires once per chunk.  With default hooks this is
+/// exactly [`solve_portfolio_traced`].
+pub fn solve_portfolio_hooked(
+    engine: &mut dyn ChunkEngine,
+    problem: &IsingProblem,
+    params: &PortfolioParams,
+    trace: Option<&TraceSink>,
+    hooks: SolveHooks<'_>,
+) -> Result<SolveOutcome> {
     problem.validate().map_err(|e| anyhow!("bad problem: {e}"))?;
     if params.replicas == 0 {
         return Err(anyhow!("replicas must be positive"));
@@ -254,6 +314,10 @@ pub fn solve_portfolio_traced(
     }
     let (wq, quantization_error) = problem.embed_with_error(&cfg);
     engine.set_weights(&wq.to_f32())?;
+    // Warm engines carry sync rounds from earlier solves (set_weights
+    // reprograms without resetting the counter), so report this solve's
+    // delta — on a cold engine the baseline is 0 and nothing changes.
+    let sync0 = engine.sync_rounds();
     let noise_applied = engine.supports_noise();
     if let Some(sink) = trace {
         engine.set_trace_sink(Some(sink.clone()));
@@ -338,6 +402,12 @@ pub fn solve_portfolio_traced(
         let mut wave_exit = "completed";
         let mut wave_chunks = 0usize;
         for k in 0..chunks_per_wave {
+            if hooks.cancelled() {
+                if trace.is_some() {
+                    engine.set_trace_sink(None);
+                }
+                return Err(cancelled_err());
+            }
             // On engines without a noise hook no kicks ever happen, so
             // the dynamics are deterministic from chunk 0 and the
             // settle flags / early exits stay live for the whole run.
@@ -365,6 +435,7 @@ pub fn solve_portfolio_traced(
                     improved = true;
                 }
             }
+            hooks.emit_progress(best_energy, chunks_run * chunk);
             if let Some(sink) = trace {
                 let settled_lanes = (0..real).filter(|&slot| settled[slot] >= 0).count();
                 sink.borrow_mut().record(TraceEvent::Chunk {
@@ -453,7 +524,7 @@ pub fn solve_portfolio_traced(
         early_exit,
         noise_applied,
         engine: engine.kind(),
-        sync_rounds: engine.sync_rounds(),
+        sync_rounds: engine.sync_rounds() - sync0,
         quantization_error,
         hardware: engine.hardware_cost(),
     })
@@ -800,6 +871,26 @@ pub fn solve_packed(
     engine: &mut dyn ChunkEngine,
     entries: &[(IsingProblem, PortfolioParams)],
 ) -> Result<Vec<SolveOutcome>> {
+    Ok(solve_packed_hooked(engine, entries, &[])?
+        .into_iter()
+        .map(|o| o.expect("no hooks were supplied, so no entry can be cancelled"))
+        .collect())
+}
+
+/// [`solve_packed`] with per-entry serving-lifecycle hooks
+/// ([`SolveHooks`]; `hooks` is indexed by entry and may be shorter —
+/// missing entries get default no-op hooks).  A cancelled entry's lane
+/// block is cleared and its lanes are released for backfill (queued
+/// entries are dropped before placement), and its slot in the returned
+/// vector is `None`; surviving entries stay bit-exact with their solo
+/// runs — cancellation only frees lanes, it never perturbs a
+/// neighbor's kick stream or lane assignment order.
+pub fn solve_packed_hooked(
+    engine: &mut dyn ChunkEngine,
+    entries: &[(IsingProblem, PortfolioParams)],
+    hooks: &[SolveHooks<'_>],
+) -> Result<Vec<Option<SolveOutcome>>> {
+    let hook = |entry: usize| hooks.get(entry).copied().unwrap_or_default();
     if !engine.supports_lane_blocks() {
         return Err(anyhow!("{} engine cannot pack lane blocks", engine.kind()));
     }
@@ -858,10 +949,26 @@ pub fn solve_packed(
     let mut gp = 0usize; // engine-global chunk counter (settle-flag base)
 
     loop {
+        // Cancel sweep first: a disconnected client's block is cleared
+        // and its lanes free up for this very iteration's backfill.
+        let mut keep = Vec::with_capacity(active.len());
+        for lane in active.drain(..) {
+            if hook(lane.entry).cancelled() {
+                engine.clear_lane_block(lane.lane0)?;
+                alloc.release(lane.lane0, lane.lanes);
+            } else {
+                keep.push(lane);
+            }
+        }
+        active = keep;
         // FIFO placement/backfill: strictly in submission order, so the
         // lane assignment is deterministic (not that it matters for the
         // answers — lanes are bit-independent).
         while let Some(&next) = queue.front() {
+            if hook(next).cancelled() {
+                queue.pop_front();
+                continue;
+            }
             let lanes = entries[next].1.replicas;
             let Some(lane0) = alloc.alloc(lanes) else { break };
             queue.pop_front();
@@ -923,6 +1030,7 @@ pub fn solve_packed(
             if lane.exit.is_none() && lane.chunk_idx >= lane.chunks_per_wave {
                 lane.exit = Some(false);
             }
+            hook(lane.entry).emit_progress(lane.best_energy, lane.chunks_run * chunk);
         }
         // Retire finished blocks; their lanes free up and are backfilled
         // from the queue at the top of the next iteration.
@@ -940,10 +1048,9 @@ pub fn solve_packed(
         }
         active = still;
     }
-    Ok(outcomes
-        .into_iter()
-        .map(|o| o.expect("every entry retired"))
-        .collect())
+    // Cancelled entries (swept from the queue or from live lanes) stay
+    // `None`; every surviving entry carries its retired outcome.
+    Ok(outcomes)
 }
 
 /// Build one bucket-sized native lane-block engine and pack `entries`

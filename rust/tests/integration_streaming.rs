@@ -1,0 +1,353 @@
+//! Serving-path lifecycle integration: the evented streaming front end
+//! (`serve_evented`), the warm engine arena's bit-identity contract,
+//! and the `serve_tcp` shutdown regression.
+//!
+//! These are the proof obligations of DESIGN_SOLVER.md §10: a client
+//! disconnect cancels its in-flight anneal and frees the worker, an
+//! arena-served (warm, reprogrammed) solve answers byte-for-byte like a
+//! cold-engine solve at equal seed on every fabric, a malformed-line
+//! flood on one connection never stalls another, and the accept loop
+//! exits on shutdown without needing one last client to connect.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use onn_scale::coordinator::batcher::BatchPolicy;
+use onn_scale::coordinator::server::{handle_line, serve_tcp, Coordinator, SolverPoolConfig};
+use onn_scale::coordinator::stream::serve_evented;
+use onn_scale::solver::graph::Graph;
+use onn_scale::util::json::Json;
+use onn_scale::util::rng::Rng;
+
+/// JSON-lines solve request for a graph with J = -1 couplings (max-cut
+/// sign convention), optionally streaming progress lines.
+fn solve_line(
+    id: u64,
+    g: &Graph,
+    replicas: usize,
+    max_periods: usize,
+    seed: u64,
+    stream: bool,
+) -> String {
+    let edges = Json::Arr(
+        g.edges
+            .iter()
+            .map(|&(i, j, w)| Json::arr_i32(&[i as i32, j as i32, -w]))
+            .collect(),
+    );
+    let mut pairs = vec![
+        ("type", Json::str("solve")),
+        ("id", Json::num(id as f64)),
+        ("n", Json::num(g.n as f64)),
+        ("edges", edges),
+        ("replicas", Json::num(replicas as f64)),
+        ("max_periods", Json::num(max_periods as f64)),
+        ("seed", Json::num(seed as f64)),
+    ];
+    if stream {
+        pairs.push(("stream", Json::Bool(true)));
+    }
+    Json::obj(pairs).to_string()
+}
+
+/// Read lines until the solve *result* for `id` arrives (result lines
+/// uniquely carry `"spins"`), returning it plus how many progress lines
+/// for that id preceded it.  Progress lines for *other* ids are skipped
+/// uncounted: the worker's last progress event can legally race behind
+/// its own result through the two reply channels, so a previous solve's
+/// tail may still be in flight.  Panics on an error line.
+fn read_result(r: &mut BufReader<TcpStream>, id: usize) -> (Json, usize) {
+    let mut progress = 0;
+    loop {
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert!(!line.is_empty(), "connection closed before the result");
+        let v = Json::parse(line.trim()).unwrap();
+        assert!(v.get("error").is_none(), "{line}");
+        if v.get("spins").is_some() {
+            assert_eq!(v.get("id").and_then(Json::as_usize), Some(id), "{line}");
+            return (v, progress);
+        }
+        assert_eq!(v.get("type").and_then(Json::as_str), Some("progress"), "{line}");
+        if v.get("id").and_then(Json::as_usize) == Some(id) {
+            progress += 1;
+        }
+    }
+}
+
+#[test]
+fn serve_tcp_exits_on_shutdown_without_a_final_client() {
+    // The regression this guards: the old accept loop blocked in
+    // accept(2) after shutdown, so the serve thread only exited once
+    // one more client happened to connect.  The fixed loop polls the
+    // router's shutdown latch and must return on its own.
+    let coord = Coordinator::start(vec![], BatchPolicy::default()).unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let router = Arc::clone(&coord.router);
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        tx.send(serve_tcp(router, listener)).unwrap();
+    });
+
+    // Serve one real request first so the loop is demonstrably live.
+    let g = Graph::complete_bipartite(3, 3);
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+    w.write_all(solve_line(1, &g, 8, 64, 9, false).as_bytes())
+        .unwrap();
+    w.write_all(b"\n").unwrap();
+    let (_res, _) = read_result(&mut r, 1);
+
+    coord.shutdown().unwrap();
+    // No further client connects; the serve loop must still return.
+    let exited = rx
+        .recv_timeout(Duration::from_secs(5))
+        .expect("serve_tcp never exited after shutdown");
+    exited.expect("serve_tcp returned an error on clean shutdown");
+}
+
+#[test]
+fn evented_disconnect_mid_solve_cancels_and_pool_stays_live() {
+    let coord = Coordinator::start_with_solver(
+        vec![],
+        BatchPolicy::default(),
+        SolverPoolConfig {
+            workers: 1,
+            pack_max_oscillators: 0,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let router = Arc::clone(&coord.router);
+    let serve = std::thread::spawn(move || serve_evented(router, listener));
+
+    // A guaranteed-long anneal: a constant schedule holds its noise
+    // level through the whole noisy prefix, and the portfolio's
+    // plateau / all-settled early exits only fire at noise level 0 —
+    // so this solve cannot finish early and is still running when the
+    // client vanishes.
+    let g = Graph::random(48, 0.3, &mut Rng::new(91));
+    let mut line = solve_line(77, &g, 32, 32_768, 5, true);
+    line = format!(
+        "{},\"schedule\":\"constant\",\"noise\":0.9}}",
+        &line[..line.len() - 1]
+    );
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream.try_clone().unwrap());
+    w.write_all(line.as_bytes()).unwrap();
+    w.write_all(b"\n").unwrap();
+
+    // The first progress line proves the anneal is running mid-flight.
+    let mut first = String::new();
+    r.read_line(&mut first).unwrap();
+    let v = Json::parse(first.trim()).unwrap();
+    assert_eq!(v.get("type").and_then(Json::as_str), Some("progress"), "{first}");
+    assert_eq!(v.get("id").and_then(Json::as_usize), Some(77));
+    assert!(v.get("best_energy").is_some(), "{first}");
+
+    // Disconnect.  The reap sweep must set the job's cancel flag and
+    // the worker must abandon the anneal at the next chunk boundary.
+    drop(r);
+    drop(w);
+    drop(stream);
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while coord.snapshot().solves_cancelled == 0 {
+        assert!(Instant::now() < deadline, "disconnect never cancelled the in-flight solve");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // The single worker is free again: a fresh client's solve completes.
+    let g2 = Graph::complete_bipartite(3, 3);
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+    w.write_all(solve_line(78, &g2, 8, 64, 9, false).as_bytes())
+        .unwrap();
+    w.write_all(b"\n").unwrap();
+    let (res, _) = read_result(&mut r, 78);
+    let spins: Vec<i8> = res
+        .get("spins")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .map(|x| x.as_i64().unwrap() as i8)
+        .collect();
+    assert_eq!(g2.cut_value(&spins), 9);
+
+    let snap = coord.snapshot();
+    assert_eq!(snap.solves_cancelled, 1);
+    assert_eq!(snap.solves_completed, 1);
+    assert_eq!(snap.solves_failed, 0, "a cancel is not a failure");
+
+    coord.shutdown().unwrap();
+    serve
+        .join()
+        .expect("serve thread panicked")
+        .expect("serve_evented returned an error on clean shutdown");
+}
+
+#[test]
+fn streaming_solve_emits_progress_then_the_result() {
+    // A streaming solve over the evented front end interleaves
+    // monotone progress lines before the result; a non-streaming solve
+    // on the same connection gets only its result.
+    let coord = Coordinator::start(vec![], BatchPolicy::default()).unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let router = Arc::clone(&coord.router);
+    let serve = std::thread::spawn(move || serve_evented(router, listener));
+
+    let g = Graph::random(24, 0.25, &mut Rng::new(17));
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+
+    w.write_all(solve_line(5, &g, 8, 256, 3, true).as_bytes())
+        .unwrap();
+    w.write_all(b"\n").unwrap();
+    let (_res, progress) = read_result(&mut r, 5);
+    assert!(
+        progress >= 1,
+        "a streaming 256-period solve must emit progress lines"
+    );
+
+    w.write_all(solve_line(6, &g, 8, 256, 3, false).as_bytes())
+        .unwrap();
+    w.write_all(b"\n").unwrap();
+    let (_res, progress) = read_result(&mut r, 6);
+    assert_eq!(progress, 0, "stream defaults off: no progress lines");
+
+    coord.shutdown().unwrap();
+    serve.join().unwrap().unwrap();
+}
+
+/// Drive one line through a fresh single-worker pool `hits + 1` times
+/// and return every response: request 0 builds cold (arena miss), each
+/// repeat reprograms the parked engine (arena hit).
+fn serve_repeatedly(cfg: SolverPoolConfig, line: &str, repeats: usize) -> Vec<String> {
+    let coord = Coordinator::start_with_solver(vec![], BatchPolicy::default(), cfg).unwrap();
+    let responses: Vec<String> = (0..repeats)
+        .map(|_| handle_line(&coord.router, line))
+        .collect();
+    let snap = coord.snapshot();
+    if cfg.arena_capacity > 0 {
+        assert_eq!(snap.arena_misses, 1, "only the first build is cold");
+        assert_eq!(snap.arena_hits as usize, repeats - 1);
+    } else {
+        assert_eq!(snap.arena_hits, 0, "capacity 0 must never warm");
+        assert_eq!(snap.arena_evictions as usize, repeats);
+    }
+    coord.shutdown().unwrap();
+    responses
+}
+
+#[test]
+fn arena_hit_solve_is_byte_identical_to_cold_on_every_fabric() {
+    // The arena's load-bearing contract (DESIGN_SOLVER.md §10): a solve
+    // served by a reprogrammed warm engine answers byte-for-byte like a
+    // cold build at equal seed — on the native, sharded, and rtl
+    // fabrics.  Packing is disabled so every request takes the solo
+    // checkout path; one worker so both requests share one arena.
+    let base = SolverPoolConfig {
+        workers: 1,
+        pack_max_oscillators: 0,
+        ..Default::default()
+    };
+    let cases: [(&str, SolverPoolConfig, Graph, usize, usize); 3] = [
+        ("native", base, Graph::random(18, 0.3, &mut Rng::new(55)), 6, 64),
+        (
+            "sharded",
+            SolverPoolConfig {
+                shard_threshold: 12,
+                max_shards: 3,
+                ..base
+            },
+            Graph::random(18, 0.3, &mut Rng::new(55)),
+            6,
+            64,
+        ),
+        (
+            "rtl",
+            SolverPoolConfig { rtl: true, ..base },
+            Graph::random(10, 0.4, &mut Rng::new(77)),
+            4,
+            32,
+        ),
+    ];
+    for (engine, cfg, g, replicas, periods) in cases {
+        let line = solve_line(900, &g, replicas, periods, 12, false);
+        let warm = serve_repeatedly(cfg, &line, 3);
+        let cold = serve_repeatedly(
+            SolverPoolConfig {
+                arena_capacity: 0,
+                ..cfg
+            },
+            &line,
+            1,
+        );
+        let v = Json::parse(&warm[0]).unwrap();
+        assert!(v.get("error").is_none(), "{engine}: {}", warm[0]);
+        assert_eq!(
+            v.get("engine").and_then(Json::as_str),
+            Some(engine),
+            "{engine}: wrong fabric served the request"
+        );
+        assert_eq!(warm[0], warm[1], "{engine}: first arena hit diverged from the cold build");
+        assert_eq!(warm[1], warm[2], "{engine}: repeated arena hits diverged");
+        assert_eq!(warm[0], cold[0], "{engine}: warm pool diverged from the no-arena pool");
+    }
+}
+
+#[test]
+fn malformed_flood_on_one_connection_does_not_stall_others() {
+    let coord = Coordinator::start(vec![], BatchPolicy::default()).unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let router = Arc::clone(&coord.router);
+    let serve = std::thread::spawn(move || serve_evented(router, listener));
+
+    let flood = TcpStream::connect(addr).unwrap();
+    let mut fw = flood.try_clone().unwrap();
+    let good = TcpStream::connect(addr).unwrap();
+    let mut gw = good.try_clone().unwrap();
+    let mut gr = BufReader::new(good);
+
+    // One connection spews garbage while the other asks for a real
+    // solve: per-connection buffering means the good client's line is
+    // dispatched and answered regardless.
+    for _ in 0..200 {
+        fw.write_all(b"this is not json\n").unwrap();
+    }
+    let g = Graph::complete_bipartite(3, 3);
+    gw.write_all(solve_line(42, &g, 8, 64, 9, false).as_bytes())
+        .unwrap();
+    gw.write_all(b"\n").unwrap();
+    let (res, _) = read_result(&mut gr, 42);
+    let spins: Vec<i8> = res
+        .get("spins")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .map(|x| x.as_i64().unwrap() as i8)
+        .collect();
+    assert_eq!(g.cut_value(&spins), 9);
+
+    // The flooder is answered too — one error line per garbage line,
+    // not silence and not a dropped connection.
+    let mut fr = BufReader::new(flood);
+    for i in 0..200 {
+        let mut e = String::new();
+        fr.read_line(&mut e).unwrap();
+        assert!(e.contains("\"error\""), "flood line {i}: {e}");
+    }
+
+    coord.shutdown().unwrap();
+    serve.join().unwrap().unwrap();
+}

@@ -23,9 +23,9 @@ cargo test -q
 echo "==> cargo check --features pjrt (stub xla)"
 cargo check --features pjrt
 
-echo "==> solve-bench --shards/--packed/--rtl gate (BENCH_solver.json must carry sharded + packed + rtl rows)"
+echo "==> solve-bench --shards/--packed/--rtl/--connections gate (BENCH_solver.json must carry sharded + packed + rtl + connection-scale rows)"
 ./target/release/onn-scale solve-bench --sizes 12,16 --replicas 4 --periods 32 \
-  --instances 1 --shards 2 --packed 4 --rtl --out BENCH_solver.json
+  --instances 1 --shards 2 --packed 4 --rtl --connections 64 --out BENCH_solver.json
 grep -q '"engine":"native"' BENCH_solver.json \
   || { echo "BENCH_solver.json is missing the native rows"; exit 1; }
 grep -q '"engine":"sharded"' BENCH_solver.json \
@@ -40,6 +40,15 @@ grep -q '"p50_ms"' BENCH_solver.json \
   || { echo "BENCH_solver.json is missing the latency percentile rows"; exit 1; }
 grep -q '"convergence"' BENCH_solver.json \
   || { echo "BENCH_solver.json is missing the convergence trace section"; exit 1; }
+# The connection-scale row (evented front end vs thread-per-connection
+# baseline at 64 concurrent streaming clients) must be present and
+# carry the speedup + arena hit-rate fields the issue gates on.
+grep -q '"connection_scale"' BENCH_solver.json \
+  || { echo "BENCH_solver.json is missing the connection-scale section"; exit 1; }
+grep -q '"clients":64' BENCH_solver.json \
+  || { echo "BENCH_solver.json is missing the 64-client connection-scale row"; exit 1; }
+grep -q '"speedup"' BENCH_solver.json \
+  || { echo "BENCH_solver.json connection-scale row is missing the speedup field"; exit 1; }
 
 echo "==> solve-report renders the recorded trajectory"
 ./target/release/onn-scale solve-report --path BENCH_solver.json >/dev/null
