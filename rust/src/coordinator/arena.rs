@@ -33,13 +33,22 @@ use crate::solver::portfolio::EngineSelect;
 
 /// Geometry key identifying which standing engine can serve a solve:
 /// the fabric kind with everything that is baked in at construction
-/// time (oscillator count, batch lanes, chunk length, shard count).
-/// Anything *not* in the key — weights, noise, replica state — is
-/// reprogrammed per request.
+/// time (oscillator count, batch lanes, chunk length, shard count) —
+/// plus which *weight fabric* (dense matrix vs CSR) the solve will
+/// install.  Anything *not* in the key — weights, noise, replica
+/// state — is reprogrammed per request.
+///
+/// `sparse` is part of the key even though both fabrics run on the
+/// same engine type: a dense solve reprograms via `set_weights` and a
+/// sparse one via `set_weights_sparse`, and keeping the populations
+/// separate means a warm engine is always reprogrammed through the
+/// same install path a cold build would use — the arena's
+/// bit-identity contract never has to reason about cross-fabric
+/// reinstalls.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ArenaKey {
-    Native { n: usize, batch: usize, chunk: usize },
-    Sharded { n: usize, shards: usize, batch: usize, chunk: usize },
+    Native { n: usize, batch: usize, chunk: usize, sparse: bool },
+    Sharded { n: usize, shards: usize, batch: usize, chunk: usize, sparse: bool },
     Rtl { n: usize, batch: usize, chunk: usize },
 }
 
@@ -47,15 +56,24 @@ impl ArenaKey {
     /// The key a solo solve resolves to: mirrors
     /// [`crate::solver::portfolio::build_engine`]'s fabric choice so a
     /// checked-out engine is exactly what a cold build would construct.
-    pub fn for_solve(m: usize, batch: usize, chunk: usize, select: EngineSelect) -> Self {
+    /// `sparse` is `solver::portfolio::wants_sparse(problem)` — the rtl
+    /// engine has no sparse kernel, so its key ignores the flag (the
+    /// portfolio falls back to the dense install there).
+    pub fn for_solve(
+        m: usize,
+        batch: usize,
+        chunk: usize,
+        select: EngineSelect,
+        sparse: bool,
+    ) -> Self {
         if select == EngineSelect::Rtl {
             return ArenaKey::Rtl { n: m, batch, chunk };
         }
         let shards = select.shards_for(m);
         if shards <= 1 {
-            ArenaKey::Native { n: m, batch, chunk }
+            ArenaKey::Native { n: m, batch, chunk, sparse }
         } else {
-            ArenaKey::Sharded { n: m, shards, batch, chunk }
+            ArenaKey::Sharded { n: m, shards, batch, chunk, sparse }
         }
     }
 }
@@ -157,8 +175,8 @@ mod tests {
 
     fn build(key: ArenaKey) -> Result<Box<dyn ChunkEngine>> {
         let (m, batch, chunk, select) = match key {
-            ArenaKey::Native { n, batch, chunk } => (n, batch, chunk, EngineSelect::Native),
-            ArenaKey::Sharded { n, shards, batch, chunk } => {
+            ArenaKey::Native { n, batch, chunk, .. } => (n, batch, chunk, EngineSelect::Native),
+            ArenaKey::Sharded { n, shards, batch, chunk, .. } => {
                 (n, batch, chunk, EngineSelect::Sharded { shards })
             }
             ArenaKey::Rtl { n, batch, chunk } => (n, batch, chunk, EngineSelect::Rtl),
@@ -170,31 +188,60 @@ mod tests {
     fn key_resolution_mirrors_build_engine() {
         let auto = EngineSelect::Auto { threshold: 100, max_shards: 4 };
         assert_eq!(
-            ArenaKey::for_solve(24, 8, 8, auto),
-            ArenaKey::Native { n: 24, batch: 8, chunk: 8 }
+            ArenaKey::for_solve(24, 8, 8, auto, false),
+            ArenaKey::Native { n: 24, batch: 8, chunk: 8, sparse: false }
         );
         assert_eq!(
-            ArenaKey::for_solve(250, 8, 8, auto),
-            ArenaKey::Sharded { n: 250, shards: 3, batch: 8, chunk: 8 }
+            ArenaKey::for_solve(250, 8, 8, auto, true),
+            ArenaKey::Sharded { n: 250, shards: 3, batch: 8, chunk: 8, sparse: true }
         );
         assert_eq!(
-            ArenaKey::for_solve(24, 8, 8, EngineSelect::Rtl),
+            ArenaKey::for_solve(24, 8, 8, EngineSelect::Rtl, false),
             ArenaKey::Rtl { n: 24, batch: 8, chunk: 8 }
         );
         assert_eq!(
-            ArenaKey::for_solve(24, 8, 8, EngineSelect::Sharded { shards: 1 }),
-            ArenaKey::Native { n: 24, batch: 8, chunk: 8 },
+            ArenaKey::for_solve(24, 8, 8, EngineSelect::Rtl, true),
+            ArenaKey::Rtl { n: 24, batch: 8, chunk: 8 },
+            "the rtl fabric has no sparse kernel; its key ignores the flag"
+        );
+        assert_eq!(
+            ArenaKey::for_solve(24, 8, 8, EngineSelect::Sharded { shards: 1 }, false),
+            ArenaKey::Native { n: 24, batch: 8, chunk: 8, sparse: false },
             "a single-shard selection collapses to the native fabric"
         );
+    }
+
+    #[test]
+    fn sparse_and_dense_fabrics_never_share_a_slot() {
+        // A warm dense engine must not be checked out for a sparse solve
+        // (or vice versa): the keys differ, so the sparse checkout is a
+        // miss even with a same-geometry dense engine parked.
+        let metrics = Metrics::new();
+        let mut arena = EngineArena::new(2);
+        let kd = ArenaKey::Native { n: 8, batch: 4, chunk: 8, sparse: false };
+        let ks = ArenaKey::Native { n: 8, batch: 4, chunk: 8, sparse: true };
+        assert_ne!(kd, ks);
+        let e = arena.checkout(kd, &metrics, || build(kd)).unwrap();
+        arena.checkin(kd, e, &metrics);
+        let e = arena.checkout(ks, &metrics, || build(ks)).unwrap();
+        arena.checkin(ks, e, &metrics);
+        let snap = metrics.snapshot();
+        assert_eq!(snap.arena_hits, 0, "cross-fabric checkout must miss");
+        assert_eq!(snap.arena_misses, 2);
+        assert_eq!(arena.len(), 2, "both fabrics park side by side");
+        // Each population still hits its own key.
+        arena.checkout(kd, &metrics, || build(kd)).unwrap();
+        arena.checkout(ks, &metrics, || build(ks)).unwrap();
+        assert_eq!(metrics.snapshot().arena_hits, 2);
     }
 
     #[test]
     fn hit_miss_evict_lifecycle() {
         let metrics = Metrics::new();
         let mut arena = EngineArena::new(2);
-        let ka = ArenaKey::Native { n: 8, batch: 4, chunk: 8 };
-        let kb = ArenaKey::Native { n: 16, batch: 4, chunk: 8 };
-        let kc = ArenaKey::Native { n: 32, batch: 4, chunk: 8 };
+        let ka = ArenaKey::Native { n: 8, batch: 4, chunk: 8, sparse: false };
+        let kb = ArenaKey::Native { n: 16, batch: 4, chunk: 8, sparse: false };
+        let kc = ArenaKey::Native { n: 32, batch: 4, chunk: 8, sparse: false };
 
         // Cold start: miss, then the checked-in engine hits.
         let ea = arena.checkout(ka, &metrics, || build(ka)).unwrap();
@@ -226,7 +273,7 @@ mod tests {
     fn capacity_zero_disables_warming() {
         let metrics = Metrics::new();
         let mut arena = EngineArena::new(0);
-        let k = ArenaKey::Native { n: 8, batch: 4, chunk: 8 };
+        let k = ArenaKey::Native { n: 8, batch: 4, chunk: 8, sparse: false };
         let e = arena.checkout(k, &metrics, || build(k)).unwrap();
         arena.checkin(k, e, &metrics);
         assert!(arena.is_empty());

@@ -27,8 +27,8 @@ use crate::coordinator::job::{
 use crate::coordinator::metrics::Metrics;
 use crate::runtime::EngineFactory;
 use crate::solver::portfolio::{
-    build_engine, is_cancelled, solve_packed_hooked, solve_portfolio_hooked, EngineSelect,
-    PortfolioParams, SolveHooks, DEFAULT_CHUNK, MAX_WAVE_REPLICAS,
+    build_engine, is_cancelled, solve_packed_hooked, solve_portfolio_hooked, wants_sparse,
+    EngineSelect, PortfolioParams, SolveHooks, DEFAULT_CHUNK, MAX_WAVE_REPLICAS,
 };
 use crate::solver::problem::IsingProblem;
 use crate::telemetry::{sink, DEFAULT_TRACE_CAP};
@@ -217,6 +217,13 @@ pub fn solve_pack_key(req: &SolveRequest, policy: &SolvePackPolicy) -> Option<(u
     if req.shards.is_some() || req.rtl || req.trace {
         return None;
     }
+    // Sparse-form problems run solo: lane blocks are programmed with
+    // dense per-block matrices (the zero-padded packing layout), and
+    // densifying would defeat the point of keeping the request sparse
+    // end-to-end (DESIGN_SOLVER.md §11).
+    if req.problem.is_sparse() {
+        return None;
+    }
     if req.replicas == 0 || req.replicas > policy.max_lanes.min(MAX_WAVE_REPLICAS) {
         return None;
     }
@@ -284,6 +291,7 @@ fn solve_result_from(job: &SolveJob, out: crate::solver::portfolio::SolveOutcome
         engine: out.engine,
         sync_rounds: out.sync_rounds,
         quantization_error: out.quantization_error,
+        sparse: out.sparse,
         hardware: out.hardware,
         trace: None,
         queue_latency: Duration::ZERO,
@@ -336,7 +344,16 @@ fn solve_one(job: SolveJob, metrics: &Metrics, select: EngineSelect, arena: &mut
     };
     let m = job.req.problem.embed_dim();
     let batch = params.replicas.clamp(1, MAX_WAVE_REPLICAS);
-    let key = ArenaKey::for_solve(m, batch, params.chunk, job_select);
+    // The key carries the weight-fabric choice (dense vs CSR) so a warm
+    // dense engine is never checked out for a sparse solve or vice
+    // versa — each population reprograms through its own install path.
+    let key = ArenaKey::for_solve(
+        m,
+        batch,
+        params.chunk,
+        job_select,
+        wants_sparse(&job.req.problem),
+    );
     let mut engine =
         match arena.checkout(key, metrics, || build_engine(m, batch, params.chunk, job_select)) {
             Ok(engine) => engine,
@@ -370,6 +387,9 @@ fn solve_one(job: SolveJob, metrics: &Metrics, select: EngineSelect, arena: &mut
                 result.sync_rounds,
                 result.engine,
             );
+            if result.sparse {
+                metrics.record_solve_sparse();
+            }
             if let Some(hw) = &result.hardware {
                 metrics.record_solve_hardware(hw.fast_cycles);
             }
@@ -442,6 +462,7 @@ fn solve_packed_batch(
         n: bucket,
         batch: lanes,
         chunk: DEFAULT_CHUNK,
+        sparse: false,
     };
     let mut engine = match arena.checkout(key, metrics, || {
         build_engine(bucket, lanes, DEFAULT_CHUNK, EngineSelect::Native)
@@ -668,6 +689,10 @@ mod tests {
             ..Default::default()
         };
         assert_eq!(solve_pack_key(&a.req, &off), None);
+        // Sparse-form problems never pack: lane blocks are dense.
+        let mut s = solve_job(10, 8, 64, rtx.clone());
+        s.req.problem = IsingProblem::from_edges(10, &[(0, 1, 1.0)]).unwrap();
+        assert_eq!(solve_pack_key(&s.req, &policy), None);
     }
 
     #[test]

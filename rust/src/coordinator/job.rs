@@ -150,6 +150,9 @@ pub struct SolveResult {
     /// RMS rounding loss of the quantized coupling embedding, as a
     /// fraction of the quantization full scale.
     pub quantization_error: f64,
+    /// True when the solve ran on the engine's CSR sparse fabric (or
+    /// was answered trivially as a zero-interaction sparse request).
+    pub sparse: bool,
     /// Emulated hardware cost — present when the bit-true rtl engine
     /// served the solve.
     pub hardware: Option<HardwareCost>,

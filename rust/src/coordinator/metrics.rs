@@ -71,6 +71,13 @@ pub struct Metrics {
     /// internal packed-path error (the blast-radius containment of the
     /// coalescing batcher).
     pub solve_pack_fallbacks: AtomicU64,
+    /// Zero-interaction solves answered trivially by the router (every
+    /// coupling and field exactly zero: any state is a ground state, so
+    /// no engine time is spent).
+    pub solves_trivial: AtomicU64,
+    /// Completed solves that ran on a CSR sparse fabric
+    /// (`SolveOutcome::sparse`).
+    pub solves_sparse: AtomicU64,
     /// Warm-engine arena checkouts that reused a standing engine
     /// (reprogram instead of rebuild).
     pub arena_hits: AtomicU64,
@@ -119,12 +126,20 @@ pub struct MetricsSnapshot {
     pub solve_fast_cycles: u64,
     pub solves_cancelled: u64,
     pub solve_pack_fallbacks: u64,
+    pub solves_trivial: u64,
+    pub solves_sparse: u64,
     pub arena_hits: u64,
     pub arena_misses: u64,
     pub arena_evictions: u64,
 }
 
 impl Metrics {
+    /// Fresh zeroed counters (alias for `Default` — tests and
+    /// standalone arenas construct metrics directly).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
     pub fn record_submit(&self) {
         self.submitted.fetch_add(1, Ordering::Relaxed);
     }
@@ -212,6 +227,16 @@ impl Metrics {
         self.solve_pack_fallbacks.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// A zero-interaction solve answered trivially (no engine ran).
+    pub fn record_solve_trivial(&self) {
+        self.solves_trivial.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A completed solve that ran on a CSR sparse fabric.
+    pub fn record_solve_sparse(&self) {
+        self.solves_sparse.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// An arena checkout served by a standing warm engine.
     pub fn record_arena_hit(&self) {
         self.arena_hits.fetch_add(1, Ordering::Relaxed);
@@ -273,6 +298,8 @@ impl Metrics {
             solve_fast_cycles: self.solve_fast_cycles.load(Ordering::Relaxed),
             solves_cancelled: self.solves_cancelled.load(Ordering::Relaxed),
             solve_pack_fallbacks: self.solve_pack_fallbacks.load(Ordering::Relaxed),
+            solves_trivial: self.solves_trivial.load(Ordering::Relaxed),
+            solves_sparse: self.solves_sparse.load(Ordering::Relaxed),
             arena_hits: self.arena_hits.load(Ordering::Relaxed),
             arena_misses: self.arena_misses.load(Ordering::Relaxed),
             arena_evictions: self.arena_evictions.load(Ordering::Relaxed),
@@ -344,6 +371,8 @@ impl MetricsSnapshot {
                 "solve_pack_fallbacks",
                 Json::num(self.solve_pack_fallbacks as f64),
             ),
+            ("solves_trivial", Json::num(self.solves_trivial as f64)),
+            ("solves_sparse", Json::num(self.solves_sparse as f64)),
             ("arena_hits", Json::num(self.arena_hits as f64)),
             ("arena_misses", Json::num(self.arena_misses as f64)),
             ("arena_evictions", Json::num(self.arena_evictions as f64)),
@@ -356,7 +385,7 @@ impl MetricsSnapshot {
     pub fn prometheus(&self) -> String {
         use std::fmt::Write;
         let mut out = String::new();
-        let counters: [(&str, u64); 18] = [
+        let counters: [(&str, u64); 20] = [
             ("onn_jobs_submitted", self.submitted),
             ("onn_jobs_completed", self.completed),
             ("onn_jobs_timeouts", self.timeouts),
@@ -371,6 +400,8 @@ impl MetricsSnapshot {
             ("onn_solve_fast_cycles", self.solve_fast_cycles),
             ("onn_solves_cancelled", self.solves_cancelled),
             ("onn_solve_pack_fallbacks", self.solve_pack_fallbacks),
+            ("onn_solves_trivial", self.solves_trivial),
+            ("onn_solves_sparse", self.solves_sparse),
             ("onn_arena_hits", self.arena_hits),
             ("onn_arena_misses", self.arena_misses),
             ("onn_arena_evictions", self.arena_evictions),
@@ -517,6 +548,9 @@ mod tests {
         assert_eq!(s.arena_hit_rate(), 0.0, "empty arena never NaNs");
         m.record_solve_cancelled();
         m.record_solve_pack_fallback();
+        m.record_solve_trivial();
+        m.record_solve_sparse();
+        m.record_solve_sparse();
         m.record_arena_miss();
         m.record_arena_hit();
         m.record_arena_hit();
@@ -524,6 +558,8 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.solves_cancelled, 1);
         assert_eq!(s.solve_pack_fallbacks, 1);
+        assert_eq!(s.solves_trivial, 1);
+        assert_eq!(s.solves_sparse, 2);
         assert_eq!(s.arena_hits, 2);
         assert_eq!(s.arena_misses, 1);
         assert_eq!(s.arena_evictions, 1);
@@ -532,6 +568,8 @@ mod tests {
         for key in [
             "solves_cancelled",
             "solve_pack_fallbacks",
+            "solves_trivial",
+            "solves_sparse",
             "arena_hits",
             "arena_misses",
             "arena_evictions",
@@ -541,6 +579,8 @@ mod tests {
         }
         let text = s.prometheus();
         assert!(text.contains("onn_solves_cancelled 1"));
+        assert!(text.contains("onn_solves_trivial 1"));
+        assert!(text.contains("onn_solves_sparse 2"));
         assert!(text.contains("onn_arena_hits 2"));
         assert!(text.contains("onn_arena_hit_rate"));
     }

@@ -157,6 +157,19 @@ impl Router {
             .ok_or_else(|| anyhow!("no solver pool registered"))?;
         let (rtx, rrx) = channel();
         self.metrics.record_solve_submit();
+        // Zero-interaction degenerate problems (every coupling and
+        // field exactly zero — e.g. `"edges": []` with no `"h"`) have
+        // *every* state as a ground state; annealing noise for the full
+        // period budget would return an arbitrary state at great
+        // expense.  Answer immediately with the canonical trivial
+        // ground state instead of burning engine time.
+        if req.problem.is_zero_interaction() {
+            self.metrics.record_solve_trivial();
+            let result = trivial_solve_result(&req);
+            // The receiver is returned below; the send cannot fail.
+            let _ = rtx.send(result);
+            return Ok(rrx);
+        }
         tx.send(SolveJob {
             req,
             submitted: Instant::now(),
@@ -174,6 +187,34 @@ impl Router {
         self.shutdown.store(true, Ordering::Relaxed);
         self.queues.lock().unwrap().clear();
         *self.solver.lock().unwrap() = None;
+    }
+}
+
+/// The canonical answer to a zero-interaction problem: all spins up
+/// (phase 0), energy exactly 0 — as good as any other state, found with
+/// zero engine periods.  Counted in `solves_trivial`, not in the
+/// per-engine solve columns (no engine ran).
+fn trivial_solve_result(req: &SolveRequest) -> SolveResult {
+    use std::time::Duration;
+    SolveResult {
+        id: req.id,
+        spins: vec![1i8; req.problem.n],
+        phases: vec![0i32; req.problem.n],
+        energy: 0.0,
+        objective: req.problem.metadata.offset,
+        periods: 0,
+        replicas: req.replicas,
+        settled_replicas: req.replicas,
+        engine: "trivial",
+        sync_rounds: 0,
+        quantization_error: 0.0,
+        sparse: req.problem.is_sparse(),
+        hardware: None,
+        // A requested trace is honored with an empty lifecycle: no
+        // waves, no chunks, nothing ran.
+        trace: req.trace.then(Vec::new),
+        queue_latency: Duration::ZERO,
+        total_latency: Duration::ZERO,
     }
 }
 
@@ -240,7 +281,11 @@ mod tests {
 
     fn solve_req(n: usize) -> SolveRequest {
         use crate::solver::problem::IsingProblem;
-        SolveRequest::new(1, IsingProblem::new(n))
+        // A real coupling so the request is not the zero-interaction
+        // degenerate case (which the router answers inline).
+        let mut p = IsingProblem::new(n);
+        p.set_j(0, 1, 1.0);
+        SolveRequest::new(1, p)
     }
 
     #[test]
@@ -258,6 +303,42 @@ mod tests {
         assert_eq!(r.metrics.solves_submitted.load(std::sync::atomic::Ordering::Relaxed), 1);
         r.shutdown();
         assert!(!r.has_solver());
+    }
+
+    #[test]
+    fn zero_interaction_solve_answered_inline() {
+        use crate::solver::problem::IsingProblem;
+        let r = Router::new(Arc::new(Metrics::default()));
+        let (tx, rx) = channel();
+        r.register_solver(tx).unwrap();
+        // `"edges": []` with no `"h"`: every state is a ground state.
+        let mut req = SolveRequest::new(7, IsingProblem::from_edges(5, &[]).unwrap());
+        req.trace = true;
+        let result = r.submit_solve(req).unwrap().try_recv().unwrap();
+        assert!(rx.try_recv().is_err(), "no job reaches the solver pool");
+        assert_eq!(result.id, 7);
+        assert_eq!(result.spins, vec![1i8; 5]);
+        assert_eq!(result.phases, vec![0i32; 5]);
+        assert_eq!(result.energy, 0.0);
+        assert_eq!(result.periods, 0, "no engine periods were burned");
+        assert_eq!(result.engine, "trivial");
+        assert!(result.sparse, "sparse-form request stays flagged sparse");
+        assert_eq!(result.settled_replicas, result.replicas);
+        assert_eq!(result.trace.map(|t| t.len()), Some(0), "empty lifecycle");
+        // Dense zero problems take the same shortcut.
+        let dense = SolveRequest::new(8, IsingProblem::new(4));
+        let result = r.submit_solve(dense).unwrap().try_recv().unwrap();
+        assert_eq!(result.engine, "trivial");
+        assert!(!result.sparse);
+        let m = r.metrics.snapshot();
+        assert_eq!(m.solves_trivial, 2);
+        assert_eq!(m.solves_submitted, 2);
+        assert_eq!(m.solves_completed, 0, "no engine solve completed");
+        // A nonzero field keeps the solve on the real path.
+        let mut p = IsingProblem::from_edges(5, &[]).unwrap();
+        p.h[0] = 1.0;
+        let _pending = r.submit_solve(SolveRequest::new(9, p)).unwrap();
+        assert_eq!(rx.try_recv().unwrap().req.id, 9, "field problems anneal");
     }
 
     #[test]

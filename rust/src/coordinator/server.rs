@@ -401,6 +401,7 @@ pub fn solve_result_json(id: u64, res: &SolveResult) -> Json {
         ("engine", Json::str(res.engine)),
         ("sync_rounds", Json::num(res.sync_rounds as f64)),
         ("quantization_error", Json::num(res.quantization_error)),
+        ("sparse", Json::Bool(res.sparse)),
     ];
     if let Some(hw) = &res.hardware {
         fields.push(("hw_fast_cycles", Json::num(hw.fast_cycles as f64)));
@@ -513,9 +514,9 @@ pub(crate) fn parse_solve_request(v: &Json) -> Result<SolveRequest> {
     if n > MAX_WIRE_N {
         return Err(anyhow!("'n' = {n} exceeds the wire limit {MAX_WIRE_N}"));
     }
-    let mut problem = IsingProblem::new(n).with_kind("wire");
-    match (v.get("j"), v.get("edges")) {
+    let mut problem = match (v.get("j"), v.get("edges")) {
         (Some(j), _) => {
+            let mut problem = IsingProblem::new(n);
             let arr = j.as_arr().ok_or_else(|| anyhow!("'j' must be an array"))?;
             if arr.len() != n * n {
                 return Err(anyhow!("'j' has {} entries, want n^2 = {}", arr.len(), n * n));
@@ -530,11 +531,13 @@ pub(crate) fn parse_solve_request(v: &Json) -> Result<SolveRequest> {
                     return Err(anyhow!("'j' diagonal must be zero; use 'h' for biases"));
                 }
             }
+            problem
         }
         (None, Some(edges)) => {
             let arr = edges
                 .as_arr()
                 .ok_or_else(|| anyhow!("'edges' must be an array"))?;
+            let mut triplets = Vec::with_capacity(arr.len());
             for e in arr {
                 let t = e.as_arr().ok_or_else(|| anyhow!("edge must be [i, j, J]"))?;
                 if t.len() != 3 {
@@ -545,14 +548,19 @@ pub(crate) fn parse_solve_request(v: &Json) -> Result<SolveRequest> {
                     t[1].as_usize().ok_or_else(|| anyhow!("bad edge index"))?,
                 );
                 let w = t[2].as_f64().ok_or_else(|| anyhow!("bad edge weight"))?;
-                if i >= n || k >= n || i == k {
-                    return Err(anyhow!("edge ({i}, {k}) out of range for n={n}"));
-                }
-                problem.add_j(i, k, w);
+                triplets.push((i, k, w));
             }
+            // Build the sparse (CSR) coupling form directly — the
+            // request stays sparse end-to-end.  `from_edges` rejects
+            // out-of-range indices, self loops, and duplicate pairs
+            // (either orientation: [i,k] after [k,i] is a duplicate,
+            // not a second coupling — the old dense arm silently
+            // last-writer-wins'd both).
+            IsingProblem::from_edges(n, &triplets).map_err(|e| anyhow!("bad 'edges': {e}"))?
         }
         (None, None) => return Err(anyhow!("missing couplings: provide 'j' or 'edges'")),
-    }
+    };
+    problem.metadata.kind = "wire".to_string();
     if let Some(h) = v.get("h") {
         let arr = h.as_arr().ok_or_else(|| anyhow!("'h' must be an array"))?;
         if arr.len() != n {
@@ -775,11 +783,45 @@ mod tests {
         assert_eq!(r.problem.get_j(0, 1), -1.0);
         assert_eq!(r.problem.get_j(1, 0), -1.0);
         assert_eq!(r.problem.get_j(0, 2), 0.0);
+        assert!(
+            r.problem.is_sparse(),
+            "'edges' requests must stay in the sparse coupling form"
+        );
+        assert_eq!(r.problem.metadata.kind, "wire");
         assert_eq!(r.replicas, 4);
         assert_eq!(r.max_periods, 32);
         assert_eq!(r.schedule, Schedule::Linear { start: 0.4 });
         assert_eq!(r.seed, 9);
         assert_eq!(r.shards, Some(2));
+    }
+
+    #[test]
+    fn parse_solve_request_rejects_duplicate_edges() {
+        // The old dense-scatter arm silently last-writer-wins'd repeated
+        // pairs; the wire contract now rejects them so a client bug
+        // can't half-apply a coupling list.
+        let dup = parse_solve_request(
+            &Json::parse(r#"{"n":3,"edges":[[0,1,1],[0,1,2]]}"#).unwrap(),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(dup.contains("duplicate edge"), "{dup}");
+        // The reversed orientation names the same undirected pair.
+        let rev = parse_solve_request(
+            &Json::parse(r#"{"n":3,"edges":[[0,1,1],[1,0,1]]}"#).unwrap(),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(rev.contains("duplicate edge"), "{rev}");
+        let loop_ = parse_solve_request(&Json::parse(r#"{"n":3,"edges":[[2,2,1]]}"#).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(loop_.contains("self-loop"), "{loop_}");
+        // An empty edge list is a *valid* (degenerate) request — the
+        // router answers it trivially without burning an anneal budget.
+        let empty = parse_solve_request(&Json::parse(r#"{"n":3,"edges":[]}"#).unwrap()).unwrap();
+        assert!(empty.problem.is_sparse());
+        assert!(empty.problem.is_zero_interaction());
     }
 
     #[test]

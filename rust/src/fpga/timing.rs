@@ -63,6 +63,24 @@ pub fn oscillation_frequency_hybrid(cfg: &NetworkConfig, d: &Device) -> f64 {
     f_logic_mhz * 1e3 / (cfg.period() as f64 * fast_cycles)
 }
 
+/// Oscillation frequency (kHz) for the hybrid design driving a CSR
+/// sparse coupling fabric: the serial MAC only walks the stored
+/// nonzeros of each row, so the per-step wait shrinks from `n` to the
+/// *average row nonzero count* (the rows are serviced round-robin, so
+/// the mean — not the max — sets the sustained period).  At
+/// `avg_row_nnz == n as f64` this degenerates to the dense model
+/// exactly; the logic frequency is unchanged (same MAC, same routing
+/// spread — only the iteration count drops).
+pub fn oscillation_frequency_hybrid_sparse(
+    cfg: &NetworkConfig,
+    d: &Device,
+    avg_row_nnz: f64,
+) -> f64 {
+    let f_logic_mhz = logic_frequency_hybrid(cfg.n, d);
+    let fast_cycles = avg_row_nnz + SYNC_OVERHEAD_CYCLES as f64;
+    f_logic_mhz * 1e3 / (cfg.period() as f64 * fast_cycles)
+}
+
 /// (f_logic MHz, f_osc kHz) for an architecture by name.
 pub fn frequencies(arch: &str, cfg: &NetworkConfig, d: &Device) -> (f64, f64) {
     match arch {
@@ -152,6 +170,31 @@ mod tests {
         let d = zynq7020();
         assert!(logic_frequency_hybrid(2, &d) <= FABRIC_FMAX_MHZ);
         assert!(logic_frequency_recurrent(2) <= FABRIC_FMAX_MHZ);
+    }
+
+    #[test]
+    fn sparse_hybrid_prices_nonzeros_not_n() {
+        let d = zynq7020();
+        // Full rows degenerate to the dense model bit-for-bit.
+        for n in [16, 128, 506] {
+            let dense = oscillation_frequency_hybrid(&cfg(n), &d);
+            let full = oscillation_frequency_hybrid_sparse(&cfg(n), &d, n as f64);
+            assert_eq!(dense.to_bits(), full.to_bits(), "n={n}");
+        }
+        // Fewer nonzeros per row -> strictly faster oscillation, and
+        // the speedup tracks the cycle-count ratio exactly (f_logic is
+        // shared, so it cancels).
+        let n = 512;
+        let dense = oscillation_frequency_hybrid(&cfg(n), &d);
+        let mut prev = 0.0;
+        for nnz in [256.0, 64.0, 16.0, 4.0] {
+            let f = oscillation_frequency_hybrid_sparse(&cfg(n), &d, nnz);
+            assert!(f > prev, "monotone in sparsity: {nnz} -> {f}");
+            prev = f;
+            let want = dense * (n + SYNC_OVERHEAD_CYCLES) as f64
+                / (nnz + SYNC_OVERHEAD_CYCLES as f64);
+            assert!((f - want).abs() < 1e-9 * want, "nnz={nnz}: {f} vs {want}");
+        }
     }
 
     #[test]

@@ -369,6 +369,40 @@ pub fn solver_bench_report(doc: &Json) -> String {
             out.push_str(&t.render());
         }
     }
+    if let Some(sparse) = doc.get("sparse").and_then(Json::as_arr) {
+        if !sparse.is_empty() {
+            let mut t = Table::new(
+                "Dense vs CSR coupling fabric (bit-exact work per row)",
+                &[
+                    "N",
+                    "Density",
+                    "nnz/row",
+                    "Dense RP/s",
+                    "CSR RP/s",
+                    "Speedup",
+                    "Dense B",
+                    "CSR B",
+                    "HW dense kHz",
+                    "HW CSR kHz",
+                ],
+            );
+            for p in sparse {
+                t.row(&[
+                    fmt_f(num(p, "n"), 0),
+                    fmt_f(num(p, "density"), 3),
+                    fmt_f(num(p, "avg_row_nnz"), 1),
+                    fmt_f(num(p, "dense_replica_periods_per_sec"), 0),
+                    fmt_f(num(p, "sparse_replica_periods_per_sec"), 0),
+                    fmt_f(num(p, "sparse_speedup"), 2),
+                    fmt_f(num(p, "dense_weight_bytes"), 0),
+                    fmt_f(num(p, "sparse_weight_bytes"), 0),
+                    fmt_f(num(p, "hw_dense_khz"), 2),
+                    fmt_f(num(p, "hw_sparse_khz"), 2),
+                ]);
+            }
+            out.push_str(&t.render());
+        }
+    }
     if let Some(conv) = doc.get("convergence").and_then(Json::as_arr) {
         if !conv.is_empty() {
             let mut t = Table::new(
@@ -432,7 +466,7 @@ mod tests {
     fn solver_bench_report_renders_all_sections() {
         use crate::harness::solverbench::{
             bench_json, ConvergencePoint, LatencyPoint, PackedPoint, RtlPoint, SolverBench,
-            ThroughputPoint,
+            SparsePoint, ThroughputPoint,
         };
         use crate::telemetry::LatencySummary;
         let pts = vec![ThroughputPoint {
@@ -492,6 +526,24 @@ mod tests {
                 monotone: true,
                 final_energy: -6.0,
             }],
+            sparse: vec![SparsePoint {
+                n: 512,
+                edge_prob: 0.05,
+                density: 0.05,
+                avg_row_nnz: 25.6,
+                replicas: 4,
+                periods: 32,
+                dense_median_s: 0.8,
+                sparse_median_s: 0.1,
+                dense_replica_periods_per_sec: 160.0,
+                sparse_replica_periods_per_sec: 1280.0,
+                sparse_speedup: 8.0,
+                dense_weight_bytes: 1_310_720,
+                sparse_weight_bytes: 30_000,
+                hw_dense_khz: 6.0,
+                hw_sparse_khz: 98.0,
+            }],
+            ..Default::default()
         };
         let doc = bench_json(&bench, 42);
         let s = solver_bench_report(&doc);
@@ -502,6 +554,8 @@ mod tests {
         assert!(s.contains("latency percentiles"), "{s}");
         assert!(s.contains("p99 [ms]"), "{s}");
         assert!(s.contains("Convergence traces"), "{s}");
+        assert!(s.contains("Dense vs CSR"), "{s}");
+        assert!(s.contains("8.00"), "sparse speedup column renders: {s}");
         assert!(s.contains("yes"), "monotone flag renders: {s}");
         // Unrelated documents degrade gracefully instead of panicking.
         let s = solver_bench_report(&Json::obj(vec![("x", Json::num(1.0))]));

@@ -19,15 +19,18 @@ use std::time::{Duration, Instant};
 use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::server::{serve_tcp, Coordinator, SolverPoolConfig};
 use crate::coordinator::stream::serve_evented;
+use crate::fpga::device::zynq7020;
+use crate::fpga::timing::{oscillation_frequency_hybrid, oscillation_frequency_hybrid_sparse};
 use crate::harness::bench;
+use crate::onn::config::NetworkConfig;
 use crate::solver::anneal::Schedule;
 use crate::solver::graph::Graph;
 use crate::solver::portfolio::{
-    solve_native, solve_packed_native, solve_with, solve_with_trace, EngineSelect,
+    solve_native, solve_packed_native, solve_with, solve_with_trace, wants_sparse, EngineSelect,
     PortfolioParams, DEFAULT_CHUNK, MAX_WAVE_REPLICAS,
 };
 use crate::solver::problem::IsingProblem;
-use crate::solver::reductions::{coloring, max_cut};
+use crate::solver::reductions::{coloring, max_cut, max_cut_sparse};
 use crate::solver::sa;
 use crate::telemetry::{sink, LatencyHistogram, LatencySummary, TraceEvent, DEFAULT_TRACE_CAP};
 use crate::util::json::Json;
@@ -307,6 +310,124 @@ pub fn rtl_comparison(
         });
     }
     points
+}
+
+/// One dense-vs-CSR fabric measurement: the same max-cut instance
+/// solved through the dense matrix kernel and the sparse (CSR) kernel
+/// at identical params/seed.  The trajectories are bit-exact (asserted
+/// by a probe before any timing), so the rows differ only in per-period
+/// work — `n` multiplies per row dense vs `avg_row_nnz` sparse — and in
+/// weight-fabric memory.
+#[derive(Debug, Clone)]
+pub struct SparsePoint {
+    pub n: usize,
+    /// Edge probability the G(n, p) instance was drawn with.
+    pub edge_prob: f64,
+    /// Realized nonzero density of the coupling matrix.
+    pub density: f64,
+    /// Mean stored nonzeros per CSR row.
+    pub avg_row_nnz: f64,
+    pub replicas: usize,
+    /// Periods the probe actually drove (identical on both fabrics).
+    pub periods: usize,
+    pub dense_median_s: f64,
+    pub sparse_median_s: f64,
+    pub dense_replica_periods_per_sec: f64,
+    pub sparse_replica_periods_per_sec: f64,
+    /// sparse rate / dense rate — the kernel speedup CSR buys.
+    pub sparse_speedup: f64,
+    /// Dense weight fabric bytes: n^2 i8 weights + the n^2 i32
+    /// column-major copy the kernel walks.
+    pub dense_weight_bytes: usize,
+    /// CSR fabric bytes ([`crate::onn::sparse::SparseWeights::memory_bytes`]).
+    pub sparse_weight_bytes: usize,
+    /// Modeled hybrid-architecture oscillation frequency (kHz) when the
+    /// serial MAC walks all n columns per row.
+    pub hw_dense_khz: f64,
+    /// Same design with the MAC walking stored nonzeros only
+    /// ([`oscillation_frequency_hybrid_sparse`]).
+    pub hw_sparse_khz: f64,
+}
+
+/// Rate the dense kernel against the CSR kernel on one G(n, p) max-cut
+/// instance per `(n, edge_prob)` spec, asserting bit-exact outcomes
+/// before timing anything (`solve-bench --sparse`).
+pub fn sparse_comparison(
+    specs: &[(usize, f64)],
+    replicas: usize,
+    periods: usize,
+    seed: u64,
+) -> Vec<SparsePoint> {
+    let d = zynq7020();
+    let mut rows = Vec::with_capacity(specs.len());
+    for &(n, edge_prob) in specs {
+        let mut rng = Rng::new(seed.wrapping_add(n as u64));
+        let g = Graph::random(n, edge_prob, &mut rng);
+        let dense_problem = max_cut(&g);
+        let sparse_problem = max_cut_sparse(&g);
+        assert!(
+            wants_sparse(&sparse_problem),
+            "sparse bench spec (n={n}, p={edge_prob}) lands above the density threshold"
+        );
+        let params = PortfolioParams {
+            replicas,
+            max_periods: periods,
+            schedule: Schedule::Geometric {
+                start: 0.5,
+                factor: 0.8,
+            },
+            seed,
+            plateau_chunks: 0, // steady work: rate the full budget
+            ..Default::default()
+        };
+        // The two forms must be the same computation: bit-equal best
+        // state and equal period count, or the speedup is meaningless.
+        let probe_dense =
+            solve_with(&dense_problem, &params, EngineSelect::Native).expect("dense probe");
+        let probe_sparse =
+            solve_with(&sparse_problem, &params, EngineSelect::Native).expect("sparse probe");
+        assert_eq!(
+            probe_dense.best_energy.to_bits(),
+            probe_sparse.best_energy.to_bits(),
+            "sparse kernel diverged from dense at n={n}"
+        );
+        assert_eq!(probe_dense.best_spins, probe_sparse.best_spins);
+        assert_eq!(probe_dense.periods, probe_sparse.periods);
+        assert!(probe_sparse.sparse && !probe_dense.sparse);
+        let actual_periods = probe_sparse.periods;
+        let rd = bench::bench(&format!("solver/sparse_dense_n{n}"), 1, 3, || {
+            solve_with(&dense_problem, &params, EngineSelect::Native).expect("dense");
+        });
+        let rs = bench::bench(&format!("solver/sparse_csr_n{n}"), 1, 3, || {
+            solve_with(&sparse_problem, &params, EngineSelect::Native).expect("sparse");
+        });
+        let (dense_median_s, sparse_median_s) = (rd.median.as_secs_f64(), rs.median.as_secs_f64());
+        let rp = (replicas * actual_periods) as f64;
+        let dense_rps = rp / dense_median_s.max(1e-12);
+        let sparse_rps = rp / sparse_median_s.max(1e-12);
+        // Memory + modeled-hardware columns come from the quantized
+        // fabric the engine actually installed.
+        let cfg = NetworkConfig::paper(n);
+        let (sw, _) = sparse_problem.embed_sparse_with_error(&cfg);
+        rows.push(SparsePoint {
+            n,
+            edge_prob,
+            density: sparse_problem.coupling_density(),
+            avg_row_nnz: sw.avg_row_nnz(),
+            replicas,
+            periods: actual_periods,
+            dense_median_s,
+            sparse_median_s,
+            dense_replica_periods_per_sec: dense_rps,
+            sparse_replica_periods_per_sec: sparse_rps,
+            sparse_speedup: if dense_rps > 0.0 { sparse_rps / dense_rps } else { 0.0 },
+            dense_weight_bytes: n * n * (1 + std::mem::size_of::<i32>()),
+            sparse_weight_bytes: sw.memory_bytes(),
+            hw_dense_khz: oscillation_frequency_hybrid(&cfg, &d),
+            hw_sparse_khz: oscillation_frequency_hybrid_sparse(&cfg, &d, sw.avg_row_nnz()),
+        });
+    }
+    rows
 }
 
 /// One packed-vs-unpacked serving measurement: a mix of small
@@ -706,6 +827,7 @@ pub struct SolverBench {
     pub latency: Vec<LatencyPoint>,
     pub convergence: Vec<ConvergencePoint>,
     pub connection_scale: Vec<ConnectionScalePoint>,
+    pub sparse: Vec<SparsePoint>,
 }
 
 /// Serialize a throughput sweep as the `BENCH_solver.json` document.
@@ -714,9 +836,9 @@ pub struct SolverBench {
 /// rows (one per measured mix) sit alongside under `"packed"`,
 /// float-vs-bit-true hardware rows under `"rtl"`, latency percentiles
 /// per fabric under `"latency"`, per-chunk best-energy trajectories
-/// under `"convergence"`, and connection-scale serving rows (evented
-/// front end vs thread-per-connection baseline) under
-/// `"connection_scale"`.
+/// under `"convergence"`, dense-vs-CSR fabric rows under `"sparse"`,
+/// and connection-scale serving rows (evented front end vs
+/// thread-per-connection baseline) under `"connection_scale"`.
 pub fn bench_json(bench: &SolverBench, recorded_unix_s: u64) -> Json {
     let points = &bench.points;
     let packed = &bench.packed;
@@ -848,6 +970,40 @@ pub fn bench_json(bench: &SolverBench, recorded_unix_s: u64) -> Json {
             ),
         ),
         (
+            "sparse",
+            Json::Arr(
+                bench
+                    .sparse
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("n", Json::num(p.n as f64)),
+                            ("edge_prob", Json::num(p.edge_prob)),
+                            ("density", Json::num(p.density)),
+                            ("avg_row_nnz", Json::num(p.avg_row_nnz)),
+                            ("replicas", Json::num(p.replicas as f64)),
+                            ("periods", Json::num(p.periods as f64)),
+                            ("dense_median_s", Json::num(p.dense_median_s)),
+                            ("sparse_median_s", Json::num(p.sparse_median_s)),
+                            (
+                                "dense_replica_periods_per_sec",
+                                Json::num(p.dense_replica_periods_per_sec),
+                            ),
+                            (
+                                "sparse_replica_periods_per_sec",
+                                Json::num(p.sparse_replica_periods_per_sec),
+                            ),
+                            ("sparse_speedup", Json::num(p.sparse_speedup)),
+                            ("dense_weight_bytes", Json::num(p.dense_weight_bytes as f64)),
+                            ("sparse_weight_bytes", Json::num(p.sparse_weight_bytes as f64)),
+                            ("hw_dense_khz", Json::num(p.hw_dense_khz)),
+                            ("hw_sparse_khz", Json::num(p.hw_sparse_khz)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
             "connection_scale",
             Json::Arr(
                 bench
@@ -887,7 +1043,10 @@ pub fn bench_json(bench: &SolverBench, recorded_unix_s: u64) -> Json {
 /// (solution quality + emulated hardware time-to-solution), plus —
 /// when `connections >= 1` — one connection-scale serving row
 /// (sustained solves/sec at `connections` concurrent streaming clients,
-/// evented front end vs thread-per-connection baseline).  Every run
+/// evented front end vs thread-per-connection baseline), plus — when
+/// `sparse` — the dense-vs-CSR fabric rows (fixed density 0.05 at the
+/// sizes the scaling argument bites, and a constant-degree G(n, 4/n)
+/// sweep).  Every run
 /// also records latency percentiles per engine fabric (repeated solves
 /// of the smallest size through a log-bucketed histogram) and one
 /// traced convergence trajectory per size.
@@ -902,6 +1061,7 @@ pub fn record_throughput(
     packed_problems: usize,
     rtl: bool,
     connections: usize,
+    sparse: bool,
 ) -> std::io::Result<SolverBench> {
     // Repeated solves per fabric for the percentile rows: enough to
     // make p90 land off the extremes, few enough to stay cheap.
@@ -932,6 +1092,22 @@ pub fn record_throughput(
     } else {
         Vec::new()
     };
+    let sparse_points = if sparse {
+        // The fixed-density rows carry the acceptance argument (CSR
+        // must beat dense at density 0.05 by the time n reaches 512);
+        // the G(n, 4/n) rows show constant-degree scaling — per-row
+        // work flat while the dense kernel grows linearly.
+        let specs = [
+            (256, 0.05),
+            (512, 0.05),
+            (128, 4.0 / 128.0),
+            (256, 4.0 / 256.0),
+            (512, 4.0 / 512.0),
+        ];
+        sparse_comparison(&specs, replicas, periods, seed)
+    } else {
+        Vec::new()
+    };
     let bench = SolverBench {
         points,
         packed,
@@ -939,6 +1115,7 @@ pub fn record_throughput(
         latency,
         convergence,
         connection_scale: connection_points,
+        sparse: sparse_points,
     };
     let stamp = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
@@ -948,7 +1125,7 @@ pub fn record_throughput(
     std::fs::write(path, format!("{doc}\n"))?;
     eprintln!(
         "wrote {} ({} rows + {} packed + {} rtl + {} latency + {} convergence \
-         + {} connection-scale in {:.1}s)",
+         + {} connection-scale + {} sparse in {:.1}s)",
         path.display(),
         bench.points.len(),
         bench.packed.len(),
@@ -956,6 +1133,7 @@ pub fn record_throughput(
         bench.latency.len(),
         bench.convergence.len(),
         bench.connection_scale.len(),
+        bench.sparse.len(),
         t0.elapsed().as_secs_f64()
     );
     Ok(bench)
@@ -1080,6 +1258,23 @@ mod tests {
                 speedup: 2.5,
                 arena_hit_rate: 0.9,
             }],
+            sparse: vec![SparsePoint {
+                n: 512,
+                edge_prob: 0.05,
+                density: 0.0499,
+                avg_row_nnz: 25.6,
+                replicas: 4,
+                periods: 32,
+                dense_median_s: 0.8,
+                sparse_median_s: 0.1,
+                dense_replica_periods_per_sec: 160.0,
+                sparse_replica_periods_per_sec: 1280.0,
+                sparse_speedup: 8.0,
+                dense_weight_bytes: 512 * 512 * 5,
+                sparse_weight_bytes: 30_000,
+                hw_dense_khz: 6.0,
+                hw_sparse_khz: 98.0,
+            }],
         };
         let doc = bench_json(&bench, 123);
         let parsed = Json::parse(&doc.to_string()).unwrap();
@@ -1119,11 +1314,32 @@ mod tests {
         assert_eq!(srow.get("clients").and_then(Json::as_usize), Some(64));
         assert_eq!(srow.get("speedup").and_then(Json::as_f64), Some(2.5));
         assert_eq!(srow.get("arena_hit_rate").and_then(Json::as_f64), Some(0.9));
+        let sprow = &parsed.get("sparse").and_then(Json::as_arr).unwrap()[0];
+        assert_eq!(sprow.get("n").and_then(Json::as_usize), Some(512));
+        assert_eq!(sprow.get("avg_row_nnz").and_then(Json::as_f64), Some(25.6));
+        assert_eq!(sprow.get("sparse_speedup").and_then(Json::as_f64), Some(8.0));
+        assert_eq!(
+            sprow.get("sparse_replica_periods_per_sec").and_then(Json::as_f64),
+            Some(1280.0)
+        );
+        assert_eq!(
+            sprow.get("dense_weight_bytes").and_then(Json::as_usize),
+            Some(512 * 512 * 5)
+        );
         assert!(
             doc.to_string().contains("\"engine\":\"rtl\""),
             "the CI gate greps for this literal"
         );
-        for key in ["\"p50_ms\"", "\"convergence\"", "\"connection_scale\"", "\"speedup\""] {
+        for key in [
+            "\"p50_ms\"",
+            "\"convergence\"",
+            "\"connection_scale\"",
+            "\"speedup\"",
+            "\"sparse\"",
+            "\"sparse_replica_periods_per_sec\"",
+            "\"sparse_speedup\"",
+            "\"avg_row_nnz\"",
+        ] {
             assert!(doc.to_string().contains(key), "the CI gate greps for {key}");
         }
     }
@@ -1198,6 +1414,32 @@ mod tests {
         assert!(p.evented_solves_per_sec > 0.0);
         assert!(p.speedup > 0.0);
         assert!((0.0..=1.0).contains(&p.arena_hit_rate));
+    }
+
+    #[test]
+    fn sparse_rows_rate_both_fabrics_on_identical_work() {
+        // Tiny instance keeps this fast; `solve-bench --sparse` runs
+        // the real n=512 rows.  The probe inside asserts bit-exact
+        // dense==sparse outcomes before any timing happens.
+        let rows = sparse_comparison(&[(24, 0.15)], 2, 8, 7);
+        assert_eq!(rows.len(), 1);
+        let p = &rows[0];
+        assert_eq!(p.n, 24);
+        assert!(p.density > 0.0 && p.density < 0.25);
+        assert!(p.avg_row_nnz > 0.0);
+        assert!(p.dense_replica_periods_per_sec > 0.0);
+        assert!(p.sparse_replica_periods_per_sec > 0.0);
+        assert!(p.sparse_speedup > 0.0);
+        assert!(
+            p.sparse_weight_bytes < p.dense_weight_bytes,
+            "CSR must store less than the dense fabric at this density: {} vs {}",
+            p.sparse_weight_bytes,
+            p.dense_weight_bytes
+        );
+        assert!(
+            p.hw_sparse_khz > p.hw_dense_khz,
+            "the nnz-priced serial MAC must oscillate faster than the n-cycle one"
+        );
     }
 
     #[test]

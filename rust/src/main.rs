@@ -52,7 +52,7 @@ Solver (generic Ising/QUBO subsystem, see DESIGN_SOLVER.md):
                           seq/timestamps)
   solve-bench [--sizes 16,32,64,128] [--replicas 32] [--periods 128]
         [--instances 5] [--shards K] [--packed [N]] [--rtl]
-        [--connections [N]] [--out BENCH_solver.json]
+        [--connections [N]] [--sparse] [--out BENCH_solver.json]
                           quality vs SA + native (and, with --shards,
                           sharded) throughput rows; --packed adds an
                           N-instance (default 6) small-mix row comparing
@@ -63,9 +63,13 @@ Solver (generic Ising/QUBO subsystem, see DESIGN_SOLVER.md):
                           a connection-scale serving row (sustained
                           solves/sec at N (default 64) concurrent
                           streaming clients, evented front end vs
-                          thread-per-connection baseline); every run
-                          also records latency percentiles and a
-                          convergence trace per size
+                          thread-per-connection baseline); --sparse adds
+                          dense-vs-CSR fabric rows (bit-exact work,
+                          fixed density 0.05 plus a G(n, 4/n) sweep:
+                          replica-periods/sec, weight memory, modeled
+                          hardware oscillation); every run also records
+                          latency percentiles and a convergence trace
+                          per size
   solve-report [--path BENCH_solver.json]
                           render the recorded solver trajectory next to
                           the paper tables
@@ -482,6 +486,7 @@ fn cmd_solve_bench(args: &mut Args) -> Result<()> {
     } else {
         0
     };
+    let sparse = args.has("sparse");
     let out_path = args.get_str("out", "BENCH_solver.json");
     let seed = args.get_u64("seed", 2025)?;
     args.finish().map_err(|e| anyhow!(e))?;
@@ -504,6 +509,7 @@ fn cmd_solve_bench(args: &mut Args) -> Result<()> {
         packed_problems,
         rtl,
         connections,
+        sparse,
     )?;
     println!("solver throughput (native vs sharded replica-periods/sec):");
     for p in &bench.points {
@@ -571,6 +577,26 @@ fn cmd_solve_bench(args: &mut Args) -> Result<()> {
                 p.evented_solves,
                 p.speedup,
                 p.arena_hit_rate
+            );
+        }
+    }
+    if !bench.sparse.is_empty() {
+        println!("dense vs CSR fabric (bit-exact work, replica-periods/sec):");
+        for p in &bench.sparse {
+            println!(
+                "  n={:<5} density {:.3} ({:.1} nnz/row)  dense {:>10.0}/s  \
+                 csr {:>10.0}/s  speedup {:.2}x  weights {} -> {} bytes  \
+                 hw {:.2} -> {:.2} kHz",
+                p.n,
+                p.density,
+                p.avg_row_nnz,
+                p.dense_replica_periods_per_sec,
+                p.sparse_replica_periods_per_sec,
+                p.sparse_speedup,
+                p.dense_weight_bytes,
+                p.sparse_weight_bytes,
+                p.hw_dense_khz,
+                p.hw_sparse_khz
             );
         }
     }

@@ -21,6 +21,7 @@
 
 use crate::onn::config::NetworkConfig;
 use crate::onn::phase::{amplitude, wrap};
+use crate::onn::sparse::SparseWeights;
 use crate::onn::weights::WeightMatrix;
 use crate::util::rng::Rng;
 
@@ -110,17 +111,31 @@ pub struct SettleOutcome {
     pub settled: Option<usize>,
 }
 
+/// Weight storage behind the period kernel.  Both variants feed the
+/// *same* incremental update — an order-independent integer sum over a
+/// column's entries — so a sparse fabric that only visits the stored
+/// entries of column `j` produces bit-identical `S_i(t)` (zero entries
+/// contribute exactly 0 to an i32 sum).
+#[derive(Debug, Clone)]
+enum Fabric {
+    Dense {
+        /// Column-major copy: wt[j * n + i] = W[i][j].
+        wt: Vec<i32>,
+    },
+    /// CSR nonzeros only.  The matrix must be symmetric so row `j`
+    /// doubles as column `j` (asserted at construction).
+    Sparse(SparseWeights),
+}
+
 /// Reusable engine for one (config, weights) pair.
 ///
-/// Holds the transposed weight matrix so the incremental column updates
-/// are cache-friendly, plus scratch buffers so the hot loop is
-/// allocation-free.
+/// Dense fabrics hold the transposed weight matrix so the incremental
+/// column updates are cache-friendly; sparse fabrics walk CSR rows.
+/// Scratch buffers keep the hot loop allocation-free either way.
 #[derive(Debug, Clone)]
 pub struct FunctionalEngine {
     pub cfg: NetworkConfig,
-    w: WeightMatrix,
-    /// Column-major copy: wt[j * n + i] = W[i][j].
-    wt: Vec<i32>,
+    fabric: Fabric,
     /// templates[k * P + t] = +-1 square wave of phase k at tick t —
     /// precomputed so the snap loop avoids per-element rem_euclid.
     templates: Vec<i8>,
@@ -136,13 +151,31 @@ impl FunctionalEngine {
     pub fn new(cfg: NetworkConfig, w: WeightMatrix) -> Self {
         assert_eq!(cfg.n, w.n, "config/weights size mismatch");
         let n = cfg.n;
-        let p = cfg.period();
         let mut wt = vec![0i32; n * n];
         for i in 0..n {
             for j in 0..n {
                 wt[j * n + i] = w.get(i, j) as i32;
             }
         }
+        Self::with_fabric(cfg, Fabric::Dense { wt })
+    }
+
+    /// Sparse-fabric engine: per-period work scales with the stored
+    /// nonzeros instead of n^2.  Requires a symmetric matrix — the
+    /// incremental kernel reads *columns*, and symmetry is what lets it
+    /// read CSR rows instead.
+    pub fn new_sparse(cfg: NetworkConfig, w: SparseWeights) -> Self {
+        assert_eq!(cfg.n, w.n(), "config/weights size mismatch");
+        assert!(
+            w.is_symmetric(),
+            "sparse fabric requires a symmetric matrix"
+        );
+        Self::with_fabric(cfg, Fabric::Sparse(w))
+    }
+
+    fn with_fabric(cfg: NetworkConfig, fabric: Fabric) -> Self {
+        let n = cfg.n;
+        let p = cfg.period();
         let mut templates = vec![0i8; p * p];
         for k in 0..p {
             for t in 0..p {
@@ -151,8 +184,7 @@ impl FunctionalEngine {
         }
         Self {
             cfg,
-            w,
-            wt,
+            fabric,
             templates,
             sums: vec![0; n],
             refsig: vec![0; n * p],
@@ -161,8 +193,9 @@ impl FunctionalEngine {
         }
     }
 
-    pub fn weights(&self) -> &WeightMatrix {
-        &self.w
+    /// True when this engine runs on the CSR fabric.
+    pub fn is_sparse(&self) -> bool {
+        matches!(self.fabric, Fabric::Sparse(_))
     }
 
     /// Install (or clear, with `None`) the annealing phase noise.  The
@@ -196,14 +229,32 @@ impl FunctionalEngine {
         self.sums.iter_mut().for_each(|s| *s = 0);
         for j in 0..n {
             let sj = amplitude(phases[j], 0, p);
-            let col = &self.wt[j * n..(j + 1) * n];
-            if sj > 0 {
-                for i in 0..n {
-                    self.sums[i] += col[i];
+            match &self.fabric {
+                Fabric::Dense { wt, .. } => {
+                    let col = &wt[j * n..(j + 1) * n];
+                    if sj > 0 {
+                        for i in 0..n {
+                            self.sums[i] += col[i];
+                        }
+                    } else {
+                        for i in 0..n {
+                            self.sums[i] -= col[i];
+                        }
+                    }
                 }
-            } else {
-                for i in 0..n {
-                    self.sums[i] -= col[i];
+                Fabric::Sparse(sw) => {
+                    // Column j == row j (symmetric fabric); only the
+                    // stored entries can move an integer sum.
+                    let (cols, vals) = sw.row(j);
+                    if sj > 0 {
+                        for (&i, &v) in cols.iter().zip(vals) {
+                            self.sums[i as usize] += v as i32;
+                        }
+                    } else {
+                        for (&i, &v) in cols.iter().zip(vals) {
+                            self.sums[i as usize] -= v as i32;
+                        }
+                    }
                 }
             }
         }
@@ -229,17 +280,33 @@ impl FunctionalEngine {
         for t in 0..pu {
             if t != 0 {
                 // apply flips scheduled at t: s_j jumps by 2*newsign
-                // Split borrows: flips is read, sums is written.
+                // Split borrows: fabric/flips are read, sums is written.
                 let (sums, flips) = (&mut self.sums, &self.flips[t]);
                 for &(j, news) in flips {
-                    let col = &self.wt[j * n..(j + 1) * n];
-                    if news > 0 {
-                        for i in 0..n {
-                            sums[i] += 2 * col[i];
+                    match &self.fabric {
+                        Fabric::Dense { wt, .. } => {
+                            let col = &wt[j * n..(j + 1) * n];
+                            if news > 0 {
+                                for i in 0..n {
+                                    sums[i] += 2 * col[i];
+                                }
+                            } else {
+                                for i in 0..n {
+                                    sums[i] -= 2 * col[i];
+                                }
+                            }
                         }
-                    } else {
-                        for i in 0..n {
-                            sums[i] -= 2 * col[i];
+                        Fabric::Sparse(sw) => {
+                            let (cols, vals) = sw.row(j);
+                            if news > 0 {
+                                for (&i, &v) in cols.iter().zip(vals) {
+                                    sums[i as usize] += 2 * v as i32;
+                                }
+                            } else {
+                                for (&i, &v) in cols.iter().zip(vals) {
+                                    sums[i as usize] -= 2 * v as i32;
+                                }
+                            }
                         }
                     }
                 }
@@ -597,6 +664,71 @@ mod tests {
         assert_eq!(eng.noise_tick(), 15, "3 slots x 5 periods");
         eng.set_noise(Some(PhaseNoise::new(0.5, 3)));
         assert_eq!(eng.noise_tick(), 0, "reinstall restarts the stream");
+    }
+
+    fn rand_symmetric_sparse(rng: &mut Rng, n: usize, density: f64) -> WeightMatrix {
+        let mut w = WeightMatrix::zeros(n);
+        for i in 0..n {
+            for j in 0..i {
+                if rng.f64() < density {
+                    let v = rng.range_i64(-16, 16) as i8;
+                    w.set(i, j, v);
+                    w.set(j, i, v);
+                }
+            }
+        }
+        w
+    }
+
+    #[test]
+    fn sparse_fabric_matches_dense_every_period() {
+        let mut rng = Rng::new(91);
+        for n in [1, 2, 7, 19, 40] {
+            for density in [0.0, 0.05, 0.3, 1.0] {
+                let cfg = NetworkConfig::paper(n);
+                let w = rand_symmetric_sparse(&mut rng, n, density);
+                let sw = crate::onn::sparse::SparseWeights::from_dense(&w);
+                let mut dense = FunctionalEngine::new(cfg, w);
+                let mut sparse = FunctionalEngine::new_sparse(cfg, sw);
+                assert!(sparse.is_sparse() && !dense.is_sparse());
+                let ph0 = rand_phases(&mut rng, n, 16);
+                let (mut a, mut b) = (ph0.clone(), ph0);
+                for step in 0..6 {
+                    dense.period_step(&mut a);
+                    sparse.period_step(&mut b);
+                    assert_eq!(a, b, "n={n} density={density} step={step}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_fabric_matches_dense_under_noise() {
+        let mut rng = Rng::new(92);
+        let n = 17;
+        let cfg = NetworkConfig::paper(n);
+        let w = rand_symmetric_sparse(&mut rng, n, 0.2);
+        let sw = crate::onn::sparse::SparseWeights::from_dense(&w);
+        let mut dense = FunctionalEngine::new(cfg, w);
+        let mut sparse = FunctionalEngine::new_sparse(cfg, sw);
+        let seed = rng.next_u64();
+        dense.set_noise(Some(PhaseNoise::new(0.7, seed)));
+        sparse.set_noise(Some(PhaseNoise::new(0.7, seed)));
+        let ph0 = rand_phases(&mut rng, n, 16);
+        let (mut a, mut b) = (ph0.clone(), ph0);
+        for step in 0..12 {
+            dense.period_step(&mut a);
+            sparse.period_step(&mut b);
+            assert_eq!(a, b, "step={step}");
+        }
+        assert_eq!(dense.noise_tick(), sparse.noise_tick());
+    }
+
+    #[test]
+    #[should_panic(expected = "symmetric")]
+    fn sparse_fabric_rejects_asymmetry() {
+        let sw = crate::onn::sparse::SparseWeights::from_triplets(3, &[(0, 1, 4)]).unwrap();
+        let _ = FunctionalEngine::new_sparse(NetworkConfig::paper(3), sw);
     }
 
     #[test]

@@ -7,4 +7,5 @@ pub mod energy;
 pub mod learning;
 pub mod patterns;
 pub mod phase;
+pub mod sparse;
 pub mod weights;

@@ -1,0 +1,288 @@
+//! CSR sparse coupling fabric — the quantized weight store behind the
+//! sparse period kernel (DESIGN_SOLVER.md §11).
+//!
+//! Every dense engine pays O(N^2) memory and per-period work even when
+//! the coupling graph is sparse, which is the regime real optimization
+//! traffic lives in (the wire format accepts `"edges"` input).  This
+//! module stores only the nonzeros in compressed-sparse-row form: for
+//! row `i`, `cols[row_ptr[i]..row_ptr[i+1]]` are the column indices
+//! (sorted ascending) and `vals[..]` the matching quantized couplings.
+//! It is the software analog of the tunable-topology coupled-oscillator
+//! ICs (Neyaz et al., PAPERS.md): only the routed couplings exist.
+//!
+//! The engines require the matrix to be **symmetric** (structure and
+//! values).  That is what lets one CSR serve both access patterns the
+//! kernels need: the incremental engine walks *column* `j` when
+//! oscillator `j` flips, and for a symmetric matrix column `j` is row
+//! `j`.  Quantized Ising embeddings are always symmetric (the problem
+//! IR validates `J_ik == J_ki`, and quantization maps equal entries to
+//! equal codes), so the requirement costs nothing on the solve path.
+//!
+//! Explicit zeros are allowed and kept: an edge whose master coupling
+//! rounds to 0 at the configured precision stays a *structural* nonzero,
+//! so the sparsity pattern is a property of the problem graph, not of
+//! the quantization scale.
+
+use anyhow::{anyhow, Result};
+
+use crate::onn::weights::WeightMatrix;
+
+/// Quantized couplings in compressed-sparse-row form.  Row-major entry
+/// order (row, then ascending column) is part of the contract: the
+/// quantization-error accumulation in
+/// `solver::problem::IsingProblem::embed_sparse_with_error` relies on it
+/// to reproduce the dense reduction order bit-for-bit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparseWeights {
+    n: usize,
+    /// `row_ptr[i]..row_ptr[i+1]` indexes row i's entries; len n + 1.
+    row_ptr: Vec<usize>,
+    /// Column indices, ascending within each row (u32: the wire caps n
+    /// far below 2^32, and half-width indices halve the index memory —
+    /// the point of the exercise).
+    cols: Vec<u32>,
+    vals: Vec<i8>,
+}
+
+impl SparseWeights {
+    /// Build from (row, col, value) triplets.  Triplets may arrive in
+    /// any order; they are sorted row-major internally.  Duplicate
+    /// (row, col) coordinates and out-of-range indices are rejected.
+    /// Symmetry is NOT implied — callers that hand the result to an
+    /// engine must supply both orientations ([`Self::is_symmetric`]
+    /// gates that at install time).
+    pub fn from_triplets(n: usize, triplets: &[(usize, usize, i8)]) -> Result<Self> {
+        let mut sorted: Vec<(usize, usize, i8)> = Vec::with_capacity(triplets.len());
+        for &(i, j, v) in triplets {
+            if i >= n || j >= n {
+                return Err(anyhow!("sparse entry ({i}, {j}) outside {n}x{n}"));
+            }
+            sorted.push((i, j, v));
+        }
+        sorted.sort_by_key(|&(i, j, _)| (i, j));
+        for w in sorted.windows(2) {
+            if w[0].0 == w[1].0 && w[0].1 == w[1].1 {
+                return Err(anyhow!(
+                    "duplicate sparse entry ({}, {})",
+                    w[0].0,
+                    w[0].1
+                ));
+            }
+        }
+        let mut row_ptr = vec![0usize; n + 1];
+        let mut cols = Vec::with_capacity(sorted.len());
+        let mut vals = Vec::with_capacity(sorted.len());
+        for &(i, j, v) in &sorted {
+            row_ptr[i + 1] += 1;
+            cols.push(j as u32);
+            vals.push(v);
+        }
+        for i in 0..n {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        Ok(Self {
+            n,
+            row_ptr,
+            cols,
+            vals,
+        })
+    }
+
+    /// Capture a dense matrix's nonzeros (row-major order).  Test and
+    /// migration helper — production sparse paths never densify.
+    pub fn from_dense(w: &WeightMatrix) -> Self {
+        let n = w.n;
+        let mut row_ptr = vec![0usize; n + 1];
+        let mut cols = Vec::new();
+        let mut vals = Vec::new();
+        for i in 0..n {
+            for (j, &v) in w.row(i).iter().enumerate() {
+                if v != 0 {
+                    cols.push(j as u32);
+                    vals.push(v);
+                }
+            }
+            row_ptr[i + 1] = cols.len();
+        }
+        Self {
+            n,
+            row_ptr,
+            cols,
+            vals,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Stored entries (structural nonzeros, both orientations counted).
+    pub fn nnz(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Row i's (columns, values) slices, columns ascending.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[i8]) {
+        let (a, b) = (self.row_ptr[i], self.row_ptr[i + 1]);
+        (&self.cols[a..b], &self.vals[a..b])
+    }
+
+    /// Entry (i, j), 0 when not stored (binary search within the row).
+    pub fn get(&self, i: usize, j: usize) -> i8 {
+        let (cols, vals) = self.row(i);
+        match cols.binary_search(&(j as u32)) {
+            Ok(k) => vals[k],
+            Err(_) => 0,
+        }
+    }
+
+    /// Stored fraction of the full n x n matrix.
+    pub fn density(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / (self.n * self.n) as f64
+        }
+    }
+
+    /// Mean stored entries per row — what the serial-MAC cost model
+    /// prices instead of N (`fpga::timing::oscillation_frequency_hybrid_sparse`).
+    pub fn avg_row_nnz(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / self.n as f64
+        }
+    }
+
+    /// Largest row span (worst-case serial-MAC latency across devices).
+    pub fn max_row_nnz(&self) -> usize {
+        (0..self.n)
+            .map(|i| self.row_ptr[i + 1] - self.row_ptr[i])
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Largest |value| (resource-model width checks).
+    pub fn max_abs(&self) -> i32 {
+        self.vals.iter().map(|&v| (v as i32).abs()).max().unwrap_or(0)
+    }
+
+    /// Bytes held by the CSR arrays — the memory the bench compares
+    /// against the dense fabric's `n^2 * (1 + 4)` (i8 matrix + i32
+    /// transpose).
+    pub fn memory_bytes(&self) -> usize {
+        self.row_ptr.len() * std::mem::size_of::<usize>()
+            + self.cols.len() * std::mem::size_of::<u32>()
+            + self.vals.len() * std::mem::size_of::<i8>()
+    }
+
+    /// True when entry (i, j) == entry (j, i) for every stored
+    /// coordinate — the engine-install precondition (one CSR serves as
+    /// both row and column store).
+    pub fn is_symmetric(&self) -> bool {
+        for i in 0..self.n {
+            let (cols, vals) = self.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                if self.get(c as usize, i) != v {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Every stored value, with its coordinates, in row-major order.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, usize, i8)> + '_ {
+        (0..self.n).flat_map(move |i| {
+            let (cols, vals) = self.row(i);
+            cols.iter()
+                .zip(vals)
+                .map(move |(&c, &v)| (i, c as usize, v))
+        })
+    }
+
+    /// Densify (tests and the dense-fallback embed path).
+    pub fn to_dense(&self) -> WeightMatrix {
+        let mut w = WeightMatrix::zeros(self.n);
+        for (i, j, v) in self.iter() {
+            w.set(i, j, v);
+        }
+        w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csr_layout_and_lookup() {
+        let sw = SparseWeights::from_triplets(
+            4,
+            &[(2, 0, -3), (0, 2, -3), (1, 3, 7), (3, 1, 7), (0, 3, 1), (3, 0, 1)],
+        )
+        .unwrap();
+        assert_eq!(sw.n(), 4);
+        assert_eq!(sw.nnz(), 6);
+        assert_eq!(sw.get(0, 2), -3);
+        assert_eq!(sw.get(2, 0), -3);
+        assert_eq!(sw.get(1, 3), 7);
+        assert_eq!(sw.get(0, 1), 0, "unstored entry reads 0");
+        let (cols, vals) = sw.row(0);
+        assert_eq!(cols, &[2, 3], "columns ascend within a row");
+        assert_eq!(vals, &[-3, 1]);
+        assert!(sw.is_symmetric());
+        assert_eq!(sw.max_row_nnz(), 2);
+        assert!((sw.density() - 6.0 / 16.0).abs() < 1e-12);
+        assert!((sw.avg_row_nnz() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_duplicates_and_out_of_range() {
+        assert!(SparseWeights::from_triplets(3, &[(0, 1, 1), (0, 1, 2)]).is_err());
+        assert!(SparseWeights::from_triplets(3, &[(0, 3, 1)]).is_err());
+        assert!(SparseWeights::from_triplets(3, &[(3, 0, 1)]).is_err());
+        // Same coordinate pair in both orientations is fine (symmetry).
+        assert!(SparseWeights::from_triplets(3, &[(0, 1, 1), (1, 0, 1)]).is_ok());
+    }
+
+    #[test]
+    fn asymmetry_detected() {
+        let sw = SparseWeights::from_triplets(3, &[(0, 1, 1)]).unwrap();
+        assert!(!sw.is_symmetric(), "missing transpose entry");
+        let sw = SparseWeights::from_triplets(3, &[(0, 1, 1), (1, 0, 2)]).unwrap();
+        assert!(!sw.is_symmetric(), "value mismatch");
+    }
+
+    #[test]
+    fn dense_round_trip() {
+        let mut w = WeightMatrix::zeros(5);
+        w.set(0, 4, -16);
+        w.set(4, 0, -16);
+        w.set(2, 3, 15);
+        w.set(3, 2, 15);
+        w.set(1, 1, 5);
+        let sw = SparseWeights::from_dense(&w);
+        assert_eq!(sw.nnz(), 5);
+        assert!(sw.is_symmetric());
+        assert_eq!(sw.to_dense(), w);
+        assert_eq!(sw.max_abs(), 16);
+    }
+
+    #[test]
+    fn explicit_zeros_are_structural() {
+        let sw = SparseWeights::from_triplets(2, &[(0, 1, 0), (1, 0, 0)]).unwrap();
+        assert_eq!(sw.nnz(), 2, "quantized-to-zero edges keep their slot");
+        assert_eq!(sw.get(0, 1), 0);
+        assert!(sw.is_symmetric());
+    }
+
+    #[test]
+    fn memory_is_linear_in_nnz() {
+        let sw = SparseWeights::from_triplets(1000, &[(0, 999, 1), (999, 0, 1)]).unwrap();
+        let dense_bytes = 1000 * 1000 * (1 + 4);
+        assert!(sw.memory_bytes() * 100 < dense_bytes, "CSR must be tiny here");
+    }
+}

@@ -21,6 +21,7 @@ pub mod sharded;
 use anyhow::{anyhow, Result};
 
 use crate::onn::config::NetworkConfig;
+use crate::onn::sparse::SparseWeights;
 use crate::onn::weights::WeightMatrix;
 
 /// Validate an f32 weight payload (length n^2, integer-valued entries
@@ -47,6 +48,33 @@ pub(crate) fn checked_weights(cfg: &NetworkConfig, w_f32: &[f32]) -> Result<Weig
         }
     }
     Ok(w)
+}
+
+/// Validate a quantized CSR payload against the engine geometry: size
+/// match, every stored value inside the config's signed weight range,
+/// and symmetry (structure + values — the sparse kernels read rows as
+/// columns).  The native and sharded fabrics both install sparse
+/// weights through this one gate, mirroring [`checked_weights`] so the
+/// two fabrics accept exactly the same matrices.
+pub(crate) fn checked_sparse_weights(cfg: &NetworkConfig, w: &SparseWeights) -> Result<()> {
+    if w.n() != cfg.n {
+        return Err(anyhow!(
+            "sparse weights are {0}x{0}, engine wants {1}x{1}",
+            w.n(),
+            cfg.n
+        ));
+    }
+    let (lo, hi) = cfg.weight_range();
+    for (i, j, v) in w.iter() {
+        let v = v as i32;
+        if v < lo || v > hi {
+            return Err(anyhow!("weight [{i}][{j}] = {v} outside {lo}..={hi}"));
+        }
+    }
+    if !w.is_symmetric() {
+        return Err(anyhow!("sparse weights must be symmetric"));
+    }
+    Ok(())
 }
 
 /// Emulated hardware cost of a solve, as reported by an engine that
@@ -99,6 +127,23 @@ pub trait ChunkEngine {
     /// used by the annealed solver (`solver::portfolio`).
     fn supports_noise(&self) -> bool {
         false
+    }
+
+    /// True when the engine can run a CSR sparse coupling fabric
+    /// ([`onn::sparse::SparseWeights`]) — per-period work and weight
+    /// memory scale with the nonzeros instead of n^2, bit-identical to
+    /// the dense fabric on the same matrix (DESIGN_SOLVER.md §11).
+    fn supports_sparse(&self) -> bool {
+        false
+    }
+
+    /// Install a sparse (CSR) weight fabric used by subsequent
+    /// `run_chunk` calls.  Like `set_weights` this replaces the whole
+    /// fabric: lane blocks are cleared and any installed noise stream
+    /// restarts on reinstall.  Engines without a sparse kernel (pjrt,
+    /// rtl) refuse; callers fall back to the dense path.
+    fn set_weights_sparse(&mut self, _w: &SparseWeights) -> Result<()> {
+        Err(anyhow!("{} engine has no sparse fabric", self.kind()))
     }
 
     /// Set the phase-noise amplitude in `[0, 1]` for subsequent

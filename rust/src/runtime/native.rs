@@ -125,6 +125,20 @@ impl ChunkEngine for NativeEngine {
         Ok(())
     }
 
+    fn supports_sparse(&self) -> bool {
+        true
+    }
+
+    fn set_weights_sparse(&mut self, w: &crate::onn::sparse::SparseWeights) -> Result<()> {
+        crate::runtime::checked_sparse_weights(&self.cfg, w)?;
+        // Same lifecycle as the dense gate: whole-batch programming
+        // retires every lane block and restarts the noise stream.
+        self.blocks.clear();
+        self.inner = Some(FunctionalEngine::new_sparse(self.cfg, w.clone()));
+        self.apply_noise();
+        Ok(())
+    }
+
     fn run_chunk(&mut self, phases: &mut [i32], settled: &mut [i32], period0: i32) -> Result<()> {
         let t0 = self.trace.as_ref().map(|_| std::time::Instant::now());
         self.run_chunk_inner(phases, settled, period0)?;
@@ -263,6 +277,60 @@ mod tests {
         let mut st2 = vec![-1i32; 2];
         e.run_chunk(&mut ph2, &mut st2, 0).unwrap();
         assert_eq!(ph2, init);
+    }
+
+    #[test]
+    fn sparse_install_matches_dense_install() {
+        use crate::onn::sparse::SparseWeights;
+        let n = 6;
+        let cfg = NetworkConfig::paper(n);
+        let mut rng = Rng::new(44);
+        let mut w = crate::onn::weights::WeightMatrix::zeros(n);
+        for i in 0..n {
+            for j in 0..i {
+                if rng.f64() < 0.4 {
+                    let v = rng.range_i64(-8, 9) as i8;
+                    w.set(i, j, v);
+                    w.set(j, i, v);
+                }
+            }
+        }
+        let sw = SparseWeights::from_dense(&w);
+        let init: Vec<i32> = (0..3 * n).map(|_| rng.range_i64(0, 16) as i32).collect();
+        let seed = rng.next_u64();
+
+        let mut dense = NativeEngine::new(cfg, 3, 4);
+        dense.set_weights(&w.to_f32()).unwrap();
+        dense.set_noise(0.6, seed).unwrap();
+        let mut dp = init.clone();
+        let mut ds = vec![-1i32; 3];
+        dense.run_chunk(&mut dp, &mut ds, 0).unwrap();
+
+        let mut sparse = NativeEngine::new(cfg, 3, 4);
+        assert!(sparse.supports_sparse());
+        sparse.set_weights_sparse(&sw).unwrap();
+        sparse.set_noise(0.6, seed).unwrap();
+        let mut sp = init.clone();
+        let mut ss = vec![-1i32; 3];
+        sparse.run_chunk(&mut sp, &mut ss, 0).unwrap();
+
+        assert_eq!(dp, sp, "sparse fabric diverged from dense");
+        assert_eq!(ds, ss);
+    }
+
+    #[test]
+    fn sparse_install_gate_rejects_bad_fabrics() {
+        use crate::onn::sparse::SparseWeights;
+        let mut e = NativeEngine::new(NetworkConfig::paper(3), 1, 4);
+        // Wrong size.
+        let sw = SparseWeights::from_triplets(4, &[(0, 1, 1), (1, 0, 1)]).unwrap();
+        assert!(e.set_weights_sparse(&sw).is_err());
+        // Asymmetric.
+        let sw = SparseWeights::from_triplets(3, &[(0, 1, 1)]).unwrap();
+        assert!(e.set_weights_sparse(&sw).is_err());
+        // In-range symmetric installs fine.
+        let sw = SparseWeights::from_triplets(3, &[(0, 1, -16), (1, 0, -16)]).unwrap();
+        assert!(e.set_weights_sparse(&sw).is_ok());
     }
 
     #[test]

@@ -19,6 +19,7 @@
 //! from the seed plus its row offset.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Result};
@@ -26,16 +27,30 @@ use anyhow::{anyhow, Result};
 use crate::onn::config::NetworkConfig;
 use crate::onn::dynamics::PhaseNoise;
 use crate::onn::phase::{amplitude, wrap};
+use crate::onn::sparse::SparseWeights;
 use crate::onn::weights::WeightMatrix;
 use crate::runtime::ChunkEngine;
 use crate::telemetry::{TraceEvent, TraceSink};
+
+/// A shard's view of the weight matrix: its dense row slice, or a
+/// shared handle to the whole CSR fabric (sharding a CSR by row ranges
+/// needs no copying — each shard walks the rows it owns).  Either way
+/// the per-row arithmetic is the same order-independent integer sum, so
+/// the sharded trajectory stays bit-exact with the single engine on
+/// both fabrics.
+enum ShardWeights {
+    /// Row-slice of W, row-major `rows x n`.
+    Dense(Vec<i8>),
+    /// Whole symmetric CSR matrix; this shard reads only its global row
+    /// range.
+    Sparse(Arc<SparseWeights>),
+}
 
 /// One shard: rows `[row0, row0 + rows)` of the weight matrix.
 struct ShardSpec {
     row0: usize,
     rows: usize,
-    /// Row-slice of W, row-major `rows x n`.
-    w: Vec<i8>,
+    w: ShardWeights,
 }
 
 enum ShardMsg {
@@ -48,6 +63,10 @@ enum ShardMsg {
     /// Reprogram this shard's row slice of the weight matrix (also
     /// drops every lane block: whole-batch mode).
     SetWeights(Vec<i8>),
+    /// Reprogram the cluster with a shared CSR fabric (also drops every
+    /// lane block).  One Arc serves all shards; each reads its own row
+    /// range.
+    SetWeightsSparse(Arc<SparseWeights>),
     /// (Re)program this shard's row slice of one lane block's matrix;
     /// any noise the block carried is discarded (fresh stream).
     SetBlockWeights(usize, Vec<i8>),
@@ -147,7 +166,7 @@ impl ShardedEngine {
             let spec = ShardSpec {
                 row0,
                 rows,
-                w: slice,
+                w: ShardWeights::Dense(slice),
             };
             let (tx, shard_rx) = channel::<ShardMsg>();
             let (reply_tx, rx) = channel::<Vec<i32>>();
@@ -331,6 +350,19 @@ impl Drop for ShardedEngine {
     }
 }
 
+/// Reference-waveform sign rule shared by both fabrics: the sign of the
+/// weighted sum, falling back to the oscillator's own amplitude on 0.
+#[inline]
+fn ref_sign(sum: i32, own: i8) -> i8 {
+    if sum > 0 {
+        1
+    } else if sum < 0 {
+        -1
+    } else {
+        own
+    }
+}
+
 /// One shard's slice of a synchronous period: the reference waveform +
 /// phase snap for `spec`'s rows from the broadcast state, plus the
 /// annealing kick derived from `(seed, tick, global row index)` — the
@@ -355,24 +387,34 @@ fn shard_step(
     }
     let mut out = Vec::with_capacity(spec.rows);
     for r in 0..spec.rows {
-        let row = &spec.w[r * n..(r + 1) * n];
         let gi = spec.row0 + r; // global oscillator index
         // reference waveform for oscillator gi
         let mut best_key = i32::MIN;
         let mut best_k = 0i32;
         let mut refsig = [0i8; 64];
-        for t in 0..p {
-            let mut sum = 0i32;
-            for j in 0..n {
-                sum += row[j] as i32 * s[j * p + t] as i32;
+        // Same order-independent integer sum on both fabrics; the CSR
+        // walk just skips the entries that contribute 0.
+        match &spec.w {
+            ShardWeights::Dense(w) => {
+                let row = &w[r * n..(r + 1) * n];
+                for (t, rt) in refsig.iter_mut().enumerate().take(p) {
+                    let mut sum = 0i32;
+                    for j in 0..n {
+                        sum += row[j] as i32 * s[j * p + t] as i32;
+                    }
+                    *rt = ref_sign(sum, s[gi * p + t]);
+                }
             }
-            refsig[t] = if sum > 0 {
-                1
-            } else if sum < 0 {
-                -1
-            } else {
-                s[gi * p + t]
-            };
+            ShardWeights::Sparse(sw) => {
+                let (cols, vals) = sw.row(gi);
+                for (t, rt) in refsig.iter_mut().enumerate().take(p) {
+                    let mut sum = 0i32;
+                    for (&j, &v) in cols.iter().zip(vals) {
+                        sum += v as i32 * s[j as usize * p + t] as i32;
+                    }
+                    *rt = ref_sign(sum, s[gi * p + t]);
+                }
+            }
         }
         for k in 0..pi {
             let trow = &templates[k as usize * p..(k as usize + 1) * p];
@@ -443,7 +485,13 @@ fn shard_loop(
             }
             Ok(ShardMsg::SetWeights(w)) => {
                 debug_assert_eq!(w.len(), spec.rows * n);
-                spec.w = w;
+                spec.w = ShardWeights::Dense(w);
+                blocks.clear();
+                continue;
+            }
+            Ok(ShardMsg::SetWeightsSparse(sw)) => {
+                debug_assert_eq!(sw.n(), n);
+                spec.w = ShardWeights::Sparse(sw);
                 blocks.clear();
                 continue;
             }
@@ -457,7 +505,7 @@ fn shard_loop(
                     spec: ShardSpec {
                         row0: spec.row0,
                         rows: spec.rows,
-                        w,
+                        w: ShardWeights::Dense(w),
                     },
                     noise: None,
                 });
@@ -517,6 +565,29 @@ impl ChunkEngine for ShardedEngine {
         // restarts the kick stream; mirror that here.  Whole-batch
         // programming also retires every lane block (shards drop theirs
         // in the SetWeights handler).
+        self.tick = 0;
+        self.blocks.clear();
+        self.whole_batch_stale = false;
+        Ok(())
+    }
+
+    fn supports_sparse(&self) -> bool {
+        true
+    }
+
+    fn set_weights_sparse(&mut self, w: &SparseWeights) -> Result<()> {
+        // Same gate as the native fabric; the CSR is shared read-only
+        // across shards (one Arc, each worker walking its own global
+        // row range), so sharding needs no per-shard slicing at all.
+        crate::runtime::checked_sparse_weights(&self.cfg, w)?;
+        let shared = Arc::new(w.clone());
+        for sh in &self.shards {
+            sh.tx
+                .send(ShardMsg::SetWeightsSparse(shared.clone()))
+                .map_err(|_| anyhow!("shard died"))?;
+        }
+        // Identical reload lifecycle to the dense path: kick stream
+        // restarts, lane blocks retire, whole-batch mode resumes.
         self.tick = 0;
         self.blocks.clear();
         self.whole_batch_stale = false;
@@ -759,6 +830,46 @@ mod tests {
             sharded.set_weights(&w_f32).unwrap();
             native.set_noise(0.7, 42).unwrap();
             sharded.set_noise(0.7, 42).unwrap();
+            let init: Vec<i32> = (0..b * n).map(|_| rng.range_i64(0, 16) as i32).collect();
+            let (mut pa, mut pb) = (init.clone(), init);
+            let (mut sa, mut sb) = (vec![-1i32; b], vec![-1i32; b]);
+            for chunk in 0..3 {
+                native.run_chunk(&mut pa, &mut sa, chunk * 4).unwrap();
+                sharded.run_chunk(&mut pb, &mut sb, chunk * 4).unwrap();
+                assert_eq!(pa, pb, "shards={shards} chunk={chunk}");
+                assert_eq!(sa, sb, "shards={shards} chunk={chunk}");
+            }
+            sharded.shutdown();
+        }
+    }
+
+    #[test]
+    fn sparse_fabric_bit_exact_with_native_sparse() {
+        use crate::runtime::native::NativeEngine;
+        let mut rng = Rng::new(93);
+        let n = 19;
+        let cfg = NetworkConfig::paper(n);
+        let mut w = WeightMatrix::zeros(n);
+        for i in 0..n {
+            for j in 0..i {
+                if rng.f64() < 0.25 {
+                    let v = rng.range_i64(-16, 16) as i8;
+                    w.set(i, j, v);
+                    w.set(j, i, v);
+                }
+            }
+        }
+        let sw = SparseWeights::from_dense(&w);
+        let b = 2usize;
+        // 4 does not divide 19: includes a non-dividing row split.
+        for shards in [1usize, 3, 4] {
+            let mut native = NativeEngine::new(cfg, b, 4);
+            let mut sharded = ShardedEngine::unprogrammed(cfg, shards, b, 4).unwrap();
+            assert!(sharded.supports_sparse());
+            native.set_weights_sparse(&sw).unwrap();
+            sharded.set_weights_sparse(&sw).unwrap();
+            native.set_noise(0.6, 77).unwrap();
+            sharded.set_noise(0.6, 77).unwrap();
             let init: Vec<i32> = (0..b * n).map(|_| rng.range_i64(0, 16) as i32).collect();
             let (mut pa, mut pb) = (init.clone(), init);
             let (mut sa, mut sb) = (vec![-1i32; b], vec![-1i32; b]);

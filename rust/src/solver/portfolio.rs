@@ -35,6 +35,26 @@ pub const DEFAULT_SHARD_THRESHOLD: usize = 256;
 /// Default cap on shard workers per solve.
 pub const DEFAULT_MAX_SHARDS: usize = 8;
 
+/// Coupling densities at or below this fraction route a sparse-form
+/// problem onto the engine's CSR fabric (when the engine has one).
+/// Above it the dense kernel wins: the sparse inner loop pays an index
+/// indirection per nonzero, which a quarter-full matrix already
+/// amortizes away, and the dense fabric is the fleet-wide common case
+/// the arena keeps warm.
+pub const SPARSE_DENSITY_THRESHOLD: f64 = 0.25;
+
+/// True when a solve of `problem` should install a CSR sparse fabric:
+/// the problem is in sparse coupling form (built via
+/// [`IsingProblem::from_edges`] — the wire's `"edges"` requests) AND its
+/// density is at or below [`SPARSE_DENSITY_THRESHOLD`].  Field problems
+/// stay eligible: the ancilla row/column adds at most `2n` entries.
+/// The answer is a pure function of the problem, so every layer
+/// (portfolio install, arena keying, pack planner) agrees on which
+/// fabric a request lands on.
+pub fn wants_sparse(problem: &IsingProblem) -> bool {
+    problem.is_sparse() && problem.coupling_density() <= SPARSE_DENSITY_THRESHOLD
+}
+
 /// Replicas driven per engine wave: the solo portfolio caps one batch
 /// at this many random-init trials (more replicas run as extra waves),
 /// and a packed lane block carries at most this many lanes, so packed
@@ -198,6 +218,11 @@ pub struct SolveOutcome {
     /// `WeightMatrix::quantize` at the engine's precision, as a fraction
     /// of the quantization full scale (0 = exactly representable).
     pub quantization_error: f64,
+    /// True when the solve ran on the engine's CSR sparse fabric
+    /// (sparse-form problem at or under [`SPARSE_DENSITY_THRESHOLD`] on
+    /// a sparse-capable engine).  Bit-identical answers either way —
+    /// this reports which kernel did the work.
+    pub sparse: bool,
     /// Emulated hardware cost of the solve — present only when the
     /// engine models the synthesized design (the rtl engine).
     pub hardware: Option<HardwareCost>,
@@ -312,8 +337,23 @@ pub fn solve_portfolio_hooked(
             cfg.period()
         ));
     }
-    let (wq, quantization_error) = problem.embed_with_error(&cfg);
-    engine.set_weights(&wq.to_f32())?;
+    // Fabric selection: sparse-form problems under the density
+    // threshold install straight into the engine's CSR kernel — no n^2
+    // materialization anywhere on the path.  The sparse quantizer is
+    // bit-exact with the dense one (same f32 scale, same row-major
+    // rounding walk), and the sparse period kernel is bit-identical to
+    // the dense kernel on the same matrix, so this choice never changes
+    // an answer (rust/tests/prop_sparse.rs holds the proof obligation).
+    let use_sparse = wants_sparse(problem) && engine.supports_sparse();
+    let quantization_error = if use_sparse {
+        let (sw, qe) = problem.embed_sparse_with_error(&cfg);
+        engine.set_weights_sparse(&sw)?;
+        qe
+    } else {
+        let (wq, qe) = problem.embed_with_error(&cfg);
+        engine.set_weights(&wq.to_f32())?;
+        qe
+    };
     // Warm engines carry sync rounds from earlier solves (set_weights
     // reprograms without resetting the counter), so report this solve's
     // delta — on a cold engine the baseline is 0 and nothing changes.
@@ -526,6 +566,7 @@ pub fn solve_portfolio_hooked(
         engine: engine.kind(),
         sync_rounds: engine.sync_rounds() - sync0,
         quantization_error,
+        sparse: use_sparse,
         hardware: engine.hardware_cost(),
     })
 }
@@ -845,6 +886,9 @@ fn finish_lane(
         engine: engine.kind(),
         sync_rounds,
         quantization_error: lane.quantization_error,
+        // Lane blocks carry dense per-block matrices (the zero-padded
+        // layout is the packing invariant); sparse problems solve solo.
+        sparse: false,
         // Lane-block fabrics are float engines; no hardware model.
         hardware: None,
     }
@@ -1384,6 +1428,77 @@ mod tests {
             assert_eq!(out.settled_replicas, solo.settled_replicas);
             assert_eq!(out.replica_phases, solo.replica_phases);
         }
+    }
+
+    #[test]
+    fn sparse_fabric_solves_bit_identically_to_dense() {
+        // Same graph, dense-form vs sparse-form problem, same seed: the
+        // CSR fabric must reproduce the dense run bit for bit, on the
+        // native engine and on a sharded cluster.
+        use crate::solver::reductions::max_cut_sparse;
+        let mut rng = Rng::new(76);
+        let g = Graph::random(18, 0.15, &mut rng);
+        let pd = max_cut(&g);
+        let ps = max_cut_sparse(&g);
+        assert!(wants_sparse(&ps), "density 0.15 is under the threshold");
+        assert!(!wants_sparse(&pd), "dense-form problems never route sparse");
+        let prm = params(6, 48, 23);
+        let dense = solve_native(&pd, &prm).unwrap();
+        let sparse = solve_native(&ps, &prm).unwrap();
+        assert!(!dense.sparse);
+        assert!(sparse.sparse, "sparse-form problem ran the CSR kernel");
+        assert_eq!(sparse.best_energy.to_bits(), dense.best_energy.to_bits());
+        assert_eq!(sparse.best_spins, dense.best_spins);
+        assert_eq!(sparse.best_phases, dense.best_phases);
+        assert_eq!(sparse.replica_phases, dense.replica_phases);
+        assert_eq!(sparse.periods, dense.periods);
+        assert_eq!(sparse.settled_replicas, dense.settled_replicas);
+        assert_eq!(
+            sparse.quantization_error.to_bits(),
+            dense.quantization_error.to_bits()
+        );
+        let sharded = solve_with(&ps, &prm, EngineSelect::Sharded { shards: 3 }).unwrap();
+        assert!(sharded.sparse);
+        assert_eq!(sharded.best_energy.to_bits(), dense.best_energy.to_bits());
+        assert_eq!(sharded.best_spins, dense.best_spins);
+        assert_eq!(sharded.replica_phases, dense.replica_phases);
+    }
+
+    #[test]
+    fn dense_sparse_form_problems_fall_back_above_threshold() {
+        // A sparse-form problem above the density threshold routes onto
+        // the dense fabric — same answer, dense kernel.
+        use crate::solver::problem::IsingProblem;
+        let n = 8;
+        let mut edges = Vec::new();
+        for i in 0..n {
+            for k in (i + 1)..n {
+                edges.push((i, k, if (i + k) % 2 == 0 { 1.0 } else { -1.0 }));
+            }
+        }
+        let ps = IsingProblem::from_edges(n, &edges).unwrap();
+        assert!(!wants_sparse(&ps), "complete graph exceeds the threshold");
+        let mut pd = IsingProblem::new(n);
+        for &(i, k, v) in &edges {
+            pd.set_j(i, k, v);
+        }
+        let prm = params(4, 32, 29);
+        let sparse_form = solve_native(&ps, &prm).unwrap();
+        let dense_form = solve_native(&pd, &prm).unwrap();
+        assert!(!sparse_form.sparse, "above threshold the dense kernel runs");
+        assert_eq!(
+            sparse_form.best_energy.to_bits(),
+            dense_form.best_energy.to_bits()
+        );
+        assert_eq!(sparse_form.best_spins, dense_form.best_spins);
+        // The rtl engine has no sparse fabric; sparse-form problems
+        // under the threshold still solve there via the dense fallback.
+        let g = Graph::complete_bipartite(3, 3);
+        let sp = crate::solver::reductions::max_cut_sparse(&g);
+        assert!(wants_sparse(&sp));
+        let rtl = solve_with(&sp, &params(4, 32, 13), EngineSelect::Rtl).unwrap();
+        assert!(!rtl.sparse, "rtl cannot run CSR; dense fallback");
+        assert_eq!(g.cut_value(&rtl.best_spins), 9);
     }
 
     #[test]

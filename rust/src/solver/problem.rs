@@ -14,7 +14,84 @@
 use crate::onn::config::NetworkConfig;
 use crate::onn::energy::waveform_correlation;
 use crate::onn::phase::{phase_to_spin, state_to_spins};
+use crate::onn::sparse::SparseWeights;
 use crate::onn::weights::WeightMatrix;
+
+/// CSR coupling storage for sparse problems (both orientations stored,
+/// rows sorted by column).  Values are exact f64 copies of the edge
+/// weights; the undirected edge list it was built from is recoverable
+/// as the upper triangle.  Construction is the only mutation path —
+/// [`IsingProblem::from_edges`] rejects duplicates and self-loops up
+/// front, so a sparse problem is always structurally valid.
+#[derive(Debug, Clone)]
+pub struct SparseCoupling {
+    /// `row_ptr[i]..row_ptr[i+1]` indexes row i's entries; len n + 1.
+    row_ptr: Vec<usize>,
+    /// Column indices, ascending within each row.
+    cols: Vec<u32>,
+    vals: Vec<f64>,
+}
+
+impl SparseCoupling {
+    fn from_edges(n: usize, edges: &[(usize, usize, f64)]) -> Result<Self, String> {
+        let mut rows: Vec<Vec<(u32, f64)>> = vec![Vec::new(); n];
+        let mut seen = std::collections::HashSet::with_capacity(edges.len());
+        for &(i, k, v) in edges {
+            if i >= n || k >= n {
+                return Err(format!("edge ({i}, {k}) outside 0..{n}"));
+            }
+            if i == k {
+                return Err(format!(
+                    "self-loop edge ({i}, {i}): diagonal couplings are ignored; use h for biases"
+                ));
+            }
+            // One undirected pair, one entry — (i, k) and (k, i) name
+            // the same coupling, so a repeat in either orientation is a
+            // contract violation, not an accumulation.
+            if !seen.insert((i.min(k), i.max(k))) {
+                return Err(format!(
+                    "duplicate edge ({i}, {k}): each undirected pair may appear at most once"
+                ));
+            }
+            rows[i].push((k as u32, v));
+            rows[k].push((i as u32, v));
+        }
+        let mut row_ptr = Vec::with_capacity(n + 1);
+        let mut cols = Vec::with_capacity(2 * edges.len());
+        let mut vals = Vec::with_capacity(2 * edges.len());
+        row_ptr.push(0);
+        for mut row in rows {
+            row.sort_by_key(|&(c, _)| c);
+            for (c, v) in row {
+                cols.push(c);
+                vals.push(v);
+            }
+            row_ptr.push(cols.len());
+        }
+        Ok(Self { row_ptr, cols, vals })
+    }
+
+    /// Stored entries — both orientations, i.e. `2 * edges`.
+    pub fn nnz(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Row i's (columns, values), columns ascending.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        let (a, b) = (self.row_ptr[i], self.row_ptr[i + 1]);
+        (&self.cols[a..b], &self.vals[a..b])
+    }
+
+    /// Entry (i, k); 0 when the pair is not an edge.
+    pub fn get(&self, i: usize, k: usize) -> f64 {
+        let (cols, vals) = self.row(i);
+        match cols.binary_search(&(k as u32)) {
+            Ok(p) => vals[p],
+            Err(_) => 0.0,
+        }
+    }
+}
 
 /// Descriptive metadata carried alongside the Hamiltonian.
 #[derive(Debug, Clone, Default)]
@@ -31,12 +108,19 @@ pub struct ProblemMeta {
 pub struct IsingProblem {
     pub n: usize,
     /// Symmetric couplings, row-major `j[i * n + k]`; diagonal ignored.
+    /// EMPTY when the problem is in sparse form (`sparse` is `Some`) —
+    /// sparse problems never materialize the dense matrix.
     pub j: Vec<f64>,
     /// External fields, length `n`.
     pub h: Vec<f64>,
     /// Phase sectors the state is decoded into: 2 = binary Ising,
     /// k > 2 = multi-phase sector encoding (e.g. k-coloring).
     pub sectors: usize,
+    /// Sparse (CSR) coupling form; `Some` means `j` is empty and all
+    /// coupling access goes through this structure.  Built by
+    /// [`Self::from_edges`]; kept sparse end-to-end so that memory and
+    /// solve cost scale with the edge count (DESIGN_SOLVER.md §11).
+    pub sparse: Option<SparseCoupling>,
     pub metadata: ProblemMeta,
 }
 
@@ -47,8 +131,60 @@ impl IsingProblem {
             j: vec![0.0; n * n],
             h: vec![0.0; n],
             sectors: 2,
+            sparse: None,
             metadata: ProblemMeta::default(),
         }
+    }
+
+    /// Build a *sparse-form* problem from an undirected edge list
+    /// `(i, k, J_ik)`.  The couplings stay in CSR form end-to-end — no
+    /// n^2 allocation ever happens — which is what lets the solver
+    /// route them onto the sparse engine fabric.  Self-loops,
+    /// out-of-range indices, and duplicate pairs (in either
+    /// orientation) are rejected: an edge list names each undirected
+    /// coupling exactly once.
+    pub fn from_edges(n: usize, edges: &[(usize, usize, f64)]) -> Result<Self, String> {
+        let sparse = SparseCoupling::from_edges(n, edges)?;
+        Ok(Self {
+            n,
+            j: Vec::new(),
+            h: vec![0.0; n],
+            sectors: 2,
+            sparse: Some(sparse),
+            metadata: ProblemMeta::default(),
+        })
+    }
+
+    /// True for sparse-form (CSR) problems.
+    pub fn is_sparse(&self) -> bool {
+        self.sparse.is_some()
+    }
+
+    /// Fraction of the n x n coupling matrix that is nonzero.  O(1) for
+    /// sparse-form problems (stored entries / n^2); O(n^2) for dense
+    /// form (only used by benches/reports — the solve path asks
+    /// sparse-form problems only).
+    pub fn coupling_density(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let nnz = match &self.sparse {
+            Some(sp) => sp.nnz(),
+            None => self.j.iter().filter(|&&v| v != 0.0).count(),
+        };
+        nnz as f64 / (self.n * self.n) as f64
+    }
+
+    /// True when every coupling AND every field is exactly zero — the
+    /// degenerate problem whose every state is a ground state.  The
+    /// router answers these trivially instead of annealing noise for
+    /// the full period budget.
+    pub fn is_zero_interaction(&self) -> bool {
+        let no_j = match &self.sparse {
+            Some(sp) => sp.vals.iter().all(|&v| v == 0.0),
+            None => self.j.iter().all(|&v| v == 0.0),
+        };
+        no_j && self.h.iter().all(|&x| x == 0.0)
     }
 
     pub fn with_kind(mut self, kind: &str) -> Self {
@@ -58,18 +194,31 @@ impl IsingProblem {
 
     #[inline]
     pub fn get_j(&self, i: usize, k: usize) -> f64 {
-        self.j[i * self.n + k]
+        match &self.sparse {
+            Some(sp) => sp.get(i, k),
+            None => self.j[i * self.n + k],
+        }
     }
 
-    /// Symmetric coupling setter.
+    /// Symmetric coupling setter (dense form only — sparse problems fix
+    /// their couplings at [`Self::from_edges`] time).
     pub fn set_j(&mut self, i: usize, k: usize, v: f64) {
+        assert!(
+            self.sparse.is_none(),
+            "sparse-form couplings are immutable; rebuild via from_edges"
+        );
         assert_ne!(i, k, "diagonal couplings are ignored; use h for biases");
         self.j[i * self.n + k] = v;
         self.j[k * self.n + i] = v;
     }
 
-    /// Symmetric coupling increment (reductions accumulate terms).
+    /// Symmetric coupling increment (reductions accumulate terms;
+    /// dense form only).
     pub fn add_j(&mut self, i: usize, k: usize, v: f64) {
+        assert!(
+            self.sparse.is_none(),
+            "sparse-form couplings are immutable; rebuild via from_edges"
+        );
         assert_ne!(i, k);
         self.j[i * self.n + k] += v;
         self.j[k * self.n + i] += v;
@@ -80,18 +229,50 @@ impl IsingProblem {
     }
 
     /// Structural validity: square J, matching h, symmetric couplings.
+    /// Sparse-form problems check CSR invariants instead (cost O(nnz),
+    /// never O(n^2)).
     pub fn validate(&self) -> Result<(), String> {
         if self.n == 0 {
             return Err("empty problem (n = 0)".into());
-        }
-        if self.j.len() != self.n * self.n {
-            return Err(format!("j has {} entries, want n^2 = {}", self.j.len(), self.n * self.n));
         }
         if self.h.len() != self.n {
             return Err(format!("h has {} entries, want n = {}", self.h.len(), self.n));
         }
         if self.sectors < 2 {
             return Err(format!("sectors {} < 2", self.sectors));
+        }
+        if let Some(sp) = &self.sparse {
+            if !self.j.is_empty() {
+                return Err("sparse-form problem must not carry a dense j".into());
+            }
+            if sp.row_ptr.len() != self.n + 1 || *sp.row_ptr.last().unwrap() != sp.cols.len() {
+                return Err("sparse couplings: malformed row pointers".into());
+            }
+            for i in 0..self.n {
+                if sp.row_ptr[i] > sp.row_ptr[i + 1] {
+                    return Err("sparse couplings: malformed row pointers".into());
+                }
+                let (cols, vals) = sp.row(i);
+                for (p, (&c, &v)) in cols.iter().zip(vals).enumerate() {
+                    let c = c as usize;
+                    if c >= self.n {
+                        return Err(format!("sparse coupling ({i}, {c}) outside 0..{}", self.n));
+                    }
+                    if c == i {
+                        return Err(format!("sparse self-coupling at ({i}, {i})"));
+                    }
+                    if p > 0 && cols[p - 1] >= cols[p] {
+                        return Err(format!("sparse couplings: row {i} columns not ascending"));
+                    }
+                    if sp.get(c, i) != v {
+                        return Err(format!("asymmetric coupling at ({i}, {c})"));
+                    }
+                }
+            }
+            return Ok(());
+        }
+        if self.j.len() != self.n * self.n {
+            return Err(format!("j has {} entries, want n^2 = {}", self.j.len(), self.n * self.n));
         }
         for i in 0..self.n {
             for k in (i + 1)..self.n {
@@ -104,9 +285,25 @@ impl IsingProblem {
     }
 
     /// `H(s) = -1/2 sum_{i != j} J_ij s_i s_j - sum_i h_i s_i`.
+    ///
+    /// The sparse branch walks the CSR rows in the same row-major order
+    /// the dense loop uses, skipping only exact-zero terms — each
+    /// skipped term subtracts a signed zero, which cannot change a
+    /// non-negative-zero accumulator — so the two forms agree
+    /// bit-for-bit on the same couplings.
     pub fn energy(&self, spins: &[i8]) -> f64 {
         assert_eq!(spins.len(), self.n);
         let mut e = 0.0;
+        if let Some(sp) = &self.sparse {
+            for i in 0..self.n {
+                let (cols, vals) = sp.row(i);
+                for (&k, &v) in cols.iter().zip(vals) {
+                    e -= 0.5 * v * spins[i] as f64 * spins[k as usize] as f64;
+                }
+                e -= self.h[i] * spins[i] as f64;
+            }
+            return e;
+        }
         for i in 0..self.n {
             for k in 0..self.n {
                 if i != k {
@@ -129,6 +326,18 @@ impl IsingProblem {
     pub fn phase_energy(&self, phases: &[i32], p: i32) -> f64 {
         assert_eq!(phases.len(), self.n);
         let mut e = 0.0;
+        if let Some(sp) = &self.sparse {
+            // Same row-major walk as the dense loop, nonzeros only —
+            // bit-identical (see `energy`).
+            for i in 0..self.n {
+                let (cols, vals) = sp.row(i);
+                for (&k, &v) in cols.iter().zip(vals) {
+                    e -= 0.5 * v * waveform_correlation(phases[i], phases[k as usize], p);
+                }
+                e -= self.h[i] * waveform_correlation(phases[i], 0, p);
+            }
+            return e;
+        }
         for i in 0..self.n {
             for k in 0..self.n {
                 if i != k {
@@ -167,10 +376,25 @@ impl IsingProblem {
         let m = self.embed_dim();
         assert_eq!(cfg.n, m, "config sized {} but embedding needs {m}", cfg.n);
         let mut master = vec![0f32; m * m];
-        for i in 0..self.n {
-            for k in 0..self.n {
-                if i != k {
-                    master[i * m + k] = self.get_j(i, k) as f32;
+        match &self.sparse {
+            // Dense fallback for a sparse-form problem (rtl engine, or
+            // density above the sparse-kernel threshold): scatter the
+            // CSR entries — identical master, no n^2 lookups.
+            Some(sp) => {
+                for i in 0..self.n {
+                    let (cols, vals) = sp.row(i);
+                    for (&k, &v) in cols.iter().zip(vals) {
+                        master[i * m + k as usize] = v as f32;
+                    }
+                }
+            }
+            None => {
+                for i in 0..self.n {
+                    for k in 0..self.n {
+                        if i != k {
+                            master[i * m + k] = self.get_j(i, k) as f32;
+                        }
+                    }
                 }
             }
         }
@@ -182,6 +406,89 @@ impl IsingProblem {
             }
         }
         WeightMatrix::quantize_with_error(&master, m, cfg)
+    }
+
+    /// Sparse twin of [`Self::embed_with_error`]: quantize straight
+    /// into CSR form without ever materializing the m x m master.
+    ///
+    /// Bit-exactness contract: the scale factor and the RMS error are
+    /// computed over the SAME f32 values, in the SAME row-major order,
+    /// as the dense embed — restricted to the structural nonzeros.
+    /// Skipped entries are exact zeros, which can neither raise the
+    /// max-|x| fold nor change the error accumulator (they contribute
+    /// +0.0), so the quantized entries AND the reported error match
+    /// the dense path bit-for-bit.  Structural entries that *round* to
+    /// zero are kept, so the fabric's sparsity pattern is the problem
+    /// graph's regardless of quantization.
+    pub fn embed_sparse_with_error(&self, cfg: &NetworkConfig) -> (SparseWeights, f64) {
+        let sp = self
+            .sparse
+            .as_ref()
+            .expect("embed_sparse_with_error requires a sparse-form problem");
+        let m = self.embed_dim();
+        assert_eq!(cfg.n, m, "config sized {} but embedding needs {m}", cfg.n);
+        let (lo, hi) = cfg.weight_range();
+        let has_field = self.has_field();
+        let anc = self.n;
+        // Pass 1: max |x| over the structural entries, exactly the f32
+        // fold the dense quantizer performs (zeros cannot move it).
+        let mut max_abs = 0f32;
+        for &v in &sp.vals {
+            max_abs = max_abs.max((v as f32).abs());
+        }
+        if has_field {
+            for &h in &self.h {
+                // Both orientations fold in the dense master; f32 max
+                // is idempotent so folding each value twice is
+                // equivalent — fold once per orientation anyway to
+                // mirror the dense walk literally.
+                max_abs = max_abs.max((h as f32).abs());
+                max_abs = max_abs.max((h as f32).abs());
+            }
+        }
+        let scale = if max_abs > 0.0 {
+            hi as f32 / max_abs
+        } else {
+            0.0
+        };
+        // Pass 2: quantize in dense row-major order (per row: coupling
+        // columns ascending, then the trailing ancilla column), so the
+        // f64 error accumulation visits entries exactly as the dense
+        // quantizer does.
+        let mut sq = 0f64;
+        let mut quantize = |x: f32| -> i8 {
+            let xs = x * scale;
+            let q = (xs.round() as i32).clamp(lo, hi);
+            let err = q as f64 - xs as f64;
+            sq += err * err;
+            q as i8
+        };
+        let mut triplets: Vec<(usize, usize, i8)> =
+            Vec::with_capacity(sp.nnz() + if has_field { 2 * self.n } else { 0 });
+        for i in 0..self.n {
+            let (cols, vals) = sp.row(i);
+            for (&k, &v) in cols.iter().zip(vals) {
+                triplets.push((i, k as usize, quantize(v as f32)));
+            }
+            if has_field && self.h[i] != 0.0 {
+                triplets.push((i, anc, quantize(self.h[i] as f32)));
+            }
+        }
+        if has_field {
+            for i in 0..self.n {
+                if self.h[i] != 0.0 {
+                    triplets.push((anc, i, quantize(self.h[i] as f32)));
+                }
+            }
+        }
+        let w = SparseWeights::from_triplets(m, &triplets)
+            .expect("sparse embedding cannot produce duplicates");
+        let rms = if m > 0 && hi > 0 {
+            (sq / (m * m) as f64).sqrt() / hi as f64
+        } else {
+            0.0
+        };
+        (w, rms)
     }
 
     /// Decode an embedded phase state (length [`Self::embed_dim`]) into
@@ -447,6 +754,135 @@ mod tests {
         p.h.pop();
         assert!(p.validate().is_err());
         assert!(IsingProblem::new(0).validate().is_err());
+    }
+
+    fn random_sparse_edges(rng: &mut Rng, n: usize, density: f64) -> Vec<(usize, usize, f64)> {
+        let mut edges = Vec::new();
+        for i in 0..n {
+            for k in (i + 1)..n {
+                if rng.f64() < density {
+                    // Fractional weights stress the quantization path.
+                    edges.push((i, k, rng.range_i64(-50, 51) as f64 / 7.0));
+                }
+            }
+        }
+        edges
+    }
+
+    #[test]
+    fn from_edges_rejects_bad_input() {
+        assert!(IsingProblem::from_edges(3, &[(0, 0, 1.0)]).is_err(), "self-loop");
+        assert!(IsingProblem::from_edges(3, &[(0, 3, 1.0)]).is_err(), "out of range");
+        assert!(
+            IsingProblem::from_edges(3, &[(0, 1, 1.0), (0, 1, 1.0)]).is_err(),
+            "duplicate pair"
+        );
+        assert!(
+            IsingProblem::from_edges(3, &[(0, 1, 1.0), (1, 0, 1.0)]).is_err(),
+            "reversed orientation names the same pair"
+        );
+        let p = IsingProblem::from_edges(3, &[(0, 1, 1.0), (2, 1, -2.0)]).unwrap();
+        assert!(p.is_sparse());
+        assert!(p.validate().is_ok());
+        assert_eq!(p.get_j(1, 0), 1.0);
+        assert_eq!(p.get_j(1, 2), -2.0);
+        assert_eq!(p.get_j(0, 2), 0.0);
+        assert!((p.coupling_density() - 4.0 / 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sparse_form_energy_bitwise_equals_dense_form() {
+        let mut rng = Rng::new(41);
+        for n in [2usize, 5, 9, 16] {
+            let edges = random_sparse_edges(&mut rng, n, 0.3);
+            let sp = IsingProblem::from_edges(n, &edges).unwrap();
+            let mut dp = IsingProblem::new(n);
+            for &(i, k, v) in &edges {
+                dp.set_j(i, k, v);
+            }
+            for _ in 0..8 {
+                let spins: Vec<i8> = (0..n).map(|_| rng.spin()).collect();
+                assert_eq!(
+                    sp.energy(&spins).to_bits(),
+                    dp.energy(&spins).to_bits(),
+                    "n={n}"
+                );
+                let phases: Vec<i32> = (0..n).map(|_| rng.range_i64(0, 16) as i32).collect();
+                assert_eq!(
+                    sp.phase_energy(&phases, 16).to_bits(),
+                    dp.phase_energy(&phases, 16).to_bits(),
+                    "n={n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_embed_bitwise_matches_dense_embed() {
+        let mut rng = Rng::new(42);
+        for with_field in [false, true] {
+            for n in [3usize, 8, 14] {
+                let edges = random_sparse_edges(&mut rng, n, 0.35);
+                let mut sp = IsingProblem::from_edges(n, &edges).unwrap();
+                let mut dp = IsingProblem::new(n);
+                for &(i, k, v) in &edges {
+                    dp.set_j(i, k, v);
+                }
+                if with_field {
+                    for i in 0..n {
+                        dp.h[i] = rng.range_i64(-3, 4) as f64;
+                    }
+                    sp.h = dp.h.clone();
+                }
+                let cfg = NetworkConfig::paper(sp.embed_dim());
+                let (wd, ed) = dp.embed_with_error(&cfg);
+                let (ws, es) = sp.embed_sparse_with_error(&cfg);
+                assert_eq!(
+                    es.to_bits(),
+                    ed.to_bits(),
+                    "quantization error diverged (n={n} field={with_field})"
+                );
+                assert_eq!(
+                    ws.to_dense(),
+                    wd,
+                    "quantized entries diverged (n={n} field={with_field})"
+                );
+                assert!(ws.is_symmetric());
+                // The dense fallback of a sparse-form problem (rtl /
+                // above-threshold path) matches too.
+                let (wf, ef) = sp.embed_with_error(&cfg);
+                assert_eq!(wf, wd);
+                assert_eq!(ef.to_bits(), ed.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn zero_interaction_detection() {
+        let p = IsingProblem::from_edges(4, &[]).unwrap();
+        assert!(p.is_zero_interaction());
+        let mut p2 = IsingProblem::from_edges(4, &[]).unwrap();
+        p2.h[1] = 0.5;
+        assert!(!p2.is_zero_interaction(), "a field is an interaction");
+        let p3 = IsingProblem::from_edges(4, &[(0, 1, 0.0)]).unwrap();
+        assert!(p3.is_zero_interaction(), "explicit zero-weight edges");
+        let p4 = IsingProblem::from_edges(4, &[(0, 1, 1.0)]).unwrap();
+        assert!(!p4.is_zero_interaction());
+        assert!(IsingProblem::new(3).is_zero_interaction());
+        let mut d = IsingProblem::new(3);
+        d.set_j(0, 1, 1.0);
+        assert!(!d.is_zero_interaction());
+    }
+
+    #[test]
+    fn sparse_validate_catches_malformed() {
+        let mut p = IsingProblem::from_edges(3, &[(0, 1, 1.0)]).unwrap();
+        p.j = vec![0.0; 9];
+        assert!(p.validate().is_err(), "dense j alongside sparse form");
+        let mut p = IsingProblem::from_edges(3, &[(0, 1, 1.0)]).unwrap();
+        // Tamper one orientation: symmetry check must catch it.
+        p.sparse.as_mut().unwrap().vals[0] = 2.0;
+        assert!(p.validate().is_err());
     }
 
     #[test]

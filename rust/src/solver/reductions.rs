@@ -18,6 +18,23 @@ pub fn max_cut(graph: &Graph) -> IsingProblem {
     p
 }
 
+/// Max-cut in sparse coupling form: same Hamiltonian as [`max_cut`]
+/// (`J_ij = -w_ij`), but the couplings are stored CSR so the solver can
+/// route the instance onto a sparse engine fabric (DESIGN_SOLVER.md
+/// §11).  Requires a simple graph — `IsingProblem::from_edges` rejects
+/// duplicate pairs and self-loops, the same contract the wire protocol
+/// enforces on `"edges"` requests.
+pub fn max_cut_sparse(graph: &Graph) -> IsingProblem {
+    let edges: Vec<(usize, usize, f64)> = graph
+        .edges
+        .iter()
+        .map(|&(i, j, w)| (i, j, -(w as f64)))
+        .collect();
+    IsingProblem::from_edges(graph.n, &edges)
+        .expect("max_cut_sparse needs a simple graph (no duplicate or self-loop edges)")
+        .with_kind("max-cut")
+}
+
 /// Cut value recovered from the max-cut Hamiltonian's energy.
 pub fn cut_from_energy(graph: &Graph, energy: f64) -> f64 {
     (graph.total_weight() as f64 - energy) / 2.0
@@ -146,6 +163,27 @@ mod tests {
         let (spins, e) = p.brute_force();
         assert_eq!(g.cut_value(&spins), 6); // all K_{3,2} edges
         assert!((cut_from_energy(&g, e) - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sparse_max_cut_matches_dense_reduction() {
+        let mut rng = Rng::new(53);
+        let g = Graph::random(11, 0.35, &mut rng);
+        let pd = max_cut(&g);
+        let ps = max_cut_sparse(&g);
+        assert!(ps.is_sparse());
+        assert_eq!(ps.metadata.kind, pd.metadata.kind);
+        for i in 0..g.n {
+            for j in 0..g.n {
+                if i != j {
+                    assert_eq!(ps.get_j(i, j), pd.get_j(i, j));
+                }
+            }
+        }
+        for _ in 0..10 {
+            let spins: Vec<i8> = (0..g.n).map(|_| rng.spin()).collect();
+            assert_eq!(ps.energy(&spins).to_bits(), pd.energy(&spins).to_bits());
+        }
     }
 
     #[test]

@@ -17,9 +17,23 @@ pub struct SaResult {
 /// Local fields `f_i = sum_{j != i} J_ij s_j + h_i`; flipping spin `i`
 /// changes the energy by `2 s_i f_i`.  Shared by the annealer, the
 /// descent polish, and the local-minimum predicate so they can never
-/// disagree about what a field is.
+/// disagree about what a field is.  Sparse-form problems iterate their
+/// CSR rows — the skipped terms are exact zeros, so fields (and every
+/// downstream flip decision) match the dense-form walk.
 fn local_fields(problem: &IsingProblem, spins: &[i8]) -> Vec<f64> {
     let n = problem.n;
+    if let Some(sp) = problem.sparse.as_ref() {
+        return (0..n)
+            .map(|i| {
+                let mut v = problem.h[i];
+                let (cols, vals) = sp.row(i);
+                for (&k, &jv) in cols.iter().zip(vals) {
+                    v += jv * spins[k as usize] as f64;
+                }
+                v
+            })
+            .collect();
+    }
     (0..n)
         .map(|i| {
             let mut v = problem.h[i];
@@ -31,6 +45,26 @@ fn local_fields(problem: &IsingProblem, spins: &[i8]) -> Vec<f64> {
             v
         })
         .collect()
+}
+
+/// Propagate a flip of spin `i` (new value `si`) into the cached fields:
+/// `f_j += 2 J_ji si` for every neighbor `j`.  J is symmetric (enforced
+/// by `IsingProblem::validate`), so a sparse problem's CSR row `i` *is*
+/// its column `i`.
+fn apply_flip_to_fields(problem: &IsingProblem, f: &mut [f64], i: usize, si: f64) {
+    if let Some(sp) = problem.sparse.as_ref() {
+        let (cols, vals) = sp.row(i);
+        for (&j, &jv) in cols.iter().zip(vals) {
+            f[j as usize] += 2.0 * jv * si;
+        }
+        return;
+    }
+    for j in 0..problem.n {
+        if j != i {
+            // f_j changes by J_ji * (s_i_new - s_i_old)
+            f[j] += 2.0 * problem.get_j(j, i) * si;
+        }
+    }
 }
 
 /// Anneal with a geometric temperature ramp scaled to the instance's
@@ -46,14 +80,18 @@ pub fn anneal(problem: &IsingProblem, sweeps: usize, seed: u64) -> SaResult {
     let mut best_energy = energy;
 
     // Temperature scale from the worst-case local field magnitude.
-    let scale = (0..n)
-        .map(|i| {
-            (0..n)
+    let row_magnitude = |i: usize| -> f64 {
+        let couplings = match problem.sparse.as_ref() {
+            Some(sp) => sp.row(i).1.iter().map(|v| v.abs()).sum::<f64>(),
+            None => (0..n)
                 .filter(|&j| j != i)
                 .map(|j| problem.get_j(i, j).abs())
-                .sum::<f64>()
-                + problem.h[i].abs()
-        })
+                .sum::<f64>(),
+        };
+        couplings + problem.h[i].abs()
+    };
+    let scale = (0..n)
+        .map(row_magnitude)
         .fold(0.0f64, f64::max)
         .max(1e-9);
     let (t0, t1) = (0.8 * scale, 0.01 * scale);
@@ -66,13 +104,7 @@ pub fn anneal(problem: &IsingProblem, sweeps: usize, seed: u64) -> SaResult {
             if delta <= 0.0 || rng.f64() < (-delta / temp).exp() {
                 spins[i] = -spins[i];
                 energy += delta;
-                let si = spins[i] as f64;
-                for j in 0..n {
-                    if j != i {
-                        // f_j changes by J_ji * (s_i_new - s_i_old)
-                        f[j] += 2.0 * problem.get_j(j, i) * si;
-                    }
-                }
+                apply_flip_to_fields(problem, &mut f, i, spins[i] as f64);
                 if energy < best_energy {
                     best_energy = energy;
                     best.copy_from_slice(&spins);
@@ -114,12 +146,7 @@ pub fn greedy_descent(problem: &IsingProblem, spins: &mut [i8]) {
             if target != spins[i] {
                 spins[i] = target;
                 changed = true;
-                let si = spins[i] as f64;
-                for j in 0..n {
-                    if j != i {
-                        f[j] += 2.0 * problem.get_j(j, i) * si;
-                    }
-                }
+                apply_flip_to_fields(problem, &mut f, i, spins[i] as f64);
             }
         }
         if !changed {
@@ -185,6 +212,40 @@ mod tests {
             let mut spins: Vec<i8> = (0..g.n).map(|_| rng.spin()).collect();
             greedy_descent(&p, &mut spins);
             assert_eq!(g.cut_value(&spins), 9, "spins {spins:?}");
+        }
+    }
+
+    #[test]
+    fn sparse_form_walk_matches_dense_form_bitwise() {
+        let mut rng = Rng::new(64);
+        let n = 14;
+        let mut edges = Vec::new();
+        for i in 0..n {
+            for k in (i + 1)..n {
+                if rng.f64() < 0.3 {
+                    edges.push((i, k, rng.range_i64(-3, 4) as f64));
+                }
+            }
+        }
+        let sp = IsingProblem::from_edges(n, &edges).unwrap();
+        let mut dp = IsingProblem::new(n);
+        for &(i, k, v) in &edges {
+            dp.set_j(i, k, v);
+        }
+        // Same seed, same flip decisions, same best state: the CSR walk
+        // only skips exact-zero terms.
+        let rs = anneal(&sp, 40, 7);
+        let rd = anneal(&dp, 40, 7);
+        assert_eq!(rs.spins, rd.spins);
+        assert_eq!(rs.energy.to_bits(), rd.energy.to_bits());
+        for _ in 0..8 {
+            let mut s1: Vec<i8> = (0..n).map(|_| rng.spin()).collect();
+            let mut s2 = s1.clone();
+            greedy_descent(&sp, &mut s1);
+            greedy_descent(&dp, &mut s2);
+            assert_eq!(s1, s2);
+            assert!(is_local_minimum(&sp, &s1));
+            assert!(is_local_minimum(&dp, &s2));
         }
     }
 

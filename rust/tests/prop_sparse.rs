@@ -1,0 +1,242 @@
+//! Property tests for the sparse (CSR) coupling fabric: installing the
+//! same symmetric weights through `set_weights_sparse` must reproduce
+//! the dense matrix kernel bit for bit — with the annealing phase noise
+//! enabled — at every period, on the native engine and on row-sharded
+//! clusters (non-dividing splits included), across random graphs at
+//! densities 0.02..=0.5.  End to end, a sparse-form `IsingProblem` must
+//! solve to the exact outcome of its dense-form twin (energies, spins,
+//! phases, periods, and the quantization-error report, all bitwise),
+//! and the warm engine arena must never hand a dense fabric to a sparse
+//! solve or vice versa.
+
+use onn_scale::coordinator::arena::{ArenaKey, EngineArena};
+use onn_scale::coordinator::metrics::Metrics;
+use onn_scale::onn::config::NetworkConfig;
+use onn_scale::onn::sparse::SparseWeights;
+use onn_scale::runtime::native::NativeEngine;
+use onn_scale::runtime::sharded::ShardedEngine;
+use onn_scale::runtime::ChunkEngine;
+use onn_scale::solver::portfolio::{
+    build_engine, solve_native, solve_portfolio, solve_with, wants_sparse, EngineSelect,
+    PortfolioParams, SPARSE_DENSITY_THRESHOLD,
+};
+use onn_scale::solver::reductions::{max_cut, max_cut_sparse};
+use onn_scale::solver::Graph;
+use onn_scale::util::rng::Rng;
+
+/// One random symmetric zero-diagonal weight matrix at roughly the
+/// requested density, in both fabric forms: the dense f32 payload
+/// `set_weights` takes and the CSR payload `set_weights_sparse` takes.
+fn rand_sparse_pair(rng: &mut Rng, n: usize, density: f64) -> (Vec<f32>, SparseWeights) {
+    let mut dense = vec![0f32; n * n];
+    let mut trips: Vec<(usize, usize, i8)> = Vec::new();
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if rng.f64() >= density {
+                continue;
+            }
+            let v = rng.range_i64(-16, 16) as i8;
+            if v == 0 {
+                continue;
+            }
+            dense[i * n + j] = v as f32;
+            dense[j * n + i] = v as f32;
+            trips.push((i, j, v));
+            trips.push((j, i, v));
+        }
+    }
+    let sw = SparseWeights::from_triplets(n, &trips).expect("valid symmetric triplets");
+    (dense, sw)
+}
+
+#[test]
+fn prop_native_sparse_fabric_bit_exact_at_every_period() {
+    let mut rng = Rng::new(7001);
+    for case in 0..20 {
+        let n = 4 + rng.usize_below(25); // 4..=28
+        let density = 0.02 + rng.f64() * 0.48;
+        let cfg = NetworkConfig::paper(n);
+        let batch = 1 + rng.usize_below(3);
+        // chunk = 1: every run_chunk is one period, so the walk below
+        // compares the noisy trajectories period by period.
+        let mut dense_eng = NativeEngine::new(cfg, batch, 1);
+        let mut sparse_eng = NativeEngine::new(cfg, batch, 1);
+        let (w, sw) = rand_sparse_pair(&mut rng, n, density);
+        dense_eng.set_weights(&w).unwrap();
+        sparse_eng.set_weights_sparse(&sw).unwrap();
+        let amplitude = 0.2 + rng.f64() * 0.8;
+        let seed = rng.next_u64();
+        dense_eng.set_noise(amplitude, seed).unwrap();
+        sparse_eng.set_noise(amplitude, seed).unwrap();
+        let init: Vec<i32> = (0..batch * n).map(|_| rng.range_i64(0, 16) as i32).collect();
+        let (mut pa, mut pb) = (init.clone(), init);
+        let (mut sa, mut sb) = (vec![-1i32; batch], vec![-1i32; batch]);
+        for period in 0..10 {
+            dense_eng.run_chunk(&mut pa, &mut sa, period).unwrap();
+            sparse_eng.run_chunk(&mut pb, &mut sb, period).unwrap();
+            assert_eq!(
+                pa, pb,
+                "case {case} n={n} density {density:.3} period {period}: phases diverged"
+            );
+            assert_eq!(
+                sa, sb,
+                "case {case} n={n} density {density:.3} period {period}: settle flags diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_sharded_sparse_fabric_matches_dense_native() {
+    // The CSR is shared read-only across shard workers, each walking
+    // its own global row range — including splits that do not divide
+    // the row count.  The mid-run noise re-seeding mirrors what the
+    // annealing portfolio does between chunks.
+    let mut rng = Rng::new(7002);
+    for case in 0..10 {
+        let n = 5 + rng.usize_below(18); // 5..=22
+        let density = 0.02 + rng.f64() * 0.48;
+        for shards in [2usize, 3, 5] {
+            let shards = shards.min(n);
+            let cfg = NetworkConfig::paper(n);
+            let mut dense_eng = NativeEngine::new(cfg, 2, 4);
+            let mut sharded = ShardedEngine::unprogrammed(cfg, shards, 2, 4).unwrap();
+            let (w, sw) = rand_sparse_pair(&mut rng, n, density);
+            dense_eng.set_weights(&w).unwrap();
+            sharded.set_weights_sparse(&sw).unwrap();
+            let init: Vec<i32> = (0..2 * n).map(|_| rng.range_i64(0, 16) as i32).collect();
+            let (mut pa, mut pb) = (init.clone(), init);
+            let (mut sa, mut sb) = (vec![-1i32; 2], vec![-1i32; 2]);
+            for (chunk, &level) in [0.9, 0.5, 0.2, 0.0].iter().enumerate() {
+                let seed = rng.next_u64();
+                dense_eng.set_noise(level, seed).unwrap();
+                sharded.set_noise(level, seed).unwrap();
+                dense_eng.run_chunk(&mut pa, &mut sa, (chunk * 4) as i32).unwrap();
+                sharded.run_chunk(&mut pb, &mut sb, (chunk * 4) as i32).unwrap();
+                assert_eq!(
+                    pa, pb,
+                    "case {case} n={n} shards={shards} chunk {chunk}: phases diverged"
+                );
+                assert_eq!(sa, sb, "case {case} n={n} shards={shards} chunk {chunk}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_sparse_form_solve_outcome_bit_identical() {
+    // End to end through the annealed replica portfolio: the sparse
+    // coupling form must change *nothing* about the answer — only
+    // which weight fabric served it.  Densities straddle the engine
+    // selection threshold, so both the CSR kernel and the dense
+    // fallback (density too high to bother) are exercised.
+    let mut rng = Rng::new(7003);
+    let edge_probs = [0.02, 0.1, 0.2, 0.35, 0.5];
+    let (mut sparse_runs, mut dense_fallbacks) = (0usize, 0usize);
+    for case in 0..6u64 {
+        let n = 8 + rng.usize_below(10); // 8..=17
+        let g = Graph::random(n, edge_probs[case as usize % edge_probs.len()], &mut rng);
+        let dense_form = max_cut(&g);
+        let sparse_form = max_cut_sparse(&g);
+        let params = PortfolioParams {
+            replicas: 6,
+            max_periods: 48,
+            seed: 6000 + case,
+            ..Default::default()
+        };
+        let reference = solve_native(&dense_form, &params).unwrap();
+        assert!(!reference.sparse, "dense-form problems never take the CSR kernel");
+        let expect_sparse = wants_sparse(&sparse_form);
+        if expect_sparse {
+            assert!(sparse_form.coupling_density() <= SPARSE_DENSITY_THRESHOLD);
+            sparse_runs += 1;
+        } else {
+            dense_fallbacks += 1;
+        }
+        for (tag, select) in [
+            ("native", EngineSelect::Native),
+            ("sharded", EngineSelect::Sharded { shards: 3 }),
+        ] {
+            let out = solve_with(&sparse_form, &params, select).unwrap();
+            assert_eq!(
+                out.best_energy.to_bits(),
+                reference.best_energy.to_bits(),
+                "case {case} {tag}: energies diverged"
+            );
+            assert_eq!(out.best_spins, reference.best_spins, "case {case} {tag}");
+            assert_eq!(out.best_phases, reference.best_phases, "case {case} {tag}");
+            assert_eq!(out.periods, reference.periods, "case {case} {tag}");
+            assert_eq!(out.settled_replicas, reference.settled_replicas, "case {case} {tag}");
+            assert_eq!(
+                out.quantization_error.to_bits(),
+                reference.quantization_error.to_bits(),
+                "case {case} {tag}: the CSR embedding must round exactly like the dense one"
+            );
+            // The sharded fabric supports CSR too, so the flag depends
+            // only on the density threshold.
+            assert_eq!(out.sparse, expect_sparse, "case {case} {tag}");
+        }
+    }
+    assert!(
+        sparse_runs > 0 && dense_fallbacks > 0,
+        "the density spread must exercise both the CSR kernel ({sparse_runs}) \
+         and the dense fallback ({dense_fallbacks})"
+    );
+}
+
+#[test]
+fn prop_arena_mixed_dense_sparse_serving_is_bit_identical() {
+    // The serving regression of the issue: a warm dense engine checked
+    // out for a sparse solve (or vice versa) would reprogram across
+    // fabric kinds.  With `sparse` in the ArenaKey the two populations
+    // stay separate, and every warm solve is bit-identical to its cold
+    // reference — interleaved dense/sparse traffic included.
+    let mut rng = Rng::new(7004);
+    let g = Graph::random(14, 0.15, &mut rng);
+    let dense_form = max_cut(&g);
+    let sparse_form = max_cut_sparse(&g);
+    assert!(wants_sparse(&sparse_form), "low-density instance must take the CSR kernel");
+    let params = PortfolioParams {
+        replicas: 4,
+        max_periods: 32,
+        seed: 77,
+        ..Default::default()
+    };
+    let cold_dense = solve_native(&dense_form, &params).unwrap();
+    let cold_sparse = solve_native(&sparse_form, &params).unwrap();
+    assert_eq!(cold_dense.best_energy.to_bits(), cold_sparse.best_energy.to_bits());
+
+    let metrics = Metrics::new();
+    let mut arena = EngineArena::new(2);
+    let m = dense_form.embed_dim();
+    let (batch, chunk) = (params.replicas, params.chunk);
+    let select = EngineSelect::Native;
+    for round in 0..2 {
+        for (tag, problem, cold) in [
+            ("dense", &dense_form, &cold_dense),
+            ("sparse", &sparse_form, &cold_sparse),
+        ] {
+            let key = ArenaKey::for_solve(m, batch, chunk, select, wants_sparse(problem));
+            let mut engine = arena
+                .checkout(key, &metrics, || build_engine(m, batch, chunk, select))
+                .unwrap();
+            let out = solve_portfolio(engine.as_mut(), problem, &params).unwrap();
+            arena.checkin(key, engine, &metrics);
+            assert_eq!(
+                out.best_energy.to_bits(),
+                cold.best_energy.to_bits(),
+                "round {round} {tag}: warm solve diverged from cold"
+            );
+            assert_eq!(out.best_spins, cold.best_spins, "round {round} {tag}");
+            assert_eq!(out.best_phases, cold.best_phases, "round {round} {tag}");
+            assert_eq!(out.periods, cold.periods, "round {round} {tag}");
+            assert_eq!(out.sparse, wants_sparse(problem), "round {round} {tag}");
+        }
+    }
+    let snap = metrics.snapshot();
+    assert_eq!(snap.arena_misses, 2, "one cold build per fabric, never shared");
+    assert_eq!(
+        snap.arena_hits, 2,
+        "round two must reuse each fabric's own warm engine"
+    );
+}

@@ -23,9 +23,9 @@ cargo test -q
 echo "==> cargo check --features pjrt (stub xla)"
 cargo check --features pjrt
 
-echo "==> solve-bench --shards/--packed/--rtl/--connections gate (BENCH_solver.json must carry sharded + packed + rtl + connection-scale rows)"
+echo "==> solve-bench --shards/--packed/--rtl/--connections/--sparse gate (BENCH_solver.json must carry sharded + packed + rtl + connection-scale + sparse rows)"
 ./target/release/onn-scale solve-bench --sizes 12,16 --replicas 4 --periods 32 \
-  --instances 1 --shards 2 --packed 4 --rtl --connections 64 --out BENCH_solver.json
+  --instances 1 --shards 2 --packed 4 --rtl --connections 64 --sparse --out BENCH_solver.json
 grep -q '"engine":"native"' BENCH_solver.json \
   || { echo "BENCH_solver.json is missing the native rows"; exit 1; }
 grep -q '"engine":"sharded"' BENCH_solver.json \
@@ -49,6 +49,18 @@ grep -q '"clients":64' BENCH_solver.json \
   || { echo "BENCH_solver.json is missing the 64-client connection-scale row"; exit 1; }
 grep -q '"speedup"' BENCH_solver.json \
   || { echo "BENCH_solver.json connection-scale row is missing the speedup field"; exit 1; }
+# The sparse section (dense vs CSR coupling fabric on bit-identical
+# work, fixed density plus the G(n, 4/n) sweep) must be present and
+# carry the throughput + nnz fields the issue gates on.  The CSR kernel
+# itself is proven bit-exact by the prop_sparse [[test]] suite above.
+grep -q '"sparse"' BENCH_solver.json \
+  || { echo "BENCH_solver.json is missing the sparse fabric section"; exit 1; }
+grep -q '"sparse_replica_periods_per_sec"' BENCH_solver.json \
+  || { echo "BENCH_solver.json sparse rows are missing the CSR throughput field"; exit 1; }
+grep -q '"sparse_speedup"' BENCH_solver.json \
+  || { echo "BENCH_solver.json sparse rows are missing the dense-vs-CSR speedup field"; exit 1; }
+grep -q '"avg_row_nnz"' BENCH_solver.json \
+  || { echo "BENCH_solver.json sparse rows are missing the nonzeros-per-row field"; exit 1; }
 
 echo "==> solve-report renders the recorded trajectory"
 ./target/release/onn-scale solve-report --path BENCH_solver.json >/dev/null
