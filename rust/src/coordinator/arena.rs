@@ -45,29 +45,53 @@ use crate::solver::portfolio::EngineSelect;
 /// same install path a cold build would use — the arena's
 /// bit-identity contract never has to reason about cross-fabric
 /// reinstalls.
+///
+/// The hardware-model keys (`Rtl`, `RtlCluster`) carry the precision
+/// point (`weight_bits`, `phase_bits`) too: precision is baked into an
+/// rtl engine at construction (register widths, phase wheel), so a
+/// warm 4-bit fabric must never serve a paper-precision request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ArenaKey {
     Native { n: usize, batch: usize, chunk: usize, sparse: bool },
     Sharded { n: usize, shards: usize, batch: usize, chunk: usize, sparse: bool },
-    Rtl { n: usize, batch: usize, chunk: usize },
+    Rtl { n: usize, batch: usize, chunk: usize, weight_bits: u32, phase_bits: u32 },
+    RtlCluster {
+        n: usize,
+        shards: usize,
+        batch: usize,
+        chunk: usize,
+        weight_bits: u32,
+        phase_bits: u32,
+    },
 }
+
+/// The paper's reference precision (`NetworkConfig::paper`, 5w/4p):
+/// what an rtl solve runs at when the request carries no sweep point.
+const PAPER_PRECISION: (u32, u32) = (5, 4);
 
 impl ArenaKey {
     /// The key a solo solve resolves to: mirrors
-    /// [`crate::solver::portfolio::build_engine`]'s fabric choice so a
-    /// checked-out engine is exactly what a cold build would construct.
-    /// `sparse` is `solver::portfolio::wants_sparse(problem)` — the rtl
-    /// engine has no sparse kernel, so its key ignores the flag (the
-    /// portfolio falls back to the dense install there).
+    /// [`crate::solver::portfolio::build_engine_cfg`]'s fabric choice so
+    /// a checked-out engine is exactly what a cold build would
+    /// construct.  `sparse` is `solver::portfolio::wants_sparse(problem)`
+    /// — the rtl engines have no sparse kernel, so their keys ignore the
+    /// flag (the portfolio falls back to the dense install there).
+    /// `precision` is the request's sweep point; only the hardware-model
+    /// keys carry it (the float fabrics always run the paper wheel).
     pub fn for_solve(
         m: usize,
         batch: usize,
         chunk: usize,
         select: EngineSelect,
         sparse: bool,
+        precision: Option<(u32, u32)>,
     ) -> Self {
+        let (weight_bits, phase_bits) = precision.unwrap_or(PAPER_PRECISION);
         if select == EngineSelect::Rtl {
-            return ArenaKey::Rtl { n: m, batch, chunk };
+            return ArenaKey::Rtl { n: m, batch, chunk, weight_bits, phase_bits };
+        }
+        if let EngineSelect::RtlCluster { shards } = select {
+            return ArenaKey::RtlCluster { n: m, shards, batch, chunk, weight_bits, phase_bits };
         }
         let shards = select.shards_for(m);
         if shards <= 1 {
@@ -179,7 +203,10 @@ mod tests {
             ArenaKey::Sharded { n, shards, batch, chunk, .. } => {
                 (n, batch, chunk, EngineSelect::Sharded { shards })
             }
-            ArenaKey::Rtl { n, batch, chunk } => (n, batch, chunk, EngineSelect::Rtl),
+            ArenaKey::Rtl { n, batch, chunk, .. } => (n, batch, chunk, EngineSelect::Rtl),
+            ArenaKey::RtlCluster { n, shards, batch, chunk, .. } => {
+                (n, batch, chunk, EngineSelect::RtlCluster { shards })
+            }
         };
         build_engine(m, batch, chunk, select)
     }
@@ -188,24 +215,46 @@ mod tests {
     fn key_resolution_mirrors_build_engine() {
         let auto = EngineSelect::Auto { threshold: 100, max_shards: 4 };
         assert_eq!(
-            ArenaKey::for_solve(24, 8, 8, auto, false),
+            ArenaKey::for_solve(24, 8, 8, auto, false, None),
             ArenaKey::Native { n: 24, batch: 8, chunk: 8, sparse: false }
         );
         assert_eq!(
-            ArenaKey::for_solve(250, 8, 8, auto, true),
+            ArenaKey::for_solve(250, 8, 8, auto, true, None),
             ArenaKey::Sharded { n: 250, shards: 3, batch: 8, chunk: 8, sparse: true }
         );
         assert_eq!(
-            ArenaKey::for_solve(24, 8, 8, EngineSelect::Rtl, false),
-            ArenaKey::Rtl { n: 24, batch: 8, chunk: 8 }
+            ArenaKey::for_solve(24, 8, 8, EngineSelect::Rtl, false, None),
+            ArenaKey::Rtl { n: 24, batch: 8, chunk: 8, weight_bits: 5, phase_bits: 4 },
+            "no sweep point resolves to the paper precision"
         );
         assert_eq!(
-            ArenaKey::for_solve(24, 8, 8, EngineSelect::Rtl, true),
-            ArenaKey::Rtl { n: 24, batch: 8, chunk: 8 },
+            ArenaKey::for_solve(24, 8, 8, EngineSelect::Rtl, true, None),
+            ArenaKey::Rtl { n: 24, batch: 8, chunk: 8, weight_bits: 5, phase_bits: 4 },
             "the rtl fabric has no sparse kernel; its key ignores the flag"
         );
         assert_eq!(
-            ArenaKey::for_solve(24, 8, 8, EngineSelect::Sharded { shards: 1 }, false),
+            ArenaKey::for_solve(24, 8, 8, EngineSelect::Rtl, false, Some((4, 4))),
+            ArenaKey::Rtl { n: 24, batch: 8, chunk: 8, weight_bits: 4, phase_bits: 4 },
+            "precision is part of the rtl geometry"
+        );
+        assert_ne!(
+            ArenaKey::for_solve(24, 8, 8, EngineSelect::Rtl, false, Some((4, 4))),
+            ArenaKey::for_solve(24, 8, 8, EngineSelect::Rtl, false, None),
+            "a warm sweep-point engine must never serve a paper request"
+        );
+        assert_eq!(
+            ArenaKey::for_solve(24, 8, 8, EngineSelect::RtlCluster { shards: 2 }, false, None),
+            ArenaKey::RtlCluster {
+                n: 24,
+                shards: 2,
+                batch: 8,
+                chunk: 8,
+                weight_bits: 5,
+                phase_bits: 4
+            }
+        );
+        assert_eq!(
+            ArenaKey::for_solve(24, 8, 8, EngineSelect::Sharded { shards: 1 }, false, None),
             ArenaKey::Native { n: 24, batch: 8, chunk: 8, sparse: false },
             "a single-shard selection collapses to the native fabric"
         );

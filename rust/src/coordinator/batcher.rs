@@ -25,9 +25,10 @@ use crate::coordinator::job::{
     Job, ProgressEvent, RetrievalResult, SolveJob, SolveRequest, SolveResult,
 };
 use crate::coordinator::metrics::Metrics;
+use crate::onn::config::NetworkConfig;
 use crate::runtime::EngineFactory;
 use crate::solver::portfolio::{
-    build_engine, is_cancelled, solve_packed_hooked, solve_portfolio_hooked, wants_sparse,
+    build_engine_cfg, is_cancelled, solve_packed_hooked, solve_portfolio_hooked, wants_sparse,
     EngineSelect, PortfolioParams, SolveHooks, DEFAULT_CHUNK, MAX_WAVE_REPLICAS,
 };
 use crate::solver::problem::IsingProblem;
@@ -201,20 +202,41 @@ impl Default for SolvePackPolicy {
     }
 }
 
+/// Batching compatibility key of a packable solve request.  Two
+/// requests coalesce iff their keys are equal: same oscillator-count
+/// bucket, chunk-count budget, engine family (native vs rtl) and —
+/// for rtl — the same precision sweep point, since co-scheduled lanes
+/// share one quantized fabric.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SolvePackKey {
+    /// Embedding rounded up to a power of two.
+    pub bucket: usize,
+    /// Chunk-count budget (`max_periods` in whole chunks).
+    pub chunks: usize,
+    /// Bit-true emulated-hardware engine vs the native float fabric.
+    pub rtl: bool,
+    /// Quantized weight width of the shared fabric (rtl only; the
+    /// paper's 5 bits when the request carries no sweep point).
+    pub weight_bits: u32,
+    /// Phase-wheel resolution of the shared fabric (rtl only).
+    pub phase_bits: u32,
+}
+
 /// Batching compatibility key of a packable solve request, or `None`
 /// when the request must run solo.  Two requests coalesce iff their
-/// keys are equal: same oscillator-count bucket (embedding rounded up
-/// to a power of two) and same chunk-count budget — per-lane weights,
-/// noise streams, and plateau exits take care of every other
-/// difference (seeds, schedules, replica counts).  Requests with an
-/// explicit `shards` or `rtl` placement never pack (engine placement is
+/// keys are equal ([`SolvePackKey`]) — per-lane weights, noise streams,
+/// and plateau exits take care of every other difference (seeds,
+/// schedules, replica counts).  Both the native and the rtl engine
+/// implement lane blocks, so small `rtl: true` requests coalesce too
+/// (onto a shared emulated fabric at their precision point); requests
+/// with an explicit `shards` placement never pack (engine topology is
 /// theirs), and traced requests run solo so the trace describes one
 /// solve, not a shared engine.
-pub fn solve_pack_key(req: &SolveRequest, policy: &SolvePackPolicy) -> Option<(usize, usize)> {
+pub fn solve_pack_key(req: &SolveRequest, policy: &SolvePackPolicy) -> Option<SolvePackKey> {
     if policy.max_oscillators == 0 || policy.max_lanes == 0 {
         return None;
     }
-    if req.shards.is_some() || req.rtl || req.trace {
+    if req.shards.is_some() || req.trace {
         return None;
     }
     // Sparse-form problems run solo: lane blocks are programmed with
@@ -231,7 +253,14 @@ pub fn solve_pack_key(req: &SolveRequest, policy: &SolvePackPolicy) -> Option<(u
     if bucket > policy.max_oscillators {
         return None;
     }
-    Some((bucket, req.max_periods.div_ceil(DEFAULT_CHUNK).max(1)))
+    let (weight_bits, phase_bits) = req.precision().unwrap_or((5, 4));
+    Some(SolvePackKey {
+        bucket,
+        chunks: req.max_periods.div_ceil(DEFAULT_CHUNK).max(1),
+        rtl: req.rtl,
+        weight_bits,
+        phase_bits,
+    })
 }
 
 /// Collect one solve batch: `pending` (a job carried over from the
@@ -331,10 +360,17 @@ fn solve_one(job: SolveJob, metrics: &Metrics, select: EngineSelect, arena: &mut
         max_periods: job.req.max_periods,
         schedule: job.req.schedule,
         seed: job.req.seed,
+        precision: job.req.precision(),
         ..Default::default()
     };
     let job_select = if job.req.rtl {
-        EngineSelect::Rtl
+        // `shards` composes with `rtl`: K >= 2 emulates a K-device
+        // cluster (row-split weight memory, priced all-gather); 1 pins
+        // the plain single-device engine.
+        match job.req.shards {
+            Some(k) if k >= 2 => EngineSelect::RtlCluster { shards: k },
+            _ => EngineSelect::Rtl,
+        }
     } else {
         match job.req.shards {
             Some(1) => EngineSelect::Native,
@@ -344,25 +380,28 @@ fn solve_one(job: SolveJob, metrics: &Metrics, select: EngineSelect, arena: &mut
     };
     let m = job.req.problem.embed_dim();
     let batch = params.replicas.clamp(1, MAX_WAVE_REPLICAS);
-    // The key carries the weight-fabric choice (dense vs CSR) so a warm
-    // dense engine is never checked out for a sparse solve or vice
-    // versa — each population reprograms through its own install path.
+    // The key carries the weight-fabric choice (dense vs CSR) and — on
+    // the rtl fabrics — the precision point, so a warm dense engine is
+    // never checked out for a sparse solve and a warm 5-bit fabric
+    // never serves a 3-bit sweep request.
     let key = ArenaKey::for_solve(
         m,
         batch,
         params.chunk,
         job_select,
         wants_sparse(&job.req.problem),
+        params.precision,
     );
-    let mut engine =
-        match arena.checkout(key, metrics, || build_engine(m, batch, params.chunk, job_select)) {
-            Ok(engine) => engine,
-            Err(e) => {
-                metrics.record_solve_failure();
-                eprintln!("solve job {} failed to build an engine: {e:#}", job.req.id);
-                return;
-            }
-        };
+    let mut engine = match arena.checkout(key, metrics, || {
+        build_engine_cfg(params.cfg(m), batch, params.chunk, job_select)
+    }) {
+        Ok(engine) => engine,
+        Err(e) => {
+            metrics.record_solve_failure();
+            eprintln!("solve job {} failed to build an engine: {e:#}", job.req.id);
+            return;
+        }
+    };
     let progress = progress_fn(&job);
     let hooks = SolveHooks {
         cancel: job.cancel.as_deref(),
@@ -392,6 +431,9 @@ fn solve_one(job: SolveJob, metrics: &Metrics, select: EngineSelect, arena: &mut
             }
             if let Some(hw) = &result.hardware {
                 metrics.record_solve_hardware(hw.fast_cycles);
+                if hw.sync_fast_cycles > 0 {
+                    metrics.record_rtl_cluster_sync(hw.sync_fast_cycles);
+                }
             }
             // Receiver may have hung up (client gave up) — fine.
             let _ = job.reply.send(result);
@@ -443,6 +485,12 @@ fn solve_packed_batch(
         .unwrap_or(1)
         .next_power_of_two();
     let lanes = policy.max_lanes.max(1);
+    // Collection guarantees a homogeneous batch (the pack key carries
+    // the engine family and precision point), so the first job decides
+    // the shared fabric for all of them; an rtl *pool* (`select`) pins
+    // every batch to the emulated fabric even when no request asked.
+    let rtl = select == EngineSelect::Rtl || jobs.first().is_some_and(|j| j.req.rtl);
+    let precision = jobs.first().and_then(|j| j.req.precision());
     let entries: Vec<(IsingProblem, PortfolioParams)> = jobs
         .iter()
         .map(|j| {
@@ -453,19 +501,41 @@ fn solve_packed_batch(
                     max_periods: j.req.max_periods,
                     schedule: j.req.schedule,
                     seed: j.req.seed,
+                    precision,
                     ..Default::default()
                 },
             )
         })
         .collect();
-    let key = ArenaKey::Native {
-        n: bucket,
-        batch: lanes,
-        chunk: DEFAULT_CHUNK,
-        sparse: false,
+    let (weight_bits, phase_bits) = precision.unwrap_or((5, 4));
+    let cfg = match precision {
+        Some((wb, pb)) => NetworkConfig::with_precision(bucket, wb, pb),
+        None => NetworkConfig::paper(bucket),
+    };
+    let (key, pack_select) = if rtl {
+        (
+            ArenaKey::Rtl {
+                n: bucket,
+                batch: lanes,
+                chunk: DEFAULT_CHUNK,
+                weight_bits,
+                phase_bits,
+            },
+            EngineSelect::Rtl,
+        )
+    } else {
+        (
+            ArenaKey::Native {
+                n: bucket,
+                batch: lanes,
+                chunk: DEFAULT_CHUNK,
+                sparse: false,
+            },
+            EngineSelect::Native,
+        )
     };
     let mut engine = match arena.checkout(key, metrics, || {
-        build_engine(bucket, lanes, DEFAULT_CHUNK, EngineSelect::Native)
+        build_engine_cfg(cfg, lanes, DEFAULT_CHUNK, pack_select)
     }) {
         Ok(engine) => engine,
         Err(e) => {
@@ -509,6 +579,12 @@ fn solve_packed_batch(
                     result.sync_rounds,
                     result.engine,
                 );
+                if rtl {
+                    metrics.record_solve_rtl_packed();
+                }
+                if let Some(hw) = &result.hardware {
+                    metrics.record_solve_hardware(hw.fast_cycles);
+                }
                 let _ = job.reply.send(result);
             }
         }
@@ -672,11 +748,28 @@ mod tests {
         let a = solve_job(10, 8, 64, rtx.clone());
         let b = solve_job(14, 4, 57, rtx.clone()); // same bucket (16), same 8-chunk budget
         let key = solve_pack_key(&a.req, &policy).unwrap();
-        assert_eq!(key, (16, 8));
+        assert_eq!((key.bucket, key.chunks), (16, 8));
+        assert!(!key.rtl);
+        assert_eq!((key.weight_bits, key.phase_bits), (5, 4));
         assert_eq!(solve_pack_key(&b.req, &policy), Some(key));
         // Different bucket or different chunk budget: incompatible.
         assert_ne!(solve_pack_key(&solve_job(20, 8, 64, rtx.clone()).req, &policy), Some(key));
         assert_ne!(solve_pack_key(&solve_job(10, 8, 72, rtx.clone()).req, &policy), Some(key));
+        // Small rtl requests coalesce too — onto a *different* fabric
+        // than the native key, split further by precision point.
+        let mut r = solve_job(10, 8, 64, rtx.clone());
+        r.req.rtl = true;
+        let rkey = solve_pack_key(&r.req, &policy).unwrap();
+        assert!(rkey.rtl);
+        assert_ne!(rkey, key, "rtl and native requests never share an engine");
+        let mut r3 = solve_job(10, 8, 64, rtx.clone());
+        r3.req.rtl = true;
+        r3.req.weight_bits = Some(3);
+        assert_ne!(
+            solve_pack_key(&r3.req, &policy),
+            Some(rkey),
+            "sweep points never share a quantized fabric"
+        );
         // Never packable: shards override, oversized embedding or
         // replica count, packing disabled.
         let mut c = solve_job(10, 8, 64, rtx.clone());
@@ -693,6 +786,38 @@ mod tests {
         let mut s = solve_job(10, 8, 64, rtx.clone());
         s.req.problem = IsingProblem::from_edges(10, &[(0, 1, 1.0)]).unwrap();
         assert_eq!(solve_pack_key(&s.req, &policy), None);
+    }
+
+    #[test]
+    fn rtl_batch_packs_onto_one_emulated_fabric() {
+        // Two small rtl requests coalesce onto one lane-block rtl
+        // engine: each reply reports the emulated-hardware engine, a
+        // per-block SerialMac hardware share, and the packed-rtl meter
+        // advances once per job.
+        let metrics = Metrics::default();
+        let policy = SolvePackPolicy {
+            max_lanes: 8,
+            ..Default::default()
+        };
+        let mut arena = EngineArena::new(4);
+        let (rtx, rrx) = channel();
+        let mut jobs = vec![
+            solve_job(6, 4, 32, rtx.clone()),
+            solve_job(6, 4, 32, rtx.clone()),
+        ];
+        for j in &mut jobs {
+            j.req.rtl = true;
+        }
+        solve_packed_batch(jobs, &metrics, &policy, EngineSelect::Native, &mut arena);
+        for _ in 0..2 {
+            let r = rrx.try_recv().expect("packed rtl job must reply");
+            assert_eq!(r.engine, "rtl");
+            let hw = r.hardware.expect("rtl lanes report their hardware share");
+            assert!(hw.fast_cycles > 0);
+        }
+        let snap = metrics.snapshot();
+        assert_eq!(snap.solves_rtl_packed, 2);
+        assert_eq!(snap.solve_pack_fallbacks, 0);
     }
 
     #[test]

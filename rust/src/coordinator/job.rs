@@ -78,9 +78,19 @@ pub struct SolveRequest {
     /// Explicit shard-count override; `None` lets the solver pool pick
     /// the engine by its oscillator threshold (1 forces native).
     pub shards: Option<usize>,
-    /// Force the bit-true emulated-hardware engine for this request
-    /// (mutually exclusive with `shards`).
+    /// Force the bit-true emulated-hardware engine for this request.
+    /// Combined with `shards: K >= 2` the request runs on the emulated
+    /// `K`-device rtl cluster (row-split weight memory, priced phase
+    /// all-gather); `shards: 1` is plain single-device rtl.
     pub rtl: bool,
+    /// Precision-sweep override of the quantized weight width (3..=8
+    /// bits); `None` runs the paper's 5-bit weights.  Only legal with
+    /// `rtl: true` — the float fabrics have no quantized datapath.
+    pub weight_bits: Option<u32>,
+    /// Precision-sweep override of the phase-wheel resolution (3..=6
+    /// bits); `None` runs the paper's 4-bit wheel.  Only legal with
+    /// `rtl: true`.
+    pub phase_bits: Option<u32>,
     /// Attach a compact solve-lifecycle trace to the result
     /// (DESIGN_SOLVER.md §9).  Traced requests run solo — they never
     /// coalesce onto packed lane-block engines.
@@ -105,9 +115,21 @@ impl SolveRequest {
             seed: 1,
             shards: None,
             rtl: false,
+            weight_bits: None,
+            phase_bits: None,
             trace: false,
             stream: false,
         }
+    }
+
+    /// The request's precision sweep point, or `None` for the paper's
+    /// reference precision (5-bit weights, 4-bit phase wheel).  Only
+    /// `Some` when at least one of the two fields was overridden.
+    pub fn precision(&self) -> Option<(u32, u32)> {
+        if self.weight_bits.is_none() && self.phase_bits.is_none() {
+            return None;
+        }
+        Some((self.weight_bits.unwrap_or(5), self.phase_bits.unwrap_or(4)))
     }
 }
 

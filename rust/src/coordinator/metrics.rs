@@ -58,8 +58,17 @@ pub struct Metrics {
     /// (per-lane plateau / all-settled early exit) — capacity the
     /// batcher handed back for backfill.
     pub solve_lanes_retired: AtomicU64,
-    /// Solves served by the bit-true emulated-hardware (rtl) engine.
+    /// Solves served by the bit-true emulated-hardware (rtl) engine,
+    /// including its emulated multi-device cluster front end.
     pub solves_rtl: AtomicU64,
+    /// Completed rtl solves that shared a packed lane-block engine
+    /// (small `rtl: true` requests coalesced by the batcher).
+    pub solves_rtl_packed: AtomicU64,
+    /// Emulated fast-clock cycles spent on the cluster's per-period
+    /// phase all-gather (`HardwareCost::sync_fast_cycles`, summed over
+    /// completed rtl-cluster jobs) — the priced cost of scaling past
+    /// one device.
+    pub rtl_cluster_sync_cycles: AtomicU64,
     /// Emulated fast-clock cycles those solves consumed — the hardware
     /// time-to-solution meter, summed over completed rtl jobs.
     pub solve_fast_cycles: AtomicU64,
@@ -123,6 +132,8 @@ pub struct MetricsSnapshot {
     pub solve_batch_occupancy: f64,
     pub solve_lanes_retired: u64,
     pub solves_rtl: u64,
+    pub solves_rtl_packed: u64,
+    pub rtl_cluster_sync_cycles: u64,
     pub solve_fast_cycles: u64,
     pub solves_cancelled: u64,
     pub solve_pack_fallbacks: u64,
@@ -192,7 +203,7 @@ impl Metrics {
                 self.solves_sharded.fetch_add(1, Ordering::Relaxed);
                 self.solve_hist_sharded.record(total);
             }
-            "rtl" => {
+            "rtl" | "rtl-cluster" => {
                 self.solves_rtl.fetch_add(1, Ordering::Relaxed);
                 self.solve_hist_rtl.record(total);
             }
@@ -260,6 +271,18 @@ impl Metrics {
             .fetch_add(fast_cycles, Ordering::Relaxed);
     }
 
+    /// A completed rtl solve that shared a packed lane-block engine.
+    pub fn record_solve_rtl_packed(&self) {
+        self.solves_rtl_packed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Meter the emulated cluster's phase all-gather cycles (the
+    /// `sync_fast_cycles` share of a completed rtl-cluster solve).
+    pub fn record_rtl_cluster_sync(&self, sync_fast_cycles: u64) {
+        self.rtl_cluster_sync_cycles
+            .fetch_add(sync_fast_cycles, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let completed = self.completed.load(Ordering::Relaxed);
         let batches = self.batches.load(Ordering::Relaxed);
@@ -295,6 +318,8 @@ impl Metrics {
             ),
             solve_lanes_retired: self.solve_lanes_retired.load(Ordering::Relaxed),
             solves_rtl: self.solves_rtl.load(Ordering::Relaxed),
+            solves_rtl_packed: self.solves_rtl_packed.load(Ordering::Relaxed),
+            rtl_cluster_sync_cycles: self.rtl_cluster_sync_cycles.load(Ordering::Relaxed),
             solve_fast_cycles: self.solve_fast_cycles.load(Ordering::Relaxed),
             solves_cancelled: self.solves_cancelled.load(Ordering::Relaxed),
             solve_pack_fallbacks: self.solve_pack_fallbacks.load(Ordering::Relaxed),
@@ -365,6 +390,11 @@ impl MetricsSnapshot {
                 Json::num(self.solve_lanes_retired as f64),
             ),
             ("solves_rtl", Json::num(self.solves_rtl as f64)),
+            ("solves_rtl_packed", Json::num(self.solves_rtl_packed as f64)),
+            (
+                "rtl_cluster_sync_cycles",
+                Json::num(self.rtl_cluster_sync_cycles as f64),
+            ),
             ("solve_fast_cycles", Json::num(self.solve_fast_cycles as f64)),
             ("solves_cancelled", Json::num(self.solves_cancelled as f64)),
             (
@@ -385,7 +415,7 @@ impl MetricsSnapshot {
     pub fn prometheus(&self) -> String {
         use std::fmt::Write;
         let mut out = String::new();
-        let counters: [(&str, u64); 20] = [
+        let counters: [(&str, u64); 22] = [
             ("onn_jobs_submitted", self.submitted),
             ("onn_jobs_completed", self.completed),
             ("onn_jobs_timeouts", self.timeouts),
@@ -397,6 +427,8 @@ impl MetricsSnapshot {
             ("onn_solve_sync_rounds", self.solve_sync_rounds),
             ("onn_solve_batches", self.solve_batches),
             ("onn_solve_lanes_retired", self.solve_lanes_retired),
+            ("onn_solves_rtl_packed", self.solves_rtl_packed),
+            ("onn_rtl_cluster_sync_cycles", self.rtl_cluster_sync_cycles),
             ("onn_solve_fast_cycles", self.solve_fast_cycles),
             ("onn_solves_cancelled", self.solves_cancelled),
             ("onn_solve_pack_fallbacks", self.solve_pack_fallbacks),
@@ -520,6 +552,11 @@ mod tests {
         assert_eq!(s.solve_fast_cycles, 512);
         assert_eq!(s.solve_rtl.count, 1);
         assert_eq!(s.solve.count, 4, "pool-wide histogram sees every kind");
+        // The emulated cluster front end lands in the rtl column too.
+        m.record_solve_completion(Duration::from_millis(2), 32, 8, "rtl-cluster");
+        let s = m.snapshot();
+        assert_eq!(s.solves_rtl, 2, "rtl-cluster classifies as rtl");
+        assert_eq!(s.solve.count, 5);
         // Per-kind counts and histograms agree.
         assert_eq!(s.solves_native, s.solve_native.count);
         assert_eq!(s.solves_sharded, s.solve_sharded.count);
@@ -551,6 +588,8 @@ mod tests {
         m.record_solve_trivial();
         m.record_solve_sparse();
         m.record_solve_sparse();
+        m.record_solve_rtl_packed();
+        m.record_rtl_cluster_sync(768);
         m.record_arena_miss();
         m.record_arena_hit();
         m.record_arena_hit();
@@ -560,6 +599,8 @@ mod tests {
         assert_eq!(s.solve_pack_fallbacks, 1);
         assert_eq!(s.solves_trivial, 1);
         assert_eq!(s.solves_sparse, 2);
+        assert_eq!(s.solves_rtl_packed, 1);
+        assert_eq!(s.rtl_cluster_sync_cycles, 768);
         assert_eq!(s.arena_hits, 2);
         assert_eq!(s.arena_misses, 1);
         assert_eq!(s.arena_evictions, 1);
@@ -570,6 +611,8 @@ mod tests {
             "solve_pack_fallbacks",
             "solves_trivial",
             "solves_sparse",
+            "solves_rtl_packed",
+            "rtl_cluster_sync_cycles",
             "arena_hits",
             "arena_misses",
             "arena_evictions",
@@ -581,6 +624,8 @@ mod tests {
         assert!(text.contains("onn_solves_cancelled 1"));
         assert!(text.contains("onn_solves_trivial 1"));
         assert!(text.contains("onn_solves_sparse 2"));
+        assert!(text.contains("onn_solves_rtl_packed 1"));
+        assert!(text.contains("onn_rtl_cluster_sync_cycles 768"));
         assert!(text.contains("onn_arena_hits 2"));
         assert!(text.contains("onn_arena_hit_rate"));
     }

@@ -121,21 +121,23 @@ impl Router {
                 req.id
             ));
         }
-        // The solver pool runs paper-precision engines (16-step phase
-        // wheel); reject over-wide sector encodings here so the worker
-        // never fails internally on a client mistake.
-        if req.problem.sectors > 16 {
+        // Reject sector encodings wider than the request's phase wheel
+        // (the paper's 16 steps, or the sweep point's `2^phase_bits`)
+        // here so the worker never fails internally on a client mistake.
+        let wheel = 1usize << req.phase_bits.unwrap_or(4);
+        if req.problem.sectors > wheel {
             return Err(anyhow!(
-                "solve request {}: {} sectors exceed the 16-step phase wheel",
+                "solve request {}: {} sectors exceed the {wheel}-step phase wheel",
                 req.id,
                 req.problem.sectors
             ));
         }
-        // Placement overrides are exclusive: the emulated-hardware
-        // engine is single-fabric, so it cannot also be row-sharded.
-        if req.rtl && req.shards.is_some() {
+        // Precision sweep points only exist on the quantized rtl
+        // datapath; the float fabrics have no weight/phase wheel to
+        // narrow.  (Range validation is the wire layer's.)
+        if !req.rtl && (req.weight_bits.is_some() || req.phase_bits.is_some()) {
             return Err(anyhow!(
-                "solve request {}: 'rtl' and 'shards' are mutually exclusive",
+                "solve request {}: 'weight_bits'/'phase_bits' require 'rtl': true",
                 req.id
             ));
         }
@@ -362,8 +364,10 @@ mod tests {
         bad.shards = Some(4); // more shards than oscillators
         assert!(r.submit_solve(bad).is_err());
         let mut bad = solve_req(3);
-        bad.rtl = true;
-        bad.shards = Some(2); // placement overrides are exclusive
+        bad.weight_bits = Some(4); // sweep points need the quantized fabric
+        assert!(r.submit_solve(bad).is_err());
+        let mut bad = solve_req(3);
+        bad.phase_bits = Some(5);
         assert!(r.submit_solve(bad).is_err());
         let mut ok = solve_req(3);
         ok.shards = Some(3);
@@ -372,5 +376,22 @@ mod tests {
         ok.rtl = true;
         ok.trace = true;
         assert!(r.submit_solve(ok).is_ok(), "rtl + trace is a valid combo");
+        let mut ok = solve_req(3);
+        ok.rtl = true;
+        ok.shards = Some(2); // emulated two-device rtl cluster
+        assert!(r.submit_solve(ok).is_ok(), "rtl + shards is the cluster");
+        let mut ok = solve_req(3);
+        ok.rtl = true;
+        ok.weight_bits = Some(3);
+        ok.phase_bits = Some(5);
+        assert!(r.submit_solve(ok).is_ok(), "precision sweep rides on rtl");
+        // A wider phase wheel admits wider sector encodings — and the
+        // check tracks the sweep point, not the paper constant.
+        let mut wide = solve_req(3);
+        wide.problem.sectors = 17;
+        assert!(r.submit_solve(wide.clone()).is_err(), "17 > 2^4");
+        wide.rtl = true;
+        wide.phase_bits = Some(5);
+        assert!(r.submit_solve(wide).is_ok(), "17 sectors fit a 32-step wheel");
     }
 }

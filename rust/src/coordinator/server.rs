@@ -71,9 +71,11 @@ pub struct SolverPoolConfig {
     /// How long the first small solve in a window waits for company.
     pub pack_max_wait: Duration,
     /// Serve solve traffic on `runtime::rtl::RtlEngine`.  Overrides the
-    /// shard threshold (the emulated device is single-fabric) and
-    /// disables multi-problem packing (it has no lane blocks); an
-    /// explicit per-request `shards` override still wins.
+    /// shard threshold (the emulated device is single-fabric); small
+    /// requests still coalesce — the rtl engine packs them into
+    /// per-block weight banks (lane blocks).  An explicit per-request
+    /// `shards` override still wins (with `rtl` it selects the emulated
+    /// multi-device cluster).
     pub rtl: bool,
     /// Warm engines each solver worker parks between requests
     /// (`coordinator::arena`): a request whose geometry matches a
@@ -123,16 +125,10 @@ impl SolverPoolConfig {
     /// row-sharded fabric (embedding at or above `shard_threshold`)
     /// must never be diverted onto a packed native engine, so the
     /// packable bucket is clamped below the threshold.  An rtl pool
-    /// never packs: the emulated device has no lane blocks, and
-    /// silently serving packed requests on a float engine would change
-    /// the dynamics the operator asked for.
+    /// packs too: the emulated device carries per-block weight banks
+    /// (lane blocks), so small requests coalesce onto one shared
+    /// emulated fabric, bit-exact with their solo runs.
     pub fn pack(&self) -> SolvePackPolicy {
-        if self.rtl {
-            return SolvePackPolicy {
-                max_oscillators: 0,
-                ..SolvePackPolicy::default()
-            };
-        }
         SolvePackPolicy {
             max_oscillators: self
                 .pack_max_oscillators
@@ -405,6 +401,7 @@ pub fn solve_result_json(id: u64, res: &SolveResult) -> Json {
     ];
     if let Some(hw) = &res.hardware {
         fields.push(("hw_fast_cycles", Json::num(hw.fast_cycles as f64)));
+        fields.push(("hw_sync_fast_cycles", Json::num(hw.sync_fast_cycles as f64)));
         fields.push(("hw_emulated_s", Json::num(hw.emulated_s)));
         fields.push(("hw_fits_device", Json::Bool(hw.fits_device)));
     }
@@ -499,8 +496,10 @@ const MAX_WIRE_SHARDS: usize = 64;
 /// `"replicas"`, `"max_periods"`, `"schedule"` (geometric | linear |
 /// constant), `"noise"` (starting amplitude), `"seed"`, `"offset"`,
 /// `"shards"` (explicit engine override; absent = threshold rule),
-/// `"rtl"` (force the emulated-hardware engine; exclusive with
-/// `"shards"`), `"trace"` (attach a solve-lifecycle trace to the
+/// `"rtl"` (force the emulated-hardware engine; with `"shards": K >= 2`
+/// it selects the emulated K-device rtl cluster), `"weight_bits"` /
+/// `"phase_bits"` (precision sweep point, 3..=8 / 3..=6; require
+/// `"rtl": true`), `"trace"` (attach a solve-lifecycle trace to the
 /// result), `"stream"` (emit `{"type":"progress"}` lines mid-anneal —
 /// honored by the evented front end, DESIGN_SOLVER.md §10).
 pub(crate) fn parse_solve_request(v: &Json) -> Result<SolveRequest> {
@@ -571,16 +570,6 @@ pub(crate) fn parse_solve_request(v: &Json) -> Result<SolveRequest> {
         }
     }
     problem.sectors = v.get("sectors").and_then(Json::as_usize).unwrap_or(2);
-    // Validate here so a bad request fails at the router with a clear
-    // message instead of deep in the worker (which would drop the
-    // reply and count a client mistake as an internal failure).  16 is
-    // the paper-precision phase wheel every served engine uses.
-    if !(2..=16).contains(&problem.sectors) {
-        return Err(anyhow!(
-            "'sectors' = {} outside 2..=16 (the phase wheel has 16 steps)",
-            problem.sectors
-        ));
-    }
     problem.metadata.offset = v.get("offset").and_then(Json::as_f64).unwrap_or(0.0);
 
     let noise = v.get("noise").and_then(Json::as_f64).unwrap_or(0.6);
@@ -620,8 +609,37 @@ pub(crate) fn parse_solve_request(v: &Json) -> Result<SolveRequest> {
     let rtl = bool_field("rtl")?;
     let trace = bool_field("trace")?;
     let stream = bool_field("stream")?;
-    if rtl && shards.is_some() {
-        return Err(anyhow!("'rtl' and 'shards' are mutually exclusive"));
+    // Precision sweep fields: only the quantized rtl datapath has a
+    // weight width / phase wheel to narrow, so they require
+    // `"rtl": true` (a `"shards"` override then selects the cluster).
+    let bits_field = |key: &str, lo: u32, hi: u32| -> Result<Option<u32>> {
+        match v.get(key) {
+            None => Ok(None),
+            Some(b) => {
+                let bits =
+                    b.as_usize().ok_or_else(|| anyhow!("'{key}' must be an integer"))? as u32;
+                if !(lo..=hi).contains(&bits) {
+                    return Err(anyhow!("'{key}' = {bits} outside {lo}..={hi}"));
+                }
+                Ok(Some(bits))
+            }
+        }
+    };
+    let weight_bits = bits_field("weight_bits", 3, 8)?;
+    let phase_bits = bits_field("phase_bits", 3, 6)?;
+    if !rtl && (weight_bits.is_some() || phase_bits.is_some()) {
+        return Err(anyhow!("'weight_bits'/'phase_bits' require 'rtl': true"));
+    }
+    // Validate sectors here so a bad request fails with a clear message
+    // instead of deep in the worker (which would drop the reply and
+    // count a client mistake as an internal failure).  The wheel is the
+    // paper's 16 steps unless the request swept `phase_bits`.
+    let wheel = 1usize << phase_bits.unwrap_or(4);
+    if !(2..=wheel).contains(&problem.sectors) {
+        return Err(anyhow!(
+            "'sectors' = {} outside 2..={wheel} (the phase wheel has {wheel} steps)",
+            problem.sectors
+        ));
     }
     Ok(SolveRequest {
         id: v.get("id").and_then(Json::as_usize).unwrap_or(0) as u64,
@@ -632,6 +650,8 @@ pub(crate) fn parse_solve_request(v: &Json) -> Result<SolveRequest> {
         seed: v.get("seed").and_then(Json::as_usize).unwrap_or(1) as u64,
         shards,
         rtl,
+        weight_bits,
+        phase_bits,
         trace,
         stream,
     })
@@ -752,7 +772,7 @@ mod tests {
     }
 
     #[test]
-    fn rtl_pool_pins_selection_and_disables_packing() {
+    fn rtl_pool_pins_selection_and_still_packs() {
         let cfg = SolverPoolConfig {
             rtl: true,
             ..Default::default()
@@ -760,8 +780,8 @@ mod tests {
         assert_eq!(cfg.select(), EngineSelect::Rtl);
         assert_eq!(
             cfg.pack().max_oscillators,
-            0,
-            "the emulated device has no lane blocks, so nothing may pack"
+            SolverPoolConfig::default().pack().max_oscillators,
+            "the rtl engine has lane blocks, so small requests coalesce"
         );
         assert_ne!(SolverPoolConfig::default().select(), EngineSelect::Rtl);
     }
@@ -846,6 +866,38 @@ mod tests {
         )
         .unwrap();
         assert!(streaming.stream);
+        // rtl composes with shards: K >= 2 is the emulated K-device
+        // cluster, no longer a wire error.
+        let cluster = parse_solve_request(
+            &Json::parse(r#"{"n":2,"j":[0,-1,-1,0],"rtl":true,"shards":2}"#).unwrap(),
+        )
+        .unwrap();
+        assert!(cluster.rtl);
+        assert_eq!(cluster.shards, Some(2));
+        // Precision sweep fields parse, validate their ranges, and
+        // require the quantized rtl datapath.
+        let swept = parse_solve_request(
+            &Json::parse(r#"{"n":2,"j":[0,-1,-1,0],"rtl":true,"weight_bits":4,"phase_bits":5}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(swept.weight_bits, Some(4));
+        assert_eq!(swept.phase_bits, Some(5));
+        assert_eq!(swept.precision(), Some((4, 5)));
+        let default_precision = parse_solve_request(
+            &Json::parse(r#"{"n":2,"j":[0,-1,-1,0],"rtl":true}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(default_precision.precision(), None, "paper precision");
+        // A swept phase wheel widens the sector ceiling.
+        let wide = parse_solve_request(
+            &Json::parse(
+                r#"{"n":2,"j":[0,-1,-1,0],"rtl":true,"phase_bits":6,"sectors":32}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(wide.problem.sectors, 32);
         for bad in [
             r#"{"j":[0,0,0,0]}"#,                      // missing n
             r#"{"n":2}"#,                              // missing couplings
@@ -864,7 +916,14 @@ mod tests {
             r#"{"n":2,"j":[0,1,1,0],"rtl":1}"#,        // rtl must be boolean
             r#"{"n":2,"j":[0,1,1,0],"trace":"yes"}"#,  // trace must be boolean
             r#"{"n":2,"j":[0,1,1,0],"stream":0}"#,     // stream must be boolean
-            r#"{"n":2,"j":[0,1,1,0],"rtl":true,"shards":2}"#, // exclusive overrides
+            r#"{"n":2,"j":[0,1,1,0],"weight_bits":4}"#, // precision needs rtl
+            r#"{"n":2,"j":[0,1,1,0],"phase_bits":5}"#,  // precision needs rtl
+            r#"{"n":2,"j":[0,1,1,0],"rtl":true,"weight_bits":2}"#, // below 3 bits
+            r#"{"n":2,"j":[0,1,1,0],"rtl":true,"weight_bits":9}"#, // above 8 bits
+            r#"{"n":2,"j":[0,1,1,0],"rtl":true,"phase_bits":2}"#,  // below 3 bits
+            r#"{"n":2,"j":[0,1,1,0],"rtl":true,"phase_bits":7}"#,  // above 6 bits
+            r#"{"n":2,"j":[0,1,1,0],"rtl":true,"weight_bits":"x"}"#, // non-integer
+            r#"{"n":2,"j":[0,1,1,0],"rtl":true,"phase_bits":3,"sectors":10}"#, // 10 > 2^3
         ] {
             assert!(
                 parse_solve_request(&Json::parse(bad).unwrap()).is_err(),

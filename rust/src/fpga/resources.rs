@@ -188,6 +188,93 @@ pub fn hybrid(cfg: &NetworkConfig, d: &Device) -> ResourceEstimate {
     }
 }
 
+/// Structural estimate for one device of an emulated multi-FPGA hybrid
+/// cluster: the device hosts `rows` of the `cfg.n`-oscillator design's
+/// row-split weight memory and the serial MACs for those rows only, but
+/// every MAC still walks all `cfg.n` inputs — so datapath widths
+/// (sum/comparator/address) stay pinned to the full network while the
+/// per-oscillator replication count drops to `rows`.  The extra terms
+/// over a scaled-down [`hybrid`] are the cluster link: a phase
+/// all-gather buffer holding the whole network's phase words plus the
+/// serial-link FSM and CDC glue.
+pub fn hybrid_cluster_shard(cfg: &NetworkConfig, rows: usize, d: &Device) -> ResourceEstimate {
+    let n = cfg.n;
+    let rows = rows.max(1).min(n);
+    let w = cfg.weight_bits as usize;
+    let pb = cfg.phase_bits as usize;
+    let p = cfg.period();
+    let sw = c::sum_width(n, w);
+
+    let (dsps, fabric_macs) = hybrid_mac_mapping(rows, d);
+
+    let per_osc_luts = c::distributed_ram_luts(n, 1)
+        + c::counter_cost(c::sum_width(n, 1) - 1).0
+        + c::comparator_luts(sw)
+        + c::mux_luts(p, 1)
+        + c::adder_luts(pb)
+        + 34;
+    let fabric_mac_luts = fabric_macs * (c::negate_mux_luts(w) + c::adder_luts(sw));
+    // Cluster link: an n x pb phase all-gather buffer (distributed RAM)
+    // plus serial-link framing/arbitration FSM and CDC glue.
+    let link_luts = c::distributed_ram_luts(n, pb) + 96;
+    let struct_luts = rows * per_osc_luts + fabric_mac_luts + link_luts;
+
+    let per_osc_ffs = c::register_ffs(p)
+        + c::register_ffs(pb)
+        + c::counter_cost(pb).1
+        + 2
+        + c::register_ffs(sw) * 2
+        + c::register_ffs(c::sum_width(n, 1) - 1)
+        + 28;
+    let link_ffs = c::register_ffs(pb) * 2 + 64; // link shift register + FSM/CDC
+    let struct_ffs = rows * per_osc_ffs + link_ffs;
+
+    // Weight memory: one n x w row per BRAM18 port while a row fits the
+    // 18Kb port, deeper row stacks otherwise; dual-ported -> 2 rows per
+    // BRAM18; plus 2 blocks of link I/O buffering.
+    let row_ports = (n * w).div_ceil(18 * 1024);
+    let raw_bram18 = (rows * row_ports.max(1)).div_ceil(2) + 2;
+    let bram36 = ((raw_bram18 as f64 / 2.0) * HA_BRAM_PNR_FACTOR).ceil() as usize;
+
+    ResourceEstimate {
+        luts: (struct_luts as f64 * ha_congestion(rows)).round() as usize + HA_INFRA_LUTS,
+        ffs: struct_ffs + HA_INFRA_FFS,
+        dsps,
+        bram18: bram36 * 2,
+    }
+}
+
+/// Largest fully connected `n` an emulated `devices`-FPGA hybrid
+/// cluster fits at the given precision: every device must fit its own
+/// row share (`ceil(n / devices)` rows — the widest shard of the
+/// leader's split).  At `devices == 1` this matches
+/// [`max_oscillators`]'s hybrid answer modulo the link overhead.
+pub fn max_oscillators_hybrid_cluster(
+    d: &Device,
+    devices: usize,
+    phase_bits: u32,
+    weight_bits: u32,
+) -> usize {
+    let devices = devices.max(1);
+    let mut best = 0;
+    let mut n = 1;
+    while n < 100_000 {
+        let cfg = NetworkConfig {
+            n,
+            phase_bits,
+            weight_bits,
+        };
+        let shard = hybrid_cluster_shard(&cfg, n.div_ceil(devices), d);
+        if shard.fits(d) {
+            best = n;
+            n += 1;
+        } else {
+            break;
+        }
+    }
+    best
+}
+
 /// Estimate for an architecture by name ("recurrent" / "hybrid").
 pub fn estimate(arch: &str, cfg: &NetworkConfig, d: &Device) -> ResourceEstimate {
     match arch {
@@ -316,6 +403,28 @@ mod tests {
         assert_eq!(hybrid_mac_mapping(300, &d), (150, 0)); // packed
         assert_eq!(hybrid_mac_mapping(440, &d), (220, 0));
         assert_eq!(hybrid_mac_mapping(506, &d), (220, 66)); // spill
+    }
+
+    #[test]
+    fn cluster_shards_scale_capacity_past_one_device() {
+        let d = zynq7020();
+        let single = max_oscillators("hybrid", &d, 4, 5);
+        let two = max_oscillators_hybrid_cluster(&d, 2, 4, 5);
+        let four = max_oscillators_hybrid_cluster(&d, 4, 4, 5);
+        assert!(
+            two > single,
+            "two devices must fit more than one: {two} vs {single}"
+        );
+        assert!(four > two, "capacity keeps growing with devices: {four} vs {two}");
+        // A row share past the single-device fit must itself not fit —
+        // the per-shard wall is real, not a rubber stamp.
+        let big = NetworkConfig::paper(4 * single);
+        assert!(!hybrid_cluster_shard(&big, 4 * single, &d).fits(&d));
+        // Paper-size network split two ways: each shard fits with room.
+        let cfg506 = NetworkConfig::paper(506);
+        let shard = hybrid_cluster_shard(&cfg506, 253, &d);
+        assert!(shard.fits(&d));
+        assert!(shard.dsps <= hybrid(&cfg506, &d).dsps);
     }
 
     #[test]

@@ -47,6 +47,45 @@ pub fn logic_frequency_hybrid(n: usize, d: &Device) -> f64 {
     (1000.0 / t_ns).min(FABRIC_FMAX_MHZ)
 }
 
+/// Per-device link handshake cost of one cluster all-gather, in fast
+/// cycles: start-of-frame arbitration plus the CDC resync at the
+/// receiver, paid once per participating device per exchange.
+pub const CLUSTER_HANDSHAKE_CYCLES: u64 = 4;
+
+/// Fast cycles one emulated multi-FPGA cluster spends synchronizing
+/// per oscillation period: after every one of the `2^phase_bits` phase
+/// steps each device broadcasts the phases of the rows it owns over
+/// the shared serial link, so the whole network's `n` phase words
+/// cross the wire once per step, plus a fixed per-device handshake
+/// ([`CLUSTER_HANDSHAKE_CYCLES`]).  A single device never synchronizes
+/// (0 cycles), which keeps the cluster cost model degenerate with the
+/// single-fabric one at `devices == 1`.
+pub fn cluster_sync_cycles(devices: usize, n: usize, phase_bits: u32) -> u64 {
+    if devices <= 1 {
+        return 0;
+    }
+    let steps = 1u64 << phase_bits;
+    steps * (n as u64 + CLUSTER_HANDSHAKE_CYCLES * devices as u64)
+}
+
+/// Hybrid-architecture logic frequency (MHz) for one cluster device
+/// carrying `rows` of an `n`-oscillator design: the serial-MAC path
+/// still walks all `n` inputs (the `sqrt(n)` routing-spread term), but
+/// the DSP spill penalty is set by the *rows the device hosts* — the
+/// reason a row-split cluster avoids the fabric-MAC kink a single
+/// device would pay past its packed-DSP capacity.
+pub fn logic_frequency_hybrid_shard(n: usize, rows: usize, d: &Device) -> f64 {
+    let nf = n.max(2) as f64;
+    let (_, fabric) = hybrid_mac_mapping(rows.max(1), d);
+    let spill_penalty = if fabric > 0 {
+        2.0 + 0.01 * fabric as f64
+    } else {
+        0.0
+    };
+    let t_ns = 6.0 + 0.5 * nf.sqrt() + spill_penalty;
+    (1000.0 / t_ns).min(FABRIC_FMAX_MHZ)
+}
+
 /// Oscillation frequency (kHz) for the recurrent design: logic clock
 /// divided by the FSM cycles per phase step and the 2^pb steps/period.
 pub fn oscillation_frequency_recurrent(cfg: &NetworkConfig) -> f64 {
@@ -194,6 +233,44 @@ mod tests {
             let want = dense * (n + SYNC_OVERHEAD_CYCLES) as f64
                 / (nnz + SYNC_OVERHEAD_CYCLES as f64);
             assert!((f - want).abs() < 1e-9 * want, "nnz={nnz}: {f} vs {want}");
+        }
+    }
+
+    #[test]
+    fn cluster_sync_is_free_on_one_device_and_priced_past_it() {
+        // Degenerate case: a single fabric never all-gathers.
+        assert_eq!(cluster_sync_cycles(1, 506, 4), 0);
+        assert_eq!(cluster_sync_cycles(0, 506, 4), 0);
+        // Two devices at paper precision: 16 steps, each moving 506
+        // phase words plus 2 handshakes of 4 cycles.
+        assert_eq!(cluster_sync_cycles(2, 506, 4), 16 * (506 + 2 * 4));
+        // Monotone in device count (handshakes) and network size (payload).
+        assert!(cluster_sync_cycles(3, 506, 4) > cluster_sync_cycles(2, 506, 4));
+        assert!(cluster_sync_cycles(2, 1000, 4) > cluster_sync_cycles(2, 506, 4));
+        // Doubling the phase resolution doubles the exchanges per period.
+        assert_eq!(
+            cluster_sync_cycles(2, 506, 5),
+            2 * cluster_sync_cycles(2, 506, 4)
+        );
+    }
+
+    #[test]
+    fn shard_frequency_avoids_the_spill_a_single_device_pays() {
+        let d = zynq7020();
+        // 600 oscillators spill fabric MACs on one device; 300 rows per
+        // cluster device stay inside the packed-DSP capacity, so the
+        // shard clock is strictly faster at the same network size.
+        let single = logic_frequency_hybrid(600, &d);
+        let shard = logic_frequency_hybrid_shard(600, 300, &d);
+        assert!(shard > single, "{shard} vs {single}");
+        // A shard carrying every row degenerates to the single-device
+        // model bit-for-bit.
+        for n in [48, 300, 506, 600] {
+            assert_eq!(
+                logic_frequency_hybrid_shard(n, n, &d).to_bits(),
+                logic_frequency_hybrid(n, &d).to_bits(),
+                "n={n}"
+            );
         }
     }
 

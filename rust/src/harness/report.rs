@@ -348,6 +348,75 @@ pub fn solver_bench_report(doc: &Json) -> String {
             out.push_str(&t.render());
         }
     }
+    if let Some(rp) = doc.get("rtl_packed").and_then(Json::as_arr) {
+        if !rp.is_empty() {
+            let mut t = Table::new(
+                "RTL lane-bank packing: shared emulated fabric vs one device per \
+                 request (bit-exact, cycle parity asserted)",
+                &[
+                    "Bucket N",
+                    "Problems",
+                    "Lanes",
+                    "Packed cycles",
+                    "Solo cycles",
+                    "Packed solves/s (emu)",
+                    "Solo solves/s (emu)",
+                    "Packed host [s]",
+                    "Solo host [s]",
+                ],
+            );
+            for p in rp {
+                t.row(&[
+                    fmt_f(num(p, "bucket_n"), 0),
+                    fmt_f(num(p, "problems"), 0),
+                    fmt_f(num(p, "lanes"), 0),
+                    fmt_f(num(p, "packed_fast_cycles"), 0),
+                    fmt_f(num(p, "solo_fast_cycles"), 0),
+                    fmt_f(num(p, "packed_emulated_solves_per_sec"), 0),
+                    fmt_f(num(p, "solo_emulated_solves_per_sec"), 0),
+                    fmt_f(num(p, "packed_host_median_s"), 3),
+                    fmt_f(num(p, "solo_host_median_s"), 3),
+                ]);
+            }
+            out.push_str(&t.render());
+        }
+    }
+    if let Some(rc) = doc.get("rtl_cluster").and_then(Json::as_arr) {
+        if !rc.is_empty() {
+            let mut t = Table::new(
+                "Emulated multi-FPGA cluster: time-to-solution past the \
+                 single-device fit (Table 5 anchor: max #oscillators per Zynq-7020)",
+                &[
+                    "N",
+                    "Devices",
+                    "1-dev fit",
+                    "Fits/shard",
+                    "Periods",
+                    "Compute cycles",
+                    "Sync cycles",
+                    "f_logic [MHz]",
+                    "Emulated [s]",
+                    "Host sim [s]",
+                ],
+            );
+            for p in rc {
+                let fits = p.get("fits_device").and_then(Json::as_bool).unwrap_or(false);
+                t.row(&[
+                    fmt_f(num(p, "n"), 0),
+                    fmt_f(num(p, "shards"), 0),
+                    fmt_f(num(p, "single_device_fit"), 0),
+                    (if fits { "yes" } else { "NO" }).to_string(),
+                    fmt_f(num(p, "periods"), 0),
+                    fmt_f(num(p, "compute_fast_cycles"), 0),
+                    fmt_f(num(p, "sync_fast_cycles"), 0),
+                    fmt_f(num(p, "f_logic_mhz"), 1),
+                    format!("{:.3e}", num(p, "emulated_s")),
+                    fmt_f(num(p, "host_s"), 3),
+                ]);
+            }
+            out.push_str(&t.render());
+        }
+    }
     if let Some(lat) = doc.get("latency").and_then(Json::as_arr) {
         if !lat.is_empty() {
             let mut t = Table::new(
@@ -465,8 +534,8 @@ mod tests {
     #[test]
     fn solver_bench_report_renders_all_sections() {
         use crate::harness::solverbench::{
-            bench_json, ConvergencePoint, LatencyPoint, PackedPoint, RtlPoint, SolverBench,
-            SparsePoint, ThroughputPoint,
+            bench_json, ConvergencePoint, LatencyPoint, PackedPoint, RtlClusterPoint,
+            RtlPackedPoint, RtlPoint, SolverBench, SparsePoint, ThroughputPoint,
         };
         use crate::telemetry::LatencySummary;
         let pts = vec![ThroughputPoint {
@@ -502,10 +571,42 @@ mod tests {
             emulated_s: 7.2e-5,
             host_s: 0.01,
         }];
+        let rtl_packed = vec![RtlPackedPoint {
+            bucket_n: 16,
+            problems: 4,
+            lanes: 8,
+            replicas: 2,
+            total_periods: 128,
+            packed_fast_cycles: 45_056,
+            solo_fast_cycles: 45_056,
+            packed_emulated_s: 4.5e-4,
+            solo_emulated_s: 4.5e-4,
+            packed_emulated_solves_per_sec: 8888.0,
+            solo_emulated_solves_per_sec: 8888.0,
+            packed_host_median_s: 0.04,
+            solo_host_median_s: 0.11,
+        }];
+        let rtl_cluster = vec![RtlClusterPoint {
+            n: 556,
+            shards: 2,
+            replicas: 2,
+            periods: 8,
+            single_device_fit: 506,
+            fits_device: true,
+            cut: 1234,
+            fast_cycles: 300_000,
+            sync_fast_cycles: 75_000,
+            compute_fast_cycles: 225_000,
+            f_logic_mhz: 100.0,
+            emulated_s: 3.0e-3,
+            host_s: 0.5,
+        }];
         let bench = SolverBench {
             points: pts,
             packed,
             rtl,
+            rtl_packed,
+            rtl_cluster,
             latency: vec![LatencyPoint {
                 engine: "native",
                 n: 8,
@@ -550,6 +651,11 @@ mod tests {
         assert!(s.contains("Solver throughput"), "{s}");
         assert!(s.contains("Packed serving"), "{s}");
         assert!(s.contains("bit-true RTL"), "{s}");
+        assert!(s.contains("RTL lane-bank packing"), "{s}");
+        assert!(s.contains("Emulated multi-FPGA cluster"), "{s}");
+        assert!(s.contains("Table 5 anchor"), "{s}");
+        assert!(s.contains("506"), "single-device fit anchor renders: {s}");
+        assert!(s.contains("75000"), "sync-cycle breakdown renders: {s}");
         assert!(s.contains("native"), "{s}");
         assert!(s.contains("latency percentiles"), "{s}");
         assert!(s.contains("p99 [ms]"), "{s}");

@@ -20,14 +20,16 @@ use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::server::{serve_tcp, Coordinator, SolverPoolConfig};
 use crate::coordinator::stream::serve_evented;
 use crate::fpga::device::zynq7020;
+use crate::fpga::resources::max_oscillators;
 use crate::fpga::timing::{oscillation_frequency_hybrid, oscillation_frequency_hybrid_sparse};
 use crate::harness::bench;
 use crate::onn::config::NetworkConfig;
+use crate::runtime::rtl::RtlEngine;
 use crate::solver::anneal::Schedule;
 use crate::solver::graph::Graph;
 use crate::solver::portfolio::{
-    solve_native, solve_packed_native, solve_with, solve_with_trace, wants_sparse, EngineSelect,
-    PortfolioParams, DEFAULT_CHUNK, MAX_WAVE_REPLICAS,
+    solve_native, solve_packed, solve_packed_native, solve_with, solve_with_trace, wants_sparse,
+    EngineSelect, PortfolioParams, DEFAULT_CHUNK, MAX_WAVE_REPLICAS,
 };
 use crate::solver::problem::IsingProblem;
 use crate::solver::reductions::{coloring, max_cut, max_cut_sparse};
@@ -524,6 +526,258 @@ pub fn packed_throughput(
     }
 }
 
+/// One packed-vs-solo measurement on the *emulated hardware* fabric: a
+/// mix of equal-size max-cut instances solved once through a shared
+/// rtl lane-bank engine ([`solve_packed`] on [`RtlEngine`]) and once
+/// one-engine-per-request at identical seeds.  Equal sizes make the
+/// bucket exactly each instance's embedding (no padding rows), so the
+/// packed run must burn *exactly* the solo runs' fast cycles — asserted
+/// before anything is recorded — and the row shows lane-bank packing
+/// costs nothing in emulated time while the host serving rate improves.
+#[derive(Debug, Clone)]
+pub struct RtlPackedPoint {
+    /// Oscillator bucket of the shared rtl engine (== every instance's
+    /// embedding dimension, so cycle parity with solo runs is exact).
+    pub bucket_n: usize,
+    pub problems: usize,
+    /// Lane capacity of the packed engine (problems beyond it backfill
+    /// retired lane blocks mid-run).
+    pub lanes: usize,
+    pub replicas: usize,
+    /// Aggregate periods driven across the mix (identical packed vs
+    /// solo — the two paths are bit-exact).
+    pub total_periods: usize,
+    /// Emulated fast-clock cycles of the packed run, summed over the
+    /// per-block `SerialMac` meters.
+    pub packed_fast_cycles: u64,
+    /// The same mix one-engine-per-request; equals
+    /// `packed_fast_cycles` exactly (asserted).
+    pub solo_fast_cycles: u64,
+    pub packed_emulated_s: f64,
+    pub solo_emulated_s: f64,
+    /// Emulated solves/sec through the shared fabric — the CI gate: it
+    /// must be >= the solo rate.
+    pub packed_emulated_solves_per_sec: f64,
+    pub solo_emulated_solves_per_sec: f64,
+    /// Host wall medians: one engine program + one packed run vs
+    /// `problems` engine programs — the serving-path win.
+    pub packed_host_median_s: f64,
+    pub solo_host_median_s: f64,
+}
+
+/// Measure rtl lane-bank packing against one-engine-per-request on a
+/// mix of `problems` equal-size max-cut instances
+/// (`solve-bench --rtl-packed`).  Gates asserted before recording:
+/// bit-exact outcomes per entry, exact fast-cycle parity, and packed
+/// emulated solves/sec no worse than solo.
+pub fn rtl_packed_throughput(
+    problems: usize,
+    replicas: usize,
+    periods: usize,
+    seed: u64,
+) -> RtlPackedPoint {
+    assert!(problems >= 2, "a packed rtl row needs a mix sharing the fabric");
+    let replicas = replicas.clamp(1, MAX_WAVE_REPLICAS);
+    // Equal sizes, and max-cut embeds 1:1, so the bucket equals every
+    // entry's embedding: the packed engine carries no padding rows and
+    // per-block cycles must equal a dedicated engine's run exactly.
+    let n = 16usize;
+    let mut rng = Rng::new(seed);
+    let mut entries: Vec<(IsingProblem, PortfolioParams)> = Vec::with_capacity(problems);
+    for i in 0..problems {
+        let g = Graph::random(n, 0.3, &mut rng);
+        let params = PortfolioParams {
+            replicas,
+            max_periods: periods,
+            seed: seed.wrapping_add(1 + i as u64),
+            plateau_chunks: 0, // steady work: rate the full budget
+            ..Default::default()
+        };
+        entries.push((max_cut(&g), params));
+    }
+    let lanes = (problems * replicas).min(MAX_WAVE_REPLICAS).max(replicas);
+    let cfg = NetworkConfig::paper(n);
+    // One probe run holds the bit-exactness and cycle-parity gates and
+    // pins the emulated costs every timed iteration will reproduce
+    // (the rtl fabric is deterministic per seed).
+    let mut probe_engine = RtlEngine::new(cfg, lanes, DEFAULT_CHUNK);
+    let packed_probe = solve_packed(&mut probe_engine, &entries).expect("rtl packed probe");
+    let mut solo_hw = Vec::with_capacity(problems);
+    let mut total_periods = 0usize;
+    for ((problem, params), out) in entries.iter().zip(&packed_probe) {
+        let solo = solve_with(problem, params, EngineSelect::Rtl).expect("rtl solo probe");
+        assert_eq!(
+            (out.best_energy.to_bits(), &out.best_spins, out.periods),
+            (solo.best_energy.to_bits(), &solo.best_spins, solo.periods),
+            "rtl packed probe diverged from solo"
+        );
+        total_periods += out.periods;
+        solo_hw.push(solo.hardware.clone().expect("rtl solo outcomes report hardware"));
+    }
+    let block_hw = |o: &crate::solver::portfolio::SolveOutcome| {
+        o.hardware.clone().expect("rtl packed outcomes report hardware")
+    };
+    let packed_fast_cycles: u64 = packed_probe.iter().map(|o| block_hw(o).fast_cycles).sum();
+    let solo_fast_cycles: u64 = solo_hw.iter().map(|h| h.fast_cycles).sum();
+    assert_eq!(
+        packed_fast_cycles, solo_fast_cycles,
+        "lane-bank packing must burn exactly the solo runs' emulated cycles"
+    );
+    let packed_emulated_s: f64 = packed_probe.iter().map(|o| block_hw(o).emulated_s).sum();
+    let solo_emulated_s: f64 = solo_hw.iter().map(|h| h.emulated_s).sum();
+    let packed_esps = problems as f64 / packed_emulated_s.max(1e-12);
+    let solo_esps = problems as f64 / solo_emulated_s.max(1e-12);
+    assert!(
+        packed_esps >= solo_esps * (1.0 - 1e-9),
+        "packed emulated solves/sec regressed vs solo: {packed_esps} < {solo_esps}"
+    );
+    let rp = bench::bench(&format!("solver/rtl_packed_x{problems}_n{n}"), 1, 3, || {
+        let mut engine = RtlEngine::new(cfg, lanes, DEFAULT_CHUNK);
+        solve_packed(&mut engine, &entries).expect("rtl packed");
+    });
+    let rs = bench::bench(&format!("solver/rtl_solo_x{problems}_n{n}"), 1, 3, || {
+        for (problem, params) in &entries {
+            solve_with(problem, params, EngineSelect::Rtl).expect("rtl solo");
+        }
+    });
+    RtlPackedPoint {
+        bucket_n: n,
+        problems,
+        lanes,
+        replicas,
+        total_periods,
+        packed_fast_cycles,
+        solo_fast_cycles,
+        packed_emulated_s,
+        solo_emulated_s,
+        packed_emulated_solves_per_sec: packed_esps,
+        solo_emulated_solves_per_sec: solo_esps,
+        packed_host_median_s: rp.median.as_secs_f64(),
+        solo_host_median_s: rs.median.as_secs_f64(),
+    }
+}
+
+/// One emulated multi-FPGA cluster measurement: a max-cut instance
+/// *larger than the single-device fit* solved on the rtl cluster
+/// engine — row ranges of the quantized weight memory sharded over
+/// `shards` emulated Zynq-7020s with the per-period phase all-gather
+/// priced by `fpga::timing::cluster_sync_cycles`.  A small-n probe
+/// asserts the cluster is bit-exact with the single-device engine
+/// before the big instance runs.
+#[derive(Debug, Clone)]
+pub struct RtlClusterPoint {
+    pub n: usize,
+    /// Emulated devices the rows are sharded over.
+    pub shards: usize,
+    pub replicas: usize,
+    /// Periods the cluster portfolio drove.
+    pub periods: usize,
+    /// Largest hybrid design that fits one Zynq-7020 at paper
+    /// precision (paper Table 5) — the row's `n` must exceed it.
+    pub single_device_fit: usize,
+    /// Every shard fits its device (asserted).
+    pub fits_device: bool,
+    pub cut: i64,
+    /// Emulated fast cycles: max-over-devices compute + all-gather
+    /// sync.
+    pub fast_cycles: u64,
+    /// The all-gather share of `fast_cycles` — the sync-cost breakdown
+    /// a cluster pays that one device never does.
+    pub sync_fast_cycles: u64,
+    /// `fast_cycles - sync_fast_cycles`.
+    pub compute_fast_cycles: u64,
+    pub f_logic_mhz: f64,
+    /// Emulated cluster time-to-solution in seconds.
+    pub emulated_s: f64,
+    /// Host wall seconds the cycle-accurate cluster simulation took.
+    pub host_s: f64,
+}
+
+/// Solve one max-cut instance ~10% past the single-device oscillator
+/// fit on a `shards`-device emulated cluster and price the run
+/// (`solve-bench --rtl-cluster`).  Gates asserted before recording:
+/// small-n bit-exactness with the single-device engine, every shard
+/// fits its device, and the all-gather cycles are a nonzero minority
+/// of the meter.
+pub fn rtl_cluster_scale(
+    shards: usize,
+    replicas: usize,
+    periods: usize,
+    seed: u64,
+) -> RtlClusterPoint {
+    let shards = shards.max(2);
+    // The row demonstrates capacity, not search effort, and the host
+    // pays cycle-accurate n^2 work per period — clamp the budget so
+    // the point stays CI-cheap.
+    let replicas = replicas.clamp(1, 2);
+    let periods = periods.clamp(1, 8);
+    let d = zynq7020();
+    let pcfg = NetworkConfig::paper(1);
+    let single_fit = max_oscillators("hybrid", &d, pcfg.phase_bits, pcfg.weight_bits);
+    let n = single_fit + single_fit / 10;
+    // Bit-exactness first, at a size where the single-device engine
+    // still exists: the cluster must be the same computation.
+    {
+        let mut rng = Rng::new(seed);
+        let g = Graph::random(12, 0.4, &mut rng);
+        let problem = max_cut(&g);
+        let params = PortfolioParams {
+            replicas,
+            max_periods: periods,
+            seed,
+            ..Default::default()
+        };
+        let solo = solve_with(&problem, &params, EngineSelect::Rtl).expect("rtl probe");
+        let cl = solve_with(&problem, &params, EngineSelect::RtlCluster { shards })
+            .expect("rtl cluster probe");
+        assert_eq!(
+            (solo.best_energy.to_bits(), &solo.best_spins, &solo.best_phases, solo.periods),
+            (cl.best_energy.to_bits(), &cl.best_spins, &cl.best_phases, cl.periods),
+            "cluster probe diverged from the single-device engine"
+        );
+    }
+    let mut rng = Rng::new(seed.wrapping_add(n as u64));
+    let g = Graph::random(n, (8.0 / n as f64).min(0.5), &mut rng);
+    let problem = max_cut(&g);
+    let params = PortfolioParams {
+        replicas,
+        max_periods: periods,
+        schedule: Schedule::Geometric {
+            start: 0.5,
+            factor: 0.8,
+        },
+        seed,
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let out = solve_with(&problem, &params, EngineSelect::RtlCluster { shards })
+        .expect("rtl cluster solve");
+    let host_s = t0.elapsed().as_secs_f64();
+    let hw = out.hardware.clone().expect("cluster outcomes report hardware cost");
+    assert!(n > single_fit, "the row must solve beyond the single-device fit");
+    assert!(hw.fits_device, "every shard of the cluster design must fit its device");
+    assert!(hw.sync_fast_cycles > 0, "a cluster run must price its all-gathers");
+    assert!(
+        hw.fast_cycles > hw.sync_fast_cycles,
+        "compute must dominate the emulated meter"
+    );
+    RtlClusterPoint {
+        n,
+        shards,
+        replicas,
+        periods: out.periods,
+        single_device_fit: single_fit,
+        fits_device: hw.fits_device,
+        cut: g.cut_value(&out.best_spins),
+        fast_cycles: hw.fast_cycles,
+        sync_fast_cycles: hw.sync_fast_cycles,
+        compute_fast_cycles: hw.fast_cycles - hw.sync_fast_cycles,
+        f_logic_mhz: hw.f_logic_mhz,
+        emulated_s: hw.emulated_s,
+        host_s,
+    }
+}
+
 /// Latency percentiles of repeated solves on one engine fabric,
 /// measured through the same log-bucketed histogram the serving
 /// metrics use ([`crate::telemetry::LatencyHistogram`]), so the bench
@@ -824,6 +1078,8 @@ pub struct SolverBench {
     pub points: Vec<ThroughputPoint>,
     pub packed: Vec<PackedPoint>,
     pub rtl: Vec<RtlPoint>,
+    pub rtl_packed: Vec<RtlPackedPoint>,
+    pub rtl_cluster: Vec<RtlClusterPoint>,
     pub latency: Vec<LatencyPoint>,
     pub convergence: Vec<ConvergencePoint>,
     pub connection_scale: Vec<ConnectionScalePoint>,
@@ -834,7 +1090,9 @@ pub struct SolverBench {
 /// Each point carries its engine label, so native and sharded rows for
 /// the same sizes live side by side in one trajectory file; packed
 /// rows (one per measured mix) sit alongside under `"packed"`,
-/// float-vs-bit-true hardware rows under `"rtl"`, latency percentiles
+/// float-vs-bit-true hardware rows under `"rtl"`, lane-bank packed
+/// hardware rows under `"rtl_packed"`, emulated multi-FPGA cluster
+/// rows under `"rtl_cluster"`, latency percentiles
 /// per fabric under `"latency"`, per-chunk best-energy trajectories
 /// under `"convergence"`, dense-vs-CSR fabric rows under `"sparse"`,
 /// and connection-scale serving rows (evented front end vs
@@ -917,6 +1175,67 @@ pub fn bench_json(bench: &SolverBench, recorded_unix_s: u64) -> Json {
                             ("quantization_error", Json::num(p.quantization_error)),
                             ("periods", Json::num(p.periods as f64)),
                             ("fast_cycles", Json::num(p.fast_cycles as f64)),
+                            ("f_logic_mhz", Json::num(p.f_logic_mhz)),
+                            ("emulated_s", Json::num(p.emulated_s)),
+                            ("host_s", Json::num(p.host_s)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "rtl_packed",
+            Json::Arr(
+                bench
+                    .rtl_packed
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("bucket_n", Json::num(p.bucket_n as f64)),
+                            ("problems", Json::num(p.problems as f64)),
+                            ("lanes", Json::num(p.lanes as f64)),
+                            ("replicas", Json::num(p.replicas as f64)),
+                            ("total_periods", Json::num(p.total_periods as f64)),
+                            ("packed_fast_cycles", Json::num(p.packed_fast_cycles as f64)),
+                            ("solo_fast_cycles", Json::num(p.solo_fast_cycles as f64)),
+                            ("packed_emulated_s", Json::num(p.packed_emulated_s)),
+                            ("solo_emulated_s", Json::num(p.solo_emulated_s)),
+                            (
+                                "packed_emulated_solves_per_sec",
+                                Json::num(p.packed_emulated_solves_per_sec),
+                            ),
+                            (
+                                "solo_emulated_solves_per_sec",
+                                Json::num(p.solo_emulated_solves_per_sec),
+                            ),
+                            ("packed_host_median_s", Json::num(p.packed_host_median_s)),
+                            ("solo_host_median_s", Json::num(p.solo_host_median_s)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "rtl_cluster",
+            Json::Arr(
+                bench
+                    .rtl_cluster
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("n", Json::num(p.n as f64)),
+                            ("shards", Json::num(p.shards as f64)),
+                            ("replicas", Json::num(p.replicas as f64)),
+                            ("periods", Json::num(p.periods as f64)),
+                            ("single_device_fit", Json::num(p.single_device_fit as f64)),
+                            ("fits_device", Json::Bool(p.fits_device)),
+                            ("cut", Json::num(p.cut as f64)),
+                            ("fast_cycles", Json::num(p.fast_cycles as f64)),
+                            ("sync_fast_cycles", Json::num(p.sync_fast_cycles as f64)),
+                            (
+                                "compute_fast_cycles",
+                                Json::num(p.compute_fast_cycles as f64),
+                            ),
                             ("f_logic_mhz", Json::num(p.f_logic_mhz)),
                             ("emulated_s", Json::num(p.emulated_s)),
                             ("host_s", Json::num(p.host_s)),
@@ -1041,6 +1360,12 @@ pub fn bench_json(bench: &SolverBench, recorded_unix_s: u64) -> Json {
 /// shared lane-block engine against the one-engine-per-request
 /// baseline, plus — when `rtl` — one float-vs-bit-true row per size
 /// (solution quality + emulated hardware time-to-solution), plus —
+/// when `rtl_packed` — one lane-bank packed hardware row (a mix of
+/// equal-size instances through one shared rtl engine vs
+/// one-engine-per-request, with exact fast-cycle parity asserted),
+/// plus — when `rtl_cluster` — one emulated multi-FPGA cluster row
+/// (an instance past the single-device fit, with the per-period
+/// all-gather priced), plus —
 /// when `connections >= 1` — one connection-scale serving row
 /// (sustained solves/sec at `connections` concurrent streaming clients,
 /// evented front end vs thread-per-connection baseline), plus — when
@@ -1060,6 +1385,8 @@ pub fn record_throughput(
     shards: usize,
     packed_problems: usize,
     rtl: bool,
+    rtl_packed: bool,
+    rtl_cluster: bool,
     connections: usize,
     sparse: bool,
 ) -> std::io::Result<SolverBench> {
@@ -1080,6 +1407,20 @@ pub fn record_throughput(
     }
     let rtl_points = if rtl {
         rtl_comparison(sizes, replicas, periods, seed)
+    } else {
+        Vec::new()
+    };
+    let rtl_packed_points = if rtl_packed {
+        // Reuse the packed-mix size when the CLI asked for one;
+        // otherwise a 4-instance mix demonstrates the sharing.
+        let problems = if packed_problems >= 2 { packed_problems } else { 4 };
+        vec![rtl_packed_throughput(problems, replicas, periods, seed)]
+    } else {
+        Vec::new()
+    };
+    let rtl_cluster_points = if rtl_cluster {
+        let devices = if shards >= 2 { shards } else { 2 };
+        vec![rtl_cluster_scale(devices, replicas, periods, seed)]
     } else {
         Vec::new()
     };
@@ -1112,6 +1453,8 @@ pub fn record_throughput(
         points,
         packed,
         rtl: rtl_points,
+        rtl_packed: rtl_packed_points,
+        rtl_cluster: rtl_cluster_points,
         latency,
         convergence,
         connection_scale: connection_points,
@@ -1124,12 +1467,14 @@ pub fn record_throughput(
     let doc = bench_json(&bench, stamp);
     std::fs::write(path, format!("{doc}\n"))?;
     eprintln!(
-        "wrote {} ({} rows + {} packed + {} rtl + {} latency + {} convergence \
-         + {} connection-scale + {} sparse in {:.1}s)",
+        "wrote {} ({} rows + {} packed + {} rtl + {} rtl-packed + {} rtl-cluster \
+         + {} latency + {} convergence + {} connection-scale + {} sparse in {:.1}s)",
         path.display(),
         bench.points.len(),
         bench.packed.len(),
         bench.rtl.len(),
+        bench.rtl_packed.len(),
+        bench.rtl_cluster.len(),
         bench.latency.len(),
         bench.convergence.len(),
         bench.connection_scale.len(),
@@ -1224,10 +1569,42 @@ mod tests {
             emulated_s: 1.4e-4,
             host_s: 0.02,
         }];
+        let rtl_packed = vec![RtlPackedPoint {
+            bucket_n: 16,
+            problems: 4,
+            lanes: 8,
+            replicas: 2,
+            total_periods: 128,
+            packed_fast_cycles: 45_056,
+            solo_fast_cycles: 45_056,
+            packed_emulated_s: 4.5e-4,
+            solo_emulated_s: 4.5e-4,
+            packed_emulated_solves_per_sec: 8888.0,
+            solo_emulated_solves_per_sec: 8888.0,
+            packed_host_median_s: 0.04,
+            solo_host_median_s: 0.11,
+        }];
+        let rtl_cluster = vec![RtlClusterPoint {
+            n: 556,
+            shards: 2,
+            replicas: 2,
+            periods: 8,
+            single_device_fit: 506,
+            fits_device: true,
+            cut: 1234,
+            fast_cycles: 300_000,
+            sync_fast_cycles: 75_000,
+            compute_fast_cycles: 225_000,
+            f_logic_mhz: 100.0,
+            emulated_s: 3.0e-3,
+            host_s: 0.5,
+        }];
         let bench = SolverBench {
             points: pts,
             packed,
             rtl,
+            rtl_packed,
+            rtl_cluster,
             latency: vec![LatencyPoint {
                 engine: "native",
                 n: 8,
@@ -1302,6 +1679,25 @@ mod tests {
         assert_eq!(rrow.get("engine").and_then(Json::as_str), Some("rtl"));
         assert_eq!(rrow.get("rtl_cut").and_then(Json::as_usize), Some(11));
         assert_eq!(rrow.get("fast_cycles").and_then(Json::as_usize), Some(14_336));
+        let rp = &parsed.get("rtl_packed").and_then(Json::as_arr).unwrap()[0];
+        assert_eq!(rp.get("problems").and_then(Json::as_usize), Some(4));
+        assert_eq!(
+            rp.get("packed_fast_cycles").and_then(Json::as_usize),
+            rp.get("solo_fast_cycles").and_then(Json::as_usize),
+        );
+        assert_eq!(
+            rp.get("packed_emulated_solves_per_sec").and_then(Json::as_f64),
+            Some(8888.0)
+        );
+        let rc = &parsed.get("rtl_cluster").and_then(Json::as_arr).unwrap()[0];
+        assert_eq!(rc.get("shards").and_then(Json::as_usize), Some(2));
+        assert_eq!(rc.get("single_device_fit").and_then(Json::as_usize), Some(506));
+        assert_eq!(rc.get("fits_device").and_then(Json::as_bool), Some(true));
+        assert_eq!(rc.get("sync_fast_cycles").and_then(Json::as_usize), Some(75_000));
+        assert_eq!(
+            rc.get("compute_fast_cycles").and_then(Json::as_usize),
+            Some(225_000)
+        );
         let lrow = &parsed.get("latency").and_then(Json::as_arr).unwrap()[0];
         assert_eq!(lrow.get("engine").and_then(Json::as_str), Some("native"));
         assert_eq!(lrow.get("p50_ms").and_then(Json::as_f64), Some(1.024));
@@ -1339,6 +1735,13 @@ mod tests {
             "\"sparse_replica_periods_per_sec\"",
             "\"sparse_speedup\"",
             "\"avg_row_nnz\"",
+            "\"rtl_packed\"",
+            "\"rtl_cluster\"",
+            "\"packed_emulated_solves_per_sec\"",
+            "\"solo_emulated_solves_per_sec\"",
+            "\"sync_fast_cycles\"",
+            "\"compute_fast_cycles\"",
+            "\"single_device_fit\"",
         ] {
             assert!(doc.to_string().contains(key), "the CI gate greps for {key}");
         }
@@ -1440,6 +1843,42 @@ mod tests {
             p.hw_sparse_khz > p.hw_dense_khz,
             "the nnz-priced serial MAC must oscillate faster than the n-cycle one"
         );
+    }
+
+    #[test]
+    fn rtl_packed_row_holds_exact_cycle_parity() {
+        // The gates live *inside* the bench fn (bit-exact outcomes,
+        // exact fast-cycle parity, emulated rate no worse than solo) —
+        // this run exercises them at tiny effort and checks the row.
+        let p = rtl_packed_throughput(3, 2, 16, 9);
+        assert_eq!(p.problems, 3);
+        assert_eq!(p.bucket_n, 16);
+        assert_eq!(p.lanes, 6);
+        assert_eq!(p.packed_fast_cycles, p.solo_fast_cycles);
+        assert!(p.packed_fast_cycles > 0);
+        assert!(p.total_periods > 0);
+        assert!(p.packed_emulated_solves_per_sec >= p.solo_emulated_solves_per_sec);
+        assert!(p.packed_host_median_s > 0.0 && p.solo_host_median_s > 0.0);
+    }
+
+    #[test]
+    fn rtl_cluster_row_solves_past_the_single_device_fit() {
+        // One replica and a short budget keep the cycle-accurate n^2
+        // simulation fast; the fn itself asserts the small-n
+        // bit-exactness probe, per-shard fit, and nonzero sync share.
+        let p = rtl_cluster_scale(2, 1, 8, 5);
+        assert_eq!(p.shards, 2);
+        assert!(
+            p.n > p.single_device_fit,
+            "cluster row must exceed the one-device fit ({} vs {})",
+            p.n,
+            p.single_device_fit
+        );
+        assert!(p.fits_device);
+        assert!(p.sync_fast_cycles > 0);
+        assert_eq!(p.fast_cycles, p.compute_fast_cycles + p.sync_fast_cycles);
+        assert!(p.emulated_s > 0.0 && p.f_logic_mhz > 0.0);
+        assert!(p.periods > 0 && p.periods <= 8);
     }
 
     #[test]

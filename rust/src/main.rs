@@ -43,7 +43,14 @@ Solver (generic Ising/QUBO subsystem, see DESIGN_SOLVER.md):
                           sharded multi-device engine (bit-exact)
         [--rtl]           run on the bit-true emulated-hardware engine
                           (cycle-accurate serial MACs; reports the
-                          emulated fast-cycle cost)
+                          emulated fast-cycle cost); --rtl --shards K>1
+                          runs the emulated K-FPGA cluster instead
+                          (row-split weight memory, priced phase
+                          all-gathers)
+        [--weight-bits B] [--phase-bits P]
+                          precision sweep point for --rtl solves
+                          (B in 3..=8, P in 3..=6; default is the
+                          paper's 5-bit weights / 4-bit phases)
         [--trace FILE]    export the solve-lifecycle trace as JSONL
                           (wave/chunk/engine spans, DESIGN_SOLVER.md §9)
   trace-check --path FILE
@@ -52,14 +59,23 @@ Solver (generic Ising/QUBO subsystem, see DESIGN_SOLVER.md):
                           seq/timestamps)
   solve-bench [--sizes 16,32,64,128] [--replicas 32] [--periods 128]
         [--instances 5] [--shards K] [--packed [N]] [--rtl]
-        [--connections [N]] [--sparse] [--out BENCH_solver.json]
+        [--rtl-packed] [--rtl-cluster] [--connections [N]] [--sparse]
+        [--out BENCH_solver.json]
                           quality vs SA + native (and, with --shards,
                           sharded) throughput rows; --packed adds an
                           N-instance (default 6) small-mix row comparing
                           the shared lane-block engine against
                           one-engine-per-request serving; --rtl adds
                           float-native vs bit-true rows (quality +
-                          emulated time-to-solution); --connections adds
+                          emulated time-to-solution); --rtl-packed adds
+                          a lane-bank packed hardware row (an
+                          equal-size mix through one shared rtl engine
+                          vs one-engine-per-request, exact fast-cycle
+                          parity asserted); --rtl-cluster adds an
+                          emulated multi-FPGA row (an instance past the
+                          single-device fit, per-period all-gather
+                          priced; --shards sizes the cluster, default
+                          2 devices); --connections adds
                           a connection-scale serving row (sustained
                           solves/sec at N (default 64) concurrent
                           streaming clients, evented front end vs
@@ -310,6 +326,9 @@ fn cmd_solve(args: &mut Args) -> Result<()> {
     let seed = args.get_u64("seed", 7)?;
     let shards = args.get_usize("shards", 0)?;
     let rtl = args.has("rtl");
+    // 0 = unset (both bounds start at 3, so 0 is unambiguous).
+    let weight_bits = args.get_usize("weight-bits", 0)?;
+    let phase_bits = args.get_usize("phase-bits", 0)?;
     let trace_path = args.get_opt_str("trace");
     args.finish().map_err(|e| anyhow!(e))?;
 
@@ -323,15 +342,40 @@ fn cmd_solve(args: &mut Args) -> Result<()> {
     }
     let trace_cap = telemetry::DEFAULT_TRACE_CAP;
     let trace_sink = trace_path.as_ref().map(|_| telemetry::sink(trace_cap));
+    // The precision sweep only exists on the quantized hardware model:
+    // float engines have no weight/phase word widths to sweep.
+    let precision: Option<(u32, u32)> = if weight_bits == 0 && phase_bits == 0 {
+        None
+    } else {
+        if !rtl {
+            return Err(anyhow!("--weight-bits/--phase-bits require --rtl"));
+        }
+        let wb = if weight_bits == 0 { 5 } else { weight_bits };
+        let pb = if phase_bits == 0 { 4 } else { phase_bits };
+        if !(3..=8).contains(&wb) {
+            return Err(anyhow!("--weight-bits must be in 3..=8, got {wb}"));
+        }
+        if !(3..=6).contains(&pb) {
+            return Err(anyhow!("--phase-bits must be in 3..=6, got {pb}"));
+        }
+        Some((wb as u32, pb as u32))
+    };
+    if precision.is_some() && problem_kind == "coloring" {
+        return Err(anyhow!(
+            "--weight-bits/--phase-bits are supported for the portfolio \
+             problems (maxcut|partition|cover), not coloring"
+        ));
+    }
     // 0 = size-based auto-selection; 1 = force native; K > 1 = force a
     // K-shard cluster (bit-identical either way).  --rtl instead runs
-    // the bit-true emulated-hardware engine; any explicit --shards
-    // (native included) contradicts it.
-    if rtl && shards != 0 {
-        return Err(anyhow!("--rtl and --shards are mutually exclusive"));
-    }
+    // the bit-true emulated-hardware engine, and --rtl --shards K>1
+    // composes K of them into the emulated multi-FPGA cluster
+    // (row-split weight memory, priced phase all-gathers).
     let select = if rtl {
-        EngineSelect::Rtl
+        match shards {
+            0 | 1 => EngineSelect::Rtl,
+            k => EngineSelect::RtlCluster { shards: k },
+        }
     } else {
         match shards {
             0 => EngineSelect::default(),
@@ -344,16 +388,17 @@ fn cmd_solve(args: &mut Args) -> Result<()> {
         max_periods: periods,
         schedule,
         seed,
+        precision,
         ..Default::default()
     };
     // Emulated-hardware cost line for rtl solves (silent elsewhere).
     let print_hardware = |out: &onn_scale::solver::portfolio::SolveOutcome| {
         if let Some(hw) = &out.hardware {
             println!(
-                "emulated hardware: {} fast cycles @ {:.1} MHz -> {:.3e} s \
-                 (fits device: {}, quantization error {:.4})",
-                hw.fast_cycles, hw.f_logic_mhz, hw.emulated_s, hw.fits_device,
-                out.quantization_error
+                "emulated hardware: {} fast cycles ({} on cluster all-gathers) \
+                 @ {:.1} MHz -> {:.3e} s (fits device: {}, quantization error {:.4})",
+                hw.fast_cycles, hw.sync_fast_cycles, hw.f_logic_mhz, hw.emulated_s,
+                hw.fits_device, out.quantization_error
             );
         }
     };
@@ -479,6 +524,8 @@ fn cmd_solve_bench(args: &mut Args) -> Result<()> {
         0
     };
     let rtl = args.has("rtl");
+    let rtl_packed = args.has("rtl-packed");
+    let rtl_cluster = args.has("rtl-cluster");
     // `--connections` alone records the 64-client row of the issue's
     // acceptance gate; `--connections N` sizes it explicitly.
     let connections = if args.has("connections") {
@@ -508,6 +555,8 @@ fn cmd_solve_bench(args: &mut Args) -> Result<()> {
         shards,
         packed_problems,
         rtl,
+        rtl_packed,
+        rtl_cluster,
         connections,
         sparse,
     )?;
@@ -549,6 +598,39 @@ fn cmd_solve_bench(args: &mut Args) -> Result<()> {
                 p.host_s
             );
         }
+    }
+    for p in &bench.rtl_packed {
+        println!(
+            "rtl lane-bank packing ({} problems sharing one {}-lane emulated \
+             fabric, bucket n={}):",
+            p.problems, p.lanes, p.bucket_n
+        );
+        println!(
+            "  packed {} fast cycles -> {:>10.0} emulated solves/s \
+             (host median {:.3} s)",
+            p.packed_fast_cycles, p.packed_emulated_solves_per_sec, p.packed_host_median_s
+        );
+        println!(
+            "  solo   {} fast cycles -> {:>10.0} emulated solves/s \
+             (host median {:.3} s)",
+            p.solo_fast_cycles, p.solo_emulated_solves_per_sec, p.solo_host_median_s
+        );
+    }
+    for p in &bench.rtl_cluster {
+        println!(
+            "emulated {}-FPGA cluster: n={} (single-device fit {}), {} compute \
+             + {} sync fast cycles @ {:.1} MHz -> {:.3e} s emulated \
+             ({:.3} s host sim, fits per shard: {})",
+            p.shards,
+            p.n,
+            p.single_device_fit,
+            p.compute_fast_cycles,
+            p.sync_fast_cycles,
+            p.f_logic_mhz,
+            p.emulated_s,
+            p.host_s,
+            p.fits_device
+        );
     }
     println!("solve latency percentiles (log-bucketed, upper-bound estimates):");
     for p in &bench.latency {

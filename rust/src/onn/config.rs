@@ -25,6 +25,17 @@ impl NetworkConfig {
         }
     }
 
+    /// Explicit-precision configuration — the serve path's precision
+    /// sweep (`solve --rtl --weight-bits B --phase-bits P`) builds its
+    /// engines through this instead of [`NetworkConfig::paper`].
+    pub fn with_precision(n: usize, weight_bits: u32, phase_bits: u32) -> Self {
+        Self {
+            n,
+            phase_bits,
+            weight_bits,
+        }
+    }
+
     /// Number of phase steps per oscillation period (shift-register taps).
     pub fn period(&self) -> usize {
         1usize << self.phase_bits

@@ -255,6 +255,18 @@ impl LaneState {
     }
 }
 
+/// One per-block weight bank: lanes `[lane0, lane0 + lanes)` read their
+/// serial-MAC rows from `w` instead of the shared weight memory.  The
+/// hardware already time-multiplexes one BRAM weight memory per period,
+/// so a bank is a block-indexed read address — the lane-packing story
+/// of DESIGN_SOLVER.md §12.
+#[derive(Debug, Clone)]
+struct LaneBank {
+    lane0: usize,
+    lanes: usize,
+    w: WeightMatrix,
+}
+
 /// The multi-lane hybrid-architecture simulator.  [`RtlSim`] (the
 /// classic single-trial interface) drives lane 0; the lane API carries
 /// the batch dimension of the solver engine (`runtime::rtl`).
@@ -265,6 +277,9 @@ pub struct HybridOnn {
     /// Mis-synchronized enable: sums lag the amplitudes by one tick.
     stale_enable: bool,
     lanes: Vec<LaneState>,
+    /// Per-block weight banks (lane-packing); lanes outside every bank
+    /// keep reading the shared weight memory `w`.
+    banks: Vec<LaneBank>,
 }
 
 impl HybridOnn {
@@ -282,6 +297,7 @@ impl HybridOnn {
             w,
             stale_enable: false,
             lanes: (0..lanes).map(|_| LaneState::new(&cfg)).collect(),
+            banks: Vec::new(),
         }
     }
 
@@ -325,6 +341,49 @@ impl HybridOnn {
         self.lanes[lane].macs.first().map_or(0, |m| m.fast_cycles)
     }
 
+    /// Total fast cycles burned by row `row`'s serial MAC, summed over
+    /// all lanes — the meter a cluster device owning that row reads.
+    /// Every row's MAC walks the same N inputs per update, so any row in
+    /// a device's range is a faithful sample of that device's clock.
+    pub fn row_fast_cycles(&self, row: usize) -> u64 {
+        self.lanes.iter().map(|l| l.macs[row].fast_cycles).sum()
+    }
+
+    /// Install (or replace) the weight bank serving lanes
+    /// `[lane0, lane0 + lanes)`.  Banks must stay inside the lane count
+    /// and must not overlap each other; range/overlap policy is enforced
+    /// by the engine layer, so violations here are programming errors.
+    pub fn set_lane_bank(&mut self, lane0: usize, lanes: usize, w: WeightMatrix) {
+        assert_eq!(self.cfg.n, w.n, "bank weights must match the network size");
+        assert!(lanes >= 1 && lane0 + lanes <= self.lanes.len(), "bank out of range");
+        assert!(
+            !self
+                .banks
+                .iter()
+                .any(|b| b.lane0 != lane0 && lane0 < b.lane0 + b.lanes && b.lane0 < lane0 + lanes),
+            "bank overlaps an existing bank"
+        );
+        self.banks.retain(|b| b.lane0 != lane0);
+        self.banks.push(LaneBank { lane0, lanes, w });
+    }
+
+    /// Remove the weight bank anchored at `lane0`; true when one was
+    /// installed.  Its lanes fall back to the shared weight memory.
+    pub fn clear_lane_bank(&mut self, lane0: usize) -> bool {
+        let before = self.banks.len();
+        self.banks.retain(|b| b.lane0 != lane0);
+        self.banks.len() != before
+    }
+
+    /// The weight memory `lane` reads: its bank when one covers it, the
+    /// shared matrix otherwise.
+    fn bank_weights<'a>(banks: &'a [LaneBank], shared: &'a WeightMatrix, lane: usize) -> &'a WeightMatrix {
+        banks
+            .iter()
+            .find(|b| lane >= b.lane0 && lane < b.lane0 + b.lanes)
+            .map_or(shared, |b| &b.w)
+    }
+
     /// Program a lane's phases and reset its registers — a fresh run on
     /// that lane.  Other lanes are untouched.
     pub fn set_lane_phases(&mut self, lane: usize, phases: &[i32]) {
@@ -341,7 +400,8 @@ impl HybridOnn {
         let cfg = self.cfg;
         let stale = self.stale_enable;
         // Split the borrow: the lane is mutated, the weights only read.
-        let (w, lanes) = (&self.w, &mut self.lanes);
+        let (banks, shared, lanes) = (&self.banks, &self.w, &mut self.lanes);
+        let w = Self::bank_weights(banks, shared, lane);
         lanes[lane].tick(&cfg, w, stale);
     }
 
@@ -351,7 +411,8 @@ impl HybridOnn {
     pub fn step_lane_period(&mut self, lane: usize) -> bool {
         let cfg = self.cfg;
         let stale = self.stale_enable;
-        let (w, lanes) = (&self.w, &mut self.lanes);
+        let (banks, shared, lanes) = (&self.banks, &self.w, &mut self.lanes);
+        let w = Self::bank_weights(banks, shared, lane);
         lanes[lane].step_period(&cfg, w, stale)
     }
 
@@ -590,6 +651,65 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn lane_banks_select_per_block_weight_memories() {
+        // Lanes 0-1 read bank A, lane 2 reads bank B, lane 3 the shared
+        // memory: every lane must reproduce a dedicated simulator built
+        // on its own matrix, interleaved stepping included.
+        let mut rng = Rng::new(654);
+        let n = 4;
+        let mut mk = |seed_off: i64| {
+            let mut w = WeightMatrix::zeros(n);
+            for i in 0..n {
+                for j in 0..n {
+                    w.set(i, j, rng.range_i64(-8 + seed_off, 9) as i8);
+                }
+            }
+            w
+        };
+        let (wa, wb, ws) = (mk(0), mk(1), mk(2));
+        let inits: Vec<Vec<i32>> = (0..4)
+            .map(|_| (0..n).map(|_| rng.range_i64(0, 16) as i32).collect())
+            .collect();
+        let mut multi = HybridOnn::with_lanes(cfg(n), ws.clone(), 4);
+        multi.set_lane_bank(0, 2, wa.clone());
+        multi.set_lane_bank(2, 1, wb.clone());
+        for (lane, init) in inits.iter().enumerate() {
+            multi.set_lane_phases(lane, init);
+        }
+        let lane_w = [&wa, &wa, &wb, &ws];
+        for period in 0..10 {
+            for lane in [3usize, 1, 2, 0] {
+                multi.step_lane_period(lane);
+            }
+            for (lane, init) in inits.iter().enumerate() {
+                let mut solo = HybridOnn::new(cfg(n), lane_w[lane].clone());
+                solo.set_phases(init);
+                for _ in 0..(period + 1) * 16 {
+                    solo.tick();
+                }
+                assert_eq!(
+                    multi.lane_phases(lane),
+                    solo.phases(),
+                    "lane {lane} diverged at period {period}"
+                );
+            }
+        }
+        // Replacing a bank re-points its lanes; clearing falls back to
+        // the shared memory.
+        multi.set_lane_bank(2, 1, ws.clone());
+        assert!(multi.clear_lane_bank(0));
+        assert!(!multi.clear_lane_bank(0), "already cleared");
+        multi.set_lane_phases(0, &inits[0]);
+        multi.step_lane_period(0);
+        let mut solo = HybridOnn::new(cfg(n), ws.clone());
+        solo.set_phases(&inits[0]);
+        for _ in 0..16 {
+            solo.tick();
+        }
+        assert_eq!(multi.lane_phases(0), solo.phases());
     }
 
     #[test]

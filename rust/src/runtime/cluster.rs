@@ -1,0 +1,240 @@
+//! Emulated multi-FPGA cluster front end for the bit-true hardware
+//! engine: `K` devices each hold a *row range* of the quantized weight
+//! memory (the same partition `runtime::sharded` uses, via
+//! `shard_row_ranges`) and exchange the full phase vector once per
+//! oscillation period — the paper's Discussion names exactly this
+//! multi-device synchronization as the path past a single Zynq-7020's
+//! 506 oscillators.
+//!
+//! The cluster *dynamics* are served by one inner [`RtlEngine`]: row
+//! partitioning a serial-MAC update does not change any oscillator's
+//! phase sum (the integer adds commute), so splitting the rows across
+//! devices is behaviorally invisible — every chunk is bit-exact with
+//! the single-device engine by construction, which
+//! `rust/tests/prop_rtl_packed.rs` verifies chunk by chunk.  What the
+//! cluster changes is the *hardware model*:
+//!
+//! * **Compute.** Each device's elapsed fast-clock time is sampled from
+//!   a genuine per-row `SerialMac` meter ([`RtlEngine::row_fast_cycles`]
+//!   at the device's first row).  Every MAC still walks all `n` inputs
+//!   per tick — the serial-MAC datapath is unchanged per oscillator — so
+//!   the devices run in lockstep and the cluster's compute time is the
+//!   *max* over devices, not the sum divided by `K`.  A cluster buys
+//!   **capacity** (more oscillators than one device can host), not
+//!   speed.
+//! * **Sync.** Each emulated lane-period costs one phase all-gather,
+//!   priced by [`timing::cluster_sync_cycles`] (phase words streamed
+//!   per update step plus per-device handshakes) and reported as
+//!   [`HardwareCost::sync_fast_cycles`].
+//! * **Fit.** The design fits when *every* device's row shard fits the
+//!   reference device ([`resources::hybrid_cluster_shard`]); the logic
+//!   clock is the slowest shard's ([`timing::logic_frequency_hybrid_shard`])
+//!   and the reported area the widest shard's.
+
+use anyhow::{anyhow, Result};
+
+use crate::fpga::device::{zynq7020, Device};
+use crate::fpga::resources;
+use crate::fpga::timing;
+use crate::onn::config::NetworkConfig;
+use crate::runtime::rtl::RtlEngine;
+use crate::runtime::sharded::shard_row_ranges;
+use crate::runtime::{ChunkEngine, HardwareCost};
+use crate::telemetry::TraceSink;
+
+pub struct RtlClusterEngine {
+    inner: RtlEngine,
+    cfg: NetworkConfig,
+    /// Emulated device count; each owns one row range of the weight
+    /// memory (`shard_row_ranges(cfg.n, shards)`).
+    shards: usize,
+    device: Device,
+}
+
+impl RtlClusterEngine {
+    /// A `shards`-device cluster serving `cfg.n` oscillators with
+    /// `batch` lanes and `chunk` periods per `run_chunk`, each device
+    /// modeled on the paper's reference part (Zynq-7020).
+    pub fn new(cfg: NetworkConfig, shards: usize, batch: usize, chunk: usize) -> Result<Self> {
+        if shards == 0 || shards > cfg.n {
+            return Err(anyhow!("bad cluster shard count {shards} for n={}", cfg.n));
+        }
+        Ok(Self {
+            inner: RtlEngine::new(cfg, batch, chunk),
+            cfg,
+            shards,
+            device: zynq7020(),
+        })
+    }
+}
+
+impl ChunkEngine for RtlClusterEngine {
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+
+    fn batch(&self) -> usize {
+        self.inner.batch()
+    }
+
+    fn chunk_len(&self) -> usize {
+        self.inner.chunk_len()
+    }
+
+    fn set_weights(&mut self, w_f32: &[f32]) -> Result<()> {
+        self.inner.set_weights(w_f32)
+    }
+
+    fn run_chunk(&mut self, phases: &mut [i32], settled: &mut [i32], period0: i32) -> Result<()> {
+        self.inner.run_chunk(phases, settled, period0)
+    }
+
+    fn kind(&self) -> &'static str {
+        "rtl-cluster"
+    }
+
+    fn supports_noise(&self) -> bool {
+        true
+    }
+
+    fn set_noise(&mut self, amplitude: f64, seed: u64) -> Result<()> {
+        self.inner.set_noise(amplitude, seed)
+    }
+
+    fn begin_wave(&mut self, active: usize) -> Result<()> {
+        self.inner.begin_wave(active)
+    }
+
+    /// One all-gather per lane-period stepped — the cross-device cost
+    /// metric the sharded float engine also reports.
+    fn sync_rounds(&self) -> u64 {
+        self.inner.lane_periods_stepped()
+    }
+
+    fn hardware_cost(&self) -> Option<HardwareCost> {
+        if !self.inner.programmed() {
+            return None;
+        }
+        let n = self.cfg.n;
+        let d = &self.device;
+        // Per-device compute: sample each device's row meter at its
+        // first owned row; lockstep MACs make these equal, and the
+        // cluster's elapsed compute is their max.
+        let mut compute = 0u64;
+        let mut fits = true;
+        let mut f_logic_mhz = f64::INFINITY;
+        let mut area_percent = 0.0f64;
+        for (row0, rows) in shard_row_ranges(n, self.shards) {
+            compute = compute.max(self.inner.row_fast_cycles(row0));
+            let res = resources::hybrid_cluster_shard(&self.cfg, rows, d);
+            fits &= res.fits(d);
+            f_logic_mhz = f_logic_mhz.min(timing::logic_frequency_hybrid_shard(n, rows, d));
+            area_percent = area_percent.max(res.area_percent(d));
+        }
+        let sync_fast_cycles = self.inner.lane_periods_stepped()
+            * timing::cluster_sync_cycles(self.shards, n, self.cfg.phase_bits);
+        let fast_cycles = compute + sync_fast_cycles;
+        Some(HardwareCost {
+            fast_cycles,
+            f_logic_mhz,
+            emulated_s: fast_cycles as f64 / (f_logic_mhz * 1e6),
+            fits_device: fits,
+            area_percent,
+            sync_fast_cycles,
+        })
+    }
+
+    fn set_trace_sink(&mut self, sink: Option<TraceSink>) {
+        self.inner.set_trace_sink(sink);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_w(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n * n).map(|_| rng.range_i64(-8, 9) as f32).collect()
+    }
+
+    #[test]
+    fn shard_count_is_validated() {
+        let cfg = NetworkConfig::paper(4);
+        assert!(RtlClusterEngine::new(cfg, 0, 2, 4).is_err());
+        assert!(RtlClusterEngine::new(cfg, 5, 2, 4).is_err(), "shards > n");
+        assert!(RtlClusterEngine::new(cfg, 4, 2, 4).is_ok());
+    }
+
+    #[test]
+    fn cluster_is_bit_exact_with_the_single_device_engine() {
+        // Row-splitting the weight memory is a hardware-model statement
+        // only: every chunk's phases and settle flags must match the
+        // solo engine bit for bit, noise on.
+        let mut rng = Rng::new(52);
+        let n = 6;
+        let cfg = NetworkConfig::paper(n);
+        let w = rand_w(&mut rng, n);
+        let mut solo = RtlEngine::new(cfg, 3, 4);
+        let mut cl = RtlClusterEngine::new(cfg, 3, 3, 4).unwrap();
+        solo.set_weights(&w).unwrap();
+        cl.set_weights(&w).unwrap();
+        solo.set_noise(0.6, 9).unwrap();
+        cl.set_noise(0.6, 9).unwrap();
+        let init: Vec<i32> = (0..3 * n).map(|_| rng.range_i64(0, 16) as i32).collect();
+        let (mut pa, mut pb) = (init.clone(), init);
+        let mut sa = vec![-1i32; 3];
+        let mut sb = vec![-1i32; 3];
+        for c in 0..3 {
+            solo.run_chunk(&mut pa, &mut sa, c * 4).unwrap();
+            cl.run_chunk(&mut pb, &mut sb, c * 4).unwrap();
+            assert_eq!(pb, pa, "cluster diverged at chunk {c}");
+            assert_eq!(sb, sa);
+        }
+        // One all-gather per lane-period stepped.
+        assert_eq!(cl.sync_rounds(), (3 * 3 * 4) as u64);
+        assert_eq!(solo.sync_rounds(), 0, "one device has no all-gather");
+    }
+
+    #[test]
+    fn cluster_cost_prices_sync_and_extends_device_fit() {
+        let n = 8;
+        let cfg = NetworkConfig::paper(n);
+        let zeros = vec![0.0f32; n * n];
+        let mut solo = RtlEngine::new(cfg, 2, 4);
+        let mut cl = RtlClusterEngine::new(cfg, 2, 2, 4).unwrap();
+        assert!(cl.hardware_cost().is_none(), "no cost before weights");
+        solo.set_weights(&zeros).unwrap();
+        cl.set_weights(&zeros).unwrap();
+        let mut ph = vec![0i32; 2 * n];
+        let mut st = vec![-1i32; 2];
+        solo.run_chunk(&mut ph, &mut st, 0).unwrap();
+        let mut ph2 = vec![0i32; 2 * n];
+        let mut st2 = vec![-1i32; 2];
+        cl.run_chunk(&mut ph2, &mut st2, 0).unwrap();
+        let hs = solo.hardware_cost().unwrap();
+        let hc = cl.hardware_cost().unwrap();
+        // Lockstep MACs: per-device compute equals the solo elapsed
+        // time (a cluster buys capacity, not speed), and the all-gather
+        // premium is exactly lane-periods x the per-period sync price.
+        let sync = (2 * 4) as u64 * timing::cluster_sync_cycles(2, n, cfg.phase_bits);
+        assert!(sync > 0);
+        assert_eq!(hc.sync_fast_cycles, sync);
+        assert_eq!(hc.fast_cycles, hs.fast_cycles + sync);
+        assert_eq!(hs.sync_fast_cycles, 0);
+        assert!(hc.f_logic_mhz > 0.0 && hc.emulated_s > 0.0);
+
+        // Past the single-device ceiling (~506 oscillators on the
+        // Zynq-7020) the solo design no longer fits; a two-device row
+        // split does.  Static fit check only — no dynamics needed.
+        let big = NetworkConfig::paper(560);
+        let solo_fit = resources::hybrid(&big, &zynq7020());
+        assert!(!solo_fit.fits(&zynq7020()), "n=560 must overflow one device");
+        let mut big_cl = RtlClusterEngine::new(big, 2, 1, 1).unwrap();
+        let big_zeros = vec![0.0f32; 560 * 560];
+        big_cl.set_weights(&big_zeros).unwrap();
+        let hw = big_cl.hardware_cost().unwrap();
+        assert!(hw.fits_device, "two-device split of n=560 must fit");
+        assert!(hw.area_percent > 0.0);
+    }
+}

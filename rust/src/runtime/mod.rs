@@ -13,6 +13,7 @@
 //! serial-MAC hybrid datapath cycle by cycle.
 
 pub mod artifact;
+pub mod cluster;
 pub mod engine;
 pub mod native;
 pub mod rtl;
@@ -95,11 +96,17 @@ pub struct HardwareCost {
     /// host-simulation time.
     pub emulated_s: f64,
     /// Whether the design fits the reference device (Zynq-7020) at this
-    /// network size (`fpga::resources::hybrid`).
+    /// network size (`fpga::resources::hybrid`) — for a cluster fabric,
+    /// whether *every device's shard* fits
+    /// (`fpga::resources::hybrid_cluster_shard`).
     pub fits_device: bool,
     /// Mean utilization percent on the reference device (the paper's
-    /// "total area used" aggregate).
+    /// "total area used" aggregate); the widest shard's, on a cluster.
     pub area_percent: f64,
+    /// Fast cycles of `fast_cycles` spent on cross-device phase
+    /// all-gathers (`fpga::timing::cluster_sync_cycles`) — the sync-cost
+    /// breakdown of an emulated multi-FPGA cluster.  0 on one device.
+    pub sync_fast_cycles: u64,
 }
 
 /// A batched chunk executor: the contract of one AOT artifact call.
@@ -120,7 +127,7 @@ pub trait ChunkEngine {
     fn set_weights(&mut self, w_f32: &[f32]) -> Result<()>;
     fn run_chunk(&mut self, phases: &mut [i32], settled: &mut [i32], period0: i32) -> Result<()>;
     /// Human-readable engine kind ("pjrt" / "native" / "sharded" /
-    /// "rtl").
+    /// "rtl" / "rtl-cluster").
     fn kind(&self) -> &'static str;
 
     /// True when the engine implements the optional phase-noise hook
@@ -221,6 +228,15 @@ pub trait ChunkEngine {
     /// for engines that model the synthesized design cycle by cycle
     /// (the rtl engine).  Float fabrics return `None`.
     fn hardware_cost(&self) -> Option<HardwareCost> {
+        None
+    }
+
+    /// Emulated hardware cost of the lane block anchored at `lane0`
+    /// alone — the share of the fabric's metered work the block burned
+    /// since it was programmed, so a packed solve's outcome can report
+    /// per-problem hardware the way a solo run does.  `None` on float
+    /// fabrics and on engines without such a block.
+    fn lane_block_hardware_cost(&self, _lane0: usize) -> Option<HardwareCost> {
         None
     }
 

@@ -26,9 +26,18 @@
 //!   fast-clock work; [`ChunkEngine::hardware_cost`] converts it to an
 //!   emulated time-to-solution via `fpga::timing` and reports device
 //!   fit via `fpga::resources::hybrid`.
+//! * **Lane blocks.** The hardware time-multiplexes one weight memory
+//!   per period anyway, so a block is a bank-select away:
+//!   `set_lane_block` installs a per-block quantized weight bank on the
+//!   simulator (`HybridOnn::set_lane_bank`) and gives the block its own
+//!   *block-local* counter-indexed kick stream — within the block, tick
+//!   order is exactly a dedicated engine's batch-lane walk, so a packed
+//!   rtl solve is bit-exact lane by lane with the same problem run solo
+//!   (`rust/tests/prop_rtl_packed.rs`).  Per-block `SerialMac` baselines
+//!   let `lane_block_hardware_cost` price each problem's share of the
+//!   emulated fabric.
 //!
-//! Unsupported: lane blocks (one emulated device carries one problem)
-//! and, by construction, the PJRT artifact path.
+//! Unsupported, by construction: the PJRT artifact path.
 
 use anyhow::{anyhow, Result};
 
@@ -37,9 +46,31 @@ use crate::fpga::resources;
 use crate::fpga::timing;
 use crate::onn::config::NetworkConfig;
 use crate::onn::dynamics::PhaseNoise;
+use crate::onn::weights::WeightMatrix;
 use crate::rtl::hybrid::HybridOnn;
 use crate::runtime::{ChunkEngine, HardwareCost};
 use crate::telemetry::{TraceEvent, TraceSink};
+
+/// Bookkeeping of one programmed lane block: its lane range, its
+/// block-local kick stream, and the per-lane cycle baseline taken when
+/// it was programmed (so its hardware cost excludes whatever a retired
+/// predecessor burned on the same lanes).
+struct RtlBlock {
+    lane0: usize,
+    lanes: usize,
+    /// Pending (amplitude, seed); amplitude 0 disables kicks.
+    noise: Option<(f64, u64)>,
+    /// Periods consumed from the block's kick stream since the last
+    /// `set_lane_block_noise`, advancing in block-lane order — the
+    /// block-local twin of the whole-batch `noise_tick`.
+    tick: u64,
+    /// Sum of the block lanes' fast-cycle meters at program time.
+    base_cycles: u64,
+    /// The next `run_chunk` reprograms the block's lanes
+    /// unconditionally: a freshly placed block must never resume a
+    /// retired problem's registers even if the init phases coincide.
+    fresh: bool,
+}
 
 pub struct RtlEngine {
     cfg: NetworkConfig,
@@ -60,6 +91,18 @@ pub struct RtlEngine {
     /// active lanes unconditionally — a fresh init that happens to
     /// equal a lane's current phases must still reset its registers.
     pending_wave: Option<usize>,
+    /// True when the simulator's shared weight memory holds a valid
+    /// whole-batch problem.  Programming any lane block turns this off
+    /// (one-way: clearing the last block leaves the engine demanding a
+    /// fresh `set_weights` rather than resuming a stale problem).
+    whole: bool,
+    /// Programmed lane blocks (the packed solve path); empty in
+    /// whole-batch mode.
+    blocks: Vec<RtlBlock>,
+    /// Lane-periods stepped since construction, whole-batch and block
+    /// paths alike — the per-period all-gather count the emulated
+    /// cluster front end prices (`runtime::cluster`).
+    lane_periods: u64,
     /// Lifecycle trace sink; when set, `run_chunk` records one
     /// `engine_chunk` span carrying the chunk's emulated fast-cycle
     /// delta next to the host step time.
@@ -81,6 +124,9 @@ impl RtlEngine {
             noise_tick: 0,
             active: batch,
             pending_wave: None,
+            whole: false,
+            blocks: Vec::new(),
+            lane_periods: 0,
             trace: None,
         }
     }
@@ -91,6 +137,41 @@ impl RtlEngine {
             .as_ref()
             .map(|s| (0..s.lanes()).map(|l| s.lane_fast_cycles(l)).sum())
             .unwrap_or(0)
+    }
+
+    /// Lane-periods stepped since construction (each is one per-period
+    /// phase all-gather on a multi-device composition of this fabric).
+    pub(crate) fn lane_periods_stepped(&self) -> u64 {
+        self.lane_periods
+    }
+
+    /// True once a simulator exists (whole-batch weights or a lane
+    /// block have been programmed).
+    pub(crate) fn programmed(&self) -> bool {
+        self.sim.is_some()
+    }
+
+    /// Fast-cycle meter of weight row `row`'s MAC summed across lanes —
+    /// the elapsed work of an emulated cluster device owning that row
+    /// (`runtime::cluster` samples each device at its first row).
+    pub(crate) fn row_fast_cycles(&self, row: usize) -> u64 {
+        self.sim.as_ref().map_or(0, |s| s.row_fast_cycles(row))
+    }
+
+    /// Price `fast_cycles` of emulated work on this engine's device at
+    /// its network size — the shared tail of `hardware_cost` and
+    /// `lane_block_hardware_cost`.
+    fn price(&self, fast_cycles: u64) -> HardwareCost {
+        let f_logic_mhz = timing::logic_frequency_hybrid(self.cfg.n, &self.device);
+        let res = resources::hybrid(&self.cfg, &self.device);
+        HardwareCost {
+            fast_cycles,
+            f_logic_mhz,
+            emulated_s: fast_cycles as f64 / (f_logic_mhz * 1e6),
+            fits_device: res.fits(&self.device),
+            area_percent: res.area_percent(&self.device),
+            sync_fast_cycles: 0,
+        }
     }
 }
 
@@ -112,10 +193,13 @@ impl ChunkEngine for RtlEngine {
         self.sim = Some(HybridOnn::with_lanes(self.cfg, w, self.batch));
         // Reprogramming the weight memory restarts the kick stream,
         // exactly like the native engine rebuilding its PhaseNoise —
-        // and returns the whole batch to active duty.
+        // clears every lane block, and returns the whole batch to
+        // active duty.
         self.noise_tick = 0;
         self.active = self.batch;
         self.pending_wave = None;
+        self.whole = true;
+        self.blocks.clear();
         Ok(())
     }
 
@@ -126,43 +210,87 @@ impl ChunkEngine for RtlEngine {
         if phases.len() != self.batch * n || settled.len() != self.batch {
             return Err(anyhow!("shape mismatch"));
         }
-        let wave = self.pending_wave.take();
-        if let Some(active) = wave {
-            self.active = active;
-        }
-        let sim = self
-            .sim
-            .as_mut()
-            .ok_or_else(|| anyhow!("set_weights not called"))?;
         let p = self.cfg.period() as i32;
-        // A declared wave reprograms every active lane unconditionally
-        // (a fresh init may coincide with the lane's current phases —
-        // its registers must reset anyway); otherwise externally
-        // rewritten lanes are detected by value and reprogrammed, and
-        // untouched lanes resume.  Lanes past `active` are padding:
-        // never stepped, never metered.
-        for lane in 0..self.active {
-            let slice = &phases[lane * n..(lane + 1) * n];
-            if wave.is_some() || sim.lane_phases(lane) != slice {
-                sim.set_lane_phases(lane, slice);
-            }
-        }
-        let noise = self.noise.filter(|&(a, _)| a > 0.0);
-        for lane in 0..self.active {
-            for k in 0..self.chunk {
-                let settled_now = sim.step_lane_period(lane);
-                if let Some((amp, seed)) = noise {
-                    let tick = self.noise_tick;
-                    sim.kick_lane_phases(lane, |i, phi| {
-                        PhaseNoise::kick_at(seed, tick, i, amp, phi, p)
-                    });
-                    self.noise_tick += 1;
+        let chunk = self.chunk;
+        if !self.blocks.is_empty() {
+            // Packed mode: each programmed block advances its own lanes
+            // against its own weight bank and block-local kick stream;
+            // lanes outside every block are neither stepped nor metered.
+            let sim = self
+                .sim
+                .as_mut()
+                .expect("block mode always has a simulator");
+            for b in self.blocks.iter_mut() {
+                for off in 0..b.lanes {
+                    let lane = b.lane0 + off;
+                    let slice = &phases[lane * n..(lane + 1) * n];
+                    if b.fresh || sim.lane_phases(lane) != slice {
+                        sim.set_lane_phases(lane, slice);
+                    }
                 }
-                if settled_now && settled[lane] < 0 {
-                    settled[lane] = period0 + k as i32;
+                b.fresh = false;
+                let noise = b.noise.filter(|&(a, _)| a > 0.0);
+                for off in 0..b.lanes {
+                    let lane = b.lane0 + off;
+                    for k in 0..chunk {
+                        let settled_now = sim.step_lane_period(lane);
+                        self.lane_periods += 1;
+                        if let Some((amp, seed)) = noise {
+                            let tick = b.tick;
+                            sim.kick_lane_phases(lane, |i, phi| {
+                                PhaseNoise::kick_at(seed, tick, i, amp, phi, p)
+                            });
+                            b.tick += 1;
+                        }
+                        if settled_now && settled[lane] < 0 {
+                            settled[lane] = period0 + k as i32;
+                        }
+                    }
+                    phases[lane * n..(lane + 1) * n].copy_from_slice(sim.lane_phases(lane));
                 }
             }
-            phases[lane * n..(lane + 1) * n].copy_from_slice(sim.lane_phases(lane));
+        } else {
+            if !self.whole {
+                return Err(anyhow!("set_weights not called"));
+            }
+            let wave = self.pending_wave.take();
+            if let Some(active) = wave {
+                self.active = active;
+            }
+            let sim = self
+                .sim
+                .as_mut()
+                .ok_or_else(|| anyhow!("set_weights not called"))?;
+            // A declared wave reprograms every active lane
+            // unconditionally (a fresh init may coincide with the lane's
+            // current phases — its registers must reset anyway);
+            // otherwise externally rewritten lanes are detected by value
+            // and reprogrammed, and untouched lanes resume.  Lanes past
+            // `active` are padding: never stepped, never metered.
+            for lane in 0..self.active {
+                let slice = &phases[lane * n..(lane + 1) * n];
+                if wave.is_some() || sim.lane_phases(lane) != slice {
+                    sim.set_lane_phases(lane, slice);
+                }
+            }
+            let noise = self.noise.filter(|&(a, _)| a > 0.0);
+            for lane in 0..self.active {
+                for k in 0..chunk {
+                    let settled_now = sim.step_lane_period(lane);
+                    self.lane_periods += 1;
+                    if let Some((amp, seed)) = noise {
+                        let tick = self.noise_tick;
+                        sim.kick_lane_phases(lane, |i, phi| {
+                            PhaseNoise::kick_at(seed, tick, i, amp, phi, p)
+                        });
+                        self.noise_tick += 1;
+                    }
+                    if settled_now && settled[lane] < 0 {
+                        settled[lane] = period0 + k as i32;
+                    }
+                }
+                phases[lane * n..(lane + 1) * n].copy_from_slice(sim.lane_phases(lane));
+            }
         }
         if let (Some(t0), Some(sink)) = (t0, self.trace.as_ref()) {
             sink.borrow_mut().record(TraceEvent::EngineChunk {
@@ -205,22 +333,92 @@ impl ChunkEngine for RtlEngine {
         Ok(())
     }
 
+    fn supports_lane_blocks(&self) -> bool {
+        true
+    }
+
+    fn set_lane_block(&mut self, lane0: usize, lanes: usize, w_f32: &[f32]) -> Result<()> {
+        if lanes == 0 || lane0 + lanes > self.batch {
+            return Err(anyhow!(
+                "lane block [{lane0}, {}) outside the {}-lane batch",
+                lane0 + lanes,
+                self.batch
+            ));
+        }
+        if self.blocks.iter().any(|b| {
+            b.lane0 != lane0 && lane0 < b.lane0 + b.lanes && b.lane0 < lane0 + lanes
+        }) {
+            return Err(anyhow!(
+                "lane block [{lane0}, {}) overlaps a programmed block",
+                lane0 + lanes
+            ));
+        }
+        let w = crate::runtime::checked_weights(&self.cfg, w_f32)?;
+        // Entering block mode invalidates whole-batch weights one-way;
+        // a cold engine gets a simulator whose shared memory is zeros
+        // (no lane outside a block ever steps against it).
+        self.whole = false;
+        let sim = self.sim.get_or_insert_with(|| {
+            HybridOnn::with_lanes(self.cfg, WeightMatrix::zeros(self.cfg.n), self.batch)
+        });
+        sim.set_lane_bank(lane0, lanes, w);
+        let base_cycles = (lane0..lane0 + lanes).map(|l| sim.lane_fast_cycles(l)).sum();
+        // Re-programming the same range replaces the weights AND
+        // discards the retired block's kick stream and cycle baseline.
+        self.blocks.retain(|b| b.lane0 != lane0);
+        self.blocks.push(RtlBlock {
+            lane0,
+            lanes,
+            noise: None,
+            tick: 0,
+            base_cycles,
+            fresh: true,
+        });
+        Ok(())
+    }
+
+    fn set_lane_block_noise(&mut self, lane0: usize, amplitude: f64, seed: u64) -> Result<()> {
+        if !(0.0..=1.0).contains(&amplitude) {
+            return Err(anyhow!("noise amplitude {amplitude} outside [0, 1]"));
+        }
+        let b = self
+            .blocks
+            .iter_mut()
+            .find(|b| b.lane0 == lane0)
+            .ok_or_else(|| anyhow!("no lane block at lane {lane0}"))?;
+        b.noise = Some((amplitude, seed));
+        b.tick = 0;
+        Ok(())
+    }
+
+    fn clear_lane_block(&mut self, lane0: usize) -> Result<()> {
+        let before = self.blocks.len();
+        self.blocks.retain(|b| b.lane0 != lane0);
+        if self.blocks.len() == before {
+            return Err(anyhow!("no lane block at lane {lane0}"));
+        }
+        if let Some(sim) = self.sim.as_mut() {
+            sim.clear_lane_bank(lane0);
+        }
+        Ok(())
+    }
+
     fn hardware_cost(&self) -> Option<HardwareCost> {
-        let sim = self.sim.as_ref()?;
         // One device runs the lanes back to back: the emulated elapsed
         // fast-clock time is the sum of each lane's (parallel-MAC) wall
         // clock — N MACs per lane tick in lockstep, so any single MAC's
         // counter is its lane's elapsed cycles.
-        let fast_cycles: u64 = (0..sim.lanes()).map(|l| sim.lane_fast_cycles(l)).sum();
-        let f_logic_mhz = timing::logic_frequency_hybrid(self.cfg.n, &self.device);
-        let res = resources::hybrid(&self.cfg, &self.device);
-        Some(HardwareCost {
-            fast_cycles,
-            f_logic_mhz,
-            emulated_s: fast_cycles as f64 / (f_logic_mhz * 1e6),
-            fits_device: res.fits(&self.device),
-            area_percent: res.area_percent(&self.device),
-        })
+        self.sim.as_ref()?;
+        Some(self.price(self.total_fast_cycles()))
+    }
+
+    fn lane_block_hardware_cost(&self, lane0: usize) -> Option<HardwareCost> {
+        let sim = self.sim.as_ref()?;
+        let b = self.blocks.iter().find(|b| b.lane0 == lane0)?;
+        let cycles: u64 = (b.lane0..b.lane0 + b.lanes)
+            .map(|l| sim.lane_fast_cycles(l))
+            .sum();
+        Some(self.price(cycles - b.base_cycles))
     }
 
     fn set_trace_sink(&mut self, sink: Option<TraceSink>) {
@@ -408,6 +606,93 @@ mod tests {
         let mut st2 = vec![-1i32; 4];
         e.run_chunk(&mut ph2, &mut st2, 0).unwrap();
         assert!(st2.iter().all(|&s| s >= 0), "all four lanes advance again");
+    }
+
+    #[test]
+    fn lane_blocks_match_dedicated_engines() {
+        // Two blocks (different weights, different noise) on one 5-lane
+        // engine: each must reproduce a dedicated engine of its own
+        // geometry bit for bit, chunk after chunk; the unblocked lane 4
+        // never moves.
+        let mut rng = Rng::new(93);
+        let n = 4;
+        let cfg = NetworkConfig::paper(n);
+        let wa = rand_w(&mut rng, n);
+        let wb = rand_w(&mut rng, n);
+        let mut packed = RtlEngine::new(cfg, 5, 3);
+        packed.set_lane_block(0, 2, &wa).unwrap();
+        packed.set_lane_block(2, 2, &wb).unwrap();
+        let init: Vec<i32> = (0..5 * n).map(|_| rng.range_i64(0, 16) as i32).collect();
+        let mut ph = init.clone();
+        let mut st = vec![-1i32; 5];
+        let mut solo_a = RtlEngine::new(cfg, 2, 3);
+        solo_a.set_weights(&wa).unwrap();
+        let mut pa = init[..2 * n].to_vec();
+        let mut sa = vec![-1i32; 2];
+        let mut solo_b = RtlEngine::new(cfg, 2, 3);
+        solo_b.set_weights(&wb).unwrap();
+        let mut pb = init[2 * n..4 * n].to_vec();
+        let mut sb = vec![-1i32; 2];
+        for chunk_idx in 0..3 {
+            packed.set_lane_block_noise(0, 0.8, 11 + chunk_idx).unwrap();
+            packed.set_lane_block_noise(2, 0.4, 22 + chunk_idx).unwrap();
+            solo_a.set_noise(0.8, 11 + chunk_idx).unwrap();
+            solo_b.set_noise(0.4, 22 + chunk_idx).unwrap();
+            let p0 = chunk_idx as i32 * 3;
+            packed.run_chunk(&mut ph, &mut st, p0).unwrap();
+            solo_a.run_chunk(&mut pa, &mut sa, p0).unwrap();
+            solo_b.run_chunk(&mut pb, &mut sb, p0).unwrap();
+            assert_eq!(&ph[..2 * n], &pa[..], "block A diverged at {chunk_idx}");
+            assert_eq!(&ph[2 * n..4 * n], &pb[..], "block B diverged at {chunk_idx}");
+            assert_eq!(&ph[4 * n..], &init[4 * n..], "unblocked lane moved");
+            assert_eq!(st[4], -1);
+        }
+        // Per-block hardware shares: each block burned exactly its solo
+        // twin's cycles, and the whole-fabric meter is their sum.
+        let ha = packed.lane_block_hardware_cost(0).unwrap();
+        let hb = packed.lane_block_hardware_cost(2).unwrap();
+        assert_eq!(ha.fast_cycles, solo_a.hardware_cost().unwrap().fast_cycles);
+        assert_eq!(hb.fast_cycles, solo_b.hardware_cost().unwrap().fast_cycles);
+        assert_eq!(
+            packed.hardware_cost().unwrap().fast_cycles,
+            ha.fast_cycles + hb.fast_cycles
+        );
+        assert!(packed.lane_block_hardware_cost(1).is_none(), "not a block anchor");
+    }
+
+    #[test]
+    fn lane_block_lifecycle_validation() {
+        let n = 3;
+        let cfg = NetworkConfig::paper(n);
+        let zeros = vec![0.0f32; n * n];
+        let mut e = RtlEngine::new(cfg, 4, 2);
+        assert!(e.supports_lane_blocks());
+        assert!(e.set_lane_block(0, 0, &zeros).is_err(), "empty block");
+        assert!(e.set_lane_block(3, 2, &zeros).is_err(), "past the batch");
+        e.set_lane_block(0, 2, &zeros).unwrap();
+        assert!(e.set_lane_block(1, 2, &zeros).is_err(), "overlap");
+        assert!(e.set_lane_block_noise(1, 0.5, 1).is_err(), "no block there");
+        assert!(e.set_lane_block_noise(0, 1.5, 1).is_err(), "amplitude range");
+        assert!(e.clear_lane_block(1).is_err());
+        // Re-programming the same range restarts its kick stream: two
+        // fresh programs of the same block replay identical kicks.
+        let init = vec![1, 5, 9, 2, 6, 10, 0, 0, 0, 0, 0, 0];
+        e.set_lane_block_noise(0, 0.9, 7).unwrap();
+        let mut ph = init.clone();
+        let mut st = vec![-1i32; 4];
+        e.run_chunk(&mut ph, &mut st, 0).unwrap();
+        e.set_lane_block(0, 2, &zeros).unwrap();
+        e.set_lane_block_noise(0, 0.9, 7).unwrap();
+        let mut ph2 = init.clone();
+        let mut st2 = vec![-1i32; 4];
+        e.run_chunk(&mut ph2, &mut st2, 0).unwrap();
+        assert_eq!(ph2, ph, "reprogram must restart the block kick stream");
+        // Clearing the last block is one-way: the engine demands a
+        // fresh set_weights before any whole-batch run.
+        e.clear_lane_block(0).unwrap();
+        assert!(e.run_chunk(&mut ph, &mut st, 0).is_err(), "unprogrammed");
+        e.set_weights(&zeros).unwrap();
+        assert!(e.run_chunk(&mut ph, &mut st, 0).is_ok());
     }
 
     #[test]

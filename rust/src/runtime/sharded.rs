@@ -87,6 +87,24 @@ struct ShardHandle {
     rows: usize,
 }
 
+/// The canonical row partition of an `n`-oscillator network across
+/// `num_shards` devices: `(row0, rows)` per shard, remainder rows going
+/// to the leading shards.  Shared by this engine and the emulated
+/// multi-FPGA cluster (`runtime::cluster`) so both fabrics split the
+/// quantized weight memory identically.
+pub(crate) fn shard_row_ranges(n: usize, num_shards: usize) -> Vec<(usize, usize)> {
+    let base = n / num_shards;
+    let extra = n % num_shards;
+    let mut ranges = Vec::with_capacity(num_shards);
+    let mut row0 = 0usize;
+    for s in 0..num_shards {
+        let rows = base + usize::from(s < extra);
+        ranges.push((row0, rows));
+        row0 += rows;
+    }
+    ranges
+}
+
 /// Leader-side record of one lane block (packed multi-problem mode):
 /// which lanes it owns and where its block-local kick stream stands.
 struct BlockInfo {
@@ -153,12 +171,8 @@ impl ShardedEngine {
         assert_eq!(cfg.n, w.n);
         let n = cfg.n;
         let p = cfg.period();
-        let base = n / num_shards;
-        let extra = n % num_shards;
         let mut shards = Vec::with_capacity(num_shards);
-        let mut row0 = 0usize;
-        for s in 0..num_shards {
-            let rows = base + usize::from(s < extra);
+        for (row0, rows) in shard_row_ranges(n, num_shards) {
             let mut slice = Vec::with_capacity(rows * n);
             for r in row0..row0 + rows {
                 slice.extend_from_slice(w.row(r));
@@ -178,7 +192,6 @@ impl ShardedEngine {
                 row0,
                 rows,
             });
-            row0 += rows;
         }
         Ok(Self {
             cfg,

@@ -16,6 +16,7 @@ use anyhow::{anyhow, Result};
 
 use crate::onn::config::NetworkConfig;
 use crate::onn::phase::spin_to_phase;
+use crate::runtime::cluster::RtlClusterEngine;
 use crate::runtime::native::NativeEngine;
 use crate::runtime::rtl::RtlEngine;
 use crate::runtime::sharded::ShardedEngine;
@@ -84,8 +85,15 @@ pub enum EngineSelect {
     /// shards (a count of 1 collapses to the native engine).
     Sharded { shards: usize },
     /// The bit-true emulated-hardware engine (`runtime::rtl`): the
-    /// paper's serial-MAC hybrid datapath at paper precision.
+    /// paper's serial-MAC hybrid datapath (paper precision unless the
+    /// params carry an explicit precision sweep point).
     Rtl,
+    /// An emulated multi-FPGA cluster of this many devices composing
+    /// the bit-true hardware engine (`runtime::cluster`): row-split
+    /// quantized weight memory, per-device `SerialMac` meters, and a
+    /// priced per-period phase all-gather.  Bit-exact with
+    /// [`EngineSelect::Rtl`] — only the hardware cost model changes.
+    RtlCluster { shards: usize },
     /// Native below `threshold` oscillators; at or above it, one shard
     /// per `threshold` rows (`ceil(m / threshold)`, at least 2), capped
     /// at `max_shards`.  A `max_shards` below 2 disables sharding
@@ -109,6 +117,9 @@ impl EngineSelect {
     pub fn shards_for(&self, m: usize) -> usize {
         let k = match *self {
             EngineSelect::Native | EngineSelect::Rtl => 1,
+            // One logical fabric: the cluster's device count shapes its
+            // hardware model, not the float-side engine topology.
+            EngineSelect::RtlCluster { .. } => 1,
             EngineSelect::Sharded { shards } => shards.max(1),
             EngineSelect::Auto { threshold, max_shards } => {
                 let t = threshold.max(1);
@@ -124,22 +135,39 @@ impl EngineSelect {
 }
 
 /// Build the engine a selection resolves to for an `m`-oscillator
-/// problem (`batch` replicas per wave, `chunk` periods per engine call).
+/// problem (`batch` replicas per wave, `chunk` periods per engine call)
+/// at paper precision.
 pub fn build_engine(
     m: usize,
     batch: usize,
     chunk: usize,
     select: EngineSelect,
 ) -> Result<Box<dyn ChunkEngine>> {
-    let cfg = NetworkConfig::paper(m);
-    if select == EngineSelect::Rtl {
-        return Ok(Box::new(RtlEngine::new(cfg, batch, chunk)));
-    }
-    let shards = select.shards_for(m);
-    if shards <= 1 {
-        Ok(Box::new(NativeEngine::new(cfg, batch, chunk)))
-    } else {
-        Ok(Box::new(ShardedEngine::unprogrammed(cfg, shards, batch, chunk)?))
+    build_engine_cfg(NetworkConfig::paper(m), batch, chunk, select)
+}
+
+/// [`build_engine`] at an explicit network configuration — the serve
+/// path's precision sweep constructs engines through this so
+/// `--weight-bits`/`--phase-bits` reach every fabric.
+pub fn build_engine_cfg(
+    cfg: NetworkConfig,
+    batch: usize,
+    chunk: usize,
+    select: EngineSelect,
+) -> Result<Box<dyn ChunkEngine>> {
+    match select {
+        EngineSelect::Rtl => Ok(Box::new(RtlEngine::new(cfg, batch, chunk))),
+        EngineSelect::RtlCluster { shards } => {
+            Ok(Box::new(RtlClusterEngine::new(cfg, shards, batch, chunk)?))
+        }
+        _ => {
+            let shards = select.shards_for(cfg.n);
+            if shards <= 1 {
+                Ok(Box::new(NativeEngine::new(cfg, batch, chunk)))
+            } else {
+                Ok(Box::new(ShardedEngine::unprogrammed(cfg, shards, batch, chunk)?))
+            }
+        }
     }
 }
 
@@ -162,6 +190,25 @@ pub struct PortfolioParams {
     /// to match the shared engine's chunk (part of the batching
     /// compatibility rules, DESIGN_SOLVER.md §7).
     pub chunk: usize,
+    /// Explicit `(weight_bits, phase_bits)` precision sweep point;
+    /// `None` runs the paper's 5w/4p reference point.  Threaded into
+    /// engine construction AND problem quantization (they must agree),
+    /// which is why the embed sites below go through [`Self::cfg`].
+    /// Packed solves require every co-scheduled entry to share it —
+    /// precision is part of the engine geometry, like `chunk`.
+    pub precision: Option<(u32, u32)>,
+}
+
+impl PortfolioParams {
+    /// The network configuration this solve quantizes and runs at for
+    /// an `m`-oscillator embedding: the paper point, or the explicit
+    /// precision sweep point when one is set.
+    pub fn cfg(&self, m: usize) -> NetworkConfig {
+        match self.precision {
+            Some((wb, pb)) => NetworkConfig::with_precision(m, wb, pb),
+            None => NetworkConfig::paper(m),
+        }
+    }
 }
 
 impl Default for PortfolioParams {
@@ -177,6 +224,7 @@ impl Default for PortfolioParams {
             plateau_chunks: 3,
             polish: true,
             chunk: DEFAULT_CHUNK,
+            precision: None,
         }
     }
 }
@@ -209,7 +257,7 @@ pub struct SolveOutcome {
     /// False when the engine has no noise hook (schedule was skipped).
     pub noise_applied: bool,
     /// Engine kind that ran the solve ("native" / "sharded" / "rtl" /
-    /// "pjrt").
+    /// "rtl-cluster" / "pjrt").
     pub engine: &'static str,
     /// All-gather synchronization rounds the engine performed — the
     /// multi-device sync-cost metric (0 on single-device engines).
@@ -328,7 +376,11 @@ pub fn solve_portfolio_hooked(
             engine.n()
         ));
     }
-    let cfg = NetworkConfig::paper(m);
+    // Quantize at the same precision the engine was built with
+    // (paper's 5w/4p unless the params carry a sweep point) — engine
+    // construction and problem embedding must agree on the weight range
+    // and phase wheel.
+    let cfg = params.cfg(m);
     let p = cfg.period() as i32;
     if problem.sectors > cfg.period() {
         return Err(anyhow!(
@@ -657,7 +709,7 @@ pub fn solve_with_trace(
     }
     let m = problem.embed_dim();
     let batch = params.replicas.clamp(1, MAX_WAVE_REPLICAS);
-    let mut engine = build_engine(m, batch, params.chunk, select)?;
+    let mut engine = build_engine_cfg(params.cfg(m), batch, params.chunk, select)?;
     solve_portfolio_traced(engine.as_mut(), problem, params, trace)
 }
 
@@ -772,7 +824,7 @@ fn place_lane(
     let (n, p) = (buf.n, buf.p);
     let m = problem.embed_dim();
     let binary = problem.sectors == 2;
-    let (wm, quantization_error) = problem.embed_with_error(&NetworkConfig::paper(m));
+    let (wm, quantization_error) = problem.embed_with_error(&params.cfg(m));
     let mut w = vec![0f32; n * n];
     for i in 0..m {
         for j in 0..m {
@@ -889,8 +941,10 @@ fn finish_lane(
         // Lane blocks carry dense per-block matrices (the zero-padded
         // layout is the packing invariant); sparse problems solve solo.
         sparse: false,
-        // Lane-block fabrics are float engines; no hardware model.
-        hardware: None,
+        // On the rtl engine each block meters its own lanes' SerialMac
+        // counters, so a packed problem reports exactly the emulated
+        // hardware share a solo run of it would; float fabrics: None.
+        hardware: engine.lane_block_hardware_cost(lane.lane0),
     }
 }
 
@@ -941,10 +995,24 @@ pub fn solve_packed_hooked(
     let n = engine.n();
     let b = engine.batch();
     let chunk = engine.chunk_len().max(1);
-    let cfg = NetworkConfig::paper(n);
+    // The shared engine runs at one precision; every entry must agree
+    // (validated below), so the first entry's sweep point stands for
+    // the batch — like `chunk`, precision is engine geometry.
+    let precision = entries.first().and_then(|(_, params)| params.precision);
+    let cfg = entries
+        .first()
+        .map_or(NetworkConfig::paper(n), |(_, params)| params.cfg(n));
     let p = cfg.period() as i32;
     let noise_applied = engine.supports_noise();
     for (idx, (problem, params)) in entries.iter().enumerate() {
+        if params.precision != precision {
+            return Err(anyhow!(
+                "entry {idx}: precision {:?} != the packed engine's {:?} \
+                 (co-scheduled lanes share one quantized fabric)",
+                params.precision,
+                precision
+            ));
+        }
         problem
             .validate()
             .map_err(|e| anyhow!("entry {idx}: bad problem: {e}"))?;
@@ -1239,6 +1307,11 @@ mod tests {
         assert_eq!(off.shards_for(4000), 1, "max_shards < 2 disables sharding");
         assert_eq!(EngineSelect::Native.shards_for(4000), 1);
         assert_eq!(EngineSelect::Rtl.shards_for(4000), 1, "one emulated device");
+        assert_eq!(
+            EngineSelect::RtlCluster { shards: 4 }.shards_for(4000),
+            1,
+            "cluster devices shape the hardware model, not the float topology"
+        );
         assert_eq!(EngineSelect::Sharded { shards: 5 }.shards_for(64), 5);
         assert_eq!(
             EngineSelect::Sharded { shards: 9 }.shards_for(3),
@@ -1286,6 +1359,65 @@ mod tests {
         let native = solve_native(&p, &params(4, 32, 13)).unwrap();
         assert!(native.hardware.is_none());
         assert_eq!(native.quantization_error, 0.0);
+    }
+
+    #[test]
+    fn rtl_cluster_selection_matches_solo_and_prices_the_all_gather() {
+        // The cluster engine delegates the dynamics to one inner rtl
+        // engine, so the answers are bit-identical to the solo fabric;
+        // what changes is the hardware model — a per-period all-gather
+        // premium on top of the solo compute cycles.
+        let g = Graph::complete_bipartite(3, 3);
+        let p = max_cut(&g);
+        let prm = params(4, 32, 13);
+        let solo = solve_with(&p, &prm, EngineSelect::Rtl).unwrap();
+        let cl = solve_with(&p, &prm, EngineSelect::RtlCluster { shards: 2 }).unwrap();
+        assert_eq!(cl.engine, "rtl-cluster");
+        assert_eq!(cl.best_energy, solo.best_energy);
+        assert_eq!(cl.best_spins, solo.best_spins);
+        assert_eq!(cl.best_phases, solo.best_phases);
+        assert_eq!(cl.periods, solo.periods);
+        assert_eq!(cl.replica_phases, solo.replica_phases);
+        assert!(cl.sync_rounds > 0, "one all-gather per lane-period");
+        assert_eq!(solo.sync_rounds, 0);
+        let hs = solo.hardware.unwrap();
+        let hc = cl.hardware.unwrap();
+        assert!(hc.sync_fast_cycles > 0);
+        assert_eq!(hs.sync_fast_cycles, 0);
+        assert_eq!(
+            hc.fast_cycles,
+            hs.fast_cycles + hc.sync_fast_cycles,
+            "cluster = lockstep compute (solo cycles) + priced sync"
+        );
+    }
+
+    #[test]
+    fn precision_sweep_threads_into_engine_and_quantizer() {
+        // Non-uniform couplings {1, 2, 4}: exactly representable at no
+        // precision below full scale, so coarser weight bits must raise
+        // the reported quantization error — and a 3-bit phase wheel
+        // (period 8) must bound every returned phase.
+        use crate::solver::problem::IsingProblem;
+        let mut problem = IsingProblem::new(4);
+        problem.set_j(0, 1, 1.0);
+        problem.set_j(1, 2, 2.0);
+        problem.set_j(2, 3, 4.0);
+        let paper = solve_with(&problem, &params(4, 32, 9), EngineSelect::Rtl).unwrap();
+        let mut prm = params(4, 32, 9);
+        prm.precision = Some((3, 3));
+        let coarse = solve_with(&problem, &prm, EngineSelect::Rtl).unwrap();
+        assert!(
+            coarse.quantization_error > paper.quantization_error,
+            "3-bit weights must round harder than the paper's 5 ({} vs {})",
+            coarse.quantization_error,
+            paper.quantization_error
+        );
+        for phases in &coarse.replica_phases {
+            assert!(
+                phases.iter().all(|&ph| (0..8).contains(&ph)),
+                "phases must live on the 2^3-step wheel"
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,385 @@
+//! Property tests for packing and sharding the *emulated hardware*.
+//! Lane-bank packing: an [`RtlEngine`] whose batch lanes carry
+//! different Ising problems (per-block quantized weight banks,
+//! block-local counter-indexed kick streams) must be **bit-exact, lane
+//! by lane, with each problem solved solo** on a dedicated `--rtl`
+//! engine at the same seed — including backfilled lanes, whose blocks
+//! must restart the kick stream rather than resume the retired
+//! problem's tick counter.  End-to-end mixes keep every embedding at
+//! exactly the bucket size: outcome identity includes the settle
+//! flags, and the rtl settle judge reads *relative* phases over the
+//! whole lane, so a zero-padded (frozen) oscillator is part of the
+//! judgment — the padding invariant itself (real oscillators'
+//! trajectories untouched by zero-coupled padding) is pinned
+//! separately at the chunk-walk level, where it is exact by
+//! construction.  Cluster sharding: an [`RtlClusterEngine`] row-splits
+//! the quantized weight memory across `K` emulated devices, which is a
+//! hardware-*model* statement only — every chunk's phases and settle
+//! flags must equal the single-device engine bit for bit
+//! (non-dividing row splits included), and only the priced phase
+//! all-gathers may differ in the reported hardware cost.
+
+use onn_scale::fpga::timing::cluster_sync_cycles;
+use onn_scale::onn::config::NetworkConfig;
+use onn_scale::runtime::cluster::RtlClusterEngine;
+use onn_scale::runtime::rtl::RtlEngine;
+use onn_scale::runtime::ChunkEngine;
+use onn_scale::solver::portfolio::{
+    solve_packed, solve_with, EngineSelect, PortfolioParams, SolveOutcome,
+};
+use onn_scale::solver::problem::IsingProblem;
+use onn_scale::solver::reductions::{coloring, max_cut, min_vertex_cover};
+use onn_scale::solver::Graph;
+use onn_scale::util::rng::Rng;
+
+/// A random instance embedding into exactly `bucket` oscillators:
+/// max-cut (binary), 3-coloring (sectors), or vertex cover (whose
+/// field -> ancilla embedding adds one oscillator, so its graph is one
+/// vertex smaller).  Replica counts, budgets, and seeds randomized.
+fn random_entry_at(rng: &mut Rng, chunk: usize, bucket: usize) -> (IsingProblem, PortfolioParams) {
+    let problem = match rng.usize_below(3) {
+        0 => max_cut(&Graph::random(bucket, 0.35, rng)),
+        1 => coloring(&Graph::random(bucket, 0.35, rng), 3),
+        // Penalty 3.0 keeps the ancilla field nonzero at every vertex
+        // degree (h_i = 1/2 - 3*deg_i/4 has no integer root), so the
+        // field->ancilla embedding always lands exactly on `bucket`.
+        _ => min_vertex_cover(&Graph::random(bucket - 1, 0.35, rng), 3.0),
+    };
+    assert_eq!(problem.embed_dim(), bucket, "entry must fill the bucket exactly");
+    let params = PortfolioParams {
+        replicas: 2 + rng.usize_below(3),              // 2..=4
+        max_periods: chunk * (4 + rng.usize_below(4)), // 4..=7 chunks
+        seed: rng.next_u64(),
+        chunk,
+        ..Default::default()
+    };
+    (problem, params)
+}
+
+fn assert_bit_exact(case: &str, out: &SolveOutcome, solo: &SolveOutcome) {
+    assert_eq!(out.best_energy, solo.best_energy, "{case}: energies differ");
+    assert_eq!(out.best_spins, solo.best_spins, "{case}: spins differ");
+    assert_eq!(out.best_phases, solo.best_phases, "{case}: phases differ");
+    assert_eq!(out.periods, solo.periods, "{case}: period counts differ");
+    assert_eq!(out.chunks, solo.chunks, "{case}: chunk counts differ");
+    assert_eq!(
+        out.settled_replicas, solo.settled_replicas,
+        "{case}: settle counts differ"
+    );
+    assert_eq!(out.early_exit, solo.early_exit, "{case}: exit kinds differ");
+    assert_eq!(
+        out.replica_phases, solo.replica_phases,
+        "{case}: replica readouts differ"
+    );
+    assert_eq!(
+        out.initial_best_energy, solo.initial_best_energy,
+        "{case}: initial bests differ"
+    );
+}
+
+/// Integer weights in the paper's quantized range, like the bit-true
+/// weight memory holds.
+fn rand_w(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n * n).map(|_| rng.range_i64(-8, 9) as f32).collect()
+}
+
+#[test]
+fn prop_rtl_packed_mixes_bit_exact_with_solo() {
+    // Random mixes of 2..=4 problems, all lanes resident at once on a
+    // shared bucket-sized rtl engine — every problem must match its
+    // dedicated-engine `--rtl` run bit for bit, and carry its own
+    // emulated hardware share.
+    let mut rng = Rng::new(8101);
+    for case in 0..3 {
+        for (chunk, bucket) in [(8usize, 8usize), (4, 8), (8, 16)] {
+            let count = 2 + rng.usize_below(3); // 2..=4 problems
+            let entries: Vec<_> =
+                (0..count).map(|_| random_entry_at(&mut rng, chunk, bucket)).collect();
+            let lanes: usize = entries.iter().map(|(_, p)| p.replicas).sum();
+            let mut engine = RtlEngine::new(NetworkConfig::paper(bucket), lanes, chunk);
+            let packed = solve_packed(&mut engine, &entries).unwrap();
+            assert_eq!(packed.len(), count);
+            for (i, ((problem, params), out)) in entries.iter().zip(&packed).enumerate() {
+                let solo = solve_with(problem, params, EngineSelect::Rtl).unwrap();
+                assert_eq!(out.engine, "rtl", "packing must stay on the rtl fabric");
+                assert!(out.noise_applied, "packed lanes must anneal");
+                assert!(
+                    out.hardware.is_some(),
+                    "case {case} entry {i}: packed rtl block must meter its share"
+                );
+                assert_bit_exact(
+                    &format!("case {case} bucket {bucket} chunk {chunk} entry {i}"),
+                    out,
+                    &solo,
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_rtl_packed_blocks_meter_solo_cycles_exactly() {
+    // A packed block's per-block SerialMac meter must price exactly
+    // what the dedicated single-device engine bills for the same
+    // problem — the gate behind the `--rtl-packed` bench row's
+    // throughput claim.
+    let mut rng = Rng::new(8102);
+    let chunk = 8usize;
+    let entries: Vec<_> = (0..3)
+        .map(|i| {
+            let g = Graph::random(8, 0.4, &mut rng);
+            (
+                max_cut(&g),
+                PortfolioParams {
+                    replicas: 2,
+                    max_periods: chunk * 6,
+                    seed: 4400 + i,
+                    chunk,
+                    ..Default::default()
+                },
+            )
+        })
+        .collect();
+    let mut engine = RtlEngine::new(NetworkConfig::paper(8), 6, chunk);
+    let packed = solve_packed(&mut engine, &entries).unwrap();
+    for (i, ((problem, params), out)) in entries.iter().zip(&packed).enumerate() {
+        let solo = solve_with(problem, params, EngineSelect::Rtl).unwrap();
+        assert_bit_exact(&format!("equal-size entry {i}"), out, &solo);
+        let hp = out.hardware.as_ref().expect("packed block meters");
+        let hs = solo.hardware.as_ref().expect("solo rtl meters");
+        assert_eq!(
+            hp.fast_cycles, hs.fast_cycles,
+            "entry {i}: packed block billed different emulated cycles than solo"
+        );
+        assert_eq!(hp.sync_fast_cycles, 0, "one device has no all-gather");
+    }
+}
+
+#[test]
+fn prop_rtl_packed_backfill_matches_solo() {
+    // More problems than the engine has lanes, with a zero-J instance
+    // mixed in so retirement is uneven: overflow entries wait in the
+    // queue and backfill lanes as earlier blocks retire.  Every problem
+    // — resident or backfilled — must match its solo `--rtl` run, which
+    // in particular requires the backfilled block to restart the kick
+    // stream on the reused lanes.
+    let mut rng = Rng::new(8103);
+    for case in 0..3 {
+        let chunk = 8;
+        let mut entries: Vec<_> = (0..4).map(|_| random_entry_at(&mut rng, chunk, 8)).collect();
+        entries.insert(
+            1,
+            (
+                IsingProblem::new(8),
+                PortfolioParams {
+                    replicas: 2,
+                    max_periods: chunk * 12,
+                    seed: 7700 + case,
+                    chunk,
+                    ..Default::default()
+                },
+            ),
+        );
+        let max_block = entries.iter().map(|(_, p)| p.replicas).max().unwrap();
+        let total: usize = entries.iter().map(|(_, p)| p.replicas).sum();
+        // Capacity for roughly half the mix forces real backfill.
+        let lanes = max_block.max(total / 2);
+        let mut engine = RtlEngine::new(NetworkConfig::paper(8), lanes, chunk);
+        let packed = solve_packed(&mut engine, &entries).unwrap();
+        assert!(packed[1].early_exit, "zero-J lane should retire early");
+        for (i, ((problem, params), out)) in entries.iter().zip(&packed).enumerate() {
+            let solo = solve_with(problem, params, EngineSelect::Rtl).unwrap();
+            assert_bit_exact(&format!("backfill case {case} entry {i}"), out, &solo);
+        }
+    }
+}
+
+#[test]
+fn prop_rtl_padded_block_trajectories_match_a_dedicated_engine() {
+    // The lane-bank weight-layout invariant on the bit-true fabric: a
+    // block whose problem couples only the first m of the engine's n
+    // oscillators (zero-padded bank) must walk the m real oscillators
+    // through exactly the trajectory a dedicated m-oscillator engine
+    // produces — padded oscillators are uncoupled (frozen under the
+    // deterministic dynamics) and kicks are per-oscillator independent
+    // of the engine width.  Settle flags are deliberately NOT compared
+    // here: the rtl judge reads relative phases over the whole lane,
+    // padding included, and the outcome-level identity is held by the
+    // exact-bucket mixes above.
+    let mut rng = Rng::new(8106);
+    for case in 0..4 {
+        let m = 5 + rng.usize_below(4); // 5..=8 real oscillators
+        let n = 16;
+        let w_small = rand_w(&mut rng, m);
+        let mut w_padded = vec![0.0f32; n * n];
+        for i in 0..m {
+            for j in 0..m {
+                w_padded[i * n + j] = w_small[i * m + j];
+            }
+        }
+        let lanes = 2usize;
+        let mut packed = RtlEngine::new(NetworkConfig::paper(n), 3, 4);
+        packed.set_lane_block(0, lanes, &w_padded).unwrap();
+        let mut solo = RtlEngine::new(NetworkConfig::paper(m), lanes, 4);
+        solo.set_weights(&w_small).unwrap();
+        let mut ph = vec![0i32; 3 * n];
+        let mut ps = vec![0i32; lanes * m];
+        for lane in 0..lanes {
+            for i in 0..m {
+                let v = rng.range_i64(0, 16) as i32;
+                ph[lane * n + i] = v;
+                ps[lane * m + i] = v;
+            }
+        }
+        let mut st = vec![-1i32; 3];
+        let mut ss = vec![-1i32; lanes];
+        for chunk_idx in 0..3i32 {
+            let (amp, seed) = (0.7, 900 + case as u64 * 10 + chunk_idx as u64);
+            packed.set_lane_block_noise(0, amp, seed).unwrap();
+            solo.set_noise(amp, seed).unwrap();
+            packed.run_chunk(&mut ph, &mut st, chunk_idx * 4).unwrap();
+            solo.run_chunk(&mut ps, &mut ss, chunk_idx * 4).unwrap();
+            for lane in 0..lanes {
+                assert_eq!(
+                    &ph[lane * n..lane * n + m],
+                    &ps[lane * m..(lane + 1) * m],
+                    "case {case} m={m} lane {lane} chunk {chunk_idx}: \
+                     padded trajectories diverged from the dedicated engine"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn regression_rtl_backfilled_block_restarts_the_kick_stream() {
+    // The backfill regression on the bit-true engine: a lane block that
+    // is cleared and re-programmed (what backfilling a retired lane
+    // does) must start a FRESH block-local kick stream, not resume the
+    // retired problem's tick counter.  Zero couplings freeze the
+    // deterministic dynamics, so any phase motion is exactly the noise.
+    let cfg = NetworkConfig::paper(6);
+    let w = vec![0.0f32; 36];
+    let init: Vec<i32> = vec![1, 5, 9, 2, 6, 10, 3, 7, 11, 4, 8, 12];
+    let fresh = {
+        let mut e = RtlEngine::new(cfg, 2, 4);
+        e.set_lane_block(0, 2, &w).unwrap();
+        e.set_lane_block_noise(0, 0.9, 7).unwrap();
+        let mut ph = init.clone();
+        let mut st = vec![-1i32; 2];
+        e.run_chunk(&mut ph, &mut st, 0).unwrap();
+        ph
+    };
+    assert_ne!(fresh, init, "amplitude 0.9 must move zero-J phases");
+
+    let mut e = RtlEngine::new(cfg, 2, 4);
+    e.set_lane_block(0, 2, &w).unwrap();
+    e.set_lane_block_noise(0, 0.9, 7).unwrap();
+    let mut ph = init.clone();
+    let mut st = vec![-1i32; 2];
+    e.run_chunk(&mut ph, &mut st, 0).unwrap();
+    assert_eq!(ph, fresh, "first chunk replays the fresh stream");
+    // Sensitivity check: WITHOUT re-programming, the block's tick
+    // counter keeps advancing — a second chunk from the same start must
+    // differ from the first, so the assertion below has teeth.
+    let mut ph2 = init.clone();
+    let mut st2 = vec![-1i32; 2];
+    e.run_chunk(&mut ph2, &mut st2, 4).unwrap();
+    assert_ne!(ph2, fresh, "tick counter must advance within a block");
+    // Retire + backfill the same lanes: the stream must restart.
+    e.clear_lane_block(0).unwrap();
+    e.set_lane_block(0, 2, &w).unwrap();
+    e.set_lane_block_noise(0, 0.9, 7).unwrap();
+    let mut ph3 = init.clone();
+    let mut st3 = vec![-1i32; 2];
+    e.run_chunk(&mut ph3, &mut st3, 0).unwrap();
+    assert_eq!(
+        ph3, fresh,
+        "backfilled block inherited the retired lane's tick counter"
+    );
+}
+
+#[test]
+fn prop_rtl_cluster_bit_exact_at_every_chunk() {
+    // Row-splitting the quantized weight memory across K emulated
+    // devices must change nothing about the dynamics: phases and settle
+    // flags equal the single-device engine at EVERY chunk, noise on,
+    // for K = 2..=4 — including splits that do not divide the row
+    // count.  The mid-run noise re-seeding mirrors what the annealing
+    // portfolio does between chunks.
+    let mut rng = Rng::new(8104);
+    for case in 0..4 {
+        let n = 7 + rng.usize_below(7); // 7..=13
+        for shards in [2usize, 3, 4] {
+            let cfg = NetworkConfig::paper(n);
+            let w = rand_w(&mut rng, n);
+            let batch = 2;
+            let mut solo = RtlEngine::new(cfg, batch, 4);
+            let mut cl = RtlClusterEngine::new(cfg, shards, batch, 4).unwrap();
+            solo.set_weights(&w).unwrap();
+            cl.set_weights(&w).unwrap();
+            let init: Vec<i32> = (0..batch * n).map(|_| rng.range_i64(0, 16) as i32).collect();
+            let (mut pa, mut pb) = (init.clone(), init);
+            let (mut sa, mut sb) = (vec![-1i32; batch], vec![-1i32; batch]);
+            for (chunk, &level) in [0.9, 0.5, 0.2, 0.0].iter().enumerate() {
+                let seed = rng.next_u64();
+                solo.set_noise(level, seed).unwrap();
+                cl.set_noise(level, seed).unwrap();
+                let p0 = (chunk * 4) as i32;
+                solo.run_chunk(&mut pa, &mut sa, p0).unwrap();
+                cl.run_chunk(&mut pb, &mut sb, p0).unwrap();
+                assert_eq!(
+                    pb, pa,
+                    "case {case} n={n} shards={shards} chunk {chunk}: phases diverged"
+                );
+                assert_eq!(sb, sa, "case {case} n={n} shards={shards} chunk {chunk}");
+            }
+            // One priced all-gather per lane-period stepped; a single
+            // device never pays one.
+            assert_eq!(cl.sync_rounds(), (batch * 4 * 4) as u64);
+            assert_eq!(solo.sync_rounds(), 0);
+        }
+    }
+}
+
+#[test]
+fn prop_rtl_cluster_solve_outcome_bit_identical() {
+    // End to end through the annealed replica portfolio: the K-device
+    // cluster answers exactly like one big device at the same seed —
+    // what it changes is the hardware bill, which must carry the priced
+    // per-period phase all-gathers on top of the solo compute cycles.
+    let mut rng = Rng::new(8105);
+    let g = Graph::random(11, 0.4, &mut rng); // 2, 3, 4 all non-dividing
+    let problem = max_cut(&g);
+    let m = problem.embed_dim();
+    let params = PortfolioParams {
+        replicas: 3,
+        max_periods: 40,
+        seed: 515,
+        ..Default::default()
+    };
+    let solo = solve_with(&problem, &params, EngineSelect::Rtl).unwrap();
+    let hs = solo.hardware.as_ref().expect("solo rtl meters");
+    assert_eq!(hs.sync_fast_cycles, 0);
+    for shards in [2usize, 3, 4] {
+        let out = solve_with(&problem, &params, EngineSelect::RtlCluster { shards }).unwrap();
+        let case = format!("shards {shards}");
+        assert_eq!(out.engine, "rtl-cluster", "{case}");
+        assert_bit_exact(&case, &out, &solo);
+        assert_eq!(
+            out.quantization_error.to_bits(),
+            solo.quantization_error.to_bits(),
+            "{case}: row splits must not re-quantize"
+        );
+        assert_eq!(out.sync_rounds, (out.replicas * out.periods) as u64, "{case}");
+        // Lockstep serial MACs: a cluster buys capacity, not speed —
+        // per-device compute equals the solo elapsed cycles, and the
+        // premium is exactly lane-periods x the per-period sync price.
+        let hc = out.hardware.as_ref().expect("cluster meters");
+        let phase_bits = NetworkConfig::paper(m).phase_bits;
+        let sync = out.sync_rounds * cluster_sync_cycles(shards, m, phase_bits);
+        assert!(sync > 0, "{case}: all-gathers must be priced");
+        assert_eq!(hc.sync_fast_cycles, sync, "{case}");
+        assert_eq!(hc.fast_cycles, hs.fast_cycles + sync, "{case}");
+    }
+}

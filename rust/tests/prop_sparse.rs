@@ -216,7 +216,7 @@ fn prop_arena_mixed_dense_sparse_serving_is_bit_identical() {
             ("dense", &dense_form, &cold_dense),
             ("sparse", &sparse_form, &cold_sparse),
         ] {
-            let key = ArenaKey::for_solve(m, batch, chunk, select, wants_sparse(problem));
+            let key = ArenaKey::for_solve(m, batch, chunk, select, wants_sparse(problem), None);
             let mut engine = arena
                 .checkout(key, &metrics, || build_engine(m, batch, chunk, select))
                 .unwrap();

@@ -23,9 +23,10 @@ cargo test -q
 echo "==> cargo check --features pjrt (stub xla)"
 cargo check --features pjrt
 
-echo "==> solve-bench --shards/--packed/--rtl/--connections/--sparse gate (BENCH_solver.json must carry sharded + packed + rtl + connection-scale + sparse rows)"
+echo "==> solve-bench --shards/--packed/--rtl/--connections/--sparse gate (BENCH_solver.json must carry sharded + packed + rtl + rtl-packed + rtl-cluster + connection-scale + sparse rows)"
 ./target/release/onn-scale solve-bench --sizes 12,16 --replicas 4 --periods 32 \
-  --instances 1 --shards 2 --packed 4 --rtl --connections 64 --sparse --out BENCH_solver.json
+  --instances 1 --shards 2 --packed 4 --rtl --rtl-packed --rtl-cluster \
+  --connections 64 --sparse --out BENCH_solver.json
 grep -q '"engine":"native"' BENCH_solver.json \
   || { echo "BENCH_solver.json is missing the native rows"; exit 1; }
 grep -q '"engine":"sharded"' BENCH_solver.json \
@@ -61,6 +62,20 @@ grep -q '"sparse_speedup"' BENCH_solver.json \
   || { echo "BENCH_solver.json sparse rows are missing the dense-vs-CSR speedup field"; exit 1; }
 grep -q '"avg_row_nnz"' BENCH_solver.json \
   || { echo "BENCH_solver.json sparse rows are missing the nonzeros-per-row field"; exit 1; }
+# The rtl lane-bank packing row (shared emulated fabric vs one device
+# per request, bit-exactness and exact cycle parity asserted inside the
+# harness) and the emulated multi-FPGA cluster row (an n past the
+# single Zynq-7020 fit, with the per-period phase all-gather priced)
+# must both be present.  The throughput/fit field names only appear
+# when the rows exist — the section keys alone are emitted even empty.
+grep -q '"packed_emulated_solves_per_sec"' BENCH_solver.json \
+  || { echo "BENCH_solver.json is missing the rtl lane-bank packing row"; exit 1; }
+grep -q '"solo_emulated_solves_per_sec"' BENCH_solver.json \
+  || { echo "BENCH_solver.json rtl_packed row is missing the solo baseline field"; exit 1; }
+grep -q '"single_device_fit"' BENCH_solver.json \
+  || { echo "BENCH_solver.json is missing the emulated rtl cluster row"; exit 1; }
+grep -q '"sync_fast_cycles"' BENCH_solver.json \
+  || { echo "BENCH_solver.json rtl_cluster row is missing the priced all-gather cycles"; exit 1; }
 
 echo "==> solve-report renders the recorded trajectory"
 ./target/release/onn-scale solve-report --path BENCH_solver.json >/dev/null
@@ -77,5 +92,15 @@ grep -q '"event":"solve_start"' "$TRACE_FILE" \
   || { echo "trace is missing the solve_start record"; exit 1; }
 grep -q '"event":"chunk"' "$TRACE_FILE" \
   || { echo "trace is missing per-chunk convergence records"; exit 1; }
+
+echo "==> solve --rtl precision sweep + emulated cluster smoke"
+# A non-paper sweep point (4-bit weights, 4-bit phases) must serve end
+# to end on the bit-true engine, and --rtl --shards 2 must route to the
+# emulated cluster engine instead of erroring as it did before the
+# cluster front end existed.
+./target/release/onn-scale solve --problem maxcut --nodes 16 --replicas 4 \
+  --periods 32 --seed 11 --rtl --weight-bits 4 --phase-bits 4 >/dev/null
+./target/release/onn-scale solve --problem maxcut --nodes 16 --replicas 4 \
+  --periods 32 --seed 11 --rtl --shards 2 >/dev/null
 
 echo "CI OK"
