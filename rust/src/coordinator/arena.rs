@@ -100,6 +100,23 @@ impl ArenaKey {
             ArenaKey::Sharded { n: m, shards, batch, chunk, sparse }
         }
     }
+
+    /// The key an associative-memory recall resolves to: identical to
+    /// [`ArenaKey::for_solve`] at the recall path's fixed geometry
+    /// (single-trial batch, default chunk, dense fabric, paper
+    /// precision).  Recalls install a fully quantized matrix via
+    /// `set_weights`, so the dense install path and paper phase wheel
+    /// are part of the serving contract, not a per-request choice.
+    pub fn for_recall(n: usize, select: EngineSelect) -> Self {
+        Self::for_solve(
+            n,
+            1,
+            crate::solver::portfolio::DEFAULT_CHUNK,
+            select,
+            false,
+            None,
+        )
+    }
 }
 
 /// One parked warm engine with its LRU stamp.
@@ -257,6 +274,20 @@ mod tests {
             ArenaKey::for_solve(24, 8, 8, EngineSelect::Sharded { shards: 1 }, false, None),
             ArenaKey::Native { n: 24, batch: 8, chunk: 8, sparse: false },
             "a single-shard selection collapses to the native fabric"
+        );
+        // The recall key is the solve key at the recall path's fixed
+        // geometry: batch 1, default chunk, dense, paper precision.
+        assert_eq!(
+            ArenaKey::for_recall(9, EngineSelect::Native),
+            ArenaKey::Native { n: 9, batch: 1, chunk: 8, sparse: false }
+        );
+        assert_eq!(
+            ArenaKey::for_recall(9, EngineSelect::Sharded { shards: 2 }),
+            ArenaKey::Sharded { n: 9, shards: 2, batch: 1, chunk: 8, sparse: false }
+        );
+        assert_eq!(
+            ArenaKey::for_recall(9, EngineSelect::Rtl),
+            ArenaKey::Rtl { n: 9, batch: 1, chunk: 8, weight_bits: 5, phase_bits: 4 }
         );
     }
 

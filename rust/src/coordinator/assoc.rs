@@ -1,0 +1,818 @@
+//! Online-learning associative memory: the coordinator's third traffic
+//! class (`store` / `recall` / `forget`), serving the paper's original
+//! retrieval workload with *live* pattern programming.
+//!
+//! Every named **memory space** keeps the float master matrix of its
+//! stored patterns as exact integer Hebbian co-occurrence counts
+//! (`onn::learning::accumulate_outer`): integer adds commute and invert
+//! exactly, so the incremental master after any store/forget sequence
+//! is bit-identical to retraining from the surviving pattern set — and
+//! therefore the quantized matrix a delta reprogram installs
+//! (`WeightMatrix::apply_delta`) is bit-identical to a cold
+//! retrain+rebuild.  Recalls snapshot the quantized weights under the
+//! registry lock and settle on a warm arena engine reprogrammed via
+//! `set_weights` — the reprogram-as-hot-path serving model the paper's
+//! hardware targets, proven bit-identical to cold builds on the native,
+//! sharded, and rtl fabrics (`rust/tests/prop_assoc.rs`).
+//!
+//! Capacity follows the classical Hopfield retrieval bound the paper's
+//! tables trace (~0.138 n): storing past it evicts the least-recently
+//! used pattern (recency = last store or last matched recall).
+//! Duplicate stores — exact *or inverted*, since an inverted pattern's
+//! outer product is identical — are idempotent recency refreshes, never
+//! a second Hebbian contribution (DESIGN_SOLVER.md §13).
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::arena::{ArenaKey, EngineArena};
+use crate::coordinator::job::{RecallRequest, RecallResult};
+use crate::coordinator::metrics::Metrics;
+use crate::onn::config::NetworkConfig;
+use crate::onn::learning::{accumulate_outer, counts_to_master, diederich_opper_i};
+use crate::onn::patterns::spins_match_up_to_inversion;
+use crate::onn::phase::{spin_to_phase, state_to_spins};
+use crate::onn::weights::WeightMatrix;
+use crate::runtime::ChunkEngine;
+use crate::solver::portfolio::{build_engine_cfg, drive_retrieval, EngineSelect, DEFAULT_CHUNK};
+
+/// DO-I refinement parameters (the paper's training pipeline).
+const DOI_MARGIN: f32 = 0.5;
+const DOI_MAX_EPOCHS: usize = 1000;
+
+/// Default pattern capacity of an n-oscillator space: the classical
+/// Hopfield retrieval bound `0.138 n` the paper's tables trace, floored
+/// at 2 so even the 3x3 toy space holds a pair.
+pub fn capacity_for(n: usize) -> usize {
+    (n * 138 / 1000).max(2)
+}
+
+/// Which learning rule maintains a space's float master matrix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LearningRule {
+    /// Plain Hebbian outer products — O(n^2) incremental updates via
+    /// the integer count master.
+    Hebbian,
+    /// Hebbian counts refined by a full Diederich-Opper-I retrain over
+    /// the stored patterns (in storage order, so the retrain is
+    /// deterministic) on every mutation.
+    Doi,
+}
+
+impl LearningRule {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "hebbian" => Ok(Self::Hebbian),
+            "doi" => Ok(Self::Doi),
+            other => Err(anyhow!(
+                "unknown learning rule '{other}' (want 'hebbian' or 'doi')"
+            )),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Hebbian => "hebbian",
+            Self::Doi => "doi",
+        }
+    }
+}
+
+/// One stored pattern with its LRU stamp.
+#[derive(Debug, Clone)]
+struct StoredPattern {
+    spins: Vec<i8>,
+    last_used: u64,
+}
+
+/// Outcome of a `store` mutation.
+#[derive(Debug, Clone)]
+pub struct StoreOutcome {
+    /// The pattern (or its inverse) was already stored: recency was
+    /// refreshed, nothing else changed.
+    pub duplicate: bool,
+    /// Patterns evicted by the capacity policy (0 or 1).
+    pub evicted: usize,
+    /// Stored patterns after the mutation.
+    pub patterns: usize,
+    pub capacity: usize,
+    /// Quantized entries the delta reprogram actually rewrote.
+    pub delta_entries: usize,
+    /// RMS quantization loss of the new master.
+    pub quantization_error: f64,
+    /// Master-update + requantize wall time.
+    pub delta_latency: Duration,
+}
+
+/// Outcome of a `forget` mutation.
+#[derive(Debug, Clone)]
+pub struct ForgetOutcome {
+    /// Stored patterns after the removal.
+    pub patterns: usize,
+    pub delta_entries: usize,
+    pub quantization_error: f64,
+    pub delta_latency: Duration,
+}
+
+/// Everything a recall needs, captured under the registry lock at
+/// submit time so the settle runs against one consistent master even
+/// while stores keep mutating the space.
+#[derive(Debug, Clone)]
+pub struct RecallSnapshot {
+    pub n: usize,
+    /// Quantized weights as the integer-valued f32 view every engine's
+    /// `set_weights` installs.
+    pub weights_f32: Vec<f32>,
+    /// Stored patterns at snapshot time (the match targets).
+    pub patterns: Vec<Vec<i8>>,
+    /// Master version the snapshot was taken at.
+    pub version: u64,
+}
+
+/// Internal envelope for recall traffic: request + consistent snapshot
+/// + reply channel.  Errors (engine failures) travel back as `Err` so
+/// the front ends can answer a structured error line.
+#[derive(Debug)]
+pub struct RecallJob {
+    pub req: RecallRequest,
+    pub snapshot: RecallSnapshot,
+    pub submitted: Instant,
+    pub reply: std::sync::mpsc::Sender<Result<RecallResult>>,
+}
+
+/// One named memory space: the live pattern set, its exact integer
+/// Hebbian count master, and the quantized matrix currently programmed
+/// into recall engines.
+#[derive(Debug)]
+pub struct MemorySpace {
+    pub n: usize,
+    capacity: usize,
+    rule: LearningRule,
+    /// Exact integer Hebbian co-occurrence counts (the incremental
+    /// master; see module docs for the bit-identity argument).
+    counts: Vec<i32>,
+    /// Stored patterns in storage order (DO-I retrains iterate this
+    /// order, so the refined master is deterministic too).
+    patterns: Vec<StoredPattern>,
+    /// LRU clock: bumped by every store and every matched recall.
+    clock: u64,
+    /// The quantized matrix recalls are served from, maintained by
+    /// [`WeightMatrix::apply_delta`] — bit-identical to quantizing the
+    /// master cold.
+    quantized: WeightMatrix,
+    quantization_error: f64,
+    /// Bumped by every successful mutation; recalls carry the version
+    /// they were served against so stale LRU touches are dropped.
+    version: u64,
+    cfg: NetworkConfig,
+}
+
+impl MemorySpace {
+    pub fn new(n: usize, capacity: usize, rule: LearningRule) -> Self {
+        assert!(n > 0, "empty memory space");
+        assert!(capacity > 0, "zero-capacity memory space");
+        Self {
+            n,
+            capacity,
+            rule,
+            counts: vec![0; n * n],
+            patterns: Vec::new(),
+            clock: 0,
+            quantized: WeightMatrix::zeros(n),
+            quantization_error: 0.0,
+            version: 0,
+            cfg: NetworkConfig::paper(n),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn rule(&self) -> LearningRule {
+        self.rule
+    }
+
+    pub fn pattern_count(&self) -> usize {
+        self.patterns.len()
+    }
+
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// The quantized matrix recalls are currently served from.
+    pub fn weights(&self) -> &WeightMatrix {
+        &self.quantized
+    }
+
+    pub fn quantization_error(&self) -> f64 {
+        self.quantization_error
+    }
+
+    /// Stored patterns in storage order (the cold-retrain input).
+    pub fn stored_patterns(&self) -> Vec<Vec<i8>> {
+        self.patterns.iter().map(|p| p.spins.clone()).collect()
+    }
+
+    /// The float master matrix of the current pattern set.  Hebbian
+    /// reads the integer counts (one divide per entry — bit-identical
+    /// to `learning::hebbian` over the survivors); DO-I retrains over
+    /// the stored patterns in storage order.
+    pub fn master(&self) -> Vec<f32> {
+        match self.rule {
+            LearningRule::Hebbian => counts_to_master(&self.counts, self.n),
+            LearningRule::Doi => {
+                if self.patterns.is_empty() {
+                    vec![0.0; self.n * self.n]
+                } else {
+                    let pats = self.stored_patterns();
+                    diederich_opper_i(&pats, DOI_MARGIN, DOI_MAX_EPOCHS).weights
+                }
+            }
+        }
+    }
+
+    /// Store one ±1 pattern.  Duplicates (exact or inverted) are
+    /// idempotent recency refreshes; at capacity the LRU pattern is
+    /// evicted first; otherwise the master is updated incrementally and
+    /// the quantized matrix delta-reprogrammed.
+    pub fn store(&mut self, spins: Vec<i8>) -> Result<StoreOutcome> {
+        self.check_pattern(&spins)?;
+        if let Some(idx) = self.position_of(&spins) {
+            self.clock += 1;
+            self.patterns[idx].last_used = self.clock;
+            return Ok(StoreOutcome {
+                duplicate: true,
+                evicted: 0,
+                patterns: self.patterns.len(),
+                capacity: self.capacity,
+                delta_entries: 0,
+                quantization_error: self.quantization_error,
+                delta_latency: Duration::ZERO,
+            });
+        }
+        let mut evicted = 0usize;
+        if self.patterns.len() >= self.capacity {
+            let lru = self
+                .patterns
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, p)| p.last_used)
+                .map(|(i, _)| i)
+                .expect("space at capacity has at least one pattern");
+            // `remove`, not `swap_remove`: storage order is the DO-I
+            // retrain order, so survivors must keep their positions.
+            let victim = self.patterns.remove(lru);
+            accumulate_outer(&mut self.counts, &victim.spins, -1);
+            evicted = 1;
+        }
+        accumulate_outer(&mut self.counts, &spins, 1);
+        self.clock += 1;
+        self.patterns.push(StoredPattern {
+            spins,
+            last_used: self.clock,
+        });
+        let t0 = Instant::now();
+        let (delta_entries, quantization_error) = self.reprogram();
+        Ok(StoreOutcome {
+            duplicate: false,
+            evicted,
+            patterns: self.patterns.len(),
+            capacity: self.capacity,
+            delta_entries,
+            quantization_error,
+            delta_latency: t0.elapsed(),
+        })
+    }
+
+    /// Remove one stored pattern (matched up to inversion).  A pattern
+    /// that is not stored is a structured error, not a no-op — the
+    /// client's model of the space diverged from the server's.
+    pub fn forget(&mut self, spins: &[i8]) -> Result<ForgetOutcome> {
+        self.check_pattern(spins)?;
+        let idx = self
+            .position_of(spins)
+            .ok_or_else(|| anyhow!("pattern is not stored in this space"))?;
+        let victim = self.patterns.remove(idx);
+        accumulate_outer(&mut self.counts, &victim.spins, -1);
+        let t0 = Instant::now();
+        let (delta_entries, quantization_error) = self.reprogram();
+        Ok(ForgetOutcome {
+            patterns: self.patterns.len(),
+            delta_entries,
+            quantization_error,
+            delta_latency: t0.elapsed(),
+        })
+    }
+
+    /// Snapshot for one recall: quantized weights + match targets +
+    /// version, all captured atomically (the caller holds the registry
+    /// lock).
+    pub fn snapshot(&self) -> RecallSnapshot {
+        RecallSnapshot {
+            n: self.n,
+            weights_f32: self.quantized.to_f32(),
+            patterns: self.stored_patterns(),
+            version: self.version,
+        }
+    }
+
+    /// Refresh the recency of the stored pattern matching `spins`
+    /// (a successful recall keeps its memory warm in the LRU order).
+    fn touch(&mut self, spins: &[i8]) {
+        if let Some(idx) = self.position_of(spins) {
+            self.clock += 1;
+            self.patterns[idx].last_used = self.clock;
+        }
+    }
+
+    fn position_of(&self, spins: &[i8]) -> Option<usize> {
+        self.patterns
+            .iter()
+            .position(|p| spins_match_up_to_inversion(&p.spins, spins))
+    }
+
+    fn check_pattern(&self, spins: &[i8]) -> Result<()> {
+        if spins.len() != self.n {
+            return Err(anyhow!(
+                "pattern has {} spins, space stores {}",
+                spins.len(),
+                self.n
+            ));
+        }
+        if !spins.iter().all(|&s| s == 1 || s == -1) {
+            return Err(anyhow!("pattern spins must be +1/-1"));
+        }
+        Ok(())
+    }
+
+    /// Requantize the quantized matrix from the current master and bump
+    /// the version.  Returns (changed entries, rms error).
+    fn reprogram(&mut self) -> (usize, f64) {
+        let master = self.master();
+        let (changed, rms) = self.quantized.apply_delta(&master, &self.cfg);
+        self.quantization_error = rms;
+        self.version += 1;
+        (changed, rms)
+    }
+}
+
+/// The shared registry of live memory spaces.  Store/forget mutate
+/// synchronously under the lock (an O(n^2) master update — the wire cap
+/// on n bounds it); recalls snapshot under the lock and settle outside
+/// it on the assoc worker's engine.
+#[derive(Debug, Default)]
+pub struct AssocRegistry {
+    spaces: Mutex<BTreeMap<String, MemorySpace>>,
+}
+
+impl AssocRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Stored spaces (diagnostics).
+    pub fn space_count(&self) -> usize {
+        self.spaces.lock().unwrap().len()
+    }
+
+    /// Store a pattern, creating the space on first touch (capacity
+    /// defaults to [`capacity_for`], rule to Hebbian).  On an existing
+    /// space an explicit capacity/rule must match what the space was
+    /// created with — silently switching either would invalidate every
+    /// pattern already stored.
+    pub fn store(
+        &self,
+        space: &str,
+        spins: Vec<i8>,
+        capacity: Option<usize>,
+        rule: Option<LearningRule>,
+        metrics: &Metrics,
+    ) -> Result<StoreOutcome> {
+        // Validate before the space-creation branch so a malformed
+        // first store never leaves an empty space behind.
+        if !spins.iter().all(|&s| s == 1 || s == -1) {
+            return Err(anyhow!("pattern spins must be +1/-1"));
+        }
+        let mut spaces = self.spaces.lock().unwrap();
+        if let Some(ms) = spaces.get(space) {
+            if let Some(c) = capacity {
+                if c != ms.capacity {
+                    return Err(anyhow!(
+                        "space '{space}' was created with capacity {}",
+                        ms.capacity
+                    ));
+                }
+            }
+            if let Some(r) = rule {
+                if r != ms.rule {
+                    return Err(anyhow!(
+                        "space '{space}' was created with rule '{}'",
+                        ms.rule.name()
+                    ));
+                }
+            }
+        } else {
+            let n = spins.len();
+            if n == 0 {
+                return Err(anyhow!("cannot create a space from an empty pattern"));
+            }
+            let cap = capacity.unwrap_or_else(|| capacity_for(n));
+            if cap == 0 {
+                return Err(anyhow!("capacity must be positive"));
+            }
+            spaces.insert(
+                space.to_string(),
+                MemorySpace::new(n, cap, rule.unwrap_or(LearningRule::Hebbian)),
+            );
+        }
+        let ms = spaces.get_mut(space).expect("space exists or was created");
+        let out = ms.store(spins)?;
+        metrics.record_store(
+            out.duplicate,
+            out.evicted > 0,
+            out.delta_latency,
+            out.delta_entries as u64,
+        );
+        Ok(out)
+    }
+
+    /// Forget a stored pattern.  Unknown spaces and unknown patterns
+    /// are structured errors.
+    pub fn forget(&self, space: &str, spins: &[i8], metrics: &Metrics) -> Result<ForgetOutcome> {
+        let mut spaces = self.spaces.lock().unwrap();
+        let ms = spaces
+            .get_mut(space)
+            .ok_or_else(|| anyhow!("no memory space '{space}'"))?;
+        let out = ms.forget(spins)?;
+        metrics.record_forget(out.delta_latency, out.delta_entries as u64);
+        Ok(out)
+    }
+
+    /// Snapshot a space for one recall (taken under the lock, so the
+    /// weights and match targets are mutually consistent).
+    pub fn snapshot(&self, space: &str) -> Result<RecallSnapshot> {
+        let spaces = self.spaces.lock().unwrap();
+        let ms = spaces
+            .get(space)
+            .ok_or_else(|| anyhow!("no memory space '{space}'"))?;
+        Ok(ms.snapshot())
+    }
+
+    /// Refresh the LRU recency of the pattern a recall settled onto —
+    /// only if the space's master is still the version the recall was
+    /// served against (a stale touch would warm a pattern based on a
+    /// matrix that no longer exists).
+    pub fn touch_matched(&self, space: &str, version: u64, spins: &[i8]) {
+        let mut spaces = self.spaces.lock().unwrap();
+        if let Some(ms) = spaces.get_mut(space) {
+            if ms.version == version {
+                ms.touch(spins);
+            }
+        }
+    }
+
+    /// Drop every space (coordinator shutdown).
+    pub fn clear(&self) {
+        self.spaces.lock().unwrap().clear();
+    }
+}
+
+/// The engine fabric a recall's wire overrides resolve to — the same
+/// mapping the solve path uses (`rtl` + `shards >= 2` is the emulated
+/// cluster, `shards >= 2` alone the row-sharded float fabric).
+pub fn recall_select(shards: Option<usize>, rtl: bool) -> EngineSelect {
+    let k = shards.unwrap_or(1);
+    match (rtl, k) {
+        (true, k) if k >= 2 => EngineSelect::RtlCluster { shards: k },
+        (true, _) => EngineSelect::Rtl,
+        (false, k) if k >= 2 => EngineSelect::Sharded { shards: k },
+        _ => EngineSelect::Native,
+    }
+}
+
+/// The associative worker: owns a warm [`EngineArena`] (engines are not
+/// `Send`, so recall engines live and die on this thread) and serves
+/// recall jobs until the channel closes.
+pub fn assoc_worker_loop(
+    rx: Receiver<RecallJob>,
+    registry: Arc<AssocRegistry>,
+    metrics: Arc<Metrics>,
+    arena_capacity: usize,
+) -> Result<()> {
+    let mut arena = EngineArena::new(arena_capacity);
+    while let Ok(job) = rx.recv() {
+        let RecallJob {
+            req,
+            snapshot,
+            submitted,
+            reply,
+        } = job;
+        let res = serve_recall(&req, &snapshot, submitted, &registry, &metrics, &mut arena);
+        // Receiver may have hung up (client gave up) — that's fine.
+        let _ = reply.send(res);
+    }
+    Ok(())
+}
+
+/// Serve one recall: check out a warm engine for the space's geometry,
+/// reprogram it with the snapshot's quantized weights, settle the probe
+/// deterministically, and read the result out as spins.  The engine is
+/// checked back in warm on success and discarded on error (a failed
+/// settle may leave the fabric undefined).
+fn serve_recall(
+    req: &RecallRequest,
+    snapshot: &RecallSnapshot,
+    submitted: Instant,
+    registry: &AssocRegistry,
+    metrics: &Metrics,
+    arena: &mut EngineArena,
+) -> Result<RecallResult> {
+    let n = snapshot.n;
+    if req.spins.len() != n {
+        return Err(anyhow!(
+            "recall {}: probe has {} spins, space stores {n}",
+            req.id,
+            req.spins.len()
+        ));
+    }
+    let cfg = NetworkConfig::paper(n);
+    let select = recall_select(req.shards, req.rtl);
+    let key = ArenaKey::for_recall(n, select);
+    let mut engine = arena.checkout(key, metrics, || {
+        build_engine_cfg(cfg, 1, DEFAULT_CHUNK, select)
+    })?;
+    let period = cfg.period() as i32;
+    let init: Vec<i32> = req
+        .spins
+        .iter()
+        .map(|&s| spin_to_phase(s, period))
+        .collect();
+    // On error the engine is dropped here instead of checked back in —
+    // a failed reprogram/settle may leave the fabric undefined.
+    let (phases, settled) = engine
+        .set_weights(&snapshot.weights_f32)
+        .and_then(|()| drive_retrieval(engine.as_mut(), &init, req.max_periods))?;
+    let kind = engine.kind();
+    arena.checkin(key, engine, metrics);
+    let spins = state_to_spins(&phases, period);
+    let matched = snapshot
+        .patterns
+        .iter()
+        .any(|p| spins_match_up_to_inversion(p, &spins));
+    if matched {
+        registry.touch_matched(&req.space, snapshot.version, &spins);
+    }
+    let total_latency = submitted.elapsed();
+    metrics.record_recall(total_latency, matched);
+    Ok(RecallResult {
+        id: req.id,
+        spins,
+        settled,
+        matched,
+        engine: kind,
+        version: snapshot.version,
+        total_latency,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::onn::learning::hebbian;
+    use crate::onn::patterns::dataset_3x3;
+    use crate::util::rng::Rng;
+
+    fn random_pattern(rng: &mut Rng, n: usize) -> Vec<i8> {
+        (0..n).map(|_| rng.spin()).collect()
+    }
+
+    #[test]
+    fn capacity_tracks_hopfield_bound() {
+        assert_eq!(capacity_for(9), 2, "floor of 2");
+        assert_eq!(capacity_for(100), 13);
+        assert_eq!(capacity_for(484), 66);
+        assert_eq!(capacity_for(506), 69, "the paper's hybrid fabric");
+    }
+
+    #[test]
+    fn rule_parse_roundtrip() {
+        assert_eq!(LearningRule::parse("hebbian").unwrap(), LearningRule::Hebbian);
+        assert_eq!(LearningRule::parse("doi").unwrap(), LearningRule::Doi);
+        assert!(LearningRule::parse("perceptron").is_err());
+        assert_eq!(LearningRule::Doi.name(), "doi");
+    }
+
+    #[test]
+    fn incremental_quantized_bit_identical_to_cold_retrain() {
+        // The tentpole contract at the MemorySpace level: after any
+        // store/forget sequence the delta-maintained quantized matrix
+        // equals quantizing hebbian(survivors) cold, bit for bit.
+        let mut rng = Rng::new(33);
+        let n = 20;
+        let mut ms = MemorySpace::new(n, 4, LearningRule::Hebbian);
+        let pats: Vec<Vec<i8>> = (0..4).map(|_| random_pattern(&mut rng, n)).collect();
+        for p in &pats {
+            ms.store(p.clone()).unwrap();
+        }
+        ms.forget(&pats[1]).unwrap();
+        ms.store(random_pattern(&mut rng, n)).unwrap();
+        let survivors = ms.stored_patterns();
+        let cold = WeightMatrix::quantize(&hebbian(&survivors), n, &NetworkConfig::paper(n));
+        assert_eq!(ms.weights(), &cold, "delta path diverged from cold rebuild");
+    }
+
+    #[test]
+    fn duplicate_store_is_idempotent_including_inverse() {
+        let n = 12;
+        let mut rng = Rng::new(5);
+        let mut ms = MemorySpace::new(n, 4, LearningRule::Hebbian);
+        let p = random_pattern(&mut rng, n);
+        let first = ms.store(p.clone()).unwrap();
+        assert!(!first.duplicate);
+        let w_before = ms.weights().clone();
+        let again = ms.store(p.clone()).unwrap();
+        assert!(again.duplicate, "exact re-store is a duplicate");
+        assert_eq!(again.delta_entries, 0);
+        assert_eq!(ms.pattern_count(), 1);
+        let inv: Vec<i8> = p.iter().map(|&x| -x).collect();
+        let inverted = ms.store(inv).unwrap();
+        assert!(inverted.duplicate, "an inverted pattern's outer product is identical");
+        assert_eq!(ms.pattern_count(), 1);
+        assert_eq!(ms.weights(), &w_before, "duplicates never inflate couplings");
+        // The master still matches a single-pattern retrain (i.e. the
+        // old double-count bug is gone).
+        let cold = WeightMatrix::quantize(&hebbian(&[p]), n, &NetworkConfig::paper(n));
+        assert_eq!(ms.weights(), &cold);
+    }
+
+    /// `count` distinct 16-spin patterns, pairwise distinct up to
+    /// inversion by construction (each flips a different single index
+    /// of the all-up pattern).
+    fn distinct_patterns(count: usize, n: usize) -> Vec<Vec<i8>> {
+        assert!(count <= n && n >= 3);
+        (0..count)
+            .map(|i| {
+                let mut p = vec![1i8; n];
+                p[i] = -1;
+                p
+            })
+            .collect()
+    }
+
+    #[test]
+    fn lru_eviction_prefers_recently_recalled() {
+        let n = 16;
+        let mut ms = MemorySpace::new(n, 2, LearningRule::Hebbian);
+        let pats = distinct_patterns(3, n);
+        let (a, b, c) = (pats[0].clone(), pats[1].clone(), pats[2].clone());
+        ms.store(a.clone()).unwrap();
+        ms.store(b.clone()).unwrap();
+        // A matched recall refreshes a's recency, so b is now LRU.
+        ms.touch(&a);
+        let out = ms.store(c.clone()).unwrap();
+        assert_eq!(out.evicted, 1);
+        assert_eq!(ms.pattern_count(), 2);
+        let stored = ms.stored_patterns();
+        assert!(stored.iter().any(|p| p == &a), "touched pattern survives");
+        assert!(stored.iter().any(|p| p == &c));
+        assert!(!stored.iter().any(|p| p == &b), "LRU pattern evicted");
+        // And the master reflects exactly the survivors.
+        let cold = WeightMatrix::quantize(
+            &hebbian(&ms.stored_patterns()),
+            n,
+            &NetworkConfig::paper(n),
+        );
+        assert_eq!(ms.weights(), &cold);
+    }
+
+    #[test]
+    fn forget_unknown_pattern_is_an_error() {
+        let n = 9;
+        let mut ms = MemorySpace::new(n, 2, LearningRule::Hebbian);
+        let pats = distinct_patterns(2, n);
+        ms.store(pats[0].clone()).unwrap();
+        assert!(ms.forget(&pats[1]).is_err(), "never-stored pattern");
+        assert!(ms.forget(&[1i8; 4]).is_err(), "wrong length");
+        // Draining the space entirely is legal and leaves zero weights.
+        ms.forget(&pats[0]).unwrap();
+        assert_eq!(ms.pattern_count(), 0);
+        assert_eq!(ms.weights(), &WeightMatrix::zeros(n));
+    }
+
+    #[test]
+    fn doi_rule_refines_and_stays_deterministic() {
+        // The paper's 3x3 glyph pair through the DO-I rule: the space's
+        // delta-maintained matrix must equal `train_quantized` cold, and
+        // the glyphs must be fixed points of it (the property the
+        // existing learning tests pin for the same pipeline).
+        let n = 9;
+        let mut ms = MemorySpace::new(n, 2, LearningRule::Doi);
+        let ds = dataset_3x3();
+        let pats: Vec<Vec<i8>> = ds.patterns.iter().map(|p| p.spins.clone()).collect();
+        for p in &pats {
+            ms.store(p.clone()).unwrap();
+        }
+        // Cold rebuild: DO-I over the same patterns in storage order.
+        let res = diederich_opper_i(&ms.stored_patterns(), DOI_MARGIN, DOI_MAX_EPOCHS);
+        let cold = WeightMatrix::quantize(&res.weights, n, &NetworkConfig::paper(n));
+        assert_eq!(ms.weights(), &cold, "DO-I delta != deterministic retrain");
+        // Stored patterns are fixed points of the refined matrix.
+        for p in &pats {
+            assert!(crate::onn::learning::is_fixed_point(ms.weights(), p));
+        }
+    }
+
+    #[test]
+    fn registry_creates_validates_and_clears() {
+        let metrics = Metrics::new();
+        let reg = AssocRegistry::new();
+        let t = dataset_3x3().patterns[0].spins.clone();
+        let l = dataset_3x3().patterns[1].spins.clone();
+        let out = reg.store("glyphs", t.clone(), None, None, &metrics).unwrap();
+        assert_eq!(out.capacity, capacity_for(9));
+        reg.store("glyphs", l, None, None, &metrics).unwrap();
+        assert_eq!(reg.space_count(), 1);
+        // Wrong-size patterns, conflicting capacity/rule: structured errors.
+        assert!(reg.store("glyphs", vec![1i8; 4], None, None, &metrics).is_err());
+        assert!(reg
+            .store("glyphs", t.clone(), Some(7), None, &metrics)
+            .is_err());
+        assert!(reg
+            .store("glyphs", t.clone(), None, Some(LearningRule::Doi), &metrics)
+            .is_err());
+        assert!(reg.store("bad", vec![1, 0, -1], None, None, &metrics).is_err());
+        assert!(reg.forget("nope", &t, &metrics).is_err());
+        let snap = reg.snapshot("glyphs").unwrap();
+        assert_eq!(snap.n, 9);
+        assert_eq!(snap.patterns.len(), 2);
+        assert_eq!(snap.weights_f32.len(), 81);
+        let s = metrics.snapshot();
+        assert_eq!(s.patterns_stored, 2);
+        reg.clear();
+        assert!(reg.snapshot("glyphs").is_err());
+    }
+
+    #[test]
+    fn recall_select_mirrors_the_solve_mapping() {
+        assert_eq!(recall_select(None, false), EngineSelect::Native);
+        assert_eq!(recall_select(Some(1), false), EngineSelect::Native);
+        assert_eq!(
+            recall_select(Some(3), false),
+            EngineSelect::Sharded { shards: 3 }
+        );
+        assert_eq!(recall_select(None, true), EngineSelect::Rtl);
+        assert_eq!(recall_select(Some(1), true), EngineSelect::Rtl);
+        assert_eq!(
+            recall_select(Some(2), true),
+            EngineSelect::RtlCluster { shards: 2 }
+        );
+    }
+
+    #[test]
+    fn serve_recall_settles_stored_pattern_on_warm_engine() {
+        // End-to-end in-module: store the 3x3 glyphs under the DO-I
+        // rule and recall the T glyph on a (cold, then warm) native
+        // engine.  The exact stored pattern is a fixed point of the
+        // trained matrix, so the settle is deterministic.
+        let metrics = Metrics::new();
+        let reg = AssocRegistry::new();
+        let ds = dataset_3x3();
+        for p in &ds.patterns {
+            reg.store("g", p.spins.clone(), None, Some(LearningRule::Doi), &metrics)
+                .unwrap();
+        }
+        let req = RecallRequest {
+            id: 7,
+            space: "g".to_string(),
+            spins: ds.patterns[0].spins.clone(),
+            max_periods: 256,
+            shards: None,
+            rtl: false,
+        };
+        let snapshot = reg.snapshot("g").unwrap();
+        let mut arena = EngineArena::new(2);
+        let res = serve_recall(&req, &snapshot, Instant::now(), &reg, &metrics, &mut arena)
+            .unwrap();
+        assert_eq!(res.id, 7);
+        assert!(res.matched, "stored T glyph must recall itself");
+        assert!(res.settled.is_some());
+        assert_eq!(res.engine, "native");
+        assert!(spins_match_up_to_inversion(&res.spins, &ds.patterns[0].spins));
+        let s = metrics.snapshot();
+        assert_eq!(s.recalls, 1);
+        assert_eq!(s.recalls_matched, 1);
+        assert_eq!(s.arena_misses, 1);
+        // A second recall reuses the warm engine — and is bit-identical.
+        let res2 = serve_recall(&req, &snapshot, Instant::now(), &reg, &metrics, &mut arena)
+            .unwrap();
+        assert_eq!(res2.spins, res.spins, "warm recall == cold recall");
+        assert_eq!(res2.settled, res.settled);
+        assert_eq!(metrics.snapshot().arena_hits, 1);
+    }
+}

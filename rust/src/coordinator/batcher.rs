@@ -94,6 +94,7 @@ pub fn worker_loop(
     let n = engine.n();
     let capacity = engine.batch();
     let chunk = engine.chunk_len();
+    let engine_kind = engine.kind();
 
     let mut phases = vec![0i32; capacity * n];
     let mut settled = vec![-1i32; capacity];
@@ -168,7 +169,12 @@ pub fn worker_loop(
                 batch_occupancy: occupancy,
             };
             let timed_out = result.settled.is_none();
-            metrics.record_completion(result.queue_latency, result.total_latency, timed_out);
+            metrics.record_completion(
+                result.queue_latency,
+                result.total_latency,
+                timed_out,
+                engine_kind,
+            );
             // Receiver may have hung up (client gave up) — that's fine.
             let _ = job.reply.send(result);
         }

@@ -63,6 +63,47 @@ pub struct Job {
     pub reply: std::sync::mpsc::Sender<RetrievalResult>,
 }
 
+/// An associative-memory recall: a corrupted ±1 probe pattern settled
+/// on the engine fabric programmed with a memory space's live quantized
+/// weights (`coordinator::assoc`).  The third wire traffic class, next
+/// to retrieval and solve.
+#[derive(Debug, Clone)]
+pub struct RecallRequest {
+    pub id: u64,
+    /// Memory-space name the probe recalls against.
+    pub space: String,
+    /// Probe spins (±1, length = the space's n).
+    pub spins: Vec<i8>,
+    /// Give up after this many oscillation periods.
+    pub max_periods: usize,
+    /// Explicit shard-count override for the recall engine (mirrors the
+    /// solve wire; `None`/`Some(1)` is single-device).
+    pub shards: Option<usize>,
+    /// Serve the recall on the bit-true emulated-hardware engine;
+    /// combined with `shards: K >= 2` it runs the emulated rtl cluster.
+    pub rtl: bool,
+}
+
+/// The settled outcome of one recall.
+#[derive(Debug, Clone)]
+pub struct RecallResult {
+    pub id: u64,
+    /// Settled state read out as spins relative to oscillator 0.
+    pub spins: Vec<i8>,
+    /// Periods until the fixed point, or None on timeout.
+    pub settled: Option<usize>,
+    /// Whether the settled state equals a stored pattern of the space
+    /// (up to global inversion) — the recall-accuracy numerator.
+    pub matched: bool,
+    /// Engine kind that served the recall.
+    pub engine: &'static str,
+    /// Master-matrix version the recall was served against (snapshotted
+    /// at submit; concurrent stores bump it).
+    pub version: u64,
+    /// Submission-to-completion wall time.
+    pub total_latency: Duration,
+}
+
 /// An optimization request: one Ising instance solved by the annealed
 /// replica portfolio (`solver::portfolio`) on a worker-owned engine.
 #[derive(Debug, Clone)]

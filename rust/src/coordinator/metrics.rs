@@ -27,6 +27,41 @@ pub struct Metrics {
     /// Latency histograms (p50/p90/p99 at snapshot time).
     queue_hist: LatencyHistogram,
     total_hist: LatencyHistogram,
+    /// Per-engine-kind retrieval latency + counts, keyed by the engine
+    /// that actually served the batch (`ChunkEngine::kind`).  Retrieval
+    /// pools run the single-device float fabrics only, so the kinds are
+    /// "native" and "pjrt" — solve traffic has its own per-kind set
+    /// below.
+    total_hist_native: LatencyHistogram,
+    total_hist_pjrt: LatencyHistogram,
+    /// Retrievals served by the in-process float fabric.
+    pub retrievals_native: AtomicU64,
+    /// Retrievals served by the PJRT-backed fabric.
+    pub retrievals_pjrt: AtomicU64,
+    // --- associative-memory traffic (store/recall/forget) ---
+    /// Patterns accepted into a memory space by `store` (duplicates and
+    /// evicted victims excluded).
+    pub patterns_stored: AtomicU64,
+    /// Patterns evicted by the LRU capacity policy on store.
+    pub patterns_evicted: AtomicU64,
+    /// Patterns removed by explicit `forget` commands.
+    pub patterns_forgotten: AtomicU64,
+    /// Idempotent re-stores of an already-present pattern (exact or
+    /// inverse — the Hebbian sum must not double-count either).
+    pub store_duplicates: AtomicU64,
+    /// Recall requests completed (matched or not).
+    pub recalls: AtomicU64,
+    /// Recalls whose settled state matched a stored pattern up to
+    /// global inversion.
+    pub recalls_matched: AtomicU64,
+    /// Quantized weight entries rewritten by delta reprograms (the
+    /// exact write set `WeightMatrix::apply_delta` reports, summed).
+    pub delta_entries: AtomicU64,
+    /// End-to-end recall latency (submit to settled spins).
+    recall_hist: LatencyHistogram,
+    /// Master-update + requantize latency per store/forget mutation —
+    /// the delta-reprogram cost the tentpole surfaces.
+    delta_hist: LatencyHistogram,
     // --- solve traffic (the optimization job class) ---
     pub solves_submitted: AtomicU64,
     pub solves_completed: AtomicU64,
@@ -112,6 +147,21 @@ pub struct MetricsSnapshot {
     /// means above come from the running sums).
     pub queue: LatencySummary,
     pub total: LatencySummary,
+    /// Per-engine-kind retrieval latency + counts.
+    pub total_native: LatencySummary,
+    pub total_pjrt: LatencySummary,
+    pub retrievals_native: u64,
+    pub retrievals_pjrt: u64,
+    // --- associative-memory traffic ---
+    pub patterns_stored: u64,
+    pub patterns_evicted: u64,
+    pub patterns_forgotten: u64,
+    pub store_duplicates: u64,
+    pub recalls: u64,
+    pub recalls_matched: u64,
+    pub delta_entries: u64,
+    pub recall: LatencySummary,
+    pub delta_reprogram: LatencySummary,
     // --- solve traffic ---
     pub solves_submitted: u64,
     pub solves_completed: u64,
@@ -161,7 +211,18 @@ impl Metrics {
             .fetch_add(real_jobs as u64, Ordering::Relaxed);
     }
 
-    pub fn record_completion(&self, queue: Duration, total: Duration, timed_out: bool) {
+    /// A completed retrieval.  `engine` is the kind that actually
+    /// served the batch (`ChunkEngine::kind`: "native"/"pjrt") — the
+    /// legacy `RetrievalRequest` path classifies per engine kind just
+    /// like solve traffic does, instead of vanishing into the pool-wide
+    /// totals only.
+    pub fn record_completion(
+        &self,
+        queue: Duration,
+        total: Duration,
+        timed_out: bool,
+        engine: &str,
+    ) {
         self.completed.fetch_add(1, Ordering::Relaxed);
         if timed_out {
             self.timeouts.fetch_add(1, Ordering::Relaxed);
@@ -172,6 +233,49 @@ impl Metrics {
             .fetch_add(total.as_micros() as u64, Ordering::Relaxed);
         self.queue_hist.record(queue);
         self.total_hist.record(total);
+        match engine {
+            "pjrt" => {
+                self.retrievals_pjrt.fetch_add(1, Ordering::Relaxed);
+                self.total_hist_pjrt.record(total);
+            }
+            _ => {
+                self.retrievals_native.fetch_add(1, Ordering::Relaxed);
+                self.total_hist_native.record(total);
+            }
+        }
+    }
+
+    /// A `store` mutation: `duplicate` stores are idempotent no-ops
+    /// (counted, master untouched), `evicted` flags an LRU victim, and
+    /// `delta`/`entries` meter the requantize-and-reprogram write.
+    pub fn record_store(&self, duplicate: bool, evicted: bool, delta: Duration, entries: u64) {
+        if duplicate {
+            self.store_duplicates.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        self.patterns_stored.fetch_add(1, Ordering::Relaxed);
+        if evicted {
+            self.patterns_evicted.fetch_add(1, Ordering::Relaxed);
+        }
+        self.delta_entries.fetch_add(entries, Ordering::Relaxed);
+        self.delta_hist.record(delta);
+    }
+
+    /// A `forget` mutation that removed a stored pattern.
+    pub fn record_forget(&self, delta: Duration, entries: u64) {
+        self.patterns_forgotten.fetch_add(1, Ordering::Relaxed);
+        self.delta_entries.fetch_add(entries, Ordering::Relaxed);
+        self.delta_hist.record(delta);
+    }
+
+    /// A completed recall; `matched` means the settled state equals a
+    /// stored pattern up to global inversion.
+    pub fn record_recall(&self, total: Duration, matched: bool) {
+        self.recalls.fetch_add(1, Ordering::Relaxed);
+        if matched {
+            self.recalls_matched.fetch_add(1, Ordering::Relaxed);
+        }
+        self.recall_hist.record(total);
     }
 
     pub fn record_solve_submit(&self) {
@@ -299,6 +403,19 @@ impl Metrics {
             mean_occupancy: div(self.batched_jobs.load(Ordering::Relaxed), batches),
             queue: self.queue_hist.summary(),
             total: self.total_hist.summary(),
+            total_native: self.total_hist_native.summary(),
+            total_pjrt: self.total_hist_pjrt.summary(),
+            retrievals_native: self.retrievals_native.load(Ordering::Relaxed),
+            retrievals_pjrt: self.retrievals_pjrt.load(Ordering::Relaxed),
+            patterns_stored: self.patterns_stored.load(Ordering::Relaxed),
+            patterns_evicted: self.patterns_evicted.load(Ordering::Relaxed),
+            patterns_forgotten: self.patterns_forgotten.load(Ordering::Relaxed),
+            store_duplicates: self.store_duplicates.load(Ordering::Relaxed),
+            recalls: self.recalls.load(Ordering::Relaxed),
+            recalls_matched: self.recalls_matched.load(Ordering::Relaxed),
+            delta_entries: self.delta_entries.load(Ordering::Relaxed),
+            recall: self.recall_hist.summary(),
+            delta_reprogram: self.delta_hist.summary(),
             solves_submitted: self.solves_submitted.load(Ordering::Relaxed),
             solves_completed,
             solves_failed: self.solves_failed.load(Ordering::Relaxed),
@@ -354,6 +471,16 @@ impl MetricsSnapshot {
         }
     }
 
+    /// Fraction of recalls that settled onto a stored pattern (up to
+    /// global inversion).  0.0 before any recall ran, never NaN.
+    pub fn recall_accuracy(&self) -> f64 {
+        if self.recalls == 0 {
+            0.0
+        } else {
+            self.recalls_matched as f64 / self.recalls as f64
+        }
+    }
+
     /// The snapshot as one JSON object — counters at the top level,
     /// latency summaries as nested objects (each with `count`/`mean_ms`/
     /// `p50_ms`/`p90_ms`/`p99_ms`).
@@ -368,6 +495,23 @@ impl MetricsSnapshot {
             ("mean_occupancy", Json::num(self.mean_occupancy)),
             ("queue", summary_json(&self.queue)),
             ("total", summary_json(&self.total)),
+            ("total_native", summary_json(&self.total_native)),
+            ("total_pjrt", summary_json(&self.total_pjrt)),
+            ("retrievals_native", Json::num(self.retrievals_native as f64)),
+            ("retrievals_pjrt", Json::num(self.retrievals_pjrt as f64)),
+            ("patterns_stored", Json::num(self.patterns_stored as f64)),
+            ("patterns_evicted", Json::num(self.patterns_evicted as f64)),
+            (
+                "patterns_forgotten",
+                Json::num(self.patterns_forgotten as f64),
+            ),
+            ("store_duplicates", Json::num(self.store_duplicates as f64)),
+            ("recalls", Json::num(self.recalls as f64)),
+            ("recalls_matched", Json::num(self.recalls_matched as f64)),
+            ("recall_accuracy", Json::num(self.recall_accuracy())),
+            ("delta_entries", Json::num(self.delta_entries as f64)),
+            ("recall", summary_json(&self.recall)),
+            ("delta_reprogram", summary_json(&self.delta_reprogram)),
             ("solves_submitted", Json::num(self.solves_submitted as f64)),
             ("solves_completed", Json::num(self.solves_completed as f64)),
             ("solves_failed", Json::num(self.solves_failed as f64)),
@@ -415,11 +559,18 @@ impl MetricsSnapshot {
     pub fn prometheus(&self) -> String {
         use std::fmt::Write;
         let mut out = String::new();
-        let counters: [(&str, u64); 22] = [
+        let counters: [(&str, u64); 29] = [
             ("onn_jobs_submitted", self.submitted),
             ("onn_jobs_completed", self.completed),
             ("onn_jobs_timeouts", self.timeouts),
             ("onn_batches", self.batches),
+            ("onn_patterns_stored", self.patterns_stored),
+            ("onn_patterns_evicted", self.patterns_evicted),
+            ("onn_patterns_forgotten", self.patterns_forgotten),
+            ("onn_store_duplicates", self.store_duplicates),
+            ("onn_recalls", self.recalls),
+            ("onn_recalls_matched", self.recalls_matched),
+            ("onn_delta_entries", self.delta_entries),
             ("onn_solves_submitted", self.solves_submitted),
             ("onn_solves_completed", self.solves_completed),
             ("onn_solves_failed", self.solves_failed),
@@ -452,16 +603,30 @@ impl MetricsSnapshot {
                 "# TYPE onn_solves_by_engine counter\nonn_solves_by_engine{{engine=\"{kind}\"}} {v}"
             );
         }
+        for (kind, v) in [
+            ("native", self.retrievals_native),
+            ("pjrt", self.retrievals_pjrt),
+        ] {
+            let _ = writeln!(
+                out,
+                "# TYPE onn_retrievals_by_engine counter\nonn_retrievals_by_engine{{engine=\"{kind}\"}} {v}"
+            );
+        }
         for (name, v) in [
             ("onn_batch_occupancy", self.mean_occupancy),
             ("onn_solve_batch_occupancy", self.solve_batch_occupancy),
             ("onn_arena_hit_rate", self.arena_hit_rate()),
+            ("onn_recall_accuracy", self.recall_accuracy()),
         ] {
             let _ = writeln!(out, "# TYPE {name} gauge\n{name} {v}");
         }
         for (name, s) in [
             ("onn_queue_latency", &self.queue),
             ("onn_total_latency", &self.total),
+            ("onn_total_latency_native", &self.total_native),
+            ("onn_total_latency_pjrt", &self.total_pjrt),
+            ("onn_recall_latency", &self.recall),
+            ("onn_delta_reprogram_latency", &self.delta_reprogram),
             ("onn_solve_latency", &self.solve),
             ("onn_solve_latency_native", &self.solve_native),
             ("onn_solve_latency_sharded", &self.solve_sharded),
@@ -489,8 +654,8 @@ mod tests {
         m.record_submit();
         m.record_submit();
         m.record_batch(2);
-        m.record_completion(Duration::from_millis(2), Duration::from_millis(10), false);
-        m.record_completion(Duration::from_millis(4), Duration::from_millis(20), true);
+        m.record_completion(Duration::from_millis(2), Duration::from_millis(10), false, "native");
+        m.record_completion(Duration::from_millis(4), Duration::from_millis(20), true, "pjrt");
         let s = m.snapshot();
         assert_eq!(s.submitted, 2);
         assert_eq!(s.completed, 2);
@@ -503,6 +668,67 @@ mod tests {
         assert_eq!(s.queue.count, 2);
         assert_eq!(s.total.count, 2);
         assert!(s.total.p50_ms >= 10.0, "p50 never under-reports");
+        // Retrieval traffic classifies per engine kind like solves do.
+        assert_eq!(s.retrievals_native, 1);
+        assert_eq!(s.retrievals_pjrt, 1);
+        assert_eq!(s.total_native.count, 1);
+        assert_eq!(s.total_pjrt.count, 1);
+    }
+
+    #[test]
+    fn assoc_counters_aggregate() {
+        let m = Metrics::default();
+        let s = m.snapshot();
+        assert_eq!(s.recall_accuracy(), 0.0, "no recalls never NaNs");
+        m.record_store(false, false, Duration::from_millis(1), 40);
+        m.record_store(false, true, Duration::from_millis(1), 24);
+        m.record_store(true, false, Duration::from_millis(1), 99);
+        m.record_forget(Duration::from_millis(2), 16);
+        m.record_recall(Duration::from_millis(5), true);
+        m.record_recall(Duration::from_millis(6), true);
+        m.record_recall(Duration::from_millis(7), false);
+        let s = m.snapshot();
+        assert_eq!(s.patterns_stored, 2, "duplicates are not stores");
+        assert_eq!(s.patterns_evicted, 1);
+        assert_eq!(s.patterns_forgotten, 1);
+        assert_eq!(s.store_duplicates, 1);
+        assert_eq!(s.recalls, 3);
+        assert_eq!(s.recalls_matched, 2);
+        assert!((s.recall_accuracy() - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.delta_entries, 80, "duplicate stores write no entries");
+        assert_eq!(s.recall.count, 3);
+        assert_eq!(s.delta_reprogram.count, 3);
+        let j = s.to_json();
+        for key in [
+            "patterns_stored",
+            "patterns_evicted",
+            "patterns_forgotten",
+            "store_duplicates",
+            "recalls",
+            "recalls_matched",
+            "recall_accuracy",
+            "delta_entries",
+            "retrievals_native",
+            "retrievals_pjrt",
+        ] {
+            assert!(j.get(key).and_then(Json::as_f64).is_some(), "{key}");
+        }
+        for key in ["recall", "delta_reprogram", "total_native", "total_pjrt"] {
+            assert!(
+                j.get(key).and_then(|s| s.get("p50_ms")).is_some(),
+                "{key} summary"
+            );
+        }
+        let text = s.prometheus();
+        assert!(text.contains("onn_patterns_stored 2"));
+        assert!(text.contains("onn_patterns_evicted 1"));
+        assert!(text.contains("onn_store_duplicates 1"));
+        assert!(text.contains("onn_recalls 3"));
+        assert!(text.contains("onn_delta_entries 80"));
+        assert!(text.contains("onn_recall_accuracy"));
+        assert!(text.contains("onn_recall_latency_ms{quantile=\"0.99\"}"));
+        assert!(text.contains("onn_delta_reprogram_latency_ms_count 3"));
+        assert!(text.contains("onn_retrievals_by_engine{engine=\"native\"} 0"));
     }
 
     #[test]
@@ -640,9 +866,15 @@ mod tests {
                 let m = Arc::clone(&m);
                 std::thread::spawn(move || {
                     let kinds = ["native", "sharded", "rtl"];
+                    let retrieval_kinds = ["native", "pjrt"];
                     for i in 0..per_thread {
                         let d = Duration::from_micros(1 + (i % 1000) * 17);
-                        m.record_completion(d, d * 2, false);
+                        m.record_completion(
+                            d,
+                            d * 2,
+                            false,
+                            retrieval_kinds[((t as u64 + i) % 2) as usize],
+                        );
                         m.record_solve_completion(
                             d,
                             8,
@@ -663,6 +895,12 @@ mod tests {
         // Every sample landed in exactly one bucket of each histogram.
         assert_eq!(s.queue.count, n);
         assert_eq!(s.total.count, n);
+        assert_eq!(
+            s.retrievals_native + s.retrievals_pjrt,
+            n,
+            "per-kind retrieval counters partition the total"
+        );
+        assert_eq!(s.total_native.count + s.total_pjrt.count, n);
         assert_eq!(s.solve.count, n);
         assert_eq!(
             s.solve_native.count + s.solve_sharded.count + s.solve_rtl.count,
@@ -683,7 +921,7 @@ mod tests {
     #[test]
     fn exports_carry_percentiles_and_per_engine_counters() {
         let m = Metrics::default();
-        m.record_completion(Duration::from_millis(1), Duration::from_millis(3), false);
+        m.record_completion(Duration::from_millis(1), Duration::from_millis(3), false, "native");
         m.record_solve_completion(Duration::from_millis(5), 16, 0, "native");
         m.record_solve_completion(Duration::from_millis(7), 16, 12, "sharded");
         m.record_solve_completion(Duration::from_millis(9), 16, 0, "rtl");

@@ -18,8 +18,15 @@
 //! oscillator threshold run on the row-sharded multi-device engine
 //! (`server::SolverPoolConfig`), bit-exact with the native path, and
 //! report their all-gather `sync_rounds` in results and metrics.
+//!
+//! The third traffic class is *online-learning associative memory*:
+//! `"type": "store"` / `"recall"` / `"forget"` lines maintain named
+//! live pattern spaces (`assoc::AssocRegistry`) whose quantized weight
+//! matrices are delta-reprogrammed into warm recall engines instead of
+//! rebuilt (DESIGN_SOLVER.md §13).
 
 pub mod arena;
+pub mod assoc;
 pub mod batcher;
 pub mod job;
 pub mod metrics;

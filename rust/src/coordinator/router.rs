@@ -1,7 +1,10 @@
 //! Request router: dispatches retrieval jobs to the worker pool serving
-//! the job's network size, and solve jobs to the shared solver pool
-//! (solver workers build an engine per request, so one pool serves
-//! every problem size).
+//! the job's network size, solve jobs to the shared solver pool (solver
+//! workers build an engine per request, so one pool serves every
+//! problem size), and associative-memory traffic to the live pattern
+//! registry (stores/forgets mutate synchronously under its lock;
+//! recalls snapshot there and settle on the assoc worker's warm
+//! engines).
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -11,8 +14,12 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use crate::coordinator::assoc::{
+    AssocRegistry, ForgetOutcome, LearningRule, RecallJob, StoreOutcome,
+};
 use crate::coordinator::job::{
-    Job, ProgressEvent, RetrievalRequest, RetrievalResult, SolveJob, SolveRequest, SolveResult,
+    Job, ProgressEvent, RecallRequest, RecallResult, RetrievalRequest, RetrievalResult, SolveJob,
+    SolveRequest, SolveResult,
 };
 use crate::coordinator::metrics::Metrics;
 
@@ -20,6 +27,10 @@ use crate::coordinator::metrics::Metrics;
 pub struct Router {
     queues: Mutex<BTreeMap<usize, Sender<Job>>>,
     solver: Mutex<Option<Sender<SolveJob>>>,
+    /// The live associative-memory spaces (shared with the assoc worker
+    /// so matched recalls can refresh LRU recency).
+    pub assoc: Arc<AssocRegistry>,
+    assoc_tx: Mutex<Option<Sender<RecallJob>>>,
     /// Latched by [`shutdown`](Self::shutdown); serve loops poll it so
     /// a shut-down coordinator's listener exits without needing one
     /// more client to connect.
@@ -32,6 +43,8 @@ impl Router {
         Self {
             queues: Mutex::new(BTreeMap::new()),
             solver: Mutex::new(None),
+            assoc: Arc::new(AssocRegistry::new()),
+            assoc_tx: Mutex::new(None),
             shutdown: AtomicBool::new(false),
             metrics,
         }
@@ -183,12 +196,104 @@ impl Router {
         Ok(rrx)
     }
 
+    /// Register the associative worker's recall queue.  Replacing an
+    /// existing route is an error (shut down first).
+    pub fn register_assoc(&self, tx: Sender<RecallJob>) -> Result<()> {
+        let mut a = self.assoc_tx.lock().unwrap();
+        if a.is_some() {
+            return Err(anyhow!("assoc worker already registered"));
+        }
+        *a = Some(tx);
+        Ok(())
+    }
+
+    pub fn has_assoc(&self) -> bool {
+        self.assoc_tx.lock().unwrap().is_some()
+    }
+
+    /// Store one pattern into a memory space (created on first touch).
+    /// Synchronous: the master update + delta reprogram runs under the
+    /// registry lock and the outcome comes straight back.
+    pub fn submit_store(
+        &self,
+        space: &str,
+        spins: Vec<i8>,
+        capacity: Option<usize>,
+        rule: Option<LearningRule>,
+    ) -> Result<StoreOutcome> {
+        if self.is_shutdown() {
+            return Err(anyhow!("coordinator is shut down"));
+        }
+        self.assoc.store(space, spins, capacity, rule, &self.metrics)
+    }
+
+    /// Remove one stored pattern from a memory space (synchronous, like
+    /// [`submit_store`](Self::submit_store)).
+    pub fn submit_forget(&self, space: &str, spins: &[i8]) -> Result<ForgetOutcome> {
+        if self.is_shutdown() {
+            return Err(anyhow!("coordinator is shut down"));
+        }
+        self.assoc.forget(space, spins, &self.metrics)
+    }
+
+    /// Submit a recall; the returned channel yields the settled result
+    /// (or a structured error, e.g. an engine failure).  The space's
+    /// quantized weights and match targets are snapshotted here, under
+    /// the registry lock, so the recall is served against one consistent
+    /// master version even while stores keep mutating the space.
+    pub fn submit_recall(&self, req: RecallRequest) -> Result<Receiver<Result<RecallResult>>> {
+        if !req.spins.iter().all(|&s| s == 1 || s == -1) {
+            return Err(anyhow!("recall {}: probe spins must be +1/-1", req.id));
+        }
+        if req.max_periods == 0 {
+            return Err(anyhow!("recall {}: max_periods must be positive", req.id));
+        }
+        let snapshot = self.assoc.snapshot(&req.space)?;
+        if req.spins.len() != snapshot.n {
+            return Err(anyhow!(
+                "recall {}: probe has {} spins, space '{}' stores {}",
+                req.id,
+                req.spins.len(),
+                req.space,
+                snapshot.n
+            ));
+        }
+        // An explicit shard override must leave every shard at least
+        // one weight-matrix row (the solve path's rule).
+        if let Some(shards) = req.shards {
+            if shards == 0 || shards > snapshot.n {
+                return Err(anyhow!(
+                    "recall {}: {shards} shards invalid for an \
+                     {}-oscillator space (want 1..={})",
+                    req.id,
+                    snapshot.n,
+                    snapshot.n
+                ));
+            }
+        }
+        let a = self.assoc_tx.lock().unwrap();
+        let tx = a
+            .as_ref()
+            .ok_or_else(|| anyhow!("no assoc worker registered"))?;
+        let (rtx, rrx) = channel();
+        tx.send(RecallJob {
+            req,
+            snapshot,
+            submitted: Instant::now(),
+            reply: rtx,
+        })
+        .map_err(|_| anyhow!("assoc worker queue closed"))?;
+        Ok(rrx)
+    }
+
     /// Drop all routes (workers drain and exit) and latch the shutdown
     /// flag the serve loops poll.
     pub fn shutdown(&self) {
         self.shutdown.store(true, Ordering::Relaxed);
         self.queues.lock().unwrap().clear();
         *self.solver.lock().unwrap() = None;
+        *self.assoc_tx.lock().unwrap() = None;
+        self.assoc.clear();
     }
 }
 
@@ -341,6 +446,90 @@ mod tests {
         p.h[0] = 1.0;
         let _pending = r.submit_solve(SolveRequest::new(9, p)).unwrap();
         assert_eq!(rx.try_recv().unwrap().req.id, 9, "field problems anneal");
+    }
+
+    #[test]
+    fn assoc_store_recall_forget_lifecycle() {
+        let r = Router::new(Arc::new(Metrics::default()));
+        let a = vec![1i8, -1, 1, -1, 1, -1, 1, -1, 1];
+        let b = vec![1i8, 1, -1, -1, 1, 1, -1, -1, 1];
+        let out = r.submit_store("g", a.clone(), Some(3), None).unwrap();
+        assert!(!out.duplicate);
+        assert_eq!((out.patterns, out.capacity), (1, 3));
+        r.submit_store("g", b.clone(), None, None).unwrap();
+
+        // Recall routes through the assoc worker queue with a snapshot
+        // taken at submit time.
+        let recall = |id: u64, spins: Vec<i8>| RecallRequest {
+            id,
+            space: "g".to_string(),
+            spins,
+            max_periods: 64,
+            shards: None,
+            rtl: false,
+        };
+        assert!(!r.has_assoc());
+        assert!(r.submit_recall(recall(1, a.clone())).is_err(), "no worker");
+        let (tx, rx) = channel();
+        r.register_assoc(tx).unwrap();
+        assert!(r.has_assoc());
+        let (tx2, _rx2) = channel();
+        assert!(r.register_assoc(tx2).is_err(), "duplicate worker");
+        let _pending = r.submit_recall(recall(2, a.clone())).unwrap();
+        let job = rx.try_recv().unwrap();
+        assert_eq!(job.req.id, 2);
+        assert_eq!(job.snapshot.n, 9);
+        assert_eq!(job.snapshot.patterns.len(), 2);
+        assert_eq!(job.snapshot.version, 2, "two stores bumped the master");
+
+        r.submit_forget("g", &b).unwrap();
+        assert!(r.submit_forget("g", &b).is_err(), "already forgotten");
+
+        r.shutdown();
+        assert!(r.submit_store("g", a.clone(), None, None).is_err());
+        assert!(r.submit_forget("g", &a).is_err());
+        assert!(r.submit_recall(recall(3, a)).is_err(), "queue cleared");
+        assert!(!r.has_assoc());
+    }
+
+    #[test]
+    fn malformed_recall_rejected() {
+        let r = Router::new(Arc::new(Metrics::default()));
+        let (tx, _rx) = channel();
+        r.register_assoc(tx).unwrap();
+        let a = vec![1i8, -1, 1, -1];
+        r.submit_store("s", a.clone(), None, None).unwrap();
+        let base = RecallRequest {
+            id: 1,
+            space: "s".to_string(),
+            spins: a,
+            max_periods: 64,
+            shards: None,
+            rtl: false,
+        };
+        let mut bad = base.clone();
+        bad.space = "nope".to_string();
+        assert!(r.submit_recall(bad).is_err(), "unknown space");
+        let mut bad = base.clone();
+        bad.spins.pop();
+        assert!(r.submit_recall(bad).is_err(), "probe length");
+        let mut bad = base.clone();
+        bad.spins[0] = 0;
+        assert!(r.submit_recall(bad).is_err(), "non-spin probe");
+        let mut bad = base.clone();
+        bad.max_periods = 0;
+        assert!(r.submit_recall(bad).is_err(), "zero budget");
+        let mut bad = base.clone();
+        bad.shards = Some(0);
+        assert!(r.submit_recall(bad).is_err(), "zero shards");
+        let mut bad = base.clone();
+        bad.shards = Some(5); // more shards than oscillators
+        assert!(r.submit_recall(bad).is_err());
+        let mut ok = base.clone();
+        ok.shards = Some(2);
+        ok.rtl = true;
+        assert!(r.submit_recall(ok).is_ok(), "rtl cluster recall is valid");
+        assert!(r.submit_recall(base).is_ok());
     }
 
     #[test]

@@ -16,11 +16,14 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
+use crate::coordinator::assoc::{
+    assoc_worker_loop, ForgetOutcome, LearningRule, StoreOutcome,
+};
 use crate::coordinator::batcher::{
     solve_worker_loop, worker_loop, BatchPolicy, SolvePackPolicy, SolvePending,
 };
 use crate::coordinator::job::{
-    RetrievalRequest, RetrievalResult, SolveRequest, SolveResult,
+    RecallRequest, RecallResult, RetrievalRequest, RetrievalResult, SolveRequest, SolveResult,
 };
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
 use crate::coordinator::router::Router;
@@ -283,6 +286,19 @@ impl Coordinator {
             }));
         }
 
+        // The associative worker: serves `"type": "recall"` traffic on
+        // its own warm engine arena (engines are not Send, so recall
+        // fabrics live and die on this thread).  Stores and forgets
+        // never queue here — they mutate the registry synchronously on
+        // the submitting connection's thread.
+        let (atx, arx) = channel();
+        router.register_assoc(atx)?;
+        let assoc_registry = router.assoc.clone();
+        let am = metrics.clone();
+        workers.push(std::thread::spawn(move || {
+            assoc_worker_loop(arx, assoc_registry, am, arena_capacity)
+        }));
+
         Ok(Coordinator {
             router,
             metrics,
@@ -329,6 +345,13 @@ impl Coordinator {
 /// Solve request line (see DESIGN_SOLVER.md):
 ///   {"type": "solve", "id": 2, "n": 6, "edges": [[0,3,1],...], ...}
 ///   -> {"id": 2, "spins": [...], "energy": -9, ...}
+/// Associative-memory lines (DESIGN_SOLVER.md §13):
+///   {"type": "store", "space": "g", "spins": [1,-1,...]}
+///   -> {"type": "stored", "space": "g", "patterns": 2, ...}
+///   {"type": "recall", "space": "g", "spins": [1,1,...]}
+///   -> {"type": "recall", "spins": [...], "matched": true, ...}
+///   {"type": "forget", "space": "g", "spins": [1,-1,...]}
+///   -> {"type": "forgotten", "space": "g", "patterns": 1, ...}
 /// Metrics scrape (DESIGN_SOLVER.md §9):
 ///   {"type": "metrics"}
 ///   -> {"type": "metrics", "snapshot": {...}, "prometheus": "..."}
@@ -342,6 +365,9 @@ pub fn handle_line(router: &Router, line: &str) -> String {
     };
     match parsed.get("type").and_then(Json::as_str) {
         Some("solve") => handle_solve_value(router, &parsed),
+        Some("store") => handle_store_value(router, &parsed),
+        Some("recall") => handle_recall_value(router, &parsed),
+        Some("forget") => handle_forget_value(router, &parsed),
         Some("metrics") => metrics_line(router),
         None | Some("retrieve") => handle_retrieval_value(router, &parsed),
         Some(other) => error_line(&format!("unknown request type '{other}'")),
@@ -417,6 +443,96 @@ pub fn solve_result_json(id: u64, res: &SolveResult) -> Json {
     Json::obj(fields)
 }
 
+/// Serialize one store outcome for the wire (shared by both front ends
+/// so responses are byte-identical across servers).
+pub fn store_result_json(id: u64, space: &str, out: &StoreOutcome) -> Json {
+    Json::obj(vec![
+        ("type", Json::str("stored")),
+        ("id", Json::num(id as f64)),
+        ("space", Json::str(space)),
+        ("duplicate", Json::Bool(out.duplicate)),
+        ("evicted", Json::num(out.evicted as f64)),
+        ("patterns", Json::num(out.patterns as f64)),
+        ("capacity", Json::num(out.capacity as f64)),
+        ("delta_entries", Json::num(out.delta_entries as f64)),
+        ("quantization_error", Json::num(out.quantization_error)),
+        ("delta_us", Json::num(out.delta_latency.as_secs_f64() * 1e6)),
+    ])
+}
+
+/// Serialize one forget outcome for the wire (shared by both front
+/// ends).
+pub fn forget_result_json(id: u64, space: &str, out: &ForgetOutcome) -> Json {
+    Json::obj(vec![
+        ("type", Json::str("forgotten")),
+        ("id", Json::num(id as f64)),
+        ("space", Json::str(space)),
+        ("patterns", Json::num(out.patterns as f64)),
+        ("delta_entries", Json::num(out.delta_entries as f64)),
+        ("quantization_error", Json::num(out.quantization_error)),
+        ("delta_us", Json::num(out.delta_latency.as_secs_f64() * 1e6)),
+    ])
+}
+
+/// Serialize one recall result for the wire (shared by both front
+/// ends).
+pub fn recall_result_json(res: &RecallResult) -> Json {
+    Json::obj(vec![
+        ("type", Json::str("recall")),
+        ("id", Json::num(res.id as f64)),
+        (
+            "spins",
+            Json::arr_i32(&res.spins.iter().map(|&s| s as i32).collect::<Vec<_>>()),
+        ),
+        (
+            "settled",
+            res.settled
+                .map(|s| Json::num(s as f64))
+                .unwrap_or(Json::Null),
+        ),
+        ("matched", Json::Bool(res.matched)),
+        ("engine", Json::str(res.engine)),
+        ("version", Json::num(res.version as f64)),
+    ])
+}
+
+/// Handle one `"type": "store"` line synchronously (shared with the
+/// evented front end — stores mutate the registry inline, no worker).
+pub(crate) fn handle_store_value(router: &Router, v: &Json) -> String {
+    let id = v.get("id").and_then(Json::as_usize).unwrap_or(0) as u64;
+    match parse_store_request(v).and_then(|(space, spins, cap, rule)| {
+        let out = router.submit_store(&space, spins, cap, rule)?;
+        Ok((space, out))
+    }) {
+        Ok((space, out)) => store_result_json(id, &space, &out).to_string(),
+        Err(e) => error_line(&e.to_string()),
+    }
+}
+
+/// Handle one `"type": "forget"` line synchronously (shared with the
+/// evented front end).
+pub(crate) fn handle_forget_value(router: &Router, v: &Json) -> String {
+    let id = v.get("id").and_then(Json::as_usize).unwrap_or(0) as u64;
+    match parse_forget_request(v).and_then(|(space, spins)| {
+        let out = router.submit_forget(&space, &spins)?;
+        Ok((space, out))
+    }) {
+        Ok((space, out)) => forget_result_json(id, &space, &out).to_string(),
+        Err(e) => error_line(&e.to_string()),
+    }
+}
+
+fn handle_recall_value(router: &Router, v: &Json) -> String {
+    match parse_recall_request(v).and_then(|req| {
+        let rx = router.submit_recall(req)?;
+        rx.recv()
+            .map_err(|_| anyhow!("assoc worker dropped reply"))?
+    }) {
+        Ok(res) => recall_result_json(&res).to_string(),
+        Err(e) => error_line(&e.to_string()),
+    }
+}
+
 fn handle_retrieval_value(router: &Router, v: &Json) -> String {
     match parse_request(v).and_then(|req| {
         let id = req.id;
@@ -489,6 +605,125 @@ const MAX_WIRE_PERIODS: usize = 65_536;
 /// Shard-override ceiling: every shard is a worker thread on the
 /// serving host, so cap what one request line may demand.
 const MAX_WIRE_SHARDS: usize = 64;
+/// Memory-space name ceiling: spaces are BTreeMap keys held for the
+/// coordinator's lifetime, so bound what one request line may mint.
+const MAX_WIRE_SPACE_NAME: usize = 256;
+/// Pattern-capacity ceiling for one memory space (each slot pins n
+/// spins plus its share of two n^2 matrices).
+const MAX_WIRE_CAPACITY: usize = 1024;
+
+/// The `"space"` field shared by the associative-memory requests.
+fn parse_space(v: &Json) -> Result<String> {
+    let space = v
+        .get("space")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("missing 'space'"))?;
+    if space.is_empty() || space.len() > MAX_WIRE_SPACE_NAME {
+        return Err(anyhow!(
+            "'space' must be 1..={MAX_WIRE_SPACE_NAME} characters"
+        ));
+    }
+    Ok(space.to_string())
+}
+
+/// The `"spins"` field shared by the associative-memory requests:
+/// strictly ±1 entries, length within the wire size cap.
+fn parse_spins(v: &Json) -> Result<Vec<i8>> {
+    let arr = v
+        .get("spins")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing 'spins'"))?;
+    if arr.is_empty() || arr.len() > MAX_WIRE_N {
+        return Err(anyhow!("'spins' must have 1..={MAX_WIRE_N} entries"));
+    }
+    arr.iter()
+        .map(|x| match x.as_i64() {
+            Some(1) => Ok(1i8),
+            Some(-1) => Ok(-1i8),
+            _ => Err(anyhow!("'spins' entries must be +1/-1")),
+        })
+        .collect()
+}
+
+/// Parse a `"type": "store"` line: `"space"` + `"spins"`, with optional
+/// `"capacity"` (pattern slots; only honored at space creation, must
+/// match afterwards) and `"rule"` (`"hebbian"` | `"doi"`, ditto).
+pub(crate) fn parse_store_request(
+    v: &Json,
+) -> Result<(String, Vec<i8>, Option<usize>, Option<LearningRule>)> {
+    let space = parse_space(v)?;
+    let spins = parse_spins(v)?;
+    let capacity = match v.get("capacity") {
+        None => None,
+        Some(c) => {
+            let cap = c
+                .as_usize()
+                .ok_or_else(|| anyhow!("'capacity' must be a positive integer"))?;
+            if cap == 0 || cap > MAX_WIRE_CAPACITY {
+                return Err(anyhow!("'capacity' = {cap} outside 1..={MAX_WIRE_CAPACITY}"));
+            }
+            Some(cap)
+        }
+    };
+    let rule = match v.get("rule") {
+        None => None,
+        Some(r) => {
+            let name = r
+                .as_str()
+                .ok_or_else(|| anyhow!("'rule' must be a string"))?;
+            Some(LearningRule::parse(name)?)
+        }
+    };
+    Ok((space, spins, capacity, rule))
+}
+
+/// Parse a `"type": "forget"` line: `"space"` + `"spins"`.
+pub(crate) fn parse_forget_request(v: &Json) -> Result<(String, Vec<i8>)> {
+    Ok((parse_space(v)?, parse_spins(v)?))
+}
+
+/// Parse a `"type": "recall"` line: `"space"` + probe `"spins"`, with
+/// the solve wire's optional engine overrides (`"shards"`, `"rtl"`) and
+/// `"max_periods"`.
+pub(crate) fn parse_recall_request(v: &Json) -> Result<RecallRequest> {
+    let space = parse_space(v)?;
+    let spins = parse_spins(v)?;
+    let max_periods = v
+        .get("max_periods")
+        .and_then(Json::as_usize)
+        .unwrap_or(256);
+    if max_periods == 0 || max_periods > MAX_WIRE_PERIODS {
+        return Err(anyhow!(
+            "'max_periods' = {max_periods} outside 1..={MAX_WIRE_PERIODS}"
+        ));
+    }
+    let shards = match v.get("shards") {
+        None => None,
+        Some(s) => {
+            let k = s
+                .as_usize()
+                .ok_or_else(|| anyhow!("'shards' must be a non-negative integer"))?;
+            if k == 0 || k > MAX_WIRE_SHARDS {
+                return Err(anyhow!("'shards' = {k} outside 1..={MAX_WIRE_SHARDS}"));
+            }
+            Some(k)
+        }
+    };
+    let rtl = match v.get("rtl") {
+        None => false,
+        Some(b) => b
+            .as_bool()
+            .ok_or_else(|| anyhow!("'rtl' must be a boolean"))?,
+    };
+    Ok(RecallRequest {
+        id: v.get("id").and_then(Json::as_usize).unwrap_or(0) as u64,
+        space,
+        spins,
+        max_periods,
+        shards,
+        rtl,
+    })
+}
 
 /// Parse a solve request.  Couplings come either dense
 /// (`"j": [n*n floats]`) or sparse (`"edges": [[i, j, J_ij], ...]`);
@@ -752,6 +987,133 @@ mod tests {
         assert!(resp.contains("bad json"), "{resp}");
         let resp = handle_line(&router, r#"{"type": "frobnicate"}"#);
         assert!(resp.contains("unknown request type"), "{resp}");
+    }
+
+    #[test]
+    fn parse_store_and_forget_requests() {
+        let line = r#"{"type":"store","space":"g","spins":[1,-1,1],"capacity":5,"rule":"doi"}"#;
+        let (space, spins, cap, rule) =
+            parse_store_request(&Json::parse(line).unwrap()).unwrap();
+        assert_eq!(space, "g");
+        assert_eq!(spins, vec![1, -1, 1]);
+        assert_eq!(cap, Some(5));
+        assert_eq!(rule, Some(LearningRule::Doi));
+        let (_, _, cap, rule) = parse_store_request(
+            &Json::parse(r#"{"type":"store","space":"g","spins":[1,-1]}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cap, None, "capacity defaults to the Hopfield bound");
+        assert_eq!(rule, None, "rule defaults to hebbian");
+        for bad in [
+            r#"{"type":"store","spins":[1,-1]}"#,              // missing space
+            r#"{"type":"store","space":"","spins":[1,-1]}"#,   // empty space
+            r#"{"type":"store","space":"g"}"#,                 // missing spins
+            r#"{"type":"store","space":"g","spins":[]}"#,      // empty pattern
+            r#"{"type":"store","space":"g","spins":[1,0]}"#,   // non-spin entry
+            r#"{"type":"store","space":"g","spins":[1,2]}"#,   // non-spin entry
+            r#"{"type":"store","space":"g","spins":[1,-1],"capacity":0}"#,
+            r#"{"type":"store","space":"g","spins":[1,-1],"capacity":100000}"#,
+            r#"{"type":"store","space":"g","spins":[1,-1],"rule":"x"}"#,
+            r#"{"type":"store","space":"g","spins":[1,-1],"rule":3}"#,
+        ] {
+            assert!(
+                parse_store_request(&Json::parse(bad).unwrap()).is_err(),
+                "{bad}"
+            );
+        }
+        let (space, spins) = parse_forget_request(
+            &Json::parse(r#"{"type":"forget","space":"g","spins":[-1,1]}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!((space.as_str(), spins), ("g", vec![-1, 1]));
+        assert!(
+            parse_forget_request(&Json::parse(r#"{"type":"forget","space":"g"}"#).unwrap())
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn parse_recall_request_overrides_and_errors() {
+        let r = parse_recall_request(
+            &Json::parse(
+                r#"{"type":"recall","id":4,"space":"g","spins":[1,-1],
+                    "max_periods":64,"shards":2,"rtl":true}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(r.id, 4);
+        assert_eq!(r.space, "g");
+        assert_eq!(r.spins, vec![1, -1]);
+        assert_eq!(r.max_periods, 64);
+        assert_eq!(r.shards, Some(2));
+        assert!(r.rtl);
+        let d = parse_recall_request(
+            &Json::parse(r#"{"type":"recall","space":"g","spins":[1,-1]}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(d.max_periods, 256, "default period budget");
+        assert_eq!(d.shards, None);
+        assert!(!d.rtl);
+        for bad in [
+            r#"{"type":"recall","space":"g"}"#,                    // missing spins
+            r#"{"type":"recall","spins":[1,-1]}"#,                 // missing space
+            r#"{"type":"recall","space":"g","spins":[1,-1],"max_periods":0}"#,
+            r#"{"type":"recall","space":"g","spins":[1,-1],"max_periods":100000000}"#,
+            r#"{"type":"recall","space":"g","spins":[1,-1],"shards":0}"#,
+            r#"{"type":"recall","space":"g","spins":[1,-1],"shards":1000}"#,
+            r#"{"type":"recall","space":"g","spins":[1,-1],"rtl":1}"#,
+        ] {
+            assert!(
+                parse_recall_request(&Json::parse(bad).unwrap()).is_err(),
+                "{bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn handle_line_serves_store_and_forget_synchronously() {
+        // Stores and forgets need no worker pool: they mutate the
+        // router's registry inline, so a bare Router serves them.
+        let router = Router::new(Arc::new(Metrics::default()));
+        let resp = handle_line(
+            &router,
+            r#"{"type":"store","id":1,"space":"g","spins":[1,-1,1,-1]}"#,
+        );
+        assert!(resp.contains(r#""type":"stored""#), "{resp}");
+        assert!(resp.contains(r#""id":1"#), "{resp}");
+        assert!(resp.contains(r#""patterns":1"#), "{resp}");
+        assert!(resp.contains(r#""duplicate":false"#), "{resp}");
+        assert!(resp.contains(r#""delta_entries":"#), "{resp}");
+        // Re-storing the inverse is an idempotent duplicate.
+        let resp = handle_line(
+            &router,
+            r#"{"type":"store","space":"g","spins":[-1,1,-1,1]}"#,
+        );
+        assert!(resp.contains(r#""duplicate":true"#), "{resp}");
+        assert!(resp.contains(r#""patterns":1"#), "{resp}");
+        // A recall without the assoc worker reports a structured error.
+        let resp = handle_line(
+            &router,
+            r#"{"type":"recall","space":"g","spins":[1,-1,1,-1]}"#,
+        );
+        assert!(resp.contains("no assoc worker"), "{resp}");
+        let resp = handle_line(
+            &router,
+            r#"{"type":"forget","id":9,"space":"g","spins":[1,-1,1,-1]}"#,
+        );
+        assert!(resp.contains(r#""type":"forgotten""#), "{resp}");
+        assert!(resp.contains(r#""patterns":0"#), "{resp}");
+        let resp = handle_line(
+            &router,
+            r#"{"type":"forget","space":"g","spins":[1,-1,1,-1]}"#,
+        );
+        assert!(resp.contains("error"), "forgetting twice: {resp}");
+        // Associative counters rode the shared metrics.
+        let snap = router.metrics.snapshot();
+        assert_eq!(snap.patterns_stored, 1);
+        assert_eq!(snap.store_duplicates, 1);
+        assert_eq!(snap.patterns_forgotten, 1);
     }
 
     #[test]

@@ -34,10 +34,11 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::coordinator::job::{ProgressEvent, RetrievalResult, SolveResult};
+use crate::coordinator::job::{ProgressEvent, RecallResult, RetrievalResult, SolveResult};
 use crate::coordinator::router::Router;
 use crate::coordinator::server::{
-    error_line, metrics_line, parse_request, parse_solve_request, retrieval_result_json,
+    error_line, handle_forget_value, handle_store_value, metrics_line, parse_recall_request,
+    parse_request, parse_solve_request, recall_result_json, retrieval_result_json,
     solve_result_json,
 };
 use crate::util::json::Json;
@@ -125,12 +126,21 @@ enum InFlight {
         id: u64,
         rx: Receiver<RetrievalResult>,
     },
+    /// An associative-memory recall served by the assoc worker; stores
+    /// and forgets are answered inline (they mutate the registry, no
+    /// engine time), so only recalls go in flight.
+    Recall {
+        token: u64,
+        rx: Receiver<Result<RecallResult>>,
+    },
 }
 
 impl InFlight {
     fn token(&self) -> u64 {
         match self {
-            InFlight::Solve { token, .. } | InFlight::Retrieve { token, .. } => *token,
+            InFlight::Solve { token, .. }
+            | InFlight::Retrieve { token, .. }
+            | InFlight::Recall { token, .. } => *token,
         }
     }
 }
@@ -143,6 +153,9 @@ impl InFlight {
 /// and a client disconnect cancels its outstanding solves at the next
 /// chunk boundary.  Responses to a connection that pipelines several
 /// requests come back in completion order (ids disambiguate).
+/// Associative-memory `store`/`forget` lines are answered inline (a
+/// registry mutation, no engine time); `recall` lines go in flight to
+/// the assoc worker like any other engine-served request.
 pub fn serve_evented(router: Arc<Router>, listener: TcpListener) -> Result<()> {
     listener.set_nonblocking(true)?;
     let mut conns: Vec<Conn> = Vec::new();
@@ -328,6 +341,21 @@ fn dispatch_line(
                 Err(e) => Some(error_line(&e.to_string())),
             }
         }
+        Some("store") => Some(handle_store_value(router, &parsed)),
+        Some("forget") => Some(handle_forget_value(router, &parsed)),
+        Some("recall") => {
+            let req = match parse_recall_request(&parsed) {
+                Ok(req) => req,
+                Err(e) => return Some(error_line(&e.to_string())),
+            };
+            match router.submit_recall(req) {
+                Ok(rx) => {
+                    inflight.push(InFlight::Recall { token, rx });
+                    None
+                }
+                Err(e) => Some(error_line(&e.to_string())),
+            }
+        }
         None | Some("retrieve") => {
             let req = match parse_request(&parsed) {
                 Ok(req) => req,
@@ -387,6 +415,21 @@ fn poll_inflight(entry: InFlight, conns: &mut [Conn]) -> Option<InFlight> {
             Err(TryRecvError::Empty) => Some(InFlight::Retrieve { token, id, rx }),
             Err(TryRecvError::Disconnected) => {
                 push(conns, token, error_line("worker dropped reply"));
+                None
+            }
+        },
+        InFlight::Recall { token, rx } => match rx.try_recv() {
+            Ok(Ok(res)) => {
+                push(conns, token, recall_result_json(&res).to_string());
+                None
+            }
+            Ok(Err(e)) => {
+                push(conns, token, error_line(&e.to_string()));
+                None
+            }
+            Err(TryRecvError::Empty) => Some(InFlight::Recall { token, rx }),
+            Err(TryRecvError::Disconnected) => {
+                push(conns, token, error_line("assoc worker dropped reply"));
                 None
             }
         },

@@ -265,8 +265,10 @@ pub fn fig12() -> String {
 /// throughput trajectory (replica-periods/sec vs N per engine), the
 /// packed-serving comparison, the float-native vs bit-true-RTL
 /// quality/time-to-solution rows, the per-fabric latency percentiles,
-/// and the per-chunk convergence trajectories.  Missing sections
-/// render as absent — older trajectory files stay readable.
+/// the online-learning associative-memory rows (delta-reprogram vs
+/// full-rebuild recalls/sec plus accuracy vs stored load), and the
+/// per-chunk convergence trajectories.  Missing sections render as
+/// absent — older trajectory files stay readable.
 pub fn solver_bench_report(doc: &Json) -> String {
     let num = |row: &Json, key: &str| row.get(key).and_then(Json::as_f64).unwrap_or(0.0);
     let mut out = String::new();
@@ -472,6 +474,56 @@ pub fn solver_bench_report(doc: &Json) -> String {
             out.push_str(&t.render());
         }
     }
+    if let Some(assoc) = doc.get("associative").and_then(Json::as_arr) {
+        if !assoc.is_empty() {
+            let mut t = Table::new(
+                "Online-learning associative memory: delta-reprogrammed warm \
+                 recalls vs cold retrain+rebuild (bit-identity asserted)",
+                &[
+                    "N",
+                    "Capacity",
+                    "Engine",
+                    "Shards",
+                    "Recalls",
+                    "Delta rec/s",
+                    "Rebuild rec/s",
+                    "Speedup",
+                ],
+            );
+            for p in assoc {
+                t.row(&[
+                    fmt_f(num(p, "n"), 0),
+                    fmt_f(num(p, "capacity"), 0),
+                    p.get("engine").and_then(Json::as_str).unwrap_or("?").to_string(),
+                    fmt_f(num(p, "shards"), 0),
+                    fmt_f(num(p, "recalls"), 0),
+                    fmt_f(num(p, "delta_recalls_per_sec"), 1),
+                    fmt_f(num(p, "rebuild_recalls_per_sec"), 1),
+                    fmt_f(num(p, "speedup"), 2),
+                ]);
+            }
+            out.push_str(&t.render());
+            let mut lt = Table::new(
+                "Associative recall accuracy vs stored load (corrupted \
+                 probes, match up to inversion)",
+                &["N", "Stores", "Stored", "Trials", "Matched", "Accuracy"],
+            );
+            for p in assoc {
+                let n = num(p, "n");
+                for l in p.get("load").and_then(Json::as_arr).unwrap_or(&[]) {
+                    lt.row(&[
+                        fmt_f(n, 0),
+                        fmt_f(num(l, "stores"), 0),
+                        fmt_f(num(l, "patterns"), 0),
+                        fmt_f(num(l, "trials"), 0),
+                        fmt_f(num(l, "matched"), 0),
+                        fmt_f(num(l, "accuracy"), 2),
+                    ]);
+                }
+            }
+            out.push_str(&lt.render());
+        }
+    }
     if let Some(conv) = doc.get("convergence").and_then(Json::as_arr) {
         if !conv.is_empty() {
             let mut t = Table::new(
@@ -534,8 +586,9 @@ mod tests {
     #[test]
     fn solver_bench_report_renders_all_sections() {
         use crate::harness::solverbench::{
-            bench_json, ConvergencePoint, LatencyPoint, PackedPoint, RtlClusterPoint,
-            RtlPackedPoint, RtlPoint, SolverBench, SparsePoint, ThroughputPoint,
+            bench_json, AssocLoadPoint, AssociativePoint, ConvergencePoint, LatencyPoint,
+            PackedPoint, RtlClusterPoint, RtlPackedPoint, RtlPoint, SolverBench, SparsePoint,
+            ThroughputPoint,
         };
         use crate::telemetry::LatencySummary;
         let pts = vec![ThroughputPoint {
@@ -644,6 +697,25 @@ mod tests {
                 hw_dense_khz: 6.0,
                 hw_sparse_khz: 98.0,
             }],
+            associative: vec![AssociativePoint {
+                n: 32,
+                capacity: 4,
+                engine: "sharded",
+                shards: 2,
+                recalls: 4,
+                delta_median_s: 0.01,
+                rebuild_median_s: 0.05,
+                delta_recalls_per_sec: 400.0,
+                rebuild_recalls_per_sec: 80.0,
+                speedup: 5.0,
+                load: vec![AssocLoadPoint {
+                    patterns: 4,
+                    stores: 6,
+                    trials: 4,
+                    matched: 3,
+                    accuracy: 0.75,
+                }],
+            }],
             ..Default::default()
         };
         let doc = bench_json(&bench, 42);
@@ -662,6 +734,13 @@ mod tests {
         assert!(s.contains("Convergence traces"), "{s}");
         assert!(s.contains("Dense vs CSR"), "{s}");
         assert!(s.contains("8.00"), "sparse speedup column renders: {s}");
+        assert!(s.contains("Online-learning associative memory"), "{s}");
+        assert!(s.contains("400.0"), "delta recalls/sec column renders: {s}");
+        assert!(
+            s.contains("accuracy vs stored load"),
+            "load-sweep table renders: {s}"
+        );
+        assert!(s.contains("0.75"), "accuracy column renders: {s}");
         assert!(s.contains("yes"), "monotone flag renders: {s}");
         // Unrelated documents degrade gracefully instead of panicking.
         let s = solver_bench_report(&Json::obj(vec![("x", Json::num(1.0))]));

@@ -16,6 +16,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::coordinator::assoc::{capacity_for, LearningRule, MemorySpace};
 use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::server::{serve_tcp, Coordinator, SolverPoolConfig};
 use crate::coordinator::stream::serve_evented;
@@ -24,12 +25,18 @@ use crate::fpga::resources::max_oscillators;
 use crate::fpga::timing::{oscillation_frequency_hybrid, oscillation_frequency_hybrid_sparse};
 use crate::harness::bench;
 use crate::onn::config::NetworkConfig;
+use crate::onn::learning::hebbian;
+use crate::onn::patterns::spins_match_up_to_inversion;
+use crate::onn::phase::{spin_to_phase, state_to_spins};
+use crate::onn::weights::WeightMatrix;
 use crate::runtime::rtl::RtlEngine;
+use crate::runtime::ChunkEngine;
 use crate::solver::anneal::Schedule;
 use crate::solver::graph::Graph;
 use crate::solver::portfolio::{
-    solve_native, solve_packed, solve_packed_native, solve_with, solve_with_trace, wants_sparse,
-    EngineSelect, PortfolioParams, DEFAULT_CHUNK, MAX_WAVE_REPLICAS,
+    build_engine_cfg, drive_retrieval, solve_native, solve_packed, solve_packed_native,
+    solve_with, solve_with_trace, wants_sparse, EngineSelect, PortfolioParams, DEFAULT_CHUNK,
+    MAX_WAVE_REPLICAS,
 };
 use crate::solver::problem::IsingProblem;
 use crate::solver::reductions::{coloring, max_cut, max_cut_sparse};
@@ -1071,6 +1078,192 @@ pub fn connection_scale(clients: usize, seed: u64, measure: Duration) -> Connect
     }
 }
 
+/// One accuracy-vs-load row of the associative bench: recall accuracy
+/// of 10%-corrupted probes on the native fabric after `stores` store
+/// operations hit a fresh space.
+#[derive(Debug, Clone)]
+pub struct AssocLoadPoint {
+    /// Patterns live when the probes ran (the LRU policy holds this at
+    /// capacity even as stores keep coming).
+    pub patterns: usize,
+    /// Store operations issued to reach this load (> `patterns` once
+    /// the capacity policy starts evicting).
+    pub stores: usize,
+    /// Corrupted probes driven (one per surviving pattern).
+    pub trials: usize,
+    pub matched: usize,
+    /// matched / trials — the paper-style retrieval-accuracy column.
+    pub accuracy: f64,
+}
+
+/// The online-learning associative-memory measurement: recalls served
+/// by delta-reprogramming a warm engine vs cold retrain+rebuild per
+/// recall, on one live memory space with real store/evict/forget
+/// history — bit-identical outcomes asserted before timing — plus a
+/// native accuracy-vs-load sweep past the capacity bound.
+#[derive(Debug, Clone)]
+pub struct AssociativePoint {
+    pub n: usize,
+    /// Pattern capacity of the measured space ([`capacity_for`]).
+    pub capacity: usize,
+    /// Headline fabric ("sharded": the rebuild path pays the shard
+    /// worker spawn/join on every recall, the warm path never does).
+    pub engine: &'static str,
+    pub shards: usize,
+    /// Recalls per timed pass (one exact-pattern probe per survivor).
+    pub recalls: usize,
+    pub delta_median_s: f64,
+    pub rebuild_median_s: f64,
+    /// Recalls/sec with the warm engine delta-reprogrammed per recall.
+    pub delta_recalls_per_sec: f64,
+    /// Recalls/sec retraining the master and building a fresh engine
+    /// per recall (the pre-tentpole serving shape).
+    pub rebuild_recalls_per_sec: f64,
+    /// delta rate / rebuild rate — the CI-gated reprogram win.
+    pub speedup: f64,
+    /// Accuracy vs load on the native fabric (1..=capacity+2 stores).
+    pub load: Vec<AssocLoadPoint>,
+}
+
+/// The native accuracy-vs-load sweep: for every store count in
+/// `1..=capacity + 2`, fill a fresh Hebbian space with random patterns
+/// and probe each survivor with a copy corrupted in 10% of its spins.
+fn assoc_accuracy_sweep(
+    n: usize,
+    capacity: usize,
+    max_periods: usize,
+    seed: u64,
+) -> Vec<AssocLoadPoint> {
+    let cfg = NetworkConfig::paper(n);
+    let period = cfg.period() as i32;
+    let flips = (n / 10).max(1);
+    let mut rows = Vec::with_capacity(capacity + 2);
+    for stores in 1..=capacity + 2 {
+        let mut rng = Rng::new(seed.wrapping_add(stores as u64));
+        let mut ms = MemorySpace::new(n, capacity, LearningRule::Hebbian);
+        for _ in 0..stores {
+            let p: Vec<i8> = (0..n).map(|_| rng.spin()).collect();
+            ms.store(p).expect("sweep store");
+        }
+        let survivors = ms.stored_patterns();
+        let mut engine = build_engine_cfg(cfg, 1, DEFAULT_CHUNK, EngineSelect::Native)
+            .expect("sweep engine");
+        engine.set_weights(&ms.weights().to_f32()).expect("sweep program");
+        let mut matched = 0usize;
+        for p in &survivors {
+            let mut corrupted = p.clone();
+            for i in rng.choose_distinct(n, flips) {
+                corrupted[i] = -corrupted[i];
+            }
+            let init: Vec<i32> =
+                corrupted.iter().map(|&s| spin_to_phase(s, period)).collect();
+            let (phases, _) =
+                drive_retrieval(engine.as_mut(), &init, max_periods).expect("sweep recall");
+            if spins_match_up_to_inversion(&state_to_spins(&phases, period), p) {
+                matched += 1;
+            }
+        }
+        let trials = survivors.len();
+        rows.push(AssocLoadPoint {
+            patterns: trials,
+            stores,
+            trials,
+            matched,
+            accuracy: matched as f64 / trials.max(1) as f64,
+        });
+    }
+    rows
+}
+
+/// Rate delta-reprogrammed warm-engine recalls against cold
+/// retrain+rebuild recalls on one live memory space
+/// (`solve-bench --associative`).  Gates asserted before any timing:
+/// the space's delta-maintained quantized matrix equals quantizing
+/// `hebbian(survivors)` cold, and every warm recall settles to exactly
+/// the spins the rebuilt path settles to.  The headline runs on the
+/// sharded fabric, where a rebuild per recall also pays the shard
+/// worker spawn/join the warm path amortizes away.
+pub fn associative_throughput(periods: usize, seed: u64) -> AssociativePoint {
+    let n = 32usize;
+    let shards = 2usize;
+    let select = EngineSelect::Sharded { shards };
+    let cfg = NetworkConfig::paper(n);
+    let max_periods = periods.clamp(8, 64);
+    let capacity = capacity_for(n);
+    let mut rng = Rng::new(seed);
+    let mut ms = MemorySpace::new(n, capacity, LearningRule::Hebbian);
+    // A real online history: one store past capacity (the LRU policy
+    // evicts) and one explicit forget, so the timed master is a
+    // survivor set, not a pristine batch.
+    for _ in 0..capacity + 1 {
+        let p: Vec<i8> = (0..n).map(|_| rng.spin()).collect();
+        ms.store(p).expect("bench store");
+    }
+    let first = ms.stored_patterns()[0].clone();
+    ms.forget(&first).expect("bench forget");
+    let survivors = ms.stored_patterns();
+    assert!(!survivors.is_empty());
+    // Gate 1: the tentpole identity on this exact workload.
+    let cold = WeightMatrix::quantize(&hebbian(&survivors), n, &cfg);
+    assert_eq!(
+        ms.weights(),
+        &cold,
+        "delta-maintained quantized matrix diverged from cold retrain"
+    );
+    let weights_f32 = ms.weights().to_f32();
+    let period = cfg.period() as i32;
+    let probes: Vec<Vec<i32>> = survivors
+        .iter()
+        .map(|p| p.iter().map(|&s| spin_to_phase(s, period)).collect())
+        .collect();
+    // Gate 2: warm reprogrammed recalls == cold rebuilt recalls, spin
+    // for spin, on the headline fabric.
+    let mut warm = build_engine_cfg(cfg, 1, DEFAULT_CHUNK, select).expect("warm engine");
+    for probe in &probes {
+        warm.set_weights(&weights_f32).expect("warm reprogram");
+        let (wp, _) =
+            drive_retrieval(warm.as_mut(), probe, max_periods).expect("warm settle");
+        let rebuilt = WeightMatrix::quantize(&hebbian(&survivors), n, &cfg);
+        let mut fresh = build_engine_cfg(cfg, 1, DEFAULT_CHUNK, select).expect("cold engine");
+        fresh.set_weights(&rebuilt.to_f32()).expect("cold program");
+        let (cp, _) =
+            drive_retrieval(fresh.as_mut(), probe, max_periods).expect("cold settle");
+        assert_eq!(wp, cp, "warm delta recall diverged from cold rebuild recall");
+    }
+    let recalls = probes.len();
+    let rd = bench::bench(&format!("solver/assoc_delta_n{n}"), 1, 3, || {
+        for probe in &probes {
+            warm.set_weights(&weights_f32).expect("delta reprogram");
+            drive_retrieval(warm.as_mut(), probe, max_periods).expect("delta recall");
+        }
+    });
+    let rr = bench::bench(&format!("solver/assoc_rebuild_n{n}"), 1, 3, || {
+        for probe in &probes {
+            let rebuilt = WeightMatrix::quantize(&hebbian(&survivors), n, &cfg);
+            let mut engine =
+                build_engine_cfg(cfg, 1, DEFAULT_CHUNK, select).expect("rebuild engine");
+            engine.set_weights(&rebuilt.to_f32()).expect("rebuild program");
+            drive_retrieval(engine.as_mut(), probe, max_periods).expect("rebuild recall");
+        }
+    });
+    let (delta_median_s, rebuild_median_s) = (rd.median.as_secs_f64(), rr.median.as_secs_f64());
+    let delta_rps = recalls as f64 / delta_median_s.max(1e-12);
+    let rebuild_rps = recalls as f64 / rebuild_median_s.max(1e-12);
+    AssociativePoint {
+        n,
+        capacity,
+        engine: "sharded",
+        shards,
+        recalls,
+        delta_median_s,
+        rebuild_median_s,
+        delta_recalls_per_sec: delta_rps,
+        rebuild_recalls_per_sec: rebuild_rps,
+        speedup: if rebuild_rps > 0.0 { delta_rps / rebuild_rps } else { 0.0 },
+        load: assoc_accuracy_sweep(n, capacity, max_periods, seed.wrapping_add(77)),
+    }
+}
+
 /// Everything one `record_throughput` run measured — the in-memory
 /// mirror of the `BENCH_solver.json` document it writes.
 #[derive(Debug, Clone, Default)]
@@ -1084,6 +1277,40 @@ pub struct SolverBench {
     pub convergence: Vec<ConvergencePoint>,
     pub connection_scale: Vec<ConnectionScalePoint>,
     pub sparse: Vec<SparsePoint>,
+    pub associative: Vec<AssociativePoint>,
+}
+
+/// One `"associative"` row of the bench document.
+fn assoc_row_json(p: &AssociativePoint) -> Json {
+    let load = p
+        .load
+        .iter()
+        .map(|l| {
+            Json::obj(vec![
+                ("patterns", Json::num(l.patterns as f64)),
+                ("stores", Json::num(l.stores as f64)),
+                ("trials", Json::num(l.trials as f64)),
+                ("matched", Json::num(l.matched as f64)),
+                ("accuracy", Json::num(l.accuracy)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("n", Json::num(p.n as f64)),
+        ("capacity", Json::num(p.capacity as f64)),
+        ("engine", Json::str(p.engine)),
+        ("shards", Json::num(p.shards as f64)),
+        ("recalls", Json::num(p.recalls as f64)),
+        ("delta_median_s", Json::num(p.delta_median_s)),
+        ("rebuild_median_s", Json::num(p.rebuild_median_s)),
+        ("delta_recalls_per_sec", Json::num(p.delta_recalls_per_sec)),
+        (
+            "rebuild_recalls_per_sec",
+            Json::num(p.rebuild_recalls_per_sec),
+        ),
+        ("speedup", Json::num(p.speedup)),
+        ("load", Json::Arr(load)),
+    ])
 }
 
 /// Serialize a throughput sweep as the `BENCH_solver.json` document.
@@ -1095,8 +1322,10 @@ pub struct SolverBench {
 /// rows under `"rtl_cluster"`, latency percentiles
 /// per fabric under `"latency"`, per-chunk best-energy trajectories
 /// under `"convergence"`, dense-vs-CSR fabric rows under `"sparse"`,
-/// and connection-scale serving rows (evented front end vs
-/// thread-per-connection baseline) under `"connection_scale"`.
+/// connection-scale serving rows (evented front end vs
+/// thread-per-connection baseline) under `"connection_scale"`, and the
+/// online-learning associative row (delta-reprogram vs full-rebuild
+/// recalls/sec + accuracy vs load) under `"associative"`.
 pub fn bench_json(bench: &SolverBench, recorded_unix_s: u64) -> Json {
     let points = &bench.points;
     let packed = &bench.packed;
@@ -1349,6 +1578,10 @@ pub fn bench_json(bench: &SolverBench, recorded_unix_s: u64) -> Json {
                     .collect(),
             ),
         ),
+        (
+            "associative",
+            Json::Arr(bench.associative.iter().map(assoc_row_json).collect()),
+        ),
     ])
 }
 
@@ -1371,7 +1604,10 @@ pub fn bench_json(bench: &SolverBench, recorded_unix_s: u64) -> Json {
 /// evented front end vs thread-per-connection baseline), plus — when
 /// `sparse` — the dense-vs-CSR fabric rows (fixed density 0.05 at the
 /// sizes the scaling argument bites, and a constant-degree G(n, 4/n)
-/// sweep).  Every run
+/// sweep), plus — when `associative` — the online-learning associative
+/// row (delta-reprogrammed warm recalls vs cold retrain+rebuild,
+/// bit-identity asserted, with a native accuracy-vs-load sweep).
+/// Every run
 /// also records latency percentiles per engine fabric (repeated solves
 /// of the smallest size through a log-bucketed histogram) and one
 /// traced convergence trajectory per size.
@@ -1389,6 +1625,7 @@ pub fn record_throughput(
     rtl_cluster: bool,
     connections: usize,
     sparse: bool,
+    associative: bool,
 ) -> std::io::Result<SolverBench> {
     // Repeated solves per fabric for the percentile rows: enough to
     // make p90 land off the extremes, few enough to stay cheap.
@@ -1449,6 +1686,11 @@ pub fn record_throughput(
     } else {
         Vec::new()
     };
+    let associative_points = if associative {
+        vec![associative_throughput(periods, seed)]
+    } else {
+        Vec::new()
+    };
     let bench = SolverBench {
         points,
         packed,
@@ -1459,6 +1701,7 @@ pub fn record_throughput(
         convergence,
         connection_scale: connection_points,
         sparse: sparse_points,
+        associative: associative_points,
     };
     let stamp = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
@@ -1468,7 +1711,8 @@ pub fn record_throughput(
     std::fs::write(path, format!("{doc}\n"))?;
     eprintln!(
         "wrote {} ({} rows + {} packed + {} rtl + {} rtl-packed + {} rtl-cluster \
-         + {} latency + {} convergence + {} connection-scale + {} sparse in {:.1}s)",
+         + {} latency + {} convergence + {} connection-scale + {} sparse \
+         + {} associative in {:.1}s)",
         path.display(),
         bench.points.len(),
         bench.packed.len(),
@@ -1479,6 +1723,7 @@ pub fn record_throughput(
         bench.convergence.len(),
         bench.connection_scale.len(),
         bench.sparse.len(),
+        bench.associative.len(),
         t0.elapsed().as_secs_f64()
     );
     Ok(bench)
@@ -1652,6 +1897,25 @@ mod tests {
                 hw_dense_khz: 6.0,
                 hw_sparse_khz: 98.0,
             }],
+            associative: vec![AssociativePoint {
+                n: 32,
+                capacity: 4,
+                engine: "sharded",
+                shards: 2,
+                recalls: 4,
+                delta_median_s: 0.01,
+                rebuild_median_s: 0.05,
+                delta_recalls_per_sec: 400.0,
+                rebuild_recalls_per_sec: 80.0,
+                speedup: 5.0,
+                load: vec![AssocLoadPoint {
+                    patterns: 4,
+                    stores: 6,
+                    trials: 4,
+                    matched: 3,
+                    accuracy: 0.75,
+                }],
+            }],
         };
         let doc = bench_json(&bench, 123);
         let parsed = Json::parse(&doc.to_string()).unwrap();
@@ -1710,6 +1974,20 @@ mod tests {
         assert_eq!(srow.get("clients").and_then(Json::as_usize), Some(64));
         assert_eq!(srow.get("speedup").and_then(Json::as_f64), Some(2.5));
         assert_eq!(srow.get("arena_hit_rate").and_then(Json::as_f64), Some(0.9));
+        let arow = &parsed.get("associative").and_then(Json::as_arr).unwrap()[0];
+        assert_eq!(arow.get("engine").and_then(Json::as_str), Some("sharded"));
+        assert_eq!(arow.get("capacity").and_then(Json::as_usize), Some(4));
+        assert_eq!(
+            arow.get("delta_recalls_per_sec").and_then(Json::as_f64),
+            Some(400.0)
+        );
+        assert_eq!(
+            arow.get("rebuild_recalls_per_sec").and_then(Json::as_f64),
+            Some(80.0)
+        );
+        let aload = &arow.get("load").and_then(Json::as_arr).unwrap()[0];
+        assert_eq!(aload.get("stores").and_then(Json::as_usize), Some(6));
+        assert_eq!(aload.get("accuracy").and_then(Json::as_f64), Some(0.75));
         let sprow = &parsed.get("sparse").and_then(Json::as_arr).unwrap()[0];
         assert_eq!(sprow.get("n").and_then(Json::as_usize), Some(512));
         assert_eq!(sprow.get("avg_row_nnz").and_then(Json::as_f64), Some(25.6));
@@ -1742,6 +2020,9 @@ mod tests {
             "\"sync_fast_cycles\"",
             "\"compute_fast_cycles\"",
             "\"single_device_fit\"",
+            "\"associative\"",
+            "\"delta_recalls_per_sec\"",
+            "\"rebuild_recalls_per_sec\"",
         ] {
             assert!(doc.to_string().contains(key), "the CI gate greps for {key}");
         }
@@ -1879,6 +2160,33 @@ mod tests {
         assert_eq!(p.fast_cycles, p.compute_fast_cycles + p.sync_fast_cycles);
         assert!(p.emulated_s > 0.0 && p.f_logic_mhz > 0.0);
         assert!(p.periods > 0 && p.periods <= 8);
+    }
+
+    #[test]
+    fn associative_row_gates_bit_identity() {
+        // The gates live *inside* the bench fn (delta-maintained
+        // quantized matrix == cold retrain, warm recall spins ==
+        // rebuilt recall spins); this run exercises them at a tiny
+        // settle budget and checks the row + its load sweep.
+        let p = associative_throughput(8, 21);
+        assert_eq!(p.n, 32);
+        assert_eq!(p.engine, "sharded");
+        assert_eq!(p.shards, 2);
+        assert!(p.recalls > 0 && p.recalls <= p.capacity);
+        assert!(p.delta_recalls_per_sec > 0.0);
+        assert!(p.rebuild_recalls_per_sec > 0.0);
+        assert!(p.speedup > 0.0);
+        assert_eq!(p.load.len(), p.capacity + 2);
+        for l in &p.load {
+            assert!(l.patterns <= p.capacity, "eviction caps the load");
+            assert_eq!(l.trials, l.patterns);
+            assert!(l.matched <= l.trials);
+            assert!((0.0..=1.0).contains(&l.accuracy));
+        }
+        // Past-capacity rows kept storing but the space stayed full.
+        let last = p.load.last().unwrap();
+        assert_eq!(last.stores, p.capacity + 2);
+        assert_eq!(last.patterns, p.capacity);
     }
 
     #[test]

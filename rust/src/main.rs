@@ -60,7 +60,7 @@ Solver (generic Ising/QUBO subsystem, see DESIGN_SOLVER.md):
   solve-bench [--sizes 16,32,64,128] [--replicas 32] [--periods 128]
         [--instances 5] [--shards K] [--packed [N]] [--rtl]
         [--rtl-packed] [--rtl-cluster] [--connections [N]] [--sparse]
-        [--out BENCH_solver.json]
+        [--associative] [--out BENCH_solver.json]
                           quality vs SA + native (and, with --shards,
                           sharded) throughput rows; --packed adds an
                           N-instance (default 6) small-mix row comparing
@@ -83,7 +83,12 @@ Solver (generic Ising/QUBO subsystem, see DESIGN_SOLVER.md):
                           dense-vs-CSR fabric rows (bit-exact work,
                           fixed density 0.05 plus a G(n, 4/n) sweep:
                           replica-periods/sec, weight memory, modeled
-                          hardware oscillation); every run also records
+                          hardware oscillation); --associative adds the
+                          online-learning associative-memory row
+                          (delta-reprogrammed warm recalls vs cold
+                          retrain+rebuild recalls/sec, bit-identity
+                          asserted in-harness, plus recall accuracy vs
+                          stored load); every run also records
                           latency percentiles and a convergence trace
                           per size
   solve-report [--path BENCH_solver.json]
@@ -102,6 +107,11 @@ Service / validation:
                           cancellation, DESIGN_SOLVER.md §10);
                           --threads keeps thread-per-connection
   crosscheck [--dataset 3x3] [--trials 16]   pjrt vs native bit-exactness
+  assoc-smoke [--periods 64]
+                          store -> recall -> forget -> recall smoke over
+                          one evented TCP connection (asserts each wire
+                          reply plus the metrics counters; the
+                          associative CI gate)
   info                                        artifact + platform info
 ";
 
@@ -169,6 +179,7 @@ fn run() -> Result<()> {
         "ablation" => cmd_ablation(&mut args),
         "capacity" => cmd_capacity(&mut args),
         "shard-demo" => cmd_shard_demo(&mut args),
+        "assoc-smoke" => cmd_assoc_smoke(&mut args),
         "info" => cmd_info(),
         other => Err(anyhow!("unknown command '{other}'\n{USAGE}")),
     }
@@ -534,6 +545,7 @@ fn cmd_solve_bench(args: &mut Args) -> Result<()> {
         0
     };
     let sparse = args.has("sparse");
+    let associative = args.has("associative");
     let out_path = args.get_str("out", "BENCH_solver.json");
     let seed = args.get_u64("seed", 2025)?;
     args.finish().map_err(|e| anyhow!(e))?;
@@ -559,6 +571,7 @@ fn cmd_solve_bench(args: &mut Args) -> Result<()> {
         rtl_cluster,
         connections,
         sparse,
+        associative,
     )?;
     println!("solver throughput (native vs sharded replica-periods/sec):");
     for p in &bench.points {
@@ -682,6 +695,29 @@ fn cmd_solve_bench(args: &mut Args) -> Result<()> {
             );
         }
     }
+    for p in &bench.associative {
+        println!(
+            "associative memory (n={}, capacity {}, {} recalls on the {} \
+             engine, {} shards):",
+            p.n, p.capacity, p.recalls, p.engine, p.shards
+        );
+        println!(
+            "  delta-reprogram {:>9.1} recalls/s (median {:.4} s)",
+            p.delta_recalls_per_sec, p.delta_median_s
+        );
+        println!(
+            "  full rebuild    {:>9.1} recalls/s (median {:.4} s)   \
+             speedup {:.2}x",
+            p.rebuild_recalls_per_sec, p.rebuild_median_s, p.speedup
+        );
+        for l in &p.load {
+            println!(
+                "    stored {:>3} after {:>3} stores: recall accuracy \
+                 {:>5.2} ({}/{} corrupted probes)",
+                l.patterns, l.stores, l.accuracy, l.matched, l.trials
+            );
+        }
+    }
     println!("convergence traces (running best energy per anneal chunk):");
     for c in &bench.convergence {
         let first = c.best_energy.first().copied().unwrap_or(0.0);
@@ -754,6 +790,117 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
     } else {
         serve_evented(Arc::clone(&coord.router), listener)
     }
+}
+
+/// Live store -> recall -> forget -> recall smoke through the evented
+/// front end on an ephemeral port, asserting every wire reply plus the
+/// metrics counters (the `assoc-smoke` gate run by `scripts/ci.sh`).
+fn cmd_assoc_smoke(args: &mut Args) -> Result<()> {
+    use std::io::{BufRead, BufReader, Write};
+
+    use onn_scale::coordinator::server::SolverPoolConfig;
+
+    let periods = args.get_usize("periods", 64)?;
+    args.finish().map_err(|e| anyhow!(e))?;
+
+    let coord = Coordinator::start_with_solver(
+        Vec::new(),
+        BatchPolicy::default(),
+        SolverPoolConfig::default(),
+    )?;
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let router = Arc::clone(&coord.router);
+    let serve = std::thread::spawn(move || serve_evented(router, listener));
+
+    // The paper's 3x3 glyph pair.  Under the DO-I rule the stored
+    // glyphs are fixed points of the quantized matrix (pinned by the
+    // learning tests), so recalling an exact stored probe must settle
+    // and match deterministically.
+    let ds = onn_scale::onn::patterns::dataset_3x3();
+    let spin_json = |spins: &[i8]| {
+        let cells: Vec<String> = spins.iter().map(|s| s.to_string()).collect();
+        format!("[{}]", cells.join(","))
+    };
+    let a = spin_json(&ds.patterns[0].spins);
+    let b = spin_json(&ds.patterns[1].spins);
+
+    let stream = std::net::TcpStream::connect(addr)?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    let mut roundtrip = |req: String| -> Result<String> {
+        writer.write_all(req.as_bytes())?;
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Err(anyhow!("server closed the connection"));
+        }
+        Ok(line.trim_end().to_string())
+    };
+    let expect = |step: &str, reply: &str, needles: &[&str]| -> Result<()> {
+        for needle in needles {
+            if !reply.contains(needle) {
+                return Err(anyhow!("{step}: expected {needle} in reply {reply}"));
+            }
+        }
+        Ok(())
+    };
+
+    let r = roundtrip(format!(
+        "{{\"type\":\"store\",\"id\":1,\"space\":\"smoke\",\"spins\":{a},\
+         \"rule\":\"doi\"}}\n"
+    ))?;
+    expect(
+        "store A",
+        &r,
+        &["\"type\":\"stored\"", "\"patterns\":1", "\"duplicate\":false"],
+    )?;
+    println!("  store A   -> {r}");
+    let r = roundtrip(format!(
+        "{{\"type\":\"store\",\"id\":2,\"space\":\"smoke\",\"spins\":{b},\
+         \"rule\":\"doi\"}}\n"
+    ))?;
+    expect("store B", &r, &["\"type\":\"stored\"", "\"patterns\":2"])?;
+    println!("  store B   -> {r}");
+    let r = roundtrip(format!(
+        "{{\"type\":\"recall\",\"id\":3,\"space\":\"smoke\",\"spins\":{a},\
+         \"max_periods\":{periods}}}\n"
+    ))?;
+    expect("recall A", &r, &["\"type\":\"recall\"", "\"matched\":true"])?;
+    println!("  recall A  -> {r}");
+    let r = roundtrip(format!(
+        "{{\"type\":\"forget\",\"id\":4,\"space\":\"smoke\",\"spins\":{a}}}\n"
+    ))?;
+    expect("forget A", &r, &["\"type\":\"forgotten\"", "\"patterns\":1"])?;
+    println!("  forget A  -> {r}");
+    let r = roundtrip(format!(
+        "{{\"type\":\"recall\",\"id\":5,\"space\":\"smoke\",\"spins\":{b},\
+         \"max_periods\":{periods}}}\n"
+    ))?;
+    expect("recall B", &r, &["\"type\":\"recall\"", "\"matched\":true"])?;
+    println!("  recall B  -> {r}");
+    let r = roundtrip("{\"type\":\"metrics\"}\n".to_string())?;
+    expect(
+        "metrics",
+        &r,
+        &[
+            "\"patterns_stored\":2",
+            "\"patterns_forgotten\":1",
+            "\"recalls\":2",
+            "\"recalls_matched\":2",
+        ],
+    )?;
+    println!("  metrics   -> stored 2, forgotten 1, recalls 2/2 matched");
+
+    coord.shutdown()?;
+    serve
+        .join()
+        .map_err(|_| anyhow!("serve thread panicked"))??;
+    println!(
+        "assoc smoke OK: store x2 -> recall (matched) -> forget -> recall \
+         (matched) -> metrics over one evented connection"
+    );
+    Ok(())
 }
 
 /// Cross-validate the PJRT artifact against the bit-exact native engine.

@@ -15,20 +15,60 @@ use crate::onn::weights::WeightMatrix;
 /// diagonal is left at zero: the architectures *support* self-coupling
 /// (the N x N memory stores W_ii), but associative-memory training keeps
 /// it zero — a non-zero diagonal merely freezes corrupted pixels.
+///
+/// An empty pattern slice is a valid (empty) memory and yields an empty
+/// matrix — the wire-reachable `store`/`forget` path can drain a memory
+/// space to zero patterns, which used to panic on `patterns[0]`.
+///
+/// Internally the sum is accumulated as exact integer co-occurrence
+/// counts and divided by N once at the end ([`hebbian_counts`] /
+/// [`counts_to_master`]).  Integer adds commute and invert exactly, so
+/// the coordinator's *incremental* master (counts mutated by
+/// `accumulate_outer` on every store/forget) is bit-identical to
+/// retraining from the surviving pattern set — the associative-memory
+/// delta-reprogram contract (DESIGN_SOLVER.md §13).
 pub fn hebbian(patterns: &[Vec<i8>]) -> Vec<f32> {
-    let n = patterns[0].len();
-    assert!(patterns.iter().all(|p| p.len() == n));
-    let mut w = vec![0f32; n * n];
+    let n = patterns.first().map_or(0, Vec::len);
+    counts_to_master(&hebbian_counts(patterns), n)
+}
+
+/// Exact integer Hebbian co-occurrence counts: `C_ij = sum_mu xi_i xi_j`
+/// for `i != j`, diagonal zero.  Each ±1 pattern contributes ±1 per
+/// off-diagonal pair, so counts are order-independent and a pattern's
+/// contribution is removed exactly by [`accumulate_outer`] with sign -1.
+pub fn hebbian_counts(patterns: &[Vec<i8>]) -> Vec<i32> {
+    let n = patterns.first().map_or(0, Vec::len);
+    assert!(patterns.iter().all(|p| p.len() == n), "ragged patterns");
+    let mut counts = vec![0i32; n * n];
     for p in patterns {
-        for i in 0..n {
-            for j in 0..n {
-                if i != j {
-                    w[i * n + j] += (p[i] as f32) * (p[j] as f32) / n as f32;
-                }
+        accumulate_outer(&mut counts, p, 1);
+    }
+    counts
+}
+
+/// Add (`sign` = 1) or exactly remove (`sign` = -1) one ±1 pattern's
+/// outer product from an integer count matrix, diagonal untouched.
+pub fn accumulate_outer(counts: &mut [i32], pattern: &[i8], sign: i32) {
+    let n = pattern.len();
+    assert_eq!(counts.len(), n * n, "counts/pattern size mismatch");
+    for i in 0..n {
+        for j in 0..n {
+            if i != j {
+                counts[i * n + j] += sign * pattern[i] as i32 * pattern[j] as i32;
             }
         }
     }
-    w
+}
+
+/// The float master matrix of an integer count matrix: one `C_ij / N`
+/// divide per entry (a single rounding, so equal counts always produce
+/// bit-equal masters regardless of the store/forget history).
+pub fn counts_to_master(counts: &[i32], n: usize) -> Vec<f32> {
+    assert_eq!(counts.len(), n * n, "counts are not n x n");
+    if n == 0 {
+        return Vec::new();
+    }
+    counts.iter().map(|&c| c as f32 / n as f32).collect()
 }
 
 /// Result of Diederich-Opper-I training.
@@ -53,8 +93,17 @@ pub fn diederich_opper_i(
     margin: f32,
     max_epochs: usize,
 ) -> DoiResult {
-    let n = patterns[0].len();
+    let n = patterns.first().map_or(0, Vec::len);
     assert!(patterns.iter().all(|p| p.len() == n), "ragged patterns");
+    if patterns.is_empty() {
+        // An empty memory is trivially converged (no margins to hold) —
+        // reachable over the wire once `forget` drains a space.
+        return DoiResult {
+            weights: Vec::new(),
+            epochs: 0,
+            converged: true,
+        };
+    }
     let mut w = vec![0f32; n * n];
     let inv_n = 1.0 / n as f32;
 
@@ -131,6 +180,44 @@ mod tests {
                 assert!((w[i * 3 + j] - want).abs() < 1e-6);
             }
         }
+    }
+
+    #[test]
+    fn empty_pattern_slice_does_not_panic() {
+        // Both rules used to index patterns[0]; a drained memory space
+        // hits this path over the wire.
+        assert!(hebbian(&[]).is_empty());
+        assert!(hebbian_counts(&[]).is_empty());
+        let res = diederich_opper_i(&[], 0.5, 100);
+        assert!(res.weights.is_empty());
+        assert!(res.converged);
+        assert_eq!(res.epochs, 0);
+    }
+
+    #[test]
+    fn incremental_counts_bit_identical_to_retrain() {
+        // The store/forget contract: mutating counts with accumulate_outer
+        // and dividing once matches hebbian() over the survivors bit for
+        // bit, for any interleaving.
+        let mut rng = Rng::new(42);
+        let pats = random_patterns(&mut rng, 5, 12);
+        let n = 12;
+        let mut counts = vec![0i32; n * n];
+        for p in &pats {
+            accumulate_outer(&mut counts, p, 1);
+        }
+        accumulate_outer(&mut counts, &pats[1], -1);
+        accumulate_outer(&mut counts, &pats[3], -1);
+        let survivors = vec![pats[0].clone(), pats[2].clone(), pats[4].clone()];
+        let retrained = hebbian(&survivors);
+        let incremental = counts_to_master(&counts, n);
+        assert!(
+            incremental
+                .iter()
+                .zip(&retrained)
+                .all(|(a, b)| a.to_bits() == b.to_bits()),
+            "incremental master diverged from retrain"
+        );
     }
 
     #[test]

@@ -114,6 +114,18 @@ impl Pattern {
     }
 }
 
+/// [`Pattern::matches_up_to_inversion`] for raw spin slices: exact
+/// equality up to the global Z2 inversion of the Ising energy.  The
+/// associative-memory path compares settled recall states (and detects
+/// duplicate stores — an inverted pattern's outer product is identical,
+/// so it must count as the same memory) without wrapping slices in
+/// [`Pattern`]s.
+pub fn spins_match_up_to_inversion(a: &[i8], b: &[i8]) -> bool {
+    a.len() == b.len()
+        && !a.is_empty()
+        && (a.iter().zip(b).all(|(&x, &y)| x == y) || a.iter().zip(b).all(|(&x, &y)| x == -y))
+}
+
 /// A benchmark dataset: all patterns share one grid size.
 #[derive(Debug, Clone)]
 pub struct Dataset {
@@ -337,5 +349,16 @@ mod tests {
         assert!(p.matches_up_to_inversion(&inv));
         let near = vec![1i8, 1, -1, 1];
         assert!(!p.matches_up_to_inversion(&near));
+    }
+
+    #[test]
+    fn spins_match_helper_agrees_with_pattern_method() {
+        let p = Pattern::from_art("t", &["##", ".."]);
+        let inv: Vec<i8> = p.spins.iter().map(|&x| -x).collect();
+        assert!(spins_match_up_to_inversion(&p.spins, &p.spins));
+        assert!(spins_match_up_to_inversion(&p.spins, &inv));
+        assert!(!spins_match_up_to_inversion(&p.spins, &[1, 1, -1, 1]));
+        assert!(!spins_match_up_to_inversion(&p.spins, &[1, 1, -1]), "length mismatch");
+        assert!(!spins_match_up_to_inversion(&[], &[]), "empty never matches");
     }
 }

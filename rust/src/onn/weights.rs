@@ -93,6 +93,31 @@ impl WeightMatrix {
         (Self { n, w }, rms)
     }
 
+    /// Reprogram this matrix in place from an updated float master,
+    /// returning `(changed_entries, rms_error)`.
+    ///
+    /// The symmetric quantization scale is *global* (`hi / max|master|`),
+    /// so a single store/forget can legally move every entry — per-entry
+    /// incremental deltas are unsound whenever `max|master|` shifts.  The
+    /// delta path therefore requantizes from the full master and reports
+    /// which entries actually changed: `changed_entries` is the exact
+    /// write set a hardware weight-memory reprogram would issue (and what
+    /// the associative metrics surface as `delta_entries`), while the
+    /// resulting matrix is bit-identical to `quantize(master)` by
+    /// construction — the delta-vs-cold-rebuild identity the property
+    /// tests pin down.
+    pub fn apply_delta(&mut self, master: &[f32], cfg: &NetworkConfig) -> (usize, f64) {
+        let (fresh, rms) = Self::quantize_with_error(master, self.n, cfg);
+        let changed = self
+            .w
+            .iter()
+            .zip(&fresh.w)
+            .filter(|(old, new)| old != new)
+            .count();
+        self.w = fresh.w;
+        (changed, rms)
+    }
+
     /// True when W[i][j] == W[j][i] for all pairs.
     pub fn is_symmetric(&self) -> bool {
         for i in 0..self.n {
@@ -166,6 +191,23 @@ mod tests {
         assert!(w.as_slice().iter().all(|&x| (-4..=3).contains(&(x as i32))));
         assert_eq!(w.get(0, 0), 3);
         assert_eq!(w.get(0, 1), -3);
+    }
+
+    #[test]
+    fn apply_delta_matches_cold_quantize_and_counts_writes() {
+        let c = cfg(2);
+        let mut w = WeightMatrix::quantize(&[0.0, 1.0, -1.0, 0.5], 2, &c);
+        // New master rescales everything: the global scale halves, so the
+        // delta write set covers every nonzero entry.
+        let master = vec![0.0, 2.0, -1.0, 0.5];
+        let (changed, rms) = w.apply_delta(&master, &c);
+        let (cold, cold_rms) = WeightMatrix::quantize_with_error(&master, 2, &c);
+        assert_eq!(w, cold, "delta reprogram != cold quantize");
+        assert_eq!(rms, cold_rms);
+        assert_eq!(changed, 2); // -15 -> -8 and 8 -> 4; the new max stays 15
+        // Reapplying the same master is a zero-entry write.
+        let (again, _) = w.apply_delta(&master, &c);
+        assert_eq!(again, 0);
     }
 
     #[test]

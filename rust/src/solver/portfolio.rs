@@ -171,6 +171,55 @@ pub fn build_engine_cfg(
     }
 }
 
+/// Drive one deterministic retrieval trial on any engine fabric: fill
+/// every batch lane with `init_phases`, declare a one-trial wave (the
+/// rtl engine's hidden per-lane register state needs the explicit
+/// [`ChunkEngine::begin_wave`] — value-sniffing cannot see a warm
+/// lane), and run chunks until lane 0 settles, goes hopeless (phases
+/// unchanged across a full chunk without settling: a limit cycle whose
+/// length divides the chunk), or the period budget runs out.
+///
+/// Returns lane 0's final phases and its settle period (`None` on
+/// timeout).  No noise is installed and none survives from a previous
+/// tenant on the serving path (the associative worker never installs
+/// any), so the trajectory is a pure function of (weights, init) — the
+/// warm-engine recall is bit-identical to a cold build, on every
+/// fabric.  The associative-memory recall path
+/// (`coordinator/assoc.rs`) and its bit-identity property tests both
+/// drive retrievals through this one helper.
+pub fn drive_retrieval(
+    engine: &mut dyn ChunkEngine,
+    init_phases: &[i32],
+    max_periods: usize,
+) -> Result<(Vec<i32>, Option<usize>)> {
+    let n = engine.n();
+    if init_phases.len() != n {
+        return Err(anyhow!(
+            "retrieval init has {} phases, engine wants {n}",
+            init_phases.len()
+        ));
+    }
+    let batch = engine.batch();
+    let chunk = engine.chunk_len();
+    let mut phases = Vec::with_capacity(batch * n);
+    for _ in 0..batch {
+        phases.extend_from_slice(init_phases);
+    }
+    let mut settled = vec![-1i32; batch];
+    engine.begin_wave(1)?;
+    let mut period = 0usize;
+    while period < max_periods && settled[0] < 0 {
+        let before = phases[..n].to_vec();
+        engine.run_chunk(&mut phases, &mut settled, period as i32)?;
+        period += chunk;
+        if settled[0] < 0 && phases[..n] == before[..] {
+            break; // limit cycle: it can never settle, stop burning periods
+        }
+    }
+    let settle = (settled[0] >= 0).then_some(settled[0] as usize);
+    Ok((phases[..n].to_vec(), settle))
+}
+
 /// Portfolio solve parameters.
 #[derive(Debug, Clone, Copy)]
 pub struct PortfolioParams {

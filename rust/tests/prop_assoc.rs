@@ -1,0 +1,299 @@
+//! Property tests for the online-learning associative memory: after any
+//! store/forget sequence the delta-maintained quantized matrix must be
+//! bit-identical to a cold retrain+quantize over the surviving pattern
+//! set, and a recall served by a delta-reprogrammed *warm* arena engine
+//! must return the exact spins a freshly built engine produces — on the
+//! native, row-sharded, and bit-true rtl fabrics, across arena
+//! hit/miss/evict interleavings.  Also pins the retrieval-path fixes
+//! that ride along: empty-pattern-set learning no longer panics,
+//! duplicate stores (exact or inverted) are idempotent, and LRU
+//! eviction respects recency refreshes.
+
+use onn_scale::coordinator::arena::{ArenaKey, EngineArena};
+use onn_scale::coordinator::assoc::{AssocRegistry, LearningRule, MemorySpace};
+use onn_scale::coordinator::metrics::Metrics;
+use onn_scale::onn::config::NetworkConfig;
+use onn_scale::onn::learning::{diederich_opper_i, hebbian, hebbian_counts};
+use onn_scale::onn::patterns::spins_match_up_to_inversion;
+use onn_scale::onn::phase::spin_to_phase;
+use onn_scale::onn::weights::WeightMatrix;
+use onn_scale::runtime::ChunkEngine;
+use onn_scale::solver::portfolio::{
+    build_engine_cfg, drive_retrieval, EngineSelect, DEFAULT_CHUNK,
+};
+use onn_scale::util::rng::Rng;
+
+fn random_pattern(rng: &mut Rng, n: usize) -> Vec<i8> {
+    (0..n).map(|_| rng.spin()).collect()
+}
+
+/// Cold-retrain the float master from a surviving pattern set exactly as
+/// [`MemorySpace::master`] defines it, but from scratch — no shared
+/// state with the incremental path under test.
+fn cold_master(survivors: &[Vec<i8>], n: usize, rule: LearningRule) -> Vec<f32> {
+    if survivors.is_empty() {
+        return vec![0.0; n * n];
+    }
+    match rule {
+        LearningRule::Hebbian => hebbian(survivors),
+        LearningRule::Doi => diederich_opper_i(survivors, 0.5, 1000).weights,
+    }
+}
+
+#[test]
+fn prop_delta_quantized_bit_identical_to_cold_retrain() {
+    // Random store/forget sequences on both learning rules: after every
+    // mutation the delta-maintained quantized matrix equals quantizing
+    // the cold-retrained master, bit for bit.
+    let mut rng = Rng::new(4101);
+    for case in 0..12 {
+        let n = 8 + rng.usize_below(13); // 8..=20
+        let capacity = 2 + rng.usize_below(3); // 2..=4
+        let rule = if case % 2 == 0 {
+            LearningRule::Hebbian
+        } else {
+            LearningRule::Doi
+        };
+        let cfg = NetworkConfig::paper(n);
+        let mut ms = MemorySpace::new(n, capacity, rule);
+        for _ in 0..16 {
+            if ms.pattern_count() > 0 && rng.bool() && rng.bool() {
+                // Forget a currently stored pattern (sometimes via its
+                // inverse, which must resolve to the same entry).
+                let stored = ms.stored_patterns();
+                let mut victim = stored[rng.usize_below(stored.len())].clone();
+                if rng.bool() {
+                    for s in &mut victim {
+                        *s = -*s;
+                    }
+                }
+                ms.forget(&victim).unwrap();
+            } else {
+                ms.store(random_pattern(&mut rng, n)).unwrap();
+            }
+            let survivors = ms.stored_patterns();
+            let cold = WeightMatrix::quantize(&cold_master(&survivors, n, rule), n, &cfg);
+            assert_eq!(
+                ms.weights(),
+                &cold,
+                "case {case} ({rule:?}, n={n}): delta path diverged from cold rebuild"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_integer_counts_match_batch_hebbian_training() {
+    // The bit-identity argument rests on the integer count master:
+    // accumulating patterns one by one (in any order, with removals)
+    // must land on the exact counts of batch training over the
+    // survivors.
+    let mut rng = Rng::new(4102);
+    for _ in 0..10 {
+        let n = 5 + rng.usize_below(20);
+        let mut pats: Vec<Vec<i8>> = (0..6).map(|_| random_pattern(&mut rng, n)).collect();
+        let mut ms = MemorySpace::new(n, 6, LearningRule::Hebbian);
+        for p in &pats {
+            ms.store(p.clone()).unwrap();
+        }
+        let drop_idx = rng.usize_below(pats.len());
+        ms.forget(&pats[drop_idx]).unwrap();
+        pats.remove(drop_idx);
+        assert_eq!(ms.master(), hebbian(&pats), "incremental master != batch master");
+        let counts = hebbian_counts(&pats);
+        let from_counts: Vec<f32> = counts.iter().map(|&c| c as f32 / n as f32).collect();
+        assert_eq!(hebbian(&pats), from_counts, "hebbian != counts/N");
+    }
+}
+
+#[test]
+fn prop_warm_delta_recall_bit_identical_across_fabrics() {
+    // The tentpole serving contract: a warm arena engine reprogrammed
+    // via set_weights with the delta-maintained quantized matrix
+    // settles any probe to the exact spins of a freshly built engine
+    // loaded with the cold retrain+quantize matrix.  Exercised on all
+    // three fabrics through a miss -> hit -> evict -> miss -> hit arena
+    // interleaving (capacity-1 arena churned by a different-geometry
+    // checkout).
+    let selects = [
+        EngineSelect::Native,
+        EngineSelect::Sharded { shards: 2 },
+        EngineSelect::Rtl,
+    ];
+    for (fi, &select) in selects.iter().enumerate() {
+        let n = 12;
+        let cfg = NetworkConfig::paper(n);
+        let period = cfg.period() as i32;
+        let metrics = Metrics::default();
+        let mut arena = EngineArena::new(1);
+        let mut ms = MemorySpace::new(n, 3, LearningRule::Hebbian);
+        let mut rng = Rng::new(4200 + fi as u64);
+        let key = ArenaKey::for_recall(n, select);
+        let mut builds = 0usize;
+        for step in 0..4 {
+            // Mutate between recalls so the warm engine really is
+            // reprogrammed (never just reused with stale weights).
+            ms.store(random_pattern(&mut rng, n)).unwrap();
+            let snap = ms.snapshot();
+            let survivors = ms.stored_patterns();
+            let cold = WeightMatrix::quantize(
+                &cold_master(&survivors, n, LearningRule::Hebbian),
+                n,
+                &cfg,
+            )
+            .to_f32();
+            assert_eq!(snap.weights_f32, cold, "{select:?}: snapshot != cold quantize");
+
+            let probe = random_pattern(&mut rng, n);
+            let init: Vec<i32> = probe.iter().map(|&s| spin_to_phase(s, period)).collect();
+            let mut warm = arena
+                .checkout(key, &metrics, || {
+                    builds += 1;
+                    build_engine_cfg(cfg, 1, DEFAULT_CHUNK, select)
+                })
+                .unwrap();
+            warm.set_weights(&snap.weights_f32).unwrap();
+            let (wp, ws) = drive_retrieval(warm.as_mut(), &init, 32).unwrap();
+            arena.checkin(key, warm, &metrics);
+
+            let mut fresh = build_engine_cfg(cfg, 1, DEFAULT_CHUNK, select).unwrap();
+            fresh.set_weights(&cold).unwrap();
+            let (cp, cs) = drive_retrieval(fresh.as_mut(), &init, 32).unwrap();
+            assert_eq!(wp, cp, "{select:?} step {step}: warm phases != cold phases");
+            assert_eq!(ws, cs, "{select:?} step {step}: settle periods diverged");
+
+            if step == 1 {
+                // Churn: a different-geometry checkin overflows the
+                // capacity-1 arena and evicts the warm recall engine,
+                // so the next recall rebuilds cold (miss) and the one
+                // after that hits again.
+                let other = ArenaKey::for_recall(9, EngineSelect::Native);
+                let e = arena
+                    .checkout(other, &metrics, || {
+                        build_engine_cfg(
+                            NetworkConfig::paper(9),
+                            1,
+                            DEFAULT_CHUNK,
+                            EngineSelect::Native,
+                        )
+                    })
+                    .unwrap();
+                arena.checkin(other, e, &metrics);
+            }
+        }
+        assert_eq!(
+            builds, 2,
+            "{select:?}: expected miss -> hit -> evict -> miss -> hit (2 builds)"
+        );
+    }
+}
+
+#[test]
+fn prop_duplicate_stores_idempotent_including_inverse() {
+    let mut rng = Rng::new(4103);
+    let n = 16;
+    let mut ms = MemorySpace::new(n, 4, LearningRule::Hebbian);
+    let p = random_pattern(&mut rng, n);
+    let first = ms.store(p.clone()).unwrap();
+    assert!(!first.duplicate);
+    let w1 = ms.weights().clone();
+    let v1 = ms.version();
+
+    let again = ms.store(p.clone()).unwrap();
+    assert!(again.duplicate, "exact re-store is a duplicate");
+    assert_eq!(again.patterns, 1);
+    assert_eq!(again.delta_entries, 0, "duplicates reprogram nothing");
+
+    let inverse: Vec<i8> = p.iter().map(|&s| -s).collect();
+    let inv = ms.store(inverse).unwrap();
+    assert!(inv.duplicate, "an inverted pattern's outer product is identical");
+    assert_eq!(inv.patterns, 1);
+
+    assert_eq!(ms.weights(), &w1, "duplicate stores must not touch the matrix");
+    assert_eq!(ms.version(), v1, "duplicate stores must not bump the version");
+}
+
+#[test]
+fn prop_lru_eviction_respects_recency_refresh() {
+    // capacity 2: store a, b; refresh a's recency with a duplicate
+    // store; storing c must evict b (the least recently used), and the
+    // matrix must equal a cold retrain over {a, c}.
+    let n = 12;
+    let cfg = NetworkConfig::paper(n);
+    let mut rng = Rng::new(4104);
+    let a = random_pattern(&mut rng, n);
+    let mut b = a.clone();
+    let mut c = a.clone();
+    b[0] = -b[0];
+    b[1] = -b[1];
+    c[2] = -c[2];
+    c[3] = -c[3];
+    let mut ms = MemorySpace::new(n, 2, LearningRule::Hebbian);
+    ms.store(a.clone()).unwrap();
+    ms.store(b.clone()).unwrap();
+    assert!(ms.store(a.clone()).unwrap().duplicate, "recency refresh");
+    let out = ms.store(c.clone()).unwrap();
+    assert_eq!(out.evicted, 1, "store past capacity evicts exactly one");
+    let survivors = ms.stored_patterns();
+    assert!(survivors.iter().any(|s| spins_match_up_to_inversion(s, &a)));
+    assert!(survivors.iter().any(|s| spins_match_up_to_inversion(s, &c)));
+    assert!(
+        !survivors.iter().any(|s| spins_match_up_to_inversion(s, &b)),
+        "b was LRU and must be the eviction victim"
+    );
+    let cold = WeightMatrix::quantize(&hebbian(&survivors), n, &cfg);
+    assert_eq!(ms.weights(), &cold, "post-eviction matrix != cold rebuild");
+}
+
+#[test]
+fn prop_drained_space_and_empty_training_are_safe() {
+    // The satellite bugfix: the wire-reachable store -> forget path can
+    // drain a space to zero patterns, which used to panic inside the
+    // learning rules on `patterns[0]`.
+    assert!(hebbian(&[]).is_empty());
+    assert!(hebbian_counts(&[]).is_empty());
+    let doi = diederich_opper_i(&[], 0.5, 10);
+    assert!(doi.converged && doi.weights.is_empty() && doi.epochs == 0);
+
+    let mut rng = Rng::new(4105);
+    let n = 10;
+    for rule in [LearningRule::Hebbian, LearningRule::Doi] {
+        let mut ms = MemorySpace::new(n, 3, rule);
+        let p = random_pattern(&mut rng, n);
+        ms.store(p.clone()).unwrap();
+        ms.forget(&p).unwrap();
+        assert_eq!(ms.pattern_count(), 0);
+        assert_eq!(ms.weights(), &WeightMatrix::zeros(n), "{rule:?}: drained != zeros");
+        let snap = ms.snapshot();
+        assert!(snap.patterns.is_empty());
+        assert_eq!(snap.weights_f32, vec![0.0; n * n]);
+        // A drained space still serves: the settle runs on the zero
+        // matrix and simply never matches.
+        let cfg = NetworkConfig::paper(n);
+        let period = cfg.period() as i32;
+        let init: Vec<i32> = p.iter().map(|&s| spin_to_phase(s, period)).collect();
+        let mut engine = build_engine_cfg(cfg, 1, DEFAULT_CHUNK, EngineSelect::Native).unwrap();
+        engine.set_weights(&snap.weights_f32).unwrap();
+        drive_retrieval(engine.as_mut(), &init, 8).unwrap();
+    }
+}
+
+#[test]
+fn prop_registry_store_never_leaks_an_empty_space() {
+    // A malformed *first* store must not leave a half-created space
+    // behind (the second satellite retrieval-path fix).
+    let metrics = Metrics::default();
+    let reg = AssocRegistry::new();
+    assert!(reg.store("s", vec![1, 0, -1], None, None, &metrics).is_err());
+    assert!(reg.store("s", Vec::new(), None, None, &metrics).is_err());
+    assert_eq!(reg.space_count(), 0, "failed creation leaked a space");
+    reg.store("s", vec![1, -1, 1, -1, 1, -1, 1, -1, 1], None, None, &metrics)
+        .unwrap();
+    assert_eq!(reg.space_count(), 1);
+    // Capacity/rule pinning: an existing space rejects mismatched
+    // overrides instead of silently invalidating its stored patterns.
+    assert!(reg.store("s", vec![1; 9], Some(7), None, &metrics).is_err());
+    assert!(reg
+        .store("s", vec![1; 9], None, Some(LearningRule::Doi), &metrics)
+        .is_err());
+}

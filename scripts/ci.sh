@@ -23,10 +23,10 @@ cargo test -q
 echo "==> cargo check --features pjrt (stub xla)"
 cargo check --features pjrt
 
-echo "==> solve-bench --shards/--packed/--rtl/--connections/--sparse gate (BENCH_solver.json must carry sharded + packed + rtl + rtl-packed + rtl-cluster + connection-scale + sparse rows)"
+echo "==> solve-bench --shards/--packed/--rtl/--connections/--sparse/--associative gate (BENCH_solver.json must carry sharded + packed + rtl + rtl-packed + rtl-cluster + connection-scale + sparse + associative rows)"
 ./target/release/onn-scale solve-bench --sizes 12,16 --replicas 4 --periods 32 \
   --instances 1 --shards 2 --packed 4 --rtl --rtl-packed --rtl-cluster \
-  --connections 64 --sparse --out BENCH_solver.json
+  --connections 64 --sparse --associative --out BENCH_solver.json
 grep -q '"engine":"native"' BENCH_solver.json \
   || { echo "BENCH_solver.json is missing the native rows"; exit 1; }
 grep -q '"engine":"sharded"' BENCH_solver.json \
@@ -76,6 +76,17 @@ grep -q '"single_device_fit"' BENCH_solver.json \
   || { echo "BENCH_solver.json is missing the emulated rtl cluster row"; exit 1; }
 grep -q '"sync_fast_cycles"' BENCH_solver.json \
   || { echo "BENCH_solver.json rtl_cluster row is missing the priced all-gather cycles"; exit 1; }
+# The associative section (online-learning store/recall/forget traffic:
+# delta-reprogrammed warm engines vs cold retrain+rebuild) must be
+# present and carry both throughput fields.  Delta-vs-cold bit-identity
+# is asserted inside the harness row itself and again by the
+# prop_assoc [[test]] suite above.
+grep -q '"associative"' BENCH_solver.json \
+  || { echo "BENCH_solver.json is missing the associative-memory section"; exit 1; }
+grep -q '"delta_recalls_per_sec"' BENCH_solver.json \
+  || { echo "BENCH_solver.json associative row is missing the delta-reprogram throughput field"; exit 1; }
+grep -q '"rebuild_recalls_per_sec"' BENCH_solver.json \
+  || { echo "BENCH_solver.json associative row is missing the full-rebuild baseline field"; exit 1; }
 
 echo "==> solve-report renders the recorded trajectory"
 ./target/release/onn-scale solve-report --path BENCH_solver.json >/dev/null
@@ -102,5 +113,11 @@ echo "==> solve --rtl precision sweep + emulated cluster smoke"
   --periods 32 --seed 11 --rtl --weight-bits 4 --phase-bits 4 >/dev/null
 ./target/release/onn-scale solve --problem maxcut --nodes 16 --replicas 4 \
   --periods 32 --seed 11 --rtl --shards 2 >/dev/null
+
+echo "==> assoc-smoke: live store -> recall -> forget -> recall over TCP"
+# Drives the online-learning wire commands end to end through the
+# evented front end and asserts every reply plus the metrics counters
+# (patterns_stored / patterns_forgotten / recalls_matched).
+./target/release/onn-scale assoc-smoke
 
 echo "CI OK"
